@@ -1,0 +1,225 @@
+"""AOT entry point: lower every compute graph to HLO **text** under
+``artifacts/`` and emit the cross-layer test fixtures.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").serialize()`` — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (what the rust ``xla`` crate binds) rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts:
+  model_<preset>_train_step.hlo.txt   (params, tokens) → (loss, grad, µ, F)
+  model_<preset>_eval.hlo.txt         (params, tokens) → loss
+  model_<preset>_adamw.hlo.txt        (params, m, v, grad, lr, step) → …
+  kernel_{compress,dar}_w{2,4,8}.hlo.txt, kernel_decompress_w*.hlo.txt
+  kernel_stats.hlo.txt
+  manifest.json                       shapes + param counts for rust
+  fixtures/*.json                     byte-level rust↔python pinning
+
+Run via ``make artifacts`` (no-op if outputs are newer than inputs).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import dynamiq as K
+from .kernels import ref
+
+TILE = K.TILE_SG
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big constant
+    # tensors as "{...}", which silently corrupts the text round-trip (the
+    # w=8 quantization grid, embedding init tables, …).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def write(path: str, text: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+
+def lower_model(preset: str, out_dir: str, manifest: dict):
+    cfg = M.PRESETS[preset]
+    d = M.padded_param_count(cfg)
+    nsg = d // ref.SUPER_GROUP
+    pspec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    tspec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    def train(flat, tokens):
+        return M.train_step(cfg, flat, tokens)
+
+    def ev(flat, tokens):
+        return (M.eval_loss(cfg, flat, tokens),)
+
+    def adamw(flat, m, v, grad, lr, step):
+        return M.adamw_update(flat, m, v, grad, lr, step)
+
+    write(
+        f"{out_dir}/model_{preset}_train_step.hlo.txt",
+        to_hlo_text(jax.jit(train).lower(pspec, tspec)),
+    )
+    write(f"{out_dir}/model_{preset}_eval.hlo.txt", to_hlo_text(jax.jit(ev).lower(pspec, tspec)))
+    write(
+        f"{out_dir}/model_{preset}_adamw.hlo.txt",
+        to_hlo_text(jax.jit(adamw).lower(pspec, pspec, pspec, pspec, sspec, sspec)),
+    )
+    # initial flat parameters for the rust trainer (little-endian f32)
+    M.init_params(cfg, seed=0).astype("<f4").tofile(f"{out_dir}/init_d{d}.f32")
+    print(f"wrote {out_dir}/init_d{d}.f32")
+    manifest["models"][preset] = {
+        "d": d,
+        "d_raw": M.param_count(cfg),
+        "nsg": nsg,
+        "batch": cfg.batch,
+        "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+    }
+
+
+def lower_kernels(out_dir: str, manifest: dict):
+    s = ref.SUPER_GROUP
+    xspec = jax.ShapeDtypeStruct((TILE, s), jnp.float32)
+    cspec = jax.ShapeDtypeStruct((TILE, s), jnp.uint8)
+    gspec = jax.ShapeDtypeStruct((TILE, ref.GPSG), jnp.uint8)
+    fspec = jax.ShapeDtypeStruct((TILE,), jnp.float32)
+    pspec = jax.ShapeDtypeStruct((TILE,), jnp.uint32)
+    mspec = jax.ShapeDtypeStruct((5,), jnp.uint32)
+    for w in (2, 4, 8):
+        write(
+            f"{out_dir}/kernel_compress_w{w}.hlo.txt",
+            to_hlo_text(
+                jax.jit(functools.partial(K.compress, width=w)).lower(xspec, pspec, meta=mspec)
+            ),
+        )
+        write(
+            f"{out_dir}/kernel_decompress_w{w}.hlo.txt",
+            to_hlo_text(
+                jax.jit(lambda c, g, f, w=w: (K.decompress(c, g, f, w),)).lower(
+                    cspec, gspec, fspec
+                )
+            ),
+        )
+        write(
+            f"{out_dir}/kernel_dar_w{w}.hlo.txt",
+            to_hlo_text(
+                jax.jit(lambda c, g, f, x, p, m, w=w: K.dar(c, g, f, x, p, m, w)).lower(
+                    cspec, gspec, fspec, xspec, pspec, mspec
+                )
+            ),
+        )
+    write(
+        f"{out_dir}/kernel_stats.hlo.txt",
+        to_hlo_text(jax.jit(K.sg_stats).lower(xspec)),
+    )
+    manifest["kernels"] = {"tile_sg": TILE, "super_group": s, "group": ref.GROUP}
+
+
+def emit_fixtures(out_dir: str):
+    """Byte-level pinning vectors consumed by rust's test_fixtures.rs.
+
+    For several (width, worker, round, n) combinations: an input tile, the
+    π slots, and the ref-compressed (codes, scode, sf). The rust codec must
+    reproduce them exactly.
+    """
+    fdir = f"{out_dir}/fixtures"
+    os.makedirs(fdir, exist_ok=True)
+    seed = 0xD14A311
+    cases = []
+    rng = np.random.default_rng(12345)
+    for width in (2, 4, 8):
+        for worker, rnd, n in [(0, 0, 4), (2, 17, 4), (1, 3, 8)]:
+            nsg = 3
+            sg0 = 5
+            x = (rng.normal(size=(nsg, ref.SUPER_GROUP)) * 0.01).astype(np.float32)
+            x *= np.exp(rng.normal(size=x.shape)).astype(np.float32)
+            pi = ref.pi_slots(seed, rnd, n, np.arange(sg0, sg0 + nsg), worker)
+            c, s, f = ref.compress_ref(
+                x, width, shared_seed=seed, worker=worker, rnd=rnd, n_workers=n, sg0=sg0, pi=pi
+            )
+            dec = ref.decompress_ref(c, s, f, width)
+            cases.append(
+                {
+                    "width": width,
+                    "worker": worker,
+                    "round": rnd,
+                    "n_workers": n,
+                    "sg0": sg0,
+                    "x": [float(v) for v in x.reshape(-1)],
+                    "pi": [int(v) for v in pi],
+                    "codes": [int(v) for v in np.asarray(c).reshape(-1)],
+                    "scode": [int(v) for v in np.asarray(s).reshape(-1)],
+                    "sf": [float(v) for v in np.asarray(f)],
+                    "decoded": [float(v) for v in np.asarray(dec).reshape(-1)],
+                }
+            )
+    with open(f"{fdir}/dynamiq_compress.json", "w") as f:
+        json.dump({"seed": seed, "cases": cases}, f)
+    print(f"wrote {fdir}/dynamiq_compress.json ({len(cases)} cases)")
+
+    # permutation fixtures (π agreement)
+    perms = []
+    for rnd, n in [(0, 2), (3, 4), (9, 8), (1, 64)]:
+        perms.append(
+            {
+                "seed": 5,
+                "round": rnd,
+                "n": n,
+                "perm": [int(v) for v in ref.shared_permutation(5, rnd, n)],
+            }
+        )
+    with open(f"{fdir}/permutations.json", "w") as f:
+        json.dump({"cases": perms}, f)
+    print(f"wrote {fdir}/permutations.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="tiny,small",
+        help="comma-separated model presets to lower (base is large: opt-in via --presets base)",
+    )
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    manifest = {"models": {}, "kernels": {}}
+    # merge with an existing manifest so incremental `--presets base` runs
+    # do not clobber previously lowered models
+    try:
+        with open(f"{out}/manifest.json") as f:
+            prev = json.load(f)
+        manifest["models"].update(prev.get("models", {}))
+        manifest["kernels"] = prev.get("kernels", manifest["kernels"])
+    except (OSError, json.JSONDecodeError):
+        pass
+    if not args.skip_kernels:
+        lower_kernels(out, manifest)
+    for preset in [p for p in args.presets.split(",") if p]:
+        lower_model(preset, out, manifest)
+    emit_fixtures(out)
+    with open(f"{out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

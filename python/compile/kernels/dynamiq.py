@@ -1,0 +1,279 @@
+"""L1: DynamiQ's fused compression kernels as pallas kernels (§4).
+
+Four kernels per bitwidth w ∈ {2, 4, 8} plus the statistics kernel:
+
+- ``compress``    — quantize a tile at a leaf (kernel 1)
+- ``decompress``  — decode a tile in the all-gather (kernel 2)
+- ``dar``         — fused decompress-accumulate-recompress (kernel 3)
+- ``da``          — fused decompress-accumulate (kernel 4)
+- ``sg_stats``    — per-super-group mean + ℓ2² for the metadata stage
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+kernels keep intermediates in registers and rely on warp-coalesced access
+to uniform-bitwidth runs. Here each pallas program instance owns one
+(1, S)-row block resident in VMEM via ``BlockSpec``; the
+decode→accumulate→requantize dataflow happens entirely inside the kernel
+body so partial sums never round-trip to HBM. Sub-byte packing happens on
+the host (rust) — TPU lanes are ≥ 8 bit, so the kernel emits u8 codes,
+byte-identical to what the rust bit-packer consumes.
+
+All kernels MUST run with ``interpret=True`` on this CPU-only image (real
+TPU lowering emits Mosaic custom-calls the CPU PJRT client cannot run).
+The grid dimension is the super-group index; tiles are ``(TILE_SG, S)``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng
+from .ref import DEFAULT_EPSILON, GPSG, GROUP, SUPER_GROUP, qtable
+
+U32 = jnp.uint32
+F32 = jnp.float32
+
+# Super-groups per kernel launch (the rust runtime pads to this tile).
+TILE_SG = 64
+
+
+def _bf16_bump(x):
+    b = x.astype(jnp.bfloat16).astype(F32)
+    bits = jax.lax.bitcast_convert_type(b, U32) + U32(0x10000)
+    return jnp.where(b < x, jax.lax.bitcast_convert_type(bits, F32), b)
+
+
+def _quantize_row(x, grid, width, pi, slot, gseed, sseed, n_workers, correlated):
+    """Quantize one super-group row x[S] → (codes u8[S], scode u8[GPSG],
+    sf f32[1]). Pure jnp — shared by the kernel bodies."""
+    xg = x.reshape(GPSG, GROUP)
+    maxima = jnp.max(jnp.abs(xg), axis=1)  # [GPSG]
+    raw = jnp.max(maxima)
+    sf = _bf16_bump(raw)
+    sinv = jnp.where(sf > 0, F32(255.0) / sf, F32(0.0))
+    exact = maxima * sinv
+    lo_s = jnp.floor(exact)
+    frac_s = exact - lo_s
+    ctr_s = slot * U32(GPSG) + jnp.arange(GPSG, dtype=U32)
+    u_s = prng.uniform_u01(sseed, ctr_s)
+    scode = jnp.minimum(jnp.where(u_s < frac_s, lo_s + 1.0, lo_s), 255.0).astype(jnp.uint8)
+
+    inv = jnp.where(maxima > 0, F32(1.0) / maxima, F32(0.0))
+    m = jnp.minimum(jnp.abs(xg) * inv[:, None], F32(1.0))
+    ctr = slot * U32(SUPER_GROUP) + jnp.arange(SUPER_GROUP, dtype=U32).reshape(GPSG, GROUP)
+    gamma = prng.uniform_u01(gseed, ctr)
+    u0 = jnp.where(
+        jnp.logical_and(correlated, n_workers > 1),
+        (pi.astype(F32) + gamma) / n_workers.astype(F32),
+        gamma,
+    )
+    neg = xg < 0
+    u = jnp.where(neg, F32(1.0) - u0, u0)
+
+    levels = grid.shape[0]
+    hi = jnp.sum(grid[None, None, :] < m[:, :, None], axis=-1)
+    hi_c = jnp.clip(hi, 0, levels - 1)
+    exact_hit = (hi == 0) | (hi >= levels) | (jnp.take(grid, hi_c) == m)
+    lo_idx = jnp.maximum(hi - 1, 0)
+    a = jnp.take(grid, lo_idx)
+    b = jnp.take(grid, hi_c)
+    denom = jnp.where(b > a, b - a, F32(1.0))
+    p_up = jnp.where(exact_hit, F32(0.0), (m - a) / denom)
+    base_idx = jnp.where(exact_hit, hi_c, lo_idx)
+    mag = jnp.where(jnp.logical_and(~exact_hit, u < p_up), lo_idx + 1, base_idx)
+    codes = ((neg.astype(jnp.int32) << (width - 1)) | mag).astype(jnp.uint8)
+    return codes.reshape(SUPER_GROUP), scode, sf
+
+
+def _decode_row(codes, scode, sf, grid, width):
+    """Decode one super-group row → f32[S]."""
+    c = codes.reshape(GPSG, GROUP).astype(jnp.int32)
+    mag_mask = (1 << (width - 1)) - 1
+    neg = (c >> (width - 1)) & 1
+    mag = c & mag_mask
+    scales = scode.astype(F32) * sf * F32(1.0 / 255.0)  # [GPSG]
+    val = jnp.take(grid, mag) * scales[:, None]
+    return jnp.where(neg == 1, -val, val).reshape(SUPER_GROUP)
+
+
+# ---- kernel bodies (one program instance per super-group row) ----
+
+
+def _compress_body(width, grid_ref, x_ref, pi_ref, meta_ref, codes_ref, scode_ref, sf_ref):
+    grid = grid_ref[...]
+    slot0 = meta_ref[0]  # absolute slot of tile row 0
+    gseed = meta_ref[1]
+    sseed = meta_ref[2]
+    n_workers = meta_ref[3]
+    correlated = meta_ref[4] != 0
+    i = pl.program_id(0)
+    slot = slot0 + i.astype(U32)
+    codes, scode, sf = _quantize_row(
+        x_ref[0, :], grid, width, pi_ref[0], slot, gseed, sseed, n_workers, correlated
+    )
+    codes_ref[0, :] = codes
+    scode_ref[0, :] = scode
+    sf_ref[0] = sf
+
+
+def _decompress_body(width, grid_ref, codes_ref, scode_ref, sf_ref, out_ref):
+    grid = grid_ref[...]
+    out_ref[0, :] = _decode_row(codes_ref[0, :], scode_ref[0, :], sf_ref[0], grid, width)
+
+
+def _da_body(width, grid_ref, codes_ref, scode_ref, sf_ref, local_ref, out_ref):
+    grid = grid_ref[...]
+    out_ref[0, :] = local_ref[0, :] + _decode_row(
+        codes_ref[0, :], scode_ref[0, :], sf_ref[0], grid, width
+    )
+
+
+def _dar_body(
+    width, grid_ref, codes_ref, scode_ref, sf_ref, local_ref, pi_ref, meta_ref,
+    codes_out, scode_out, sf_out,
+):
+    grid = grid_ref[...]
+    # kernel 3: the whole decode→accumulate→requantize chain stays in VMEM
+    acc = local_ref[0, :] + _decode_row(codes_ref[0, :], scode_ref[0, :], sf_ref[0], grid, width)
+    slot = meta_ref[0] + pl.program_id(0).astype(U32)
+    codes, scode, sf = _quantize_row(
+        acc, grid, width, pi_ref[0], slot, meta_ref[1], meta_ref[2], meta_ref[3],
+        meta_ref[4] != 0,
+    )
+    codes_out[0, :] = codes
+    scode_out[0, :] = scode
+    sf_out[0] = sf
+
+
+def _stats_body(x_ref, mean_ref, sq_ref):
+    x = x_ref[0, :]
+    mean_ref[0] = jnp.mean(x)
+    sq_ref[0] = jnp.sum(x * x)
+
+
+# ---- pallas_call wrappers (fixed TILE_SG × S tiles) ----
+
+
+def _row_spec():
+    return pl.BlockSpec((1, SUPER_GROUP), lambda i: (i, 0))
+
+
+def _gspec():
+    return pl.BlockSpec((1, GPSG), lambda i: (i, 0))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda i: (i,))
+
+
+def _meta_spec():
+    # whole metadata vector visible to every program instance
+    return pl.BlockSpec((5,), lambda i: (0,))
+
+
+def _grid_spec(width):
+    levels = 1 << (width - 1)
+    return pl.BlockSpec((levels,), lambda i: (0,))
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def compress(x, pi, width, meta=None):
+    """x: f32[TILE_SG, S], pi: u32[TILE_SG], meta: u32[5] =
+    [slot0, gamma_seed, scale_seed, n_workers, correlated]."""
+    table = jnp.asarray(qtable(width, DEFAULT_EPSILON))
+    body = functools.partial(_compress_body, width)
+    nsg = x.shape[0]
+    return pl.pallas_call(
+        body,
+        grid=(nsg,),
+        in_specs=[_grid_spec(width), _row_spec(), _scalar_spec(), _meta_spec()],
+        out_specs=[_row_spec(), _gspec(), _scalar_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((nsg, SUPER_GROUP), jnp.uint8),
+            jax.ShapeDtypeStruct((nsg, GPSG), jnp.uint8),
+            jax.ShapeDtypeStruct((nsg,), F32),
+        ],
+        interpret=True,
+    )(table, x, pi, meta)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def decompress(codes, scode, sf, width):
+    table = jnp.asarray(qtable(width, DEFAULT_EPSILON))
+    body = functools.partial(_decompress_body, width)
+    nsg = codes.shape[0]
+    return pl.pallas_call(
+        body,
+        grid=(nsg,),
+        in_specs=[_grid_spec(width), _row_spec(), _gspec(), _scalar_spec()],
+        out_specs=_row_spec(),
+        out_shape=jax.ShapeDtypeStruct((nsg, SUPER_GROUP), F32),
+        interpret=True,
+    )(table, codes, scode, sf)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def decompress_accumulate(codes, scode, sf, local, width):
+    table = jnp.asarray(qtable(width, DEFAULT_EPSILON))
+    body = functools.partial(_da_body, width)
+    nsg = codes.shape[0]
+    return pl.pallas_call(
+        body,
+        grid=(nsg,),
+        in_specs=[_grid_spec(width), _row_spec(), _gspec(), _scalar_spec(), _row_spec()],
+        out_specs=_row_spec(),
+        out_shape=jax.ShapeDtypeStruct((nsg, SUPER_GROUP), F32),
+        interpret=True,
+    )(table, codes, scode, sf, local)
+
+
+@functools.partial(jax.jit, static_argnums=(6,))
+def dar(codes, scode, sf, local, pi, meta, width):
+    """Kernel 3: fused decompress-accumulate-recompress."""
+    table = jnp.asarray(qtable(width, DEFAULT_EPSILON))
+    body = functools.partial(_dar_body, width)
+    nsg = codes.shape[0]
+    return pl.pallas_call(
+        body,
+        grid=(nsg,),
+        in_specs=[
+            _grid_spec(width),
+            _row_spec(),
+            _gspec(),
+            _scalar_spec(),
+            _row_spec(),
+            _scalar_spec(),
+            _meta_spec(),
+        ],
+        out_specs=[_row_spec(), _gspec(), _scalar_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((nsg, SUPER_GROUP), jnp.uint8),
+            jax.ShapeDtypeStruct((nsg, GPSG), jnp.uint8),
+            jax.ShapeDtypeStruct((nsg,), F32),
+        ],
+        interpret=True,
+    )(table, codes, scode, sf, local, pi, meta)
+
+
+@jax.jit
+def sg_stats(x):
+    """Per-super-group statistics (Fig. 2a): x f32[nsg, S] → (mean, ℓ2²)."""
+    nsg = x.shape[0]
+    return pl.pallas_call(
+        _stats_body,
+        grid=(nsg,),
+        in_specs=[_row_spec()],
+        out_specs=[_scalar_spec(), _scalar_spec()],
+        out_shape=[
+            jax.ShapeDtypeStruct((nsg,), F32),
+            jax.ShapeDtypeStruct((nsg,), F32),
+        ],
+        interpret=True,
+    )(x)
+
+
+def make_meta(slot0: int, gamma_seed: int, scale_seed: int, n_workers: int, correlated: bool):
+    import numpy as np
+
+    return np.array([slot0, gamma_seed, scale_seed, n_workers, int(correlated)], dtype=np.uint32)

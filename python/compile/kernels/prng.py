@@ -1,0 +1,31 @@
+"""Counter-based PRNG — the exact jnp mirror of ``rust/src/util/rng.rs``.
+
+DynamiQ's shared randomness (correlated rounding, §3.3) and the rust↔pallas
+byte-compatibility both hinge on every layer producing the identical
+uniform for a given (seed, counter). All arithmetic is uint32 with
+wraparound, matching rust's ``wrapping_mul``/``wrapping_add``.
+"""
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def pcg_hash(seed, index):
+    """PCG-RXS-M-XS-32 over a seed-keyed Weyl sequence.
+
+    Mirrors ``rng::pcg_hash`` bit-for-bit. ``seed`` and ``index`` may be
+    scalars or arrays (broadcast); dtype is coerced to uint32.
+    """
+    seed = jnp.asarray(seed, U32)
+    index = jnp.asarray(index, U32)
+    state = index * U32(747796405) + (seed * U32(2891336453) + U32(1))
+    state = state * U32(747796405) + U32(2891336453)
+    word = ((state >> ((state >> U32(28)) + U32(4))) ^ state) * U32(277803737)
+    return (word >> U32(22)) ^ word
+
+
+def uniform_u01(seed, index):
+    """Uniform in [0, 1) with 24 mantissa bits — mirrors ``rng::uniform_u01``."""
+    h = pcg_hash(seed, index)
+    return (h >> U32(8)).astype(jnp.float32) * jnp.float32(1.0 / 16777216.0)

@@ -1,0 +1,212 @@
+"""Pure-jnp oracle for the DynamiQ quantization pipeline (§3.3).
+
+This is the correctness reference for the pallas kernels (pytest compares
+them elementwise) and the source of the cross-layer fixtures consumed by
+``cargo test`` — it mirrors ``rust/src/codec/dynamiq.rs`` operation by
+operation in f32 so all three implementations are byte-compatible.
+
+Tile layout: a tile is ``x[nsg, S]`` — ``nsg`` super-groups of ``S``
+entries, each split into groups of ``s`` entries (``gpsg = S // s`` groups
+per super-group). Every super-group in a tile shares one bitwidth ``w``
+(DynamiQ's reorder guarantees uniform-width runs; rust launches one tile
+per width class).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import prng
+
+U32 = jnp.uint32
+F32 = jnp.float32
+
+GROUP = 16
+SUPER_GROUP = 256
+GPSG = SUPER_GROUP // GROUP
+DEFAULT_EPSILON = 0.25
+
+
+def qtable(width: int, epsilon: float = DEFAULT_EPSILON) -> np.ndarray:
+    """Non-uniform quantization values f(ε, r) — mirrors ``QTable::nonuniform``.
+
+    ``width`` counts the sign bit: magnitude levels = 2^(width−1).
+    """
+    mag_bits = width - 1
+    levels = 1 << mag_bits
+    top = levels - 1
+    base = 1.0 + 2.0 * epsilon * epsilon
+    denom = base**top - 1.0
+    if denom <= 0.0:
+        grid = np.arange(levels, dtype=np.float64) / top
+    else:
+        grid = (base ** np.arange(levels, dtype=np.float64) - 1.0) / denom
+    grid = grid.astype(np.float32)
+    assert (np.diff(grid) > 0).all(), "degenerate table"
+    return grid
+
+
+def bf16_round(x):
+    """Round f32 → bf16 → f32 (RNE), matching ``minifloat::bf16_round``."""
+    return jnp.asarray(x, F32).astype(jnp.bfloat16).astype(F32)
+
+
+def _bitcast_u32(x):
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def _bitcast_f32(x):
+    return jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+def bf16_bump(x):
+    """bf16(x), bumped to the next representable bf16 when bf16(x) < x."""
+    b = bf16_round(x)
+    bumped = _bitcast_f32(_bitcast_u32(b) + U32(0x10000))
+    return jnp.where(b < x, bumped, b)
+
+
+def scale_seed(shared_seed: int, worker: int, rnd: int) -> int:
+    """Mirror of ``Dynamiq::scale_seed``."""
+    h = int(np.asarray(prng.pcg_hash(0x5CA1E, worker)))
+    return (shared_seed ^ h ^ ((rnd * 0x9E37_79B9) & 0xFFFFFFFF)) & 0xFFFFFFFF
+
+
+def gamma_seed(shared_seed: int, worker: int, rnd: int) -> int:
+    """Mirror of ``RoundingCtx::gamma_seed``."""
+    h = int(np.asarray(prng.pcg_hash(0x9E37_79B9, worker)))
+    return (shared_seed ^ h ^ ((rnd * 0x85EB_CA6B) & 0xFFFFFFFF)) & 0xFFFFFFFF
+
+
+def shared_permutation(seed: int, rnd: int, n: int) -> np.ndarray:
+    """Fisher–Yates driven by the counter hash — mirror of
+    ``rng::shared_permutation`` (numpy; it's O(n) host-side metadata)."""
+    perm = np.arange(n, dtype=np.uint32)
+    key = (seed ^ ((rnd * 0x85EB_CA6B) & 0xFFFFFFFF) ^ 0x5BD1_E995) & 0xFFFFFFFF
+    for i in range(n - 1, 0, -1):
+        h = int(np.asarray(prng.pcg_hash(key, i)))
+        j = (h * (i + 1)) >> 32
+        perm[i], perm[j] = perm[j], perm[i]
+    return perm
+
+
+def pi_slots(shared_seed: int, rnd: int, n: int, sg_indices: np.ndarray, worker: int) -> np.ndarray:
+    """π slot of ``worker`` for each absolute super-group index — mirror of
+    ``RoundingCtx::pi_slot`` (host-side; fed to the kernel as an input)."""
+    out = np.zeros(len(sg_indices), dtype=np.uint32)
+    if n == 1:
+        return out
+    for k, sg in enumerate(sg_indices):
+        seed = (shared_seed ^ ((int(sg) * 0xC2B2_AE35) & 0xFFFFFFFF)) & 0xFFFFFFFF
+        out[k] = shared_permutation(seed, rnd, n)[worker]
+    return out
+
+
+def _group_view(x):
+    """x[nsg, S] → x[nsg, GPSG, GROUP]."""
+    nsg = x.shape[0]
+    return x.reshape(nsg, GPSG, GROUP)
+
+
+def encode_scales_ref(maxima, sseed, sg0):
+    """Hierarchical scale encoding for a tile — mirror of
+    ``hierarchical::encode_scales`` applied per super-group.
+
+    maxima: f32[nsg, GPSG] group maxima. Returns (sf_super f32[nsg],
+    scode u8[nsg, GPSG]).
+    """
+    nsg = maxima.shape[0]
+    raw = jnp.max(maxima, axis=1)  # [nsg]
+    sf = bf16_bump(raw)
+    inv = jnp.where(sf > 0, F32(255.0) / sf, F32(0.0))  # [nsg]
+    exact = maxima * inv[:, None]
+    lo = jnp.floor(exact)
+    frac = exact - lo
+    # counter: ctr0 + g where ctr0 = (slot·S)/GROUP = slot·GPSG
+    slots = sg0 + jnp.arange(nsg, dtype=U32)
+    ctr = slots[:, None] * U32(GPSG) + jnp.arange(GPSG, dtype=U32)[None, :]
+    u = prng.uniform_u01(U32(sseed), ctr)
+    code = jnp.where(u < frac, lo + 1.0, lo)
+    code = jnp.minimum(code, 255.0).astype(jnp.uint8)
+    return sf, code
+
+
+def compress_ref(x, width, *, shared_seed, worker, rnd, n_workers, sg0, pi,
+                 epsilon=DEFAULT_EPSILON, correlated=True):
+    """Compress a tile — the oracle for the pallas compress kernel and the
+    mirror of ``Dynamiq::compress_sg`` over a run of same-width
+    super-groups.
+
+    x: f32[nsg, S] (already mean-normalized, reordered)
+    pi: u32[nsg] — π slot per super-group (host-computed)
+    Returns (codes u8[nsg, S] sign-magnitude, scode u8[nsg, GPSG],
+    sf_super f32[nsg]).
+    """
+    grid = jnp.asarray(qtable(width, epsilon))
+    xg = _group_view(jnp.asarray(x, F32))
+    nsg = xg.shape[0]
+    maxima = jnp.max(jnp.abs(xg), axis=2)  # [nsg, GPSG]
+    sseed = scale_seed(shared_seed, worker, rnd)
+    sf, scode = encode_scales_ref(maxima, sseed, sg0)
+
+    inv = jnp.where(maxima > 0, F32(1.0) / maxima, F32(0.0))
+    m = jnp.minimum(jnp.abs(xg) * inv[:, :, None], F32(1.0))  # [nsg,GPSG,GROUP]
+
+    gseed = gamma_seed(shared_seed, worker, rnd)
+    slots = sg0 + jnp.arange(nsg, dtype=U32)
+    ent = jnp.arange(SUPER_GROUP, dtype=U32).reshape(GPSG, GROUP)
+    ctr = slots[:, None, None] * U32(SUPER_GROUP) + ent[None, :, :]
+    gamma = prng.uniform_u01(U32(gseed), ctr)
+    if correlated and n_workers > 1:
+        u0 = (jnp.asarray(pi, U32).astype(F32)[:, None, None] + gamma) / F32(n_workers)
+    else:
+        u0 = gamma
+    neg = xg < 0
+    u = jnp.where(neg, F32(1.0) - u0, u0)
+
+    # bracket + stochastic pick — mirrors QTable::bracket/quantize
+    hi = jnp.sum(grid[None, None, None, :] < m[..., None], axis=-1)  # partition_point
+    levels = grid.shape[0]
+    hi_c = jnp.clip(hi, 0, levels - 1)
+    exact_hit = (hi == 0) | (hi >= levels) | (jnp.take(grid, hi_c) == m)
+    lo_idx = jnp.maximum(hi - 1, 0)
+    a = jnp.take(grid, lo_idx)
+    b = jnp.take(grid, hi_c)
+    denom = jnp.where(b > a, b - a, F32(1.0))
+    p_up = jnp.where(exact_hit, F32(0.0), (m - a) / denom)
+    base_idx = jnp.where(exact_hit, hi_c, lo_idx)
+    mag = jnp.where(~exact_hit & (u < p_up), lo_idx + 1, base_idx)
+    code = (neg.astype(jnp.int32) << (width - 1)) | mag
+    return code.reshape(nsg, SUPER_GROUP).astype(jnp.uint8), scode, sf
+
+
+def decompress_ref(codes, scode, sf, width, epsilon=DEFAULT_EPSILON):
+    """Decode a tile — mirror of ``Dynamiq::decode_sg`` over a width run."""
+    grid = jnp.asarray(qtable(width, epsilon))
+    nsg = codes.shape[0]
+    c = _group_view(jnp.asarray(codes, jnp.int32))
+    mag_mask = (1 << (width - 1)) - 1
+    neg = (c >> (width - 1)) & 1
+    mag = c & mag_mask
+    # scale decode order mirrors rust: (code_f32 * sf) * (1/255)
+    scales = scode.astype(F32) * sf[:, None] * F32(1.0 / 255.0)  # [nsg,GPSG]
+    val = jnp.take(grid, mag) * scales[:, :, None]
+    val = jnp.where(neg == 1, -val, val)
+    return val.reshape(nsg, SUPER_GROUP)
+
+
+def dar_ref(codes, scode, sf, local, width, **kw):
+    """Fused decompress-accumulate-recompress oracle (kernel 3 of §4)."""
+    acc = decompress_ref(codes, scode, sf, width, kw.get("epsilon", DEFAULT_EPSILON)) + jnp.asarray(
+        local, F32
+    )
+    return compress_ref(acc, width, **kw)
+
+
+def sg_stats_ref(x):
+    """Per-super-group mean + squared ℓ2 norm (§3.1) — oracle for the
+    stats kernel. x: f32[nsg, S] → (mean f32[nsg], sqnorm f32[nsg])."""
+    x = jnp.asarray(x, F32)
+    # f64 accumulation on CPU mirrors the rust f64 loop closely enough for
+    # the tolerance-based tests; the kernel itself accumulates in f32.
+    return jnp.mean(x, axis=1), jnp.sum(x * x, axis=1)

@@ -1,0 +1,217 @@
+"""L2: GPT-style causal transformer LM with a *flat parameter vector*
+interface, plus AdamW — the compute graphs the rust runtime executes via
+PJRT.
+
+Flat-vector interface: the rust↔PJRT boundary moves exactly four big
+buffers (params, adam m, adam v, grad), which keeps the runtime simple and
+matches how DDP flattens gradients into buckets anyway.
+
+``train_step`` returns the per-super-group statistics of the gradient
+computed by the L1 pallas stats kernel (``kernels.dynamiq.sg_stats``) — the
+metadata DynamiQ's initial all-reduce needs (Fig. 2a) — so L1 lowers into
+the same HLO artifact.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import dynamiq as kernels
+from .kernels.ref import SUPER_GROUP
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def head_dim(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Presets. `tiny` mirrors the paper's TinyBERT-scale workload (§6.1),
+# `small` the 2–8-worker scalability study, `base` is the ~100M-parameter
+# end-to-end training model (DESIGN.md substitution for BERT-large /
+# LLaMA-1B fine-tuning).
+PRESETS = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=64, n_layers=2, n_heads=2, d_ff=256,
+                        seq_len=64, batch=8),
+    "small": ModelConfig("small", vocab=2048, d_model=256, n_layers=4, n_heads=4, d_ff=1024,
+                         seq_len=128, batch=8),
+    "base": ModelConfig("base", vocab=8192, d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+                        seq_len=256, batch=4),
+}
+
+
+def param_shapes(cfg: ModelConfig):
+    """Ordered (name, shape) list — the flattening contract with rust."""
+    shapes = [("tok_emb", (cfg.vocab, cfg.d_model)), ("pos_emb", (cfg.seq_len, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        p = f"l{l}."
+        shapes += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    shapes += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_shapes(cfg))
+
+
+def padded_param_count(cfg: ModelConfig) -> int:
+    """Flat size padded to a super-group multiple so the gradient maps
+    directly onto DynamiQ tiles."""
+    d = param_count(cfg)
+    return (d + SUPER_GROUP - 1) // SUPER_GROUP * SUPER_GROUP
+
+
+def unflatten(cfg: ModelConfig, flat):
+    out = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        n = int(np.prod(shape))
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> np.ndarray:
+    """GPT-2-style init, flattened + zero-padded to the super-group grid."""
+    rng = np.random.default_rng(seed)
+    flat = np.zeros(padded_param_count(cfg), dtype=np.float32)
+    off = 0
+    for name, shape in param_shapes(cfg):
+        n = int(np.prod(shape))
+        if name.endswith(("_g",)):
+            v = np.ones(n, dtype=np.float32)
+        elif name.endswith("_b"):
+            v = np.zeros(n, dtype=np.float32)
+        else:
+            std = 0.02
+            if name.endswith(("wo", "w2")):  # residual-scaled
+                std = 0.02 / np.sqrt(2 * cfg.n_layers)
+            v = rng.normal(0, std, n).astype(np.float32)
+        flat[off : off + n] = v
+        off += n
+    return flat
+
+
+def _ln(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def forward(cfg: ModelConfig, flat, tokens):
+    """tokens: int32[B, T] → logits f32[B, T, vocab] (weight-tied head)."""
+    p = unflatten(cfg, flat)
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    for l in range(cfg.n_layers):
+        q = p[f"l{l}."+ "ln1_g"], p[f"l{l}."+"ln1_b"]
+        h = _ln(x, *q)
+        qkv = h @ p[f"l{l}."+"wqkv"]
+        qh, kh, vh = jnp.split(qkv, 3, axis=-1)
+        def heads(z):
+            return z.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        qh, kh, vh = heads(qh), heads(kh), heads(vh)
+        att = (qh @ kh.transpose(0, 1, 3, 2)) / jnp.sqrt(F32(cfg.head_dim))
+        att = jnp.where(mask[None, None], att, F32(-1e30))
+        att = jax.nn.softmax(att, axis=-1)
+        o = (att @ vh).transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + o @ p[f"l{l}."+"wo"]
+        h = _ln(x, p[f"l{l}."+"ln2_g"], p[f"l{l}."+"ln2_b"])
+        x = x + jax.nn.gelu(h @ p[f"l{l}."+"w1"]) @ p[f"l{l}."+"w2"]
+    x = _ln(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T
+
+
+def loss_fn(cfg: ModelConfig, flat, tokens):
+    """Next-token cross entropy (tokens[:, 1:] are the labels)."""
+    logits = forward(cfg, flat, tokens[:, :-1])
+    labels = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def train_step(cfg: ModelConfig, flat, tokens):
+    """(loss, grad_flat, sg_mean, sg_sqnorm) — grad stats via the L1 pallas
+    kernel so the metadata stage costs no extra pass in rust."""
+    loss, grad = jax.value_and_grad(partial(loss_fn, cfg))(flat, tokens)
+    tiles = grad.reshape(-1, SUPER_GROUP)
+    mean, sq = kernels.sg_stats(tiles)
+    return loss, grad, mean, sq
+
+
+def eval_loss(cfg: ModelConfig, flat, tokens):
+    return loss_fn(cfg, flat, tokens)
+
+
+def adamw_update(flat, m, v, grad, lr, step, *, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.01):
+    """One AdamW step on flat vectors. ``step`` is 1-based (f32 scalar)."""
+    m = beta1 * m + (1 - beta1) * grad
+    v = beta2 * v + (1 - beta2) * grad * grad
+    mhat = m / (1 - beta1**step)
+    vhat = v / (1 - beta2**step)
+    flat = flat - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * flat)
+    return flat, m, v
+
+
+# ---- synthetic corpus (DESIGN.md substitution for Wikitext/UltraChat) ----
+
+
+def synthetic_corpus(cfg: ModelConfig, n_tokens: int, seed: int = 0) -> np.ndarray:
+    """A Zipf-distributed token stream with Markov bigram structure —
+    learnable (perplexity decreases substantially below the unigram
+    entropy) yet generated in milliseconds. Serves as the tiny-corpus
+    workload for the e2e run."""
+    rng = np.random.default_rng(seed)
+    v = cfg.vocab
+    # Zipf unigram
+    ranks = np.arange(1, v + 1, dtype=np.float64)
+    p = 1.0 / ranks**1.1
+    p /= p.sum()
+    # per-state sparse transitions: each token prefers a few successors
+    n_succ = 8
+    succ = rng.integers(0, v, size=(v, n_succ))
+    out = np.empty(n_tokens, dtype=np.int32)
+    cur = 0
+    for i in range(n_tokens):
+        if rng.random() < 0.7:
+            cur = int(succ[cur, rng.integers(0, n_succ)])
+        else:
+            cur = int(rng.choice(v, p=p))
+        out[i] = cur
+    return out
+
+
+def batches(cfg: ModelConfig, corpus: np.ndarray, seed: int = 0):
+    """Yield int32[B, T+1] batches by random cropping (packed sequences)."""
+    rng = np.random.default_rng(seed)
+    t = cfg.seq_len + 1
+    while True:
+        idx = rng.integers(0, len(corpus) - t, size=cfg.batch)
+        yield np.stack([corpus[i : i + t] for i in idx])

@@ -1,0 +1,166 @@
+"""L1 correctness: pallas kernels (interpret mode) vs the pure-jnp oracle.
+
+The oracle itself is pinned against rust via fixtures (test_fixtures.rs on
+the rust side), so kernel == ref == rust transitively.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import dynamiq as K
+from compile.kernels import ref
+
+SEED = 0xD14A311  # DynamiqConfig::default().seed
+
+
+def tile(nsg, seed, scale=0.01, heavy=True):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(nsg, ref.SUPER_GROUP)).astype(np.float32) * scale
+    if heavy:
+        x *= np.exp(rng.normal(size=x.shape) * 1.2).astype(np.float32)
+    return x
+
+
+def ctxkw(worker=0, rnd=0, n=4, sg0=0, nsg=4):
+    pi = ref.pi_slots(SEED, rnd, n, np.arange(sg0, sg0 + nsg), worker)
+    return dict(shared_seed=SEED, worker=worker, rnd=rnd, n_workers=n, sg0=sg0, pi=pi)
+
+
+def kernel_meta(kw):
+    return K.make_meta(
+        kw["sg0"],
+        ref.gamma_seed(kw["shared_seed"], kw["worker"], kw["rnd"]),
+        ref.scale_seed(kw["shared_seed"], kw["worker"], kw["rnd"]),
+        kw["n_workers"],
+        True,
+    )
+
+
+@pytest.mark.parametrize("width", [2, 4, 8])
+def test_compress_kernel_matches_ref(width):
+    nsg = 8
+    x = tile(nsg, 1)
+    kw = ctxkw(worker=1, rnd=3, nsg=nsg)
+    rc, rs, rf = ref.compress_ref(x, width, **kw)
+    kc, ks, kf = K.compress(x, kw["pi"], width, kernel_meta(kw))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(rf))
+
+
+@pytest.mark.parametrize("width", [2, 4, 8])
+def test_decompress_kernel_matches_ref(width):
+    nsg = 8
+    x = tile(nsg, 2)
+    kw = ctxkw(nsg=nsg)
+    c, s, f = ref.compress_ref(x, width, **kw)
+    r = ref.decompress_ref(c, s, f, width)
+    k = K.decompress(np.asarray(c), np.asarray(s), np.asarray(f), width)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+@pytest.mark.parametrize("width", [2, 4, 8])
+def test_dar_kernel_matches_ref(width):
+    nsg = 4
+    x = tile(nsg, 3)
+    local = tile(nsg, 4)
+    kw = ctxkw(worker=2, rnd=7, nsg=nsg)
+    c, s, f = ref.compress_ref(x, width, **ctxkw(worker=0, rnd=7, nsg=nsg))
+    rc, rs, rf = ref.dar_ref(c, s, f, local, width, **kw)
+    kc, ks, kf = K.dar(
+        np.asarray(c), np.asarray(s), np.asarray(f), local, kw["pi"], kernel_meta(kw), width
+    )
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(rf))
+
+
+def test_da_kernel_adds():
+    nsg = 4
+    x = tile(nsg, 5)
+    local = tile(nsg, 6)
+    kw = ctxkw(nsg=nsg)
+    c, s, f = ref.compress_ref(x, 4, **kw)
+    expect = np.asarray(ref.decompress_ref(c, s, f, 4)) + local
+    got = K.decompress_accumulate(np.asarray(c), np.asarray(s), np.asarray(f), local, 4)
+    np.testing.assert_allclose(np.asarray(got), expect, rtol=0, atol=0)
+
+
+def test_stats_kernel_matches_ref():
+    nsg = 16
+    x = tile(nsg, 7)
+    rm, rs = ref.sg_stats_ref(x)
+    km, ks = K.sg_stats(x)
+    np.testing.assert_allclose(np.asarray(km), np.asarray(rm), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(ks), np.asarray(rs), rtol=1e-5)
+
+
+def test_roundtrip_error_reasonable():
+    nsg = 16
+    x = tile(nsg, 8)
+    kw = ctxkw(nsg=nsg)
+    for width, bound in [(2, 1.5), (4, 0.15), (8, 0.01)]:
+        c, s, f = ref.compress_ref(x, width, **kw)
+        xhat = np.asarray(ref.decompress_ref(c, s, f, width))
+        vnmse = ((xhat - x) ** 2).sum() / (x**2).sum()
+        assert vnmse < bound, f"w={width} vNMSE={vnmse}"
+
+
+def test_unbiasedness_of_ref():
+    nsg = 2
+    x = tile(nsg, 9)
+    acc = np.zeros_like(x)
+    trials = 200
+    for rnd in range(trials):
+        kw = ctxkw(rnd=rnd, nsg=nsg)
+        c, s, f = ref.compress_ref(x, 4, **kw)
+        acc += np.asarray(ref.decompress_ref(c, s, f, 4))
+    mean = acc / trials
+    err = ((mean - x) ** 2).sum() / (x**2).sum()
+    one = ref.compress_ref(x, 4, **ctxkw(rnd=0, nsg=nsg))
+    single = (
+        (np.asarray(ref.decompress_ref(*one, 4)) - x) ** 2
+    ).sum() / (x**2).sum()
+    assert err < single / 20, f"averaging must shrink error: {err} vs single {single}"
+
+
+# hypothesis sweep: shapes / scales / seeds / widths — kernel == ref always
+@settings(max_examples=20, deadline=None)
+@given(
+    nsg=st.integers(min_value=1, max_value=6),
+    width=st.sampled_from([2, 4, 8]),
+    worker=st.integers(min_value=0, max_value=3),
+    rnd=st.integers(min_value=0, max_value=1000),
+    log_scale=st.integers(min_value=-6, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_ref_equivalence_sweep(nsg, width, worker, rnd, log_scale, seed):
+    x = tile(nsg, seed, scale=10.0**log_scale)
+    kw = ctxkw(worker=worker, rnd=rnd, nsg=nsg)
+    rc, rs, rf = ref.compress_ref(x, width, **kw)
+    kc, ks, kf = K.compress(x, kw["pi"], width, kernel_meta(kw))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+    np.testing.assert_array_equal(np.asarray(kf), np.asarray(rf))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    width=st.sampled_from([2, 4, 8]),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_special_values_sweep(width, seed):
+    # zero rows, constant rows, single outlier
+    rng = np.random.default_rng(seed)
+    x = np.zeros((3, ref.SUPER_GROUP), dtype=np.float32)
+    x[1, :] = 0.5
+    x[2, rng.integers(0, ref.SUPER_GROUP)] = 1e4
+    kw = ctxkw(nsg=3)
+    rc, rs, rf = ref.compress_ref(x, width, **kw)
+    kc, ks, kf = K.compress(x, kw["pi"], width, kernel_meta(kw))
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(rc))
+    xhat = np.asarray(ref.decompress_ref(rc, rs, rf, width))
+    assert (xhat[0] == 0).all(), "zero row must decode to zero"
+    assert np.isfinite(xhat).all()

@@ -1,0 +1,115 @@
+"""L2 model tests: shapes, gradients, optimizer, and learnability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.ref import SUPER_GROUP
+
+
+CFG = M.PRESETS["tiny"]
+
+
+def test_param_count_padding():
+    d = M.param_count(CFG)
+    dp = M.padded_param_count(CFG)
+    assert dp % SUPER_GROUP == 0
+    assert 0 <= dp - d < SUPER_GROUP
+
+
+def test_preset_scales():
+    # base must be ~100M parameters (the e2e requirement)
+    base = M.param_count(M.PRESETS["base"])
+    assert 80e6 < base < 130e6, f"base={base}"
+    assert M.param_count(M.PRESETS["tiny"]) < 1e6
+
+
+def test_forward_shapes_and_finite():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    toks = np.random.default_rng(0).integers(0, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    logits = M.forward(CFG, flat, jnp.asarray(toks))
+    assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_train_step_outputs():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    toks = np.random.default_rng(1).integers(0, CFG.vocab, (CFG.batch, CFG.seq_len + 1)).astype(np.int32)
+    loss, grad, mean, sq = M.train_step(CFG, flat, jnp.asarray(toks))
+    d = M.padded_param_count(CFG)
+    assert grad.shape == (d,)
+    assert mean.shape == (d // SUPER_GROUP,)
+    assert float(loss) > 0
+    # stats consistency with direct computation
+    tiles = np.asarray(grad).reshape(-1, SUPER_GROUP)
+    np.testing.assert_allclose(np.asarray(mean), tiles.mean(1), rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(np.asarray(sq), (tiles**2).sum(1), rtol=1e-4, atol=1e-10)
+    # gradient of the padding region is zero
+    raw = M.param_count(CFG)
+    assert (np.asarray(grad)[raw:] == 0).all()
+
+
+def test_gradient_matches_finite_difference():
+    flat = jnp.asarray(M.init_params(CFG, 3))
+    toks = np.random.default_rng(2).integers(0, CFG.vocab, (2, CFG.seq_len + 1)).astype(np.int32)
+    toks = jnp.asarray(toks)
+    loss0, grad, _, _ = M.train_step(CFG, flat, toks)
+    # probe a few coordinates
+    rng = np.random.default_rng(3)
+    for idx in rng.integers(0, M.param_count(CFG), 3):
+        eps = 1e-3
+        up = flat.at[int(idx)].add(eps)
+        dn = flat.at[int(idx)].add(-eps)
+        fd = (M.loss_fn(CFG, up, toks) - M.loss_fn(CFG, dn, toks)) / (2 * eps)
+        assert abs(float(fd) - float(grad[int(idx)])) < 5e-2 * max(1.0, abs(float(fd))), (
+            f"idx={idx}: fd={fd} grad={grad[int(idx)]}"
+        )
+
+
+def test_adamw_decreases_loss():
+    flat = jnp.asarray(M.init_params(CFG, 0))
+    d = flat.shape[0]
+    m = jnp.zeros(d)
+    v = jnp.zeros(d)
+    corpus = M.synthetic_corpus(CFG, 50_000, seed=0)
+    it = M.batches(CFG, corpus, seed=0)
+    step_fn = jax.jit(lambda f, t: M.train_step(CFG, f, t))
+    upd_fn = jax.jit(M.adamw_update)
+    first = None
+    last = None
+    for step in range(1, 31):
+        toks = jnp.asarray(next(it))
+        loss, grad, _, _ = step_fn(flat, toks)
+        flat, m, v = upd_fn(flat, m, v, grad, jnp.float32(3e-3), jnp.float32(step))
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    assert last < first - 0.3, f"loss did not drop: {first} → {last}"
+
+
+def test_synthetic_corpus_is_learnable_structure():
+    c = M.synthetic_corpus(CFG, 20_000, seed=1)
+    assert c.min() >= 0 and c.max() < CFG.vocab
+    # bigram structure: repeated-successor rate far above uniform chance
+    pairs = set(zip(c[:-1], c[1:]))
+    assert len(pairs) < 0.5 * len(c), "transitions should be concentrated"
+
+
+def test_batches_shape():
+    c = M.synthetic_corpus(CFG, 10_000, seed=2)
+    b = next(M.batches(CFG, c, seed=0))
+    assert b.shape == (CFG.batch, CFG.seq_len + 1)
+    assert b.dtype == np.int32
+
+
+@pytest.mark.parametrize("preset", ["tiny", "small"])
+def test_unflatten_roundtrip(preset):
+    cfg = M.PRESETS[preset]
+    flat = M.init_params(cfg, 1)
+    params = M.unflatten(cfg, jnp.asarray(flat))
+    total = sum(int(np.prod(v.shape)) for v in params.values())
+    assert total == M.param_count(cfg)
+    # layernorm gains initialized to 1
+    assert np.allclose(np.asarray(params["lnf_g"]), 1.0)

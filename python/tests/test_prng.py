@@ -1,0 +1,35 @@
+"""Cross-layer PRNG pinning: these golden values are asserted verbatim in
+``rust/src/util/rng.rs::tests::golden_vectors`` — if either side drifts,
+the rust codec and the pallas kernels stop being byte-compatible."""
+
+import numpy as np
+
+from compile.kernels import prng
+
+
+def test_golden_vectors():
+    assert int(np.asarray(prng.pcg_hash(0, 0))) == 2831084092
+    assert int(np.asarray(prng.pcg_hash(0, 1))) == 2696773594
+    assert int(np.asarray(prng.pcg_hash(1, 0))) == 2325698533
+    assert int(np.asarray(prng.pcg_hash(123456789, 987654321))) == 1725007857
+
+
+def test_uniform_range_and_mean():
+    idx = np.arange(100_000, dtype=np.uint32)
+    u = np.asarray(prng.uniform_u01(7, idx))
+    assert (u >= 0).all() and (u < 1).all()
+    assert abs(u.mean() - 0.5) < 0.005
+
+
+def test_vectorized_matches_scalar():
+    idx = np.arange(64, dtype=np.uint32)
+    vec = np.asarray(prng.pcg_hash(42, idx))
+    for i in range(64):
+        assert vec[i] == int(np.asarray(prng.pcg_hash(42, i)))
+
+
+def test_uniform_is_exactly_h_shift():
+    # uniform must be (h >> 8) * 2^-24 bit-exactly (rust mirrors this)
+    h = int(np.asarray(prng.pcg_hash(3, 9)))
+    u = float(np.asarray(prng.uniform_u01(3, 9)))
+    assert u == np.float32((h >> 8) * (1.0 / 16777216.0))

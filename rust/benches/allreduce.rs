@@ -1,0 +1,73 @@
+//! End-to-end all-reduce benchmarks: full engine rounds across schemes,
+//! topologies and worker counts (wall-clock of the *codec work*; network
+//! time is simulated separately and reported alongside).
+//!
+//!     cargo bench --bench allreduce
+
+use dynamiq::codec::make_codecs;
+use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
+use dynamiq::util::benchkit::Bench;
+use dynamiq::util::rng::Pcg;
+
+fn grads(n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(7 + i as u64);
+            let mut region = 1.0f32;
+            (0..d)
+                .map(|k| {
+                    if k % 128 == 0 {
+                        region = (rng.next_normal() * 1.3).exp();
+                    }
+                    rng.next_normal() * 0.01 * region
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let bench = Bench::quick();
+    let d = 1 << 18;
+    println!("== engine rounds (d = {d}) ==");
+    for scheme in ["BF16", "DynamiQ", "MXFP8", "THC"] {
+        for (topo, n) in [(Topology::Ring, 4), (Topology::Ring, 8), (Topology::Butterfly, 8)] {
+            let g = grads(n, d);
+            let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+            eng.measure_vnmse = false;
+            let mut codecs = make_codecs(scheme, n);
+            let mut round = 0u32;
+            let r = bench.run(
+                &format!("{scheme}/{}-n{n}", topo.name()),
+                Some((d * 4 * n) as u64),
+                || {
+                    let (_, rep) = eng.run(&g, &mut codecs, round, 0.0);
+                    round += 1;
+                    std::hint::black_box(rep.rs_bytes);
+                },
+            );
+            let _ = r;
+        }
+    }
+
+    println!("\n== threaded coordinator vs engine (DynamiQ, ring, n=4) ==");
+    let n = 4;
+    let g = grads(n, d);
+    let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+    eng.measure_vnmse = false;
+    let mut codecs = make_codecs("DynamiQ", n);
+    bench.run("engine/round", Some((d * 4 * n) as u64), || {
+        let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+        std::hint::black_box(rep.rs_bytes);
+    });
+    bench.run("threaded/round", Some((d * 4 * n) as u64), || {
+        let out = dynamiq::coordinator::threaded_allreduce(
+            Topology::Ring,
+            g.clone(),
+            make_codecs("DynamiQ", n),
+            0,
+        )
+        .unwrap();
+        std::hint::black_box(out.len());
+    });
+}

@@ -1,0 +1,72 @@
+//! Codec micro-benchmarks: compress / decompress / fused-DAR throughput per
+//! scheme, plus the fused-vs-unfused ablation DESIGN.md calls out (the
+//! Table 2 / Fig 6 story: fused kernels keep intermediates out of "HBM").
+//!
+//!     cargo bench --bench codec_throughput
+
+use dynamiq::codec::{make_codec, GradCodec, HopCtx};
+use dynamiq::util::benchkit::Bench;
+use dynamiq::util::rng::Pcg;
+
+fn grad(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    let mut region = 1.0f32;
+    (0..d)
+        .map(|i| {
+            if i % 128 == 0 {
+                region = (rng.next_normal() * 1.3).exp();
+            }
+            rng.next_normal() * 0.01 * region
+        })
+        .collect()
+}
+
+fn main() {
+    let d = 1 << 20; // 1M coordinates = 4 MB f32
+    let bytes = (d * 4) as u64;
+    let bench = Bench::default();
+    let hop = HopCtx { worker: 0, n_workers: 4, round: 0, summed: 1 };
+    println!("== codec throughput (d = {d}, {} MB f32) ==", bytes / 1_000_000);
+
+    for scheme in ["BF16", "DynamiQ", "MXFP8", "MXFP4", "THC", "OmniReduce"] {
+        let g = grad(d, 1);
+        let g2 = grad(d, 2);
+        let mut codec = make_codec(scheme);
+        let meta = codec.metadata(&g, &hop);
+        // self-aggregated metadata (single-worker semantics are fine for
+        // timing; sizes are identical)
+        let pre = codec.begin_round(&g, &meta, &hop);
+        let mut codec_b = make_codec(scheme);
+        let meta_b = codec_b.metadata(&g2, &hop);
+        let pre_b = codec_b.begin_round(&g2, &meta_b, &hop);
+        let r = 0..pre.len();
+
+        let wire = codec.compress(&pre[r.clone()], r.clone(), &hop);
+        println!(
+            "-- {scheme}: wire {:.2} bits/coord",
+            wire.len() as f64 * 8.0 / d as f64
+        );
+        bench.run(&format!("{scheme}/compress"), Some(bytes), || {
+            std::hint::black_box(codec.compress(&pre[r.clone()], r.clone(), &hop));
+        });
+        bench.run(&format!("{scheme}/decompress"), Some(bytes), || {
+            std::hint::black_box(codec.decompress(&wire, r.clone(), &hop));
+        });
+        bench.run(&format!("{scheme}/fused-dar"), Some(bytes), || {
+            std::hint::black_box(codec_b.decompress_accumulate_recompress(
+                &wire,
+                &pre_b[r.clone()],
+                r.clone(),
+                &hop,
+            ));
+        });
+        // unfused ablation: decompress → add → compress (three passes)
+        bench.run(&format!("{scheme}/unfused-dar"), Some(bytes), || {
+            let mut acc = codec_b.decompress(&wire, r.clone(), &hop);
+            for (a, &p) in acc.iter_mut().zip(&pre_b[r.clone()]) {
+                *a += p;
+            }
+            std::hint::black_box(codec_b.compress(&acc, r.clone(), &hop));
+        });
+    }
+}

@@ -1,0 +1,84 @@
+//! Timing-bearing paper rows: Tab 4's throughput column (rounds/s per bit
+//! budget), the bit-allocation solver comparison (exact §3.2 vs fast §A),
+//! and the metadata-stage cost (the "<1%" claim).
+//!
+//!     cargo bench --bench paper_tables
+
+use dynamiq::codec::{make_codec, make_codecs, GradCodec, HopCtx};
+use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
+use dynamiq::quant::bitalloc::{solve_exact, FastAllocator};
+use dynamiq::util::benchkit::{Bench, Table};
+use dynamiq::util::rng::Pcg;
+
+fn grads(n: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(3 + i as u64);
+            let mut region = 1.0f32;
+            (0..d)
+                .map(|k| {
+                    if k % 128 == 0 {
+                        region = (rng.next_normal() * 1.3).exp();
+                    }
+                    rng.next_normal() * 0.01 * region
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn main() {
+    let bench = Bench::quick();
+    let d = 1 << 18;
+    let n = 4;
+    let g = grads(n, d);
+
+    // --- Tab 4: rounds/s by bit budget (codec work + simulated comm) ---
+    println!("== Tab 4: bit-budget throughput (d = {d}, n = {n}, ring) ==");
+    let mut table = Table::new(&["method", "codec ms/round", "sim comm ms", "wire bits/coord"]);
+    for scheme in ["DynamiQ:b=3", "DynamiQ:b=4", "DynamiQ:b=5", "DynamiQ:b=6", "MXFP8"] {
+        let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+        eng.measure_vnmse = false;
+        let mut codecs = make_codecs(scheme, n);
+        let mut comm = 0.0;
+        let mut wire = 0u64;
+        let r = bench.run(&format!("tab4/{scheme}"), None, || {
+            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+            comm = rep.comm_time_s();
+            wire = rep.rs_bytes + rep.ag_bytes;
+        });
+        table.row(vec![
+            scheme.into(),
+            format!("{:.2}", r.median_ns / 1e6),
+            format!("{:.3}", comm * 1e3),
+            format!("{:.2}", wire as f64 * 8.0 / (d * 2 * (n - 1)) as f64 / n as f64 * n as f64),
+        ]);
+    }
+    println!("{}", table.render());
+
+    // --- bit-allocation solvers: exact vs fast (§3.2 vs §A) ---
+    println!("== bit-allocation solver (65536 super-groups) ==");
+    let mut rng = Pcg::new(9);
+    let f: Vec<f32> = (0..65536).map(|_| (rng.next_normal() as f64 * 2.5).exp() as f32).collect();
+    let entries = vec![256usize; f.len()];
+    bench.run("bitalloc/exact", None, || {
+        std::hint::black_box(solve_exact(&f, &entries, &[2, 4, 8], 4.4375));
+    });
+    let mut fast = FastAllocator::paper_default();
+    fast.allocate(&f, &entries, 4.4375); // warm start (steady-state path)
+    bench.run("bitalloc/fast-steady", None, || {
+        std::hint::black_box(fast.allocate(&f, &entries, 4.4375));
+    });
+
+    // --- metadata stage cost (bytes) ---
+    println!("== metadata volume ==");
+    let mut c = make_codec("DynamiQ");
+    let hop = HopCtx { worker: 0, n_workers: 4, round: 0, summed: 1 };
+    let meta = c.metadata(&g[0], &hop);
+    println!(
+        "metadata: {} floats = {} bytes = {:.3}% of the BF16 gradient",
+        meta.len(),
+        meta.len() * 4,
+        meta.len() as f64 * 4.0 / (d as f64 * 2.0) * 100.0
+    );
+}

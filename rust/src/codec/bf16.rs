@@ -1,0 +1,116 @@
+//! Uncompressed BF16 baseline — what PyTorch DDP transmits by default.
+//! Partial sums are accumulated in f32 and re-rounded to BF16 per hop,
+//! mirroring NCCL's behaviour with `bf16` buffers.
+
+use std::ops::Range;
+
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::quant::minifloat::{bf16_bits, bf16_from_bits};
+
+pub struct Bf16Codec {
+    d: usize,
+}
+
+impl Bf16Codec {
+    pub fn new() -> Self {
+        Bf16Codec { d: 0 }
+    }
+}
+
+impl Default for Bf16Codec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GradCodec for Bf16Codec {
+    fn name(&self) -> &'static str {
+        "BF16"
+    }
+
+    fn metadata(&mut self, _grad: &[f32], _ctx: &HopCtx) -> Vec<f32> {
+        Vec::new()
+    }
+
+    fn metadata_op(&self) -> MetaOp {
+        MetaOp::Sum
+    }
+
+    fn begin_round(&mut self, grad: &[f32], _agg_meta: &[f32], _ctx: &HopCtx) -> Vec<f32> {
+        self.d = grad.len();
+        let mut pre = grad.to_vec();
+        pre.resize(align_up(grad.len(), self.chunk_alignment()), 0.0);
+        pre
+    }
+
+    fn chunk_alignment(&self) -> usize {
+        16
+    }
+
+    fn compress(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx) -> Vec<u8> {
+        debug_assert_eq!(data.len(), range.len());
+        let mut out = Vec::with_capacity(range.len() * 2);
+        for &v in data {
+            out.extend_from_slice(&bf16_bits(v).to_le_bytes());
+        }
+        out
+    }
+
+    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
+        assert_eq!(bytes.len(), range.len() * 2);
+        bytes
+            .chunks_exact(2)
+            .map(|b| bf16_from_bits(u16::from_le_bytes([b[0], b[1]])))
+            .collect()
+    }
+
+    fn decompress_accumulate(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) {
+        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
+            *a += v;
+        }
+    }
+
+    fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {
+        agg.truncate(self.d);
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rng::Pcg, vnmse};
+
+    #[test]
+    fn bf16_roundtrip_error_is_tiny() {
+        let mut rng = Pcg::new(1);
+        let mut g = vec![0.0f32; 1000];
+        rng.fill_normal(&mut g, 0.01);
+        let mut c = Bf16Codec::new();
+        let ctx = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let pre = c.begin_round(&g, &[], &ctx);
+        let bytes = c.compress(&pre, 0..pre.len(), &ctx);
+        assert_eq!(bytes.len(), pre.len() * 2);
+        let dec = c.decompress(&bytes, 0..pre.len(), &ctx);
+        let out = c.end_round(dec, &ctx);
+        let err = vnmse(&g, &out);
+        assert!(err < 1e-4, "bf16 vNMSE {err}");
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut c = Bf16Codec::new();
+        let ctx = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let pre = c.begin_round(&[1.0; 16], &[], &ctx);
+        let bytes = c.compress(&pre, 0..16, &ctx);
+        let mut acc = vec![2.0f32; 16];
+        c.decompress_accumulate(&bytes, &mut acc, 0..16, &ctx);
+        assert!(acc.iter().all(|&v| (v - 3.0).abs() < 1e-2));
+    }
+}

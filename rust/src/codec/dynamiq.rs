@@ -1,0 +1,873 @@
+//! The DynamiQ codec (paper §3) — the full two-phase pipeline:
+//!
+//! 1. metadata: per-super-group mean µ_{i,j} + squared norm F_{i,j},
+//!    aggregated by the engine's lightweight all-reduce (Fig. 2a–b);
+//! 2. begin_round: subtract global means, agree on the variable bitwidth
+//!    allocation from the F_j (fast §A solver), reorder super-groups so
+//!    equal-width runs are contiguous (Fig. 2c);
+//! 3. chunk compression with non-uniform quantization values, hierarchical
+//!    (UINT8-under-BF16) scales and correlated stochastic rounding;
+//!    fused decompress-accumulate(-recompress) along the aggregation path
+//!    (Fig. 2d–e);
+//! 4. end_round: restore order, add back n·µ_j (Fig. 2f).
+//!
+//! Every stage is deterministic given (shared seed, round, worker), which
+//! is what lets all workers agree on allocation and shared randomness
+//! without extra communication, and what makes the pallas kernels (L1)
+//! byte-compatible with this implementation.
+
+use std::ops::Range;
+
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::quant::bitalloc::{solve_exact, BitAllocation, FastAllocator};
+use crate::quant::groups::{GroupLayout, SuperGroupStats};
+use crate::quant::hierarchical::{encode_scales, ScaleCodes};
+use crate::quant::minifloat::{bf16_bits, bf16_from_bits, bf16_round};
+use crate::quant::nonuniform::{QTables, DEFAULT_EPSILON};
+use crate::quant::packing::{pack, packed_len, sign_mag_code, split_sign_mag, unpack};
+use crate::quant::rounding::{Rounding, RoundingCtx};
+use crate::util::rng::pcg_hash;
+
+/// Which threshold solver drives the variable bitwidth allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Allocator {
+    /// §3.2: binary search over the threshold family (sort-free variant).
+    Exact,
+    /// §A: the incremental log-domain solver (the prototype default).
+    Fast,
+}
+
+/// DynamiQ configuration. `Default` is the paper's evaluated setup:
+/// s=16, S=256, W={2,4,8}, b=5 bits/coordinate, non-uniform values,
+/// hierarchical scales, correlated rounding, fast allocator.
+#[derive(Clone, Debug)]
+pub struct DynamiqConfig {
+    pub layout: GroupLayout,
+    pub widths: Vec<u32>,
+    /// overall budget, bits per coordinate, *including* scale overhead
+    pub budget_bits: f64,
+    pub epsilon: f64,
+    pub rounding: Rounding,
+    pub allocator: Allocator,
+    /// ablation: UINT8 group scales under BF16 super-group scale (on) vs
+    /// BF16 per group (off)
+    pub hierarchical: bool,
+    /// ablation: variable bitwidth allocation (off → single fixed width)
+    pub variable_bitwidth: bool,
+    /// ablation: uniform quantization values instead of f(ε, ·)
+    pub uniform_values: bool,
+    /// subtract per-super-group global means (on in the paper's pipeline)
+    pub subtract_mean: bool,
+    pub seed: u32,
+}
+
+impl Default for DynamiqConfig {
+    fn default() -> Self {
+        DynamiqConfig {
+            layout: GroupLayout::paper_default(),
+            widths: vec![2, 4, 8],
+            budget_bits: 5.0,
+            epsilon: DEFAULT_EPSILON,
+            rounding: Rounding::Correlated,
+            allocator: Allocator::Fast,
+            hierarchical: true,
+            variable_bitwidth: true,
+            uniform_values: false,
+            subtract_mean: true,
+            seed: 0xD14A_311,
+        }
+    }
+}
+
+impl DynamiqConfig {
+    /// Scale metadata overhead in bits per entry for the main all-reduce.
+    pub fn scale_overhead_bits(&self) -> f64 {
+        let gpsg = self.layout.groups_per_super() as f64;
+        if self.hierarchical {
+            // BF16 super-group scale + UINT8 per group
+            (16.0 + 8.0 * gpsg) / self.layout.super_group as f64
+        } else {
+            // BF16 per group
+            16.0 / self.layout.group as f64
+        }
+    }
+
+    /// Payload budget b̄ (§A): overall budget minus scale overhead.
+    pub fn payload_budget_bits(&self) -> f64 {
+        (self.budget_bits - self.scale_overhead_bits()).max(*self.widths.first().unwrap() as f64)
+    }
+
+    /// Fixed width used when variable bitwidth allocation is disabled: the
+    /// largest allowed width fitting the payload budget.
+    fn fixed_width(&self) -> u32 {
+        let b = self.payload_budget_bits();
+        *self
+            .widths
+            .iter()
+            .filter(|&&w| (w as f64) <= b)
+            .max()
+            .unwrap_or_else(|| self.widths.first().unwrap())
+    }
+}
+
+/// Per-round agreed state (identical on every worker).
+struct RoundState {
+    /// gradient length before padding
+    d: usize,
+    /// padded length (multiple of S)
+    padded: usize,
+    /// global super-group means µ_j (original order)
+    means: Vec<f32>,
+    /// reorder permutation: `perm[k]` = original index of the super-group
+    /// at reordered slot k (stable sort by width desc)
+    perm: Vec<u32>,
+    /// widths in *reordered* order: width_of_slot[k]
+    widths: Vec<u8>,
+}
+
+/// The DynamiQ codec. One per worker; carries the fast allocator's `u`
+/// across rounds (§A) plus the current round's agreed state.
+pub struct Dynamiq {
+    pub cfg: DynamiqConfig,
+    tables: QTables,
+    fast_alloc: FastAllocator,
+    state: Option<RoundState>,
+}
+
+impl Dynamiq {
+    pub fn new(cfg: DynamiqConfig) -> Self {
+        assert!(
+            cfg.widths.windows(2).all(|w| w[0] < w[1]) && !cfg.widths.is_empty(),
+            "widths must be ascending"
+        );
+        let tables = QTables::new(&cfg.widths, cfg.epsilon, cfg.uniform_values);
+        let w3: [u32; 3] = if cfg.widths.len() == 3 {
+            [cfg.widths[0], cfg.widths[1], cfg.widths[2]]
+        } else {
+            [2, 4, 8] // fast allocator unused unless |W|=3
+        };
+        Dynamiq { fast_alloc: FastAllocator::new(w3), tables, cfg, state: None }
+    }
+
+    pub fn paper_default() -> Self {
+        Dynamiq::new(DynamiqConfig::default())
+    }
+
+    fn s(&self) -> usize {
+        self.cfg.layout.super_group
+    }
+
+    fn g(&self) -> usize {
+        self.cfg.layout.group
+    }
+
+    /// Wire bytes of one super-group at width `w`.
+    fn sg_wire_bytes(&self, w: u32) -> usize {
+        let gpsg = self.cfg.layout.groups_per_super();
+        let scales = if self.cfg.hierarchical { 2 + gpsg } else { 2 * gpsg };
+        scales + packed_len(self.s(), w)
+    }
+
+    /// Rounding context for hop compression by `ctx.worker`.
+    fn rctx(&self, ctx: &HopCtx) -> RoundingCtx {
+        RoundingCtx::new(self.cfg.rounding, self.cfg.seed, ctx.worker, ctx.n_workers, ctx.round)
+    }
+
+    /// Seed for group-scale stochastic rounding: domain-separated from
+    /// entry rounding, still worker-private + round-fresh.
+    fn scale_seed(&self, ctx: &HopCtx) -> u32 {
+        self.cfg.seed ^ pcg_hash(0x5CA1E, ctx.worker) ^ ctx.round.wrapping_mul(0x9E37_79B9)
+    }
+
+    /// Compress the entries of one (already normalized, reordered)
+    /// super-group slab `x` of S entries at width `w` into `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_sg(
+        &self,
+        x: &[f32],
+        w: u32,
+        sg_slot: usize,
+        rctx: &RoundingCtx,
+        scale_seed: u32,
+        pi: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let g = self.g();
+        let gpsg = self.cfg.layout.groups_per_super();
+        debug_assert_eq!(x.len(), self.s());
+        // group maxima
+        let mut maxima = [0.0f32; 64];
+        let maxima = &mut maxima[..gpsg];
+        for (gi, m) in maxima.iter_mut().enumerate() {
+            *m = x[gi * g..(gi + 1) * g].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        }
+        let entry_ctr0 = (sg_slot * self.s()) as u32;
+        let _scales: ScaleCodes = if self.cfg.hierarchical {
+            let sc = encode_scales(maxima, scale_seed, entry_ctr0 / g as u32);
+            out.extend_from_slice(&bf16_bits(sc.sf_super).to_le_bytes());
+            out.extend_from_slice(&sc.codes);
+            sc
+        } else {
+            // BF16 per group, bumped so it never under-covers the max
+            let mut codes = Vec::with_capacity(gpsg);
+            for &m in maxima.iter() {
+                let mut b = bf16_round(m);
+                if b < m {
+                    b = f32::from_bits(((b.to_bits() >> 16) + 1) << 16);
+                }
+                out.extend_from_slice(&bf16_bits(b).to_le_bytes());
+                codes.push(b);
+            }
+            // reuse ScaleCodes shape: store decoded directly via sf_super=1
+            // trick is ugly; keep a parallel representation below instead.
+            return self.compress_entries_plain(x, w, maxima, &codes, entry_ctr0, rctx, pi, out);
+        };
+        let table = self.tables.get(w);
+        // Perf: pack codes on the fly (w ∈ {2,4,8} divides 8, so the
+        // accumulator flushes on byte boundaries) — no intermediate code
+        // vector, no div/mod per entry. Byte-identical to pack(&codes, w)
+        // (verified by the fixture tests).
+        let mut acc_bits: u32 = 0;
+        let mut nbits: u32 = 0;
+        for (gi, chunk) in x.chunks_exact(g).enumerate() {
+            let true_max = maxima[gi];
+            let inv = if true_max > 0.0 { 1.0 / true_max } else { 0.0 };
+            for (k, &v) in chunk.iter().enumerate() {
+                let ctr = entry_ctr0 + (gi * g + k) as u32;
+                let m = (v.abs() * inv).min(1.0);
+                // Sign-magnitude coding would flip the rounding direction
+                // in the *value* domain for negatives, cancelling the
+                // negative-correlation effect; flipping u restores a
+                // consistent "small u ⇒ round up in value" convention
+                // (1−u is still uniform, so unbiasedness is untouched).
+                let u0 = rctx.uniform(pi, ctr);
+                let u = if v < 0.0 { 1.0 - u0 } else { u0 };
+                let mag = table.quantize(m, u);
+                let code = sign_mag_code(v < 0.0, mag, w) as u32;
+                acc_bits |= code << nbits;
+                nbits += w;
+                if nbits == 8 {
+                    out.push(acc_bits as u8);
+                    acc_bits = 0;
+                    nbits = 0;
+                }
+            }
+        }
+        debug_assert_eq!(nbits, 0, "S·w must be byte-aligned");
+    }
+
+    /// Entry compression with plain BF16 per-group scales (non-hierarchical
+    /// ablation). `scales[gi]` is the decoded BF16 scale already ≥ max.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_entries_plain(
+        &self,
+        x: &[f32],
+        w: u32,
+        maxima: &[f32],
+        scales: &[f32],
+        entry_ctr0: u32,
+        rctx: &RoundingCtx,
+        pi: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let g = self.g();
+        let table = self.tables.get(w);
+        let mut codes: Vec<u16> = Vec::with_capacity(self.s());
+        for (gi, chunk) in x.chunks_exact(g).enumerate() {
+            let _ = maxima;
+            let sf = scales[gi];
+            let inv = if sf > 0.0 { 1.0 / sf } else { 0.0 };
+            for (k, &v) in chunk.iter().enumerate() {
+                let ctr = entry_ctr0 + (gi * g + k) as u32;
+                let m = (v.abs() * inv).min(1.0);
+                // see compress_sg: keep rounding direction consistent in
+                // the value domain for negative-correlation to bite
+                let u0 = rctx.uniform(pi, ctr);
+                let u = if v < 0.0 { 1.0 - u0 } else { u0 };
+                let mag = table.quantize(m, u);
+                codes.push(sign_mag_code(v < 0.0, mag, w));
+            }
+        }
+        out.extend_from_slice(&pack(&codes, w));
+    }
+
+    /// Signed decode LUT for width `w`: lut[code] = ±grid[mag]. Built once
+    /// per width run by the decode paths (the reorder guarantees
+    /// same-width runs, so this amortizes to ~1/S per entry).
+    fn decode_lut(&self, w: u32) -> Vec<f32> {
+        let table = self.tables.get(w);
+        (0..(1u16 << w))
+            .map(|c| {
+                let (neg, mag) = split_sign_mag(c, w);
+                let v = table.value(mag);
+                if neg {
+                    -v
+                } else {
+                    v
+                }
+            })
+            .collect()
+    }
+
+    /// Decode one super-group from `bytes` at offset `off`; calls `sink`
+    /// with (entry_index_within_sg, value). Returns bytes consumed.
+    /// `lut` must be `self.decode_lut(w)`.
+    fn decode_sg<F: FnMut(usize, f32)>(
+        &self,
+        bytes: &[u8],
+        w: u32,
+        lut: &[f32],
+        mut sink: F,
+    ) -> usize {
+        let g = self.g();
+        let gpsg = self.cfg.layout.groups_per_super();
+        let s = self.s();
+        let mut off = 0usize;
+        // decode scales
+        let mut scales = [0.0f32; 64];
+        let scales = &mut scales[..gpsg];
+        if self.cfg.hierarchical {
+            let sf_super = bf16_from_bits(u16::from_le_bytes([bytes[0], bytes[1]]));
+            off = 2;
+            for sc in scales.iter_mut() {
+                *sc = bytes[off] as f32 * sf_super * (1.0 / 255.0);
+                off += 1;
+            }
+        } else {
+            for sc in scales.iter_mut() {
+                *sc = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+                off += 2;
+            }
+        }
+        // Perf: iterate group-by-group (groups are byte-aligned for
+        // w ∈ {2,4,8}, g = 16) so the scale multiplier is hoisted and
+        // codes unpack byte-wise without div/mod.
+        let payload = packed_len(s, w);
+        let per_byte = (8 / w) as usize;
+        let mask = (1u32 << w) - 1;
+        let bytes_per_group = g / per_byte;
+        let mut i = 0usize;
+        let mut p = off;
+        for gi in 0..gpsg {
+            let scale = scales[gi];
+            for _ in 0..bytes_per_group {
+                let mut b = bytes[p] as u32;
+                p += 1;
+                for _ in 0..per_byte {
+                    let code = (b & mask) as usize;
+                    b >>= w;
+                    sink(i, lut[code] * scale);
+                    i += 1;
+                }
+            }
+        }
+        debug_assert_eq!(p - off, payload);
+        off + payload
+    }
+
+    fn state(&self) -> &RoundState {
+        self.state.as_ref().expect("begin_round not called")
+    }
+
+    /// Number of super-group slots covered by `range` (which is S-aligned).
+    fn slots(&self, range: &Range<usize>) -> Range<usize> {
+        debug_assert_eq!(range.start % self.s(), 0);
+        debug_assert_eq!(range.end % self.s(), 0);
+        (range.start / self.s())..(range.end / self.s())
+    }
+
+    /// Exact wire size of a chunk under the agreed allocation (used by
+    /// tests and the Table 2 traffic model).
+    pub fn chunk_wire_bytes(&self, range: &Range<usize>) -> usize {
+        let st = self.state();
+        self.slots(range).map(|k| self.sg_wire_bytes(st.widths[k] as u32)).sum()
+    }
+
+    /// The agreed allocation in *original* super-group order (diagnostics,
+    /// Fig. 3 reproduction).
+    pub fn allocation_original_order(&self) -> Vec<u8> {
+        let st = self.state();
+        let mut out = vec![0u8; st.widths.len()];
+        for (slot, &orig) in st.perm.iter().enumerate() {
+            out[orig as usize] = st.widths[slot];
+        }
+        out
+    }
+}
+
+impl GradCodec for Dynamiq {
+    fn name(&self) -> &'static str {
+        "DynamiQ"
+    }
+
+    fn metadata(&mut self, grad: &[f32], _ctx: &HopCtx) -> Vec<f32> {
+        // [means..., sq_norms...] — summed elementwise across workers.
+        // means are divided by n in begin_round (µ_j = Σµ_{i,j} / n).
+        let stats = SuperGroupStats::compute(grad, &self.cfg.layout);
+        let mut v = stats.mean;
+        v.extend_from_slice(&stats.sq_norm);
+        v
+    }
+
+    fn metadata_op(&self) -> MetaOp {
+        MetaOp::Sum
+    }
+
+    fn begin_round(&mut self, grad: &[f32], agg_meta: &[f32], ctx: &HopCtx) -> Vec<f32> {
+        let s = self.s();
+        let d = grad.len();
+        let padded = align_up(d, s);
+        let nsg = padded / s;
+        assert_eq!(agg_meta.len(), 2 * nsg, "metadata length mismatch");
+        let n = ctx.n_workers as f32;
+        let means: Vec<f32> = agg_meta[..nsg].iter().map(|&m| m / n).collect();
+        let f: Vec<f32> = agg_meta[nsg..].to_vec();
+
+        // entries per super-group: S everywhere (the tail is zero-padded,
+        // padding contributes nothing to F but is transmitted — exactly
+        // like the CUDA kernels which operate on full tiles).
+        let sg_entries = vec![s; nsg];
+        let alloc: BitAllocation = if self.cfg.variable_bitwidth {
+            let budget = self.cfg.payload_budget_bits();
+            match self.cfg.allocator {
+                Allocator::Fast if self.cfg.widths.len() == 3 => {
+                    self.fast_alloc.allocate(&f, &sg_entries, budget)
+                }
+                _ => solve_exact(&f, &sg_entries, &self.cfg.widths, budget),
+            }
+        } else {
+            BitAllocation { widths: vec![self.cfg.fixed_width() as u8; nsg] }
+        };
+
+        // Stable sort super-groups by width descending → contiguous runs
+        // (Fig. 2c). Stability makes the permutation identical across
+        // workers (they computed identical allocations).
+        let mut perm: Vec<u32> = (0..nsg as u32).collect();
+        perm.sort_by_key(|&j| std::cmp::Reverse(alloc.widths[j as usize]));
+
+        // Build the preprocessed vector: padded, mean-subtracted, permuted.
+        let mut pre = vec![0.0f32; padded];
+        for (slot, &orig) in perm.iter().enumerate() {
+            let src0 = orig as usize * s;
+            let dst = &mut pre[slot * s..(slot + 1) * s];
+            let take = d.saturating_sub(src0).min(s);
+            dst[..take].copy_from_slice(&grad[src0..src0 + take]);
+            if self.cfg.subtract_mean {
+                let m = means[orig as usize];
+                for v in dst[..take].iter_mut() {
+                    *v -= m;
+                }
+            }
+        }
+        let widths: Vec<u8> = perm.iter().map(|&j| alloc.widths[j as usize]).collect();
+        self.state = Some(RoundState { d, padded, means, perm, widths });
+        pre
+    }
+
+    fn chunk_alignment(&self) -> usize {
+        self.s()
+    }
+
+    fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8> {
+        debug_assert_eq!(data.len(), range.len());
+        let st = self.state();
+        let rctx = self.rctx(ctx);
+        let sseed = self.scale_seed(ctx);
+        let mut out = Vec::with_capacity(self.chunk_wire_bytes(&range));
+        for k in self.slots(&range) {
+            let w = st.widths[k] as u32;
+            let pi = rctx.pi_slot(k as u32);
+            let base = k * self.s() - range.start;
+            let x = &data[base..base + self.s()];
+            self.compress_sg(x, w, k, &rctx, sseed, pi, &mut out);
+        }
+        out
+    }
+
+    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
+        let st = self.state();
+        let mut out = vec![0.0f32; range.len()];
+        let mut off = 0usize;
+        let mut lut: (u32, Vec<f32>) = (0, Vec::new());
+        for k in self.slots(&range) {
+            let w = st.widths[k] as u32;
+            if lut.0 != w {
+                lut = (w, self.decode_lut(w));
+            }
+            let base = k * self.s() - range.start;
+            off += self.decode_sg(&bytes[off..], w, &lut.1, |i, v| out[base + i] = v);
+        }
+        debug_assert_eq!(off, bytes.len());
+        out
+    }
+
+    fn decompress_accumulate(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+    ) {
+        let st = self.state();
+        let mut off = 0usize;
+        let mut lut: (u32, Vec<f32>) = (0, Vec::new());
+        for k in self.slots(&range) {
+            let w = st.widths[k] as u32;
+            if lut.0 != w {
+                lut = (w, self.decode_lut(w));
+            }
+            let base = k * self.s() - range.start;
+            off += self.decode_sg(&bytes[off..], w, &lut.1, |i, v| acc[base + i] += v);
+        }
+        debug_assert_eq!(off, bytes.len());
+    }
+
+    /// The fused kernel (§4, kernel 3): per super-group, decode into a
+    /// stack slab, accumulate the local contribution, recompress — one pass
+    /// over the wire data, no chunk-sized intermediate.
+    fn decompress_accumulate_recompress(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) -> Vec<u8> {
+        debug_assert_eq!(local.len(), range.len());
+        let st = self.state();
+        let rctx = self.rctx(ctx);
+        let sseed = self.scale_seed(ctx);
+        let s = self.s();
+        let mut out = Vec::with_capacity(bytes.len());
+        let mut slab = vec![0.0f32; s];
+        let mut off = 0usize;
+        let mut lut: (u32, Vec<f32>) = (0, Vec::new());
+        for k in self.slots(&range) {
+            let w = st.widths[k] as u32;
+            if lut.0 != w {
+                lut = (w, self.decode_lut(w));
+            }
+            let base = k * s - range.start;
+            // decode + accumulate into the slab (registers/VMEM analogue)
+            slab.copy_from_slice(&local[base..base + s]);
+            off += self.decode_sg(&bytes[off..], w, &lut.1, |i, v| slab[i] += v);
+            let pi = rctx.pi_slot(k as u32);
+            self.compress_sg(&slab, w, k, &rctx, sseed, pi, &mut out);
+        }
+        debug_assert_eq!(off, bytes.len());
+        out
+    }
+
+    fn end_round(&mut self, agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {
+        let st = self.state.take().expect("begin_round not called");
+        assert_eq!(agg.len(), st.padded);
+        let s = self.s();
+        let mut out = vec![0.0f32; st.d];
+        for (slot, &orig) in st.perm.iter().enumerate() {
+            let dst0 = orig as usize * s;
+            let take = st.d.saturating_sub(dst0).min(s);
+            let add = if self.cfg.subtract_mean {
+                st.means[orig as usize] * ctx.n_workers as f32
+            } else {
+                0.0
+            };
+            for i in 0..take {
+                out[dst0 + i] = agg[slot * s + i] + add;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+    use crate::util::vnmse;
+
+    fn hop(worker: u32, n: u32, round: u32) -> HopCtx {
+        HopCtx { worker, n_workers: n, round, summed: 1 }
+    }
+
+    /// Gradient-like data: spatially-correlated region scales (locality,
+    /// §2.2) + per-entry lognormal weights (heavy-tailed within-group skew,
+    /// the regime non-uniform values are designed for).
+    fn fake_grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        let mut out = vec![0.0f32; d];
+        let mut region_scale = 1.0f32;
+        for (i, v) in out.iter_mut().enumerate() {
+            if i % 128 == 0 {
+                region_scale = (rng.next_normal() * 1.5).exp(); // lognormal region scale
+            }
+            let heavy = (rng.next_normal() * 1.2).exp(); // per-entry heavy tail
+            *v = rng.next_normal() * 0.01 * region_scale * heavy;
+        }
+        out
+    }
+
+    /// Single-worker compress→decompress roundtrip through the full
+    /// pipeline (metadata → begin → compress → decompress → end).
+    fn roundtrip(cfg: DynamiqConfig, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, usize) {
+        let grad = fake_grad(d, seed);
+        let mut c = Dynamiq::new(cfg);
+        let ctx = hop(0, 1, 0);
+        let meta = c.metadata(&grad, &ctx);
+        let pre = c.begin_round(&grad, &meta, &ctx);
+        let ranges = crate::codec::chunk_ranges(pre.len(), 2, c.chunk_alignment());
+        let mut agg = vec![0.0f32; pre.len()];
+        let mut wire = 0usize;
+        for r in ranges {
+            if r.is_empty() {
+                continue;
+            }
+            let bytes = c.compress(&pre[r.clone()], r.clone(), &ctx);
+            wire += bytes.len();
+            let dec = c.decompress(&bytes, r.clone(), &ctx);
+            agg[r.clone()].copy_from_slice(&dec);
+        }
+        let out = c.end_round(agg, &ctx);
+        (grad, out, wire)
+    }
+
+    #[test]
+    fn roundtrip_error_is_small_and_budget_respected() {
+        let d = 4096;
+        let cfg = DynamiqConfig::default();
+        let budget = cfg.budget_bits;
+        let (grad, out, wire) = roundtrip(cfg, d, 1);
+        let err = vnmse(&grad, &out);
+        assert!(err < 0.02, "vNMSE too high: {err}");
+        // wire bits per (padded) entry within the budget
+        let bits = wire as f64 * 8.0 / d as f64;
+        assert!(bits <= budget + 1e-9, "wire bits {bits} exceed budget {budget}");
+        assert!(bits > budget - 2.0, "suspiciously far below budget: {bits}");
+    }
+
+    #[test]
+    fn roundtrip_handles_ragged_tail() {
+        for d in [1, 255, 257, 300, 4095] {
+            let (grad, out, _) = roundtrip(DynamiqConfig::default(), d, 3);
+            assert_eq!(out.len(), grad.len());
+            let err = vnmse(&grad, &out);
+            assert!(err < 0.05, "d={d} vNMSE={err}");
+        }
+    }
+
+    #[test]
+    fn quantization_is_unbiased_over_rounds() {
+        // Average many independent compressions of the same gradient: the
+        // mean estimate must converge to the true value (unbiasedness).
+        let d = 512;
+        let grad = fake_grad(d, 7);
+        let mut acc = vec![0.0f64; d];
+        let trials = 300;
+        let mut c = Dynamiq::paper_default();
+        for t in 0..trials {
+            let ctx = hop(0, 1, t);
+            let meta = c.metadata(&grad, &ctx);
+            let pre = c.begin_round(&grad, &meta, &ctx);
+            let bytes = c.compress(&pre, 0..pre.len(), &ctx);
+            let dec = c.decompress(&bytes, 0..pre.len(), &ctx);
+            let out = c.end_round(dec, &ctx);
+            for (a, &o) in acc.iter_mut().zip(&out) {
+                *a += o as f64;
+            }
+        }
+        let mean_err: f64 = acc
+            .iter()
+            .zip(&grad)
+            .map(|(&a, &g)| (a / trials as f64 - g as f64).powi(2))
+            .sum::<f64>()
+            / crate::util::sq_norm(&grad);
+        // vNMSE of the *averaged* estimate shrinks ~1/trials if unbiased
+        let single = {
+            let (g, o, _) = roundtrip(DynamiqConfig::default(), d, 7);
+            vnmse(&g, &o)
+        };
+        assert!(
+            mean_err < single / 20.0,
+            "averaging should shrink error: avg {mean_err} vs single {single}"
+        );
+    }
+
+    #[test]
+    fn dar_equals_decompress_add_compress() {
+        // The fused kernel must produce byte-identical output to the
+        // unfused sequence (it uses the same randomness stream).
+        let d = 2048;
+        let ga = fake_grad(d, 11);
+        let gb = fake_grad(d, 12);
+        let n = 2;
+        let mut ca = Dynamiq::paper_default();
+        let mut cb = Dynamiq::paper_default();
+        let ctx_a = hop(0, n, 4);
+        let ctx_b = hop(1, n, 4);
+        let ma = ca.metadata(&ga, &ctx_a);
+        let mb = cb.metadata(&gb, &ctx_b);
+        let agg: Vec<f32> = ma.iter().zip(&mb).map(|(x, y)| x + y).collect();
+        let pa = ca.begin_round(&ga, &agg, &ctx_a);
+        let pb = cb.begin_round(&gb, &agg, &ctx_b);
+        let r = 0..pa.len();
+        let from_a = ca.compress(&pa, r.clone(), &ctx_a);
+
+        let fused = cb.decompress_accumulate_recompress(&from_a, &pb, r.clone(), &ctx_b);
+        // unfused path
+        let mut acc = cb.decompress(&from_a, r.clone(), &ctx_b);
+        for (a, &p) in acc.iter_mut().zip(&pb) {
+            *a += p;
+        }
+        let unfused = cb.compress(&acc, r.clone(), &ctx_b);
+        assert_eq!(fused, unfused, "fused and unfused must agree bit-exactly");
+    }
+
+    #[test]
+    fn two_worker_aggregation_beats_requantization_error_bound() {
+        // end-to-end 2-worker "path": B compresses, A accumulates +
+        // decompresses; result ≈ ga + gb.
+        let d = 4096;
+        let ga = fake_grad(d, 21);
+        let gb = fake_grad(d, 22);
+        let n = 2;
+        let mut ca = Dynamiq::paper_default();
+        let mut cb = Dynamiq::paper_default();
+        let (ctx_a, ctx_b) = (hop(0, n, 9), hop(1, n, 9));
+        let ma = ca.metadata(&ga, &ctx_a);
+        let mb = cb.metadata(&gb, &ctx_b);
+        let agg: Vec<f32> = ma.iter().zip(&mb).map(|(x, y)| x + y).collect();
+        let pa = ca.begin_round(&ga, &agg, &ctx_a);
+        let pb = cb.begin_round(&gb, &agg, &ctx_b);
+        let r = 0..pa.len();
+        // leaf = A; internal+sink = B
+        let wire = ca.compress(&pa, r.clone(), &ctx_a);
+        let mut sum = cb.decompress(&wire, r.clone(), &ctx_b);
+        for (s, &p) in sum.iter_mut().zip(&pb) {
+            *s += p;
+        }
+        let out = cb.end_round(sum, &ctx_b);
+        let truth: Vec<f32> = ga.iter().zip(&gb).map(|(x, y)| x + y).collect();
+        let err = vnmse(&truth, &out);
+        assert!(err < 0.02, "2-worker aggregation vNMSE {err}");
+    }
+
+    #[test]
+    fn ablation_configs_run_and_rank_sensibly() {
+        let d = 8192;
+        let mk = |hier: bool, vba: bool, uniform: bool| DynamiqConfig {
+            hierarchical: hier,
+            variable_bitwidth: vba,
+            uniform_values: uniform,
+            ..DynamiqConfig::default()
+        };
+        let e_full = vnmse_of(mk(true, true, false), d);
+        let e_novba = vnmse_of(mk(true, false, false), d);
+        let e_uniform = vnmse_of(mk(true, true, true), d);
+        // full config should beat the uniform-values and fixed-width
+        // ablations on skewed data (Tab 6's direction)
+        assert!(e_full < e_novba, "vba should help: {e_full} vs {e_novba}");
+        assert!(e_full < e_uniform * 1.5, "nonuniform should not be much worse");
+    }
+
+    fn vnmse_of(cfg: DynamiqConfig, d: usize) -> f64 {
+        let (g, o, _) = roundtrip(cfg, d, 33);
+        vnmse(&g, &o)
+    }
+
+    #[test]
+    fn allocation_is_identical_across_workers() {
+        let d = 8192;
+        let ga = fake_grad(d, 41);
+        let gb = fake_grad(d, 42);
+        let mut ca = Dynamiq::paper_default();
+        let mut cb = Dynamiq::paper_default();
+        let (ctx_a, ctx_b) = (hop(0, 2, 0), hop(1, 2, 0));
+        let ma = ca.metadata(&ga, &ctx_a);
+        let mb = cb.metadata(&gb, &ctx_b);
+        let agg: Vec<f32> = ma.iter().zip(&mb).map(|(x, y)| x + y).collect();
+        ca.begin_round(&ga, &agg, &ctx_a);
+        cb.begin_round(&gb, &agg, &ctx_b);
+        assert_eq!(ca.allocation_original_order(), cb.allocation_original_order());
+        assert_eq!(ca.state().perm, cb.state().perm);
+    }
+
+    #[test]
+    fn widths_are_contiguous_after_reorder() {
+        let d = 16384;
+        let g = fake_grad(d, 55);
+        let mut c = Dynamiq::paper_default();
+        let ctx = hop(0, 1, 0);
+        let meta = c.metadata(&g, &ctx);
+        c.begin_round(&g, &meta, &ctx);
+        let w = &c.state().widths;
+        // non-increasing sequence (8...8 4...4 2...2)
+        assert!(w.windows(2).all(|p| p[0] >= p[1]), "widths not contiguous: {w:?}");
+        // and uses more than one width on skewed data at b=5
+        assert!(w.iter().any(|&x| x != w[0]), "allocation degenerated to single width");
+    }
+
+    #[test]
+    fn correlated_beats_independent_on_aggregate_error() {
+        // Tab 6's last row: correlated rounding reduces vNMSE of the
+        // aggregated sum. Simulate n=4 workers all compressing the same
+        // chunk and averaging (parameter-server-style single hop is enough
+        // to expose the effect).
+        let d = 4096;
+        let n = 4u32;
+        let grads: Vec<Vec<f32>> = (0..n).map(|i| fake_grad(d, 60 + i as u64)).collect();
+        let truth: Vec<f32> = (0..d).map(|k| grads.iter().map(|g| g[k]).sum()).collect();
+        // shared metadata aggregate (same for both modes)
+        let agg: Vec<f32> = {
+            let metas: Vec<Vec<f32>> = grads
+                .iter()
+                .map(|g| Dynamiq::paper_default().metadata(g, &hop(0, n, 2)))
+                .collect();
+            (0..metas[0].len()).map(|k| metas.iter().map(|m| m[k]).sum()).collect()
+        };
+        // Variance reduction holds in expectation over the shared-π draw;
+        // average vNMSE across rounds (fresh π per round) like Tab 6 does
+        // over a training run.
+        let mut errs = Vec::new();
+        for mode in [Rounding::Independent, Rounding::Correlated] {
+            let rounds = 24;
+            let mut total_err = 0.0f64;
+            for round in 0..rounds {
+                let mut sum: Vec<f32> = Vec::new();
+                let mut last: Option<Dynamiq> = None;
+                for i in 0..n {
+                    let cfg = DynamiqConfig { rounding: mode, ..DynamiqConfig::default() };
+                    let mut c = Dynamiq::new(cfg);
+                    let ctx = hop(i, n, round);
+                    let pre = c.begin_round(&grads[i as usize], &agg, &ctx);
+                    let bytes = c.compress(&pre, 0..pre.len(), &ctx);
+                    let dec = c.decompress(&bytes, 0..pre.len(), &ctx);
+                    if sum.is_empty() {
+                        sum = vec![0.0; dec.len()];
+                    }
+                    for (s, &o) in sum.iter_mut().zip(&dec) {
+                        *s += o;
+                    }
+                    last = Some(c);
+                }
+                let out = last.unwrap().end_round(sum, &hop(0, n, round));
+                total_err += vnmse(&truth, &out);
+            }
+            errs.push(total_err / rounds as f64);
+        }
+        // correlated < independent on average (Tab 6 reports ~35%)
+        assert!(
+            errs[1] < errs[0],
+            "correlated {} should beat independent {}",
+            errs[1],
+            errs[0]
+        );
+    }
+
+    #[test]
+    fn overhead_accounting_matches_config() {
+        let cfg = DynamiqConfig::default();
+        // s=16, S=256, hierarchical: (16 + 8·16)/256 = 0.5625 bits
+        assert!((cfg.scale_overhead_bits() - 0.5625).abs() < 1e-12);
+        assert!((cfg.payload_budget_bits() - (5.0 - 0.5625)).abs() < 1e-12);
+        let plain = DynamiqConfig { hierarchical: false, ..DynamiqConfig::default() };
+        assert!((plain.scale_overhead_bits() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Gradient codecs: the interface the all-reduce engine drives, plus the
+//! DynamiQ implementation and every baseline evaluated in the paper.
+//!
+//! A round proceeds in the stages of Fig. 2:
+//!
+//! 1. [`GradCodec::metadata`] — each worker derives a small f32 vector from
+//!    its local gradient (DynamiQ: per-super-group µ and F; MXFP: per-chunk
+//!    maxima; OmniReduce: top-k chunk indicators). The engine all-reduces
+//!    it with [`GradCodec::metadata_op`] — this is the paper's
+//!    "lightweight initial all-reduce".
+//! 2. [`GradCodec::begin_round`] — install the aggregated metadata,
+//!    normalize / reorder the local gradient, agree on bit allocation.
+//!    Every worker computes the identical agreement deterministically.
+//! 3. Main all-reduce: the engine moves chunks along the reduce-scatter
+//!    arborescence calling [`GradCodec::compress`] at leaves,
+//!    [`GradCodec::decompress_accumulate`] /
+//!    [`GradCodec::decompress_accumulate_recompress`] at internal nodes
+//!    (the four fused kernels of §4), then broadcasts compressed sums in
+//!    the all-gather, decoded by [`GradCodec::decompress`].
+//! 4. [`GradCodec::end_round`] — undo reordering/normalization on the
+//!    aggregated *sum* (the engine hands the codec the summed vector and
+//!    the worker count).
+//!
+//! All sizes returned on the wire are exact byte counts — the network
+//! simulator charges them, which is how TTA numbers are produced.
+
+pub mod bf16;
+pub mod dynamiq;
+pub mod mxfp;
+pub mod omnireduce;
+pub mod thc;
+
+use std::ops::Range;
+
+/// Reduction used for the metadata all-reduce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetaOp {
+    Sum,
+    Max,
+}
+
+/// Per-hop context the engine passes to compression calls: which worker is
+/// executing (its rounding context identity) and how many gradients the
+/// incoming partial sum already aggregates (for formats that track range
+/// growth).
+#[derive(Clone, Copy, Debug)]
+pub struct HopCtx {
+    /// executing worker rank
+    pub worker: u32,
+    /// total workers
+    pub n_workers: u32,
+    /// training round (drives shared randomness)
+    pub round: u32,
+    /// number of worker gradients already summed into the payload being
+    /// (re)compressed, including the local one. Leaf compression: 1.
+    pub summed: u32,
+}
+
+/// A gradient codec. One instance per worker; it may carry cross-round
+/// state (e.g. MXFP's µ auto-scale, OmniReduce's adaptive k).
+pub trait GradCodec: Send {
+    /// Human-readable scheme name (matches the paper's legend).
+    fn name(&self) -> &'static str;
+
+    /// Metadata vector for the initial all-reduce. Empty when the scheme
+    /// needs none (BF16, THC without table sync would still need max: see
+    /// impl). The engine all-reduces with `metadata_op` and charges
+    /// `4 bytes × len × (wire factor)` to the network.
+    fn metadata(&mut self, grad: &[f32], ctx: &HopCtx) -> Vec<f32>;
+
+    fn metadata_op(&self) -> MetaOp;
+
+    /// Install aggregated metadata; return the preprocessed local vector
+    /// the engine will chunk. Length may exceed `grad.len()` (padding to
+    /// alignment); `end_round` restores the original length.
+    fn begin_round(&mut self, grad: &[f32], agg_meta: &[f32], ctx: &HopCtx) -> Vec<f32>;
+
+    /// Alignment (in entries) chunk boundaries must respect.
+    fn chunk_alignment(&self) -> usize;
+
+    /// Compress one chunk at a leaf (kernel 1 of §4). `data` is exactly the
+    /// chunk slice (`data.len() == range.len()`); `range` gives its
+    /// absolute position in the preprocessed vector, which codecs use to
+    /// index per-super-group widths / per-block scales / selections.
+    fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8>;
+
+    /// Decompress a received payload for `range` (kernel 2).
+    fn decompress(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx) -> Vec<f32>;
+
+    /// Fused decompress + accumulate into `acc` (kernel 4): acc += decode.
+    fn decompress_accumulate(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    );
+
+    /// Fused decompress + accumulate + recompress (kernel 3): returns the
+    /// compressed `decode(bytes) + local` ready for the next hop. `local`
+    /// is the worker's own chunk slice (`local.len() == range.len()`).
+    /// Default: decompress → add → compress (the unfused path; DynamiQ
+    /// overrides with a single-pass implementation — the Fig. 6 /
+    /// Table 2 comparison point). On input, `ctx.summed` counts the
+    /// gradients in `bytes`; the output payload carries one more.
+    fn decompress_accumulate_recompress(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) -> Vec<u8> {
+        let mut acc = self.decompress(bytes, range.clone(), ctx);
+        for (a, &p) in acc.iter_mut().zip(local) {
+            *a += p;
+        }
+        let out_ctx = HopCtx { summed: ctx.summed + 1, ..*ctx };
+        self.compress(&acc, range, &out_ctx)
+    }
+
+    /// Undo preprocessing on the aggregated sum (in place on the padded
+    /// vector); returns the de-padded, re-ordered, un-normalized sum.
+    fn end_round(&mut self, agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32>;
+
+    /// Observability: overflow events in the last round (MXFP / THC).
+    fn overflow_count(&self) -> u64 {
+        0
+    }
+}
+
+/// All scheme names evaluated in the paper, in its legend order.
+pub const SCHEMES: &[&str] =
+    &["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
+
+/// Construct a codec by scheme name with its paper-evaluated configuration
+/// (`DynamiQ:b=4`-style suffixes override DynamiQ's bit budget).
+pub fn make_codec(name: &str) -> Box<dyn GradCodec> {
+    if let Some(b) = name.strip_prefix("DynamiQ:b=") {
+        let budget: f64 = b.parse().expect("bad bit budget");
+        let cfg = dynamiq::DynamiqConfig { budget_bits: budget, ..Default::default() };
+        return Box::new(dynamiq::Dynamiq::new(cfg));
+    }
+    match name {
+        "BF16" => Box::new(bf16::Bf16Codec::new()),
+        "DynamiQ" => Box::new(dynamiq::Dynamiq::paper_default()),
+        "MXFP8" => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp8)),
+        "MXFP6" => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp6)),
+        "MXFP4" => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp4)),
+        "THC" => Box::new(thc::ThcCodec::new(0xD14A_311)),
+        "OmniReduce" => Box::new(omnireduce::OmniReduce::paper_default()),
+        other => panic!("unknown scheme {other}"),
+    }
+}
+
+/// Per-worker codec set.
+pub fn make_codecs(name: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+    (0..n).map(|_| make_codec(name)).collect()
+}
+
+/// Align `len` upward to `align`.
+pub fn align_up(len: usize, align: usize) -> usize {
+    len.div_ceil(align) * align
+}
+
+/// Split `[0, len)` into `n` ranges aligned to `align` (the per-chunk
+/// reduce-scatter unit). The last range absorbs the remainder. All ranges
+/// are non-overlapping, cover `[0, len)`, and all but the last are
+/// multiples of `align`. `len` itself must be a multiple of `align`
+/// (codecs pad in `begin_round`).
+pub fn chunk_ranges(len: usize, n: usize, align: usize) -> Vec<Range<usize>> {
+    assert!(len % align == 0, "padded length must be aligned");
+    let units = len / align;
+    let base = units / n;
+    let extra = units % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for i in 0..n {
+        let u = base + usize::from(i < extra);
+        let end = start + u * align;
+        out.push(start..end);
+        start = end;
+    }
+    debug_assert_eq!(start, len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunking_covers_and_aligns() {
+        for (len, n, align) in [(1024, 4, 256), (2560, 3, 256), (64, 8, 32), (256, 8, 256)] {
+            let rs = chunk_ranges(len, n, align);
+            assert_eq!(rs.len(), n);
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs.last().unwrap().end, len);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            for r in &rs {
+                assert_eq!(r.start % align, 0, "start unaligned");
+            }
+        }
+    }
+
+    #[test]
+    fn chunking_handles_more_workers_than_units() {
+        let rs = chunk_ranges(256, 8, 256);
+        // one unit: first chunk gets it, rest are empty
+        assert_eq!(rs[0], 0..256);
+        for r in &rs[1..] {
+            assert!(r.is_empty());
+        }
+    }
+
+    #[test]
+    fn align_up_works() {
+        assert_eq!(align_up(0, 256), 0);
+        assert_eq!(align_up(1, 256), 256);
+        assert_eq!(align_up(256, 256), 256);
+        assert_eq!(align_up(257, 256), 512);
+    }
+}

@@ -1,0 +1,390 @@
+//! MXFP4 / MXFP6 / MXFP8 baselines (paper §5 + appendix C).
+//!
+//! OCP microscaling formats: elements in E2M1 / E3M2 / E4M3 with a shared
+//! per-block (32 entries) scale kept in BF16, as the paper configures.
+//! Since the MX spec defines no summation arithmetic, the paper follows
+//! FP8-LM: a global parameter µ (initialized to n) sets per-block scales
+//! `s_j = µ · gm_j` where `gm_j = max_i m_{i,j}` is the all-reduced block
+//! maximum; gradients quantize as `g' = (g / s_j) · FPX_MAX`. µ doubles
+//! when the overflow ratio exceeds ε and decays by γ (close to 1) when
+//! overflow stays below it. Per-hop summation decodes, accumulates in f32
+//! and re-encodes with the *same* round scale (overflow saturates and is
+//! counted).
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::quant::minifloat::{bf16_bits, bf16_from_bits, bf16_round, Minifloat};
+
+pub const MX_BLOCK: usize = 32;
+/// FP8-LM auto-scaling thresholds.
+const OVF_EPS: f64 = 1e-4;
+const MU_DECAY: f32 = 0.98;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MxFormat {
+    Mxfp8,
+    Mxfp6,
+    Mxfp4,
+}
+
+impl MxFormat {
+    fn element(&self) -> Minifloat {
+        match self {
+            MxFormat::Mxfp8 => Minifloat::e4m3(),
+            MxFormat::Mxfp6 => Minifloat::e3m2(),
+            MxFormat::Mxfp4 => Minifloat::e2m1(),
+        }
+    }
+
+    pub fn element_bits(&self) -> u32 {
+        match self {
+            MxFormat::Mxfp8 => 8,
+            MxFormat::Mxfp6 => 6,
+            MxFormat::Mxfp4 => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MxFormat::Mxfp8 => "MXFP8",
+            MxFormat::Mxfp6 => "MXFP6",
+            MxFormat::Mxfp4 => "MXFP4",
+        }
+    }
+}
+
+pub struct MxfpCodec {
+    pub format: MxFormat,
+    element: Minifloat,
+    /// FP8-LM µ (agreed across workers via the overflow metadata slot)
+    mu: f32,
+    d: usize,
+    /// per-block scales s_j for the current round
+    scales: Vec<f32>,
+    /// overflows observed while encoding in the current round
+    ovf: AtomicU64,
+    /// overflows carried in the previous round's metadata (already agreed)
+    last_round_entries: u64,
+    initialized_mu: bool,
+}
+
+impl MxfpCodec {
+    pub fn new(format: MxFormat) -> Self {
+        MxfpCodec {
+            element: format.element(),
+            format,
+            mu: 1.0,
+            d: 0,
+            scales: Vec::new(),
+            ovf: AtomicU64::new(0),
+            last_round_entries: 1,
+            initialized_mu: false,
+        }
+    }
+
+    /// Wire bits per entry: element bits + BF16 block scale share.
+    pub fn wire_bits_per_entry(&self) -> f64 {
+        self.format.element_bits() as f64 + 16.0 / MX_BLOCK as f64
+    }
+
+    /// Encode one value against scale `s` (RNE per FP8-LM), counting
+    /// overflow into the round counter.
+    #[inline]
+    fn encode(&self, v: f32, s: f32) -> u16 {
+        if s <= 0.0 {
+            return 0;
+        }
+        let scaled = v / s * self.element.max_value();
+        let (code, ovf) = self.element.encode_rne(scaled);
+        if ovf {
+            self.ovf.fetch_add(1, Ordering::Relaxed);
+        }
+        code
+    }
+
+    #[inline]
+    fn decode(&self, code: u16, s: f32) -> f32 {
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.element.decode(code) * s / self.element.max_value()
+        }
+    }
+
+    /// Pack codes of element_bits each (4/6/8) — 6-bit codes pack 4-in-3
+    /// bytes as the OCP spec's packed layout.
+    fn pack_codes(&self, codes: &[u16]) -> Vec<u8> {
+        match self.format {
+            MxFormat::Mxfp8 => codes.iter().map(|&c| c as u8).collect(),
+            MxFormat::Mxfp4 => crate::quant::packing::pack(codes, 4),
+            MxFormat::Mxfp6 => {
+                let mut out = Vec::with_capacity(codes.len() * 6 / 8 + 3);
+                for quad in codes.chunks(4) {
+                    let mut word: u32 = 0;
+                    for (k, &c) in quad.iter().enumerate() {
+                        word |= (c as u32 & 0x3f) << (6 * k);
+                    }
+                    out.extend_from_slice(&word.to_le_bytes()[..3]);
+                }
+                out
+            }
+        }
+    }
+
+    fn unpack_codes(&self, bytes: &[u8], count: usize) -> Vec<u16> {
+        match self.format {
+            MxFormat::Mxfp8 => bytes[..count].iter().map(|&b| b as u16).collect(),
+            MxFormat::Mxfp4 => crate::quant::packing::unpack(bytes, 4, count),
+            MxFormat::Mxfp6 => {
+                let mut out = Vec::with_capacity(count);
+                for (q, tri) in bytes.chunks(3).enumerate() {
+                    let word = u32::from_le_bytes([
+                        tri[0],
+                        *tri.get(1).unwrap_or(&0),
+                        *tri.get(2).unwrap_or(&0),
+                        0,
+                    ]);
+                    for k in 0..4 {
+                        if q * 4 + k < count {
+                            out.push(((word >> (6 * k)) & 0x3f) as u16);
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    fn payload_bytes(&self, entries: usize) -> usize {
+        match self.format {
+            MxFormat::Mxfp8 => entries,
+            MxFormat::Mxfp4 => entries.div_ceil(2),
+            MxFormat::Mxfp6 => entries.div_ceil(4) * 3,
+        }
+    }
+
+    fn blocks(&self, range: &Range<usize>) -> Range<usize> {
+        debug_assert_eq!(range.start % MX_BLOCK, 0);
+        (range.start / MX_BLOCK)..(range.end / MX_BLOCK)
+    }
+
+    /// Wire bytes for one block: BF16 scale + packed codes.
+    fn block_wire(&self) -> usize {
+        2 + self.payload_bytes(MX_BLOCK)
+    }
+}
+
+impl GradCodec for MxfpCodec {
+    fn name(&self) -> &'static str {
+        self.format.name()
+    }
+
+    fn metadata(&mut self, grad: &[f32], _ctx: &HopCtx) -> Vec<f32> {
+        // [per-block max |g| ..., overflow count of previous round]
+        // Max-reduced: gm_j = max_i m_{i,j}; the overflow slot max-reduces
+        // to the worst worker's count, which drives the shared µ update.
+        let padded = align_up(grad.len(), MX_BLOCK);
+        let nb = padded / MX_BLOCK;
+        let mut v = vec![0.0f32; nb + 1];
+        for (j, slot) in v[..nb].iter_mut().enumerate() {
+            let a = j * MX_BLOCK;
+            let b = (a + MX_BLOCK).min(grad.len());
+            *slot = grad[a..b].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        }
+        v[nb] = self.ovf.swap(0, Ordering::Relaxed) as f32;
+        v
+    }
+
+    fn metadata_op(&self) -> MetaOp {
+        MetaOp::Max
+    }
+
+    fn begin_round(&mut self, grad: &[f32], agg_meta: &[f32], ctx: &HopCtx) -> Vec<f32> {
+        self.d = grad.len();
+        let padded = align_up(grad.len(), MX_BLOCK);
+        let nb = padded / MX_BLOCK;
+        assert_eq!(agg_meta.len(), nb + 1);
+        if !self.initialized_mu {
+            // FP8-LM initializes µ = n (headroom for an n-term sum)
+            self.mu = ctx.n_workers as f32;
+            self.initialized_mu = true;
+        } else {
+            // agreed µ update from the max-reduced overflow ratio
+            let ovf = agg_meta[nb] as f64;
+            let ratio = ovf / self.last_round_entries.max(1) as f64;
+            if ratio > OVF_EPS {
+                self.mu *= 2.0;
+            } else {
+                self.mu = (self.mu * MU_DECAY).max(1.0);
+            }
+        }
+        self.last_round_entries = padded as u64;
+        self.scales = agg_meta[..nb].iter().map(|&gm| bf16_round(self.mu * gm)).collect();
+        let mut pre = grad.to_vec();
+        pre.resize(padded, 0.0);
+        pre
+    }
+
+    fn chunk_alignment(&self) -> usize {
+        MX_BLOCK
+    }
+
+    fn compress(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx) -> Vec<u8> {
+        debug_assert_eq!(data.len(), range.len());
+        let mut out = Vec::with_capacity(self.blocks(&range).len() * self.block_wire());
+        let mut codes = [0u16; MX_BLOCK];
+        for j in self.blocks(&range) {
+            let s = self.scales[j];
+            out.extend_from_slice(&bf16_bits(s).to_le_bytes());
+            let base = j * MX_BLOCK - range.start;
+            let x = &data[base..base + MX_BLOCK];
+            for (k, &v) in x.iter().enumerate() {
+                codes[k] = self.encode(v, s);
+            }
+            out.extend_from_slice(&self.pack_codes(&codes));
+        }
+        out
+    }
+
+    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
+        let mut out = vec![0.0f32; range.len()];
+        let mut off = 0usize;
+        for j in self.blocks(&range) {
+            let s = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+            off += 2;
+            let pb = self.payload_bytes(MX_BLOCK);
+            let codes = self.unpack_codes(&bytes[off..off + pb], MX_BLOCK);
+            off += pb;
+            let base = j * MX_BLOCK - range.start;
+            for (k, &c) in codes.iter().enumerate() {
+                out[base + k] = self.decode(c, s);
+            }
+        }
+        out
+    }
+
+    fn decompress_accumulate(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) {
+        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
+            *a += v;
+        }
+    }
+
+    fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {
+        agg.truncate(self.d);
+        agg
+    }
+
+    fn overflow_count(&self) -> u64 {
+        self.ovf.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rng::Pcg, vnmse};
+
+    fn ctx(n: u32) -> HopCtx {
+        HopCtx { worker: 0, n_workers: n, round: 0, summed: 1 }
+    }
+
+    fn grad(d: usize, seed: u64, scale: f32) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        let mut g = vec![0.0; d];
+        rng.fill_normal(&mut g, scale);
+        g
+    }
+
+    fn roundtrip(fmt: MxFormat, d: usize) -> f64 {
+        let g = grad(d, 5, 0.02);
+        let mut c = MxfpCodec::new(fmt);
+        let meta = c.metadata(&g, &ctx(1));
+        let pre = c.begin_round(&g, &meta, &ctx(1));
+        let bytes = c.compress(&pre, 0..pre.len(), &ctx(1));
+        let dec = c.decompress(&bytes, 0..pre.len(), &ctx(1));
+        let out = c.end_round(dec, &ctx(1));
+        vnmse(&g, &out)
+    }
+
+    #[test]
+    fn error_ordering_fp8_fp6_fp4() {
+        let (e8, e6, e4) =
+            (roundtrip(MxFormat::Mxfp8, 4096), roundtrip(MxFormat::Mxfp6, 4096), roundtrip(MxFormat::Mxfp4, 4096));
+        assert!(e8 < e6 && e6 < e4, "expected e8<e6<e4: {e8} {e6} {e4}");
+        assert!(e8 < 0.01, "MXFP8 error too high: {e8}");
+        // Table 3 ballpark: MXFP4 ≈ 0.1, well above MXFP8
+        assert!(e4 > 10.0 * e8);
+    }
+
+    #[test]
+    fn packing_roundtrip_all_formats() {
+        let mut rng = Pcg::new(8);
+        for fmt in [MxFormat::Mxfp8, MxFormat::Mxfp6, MxFormat::Mxfp4] {
+            let c = MxfpCodec::new(fmt);
+            let bits = fmt.element_bits();
+            let codes: Vec<u16> =
+                (0..64).map(|_| (rng.next_u32() & ((1 << bits) - 1)) as u16).collect();
+            let packed = c.pack_codes(&codes);
+            assert_eq!(packed.len(), c.payload_bytes(codes.len()));
+            assert_eq!(c.unpack_codes(&packed, codes.len()), codes);
+        }
+    }
+
+    #[test]
+    fn mu_doubles_on_overflow_and_decays_without() {
+        let mut c = MxfpCodec::new(MxFormat::Mxfp4);
+        let g = grad(256, 9, 1.0);
+        // round 0: initialize µ = n
+        let m0 = c.metadata(&g, &ctx(4));
+        c.begin_round(&g, &m0, &ctx(4));
+        assert_eq!(c.mu, 4.0);
+        // force overflows: encode values beyond scale
+        for _ in 0..64 {
+            c.encode(1e6, 1.0);
+        }
+        let mut m1 = c.metadata(&g, &ctx(4));
+        assert!(m1[m1.len() - 1] > 0.0);
+        c.begin_round(&g, &m1, &ctx(4));
+        assert_eq!(c.mu, 8.0, "µ should double after overflow");
+        // no overflow → slow decay
+        m1 = c.metadata(&g, &ctx(4));
+        c.begin_round(&g, &m1, &ctx(4));
+        assert!((c.mu - 8.0 * MU_DECAY).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hop_summation_preserves_sum_approximately() {
+        let d = 2048;
+        let ga = grad(d, 1, 0.01);
+        let gb = grad(d, 2, 0.01);
+        let mut ca = MxfpCodec::new(MxFormat::Mxfp8);
+        let mut cb = MxfpCodec::new(MxFormat::Mxfp8);
+        let ma = ca.metadata(&ga, &ctx(2));
+        let mb = cb.metadata(&gb, &ctx(2));
+        let agg: Vec<f32> = ma.iter().zip(&mb).map(|(a, b)| a.max(*b)).collect();
+        let pa = ca.begin_round(&ga, &agg, &ctx(2));
+        let pb = cb.begin_round(&gb, &agg, &ctx(2));
+        let wire = ca.compress(&pa, 0..pa.len(), &ctx(2));
+        let fused = cb.decompress_accumulate_recompress(&wire, &pb, 0..pb.len(), &ctx(2));
+        let sum = cb.decompress(&fused, 0..pb.len(), &ctx(2));
+        let out = cb.end_round(sum, &ctx(2));
+        let truth: Vec<f32> = ga.iter().zip(&gb).map(|(a, b)| a + b).collect();
+        let err = vnmse(&truth, &out);
+        assert!(err < 0.01, "2-hop MXFP8 sum vNMSE {err}");
+    }
+
+    #[test]
+    fn wire_bits_accounting() {
+        assert!((MxfpCodec::new(MxFormat::Mxfp8).wire_bits_per_entry() - 8.5).abs() < 1e-12);
+        assert!((MxfpCodec::new(MxFormat::Mxfp6).wire_bits_per_entry() - 6.5).abs() < 1e-12);
+        assert!((MxfpCodec::new(MxFormat::Mxfp4).wire_bits_per_entry() - 4.5).abs() < 1e-12);
+    }
+}

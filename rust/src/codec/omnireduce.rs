@@ -1,0 +1,300 @@
+//! OmniReduce baseline (Fei et al., SIGCOMM'21), adapted to multi-hop
+//! all-reduce per the paper's appendix C.
+//!
+//! Chunked Top-k: the gradient splits into fixed blocks; each worker ranks
+//! blocks by ℓ2 norm and nominates its local top-k_t. Because nominations
+//! differ across workers, the *union* of nominated blocks is what must be
+//! transmitted; the target is |union| = K with K/n_blocks = b/16 (so at
+//! b = 8, half the blocks travel in BF16 and the bottom half is dropped —
+//! matching §6.1's observation). k_t adapts across rounds with the
+//! momentum rule k_{t+1} = γ·k_t + (1−γ)·(K/K'_t)·k_t, γ = 0.8.
+//!
+//! Selected blocks are transmitted in BF16 (per-hop f32 accumulate +
+//! re-round, as the BF16 baseline does); unselected blocks contribute
+//! zero — OmniReduce's error is sparsification, not quantization.
+
+use std::ops::Range;
+
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::quant::minifloat::{bf16_bits, bf16_from_bits};
+
+pub const OR_BLOCK: usize = 256;
+const MOMENTUM: f32 = 0.8;
+
+pub struct OmniReduce {
+    /// average bits/entry target (paper uses b = 8 → keep 50% of blocks)
+    pub budget_bits: f64,
+    d: usize,
+    /// adaptive local top-k (fractional state, rounded when used)
+    k_t: f32,
+    /// current round's selected block ids (agreed: from union metadata)
+    selected: Vec<bool>,
+    /// |union| of the last round (for diagnostics)
+    pub last_union: usize,
+    initialized: bool,
+}
+
+impl OmniReduce {
+    pub fn new(budget_bits: f64) -> Self {
+        OmniReduce {
+            budget_bits,
+            d: 0,
+            k_t: 0.0,
+            selected: Vec::new(),
+            last_union: 0,
+            initialized: false,
+        }
+    }
+
+    pub fn paper_default() -> Self {
+        OmniReduce::new(8.0)
+    }
+
+    fn target_k(&self, n_blocks: usize) -> f32 {
+        (n_blocks as f64 * self.budget_bits / 16.0) as f32
+    }
+
+    /// Local top-k block indicator from block norms.
+    fn local_topk(&self, grad: &[f32], k: usize) -> Vec<f32> {
+        let padded = align_up(grad.len().max(1), OR_BLOCK);
+        let nb = padded / OR_BLOCK;
+        let mut norms: Vec<(f32, usize)> = (0..nb)
+            .map(|b| {
+                let a = b * OR_BLOCK;
+                let e = (a + OR_BLOCK).min(grad.len());
+                let n: f32 = grad[a.min(grad.len())..e].iter().map(|&v| v * v).sum();
+                (n, b)
+            })
+            .collect();
+        norms.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut ind = vec![0.0f32; nb];
+        for &(_, b) in norms.iter().take(k.min(nb)) {
+            ind[b] = 1.0;
+        }
+        ind
+    }
+
+    fn blocks(&self, range: &Range<usize>) -> Range<usize> {
+        debug_assert_eq!(range.start % OR_BLOCK, 0);
+        (range.start / OR_BLOCK)..(range.end / OR_BLOCK)
+    }
+}
+
+impl GradCodec for OmniReduce {
+    fn name(&self) -> &'static str {
+        "OmniReduce"
+    }
+
+    fn metadata(&mut self, grad: &[f32], _ctx: &HopCtx) -> Vec<f32> {
+        let padded = align_up(grad.len().max(1), OR_BLOCK);
+        let nb = padded / OR_BLOCK;
+        if !self.initialized {
+            self.k_t = self.target_k(nb);
+            self.initialized = true;
+        }
+        self.local_topk(grad, self.k_t.round().max(1.0) as usize)
+    }
+
+    fn metadata_op(&self) -> MetaOp {
+        MetaOp::Sum
+    }
+
+    fn begin_round(&mut self, grad: &[f32], agg_meta: &[f32], _ctx: &HopCtx) -> Vec<f32> {
+        self.d = grad.len();
+        let padded = align_up(grad.len().max(1), OR_BLOCK);
+        let nb = padded / OR_BLOCK;
+        assert_eq!(agg_meta.len(), nb);
+        // union = blocks nominated by ≥1 worker
+        self.selected = agg_meta.iter().map(|&c| c > 0.5).collect();
+        let union: usize = self.selected.iter().filter(|&&s| s).count();
+        self.last_union = union;
+        // momentum adaptation toward |union| == K (appendix C, eq. 1)
+        let k_target = self.target_k(nb);
+        let ratio = if union > 0 { k_target / union as f32 } else { 2.0 };
+        self.k_t = (MOMENTUM * self.k_t + (1.0 - MOMENTUM) * ratio * self.k_t)
+            .clamp(1.0, nb as f32);
+        let mut pre = grad.to_vec();
+        pre.resize(padded, 0.0);
+        pre
+    }
+
+    fn chunk_alignment(&self) -> usize {
+        OR_BLOCK
+    }
+
+    fn compress(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx) -> Vec<u8> {
+        debug_assert_eq!(data.len(), range.len());
+        // only selected blocks travel; BF16 payload per block
+        let mut out = Vec::new();
+        for b in self.blocks(&range) {
+            if !self.selected[b] {
+                continue;
+            }
+            let base = b * OR_BLOCK - range.start;
+            for &v in &data[base..base + OR_BLOCK] {
+                out.extend_from_slice(&bf16_bits(v).to_le_bytes());
+            }
+        }
+        out
+    }
+
+    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
+        let mut out = vec![0.0f32; range.len()];
+        let mut off = 0usize;
+        for b in self.blocks(&range) {
+            if !self.selected[b] {
+                continue;
+            }
+            let base = b * OR_BLOCK - range.start;
+            for k in 0..OR_BLOCK {
+                out[base + k] = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+                off += 2;
+            }
+        }
+        debug_assert_eq!(off, bytes.len());
+        out
+    }
+
+    fn decompress_accumulate(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) {
+        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
+            *a += v;
+        }
+    }
+
+    fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {
+        // zero out non-selected blocks (their partial sums were never
+        // transmitted; the local contribution in `pre` must not leak in)
+        let len = agg.len();
+        for (b, &sel) in self.selected.iter().enumerate() {
+            if !sel {
+                let a = b * OR_BLOCK;
+                for v in agg[a..(a + OR_BLOCK).min(len)].iter_mut() {
+                    *v = 0.0;
+                }
+            }
+        }
+        agg.truncate(self.d);
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rng::Pcg, vnmse};
+
+    fn ctx() -> HopCtx {
+        HopCtx { worker: 0, n_workers: 2, round: 0, summed: 1 }
+    }
+
+    /// Sparse-ish gradient: most blocks tiny, some hot.
+    fn sparse_grad(d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        let mut g = vec![0.0f32; d];
+        for (i, v) in g.iter_mut().enumerate() {
+            let hot = (i / OR_BLOCK) % 4 == 0; // 25% hot blocks
+            *v = rng.next_normal() * if hot { 0.1 } else { 1e-4 };
+        }
+        g
+    }
+
+    #[test]
+    fn keeps_hot_blocks_drops_cold() {
+        let g = sparse_grad(8192, 1);
+        let mut c = OmniReduce::paper_default();
+        let meta = c.metadata(&g, &ctx());
+        let pre = c.begin_round(&g, &meta, &ctx());
+        let bytes = c.compress(&pre, 0..pre.len(), &ctx());
+        let dec = c.decompress(&bytes, 0..pre.len(), &ctx());
+        let out = c.end_round(dec, &ctx());
+        let err = vnmse(&g, &out);
+        // hot blocks carry almost all the energy → small error on sparse data
+        assert!(err < 0.01, "OR error on sparse data {err}");
+        // wire volume ≈ selected fraction × 2 bytes
+        let frac = bytes.len() as f64 / (pre.len() as f64 * 2.0);
+        assert!(frac <= 0.6, "selected fraction {frac}");
+    }
+
+    #[test]
+    fn dense_gradients_lose_half_the_energy() {
+        // The paper's point (§5.1): dense LLM gradients defeat
+        // sparsification — dropping the bottom 50% leaves real error.
+        let mut rng = Pcg::new(2);
+        let mut g = vec![0.0f32; 8192];
+        rng.fill_normal(&mut g, 0.01); // uniform energy
+        let mut c = OmniReduce::paper_default();
+        let meta = c.metadata(&g, &ctx());
+        let pre = c.begin_round(&g, &meta, &ctx());
+        let bytes = c.compress(&pre, 0..pre.len(), &ctx());
+        let dec = c.decompress(&bytes, 0..pre.len(), &ctx());
+        let out = c.end_round(dec, &ctx());
+        let err = vnmse(&g, &out);
+        assert!(err > 0.2, "dense data should hurt OR: {err}");
+    }
+
+    #[test]
+    fn union_and_k_adaptation_converge() {
+        // two workers with partially disjoint hot sets: the union exceeds
+        // k, the momentum rule shrinks k_t until |union| ≈ K.
+        let d = 65536;
+        let nb = d / OR_BLOCK;
+        let mk_grad = |phase: usize, seed: u64| {
+            let mut rng = Pcg::new(seed);
+            let mut g = vec![0.0f32; d];
+            for (i, v) in g.iter_mut().enumerate() {
+                let hot = (i / OR_BLOCK) % 3 == phase % 3;
+                *v = rng.next_normal() * if hot { 0.1 } else { 1e-4 };
+            }
+            g
+        };
+        let mut ca = OmniReduce::paper_default();
+        let mut cb = OmniReduce::paper_default();
+        let mut unions = Vec::new();
+        for round in 0..12 {
+            let (ga, gb) = (mk_grad(0, 10 + round), mk_grad(1, 20 + round));
+            let cx = HopCtx { worker: 0, n_workers: 2, round: round as u32, summed: 1 };
+            let ma = ca.metadata(&ga, &cx);
+            let mb = cb.metadata(&gb, &cx);
+            let agg: Vec<f32> = ma.iter().zip(&mb).map(|(a, b)| a + b).collect();
+            ca.begin_round(&ga, &agg, &cx);
+            cb.begin_round(&gb, &agg, &cx);
+            assert_eq!(ca.selected, cb.selected, "workers must agree on selection");
+            unions.push(ca.last_union);
+        }
+        let k_target = (nb as f64 * 0.5) as usize;
+        let last = *unions.last().unwrap();
+        // converged within 15% of target
+        assert!(
+            (last as f64 - k_target as f64).abs() / k_target as f64 <= 0.15,
+            "union {last} vs target {k_target} (history {unions:?})"
+        );
+    }
+
+    #[test]
+    fn two_worker_sum_on_selected_blocks() {
+        let d = 4096;
+        let ga = sparse_grad(d, 5);
+        let gb = sparse_grad(d, 6);
+        let mut ca = OmniReduce::paper_default();
+        let mut cb = OmniReduce::paper_default();
+        let cx = ctx();
+        let ma = ca.metadata(&ga, &cx);
+        let mb = cb.metadata(&gb, &cx);
+        let agg: Vec<f32> = ma.iter().zip(&mb).map(|(a, b)| a + b).collect();
+        let pa = ca.begin_round(&ga, &agg, &cx);
+        let pb = cb.begin_round(&gb, &agg, &cx);
+        let wire = ca.compress(&pa, 0..pa.len(), &cx);
+        let fused = cb.decompress_accumulate_recompress(&wire, &pb, 0..pb.len(), &cx);
+        let sum = cb.decompress(&fused, 0..pb.len(), &cx);
+        let out = cb.end_round(sum, &cx);
+        let truth: Vec<f32> = ga.iter().zip(&gb).map(|(a, b)| a + b).collect();
+        let err = vnmse(&truth, &out);
+        assert!(err < 0.02, "2-worker OR vNMSE on sparse data {err}");
+    }
+}

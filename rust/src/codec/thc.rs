@@ -1,0 +1,403 @@
+//! THC baseline (Li et al., NSDI'24), adapted to multi-hop all-reduce the
+//! way the paper does (§5): local gradients quantize to q=4-bit codes after
+//! a randomized Hadamard transform; aggregation carries *code sums* in
+//! b=8 bits per coordinate (12 bits when n > 8, per §6.1) — homomorphic
+//! integer addition, so hops never re-quantize but the width must absorb
+//! the worst-case sum, which is THC's fundamental multi-hop cost.
+//!
+//! The rotation uses a shared ±1 diagonal (seed-derived), and the uniform
+//! lattice scale per Hadamard block is the all-reduced max — THC's shared
+//! "table", carried by the metadata stage here.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::util::rng::{pcg_hash, uniform_u01};
+
+/// Hadamard block size (power of two).
+pub const HADAMARD_BLOCK: usize = 1024;
+/// Local quantization levels: q = 4 bits → codes 0..15.
+const Q_LEVELS: u16 = 15;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized: H·H = B·I).
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+pub struct ThcCodec {
+    pub seed: u32,
+    d: usize,
+    round: u32,
+    /// per-block shared lattice scale (all-reduced max of rotated values)
+    scales: Vec<f32>,
+    /// aggregation container width in bits (8 or 12 or 16)
+    agg_bits: u32,
+    ovf: AtomicU64,
+}
+
+impl ThcCodec {
+    pub fn new(seed: u32) -> Self {
+        ThcCodec { seed, d: 0, round: 0, scales: Vec::new(), agg_bits: 8, ovf: AtomicU64::new(0) }
+    }
+
+    /// Aggregation width rule from §6.1: 8 bits up to 8 workers, 12 beyond
+    /// (sufficient for 15n+1 ≤ 4096, i.e. n ≤ 273; accuracy degrades long
+    /// before that).
+    pub fn agg_bits_for(n: u32) -> u32 {
+        if n <= 8 {
+            8
+        } else {
+            12
+        }
+    }
+
+    #[inline]
+    fn sign(&self, round: u32, idx: u32) -> f32 {
+        if pcg_hash(self.seed ^ round.wrapping_mul(0x27d4_eb2f), idx) & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Rotate the padded gradient: per block, y = H(D·x).
+    fn rotate(&self, x: &mut [f32], round: u32) {
+        for (b, blk) in x.chunks_exact_mut(HADAMARD_BLOCK).enumerate() {
+            let base = (b * HADAMARD_BLOCK) as u32;
+            for (k, v) in blk.iter_mut().enumerate() {
+                *v *= self.sign(round, base + k as u32);
+            }
+            fwht(blk);
+        }
+    }
+
+    /// Inverse: x = D·H(y) / B.
+    fn unrotate(&self, x: &mut [f32], round: u32) {
+        let inv = 1.0 / HADAMARD_BLOCK as f32;
+        for (b, blk) in x.chunks_exact_mut(HADAMARD_BLOCK).enumerate() {
+            fwht(blk);
+            let base = (b * HADAMARD_BLOCK) as u32;
+            for (k, v) in blk.iter_mut().enumerate() {
+                *v *= self.sign(round, base + k as u32) * inv;
+            }
+        }
+    }
+
+    /// Quantize a rotated value `v` (with `k` gradients already summed,
+    /// k=1 for a fresh local) onto the lattice {0..15k} with offset k·s.
+    #[inline]
+    fn to_lattice(&self, v: f32, s: f32, k: u32, u: f32) -> u32 {
+        if s <= 0.0 {
+            return 0;
+        }
+        let y = (v + k as f32 * s) / (2.0 * s) * Q_LEVELS as f32;
+        let max_code = (1u32 << self.agg_bits) - 1;
+        let lo = y.floor();
+        let frac = y - lo;
+        let code = if u < frac { lo + 1.0 } else { lo };
+        let code = code.max(0.0) as u32;
+        if code > max_code || y > Q_LEVELS as f32 * k as f32 + 1.0 {
+            self.ovf.fetch_add(1, Ordering::Relaxed);
+        }
+        code.min(max_code)
+    }
+
+    #[inline]
+    fn from_lattice(&self, code: u32, s: f32, k: u32) -> f32 {
+        code as f32 * (2.0 * s / Q_LEVELS as f32) - k as f32 * s
+    }
+
+    fn pack(&self, codes: &[u32]) -> Vec<u8> {
+        match self.agg_bits {
+            8 => codes.iter().map(|&c| c as u8).collect(),
+            12 => {
+                // 2 codes per 3 bytes, little-endian nibble layout
+                let mut out = Vec::with_capacity(codes.len().div_ceil(2) * 3);
+                for pair in codes.chunks(2) {
+                    let a = pair[0] & 0xfff;
+                    let b = pair.get(1).copied().unwrap_or(0) & 0xfff;
+                    out.push((a & 0xff) as u8);
+                    out.push(((a >> 8) | ((b & 0xf) << 4)) as u8);
+                    out.push((b >> 4) as u8);
+                }
+                out
+            }
+            16 => codes.iter().flat_map(|&c| (c as u16).to_le_bytes()).collect(),
+            _ => unreachable!(),
+        }
+    }
+
+    fn unpack(&self, bytes: &[u8], count: usize) -> Vec<u32> {
+        match self.agg_bits {
+            8 => bytes[..count].iter().map(|&b| b as u32).collect(),
+            12 => {
+                let mut out = Vec::with_capacity(count);
+                for (p, tri) in bytes.chunks(3).enumerate() {
+                    let t1 = *tri.get(1).unwrap_or(&0) as u32;
+                    let t2 = *tri.get(2).unwrap_or(&0) as u32;
+                    if p * 2 < count {
+                        out.push(tri[0] as u32 | ((t1 & 0xf) << 8));
+                    }
+                    if p * 2 + 1 < count {
+                        out.push((t1 >> 4) | (t2 << 4));
+                    }
+                }
+                out
+            }
+            16 => bytes
+                .chunks_exact(2)
+                .take(count)
+                .map(|b| u16::from_le_bytes([b[0], b[1]]) as u32)
+                .collect(),
+            _ => unreachable!(),
+        }
+    }
+
+    fn payload_bytes(&self, entries: usize) -> usize {
+        match self.agg_bits {
+            8 => entries,
+            12 => entries.div_ceil(2) * 3,
+            16 => entries * 2,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Private stochastic-rounding uniform for entry `idx`.
+    #[inline]
+    fn u(&self, worker: u32, idx: u32) -> f32 {
+        uniform_u01(self.seed ^ pcg_hash(0x7C3, worker) ^ self.round.wrapping_mul(0x9E37_79B9), idx)
+    }
+
+    pub fn wire_bits_per_entry(&self) -> f64 {
+        self.agg_bits as f64
+    }
+}
+
+impl GradCodec for ThcCodec {
+    fn name(&self) -> &'static str {
+        "THC"
+    }
+
+    fn metadata(&mut self, grad: &[f32], ctx: &HopCtx) -> Vec<f32> {
+        // Per-block max of |H·D·x| — Max-reduced to form the shared table.
+        self.round = ctx.round;
+        let padded = align_up(grad.len().max(1), HADAMARD_BLOCK);
+        let mut x = grad.to_vec();
+        x.resize(padded, 0.0);
+        self.rotate(&mut x, ctx.round);
+        x.chunks_exact(HADAMARD_BLOCK)
+            .map(|blk| blk.iter().fold(0.0f32, |m, &v| m.max(v.abs())))
+            .collect()
+    }
+
+    fn metadata_op(&self) -> MetaOp {
+        MetaOp::Max
+    }
+
+    fn begin_round(&mut self, grad: &[f32], agg_meta: &[f32], ctx: &HopCtx) -> Vec<f32> {
+        self.d = grad.len();
+        self.round = ctx.round;
+        self.agg_bits = Self::agg_bits_for(ctx.n_workers);
+        self.scales = agg_meta.to_vec();
+        let padded = align_up(grad.len().max(1), HADAMARD_BLOCK);
+        assert_eq!(agg_meta.len(), padded / HADAMARD_BLOCK);
+        let mut pre = grad.to_vec();
+        pre.resize(padded, 0.0);
+        self.rotate(&mut pre, ctx.round);
+        pre
+    }
+
+    fn chunk_alignment(&self) -> usize {
+        HADAMARD_BLOCK
+    }
+
+    fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8> {
+        debug_assert_eq!(data.len(), range.len());
+        let k = ctx.summed;
+        let mut codes = Vec::with_capacity(range.len());
+        for (i, &v) in data.iter().enumerate() {
+            let idx = range.start + i;
+            let s = self.scales[idx / HADAMARD_BLOCK];
+            codes.push(self.to_lattice(v, s, k, self.u(ctx.worker, idx as u32)));
+        }
+        self.pack(&codes)
+    }
+
+    fn decompress(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx) -> Vec<f32> {
+        let codes = self.unpack(bytes, range.len());
+        codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
+                self.from_lattice(c, s, ctx.summed)
+            })
+            .collect()
+    }
+
+    fn decompress_accumulate(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) {
+        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
+            *a += v;
+        }
+    }
+
+    /// Homomorphic fused hop: integer-add a fresh local 4-bit code to the
+    /// incoming code sums — no decode/requantize, THC's one structural
+    /// advantage in multi-hop (paper Table 2's "+2·AR" row).
+    fn decompress_accumulate_recompress(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) -> Vec<u8> {
+        debug_assert_eq!(local.len(), range.len());
+        let mut codes = self.unpack(bytes, range.len());
+        let max_code = (1u32 << self.agg_bits) - 1;
+        for (i, c) in codes.iter_mut().enumerate() {
+            let idx = range.start + i;
+            let s = self.scales[idx / HADAMARD_BLOCK];
+            let lc = self.to_lattice(local[i], s, 1, self.u(ctx.worker, idx as u32));
+            let sum = *c + lc;
+            if sum > max_code {
+                self.ovf.fetch_add(1, Ordering::Relaxed);
+            }
+            *c = sum.min(max_code);
+        }
+        self.pack(&codes)
+    }
+
+    fn end_round(&mut self, mut agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {
+        let round = ctx.round;
+        self.unrotate(&mut agg, round);
+        agg.truncate(self.d);
+        agg
+    }
+
+    fn overflow_count(&self) -> u64 {
+        self.ovf.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rng::Pcg, vnmse};
+
+    fn ctx(worker: u32, n: u32, summed: u32) -> HopCtx {
+        HopCtx { worker, n_workers: n, round: 1, summed }
+    }
+
+    #[test]
+    fn fwht_involution() {
+        let mut rng = Pcg::new(3);
+        let mut x = vec![0.0f32; 64];
+        rng.fill_normal(&mut x, 1.0);
+        let orig = x.clone();
+        fwht(&mut x);
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a / 64.0 - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pack12_roundtrip() {
+        let c = ThcCodec { agg_bits: 12, ..ThcCodec::new(1) };
+        let mut rng = Pcg::new(9);
+        for n in [1usize, 2, 3, 7, 100] {
+            let codes: Vec<u32> = (0..n).map(|_| rng.next_u32() & 0xfff).collect();
+            let packed = c.pack(&codes);
+            assert_eq!(packed.len(), c.payload_bytes(n));
+            assert_eq!(c.unpack(&packed, n), codes);
+        }
+    }
+
+    #[test]
+    fn single_worker_roundtrip() {
+        let mut rng = Pcg::new(5);
+        let mut g = vec![0.0f32; 3000];
+        rng.fill_normal(&mut g, 0.01);
+        let mut c = ThcCodec::new(7);
+        let cx = ctx(0, 1, 1);
+        let meta = c.metadata(&g, &cx);
+        let pre = c.begin_round(&g, &meta, &cx);
+        let bytes = c.compress(&pre, 0..pre.len(), &cx);
+        assert_eq!(bytes.len(), pre.len()); // 8 bits/entry
+        let dec = c.decompress(&bytes, 0..pre.len(), &cx);
+        let out = c.end_round(dec, &cx);
+        let err = vnmse(&g, &out);
+        // 4-bit lattice after rotation: coarse but bounded
+        assert!(err < 0.05, "THC single-worker vNMSE {err}");
+    }
+
+    #[test]
+    fn homomorphic_two_worker_sum() {
+        let mut rng = Pcg::new(6);
+        let d = 2048;
+        let mut ga = vec![0.0f32; d];
+        let mut gb = vec![0.0f32; d];
+        rng.fill_normal(&mut ga, 0.01);
+        rng.fill_normal(&mut gb, 0.01);
+        let mut ca = ThcCodec::new(7);
+        let mut cb = ThcCodec::new(7);
+        let (cxa, cxb) = (ctx(0, 2, 1), ctx(1, 2, 1));
+        let ma = ca.metadata(&ga, &cxa);
+        let mb = cb.metadata(&gb, &cxb);
+        let agg: Vec<f32> = ma.iter().zip(&mb).map(|(a, b)| a.max(*b)).collect();
+        let pa = ca.begin_round(&ga, &agg, &cxa);
+        let pb = cb.begin_round(&gb, &agg, &cxb);
+        let wire = ca.compress(&pa, 0..pa.len(), &cxa);
+        let fused = cb.decompress_accumulate_recompress(&wire, &pb, 0..pb.len(), &cxb);
+        let sum = cb.decompress(&fused, 0..pb.len(), &ctx(1, 2, 2));
+        let out = cb.end_round(sum, &cxb);
+        let truth: Vec<f32> = ga.iter().zip(&gb).map(|(a, b)| a + b).collect();
+        let err = vnmse(&truth, &out);
+        // each hop adds an independent 4-bit lattice error (THC's multi-hop
+        // weakness; cf. Table 3 where THC reaches 0.01–0.2)
+        assert!(err < 0.12, "THC 2-worker vNMSE {err}");
+        assert_eq!(cb.overflow_count(), 0, "no overflow expected at n=2/b=8");
+    }
+
+    #[test]
+    fn agg_bits_rule() {
+        assert_eq!(ThcCodec::agg_bits_for(2), 8);
+        assert_eq!(ThcCodec::agg_bits_for(8), 8);
+        assert_eq!(ThcCodec::agg_bits_for(9), 12);
+        assert_eq!(ThcCodec::agg_bits_for(64), 12);
+    }
+
+    #[test]
+    fn lattice_is_unbiased() {
+        let c = ThcCodec::new(1);
+        let s = 1.0f32;
+        let v = 0.123f32;
+        let mut sum = 0.0f64;
+        let n = 100_000;
+        for i in 0..n {
+            let u = uniform_u01(42, i);
+            let code = c.to_lattice(v, s, 1, u);
+            sum += c.from_lattice(code, s, 1) as f64;
+        }
+        assert!((sum / n as f64 - v as f64).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,470 @@
+//! The compressed multi-hop all-reduce engine (Fig. 2 d–f).
+//!
+//! Drives a [`GradCodec`] per worker over a [`Topology`] schedule, charging
+//! every byte to the [`NetworkModel`]. This is the deterministic
+//! simulation path used by all experiments (2–64 workers); the
+//! thread-per-worker coordinator (`crate::coordinator`) reuses the same
+//! schedules and codecs over real channels.
+//!
+//! Fused-kernel dispatch per §4: leaves call `compress`; internal nodes
+//! call `decompress_accumulate` for all but the last incoming partial and
+//! `decompress_accumulate_recompress` for the last; all-gather receivers
+//! call `decompress`. The sink produces the broadcast payload with the
+//! same fused call, so every worker decodes the *identical* byte stream —
+//! workers provably agree on the synced gradient (verified when
+//! `verify_consistency` is set).
+
+use std::collections::HashMap;
+use std::ops::Range;
+
+use crate::codec::{GradCodec, HopCtx, MetaOp};
+use crate::collective::network::NetworkModel;
+use crate::collective::topology::Topology;
+
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    /// wire bytes of the initial metadata all-reduce (per the whole job)
+    pub meta_bytes: u64,
+    pub rs_bytes: u64,
+    pub ag_bytes: u64,
+    pub meta_time_s: f64,
+    pub rs_time_s: f64,
+    pub ag_time_s: f64,
+    /// per reduce-scatter stage wall time (bandwidth trace, Fig. 17)
+    pub stage_times_s: Vec<f64>,
+    pub compress_calls: u64,
+    pub dar_calls: u64,
+    pub da_calls: u64,
+    pub decompress_calls: u64,
+    /// entries processed by compression kernels (drives the Fig. 6 /
+    /// Table 2 compute model)
+    pub entries_processed: u64,
+    pub overflow_events: u64,
+    /// vNMSE of the aggregated sum vs the exact f64 sum
+    pub vnmse: f64,
+}
+
+impl RoundReport {
+    pub fn comm_time_s(&self) -> f64 {
+        self.meta_time_s + self.rs_time_s + self.ag_time_s
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.meta_bytes + self.rs_bytes + self.ag_bytes
+    }
+}
+
+pub struct AllReduceEngine {
+    pub topology: Topology,
+    pub net: NetworkModel,
+    /// cross-check that two different workers decode identical results
+    pub verify_consistency: bool,
+    /// compute the exact sum and record vNMSE (costs an extra O(nd) pass)
+    pub measure_vnmse: bool,
+}
+
+impl AllReduceEngine {
+    pub fn new(topology: Topology, net: NetworkModel) -> Self {
+        AllReduceEngine { topology, net, verify_consistency: false, measure_vnmse: true }
+    }
+
+    /// Run one synchronization round. `grads[i]` is worker i's local
+    /// gradient; returns the aggregated **sum** (identical on every
+    /// worker) plus the report. `t0` is the absolute start time (matters
+    /// under tenant contention).
+    pub fn run(
+        &self,
+        grads: &[Vec<f32>],
+        codecs: &mut [Box<dyn GradCodec>],
+        round: u32,
+        t0: f64,
+    ) -> (Vec<f32>, RoundReport) {
+        let n = grads.len();
+        assert!(n >= 2, "all-reduce needs ≥ 2 workers");
+        assert_eq!(codecs.len(), n);
+        let d = grads[0].len();
+        assert!(grads.iter().all(|g| g.len() == d));
+        let mut report = RoundReport::default();
+        let mut now = t0;
+
+        let ctx = |worker: u32, summed: u32| HopCtx {
+            worker,
+            n_workers: n as u32,
+            round,
+            summed,
+        };
+
+        // ---- stage 1: lightweight metadata all-reduce (Fig. 2b) ----
+        let metas: Vec<Vec<f32>> =
+            codecs.iter_mut().enumerate().map(|(i, c)| c.metadata(&grads[i], &ctx(i as u32, 1))).collect();
+        let mlen = metas[0].len();
+        assert!(metas.iter().all(|m| m.len() == mlen), "metadata length disagreement");
+        let op = codecs[0].metadata_op();
+        let agg_meta: Vec<f32> = (0..mlen)
+            .map(|k| match op {
+                MetaOp::Sum => metas.iter().map(|m| m[k]).sum(),
+                MetaOp::Max => metas.iter().map(|m| m[k]).fold(f32::MIN, f32::max),
+            })
+            .collect();
+        // cost: ring all-reduce of mlen f32 → 2(n−1) stages of mlen/n·4B
+        if mlen > 0 {
+            let per_stage = (mlen.div_ceil(n) * 4) as u64;
+            for _ in 0..2 * (n - 1) {
+                let dt = self.net.stage_time(&vec![per_stage; n], now);
+                now += dt;
+                report.meta_time_s += dt;
+            }
+            report.meta_bytes = (2 * (n - 1) * n) as u64 * per_stage;
+        }
+
+        // ---- stage 2: preprocess (normalize, allocate, reorder) ----
+        let pres: Vec<Vec<f32>> = codecs
+            .iter_mut()
+            .enumerate()
+            .map(|(i, c)| c.begin_round(&grads[i], &agg_meta, &ctx(i as u32, 1)))
+            .collect();
+        let padded = pres[0].len();
+        assert!(pres.iter().all(|p| p.len() == padded), "padded length disagreement");
+        let align = codecs[0].chunk_alignment();
+        let ranges = crate::codec::chunk_ranges(padded, n, align);
+
+        // ---- stage 3: reduce-scatter over the arborescences ----
+        // incoming[(worker, chunk)] = payloads received so far
+        let mut incoming: HashMap<(u32, u32), Vec<(Vec<u8>, u32)>> = HashMap::new();
+        let rs_sched = self.topology.reduce_scatter(n);
+        for hops in &rs_sched {
+            let mut stage_msgs: Vec<u64> = Vec::with_capacity(hops.len());
+            let mut deliveries: Vec<(u32, u32, Vec<u8>, u32)> = Vec::new();
+            for h in hops {
+                let range = ranges[h.chunk as usize].clone();
+                let (payload, summed) = self.produce(
+                    &mut incoming,
+                    codecs,
+                    &pres,
+                    h.from,
+                    h.chunk,
+                    range,
+                    &ctx(h.from, 1),
+                    &mut report,
+                );
+                stage_msgs.push(payload.len() as u64);
+                report.rs_bytes += payload.len() as u64;
+                deliveries.push((h.to, h.chunk, payload, summed));
+            }
+            for (to, chunk, payload, summed) in deliveries {
+                incoming.entry((to, chunk)).or_default().push((payload, summed));
+            }
+            let dt = self.net.stage_time(&stage_msgs, now);
+            now += dt;
+            report.rs_time_s += dt;
+            report.stage_times_s.push(dt);
+        }
+
+        // ---- stage 4: sinks finalize their chunk (fused DAR including the
+        // local contribution) → the broadcast payloads ----
+        let mut broadcast: Vec<(Vec<u8>, u32)> = Vec::with_capacity(n);
+        for c in 0..n as u32 {
+            let range = ranges[c as usize].clone();
+            let (payload, summed) = self.produce(
+                &mut incoming,
+                codecs,
+                &pres,
+                c, // sink of chunk c is worker c
+                c,
+                range,
+                &ctx(c, 1),
+                &mut report,
+            );
+            debug_assert_eq!(summed, n as u32, "sink payload must aggregate all workers");
+            broadcast.push((payload, summed));
+        }
+        debug_assert!(incoming.values().all(|v| v.is_empty()) || incoming.is_empty());
+
+        // ---- stage 5: all-gather (broadcast compressed sums) ----
+        let ag_sched = self.topology.all_gather(n);
+        for hops in &ag_sched {
+            let msgs: Vec<u64> =
+                hops.iter().map(|h| broadcast[h.chunk as usize].0.len() as u64).collect();
+            report.ag_bytes += msgs.iter().sum::<u64>();
+            let dt = self.net.stage_time(&msgs, now);
+            now += dt;
+            report.ag_time_s += dt;
+        }
+
+        // ---- stage 6: decode + postprocess ----
+        // every worker decodes the same payloads; decode once and verify a
+        // second worker agrees when asked.
+        let mut summed_pre = vec![0.0f32; padded];
+        for (c, (payload, k)) in broadcast.iter().enumerate() {
+            let range = ranges[c].clone();
+            if range.is_empty() {
+                continue;
+            }
+            let dec = codecs[0].decompress(payload, range.clone(), &ctx(0, *k));
+            report.decompress_calls += 1;
+            summed_pre[range.clone()].copy_from_slice(&dec);
+            if self.verify_consistency && n > 1 {
+                let dec2 = codecs[1].decompress(payload, range.clone(), &ctx(1, *k));
+                assert_eq!(dec, dec2, "workers decoded different results for chunk {c}");
+            }
+        }
+        // end_round mutates per-worker codec state; run it on every codec
+        // (workers all hold the same sum) and return worker 0's view.
+        let mut result = Vec::new();
+        for (i, c) in codecs.iter_mut().enumerate() {
+            let out = c.end_round(summed_pre.clone(), &ctx(i as u32, n as u32));
+            if i == 0 {
+                result = out;
+            } else if self.verify_consistency {
+                assert_eq!(result.len(), out.len());
+            }
+        }
+
+        report.overflow_events = codecs.iter().map(|c| c.overflow_count()).sum();
+
+        if self.measure_vnmse {
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for e in 0..d {
+                let exact: f64 = grads.iter().map(|g| g[e] as f64).sum();
+                let diff = exact - result[e] as f64;
+                num += diff * diff;
+                den += exact * exact;
+            }
+            report.vnmse = if den > 0.0 { num / den } else { 0.0 };
+        }
+
+        (result, report)
+    }
+
+    /// Produce worker `w`'s outgoing payload for `chunk`: leaf compress or
+    /// the fused accumulate/recompress path, per §4's kernel dispatch.
+    #[allow(clippy::too_many_arguments)]
+    fn produce(
+        &self,
+        incoming: &mut HashMap<(u32, u32), Vec<(Vec<u8>, u32)>>,
+        codecs: &mut [Box<dyn GradCodec>],
+        pres: &[Vec<f32>],
+        w: u32,
+        chunk: u32,
+        range: Range<usize>,
+        base_ctx: &HopCtx,
+        report: &mut RoundReport,
+    ) -> (Vec<u8>, u32) {
+        let received = incoming.remove(&(w, chunk)).unwrap_or_default();
+        let codec = &codecs[w as usize];
+        let local = &pres[w as usize][range.clone()];
+        report.entries_processed += range.len() as u64;
+        if received.is_empty() {
+            report.compress_calls += 1;
+            let ctx = HopCtx { summed: 1, ..*base_ctx };
+            return (codec.compress(local, range, &ctx), 1);
+        }
+        // all but the last: decompress-accumulate into a local buffer
+        let (head, tail) = received.split_at(received.len() - 1);
+        let mut summed = 1u32;
+        let out = if head.is_empty() {
+            // single parent: fully fused DAR against the local slice
+            let (payload, k) = &tail[0];
+            summed += k;
+            let in_ctx = HopCtx { summed: *k, ..*base_ctx };
+            report.dar_calls += 1;
+            codec.decompress_accumulate_recompress(payload, local, range, &in_ctx)
+        } else {
+            // multi-parent (butterfly internal nodes): accumulate all but
+            // the last, then the last, then recompress the chunk once
+            let mut acc = local.to_vec();
+            for (payload, k) in head.iter().chain(tail) {
+                summed += k;
+                let in_ctx = HopCtx { summed: *k, ..*base_ctx };
+                report.da_calls += 1;
+                codec.decompress_accumulate(payload, &mut acc, range.clone(), &in_ctx);
+            }
+            let out_ctx = HopCtx { summed, ..*base_ctx };
+            report.compress_calls += 1;
+            codec.compress(&acc, range, &out_ctx)
+        };
+        (out, summed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::bf16::Bf16Codec;
+    use crate::codec::dynamiq::Dynamiq;
+    use crate::codec::mxfp::{MxFormat, MxfpCodec};
+    use crate::codec::omnireduce::OmniReduce;
+    use crate::codec::thc::ThcCodec;
+    use crate::util::rng::Pcg;
+
+    fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| {
+                let mut rng = Pcg::new(seed + i as u64);
+                let mut g = vec![0.0f32; d];
+                let mut region = 1.0f32;
+                for (k, v) in g.iter_mut().enumerate() {
+                    if k % 128 == 0 {
+                        region = (rng.next_normal() * 1.2).exp();
+                    }
+                    *v = rng.next_normal() * 0.01 * region;
+                }
+                g
+            })
+            .collect()
+    }
+
+    fn mk_codecs(name: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+        (0..n)
+            .map(|_| -> Box<dyn GradCodec> {
+                match name {
+                    "bf16" => Box::new(Bf16Codec::new()),
+                    "dynamiq" => Box::new(Dynamiq::paper_default()),
+                    "thc" => Box::new(ThcCodec::new(7)),
+                    "or" => Box::new(OmniReduce::paper_default()),
+                    "mxfp8" => Box::new(MxfpCodec::new(MxFormat::Mxfp8)),
+                    "mxfp4" => Box::new(MxfpCodec::new(MxFormat::Mxfp4)),
+                    _ => unreachable!(),
+                }
+            })
+            .collect()
+    }
+
+    fn run_once(
+        name: &str,
+        topo: Topology,
+        n: usize,
+        d: usize,
+    ) -> (Vec<f32>, Vec<Vec<f32>>, RoundReport) {
+        let g = grads(n, d, 42);
+        let mut codecs = mk_codecs(name, n);
+        let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+        eng.verify_consistency = true;
+        let (out, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+        (out, g, rep)
+    }
+
+    #[test]
+    fn bf16_ring_matches_exact_sum() {
+        for n in [2, 3, 4, 8] {
+            let (out, g, rep) = run_once("bf16", Topology::Ring, n, 3000);
+            assert_eq!(out.len(), 3000);
+            assert!(rep.vnmse < 1e-3, "n={n} vNMSE {}", rep.vnmse);
+            let _ = g;
+        }
+    }
+
+    #[test]
+    fn bf16_butterfly_matches_exact_sum() {
+        for n in [2, 4, 8, 16] {
+            let (_, _, rep) = run_once("bf16", Topology::Butterfly, n, 3000);
+            assert!(rep.vnmse < 1e-3, "n={n} vNMSE {}", rep.vnmse);
+        }
+    }
+
+    #[test]
+    fn dynamiq_ring_and_butterfly() {
+        for (topo, n) in [(Topology::Ring, 4), (Topology::Ring, 7), (Topology::Butterfly, 8)] {
+            let (_, _, rep) = run_once("dynamiq", topo, n, 8192);
+            assert!(rep.vnmse < 0.05, "{:?} n={n} vNMSE {}", topo, rep.vnmse);
+            assert!(rep.compress_calls > 0 && rep.dar_calls > 0);
+        }
+    }
+
+    #[test]
+    fn butterfly_error_beats_ring_at_scale() {
+        // §B: butterfly's log-depth requantization path gives lower error.
+        let n = 16;
+        let d = 32768;
+        let g = grads(n, d, 9);
+        let mut err = Vec::new();
+        for topo in [Topology::Ring, Topology::Butterfly] {
+            let mut codecs = mk_codecs("dynamiq", n);
+            let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+            err.push(rep.vnmse);
+        }
+        assert!(
+            err[1] < err[0],
+            "butterfly {} should beat ring {}",
+            err[1],
+            err[0]
+        );
+    }
+
+    #[test]
+    fn all_codecs_compose_with_engine() {
+        for name in ["bf16", "dynamiq", "thc", "or", "mxfp8", "mxfp4"] {
+            let (out, g, rep) = run_once(name, Topology::Ring, 4, 4096);
+            assert_eq!(out.len(), 4096, "{name}");
+            // errors bounded per scheme class
+            let bound = match name {
+                "bf16" => 1e-3,
+                "dynamiq" => 0.05,
+                "mxfp8" => 0.05,
+                "thc" => 0.3,
+                "mxfp4" => 0.5,
+                "or" => 1.0, // dense data: OR drops half the energy
+                _ => 1.0,
+            };
+            assert!(rep.vnmse < bound, "{name} vNMSE {}", rep.vnmse);
+            let _ = g;
+        }
+    }
+
+    #[test]
+    fn wire_bytes_reflect_compression_ratios() {
+        let (_, _, rep_bf16) = run_once("bf16", Topology::Ring, 4, 65536);
+        let (_, _, rep_dq) = run_once("dynamiq", Topology::Ring, 4, 65536);
+        let (_, _, rep_fp8) = run_once("mxfp8", Topology::Ring, 4, 65536);
+        // bf16 = 16 bits/entry; dynamiq ≈ 5; mxfp8 ≈ 8.5
+        let ratio_dq = rep_bf16.rs_bytes as f64 / rep_dq.rs_bytes as f64;
+        let ratio_fp8 = rep_bf16.rs_bytes as f64 / rep_fp8.rs_bytes as f64;
+        assert!((ratio_dq - 16.0 / 5.0).abs() < 0.4, "dynamiq ratio {ratio_dq}");
+        assert!((ratio_fp8 - 16.0 / 8.5).abs() < 0.2, "mxfp8 ratio {ratio_fp8}");
+        // and the metadata all-reduce is tiny relative to uncompressed
+        // gradient traffic (the paper's "<1% of the original gradient")
+        assert!((rep_dq.meta_bytes as f64) < 0.05 * rep_bf16.rs_bytes as f64);
+    }
+
+    #[test]
+    fn network_time_tracks_bytes() {
+        // large enough that bandwidth (β) dominates latency (α) — the
+        // regime of real LLM gradients
+        let d = 1 << 21;
+        let (_, _, r1) = run_once("bf16", Topology::Ring, 4, d);
+        let (_, _, r2) = run_once("dynamiq", Topology::Ring, 4, d);
+        assert!(
+            r2.comm_time_s() < r1.comm_time_s(),
+            "compression should cut comm time: {} vs {}",
+            r2.comm_time_s(),
+            r1.comm_time_s()
+        );
+        assert_eq!(r1.stage_times_s.len(), 3); // n−1 rs stages
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let (a, _, _) = run_once("dynamiq", Topology::Ring, 4, 4096);
+        let (b, _, _) = run_once("dynamiq", Topology::Ring, 4, 4096);
+        assert_eq!(a, b, "engine must be deterministic");
+    }
+
+    #[test]
+    fn vnmse_improves_with_rounds_of_averaging_not_required_but_bounded() {
+        // consecutive rounds keep working (stateful codecs: µ, fast-u, k_t)
+        let n = 4;
+        let d = 8192;
+        let mut codecs = mk_codecs("mxfp4", n);
+        let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+        let mut last = f64::INFINITY;
+        for round in 0..5 {
+            let g = grads(n, d, 100 + round as u64);
+            let (_, rep) = eng.run(&g, &mut codecs, round, 0.0);
+            last = rep.vnmse;
+            assert!(rep.vnmse.is_finite());
+        }
+        assert!(last < 1.0);
+    }
+}

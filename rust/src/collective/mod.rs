@@ -1,0 +1,12 @@
+//! The collective layer: all-reduce topologies (ring / butterfly), the
+//! simulated network (α-β + multi-tenant contention), and the compressed
+//! multi-hop all-reduce engine that composes a [`crate::codec::GradCodec`]
+//! with a [`topology::Topology`] over a [`network::NetworkModel`].
+
+pub mod allreduce;
+pub mod network;
+pub mod topology;
+
+pub use allreduce::{AllReduceEngine, RoundReport};
+pub use network::NetworkModel;
+pub use topology::Topology;

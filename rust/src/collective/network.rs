@@ -1,0 +1,184 @@
+//! Simulated network: α-β cost model with optional multi-tenant
+//! contention (paper §5.2's shared-network experiment).
+//!
+//! Substitution note (DESIGN.md): the paper's testbed is 100 Gbps Ethernet
+//! between 4 servers (2 GPUs each over NVLink). The claims under test are
+//! about *bytes on the wire per round* and how compression shortens the
+//! exposed communication window, so an α-β model per stage — all
+//! transfers in a stage are concurrent, the stage costs
+//! `α + bytes / effective_bandwidth` — captures the comparison. Background
+//! tenants are duty-cycled bandwidth consumers: while active, the NIC is
+//! shared equally (TCP-fair), which reproduces the paper's observation
+//! that contention stretches communication by less than the tenant count.
+
+use crate::util::rng::pcg_hash;
+
+/// A background tenant: a periodic communication burst pattern.
+#[derive(Clone, Debug)]
+pub struct Tenant {
+    /// period of its train-compute/communicate cycle (seconds)
+    pub period_s: f64,
+    /// fraction of the period it occupies the wire
+    pub duty: f64,
+    /// phase offset in [0, period)
+    pub phase_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    /// per-NIC bandwidth in bytes/second (100 Gbps ≈ 12.5e9)
+    pub bandwidth_bps: f64,
+    /// per-message latency in seconds (α)
+    pub latency_s: f64,
+    pub tenants: Vec<Tenant>,
+}
+
+impl NetworkModel {
+    /// The paper's testbed NIC: 100 Gbps, ~10 µs α.
+    pub fn isolated_100g() -> Self {
+        NetworkModel { bandwidth_bps: 100e9 / 8.0, latency_s: 10e-6, tenants: Vec::new() }
+    }
+
+    /// §5.2: three additional DDP jobs continuously doing ring all-reduce.
+    pub fn shared_100g(seed: u32) -> Self {
+        let tenants = (0..3)
+            .map(|i| {
+                // pseudo-random phases/periods so the jobs only partially
+                // overlap, as the paper observes
+                let h = pcg_hash(seed, i) as f64 / u32::MAX as f64;
+                let h2 = pcg_hash(seed, i + 100) as f64 / u32::MAX as f64;
+                Tenant {
+                    period_s: 0.35 + 0.3 * h,
+                    duty: 0.5 + 0.25 * h2,
+                    phase_s: h * 0.3,
+                }
+            })
+            .collect();
+        NetworkModel { bandwidth_bps: 100e9 / 8.0, latency_s: 10e-6, tenants }
+    }
+
+    /// Number of active background tenants at absolute time `t`.
+    pub fn active_tenants(&self, t: f64) -> usize {
+        self.tenants
+            .iter()
+            .filter(|tn| {
+                let pos = (t + tn.phase_s).rem_euclid(tn.period_s) / tn.period_s;
+                pos < tn.duty
+            })
+            .count()
+    }
+
+    /// Instantaneous fair-share bandwidth at time `t`.
+    pub fn bandwidth_at(&self, t: f64) -> f64 {
+        self.bandwidth_bps / (1.0 + self.active_tenants(t) as f64)
+    }
+
+    /// Time to move `bytes` starting at time `t0` (integrates through
+    /// tenant on/off transitions).
+    pub fn transfer_time(&self, bytes: u64, t0: f64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let mut remaining = bytes as f64;
+        let mut t = t0;
+        if self.tenants.is_empty() {
+            return self.latency_s + remaining / self.bandwidth_bps;
+        }
+        // piecewise integration with a small step bound to the next tenant
+        // transition (cheap: tenant counts are tiny)
+        let mut guard = 0;
+        while remaining > 0.0 && guard < 1_000_000 {
+            let bw = self.bandwidth_at(t);
+            let dt_next = self.next_transition(t).min(remaining / bw);
+            remaining -= bw * dt_next;
+            t += dt_next;
+            guard += 1;
+        }
+        self.latency_s + (t - t0)
+    }
+
+    /// Seconds until any tenant toggles state after `t` (upper bound).
+    fn next_transition(&self, t: f64) -> f64 {
+        let mut dt: f64 = f64::INFINITY;
+        for tn in &self.tenants {
+            let pos = (t + tn.phase_s).rem_euclid(tn.period_s);
+            let on_edge = tn.duty * tn.period_s;
+            let next = if pos < on_edge { on_edge - pos } else { tn.period_s - pos };
+            dt = dt.min(next.max(1e-6));
+        }
+        dt.min(0.01)
+    }
+
+    /// Stage time: the max over concurrent messages (they run on disjoint
+    /// NIC pairs in ring/butterfly stages, so no intra-job sharing).
+    pub fn stage_time(&self, message_bytes: &[u64], t0: f64) -> f64 {
+        message_bytes
+            .iter()
+            .map(|&b| self.transfer_time(b, t0))
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isolated_transfer_is_alpha_beta() {
+        let net = NetworkModel::isolated_100g();
+        let t = net.transfer_time(12_500_000, 0.0); // 12.5 MB at 12.5 GB/s = 1 ms
+        assert!((t - (10e-6 + 1e-3)).abs() < 1e-9, "t={t}");
+        assert_eq!(net.transfer_time(0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn contention_slows_but_less_than_tenant_count() {
+        let iso = NetworkModel::isolated_100g();
+        let shared = NetworkModel::shared_100g(7);
+        let bytes = 125_000_000; // 10 ms isolated
+        let t_iso = iso.transfer_time(bytes, 0.0);
+        // average over several start offsets (tenants are phase-dependent)
+        let mut tot = 0.0;
+        let samples = 20;
+        for k in 0..samples {
+            tot += shared.transfer_time(bytes, k as f64 * 0.137);
+        }
+        let t_sh = tot / samples as f64;
+        assert!(t_sh > t_iso * 1.3, "sharing should slow transfers: {t_sh} vs {t_iso}");
+        assert!(
+            t_sh < t_iso * 4.0,
+            "duty-cycled tenants must cost less than 4× (paper §5.2): {t_sh} vs {t_iso}"
+        );
+    }
+
+    #[test]
+    fn active_tenant_count_is_periodic() {
+        let net = NetworkModel::shared_100g(3);
+        for t in [0.0, 0.1, 0.5, 1.0, 2.0] {
+            let a = net.active_tenants(t);
+            assert!(a <= 3);
+            // periodicity: same count one full LCM later is hard; just
+            // sanity-check determinism
+            assert_eq!(a, net.active_tenants(t));
+        }
+    }
+
+    #[test]
+    fn stage_time_is_max_over_messages() {
+        let net = NetworkModel::isolated_100g();
+        let t = net.stage_time(&[1000, 500, 2000], 0.0);
+        assert_eq!(t, net.transfer_time(2000, 0.0));
+        assert_eq!(net.stage_time(&[], 0.0), 0.0);
+    }
+
+    #[test]
+    fn transfer_time_monotone_in_bytes() {
+        let net = NetworkModel::shared_100g(11);
+        let mut prev = 0.0;
+        for mb in [1u64, 2, 4, 8, 16, 32] {
+            let t = net.transfer_time(mb * 1_000_000, 0.05);
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+}

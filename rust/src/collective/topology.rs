@@ -1,0 +1,318 @@
+//! All-reduce topologies (paper §3.4, §B).
+//!
+//! The reduce-scatter phase of chunk `c` is an *in-arborescence*: a tree
+//! whose edges point at a single sink. Ring makes it a path
+//! (c+1 → c+2 → … → c); butterfly (recursive halving) makes it a binary
+//! in-tree of depth log₂ n (Fig. 13). The all-gather phase broadcasts each
+//! chunk's aggregated payload back out (ring forwarding / recursive
+//! doubling).
+//!
+//! A schedule is a list of *stages*; all transfers within a stage are
+//! concurrent (that is what the network model charges).
+
+/// One transfer: `from` sends chunk `chunk`'s payload to `to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hop {
+    pub from: u32,
+    pub to: u32,
+    pub chunk: u32,
+}
+
+/// A phase schedule: stages of concurrent hops.
+pub type Schedule = Vec<Vec<Hop>>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    Ring,
+    Butterfly,
+}
+
+impl Topology {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::Butterfly => "butterfly",
+        }
+    }
+
+    /// Number of reduce-scatter stages.
+    pub fn rs_stages(&self, n: usize) -> usize {
+        match self {
+            Topology::Ring => n - 1,
+            Topology::Butterfly => n.trailing_zeros() as usize,
+        }
+    }
+
+    /// Reduce-scatter schedule for `n` workers (`n` chunks, chunk c sinks
+    /// at worker c).
+    pub fn reduce_scatter(&self, n: usize) -> Schedule {
+        assert!(n >= 2);
+        match self {
+            Topology::Ring => {
+                // stage s: worker (c + 1 + s) sends chunk c to (c + 2 + s),
+                // for every c concurrently. After n−1 stages chunk c rests
+                // at worker c.
+                (0..n - 1)
+                    .map(|s| {
+                        (0..n)
+                            .map(|c| {
+                                let from = (c + 1 + s) % n;
+                                let to = (from + 1) % n;
+                                Hop { from: from as u32, to: to as u32, chunk: c as u32 }
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+            Topology::Butterfly => {
+                assert!(n.is_power_of_two(), "butterfly requires power-of-two workers");
+                let l = n.trailing_zeros();
+                // stage s ∈ 0..L: distance bit = L−1−s. Worker w sends, for
+                // every chunk c that lies across that bit from w while
+                // agreeing on all higher bits, its partial to w ^ bit.
+                (0..l)
+                    .map(|s| {
+                        let bit = 1usize << (l - 1 - s);
+                        let mut hops = Vec::new();
+                        for w in 0..n {
+                            let p = w ^ bit;
+                            for c in 0..n {
+                                let high_mask = !(2 * bit - 1);
+                                let agrees_high = (c & high_mask) == (w & high_mask);
+                                let across = (c & bit) != (w & bit);
+                                if agrees_high && across {
+                                    hops.push(Hop {
+                                        from: w as u32,
+                                        to: p as u32,
+                                        chunk: c as u32,
+                                    });
+                                }
+                            }
+                        }
+                        hops
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// All-gather schedule: broadcast chunk c's final payload from its sink
+    /// to everyone.
+    pub fn all_gather(&self, n: usize) -> Schedule {
+        match self {
+            Topology::Ring => {
+                // stage s: worker (c + s) forwards chunk c to (c + s + 1)
+                (0..n - 1)
+                    .map(|s| {
+                        (0..n)
+                            .map(|c| {
+                                let from = (c + s) % n;
+                                let to = (from + 1) % n;
+                                Hop { from: from as u32, to: to as u32, chunk: c as u32 }
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+            Topology::Butterfly => {
+                assert!(n.is_power_of_two());
+                let l = n.trailing_zeros();
+                // recursive doubling: stage s exchanges across bit 2^s; a
+                // worker forwards every chunk it already holds.
+                (0..l)
+                    .map(|s| {
+                        let bit = 1usize << s;
+                        let mut hops = Vec::new();
+                        for w in 0..n {
+                            let p = w ^ bit;
+                            // chunks w holds before stage s: those agreeing
+                            // with w on bits ≥ s (i.e. received in earlier
+                            // doubling stages) — c ^ w has only bits < 2^s
+                            for c in 0..n {
+                                if (c ^ w) & !(bit - 1) == 0 {
+                                    hops.push(Hop {
+                                        from: w as u32,
+                                        to: p as u32,
+                                        chunk: c as u32,
+                                    });
+                                }
+                            }
+                        }
+                        hops
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// The in-arborescence of one chunk: for each worker ≠ sink, the worker
+    /// it sends its partial to, and the stage at which it sends. Returns
+    /// `(parent, stage)` indexed by worker; the sink has parent = itself.
+    pub fn arborescence(&self, n: usize, chunk: usize) -> Vec<(u32, u32)> {
+        let mut parent: Vec<(u32, u32)> = (0..n).map(|w| (w as u32, u32::MAX)).collect();
+        for (s, hops) in self.reduce_scatter(n).iter().enumerate() {
+            for h in hops {
+                if h.chunk as usize == chunk {
+                    debug_assert_eq!(parent[h.from as usize].1, u32::MAX, "double send");
+                    parent[h.from as usize] = (h.to, s as u32);
+                }
+            }
+        }
+        parent
+    }
+
+    /// Longest hop count root-to-sink in chunk 0's arborescence (the
+    /// requantization depth that drives §B's error analysis).
+    pub fn max_depth(&self, n: usize) -> usize {
+        match self {
+            Topology::Ring => n - 1,
+            Topology::Butterfly => n.trailing_zeros() as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn check_reduce_scatter(t: Topology, n: usize) {
+        let sched = t.reduce_scatter(n);
+        assert_eq!(sched.len(), t.rs_stages(n));
+        for c in 0..n {
+            // every non-sink worker sends chunk c exactly once, the sink never
+            let mut senders = HashSet::new();
+            for hops in &sched {
+                for h in hops.iter().filter(|h| h.chunk as usize == c) {
+                    assert!(senders.insert(h.from), "worker {} sent chunk {c} twice", h.from);
+                    assert_ne!(h.from as usize, c, "sink must not send its own chunk");
+                }
+            }
+            assert_eq!(senders.len(), n - 1, "chunk {c}: all non-sinks send");
+            // following parents from any worker reaches the sink
+            let parent = t.arborescence(n, c);
+            for w in 0..n {
+                let mut cur = w as u32;
+                let mut steps = 0;
+                while cur as usize != c {
+                    // send stages must be increasing along the path
+                    cur = parent[cur as usize].0;
+                    steps += 1;
+                    assert!(steps <= n, "cycle detected");
+                }
+            }
+            // stages increase toward the sink (a node can only forward what
+            // it has already received)
+            for w in 0..n {
+                if w == c {
+                    continue;
+                }
+                let (p, s) = parent[w];
+                if p as usize != c {
+                    let (_, ps) = parent[p as usize];
+                    assert!(ps > s, "parent of {w} sends at {ps} ≤ {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_reduce_scatter_valid() {
+        for n in [2, 3, 4, 5, 8, 9] {
+            check_reduce_scatter(Topology::Ring, n);
+        }
+    }
+
+    #[test]
+    fn butterfly_reduce_scatter_valid() {
+        for n in [2, 4, 8, 16, 64] {
+            check_reduce_scatter(Topology::Butterfly, n);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn butterfly_rejects_non_pow2() {
+        Topology::Butterfly.reduce_scatter(6);
+    }
+
+    fn check_all_gather(t: Topology, n: usize) {
+        let sched = t.all_gather(n);
+        // simulate: has[w][c]
+        let mut has = vec![vec![false; n]; n];
+        for (c, h) in has.iter_mut().enumerate().take(n) {
+            h[c] = true; // sink holds its chunk
+        }
+        for hops in &sched {
+            let snapshot = has.clone();
+            for h in hops {
+                assert!(
+                    snapshot[h.from as usize][h.chunk as usize],
+                    "{} forwards chunk {} it does not hold",
+                    h.from,
+                    h.chunk
+                );
+                has[h.to as usize][h.chunk as usize] = true;
+            }
+        }
+        for w in 0..n {
+            for c in 0..n {
+                assert!(has[w][c], "worker {w} missing chunk {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_all_gather_complete() {
+        for n in [2, 3, 4, 8, 9] {
+            check_all_gather(Topology::Ring, n);
+        }
+    }
+
+    #[test]
+    fn butterfly_all_gather_complete() {
+        for n in [2, 4, 8, 16, 64] {
+            check_all_gather(Topology::Butterfly, n);
+        }
+    }
+
+    #[test]
+    fn butterfly_depth_is_logarithmic() {
+        assert_eq!(Topology::Butterfly.max_depth(64), 6);
+        assert_eq!(Topology::Ring.max_depth(64), 63);
+        // §B: butterfly's shallower trees are why its error scales better
+        assert!(Topology::Butterfly.max_depth(64) < Topology::Ring.max_depth(64));
+    }
+
+    #[test]
+    fn ring_stage_concurrency_is_one_send_per_worker() {
+        for n in [3usize, 4, 8] {
+            for hops in Topology::Ring.reduce_scatter(n) {
+                let mut senders = HashSet::new();
+                let mut receivers = HashSet::new();
+                for h in &hops {
+                    assert!(senders.insert(h.from), "worker sends twice in a stage");
+                    assert!(receivers.insert(h.to), "worker receives twice in a stage");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn butterfly_arborescence_subtree_sizes() {
+        // Fig 13 / §B: for chunk c, the partial arriving at the sink's
+        // final stage aggregates n/2 gradients.
+        let n = 8;
+        let parent = Topology::Butterfly.arborescence(n, 3);
+        // count subtree sizes by walking
+        let mut size = vec![1usize; n];
+        // process in decreasing stage order
+        let mut order: Vec<usize> = (0..n).filter(|&w| w != 3).collect();
+        order.sort_by_key(|&w| parent[w].1);
+        for &w in &order {
+            let p = parent[w].0 as usize;
+            size[p] += size[w];
+        }
+        assert_eq!(size[3], n);
+    }
+}

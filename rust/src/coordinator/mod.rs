@@ -1,0 +1,370 @@
+//! The L3 coordinator: thread-per-worker execution of the compressed
+//! multi-hop all-reduce over real message channels.
+//!
+//! Where [`crate::collective::AllReduceEngine`] *simulates* the schedule
+//! deterministically (and charges simulated time), this module actually
+//! runs it: each worker is an OS thread owning its codec, exchanging
+//! framed byte payloads over `std::sync::mpsc` links wired according to
+//! the same [`Topology`] schedules. Numerics are bit-identical to the
+//! engine (asserted in tests) because codecs and schedules are shared —
+//! this is the deployment-shaped path (the paper's NCCL-P2P communication
+//! hook), while the engine is the experimentation path.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread;
+
+use anyhow::{anyhow, Result};
+
+use crate::codec::{chunk_ranges, GradCodec, HopCtx, MetaOp};
+use crate::collective::topology::{Hop, Topology};
+
+/// A framed message on a worker-to-worker link.
+enum Msg {
+    /// metadata vector for the initial all-reduce (ring pass)
+    Meta(Vec<f32>),
+    /// (phase, stage, chunk, payload, summed); phase 0 = reduce-scatter,
+    /// 1 = all-gather. The stage tag keeps accumulation order identical
+    /// to the engine's stage-ordered schedule even when a fast peer runs
+    /// ahead (f32 addition is not associative).
+    Chunk(u8, u32, u32, Vec<u8>, u32),
+}
+
+struct Links {
+    tx: Vec<HashMap<u32, Sender<Msg>>>,
+    rx: Vec<Receiver<(u32, Msg)>>,
+}
+
+/// Build a full mesh of tagged channels (receiver demultiplexes by
+/// sender id).
+fn mesh(n: usize) -> Links {
+    let mut tx: Vec<HashMap<u32, Sender<Msg>>> = (0..n).map(|_| HashMap::new()).collect();
+    let mut rx = Vec::with_capacity(n);
+    for to in 0..n {
+        let (s, r) = channel::<(u32, Msg)>();
+        rx.push(r);
+        for (from, map) in tx.iter_mut().enumerate() {
+            let s2 = s.clone();
+            let from = from as u32;
+            // wrap: tag with sender
+            let (raw_s, raw_r) = channel::<Msg>();
+            map.insert(to as u32, raw_s);
+            let fwd = s2;
+            thread::spawn(move || {
+                while let Ok(m) = raw_r.recv() {
+                    if fwd.send((from, m)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+    }
+    Links { tx, rx }
+}
+
+/// Outcome of one coordinated round on one worker.
+pub struct WorkerRound {
+    pub worker: u32,
+    pub aggregated: Vec<f32>,
+    pub rs_bytes_sent: u64,
+    pub ag_bytes_sent: u64,
+}
+
+/// Run one all-reduce round with real threads. `grads[i]` is worker i's
+/// local gradient; every worker returns the identical aggregated sum.
+pub fn threaded_allreduce(
+    topology: Topology,
+    grads: Vec<Vec<f32>>,
+    codecs: Vec<Box<dyn GradCodec>>,
+    round: u32,
+) -> Result<Vec<WorkerRound>> {
+    let n = grads.len();
+    assert!(n >= 2);
+    assert_eq!(codecs.len(), n);
+    let links = mesh(n);
+    let rs_sched = topology.reduce_scatter(n);
+    let ag_sched = topology.all_gather(n);
+
+    let mut handles = Vec::with_capacity(n);
+    let mut txs: Vec<HashMap<u32, Sender<Msg>>> = links.tx;
+    let mut rxs: Vec<Receiver<(u32, Msg)>> = links.rx;
+    for (w_rev, (grad, mut codec)) in grads.into_iter().zip(codecs).enumerate().rev() {
+        // (iterate in reverse so pop() hands out matching ends)
+        let w = w_rev as u32;
+        let tx = txs.pop().unwrap();
+        let rx = rxs.pop().unwrap();
+        let rs_sched = rs_sched.clone();
+        let ag_sched = ag_sched.clone();
+        handles.push(thread::spawn(move || -> Result<WorkerRound> {
+            run_worker(w, n, round, grad, codec.as_mut(), &tx, &rx, &rs_sched, &ag_sched)
+        }));
+    }
+    let mut out: Vec<WorkerRound> = handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| anyhow!("worker panicked"))?)
+        .collect::<Result<_>>()?;
+    out.sort_by_key(|w| w.worker);
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    w: u32,
+    n: usize,
+    round: u32,
+    grad: Vec<f32>,
+    codec: &mut dyn GradCodec,
+    tx: &HashMap<u32, Sender<Msg>>,
+    rx: &Receiver<(u32, Msg)>,
+    rs_sched: &[Vec<Hop>],
+    ag_sched: &[Vec<Hop>],
+) -> Result<WorkerRound> {
+    let ctx = |summed: u32| HopCtx { worker: w, n_workers: n as u32, round, summed };
+    // Out-of-phase buffer: a fast peer may already be in reduce-scatter
+    // while we still await metadata (butterfly especially) — chunks that
+    // arrive early are parked here.
+    let mut pending: std::collections::VecDeque<(u32, Msg)> = Default::default();
+
+    // ---- metadata ring all-reduce (reduce pass toward n−1, then
+    // broadcast n−1 → 0 → 1 → … → n−2) ----
+    let local_meta = codec.metadata(&grad, &ctx(1));
+    let op = codec.metadata_op();
+    let next = ((w as usize + 1) % n) as u32;
+    let mut acc = local_meta.clone();
+    if w != 0 {
+        let v = recv_meta(rx, &mut pending)?;
+        for (a, b) in acc.iter_mut().zip(v) {
+            *a = match op {
+                MetaOp::Sum => *a + b,
+                MetaOp::Max => a.max(b),
+            };
+        }
+    }
+    if (w as usize) < n - 1 {
+        tx[&next].send(Msg::Meta(acc.clone())).map_err(|_| anyhow!("send"))?;
+    }
+    if (w as usize) == n - 1 {
+        tx[&next].send(Msg::Meta(acc.clone())).map_err(|_| anyhow!("send"))?;
+    } else {
+        acc = recv_meta(rx, &mut pending)?;
+        if (w as usize) != n - 2 {
+            tx[&next].send(Msg::Meta(acc.clone())).map_err(|_| anyhow!("send"))?;
+        }
+    }
+    let agg_meta = acc;
+
+    // ---- preprocess ----
+    let pre = codec.begin_round(&grad, &agg_meta, &ctx(1));
+    let ranges = chunk_ranges(pre.len(), n, codec.chunk_alignment());
+
+    // ---- reduce-scatter ----
+    let mut incoming: HashMap<u32, Vec<(Vec<u8>, u32)>> = HashMap::new();
+    let mut rs_bytes = 0u64;
+    for (stage, hops) in rs_sched.iter().enumerate() {
+        let my_sends: Vec<&Hop> = hops.iter().filter(|h| h.from == w).collect();
+        let my_recvs = hops.iter().filter(|h| h.to == w).count();
+        for h in my_sends {
+            let range = ranges[h.chunk as usize].clone();
+            let (payload, summed) =
+                produce(codec, &pre, incoming.remove(&h.chunk), range, &ctx(1))?;
+            rs_bytes += payload.len() as u64;
+            tx[&h.to]
+                .send(Msg::Chunk(0, stage as u32, h.chunk, payload, summed))
+                .map_err(|_| anyhow!("send"))?;
+        }
+        for _ in 0..my_recvs {
+            let (c, payload, summed) = recv_chunk(rx, &mut pending, 0, stage as u32)?;
+            incoming.entry(c).or_default().push((payload, summed));
+        }
+    }
+
+    // ---- sink finalize: chunk w's broadcast payload ----
+    let mut broadcast: HashMap<u32, (Vec<u8>, u32)> = HashMap::new();
+    {
+        let range = ranges[w as usize].clone();
+        let (payload, summed) =
+            produce(codec, &pre, incoming.remove(&w), range, &ctx(1))?;
+        debug_assert_eq!(summed, n as u32);
+        broadcast.insert(w, (payload, summed));
+    }
+
+    // ---- all-gather ----
+    let mut ag_bytes = 0u64;
+    for (stage, hops) in ag_sched.iter().enumerate() {
+        let my_sends: Vec<&Hop> = hops.iter().filter(|h| h.from == w).collect();
+        let my_recvs = hops.iter().filter(|h| h.to == w).count();
+        for h in my_sends {
+            let (payload, summed) = broadcast
+                .get(&h.chunk)
+                .ok_or_else(|| anyhow!("worker {w} lacks chunk {} to forward", h.chunk))?
+                .clone();
+            ag_bytes += payload.len() as u64;
+            tx[&h.to]
+                .send(Msg::Chunk(1, stage as u32, h.chunk, payload, summed))
+                .map_err(|_| anyhow!("send"))?;
+        }
+        for _ in 0..my_recvs {
+            let (c, payload, summed) = recv_chunk(rx, &mut pending, 1, stage as u32)?;
+            broadcast.insert(c, (payload, summed));
+        }
+    }
+
+    // ---- decode + postprocess ----
+    let mut summed_pre = vec![0.0f32; pre.len()];
+    for (c, (payload, k)) in &broadcast {
+        let range = ranges[*c as usize].clone();
+        if range.is_empty() {
+            continue;
+        }
+        let dec = codec.decompress(payload, range.clone(), &ctx(*k));
+        summed_pre[range].copy_from_slice(&dec);
+    }
+    let aggregated = codec.end_round(summed_pre, &ctx(n as u32));
+    Ok(WorkerRound { worker: w, aggregated, rs_bytes_sent: rs_bytes, ag_bytes_sent: ag_bytes })
+}
+
+fn recv_from(rx: &Receiver<(u32, Msg)>) -> Result<(u32, Msg)> {
+    rx.recv_timeout(std::time::Duration::from_secs(60)).map_err(|e| anyhow!("recv: {e}"))
+}
+
+/// Receive the next Meta message, parking any early Chunk messages.
+fn recv_meta(
+    rx: &Receiver<(u32, Msg)>,
+    pending: &mut std::collections::VecDeque<(u32, Msg)>,
+) -> Result<Vec<f32>> {
+    if let Some(pos) = pending.iter().position(|(_, m)| matches!(m, Msg::Meta(_))) {
+        if let Some((_, Msg::Meta(v))) = pending.remove(pos) {
+            return Ok(v);
+        }
+    }
+    loop {
+        let (from, m) = recv_from(rx)?;
+        match m {
+            Msg::Meta(v) => return Ok(v),
+            other => pending.push_back((from, other)),
+        }
+    }
+}
+
+/// Receive the next Chunk of the given (phase, stage), parking others.
+fn recv_chunk(
+    rx: &Receiver<(u32, Msg)>,
+    pending: &mut std::collections::VecDeque<(u32, Msg)>,
+    phase: u8,
+    stage: u32,
+) -> Result<(u32, Vec<u8>, u32)> {
+    let matches_tag =
+        |m: &Msg| matches!(m, Msg::Chunk(ph, st, ..) if *ph == phase && *st == stage);
+    if let Some(pos) = pending.iter().position(|(_, m)| matches_tag(m)) {
+        if let Some((_, Msg::Chunk(_, _, c, p, s))) = pending.remove(pos) {
+            return Ok((c, p, s));
+        }
+    }
+    loop {
+        let (from, m) = recv_from(rx)?;
+        if matches_tag(&m) {
+            if let Msg::Chunk(_, _, c, p, s) = m {
+                return Ok((c, p, s));
+            }
+        }
+        pending.push_back((from, m));
+    }
+}
+
+/// Same fused-kernel dispatch as the engine's `produce` (kernels 1/3/4).
+fn produce(
+    codec: &dyn GradCodec,
+    pre: &[f32],
+    received: Option<Vec<(Vec<u8>, u32)>>,
+    range: Range<usize>,
+    base_ctx: &HopCtx,
+) -> Result<(Vec<u8>, u32)> {
+    let received = received.unwrap_or_default();
+    let local = &pre[range.clone()];
+    if received.is_empty() {
+        return Ok((codec.compress(local, range, base_ctx), 1));
+    }
+    let (head, tail) = received.split_at(received.len() - 1);
+    let mut summed = 1u32;
+    if head.is_empty() {
+        let (payload, k) = &tail[0];
+        summed += k;
+        let in_ctx = HopCtx { summed: *k, ..*base_ctx };
+        Ok((codec.decompress_accumulate_recompress(payload, local, range, &in_ctx), summed))
+    } else {
+        let mut acc = local.to_vec();
+        for (payload, k) in head.iter().chain(tail) {
+            summed += k;
+            let in_ctx = HopCtx { summed: *k, ..*base_ctx };
+            codec.decompress_accumulate(payload, &mut acc, range.clone(), &in_ctx);
+        }
+        let out_ctx = HopCtx { summed, ..*base_ctx };
+        Ok((codec.compress(&acc, range, &out_ctx), summed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::make_codecs;
+    use crate::collective::{AllReduceEngine, NetworkModel};
+    use crate::util::rng::Pcg;
+
+    fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| {
+                let mut rng = Pcg::new(seed + i as u64);
+                let mut g = vec![0.0f32; d];
+                rng.fill_normal(&mut g, 0.01);
+                g
+            })
+            .collect()
+    }
+
+    #[test]
+    fn threaded_matches_engine_bit_exactly() {
+        for (scheme, topo, n) in [
+            ("DynamiQ", Topology::Ring, 4),
+            ("DynamiQ", Topology::Butterfly, 4),
+            ("BF16", Topology::Ring, 3),
+            ("MXFP8", Topology::Ring, 4),
+        ] {
+            let g = grads(n, 4096, 11);
+            // engine (sequential simulation)
+            let mut eng_codecs = make_codecs(scheme, n);
+            let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+            let (expect, _) = eng.run(&g, &mut eng_codecs, 5, 0.0);
+            // threaded (real channels)
+            let out = threaded_allreduce(topo, g, make_codecs(scheme, n), 5).unwrap();
+            for wr in &out {
+                assert_eq!(
+                    wr.aggregated, expect,
+                    "{scheme}/{topo:?} worker {} disagrees with engine",
+                    wr.worker
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_workers_agree() {
+        let n = 8;
+        let g = grads(n, 8192, 3);
+        let out = threaded_allreduce(Topology::Butterfly, g, make_codecs("DynamiQ", n), 0).unwrap();
+        for wr in &out[1..] {
+            assert_eq!(wr.aggregated, out[0].aggregated);
+        }
+        assert!(out.iter().all(|w| w.rs_bytes_sent > 0));
+    }
+
+    #[test]
+    fn metadata_max_codecs_work_threaded() {
+        let n = 4;
+        let g = grads(n, 2048, 9);
+        let out = threaded_allreduce(Topology::Ring, g.clone(), make_codecs("MXFP4", n), 1).unwrap();
+        let exact: Vec<f32> = (0..2048).map(|k| g.iter().map(|x| x[k]).sum()).collect();
+        let err = crate::util::vnmse(&exact, &out[0].aggregated);
+        assert!(err < 0.5, "MXFP4 threaded vNMSE {err}");
+    }
+}

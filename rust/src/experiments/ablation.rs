@@ -1,0 +1,69 @@
+//! Fig 7 + Tab 4: DynamiQ's bit-budget ablation (b ∈ {3,4,5,6} vs MXFP8),
+//! plus the group/super-group size sweep DESIGN.md calls out.
+
+use anyhow::Result;
+
+use super::tta::run_workload;
+use super::Ctx;
+use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
+use crate::codec::{GradCodec, HopCtx};
+use crate::collective::Topology;
+use crate::quant::groups::GroupLayout;
+use crate::util::benchkit::Table;
+
+pub fn fig7_tab4_bit_budget(ctx: &Ctx) -> Result<()> {
+    let (label, preset, seed, full_rounds) = super::tta::WORKLOADS[3];
+    let rounds = ctx.rounds(full_rounds);
+    let mut table =
+        Table::new(&["method", "mean vNMSE", "rounds/s (sim)", "final-ppl", "time-to-end"]);
+    let mut body = String::new();
+    for scheme in ["DynamiQ:b=3", "DynamiQ:b=4", "DynamiQ:b=5", "DynamiQ:b=6", "MXFP8"] {
+        let t = run_workload(ctx, label, preset, seed, rounds, scheme, Topology::Ring, false)?;
+        let total = t.records.last().unwrap().sim_time_s;
+        table.row(vec![
+            scheme.into(),
+            format!("{:.5}", t.mean_vnmse()),
+            format!("{:.3}", rounds as f64 / total),
+            format!("{:.4}", t.tta.final_metric().unwrap_or(f64::NAN).exp()),
+            format!("{total:.2}s"),
+        ]);
+    }
+    body.push_str(&table.render());
+    println!("{}", table.render());
+    ctx.save("fig7_tab4_bit_budget", &body, None)
+}
+
+/// Group/super-group size sweep (design-choice ablation): one-shot vNMSE
+/// of the roundtrip on a captured gradient.
+pub fn sweep_group_sizes(ctx: &Ctx) -> Result<()> {
+    let grad = {
+        let cfg = crate::train::TrainConfig {
+            preset: "tiny".into(),
+            scheme: "BF16".into(),
+            n_workers: 2,
+            rounds: 1,
+            ..Default::default()
+        };
+        crate::train::Trainer::new(cfg, &ctx.artifacts)?.capture_gradient(0)?
+    };
+    let mut table = Table::new(&["s(group)", "S(super)", "overhead b/entry", "vNMSE"]);
+    for (s, sg) in [(8, 128), (16, 256), (32, 512), (16, 512), (32, 256), (64, 1024)] {
+        let cfg = DynamiqConfig { layout: GroupLayout::new(s, sg), ..Default::default() };
+        let overhead = cfg.scale_overhead_bits();
+        let mut c = Dynamiq::new(cfg);
+        let hop = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let meta = c.metadata(&grad, &hop);
+        let pre = c.begin_round(&grad, &meta, &hop);
+        let bytes = c.compress(&pre, 0..pre.len(), &hop);
+        let dec = c.decompress(&bytes, 0..pre.len(), &hop);
+        let out = c.end_round(dec, &hop);
+        table.row(vec![
+            s.to_string(),
+            sg.to_string(),
+            format!("{overhead:.3}"),
+            format!("{:.5}", crate::util::vnmse(&grad, &out)),
+        ]);
+    }
+    println!("{}", table.render());
+    ctx.save("sweep_group_sizes", &table.render(), None)
+}

@@ -1,0 +1,154 @@
+//! Gradient-structure experiments: Fig 1 (spatial locality of group /
+//! super-group norms), Fig 3 (F_j CDF + allocation thresholds), Fig 12
+//! (per-super-group vNMSE, non-uniform vs uniform values).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
+use crate::codec::{GradCodec, HopCtx};
+use crate::quant::bitalloc::FastAllocator;
+use crate::quant::groups::{GroupLayout, SuperGroupStats};
+use crate::train::{TrainConfig, Trainer};
+use crate::util::benchkit::Table;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// Capture the first fine-tuning gradient of a workload (Fig 1's setup:
+/// "the first gradient of fine-tuning").
+fn first_gradient(ctx: &Ctx, preset: &str, seed: u64) -> Result<Vec<f32>> {
+    let cfg = TrainConfig {
+        preset: preset.into(),
+        scheme: "BF16".into(),
+        n_workers: 2,
+        rounds: 1,
+        eval_every: 100,
+        seed,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, &ctx.artifacts)?;
+    t.capture_gradient(0)
+}
+
+fn quantiles(mut xs: Vec<f32>, qs: &[f64]) -> Vec<f32> {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter().map(|&q| xs[((xs.len() - 1) as f64 * q) as usize]).collect()
+}
+
+/// Fig 1: group/super-group ℓ2-norm distributions vs a random shuffle.
+pub fn fig1_norm_distributions(ctx: &Ctx) -> Result<()> {
+    let mut body = String::new();
+    for (label, preset, seed) in [("llama-mmlu", "tiny", 44u64), ("gemma-chat", "tiny", 33)] {
+        let grad = first_gradient(ctx, preset, seed)?;
+        let mut shuffled = grad.clone();
+        let mut rng = Pcg::new(99);
+        for i in (1..shuffled.len()).rev() {
+            let j = rng.below(i as u32 + 1) as usize;
+            shuffled.swap(i, j);
+        }
+        let qs = [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99];
+        let mut table = Table::new(&["series", "p1", "p10", "p25", "p50", "p75", "p90", "p99"]);
+        for (series, data, layout) in [
+            ("group(16)", &grad, GroupLayout::new(16, 256)),
+            ("group(16) shuffled", &shuffled, GroupLayout::new(16, 256)),
+            ("super(256)", &grad, GroupLayout::new(256, 256)),
+            ("super(256) shuffled", &shuffled, GroupLayout::new(256, 256)),
+        ] {
+            let norms: Vec<f32> = data
+                .chunks(layout.group)
+                .map(|c| c.iter().map(|&v| v * v).sum::<f32>().sqrt())
+                .collect();
+            let q = quantiles(norms, &qs);
+            let mut row = vec![series.to_string()];
+            row.extend(q.iter().map(|v| format!("{v:.2e}")));
+            table.row(row);
+        }
+        // the headline statistic: fraction of super-groups ≥10× below median
+        let sg_norms: Vec<f32> = grad
+            .chunks(256)
+            .map(|c| c.iter().map(|&v| v * v).sum::<f32>().sqrt())
+            .collect();
+        let med = quantiles(sg_norms.clone(), &[0.5])[0];
+        let frac = sg_norms.iter().filter(|&&n| n < med / 10.0).count() as f64
+            / sg_norms.len() as f64;
+        body.push_str(&format!("\n## {label}\n{}", table.render()));
+        body.push_str(&format!(
+            "super-groups with norm <median/10: {:.1}% (paper: ~20–30%)\n",
+            frac * 100.0
+        ));
+        println!("{label}: tail fraction {:.1}%\n{}", frac * 100.0, table.render());
+    }
+    ctx.save("fig1_locality", &body, None)
+}
+
+/// Fig 3: CDF of F_j with the W={2,4,8} allocation thresholds marked.
+pub fn fig3_fj_cdf(ctx: &Ctx) -> Result<()> {
+    let grad = first_gradient(ctx, "tiny", 44)?;
+    let layout = GroupLayout::paper_default();
+    let stats = SuperGroupStats::compute(&grad, &layout);
+    let mut f = stats.sq_norm.clone();
+    f.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // allocate at b=5 and find the realized thresholds
+    let mut alloc = FastAllocator::paper_default();
+    let entries = vec![layout.super_group; stats.sq_norm.len()];
+    let a = alloc.allocate(&stats.sq_norm, &entries, 5.0 - 0.5625);
+    let hist = a.histogram(&[2, 4, 8]);
+    let mut body = String::new();
+    body.push_str("F_j CDF (deciles):\n");
+    for q in [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0] {
+        let v = f[((f.len() - 1) as f64 * q) as usize];
+        body.push_str(&format!("  p{:<3.0} {v:.3e}\n", q * 100.0));
+    }
+    body.push_str(&format!("allocation histogram (width, count): {hist:?}\n"));
+    body.push_str(&format!("mean bits/entry: {:.3}\n", a.mean_bits(&entries)));
+    println!("{body}");
+    ctx.save("fig3_fj_cdf", &body, None)
+}
+
+/// Fig 12: per-super-group vNMSE CDFs, non-uniform vs uniform values, per
+/// width class.
+pub fn fig12_nonuniform_vs_uniform(ctx: &Ctx) -> Result<()> {
+    let grad = first_gradient(ctx, "tiny", 44)?;
+    let mut body = String::new();
+    for uniform in [false, true] {
+        let cfg = DynamiqConfig { uniform_values: uniform, ..Default::default() };
+        let mut c = Dynamiq::new(cfg);
+        let hop = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let meta = c.metadata(&grad, &hop);
+        let pre = c.begin_round(&grad, &meta, &hop);
+        let bytes = c.compress(&pre, 0..pre.len(), &hop);
+        let dec = c.decompress(&bytes, 0..pre.len(), &hop);
+        // per-super-group vNMSE in reordered space, by width class
+        let widths = c.allocation_original_order();
+        let out = c.end_round(dec, &hop);
+        let mut per_width: std::collections::BTreeMap<u8, Vec<f32>> = Default::default();
+        for (j, chunk) in grad.chunks(256).enumerate() {
+            let oc = &out[j * 256..(j * 256 + chunk.len()).min(out.len())];
+            let num: f32 = chunk.iter().zip(oc).map(|(&a, &b)| (a - b) * (a - b)).sum();
+            let den: f32 = chunk.iter().map(|&a| a * a).sum();
+            if den > 0.0 {
+                per_width.entry(widths[j]).or_default().push(num / den);
+            }
+        }
+        body.push_str(&format!("\n## {}\n", if uniform { "uniform" } else { "non-uniform" }));
+        for (w, errs) in per_width {
+            let q = quantiles(errs.clone(), &[0.25, 0.5, 0.75, 0.95]);
+            body.push_str(&format!(
+                "  w={w}: n={:<5} vNMSE p25 {:.2e} p50 {:.2e} p75 {:.2e} p95 {:.2e}\n",
+                errs.len(),
+                q[0],
+                q[1],
+                q[2],
+                q[3]
+            ));
+        }
+    }
+    println!("{body}");
+    ctx.save("fig12_nonuniform_vs_uniform", &body, None)
+}
+
+/// JSON helper export for plotting.
+#[allow(dead_code)]
+fn curve_json(points: &[(f64, f64)]) -> Json {
+    Json::Arr(points.iter().map(|&(a, b)| Json::Arr(vec![Json::Num(a), Json::Num(b)])).collect())
+}

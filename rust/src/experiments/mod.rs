@@ -1,0 +1,102 @@
+//! Experiment drivers: one regenerator per table and figure of the paper's
+//! evaluation (see DESIGN.md's experiment index). Each driver prints its
+//! table/series to stdout and writes machine-readable output under
+//! `results/`.
+//!
+//! Workload mapping (DESIGN.md substitutions — no BERT/LLaMA/Gemma here):
+//!
+//! | paper workload       | ours                                   |
+//! |----------------------|----------------------------------------|
+//! | BERT-large MaskedLM  | `tiny` LM, corpus A (perplexity)       |
+//! | LLaMA-1B Chat        | `tiny` LM, corpus B (perplexity)       |
+//! | Gemma-1B Chat        | `small` LM, corpus C (perplexity)      |
+//! | LLaMA-1B MMLU        | `small` LM, corpus D (perplexity)      |
+
+pub mod ablation;
+pub mod locality;
+pub mod parametric;
+pub mod scalability;
+pub mod tables;
+pub mod tta;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Shared context for all experiment drivers.
+pub struct Ctx {
+    pub artifacts: String,
+    pub results: String,
+    /// scale factor for round counts (1.0 = full paper-shaped runs;
+    /// CI uses 0.2 for speed)
+    pub scale: f64,
+}
+
+impl Ctx {
+    pub fn new(artifacts: &str, results: &str, scale: f64) -> Self {
+        std::fs::create_dir_all(results).ok();
+        Ctx { artifacts: artifacts.into(), results: results.into(), scale }
+    }
+
+    pub fn rounds(&self, full: u32) -> u32 {
+        ((full as f64 * self.scale) as u32).max(10)
+    }
+
+    pub fn save(&self, id: &str, body: &str, json: Option<Json>) -> Result<()> {
+        std::fs::write(format!("{}/{}.txt", self.results, id), body)?;
+        if let Some(j) = json {
+            std::fs::write(format!("{}/{}.json", self.results, id), j.dump())?;
+        }
+        Ok(())
+    }
+}
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "tab1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "tab4", "fig8", "fig9", "tab5",
+    "fig10", "fig11", "fig12", "fig13", "fig17", "fig18", "tab2", "tab3", "tab6",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    println!("\n=== {id} ===");
+    match id {
+        "tab1" => tables::tab1_workloads(ctx),
+        "tab2" => tables::tab2_memtraffic(ctx),
+        "fig13" => tables::fig13_butterfly(ctx),
+        "fig1" => locality::fig1_norm_distributions(ctx),
+        "fig3" => locality::fig3_fj_cdf(ctx),
+        "fig12" => locality::fig12_nonuniform_vs_uniform(ctx),
+        "fig4" | "fig5" | "fig14" => tta::fig4_5_tta_ring(ctx),
+        "fig6" => tta::fig6_breakdown(ctx),
+        "fig8" | "fig15" => tta::fig8_shared_network(ctx),
+        "fig9" | "fig16" | "tab5" => tta::fig9_tab5_butterfly(ctx),
+        "fig17" => tta::fig17_bandwidth_trace(ctx),
+        "fig18" | "tab3" => tta::tab3_fig18_vnmse(ctx),
+        "fig7" | "tab4" => ablation::fig7_tab4_bit_budget(ctx),
+        "fig10" => scalability::fig10_workers_2_8(ctx),
+        "fig11" => scalability::fig11_workers_8_64(ctx),
+        "tab6" => parametric::tab6_components(ctx),
+        "sweep_s" => ablation::sweep_group_sizes(ctx),
+        other => anyhow::bail!("unknown experiment id {other} (known: {ALL_IDS:?})"),
+    }
+}
+
+pub fn run_all(ctx: &Ctx) -> Result<()> {
+    // dedupe ids that share a driver
+    let mut done = std::collections::HashSet::new();
+    for id in ALL_IDS {
+        let key = match *id {
+            "fig5" | "fig14" => "fig4",
+            "fig15" => "fig8",
+            "fig16" | "tab5" => "fig9",
+            "tab3" => "fig18",
+            "tab4" => "fig7",
+            k => k,
+        };
+        if done.insert(key) {
+            run(key, ctx)?;
+        }
+    }
+    Ok(())
+}

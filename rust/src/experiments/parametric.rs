@@ -1,0 +1,94 @@
+//! Tab 6: cumulative component ablation — uniform → non-uniform →
+//! +variable bitwidth → +hierarchical → +correlated rounding — measured as
+//! mean vNMSE over multi-round multi-worker all-reduces of real gradients
+//! (group size 32, dropping to 16 when hierarchical scales are on, as the
+//! paper's footnote specifies).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
+use crate::codec::GradCodec;
+use crate::collective::{AllReduceEngine, NetworkModel, Topology};
+use crate::quant::groups::GroupLayout;
+use crate::quant::rounding::Rounding;
+use crate::train::{TrainConfig, Trainer};
+use crate::util::benchkit::Table;
+
+fn variant(name: &str) -> DynamiqConfig {
+    let base = DynamiqConfig {
+        layout: GroupLayout::new(32, 512),
+        hierarchical: false,
+        variable_bitwidth: false,
+        uniform_values: true,
+        rounding: Rounding::Independent,
+        ..Default::default()
+    };
+    match name {
+        "uniform" => base,
+        "nonuniform" => DynamiqConfig { uniform_values: false, ..base },
+        "+vba" => DynamiqConfig { uniform_values: false, variable_bitwidth: true, ..base },
+        "+hier" => DynamiqConfig {
+            uniform_values: false,
+            variable_bitwidth: true,
+            hierarchical: true,
+            layout: GroupLayout::new(16, 256),
+            ..base
+        },
+        "+corr" => DynamiqConfig {
+            uniform_values: false,
+            variable_bitwidth: true,
+            hierarchical: true,
+            layout: GroupLayout::new(16, 256),
+            rounding: Rounding::Correlated,
+            ..base
+        },
+        _ => unreachable!(),
+    }
+}
+
+pub fn tab6_components(ctx: &Ctx) -> Result<()> {
+    // capture a few real gradients from two workloads
+    let mut table = Table::new(&["variant", "llama-chat", "llama-mmlu"]);
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    for (preset, seed) in [("tiny", 22u64), ("tiny", 44)] {
+        let cfg = TrainConfig {
+            preset: preset.into(),
+            scheme: "BF16".into(),
+            n_workers: 4,
+            rounds: 1,
+            seed,
+            ..Default::default()
+        };
+        let mut tr = Trainer::new(cfg, &ctx.artifacts)?;
+        // 4 per-worker gradients for the multi-worker error measurement
+        let mut grads = Vec::new();
+        for w in 0..4 {
+            grads.push(tr.capture_worker_gradient(w)?);
+        }
+        let mut col = Vec::new();
+        for name in ["uniform", "nonuniform", "+vba", "+hier", "+corr"] {
+            let rounds = 6u32;
+            let mut total = 0.0;
+            for r in 0..rounds {
+                let mut codecs: Vec<Box<dyn GradCodec>> = (0..4)
+                    .map(|_| Box::new(Dynamiq::new(variant(name))) as Box<dyn GradCodec>)
+                    .collect();
+                let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+                let (_, rep) = eng.run(&grads, &mut codecs, r, 0.0);
+                total += rep.vnmse;
+            }
+            col.push(total / rounds as f64);
+        }
+        cols.push(col);
+    }
+    for (i, name) in ["uniform", "nonuniform", "+vba", "+hier", "+corr"].iter().enumerate() {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.5}", cols[0][i]),
+            format!("{:.5}", cols[1][i]),
+        ]);
+    }
+    println!("{}", table.render());
+    ctx.save("tab6_components", &table.render(), None)
+}

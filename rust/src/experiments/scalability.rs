@@ -1,0 +1,107 @@
+//! §6.1 scalability: Fig 10 (2–8 workers, `small` model) and Fig 11
+//! (8–64 workers, `tiny`/TinyBERT-scale). Measures vNMSE and the final
+//! loss gap vs BF16 as the worker count grows; THC switches to 12-bit
+//! aggregation above 8 workers per the paper's rule.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::collective::Topology;
+use crate::train::{TrainConfig, Trainer};
+use crate::util::benchkit::Table;
+use crate::util::json::Json;
+
+fn run(
+    ctx: &Ctx,
+    preset: &str,
+    scheme: &str,
+    n: usize,
+    rounds: u32,
+    seed: u64,
+) -> Result<Trainer> {
+    let cfg = TrainConfig {
+        preset: preset.into(),
+        scheme: scheme.into(),
+        n_workers: n,
+        topology: Topology::Ring,
+        rounds,
+        lr: if preset == "tiny" { 3e-3 } else { 1e-3 },
+        lr_total_iters: (rounds as f32 * 0.8) as u32,
+        eval_every: (rounds / 6).max(2),
+        corpus_tokens: 100_000 + 4_000 * n,
+        seed,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, &ctx.artifacts)?;
+    t.run()?;
+    Ok(t)
+}
+
+fn scaling_table(
+    ctx: &Ctx,
+    id: &str,
+    preset: &str,
+    workers: &[usize],
+    schemes: &[&str],
+    rounds: u32,
+) -> Result<()> {
+    let mut body = String::new();
+    let mut json = Vec::new();
+    let mut table = Table::new(&["scheme", "n", "mean vNMSE", "final-loss", "Δloss vs BF16"]);
+    for &n in workers {
+        let bf16 = run(ctx, preset, "BF16", n, rounds, 5)?;
+        let base = bf16.tta.final_metric().unwrap_or(f64::NAN);
+        table.row(vec![
+            "BF16".into(),
+            n.to_string(),
+            "0".into(),
+            format!("{base:.4}"),
+            "—".into(),
+        ]);
+        for &scheme in schemes {
+            let t = run(ctx, preset, scheme, n, rounds, 5)?;
+            let f = t.tta.final_metric().unwrap_or(f64::NAN);
+            table.row(vec![
+                scheme.into(),
+                n.to_string(),
+                format!("{:.5}", t.mean_vnmse()),
+                format!("{f:.4}"),
+                format!("{:+.4}", f - base),
+            ]);
+            json.push(Json::obj(vec![
+                ("scheme", Json::Str(scheme.into())),
+                ("n", Json::Num(n as f64)),
+                ("vnmse", Json::Num(t.mean_vnmse())),
+                ("final_loss", Json::Num(f)),
+                ("bf16_loss", Json::Num(base)),
+            ]));
+        }
+    }
+    body.push_str(&table.render());
+    println!("{}", table.render());
+    ctx.save(id, &body, Some(Json::Arr(json)))
+}
+
+/// Fig 10: 2–8 workers on the `small` model.
+pub fn fig10_workers_2_8(ctx: &Ctx) -> Result<()> {
+    scaling_table(
+        ctx,
+        "fig10_scalability_small",
+        "tiny",
+        &[2, 4, 8],
+        &["DynamiQ", "MXFP8", "MXFP4", "THC", "OmniReduce"],
+        ctx.rounds(40),
+    )
+}
+
+/// Fig 11: 8–64 workers on the TinyBERT-scale model.
+pub fn fig11_workers_8_64(ctx: &Ctx) -> Result<()> {
+    scaling_table(
+        ctx,
+        "fig11_scalability_tiny",
+        "tiny",
+        &[8, 16, 32, 64],
+        &["DynamiQ", "MXFP8", "THC", "OmniReduce"],
+        ctx.rounds(40),
+    )
+}

@@ -1,0 +1,72 @@
+//! Static-ish tables: Tab 1 (workload configs), Tab 2 (DRAM traffic
+//! model), Fig 13 (butterfly arborescence rendering).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::collective::Topology;
+use crate::metrics::memtraffic::traffic_model;
+use crate::util::benchkit::Table;
+
+pub fn tab1_workloads(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(&["workload", "preset", "tokens/batch", "batch", "LR", "end-factor"]);
+    for (label, preset, lr) in [
+        ("bert-mlm", "tiny", 3e-3f32),
+        ("llama-chat", "tiny", 3e-3),
+        ("gemma-chat", "small", 1e-3),
+        ("llama-mmlu", "small", 1e-3),
+    ] {
+        let (batch, seq) = if preset == "tiny" { (8, 64) } else { (8, 128) };
+        table.row(vec![
+            label.into(),
+            preset.into(),
+            (batch * seq).to_string(),
+            batch.to_string(),
+            format!("{lr:.0e}"),
+            "1/8".into(),
+        ]);
+    }
+    println!("{}", table.render());
+    ctx.save("tab1_workloads", &table.render(), None)
+}
+
+pub fn tab2_memtraffic(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(&["scheme", "model (fixed + hop·AR)", "n=2", "n=4", "n=8"]);
+    for s in ["BF16", "DynamiQ", "MXFP8", "THC"] {
+        let m = traffic_model(s);
+        table.row(vec![
+            s.into(),
+            format!("{} + {}·AR", m.fixed, m.per_hop),
+            format!("{:.2}", m.bytes_per_coordinate(2)),
+            format!("{:.2}", m.bytes_per_coordinate(4)),
+            format!("{:.2}", m.bytes_per_coordinate(8)),
+        ]);
+    }
+    println!("{}", table.render());
+    ctx.save("tab2_memtraffic", &table.render(), None)
+}
+
+/// Fig 13: render the butterfly in-arborescence for one chunk.
+pub fn fig13_butterfly(ctx: &Ctx) -> Result<()> {
+    let n = 8;
+    let chunk = 7;
+    let parent = Topology::Butterfly.arborescence(n, chunk);
+    let mut body = format!("butterfly reduce-scatter arborescence, n={n}, chunk={chunk}:\n");
+    for (w, &(p, stage)) in parent.iter().enumerate() {
+        if w == chunk {
+            body.push_str(&format!("  worker {w}  (sink)\n"));
+        } else {
+            body.push_str(&format!("  worker {w} --stage {stage}--> worker {p}\n"));
+        }
+    }
+    // subtree sizes (the §B error-analysis quantity)
+    let mut size = vec![1usize; n];
+    let mut order: Vec<usize> = (0..n).filter(|&w| w != chunk).collect();
+    order.sort_by_key(|&w| parent[w].1);
+    for &w in &order {
+        size[parent[w].0 as usize] += size[w];
+    }
+    body.push_str(&format!("subtree sizes: {size:?} (sink aggregates {})\n", size[chunk]));
+    println!("{body}");
+    ctx.save("fig13_butterfly", &body, None)
+}

@@ -1,0 +1,256 @@
+//! Time-to-accuracy experiments: Figs 4/5/14 (ring), Fig 6 (breakdown),
+//! Fig 8/15 (shared network), Fig 9/16 + Tab 5 (butterfly), Fig 17
+//! (bandwidth trace), Fig 18 + Tab 3 (vNMSE over training).
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::collective::Topology;
+use crate::train::{TrainConfig, Trainer};
+use crate::util::benchkit::Table;
+use crate::util::json::Json;
+
+/// The four paper workloads mapped onto our presets/corpora (see
+/// `experiments` module docs).
+pub const WORKLOADS: &[(&str, &str, u64, u32)] = &[
+    // (label, preset, corpus seed, full rounds)
+    //
+    // NOTE: the harness is preset-agnostic (`small` = 3.7M and `base` =
+    // 91M params run through the identical code path), but the recorded
+    // experiment suite uses `tiny` because this image exposes a single
+    // CPU core — see EXPERIMENTS.md §Scale.
+    ("bert-mlm", "tiny", 11, 120),
+    ("llama-chat", "tiny", 22, 120),
+    ("gemma-chat", "tiny", 33, 120),
+    ("llama-mmlu", "tiny", 44, 120),
+];
+
+pub const SCHEMES_MAIN: &[&str] =
+    &["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
+
+pub fn run_workload(
+    ctx: &Ctx,
+    label: &str,
+    preset: &str,
+    seed: u64,
+    rounds: u32,
+    scheme: &str,
+    topology: Topology,
+    shared: bool,
+) -> Result<Trainer> {
+    let cfg = TrainConfig {
+        preset: preset.into(),
+        scheme: scheme.into(),
+        n_workers: 4,
+        topology,
+        shared_network: shared,
+        rounds,
+        lr: if preset == "tiny" { 3e-3 } else { 1e-3 },
+        lr_end_factor: 1.0 / 8.0,
+        lr_total_iters: (rounds as f32 * 0.8) as u32,
+        eval_every: (rounds / 12).max(2),
+        eval_batches: 4,
+        corpus_tokens: 200_000,
+        seed,
+    };
+    let mut t = Trainer::new(cfg, &ctx.artifacts)?;
+    t.run()?;
+    let _ = label;
+    Ok(t)
+}
+
+/// Figs 4, 5, 14: TTA on ring for all workloads × schemes. Prints, per
+/// workload, each scheme's final eval perplexity and the relative time to
+/// reach 105%/102%/101% of BF16's final perplexity (Fig 4's bar data), plus
+/// the full TTA curves (Fig 5/14 series).
+pub fn fig4_5_tta_ring(ctx: &Ctx) -> Result<()> {
+    let mut body = String::new();
+    let mut json_out: Vec<Json> = Vec::new();
+    for &(label, preset, seed, full_rounds) in WORKLOADS {
+        let rounds = ctx.rounds(full_rounds);
+        // BF16 baseline first: defines the targets
+        let bf16 = run_workload(ctx, label, preset, seed, rounds, "BF16", Topology::Ring, false)?;
+        let bf16_final = bf16.tta.final_metric().unwrap_or(f64::NAN);
+        let bf16_time = bf16.records.last().unwrap().sim_time_s;
+        let mut table = Table::new(&[
+            "scheme", "final-ppl", "ppl/bf16", "t@105%", "t@102%", "t@101%", "speedup@105%",
+        ]);
+        let mut curves = Vec::new();
+        for &scheme in SCHEMES_MAIN {
+            let t = if scheme == "BF16" {
+                bf16.tta.clone()
+            } else {
+                run_workload(ctx, label, preset, seed, rounds, scheme, Topology::Ring, false)?.tta
+            };
+            let final_m = t.final_metric().unwrap_or(f64::NAN);
+            let mut row = vec![
+                scheme.to_string(),
+                format!("{:.4}", final_m.exp()),
+                format!("{:.4}", (final_m - bf16_final).exp()),
+            ];
+            let mut speedup = String::from("—");
+            for (i, pct) in [1.05f64, 1.02, 1.01].iter().enumerate() {
+                // target in loss space: log(ppl_target) = bf16_final + ln(pct)
+                let target = bf16_final + (*pct).ln();
+                match t.time_to(target, true) {
+                    Some(time) => {
+                        row.push(format!("{time:.2}s"));
+                        if i == 0 {
+                            let bt = bf16.tta.time_to(target, true).unwrap_or(bf16_time);
+                            speedup = format!("{:.2}×", bt / time);
+                        }
+                    }
+                    None => row.push("—".into()),
+                }
+            }
+            row.push(speedup);
+            table.row(row);
+            curves.push(Json::obj(vec![
+                ("scheme", Json::Str(scheme.into())),
+                (
+                    "curve",
+                    Json::Arr(
+                        t.points
+                            .iter()
+                            .map(|&(t, m)| Json::Arr(vec![Json::Num(t), Json::Num(m)]))
+                            .collect(),
+                    ),
+                ),
+            ]));
+        }
+        body.push_str(&format!("\n## {label} ({preset}, ring, 4 workers)\n"));
+        body.push_str(&format!("BF16 final ppl {:.4}\n", bf16_final.exp()));
+        body.push_str(&table.render());
+        println!("{label}:\n{}", table.render());
+        json_out.push(Json::obj(vec![
+            ("workload", Json::Str(label.into())),
+            ("bf16_final_loss", Json::Num(bf16_final)),
+            ("curves", Json::Arr(curves)),
+        ]));
+    }
+    ctx.save("fig4_5_tta_ring", &body, Some(Json::Arr(json_out)))
+}
+
+/// Fig 6: per-round time breakdown (compute / exposed comm / compression).
+pub fn fig6_breakdown(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(&["workload", "scheme", "compute", "exposed-comm", "compression", "total"]);
+    let mut body = String::new();
+    for &(label, preset, seed, _) in &WORKLOADS[..2] {
+        for &scheme in &["BF16", "DynamiQ", "MXFP8", "THC"] {
+            let t = run_workload(ctx, label, preset, seed, 12, scheme, Topology::Ring, false)?;
+            let r = &t.records[5].time;
+            table.row(vec![
+                label.into(),
+                scheme.into(),
+                format!("{:.2}ms", r.compute_s * 1e3),
+                format!("{:.2}ms", r.exposed_comm_s * 1e3),
+                format!("{:.2}ms", r.compression_s * 1e3),
+                format!("{:.2}ms", r.total_s() * 1e3),
+            ]);
+        }
+    }
+    body.push_str(&table.render());
+    println!("{}", table.render());
+    ctx.save("fig6_breakdown", &body, None)
+}
+
+/// Fig 8 / 15: TTA over a shared network (3 background tenants).
+pub fn fig8_shared_network(ctx: &Ctx) -> Result<()> {
+    let mut body = String::new();
+    for &(label, preset, seed, full_rounds) in &WORKLOADS[1..3] {
+        let rounds = ctx.rounds(full_rounds);
+        let mut table = Table::new(&["scheme", "isolated", "shared", "slowdown"]);
+        for &scheme in &["BF16", "DynamiQ", "MXFP8"] {
+            let iso = run_workload(ctx, label, preset, seed, rounds, scheme, Topology::Ring, false)?;
+            let sh = run_workload(ctx, label, preset, seed, rounds, scheme, Topology::Ring, true)?;
+            let ti = iso.records.last().unwrap().sim_time_s;
+            let ts = sh.records.last().unwrap().sim_time_s;
+            table.row(vec![
+                scheme.into(),
+                format!("{ti:.2}s"),
+                format!("{ts:.2}s"),
+                format!("{:.2}×", ts / ti),
+            ]);
+        }
+        body.push_str(&format!("\n## {label}\n"));
+        body.push_str(&table.render());
+        println!("{label}:\n{}", table.render());
+    }
+    ctx.save("fig8_shared_network", &body, None)
+}
+
+/// Fig 9 / 16 + Tab 5: butterfly all-reduce TTA + final accuracy + vNMSE.
+pub fn fig9_tab5_butterfly(ctx: &Ctx) -> Result<()> {
+    let (label, preset, seed, full_rounds) = WORKLOADS[3];
+    let rounds = ctx.rounds(full_rounds);
+    let mut table = Table::new(&["scheme", "final-ppl", "ppl/bf16", "mean vNMSE", "time"]);
+    let mut bf16_final = f64::NAN;
+    let mut body = String::new();
+    for &scheme in &["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4"] {
+        let t = run_workload(ctx, label, preset, seed, rounds, scheme, Topology::Butterfly, false)?;
+        let f = t.tta.final_metric().unwrap_or(f64::NAN);
+        if scheme == "BF16" {
+            bf16_final = f;
+        }
+        table.row(vec![
+            scheme.into(),
+            format!("{:.4}", f.exp()),
+            format!("{:.4}", (f - bf16_final).exp()),
+            format!("{:.5}", t.mean_vnmse()),
+            format!("{:.2}s", t.records.last().unwrap().sim_time_s),
+        ]);
+    }
+    body.push_str(&table.render());
+    println!("{}", table.render());
+    ctx.save("fig9_tab5_butterfly", &body, None)
+}
+
+/// Fig 17: bandwidth usage over time (per reduce-scatter stage trace).
+pub fn fig17_bandwidth_trace(ctx: &Ctx) -> Result<()> {
+    let (label, preset, seed, _) = WORKLOADS[3];
+    let mut body = String::new();
+    for &scheme in &["BF16", "DynamiQ", "MXFP8"] {
+        let t = run_workload(ctx, label, preset, seed, 10, scheme, Topology::Ring, false)?;
+        let r = &t.records[5];
+        body.push_str(&format!(
+            "{scheme}: compute {:.2}ms then comm stages(ms) {:?} | bytes/round {}\n",
+            r.time.compute_s * 1e3,
+            t.records[5]
+                .time
+                .exposed_comm_s, // summary
+            r.wire_bytes
+        ));
+    }
+    println!("{body}");
+    ctx.save("fig17_bandwidth_trace", &body, None)
+}
+
+/// Tab 3 + Fig 18: vNMSE per workload (average + per-round trace).
+pub fn tab3_fig18_vnmse(ctx: &Ctx) -> Result<()> {
+    let mut table = Table::new(&["scheme", "bert-mlm", "llama-chat", "gemma-chat", "llama-mmlu"]);
+    let mut per_scheme: Vec<(String, Vec<String>)> =
+        SCHEMES_MAIN.iter().skip(1).map(|s| (s.to_string(), Vec::new())).collect();
+    let mut traces: Vec<Json> = Vec::new();
+    for &(label, preset, seed, _) in WORKLOADS {
+        let rounds = ctx.rounds(40);
+        for (scheme, cells) in per_scheme.iter_mut() {
+            let t = run_workload(ctx, label, preset, seed, rounds, scheme, Topology::Ring, false)?;
+            cells.push(format!("{:.5}", t.mean_vnmse()));
+            traces.push(Json::obj(vec![
+                ("workload", Json::Str(label.into())),
+                ("scheme", Json::Str(scheme.clone())),
+                (
+                    "vnmse",
+                    Json::from_f64s(&t.records.iter().map(|r| r.vnmse).collect::<Vec<_>>()),
+                ),
+            ]));
+        }
+    }
+    for (scheme, cells) in per_scheme {
+        let mut row = vec![scheme];
+        row.extend(cells);
+        table.row(row);
+    }
+    println!("{}", table.render());
+    ctx.save("tab3_fig18_vnmse", &table.render(), Some(Json::Arr(traces)))
+}

@@ -1,0 +1,27 @@
+//! # DynamiQ — compressed multi-hop all-reduce (paper reproduction)
+//!
+//! A three-layer reproduction of *“DynamiQ: Accelerating Gradient
+//! Synchronization using Compressed Multi-hop All-reduce”*:
+//!
+//! - **L3 (this crate)** — the coordinator: multi-worker data-parallel
+//!   training runtime, ring/butterfly all-reduce over a simulated network,
+//!   the DynamiQ codec and all paper baselines, experiment drivers for
+//!   every table/figure.
+//! - **L2 (python/compile/model.py)** — jax transformer fwd/bwd + AdamW,
+//!   AOT-lowered to HLO text under `artifacts/`, executed from rust via
+//!   PJRT (`runtime`).
+//! - **L1 (python/compile/kernels/)** — pallas compression kernels
+//!   (interpret mode), byte-compatible with the rust codec via the shared
+//!   counter PRNG ([`util::rng`]).
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod codec;
+pub mod collective;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod train;
+pub mod quant;
+pub mod util;

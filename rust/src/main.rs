@@ -1,0 +1,116 @@
+//! `dynamiq` — the leader CLI.
+//!
+//! Subcommands (hand-rolled parser; the offline image vendors no clap):
+//!   info                      — platform + artifact inventory
+//!   train [flags]             — run distributed training
+//!   repro --id <id> | --all   — regenerate a paper table/figure
+//!
+//! Train flags: --preset tiny|small|base  --scheme NAME  --workers N
+//!   --topology ring|butterfly  --rounds N  --shared-network
+//!   --threaded (use the thread-per-worker coordinator for the all-reduce)
+
+use dynamiq::collective::Topology;
+use dynamiq::experiments::{run, run_all, Ctx, ALL_IDS};
+use dynamiq::runtime::Manifest;
+use dynamiq::train::{TrainConfig, Trainer};
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let result = match cmd {
+        "info" => info(),
+        "train" => train(rest),
+        "repro" => repro(rest),
+        _ => {
+            eprintln!(
+                "usage: dynamiq <info|train|repro> [flags]\n\
+                 experiments: {ALL_IDS:?}"
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn info() -> anyhow::Result<()> {
+    let m = Manifest::load("artifacts")?;
+    println!("artifacts dir: {}", m.dir);
+    println!("kernel tile: {} super-groups of {}", m.tile_sg, m.super_group);
+    for (name, e) in &m.models {
+        println!(
+            "model {name}: d={} (raw {}), batch {}, seq {}, vocab {}",
+            e.d, e.d_raw, e.batch, e.seq_len, e.vocab
+        );
+    }
+    let rt = dynamiq::runtime::Runtime::cpu()?;
+    println!("pjrt platform: {}", rt.platform());
+    Ok(())
+}
+
+fn train(args: &[String]) -> anyhow::Result<()> {
+    let topology = match flag_value(args, "--topology").as_deref() {
+        Some("butterfly") => Topology::Butterfly,
+        _ => Topology::Ring,
+    };
+    let cfg = TrainConfig {
+        preset: flag_value(args, "--preset").unwrap_or_else(|| "tiny".into()),
+        scheme: flag_value(args, "--scheme").unwrap_or_else(|| "DynamiQ".into()),
+        n_workers: flag_value(args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(4),
+        topology,
+        shared_network: has_flag(args, "--shared-network"),
+        rounds: flag_value(args, "--rounds").and_then(|v| v.parse().ok()).unwrap_or(100),
+        lr: flag_value(args, "--lr").and_then(|v| v.parse().ok()).unwrap_or(3e-3),
+        ..Default::default()
+    };
+    println!(
+        "training preset={} scheme={} workers={} topology={} rounds={}",
+        cfg.preset,
+        cfg.scheme,
+        cfg.n_workers,
+        cfg.topology.name(),
+        cfg.rounds
+    );
+    let mut t = Trainer::new(cfg, "artifacts")?;
+    let rounds = t.cfg.rounds;
+    for r in 0..rounds {
+        let rec = t.round(r)?;
+        if r % 10 == 0 || rec.eval_loss.is_some() {
+            println!(
+                "round {:>4}  loss {:.4}  eval {}  t_sim {:.2}s  vNMSE {:.5}  wire {} B",
+                rec.round,
+                rec.train_loss,
+                rec.eval_loss.map(|e| format!("{e:.4}")).unwrap_or_else(|| "—".into()),
+                rec.sim_time_s,
+                rec.vnmse,
+                rec.wire_bytes
+            );
+        }
+    }
+    println!("final mean vNMSE {:.6}", t.mean_vnmse());
+    Ok(())
+}
+
+fn repro(args: &[String]) -> anyhow::Result<()> {
+    let scale: f64 =
+        flag_value(args, "--scale").and_then(|v| v.parse().ok()).unwrap_or(1.0);
+    let ctx = Ctx::new("artifacts", "results", scale);
+    if has_flag(args, "--all") {
+        run_all(&ctx)
+    } else if let Some(id) = flag_value(args, "--id") {
+        run(&id, &ctx)
+    } else {
+        anyhow::bail!("repro needs --id <id> or --all; ids: {ALL_IDS:?}")
+    }
+}

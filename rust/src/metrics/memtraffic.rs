@@ -1,0 +1,102 @@
+//! Table 2: estimated DRAM (HBM) memory transactions per gradient
+//! coordinate for each all-reduce compression scheme, excluding NIC↔GPU
+//! transfers. `AR = (n−1)/n` is the per-worker data fraction touched in
+//! each of reduce-scatter and all-gather.
+//!
+//! Derivations (bytes per f32 coordinate, fused single-pass kernels):
+//!
+//! - **BF16**: fixed cost — read f32 grad + write bf16 + final read bf16 +
+//!   write f32 (4+2+2+4 rounded by the paper to 4 + …); per-hop: read
+//!   partial (2) + read local (… ) — the paper reports `4 + 4·AR`.
+//! - **DynamiQ**: fixed — read f32 (4), stats pass read (4), reorder
+//!   write+read (5/8 each packed…), unpack/add-mean write f32 (4) ⇒ ~22;
+//!   per-hop fused DAR: read compressed (≈0.69 = 5.5 b), read local f32
+//!   (4), write compressed (0.69), plus all-gather decompress read + write
+//!   f32 ⇒ 11.875·AR.
+//! - **MXFP8**: fixed 18; per-hop decode-add-encode without reorder:
+//!   read code (1.06) + read local (4) + write (1.06) + ag read/write ⇒
+//!   13·AR.
+//! - **THC**: Hadamard transform needs O(log d) full passes over the
+//!   vector (the paper's measured ≈74 fixed bytes) but hop cost is pure
+//!   integer add: read 1 + write 1 = 2·AR.
+//!
+//! We keep the paper's headline coefficients as the model (they were
+//! measured with Nsight on the authors' kernels) and expose the formula
+//! so the Fig. 6 compression-overhead estimate uses the same accounting.
+
+/// Scheme coefficients: traffic = fixed + per_hop · AR (bytes/coordinate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrafficModel {
+    pub fixed: f64,
+    pub per_hop: f64,
+}
+
+impl TrafficModel {
+    pub fn bytes_per_coordinate(&self, n_workers: usize) -> f64 {
+        let ar = (n_workers as f64 - 1.0) / n_workers as f64;
+        self.fixed + self.per_hop * ar
+    }
+}
+
+/// Table 2 rows.
+pub fn traffic_model(scheme: &str) -> TrafficModel {
+    match scheme {
+        "BF16" => TrafficModel { fixed: 4.0, per_hop: 4.0 },
+        "DynamiQ" => TrafficModel { fixed: 22.0, per_hop: 11.875 },
+        "MXFP8" => TrafficModel { fixed: 18.0, per_hop: 13.0 },
+        "MXFP6" => TrafficModel { fixed: 18.0, per_hop: 12.0 },
+        "MXFP4" => TrafficModel { fixed: 18.0, per_hop: 11.0 },
+        "THC" => TrafficModel { fixed: 74.0, per_hop: 2.0 },
+        // OmniReduce moves ~half the data in bf16 + index handling
+        "OmniReduce" => TrafficModel { fixed: 12.0, per_hop: 4.0 },
+        other => panic!("unknown scheme {other}"),
+    }
+}
+
+/// GPU memory-bound kernel time estimate: bytes moved / HBM bandwidth.
+/// A6000 Ada ≈ 960 GB/s; elementwise kernels reach ~80% of peak.
+pub fn kernel_time_s(scheme: &str, d: usize, n_workers: usize) -> f64 {
+    const HBM_BPS: f64 = 960.0e9 * 0.8;
+    traffic_model(scheme).bytes_per_coordinate(n_workers) * d as f64 / HBM_BPS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table2_values_at_4_workers() {
+        // AR = 3/4
+        let ar = 0.75;
+        assert_eq!(traffic_model("BF16").bytes_per_coordinate(4), 4.0 + 4.0 * ar);
+        assert_eq!(traffic_model("DynamiQ").bytes_per_coordinate(4), 22.0 + 11.875 * ar);
+        assert_eq!(traffic_model("THC").bytes_per_coordinate(4), 74.0 + 2.0 * ar);
+    }
+
+    #[test]
+    fn dynamiq_matches_mxfp8_traffic_class() {
+        // §5.1: DynamiQ "maintains parity with the memory transaction
+        // volume of MXFP8" — within ~15% across worker counts
+        for n in [2, 4, 8, 64] {
+            let dq = traffic_model("DynamiQ").bytes_per_coordinate(n);
+            let fp8 = traffic_model("MXFP8").bytes_per_coordinate(n);
+            assert!((dq / fp8 - 1.0).abs() < 0.15, "n={n}: {dq} vs {fp8}");
+        }
+    }
+
+    #[test]
+    fn thc_dominates_on_fixed_cost() {
+        // THC's Hadamard passes dwarf everyone's fixed traffic
+        for s in ["BF16", "DynamiQ", "MXFP8"] {
+            assert!(traffic_model("THC").fixed > 3.0 * traffic_model(s).fixed / 2.0);
+        }
+    }
+
+    #[test]
+    fn kernel_time_scales_linearly() {
+        let t1 = kernel_time_s("DynamiQ", 1_000_000, 4);
+        let t2 = kernel_time_s("DynamiQ", 2_000_000, 4);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert!(t1 > 0.0);
+    }
+}

@@ -1,0 +1,55 @@
+//! Measurement substrate: the Table-2 DRAM-traffic model, the Fig-6 round
+//! time decomposition, and TTA bookkeeping.
+
+pub mod memtraffic;
+pub mod timemodel;
+
+pub use timemodel::{ComputeModel, RoundTime};
+
+/// Time-to-accuracy recorder: (simulated seconds, metric) samples.
+#[derive(Clone, Debug, Default)]
+pub struct TtaCurve {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TtaCurve {
+    pub fn push(&mut self, t_s: f64, metric: f64) {
+        self.points.push((t_s, metric));
+    }
+
+    /// First time at which the metric reaches `target` (for lower-is-better
+    /// metrics like loss/perplexity pass `lower_is_better = true`).
+    pub fn time_to(&self, target: f64, lower_is_better: bool) -> Option<f64> {
+        self.points
+            .iter()
+            .find(|(_, m)| if lower_is_better { *m <= target } else { *m >= target })
+            .map(|(t, _)| *t)
+    }
+
+    pub fn final_metric(&self) -> Option<f64> {
+        // median of the last few samples — the paper's "converged" value
+        let k = self.points.len().min(5);
+        if k == 0 {
+            return None;
+        }
+        let mut tail: Vec<f64> = self.points[self.points.len() - k..].iter().map(|p| p.1).collect();
+        tail.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(tail[k / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tta_lookup() {
+        let mut c = TtaCurve::default();
+        for (t, m) in [(1.0, 5.0), (2.0, 3.0), (3.0, 2.0), (4.0, 1.9)] {
+            c.push(t, m);
+        }
+        assert_eq!(c.time_to(3.0, true), Some(2.0));
+        assert_eq!(c.time_to(1.0, true), None);
+        assert!(c.final_metric().unwrap() <= 3.0);
+    }
+}

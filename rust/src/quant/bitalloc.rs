@@ -1,0 +1,377 @@
+//! Variable bitwidth allocation (paper §3.2 + the fast solver of §A).
+//!
+//! Given per-super-group aggregated squared norms F_j and a total bit
+//! budget, assign each super-group a bitwidth from W so super-groups with
+//! larger norms get more bits. The thresholds T_{a,b} between consecutive
+//! widths are tied by equalizing the *per-bit benefit*
+//!
+//! ```text
+//! benefit(a→b) = T_{a,b} * (4^{b-a} - 1) / (4^b * (b - a))
+//! ```
+//!
+//! (each extra bit cuts worst-case MSE ~4×), leaving one degree of freedom
+//! which is searched to meet the budget. Two solvers:
+//!
+//! - [`solve_exact`]: §3.2 — binary-search the free threshold over the
+//!   sorted F_j values (exact w.r.t. the threshold family).
+//! - [`FastAllocator`]: §A — avoid sorting; compute q_j directly from
+//!   log2(F_j) and a scalar `u` maintained across rounds by binary search /
+//!   incremental adjustment. Restricted to |W| ≤ 3 (the prototype uses
+//!   W = {2,4,8}).
+
+/// An allocation: bitwidth per super-group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitAllocation {
+    pub widths: Vec<u8>,
+}
+
+impl BitAllocation {
+    /// Total payload bits given `sg_entries[j]` entries per super-group.
+    pub fn total_bits(&self, sg_entries: &[usize]) -> u64 {
+        self.widths.iter().zip(sg_entries).map(|(&w, &e)| w as u64 * e as u64).sum()
+    }
+
+    /// Mean bits per entry.
+    pub fn mean_bits(&self, sg_entries: &[usize]) -> f64 {
+        let entries: usize = sg_entries.iter().sum();
+        if entries == 0 {
+            0.0
+        } else {
+            self.total_bits(sg_entries) as f64 / entries as f64
+        }
+    }
+
+    /// Histogram over the allowed widths.
+    pub fn histogram(&self, widths: &[u32]) -> Vec<(u32, usize)> {
+        widths
+            .iter()
+            .map(|&w| (w, self.widths.iter().filter(|&&x| x as u32 == w).count()))
+            .collect()
+    }
+}
+
+/// Per-bit benefit coefficient of raising a super-group from `a` to `b`
+/// bits at threshold T: benefit = T · coeff(a,b).
+#[inline]
+pub fn per_bit_benefit_coeff(a: u32, b: u32) -> f64 {
+    debug_assert!(b > a);
+    let pow = |e: u32| (4.0f64).powi(e as i32);
+    (pow(b - a) - 1.0) / (pow(b) * (b - a) as f64)
+}
+
+/// Threshold ratios r_k such that T_{w_k, w_{k+1}} = r_k · T_free where
+/// T_free is the last (largest-width) threshold. Derived from equalizing
+/// per-bit benefits across consecutive pairs.
+pub fn threshold_ratios(widths: &[u32]) -> Vec<f64> {
+    assert!(widths.len() >= 2);
+    let pairs: Vec<(u32, u32)> = widths.windows(2).map(|w| (w[0], w[1])).collect();
+    let last = *pairs.last().unwrap();
+    let c_last = per_bit_benefit_coeff(last.0, last.1);
+    pairs
+        .iter()
+        .map(|&(a, b)| c_last / per_bit_benefit_coeff(a, b))
+        .collect()
+}
+
+/// Exact solver (§3.2): binary-search the free threshold so the budget is
+/// met, assigning each F_j the width whose threshold bracket contains it.
+///
+/// `budget_bits_per_entry` is the *payload* budget b̄ (metadata already
+/// subtracted by the caller). Returns the largest-MSE-reduction allocation
+/// that fits the budget.
+pub fn solve_exact(
+    f: &[f32],
+    sg_entries: &[usize],
+    widths: &[u32],
+    budget_bits_per_entry: f64,
+) -> BitAllocation {
+    assert_eq!(f.len(), sg_entries.len());
+    assert!(widths.windows(2).all(|w| w[0] < w[1]));
+    let ratios = threshold_ratios(widths);
+    let total_entries: usize = sg_entries.iter().sum();
+    let budget = budget_bits_per_entry * total_entries as f64;
+
+    let assign = |t_free: f64| -> BitAllocation {
+        let widths_out = f
+            .iter()
+            .map(|&fj| {
+                // width = smallest w_k with F_j < T_{w_k, w_{k+1}}; the last
+                // width has threshold ∞.
+                let mut w = *widths.last().unwrap();
+                for (k, &r) in ratios.iter().enumerate() {
+                    if (fj as f64) < r * t_free {
+                        w = widths[k];
+                        break;
+                    }
+                }
+                w as u8
+            })
+            .collect();
+        BitAllocation { widths: widths_out }
+    };
+
+    // Bits are non-increasing in t_free (higher thresholds → fewer wide
+    // groups). Binary-search t_free in log space over a generous range.
+    let fmax = f.iter().cloned().fold(f32::MIN_POSITIVE, f32::max) as f64;
+    let min_ratio = ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mut lo = (fmax * 1e-30 / min_ratio).max(f64::MIN_POSITIVE).ln();
+    let mut hi = (fmax * 1e6 / min_ratio).ln();
+    // If even the cheapest allocation exceeds budget, return it (caller
+    // validates feasibility against min width).
+    if assign(hi.exp()).total_bits(sg_entries) as f64 > budget {
+        return assign(hi.exp());
+    }
+    if (assign(lo.exp()).total_bits(sg_entries) as f64) <= budget {
+        return assign(lo.exp());
+    }
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if assign(mid.exp()).total_bits(sg_entries) as f64 <= budget {
+            hi = mid; // fits: try lowering thresholds (more bits)
+        } else {
+            lo = mid;
+        }
+    }
+    assign(hi.exp())
+}
+
+/// Fast solver (§A): maintains the scalar `u` across rounds; each round
+/// computes q_j directly from log2 F_j without sorting, then nudges `u` by
+/// binary search until the budget is met (first round) or by one
+/// half-interval step (steady state), exactly as the appendix prescribes.
+#[derive(Clone, Debug)]
+pub struct FastAllocator {
+    pub widths: [u32; 3],
+    /// scale factor 4/log2(512/17) for W={2,4,8}; general: (hi−lo) interval
+    /// width divided by log2 of the threshold ratio
+    coeff: f64,
+    pub u: f64,
+    initialized: bool,
+}
+
+impl FastAllocator {
+    pub fn new(widths: [u32; 3]) -> Self {
+        // z_j = coeff · log2(F_j) + u maps T_{w0,w1} → w1 and T_{w1,w2} → w2.
+        // coeff = (w2 − w1) / log2(T_{w1,w2} / T_{w0,w1}).
+        let ratios = threshold_ratios(&widths);
+        let ratio = ratios[1] / ratios[0]; // T_{w1,w2}/T_{w0,w1}
+        let coeff = (widths[2] - widths[1]) as f64 / ratio.log2();
+        FastAllocator { widths, coeff, u: 0.0, initialized: false }
+    }
+
+    pub fn paper_default() -> Self {
+        FastAllocator::new([2, 4, 8])
+    }
+
+    /// q_j from the closed form (§A):
+    /// q_j = 2^clamp([1,3], floor(log2(coeff·log2 F_j + u))).
+    #[inline]
+    fn q(&self, fj: f32, u: f64) -> u8 {
+        let z = if fj <= 0.0 {
+            f64::NEG_INFINITY
+        } else {
+            self.coeff * (fj as f64).log2() + u
+        };
+        if !(z > 0.0) {
+            return self.widths[0] as u8;
+        }
+        let l = z.log2().floor() as i64;
+        let k = l.clamp(1, 3);
+        match k {
+            1 => self.widths[0] as u8,
+            2 => self.widths[1] as u8,
+            _ => self.widths[2] as u8,
+        }
+    }
+
+    fn bits_with(&self, f: &[f32], sg_entries: &[usize], u: f64) -> u64 {
+        f.iter().zip(sg_entries).map(|(&fj, &e)| self.q(fj, u) as u64 * e as u64).sum()
+    }
+
+    /// Allocate for this round. First invocation binary-searches `u` to
+    /// convergence; later invocations refine the maintained `u` with a few
+    /// damped steps (cheap, exploits round-to-round stability of the F_j
+    /// distribution — the point of §A).
+    pub fn allocate(
+        &mut self,
+        f: &[f32],
+        sg_entries: &[usize],
+        budget_bits_per_entry: f64,
+    ) -> BitAllocation {
+        let total_entries: usize = sg_entries.iter().sum();
+        let budget = budget_bits_per_entry * total_entries as f64;
+        let iters = if self.initialized { 8 } else { 48 };
+        // Binary search over u: bits are non-decreasing in u.
+        let (mut lo, mut hi) = if self.initialized {
+            (self.u - 8.0, self.u + 8.0)
+        } else {
+            (-512.0, 512.0)
+        };
+        // Widen until bracketing (log2 F can be far out for extreme data).
+        while self.bits_with(f, sg_entries, hi) as f64 <= budget && hi < 1e6 {
+            hi *= 2.0;
+        }
+        while self.bits_with(f, sg_entries, lo) as f64 > budget && lo > -1e6 {
+            lo *= 2.0;
+        }
+        for _ in 0..iters {
+            let mid = 0.5 * (lo + hi);
+            if self.bits_with(f, sg_entries, mid) as f64 <= budget {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        self.u = lo;
+        self.initialized = true;
+        BitAllocation { widths: f.iter().map(|&fj| self.q(fj, self.u)).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+    use crate::util::rng::Pcg;
+
+    fn entries(n: usize) -> Vec<usize> {
+        vec![256; n]
+    }
+
+    fn lognormal_f(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..n).map(|_| (rng.next_normal() as f64 * 2.5).exp() as f32).collect()
+    }
+
+    #[test]
+    fn paper_threshold_ratios_w248() {
+        // §3.2 for W={1,2,4,8,16}: T_{1,2}=5/32·T_{2,4}, T_{2,4}=17/512·T_{4,8},
+        // T_{4,8}=257/2^17·T_{8,16}.
+        let r = threshold_ratios(&[1, 2, 4, 8, 16]);
+        // r_k = T_{w_k,w_{k+1}} / T_{8,16}
+        assert!((r[0] / r[1] - 5.0 / 32.0).abs() < 1e-12);
+        assert!((r[1] / r[2] - 17.0 / 512.0).abs() < 1e-12);
+        assert!((r[2] / r[3] - 257.0 / 131072.0).abs() < 1e-12);
+        assert_eq!(r[3], 1.0);
+        // prototype W={2,4,8}: same 17/512 relation
+        let r2 = threshold_ratios(&[2, 4, 8]);
+        assert!((r2[0] / r2[1] - 17.0 / 512.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_bit_benefit_examples_from_paper() {
+        // §3.2: a=1,b=2 → 3/16; a=2,b=4 → 15/512; a=4,b=8 → 255/4^9.
+        assert!((per_bit_benefit_coeff(1, 2) - 3.0 / 16.0).abs() < 1e-12);
+        assert!((per_bit_benefit_coeff(2, 4) - 15.0 / 512.0).abs() < 1e-12);
+        assert!((per_bit_benefit_coeff(4, 8) - 255.0 / 4f64.powi(9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_meets_budget_and_orders_by_norm() {
+        let f = lognormal_f(512, 1);
+        let e = entries(512);
+        for budget in [2.5, 4.0, 5.0, 7.0] {
+            let alloc = solve_exact(&f, &e, &[2, 4, 8], budget);
+            assert!(alloc.mean_bits(&e) <= budget + 1e-9, "budget {budget} violated");
+            // monotone: larger F never gets fewer bits
+            let mut idx: Vec<usize> = (0..f.len()).collect();
+            idx.sort_by(|&a, &b| f[a].partial_cmp(&f[b]).unwrap());
+            for w in idx.windows(2) {
+                assert!(alloc.widths[w[0]] <= alloc.widths[w[1]]);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_budget_extremes() {
+        let f = lognormal_f(64, 2);
+        let e = entries(64);
+        // budget below min width: returns all-min (infeasible flagged by caller)
+        let a = solve_exact(&f, &e, &[2, 4, 8], 1.0);
+        assert!(a.widths.iter().all(|&w| w == 2));
+        // budget above max width: all-max
+        let a = solve_exact(&f, &e, &[2, 4, 8], 9.0);
+        assert!(a.widths.iter().all(|&w| w == 8));
+    }
+
+    #[test]
+    fn fast_matches_exact_budget_utilization() {
+        let f = lognormal_f(1024, 3);
+        let e = entries(1024);
+        let budget = 4.5;
+        let exact = solve_exact(&f, &e, &[2, 4, 8], budget);
+        let mut fast = FastAllocator::paper_default();
+        let fa = fast.allocate(&f, &e, budget);
+        assert!(fa.mean_bits(&e) <= budget + 1e-9);
+        // both use ≥ 90% of budget (they can't always hit it exactly —
+        // widths are discrete)
+        assert!(exact.mean_bits(&e) > 0.9 * budget - 2.0);
+        assert!(fa.mean_bits(&e) > 0.9 * exact.mean_bits(&e) - 1e-9);
+        // allocations agree on the vast majority of super-groups
+        let agree = exact.widths.iter().zip(&fa.widths).filter(|(a, b)| a == b).count();
+        assert!(agree as f64 > 0.95 * f.len() as f64, "agree={agree}/{}", f.len());
+    }
+
+    #[test]
+    fn fast_incremental_rounds_stay_within_budget() {
+        let mut fast = FastAllocator::paper_default();
+        let e = entries(256);
+        for round in 0..20u64 {
+            // distribution drifts slowly across rounds
+            let f: Vec<f32> = lognormal_f(256, 10 + round / 4);
+            let a = fast.allocate(&f, &e, 5.0);
+            assert!(a.mean_bits(&e) <= 5.0 + 1e-9, "round {round}");
+            assert!(a.mean_bits(&e) >= 2.0);
+        }
+    }
+
+    #[test]
+    fn zero_norm_groups_get_min_width() {
+        let mut f = lognormal_f(32, 5);
+        f[3] = 0.0;
+        f[17] = 0.0;
+        let e = entries(32);
+        let a = solve_exact(&f, &e, &[2, 4, 8], 4.0);
+        assert_eq!(a.widths[3], 2);
+        assert_eq!(a.widths[17], 2);
+        let mut fast = FastAllocator::paper_default();
+        let a = fast.allocate(&f, &e, 4.0);
+        assert_eq!(a.widths[3], 2);
+        assert_eq!(a.widths[17], 2);
+    }
+
+    #[test]
+    fn property_budget_never_exceeded() {
+        Prop::new(64).check(
+            "bitalloc-budget",
+            |rng| {
+                let n = 1 + rng.below(200) as usize;
+                let f: Vec<f32> =
+                    (0..n).map(|_| (rng.next_normal() as f64 * 3.0).exp() as f32).collect();
+                let budget = 2.0 + rng.next_f32() as f64 * 6.0;
+                (f, budget)
+            },
+            |(f, budget)| {
+                let e = entries(f.len());
+                let a = solve_exact(f, &e, &[2, 4, 8], *budget);
+                let mut fast = FastAllocator::paper_default();
+                let fa = fast.allocate(f, &e, *budget);
+                if *budget >= 2.0 && a.mean_bits(&e) > budget + 1e-9 {
+                    return Err(format!("exact exceeded: {} > {budget}", a.mean_bits(&e)));
+                }
+                if *budget >= 2.0 && fa.mean_bits(&e) > budget + 1e-9 {
+                    return Err(format!("fast exceeded: {} > {budget}", fa.mean_bits(&e)));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ragged_last_supergroup_counts_actual_entries() {
+        let f = vec![1.0f32, 1.0, 1.0];
+        let e = vec![256, 256, 64]; // ragged tail
+        let a = solve_exact(&f, &e, &[2, 4, 8], 8.0);
+        assert_eq!(a.total_bits(&e), 8 * (256 + 256 + 64));
+    }
+}

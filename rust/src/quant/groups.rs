@@ -1,0 +1,210 @@
+//! Group / super-group partitioning and statistics (paper §2.2, §3.1).
+//!
+//! DynamiQ partitions the flat gradient into *groups* of `s` consecutive
+//! entries sharing a scale parameter, and *super-groups* of `S = s·gpsg`
+//! entries sharing a bitwidth, a BF16 scale, and a mean. The first stage
+//! computes per-super-group (mean µ_{i,j}, squared ℓ2 norm F_{i,j}) which
+//! the initial lightweight all-reduce aggregates into (µ_j, F_j).
+
+/// Static layout parameters. Both sizes are powers of two (paper §4: "We
+/// use powers of two for the group size and super-group size").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupLayout {
+    /// entries per group (paper default s = 16)
+    pub group: usize,
+    /// entries per super-group (paper default S = 256, i.e. 16 groups)
+    pub super_group: usize,
+}
+
+impl GroupLayout {
+    pub fn new(group: usize, super_group: usize) -> Self {
+        assert!(group.is_power_of_two(), "group size must be a power of two");
+        assert!(super_group.is_power_of_two(), "super-group size must be a power of two");
+        assert!(super_group % group == 0, "super-group must be a multiple of group");
+        GroupLayout { group, super_group }
+    }
+
+    pub fn paper_default() -> Self {
+        GroupLayout::new(16, 256)
+    }
+
+    pub fn groups_per_super(&self) -> usize {
+        self.super_group / self.group
+    }
+
+    /// Number of super-groups covering `d` entries (last one may be
+    /// logically padded with zeros).
+    pub fn num_super_groups(&self, d: usize) -> usize {
+        d.div_ceil(self.super_group)
+    }
+
+    pub fn num_groups(&self, d: usize) -> usize {
+        d.div_ceil(self.group)
+    }
+
+    /// Entry range [start, end) of super-group `j` within a `d`-entry vector.
+    pub fn super_range(&self, j: usize, d: usize) -> (usize, usize) {
+        let start = j * self.super_group;
+        (start, (start + self.super_group).min(d))
+    }
+}
+
+/// Per-super-group statistics of one worker's gradient (stage (a)).
+#[derive(Clone, Debug, Default)]
+pub struct SuperGroupStats {
+    /// per-super-group mean µ_{i,j} (over the *full* super-group size; the
+    /// trailing partial super-group divides by its actual length)
+    pub mean: Vec<f32>,
+    /// per-super-group squared ℓ2 norm F_{i,j}
+    pub sq_norm: Vec<f32>,
+}
+
+impl SuperGroupStats {
+    /// Compute stats for a flat gradient.
+    pub fn compute(x: &[f32], layout: &GroupLayout) -> Self {
+        let nsg = layout.num_super_groups(x.len());
+        let mut mean = Vec::with_capacity(nsg);
+        let mut sq_norm = Vec::with_capacity(nsg);
+        for j in 0..nsg {
+            let (a, b) = layout.super_range(j, x.len());
+            let seg = &x[a..b];
+            let (mut s, mut s2) = (0.0f64, 0.0f64);
+            for &v in seg {
+                s += v as f64;
+                s2 += (v as f64) * (v as f64);
+            }
+            mean.push((s / seg.len() as f64) as f32);
+            sq_norm.push(s2 as f32);
+        }
+        SuperGroupStats { mean, sq_norm }
+    }
+
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+
+    /// Serialize for the initial metadata all-reduce: mean as bf16-rounded
+    /// f32 + F as f32. Wire size: 2 + 4 bytes per super-group (<1% of the
+    /// BF16 gradient at S=256, matching §3's "lightweight" claim).
+    pub fn wire_bytes_per_super_group() -> usize {
+        2 + 4
+    }
+
+    /// Aggregate stats across workers (what the initial all-reduce yields):
+    /// µ_j = (1/n)·Σ_i µ_{i,j}, F_j = Σ_i F_{i,j}.
+    pub fn aggregate(all: &[&SuperGroupStats]) -> SuperGroupStats {
+        assert!(!all.is_empty());
+        let nsg = all[0].len();
+        for s in all {
+            assert_eq!(s.len(), nsg, "workers disagree on super-group count");
+        }
+        let n = all.len() as f64;
+        let mut mean = vec![0.0f32; nsg];
+        let mut sq = vec![0.0f32; nsg];
+        for j in 0..nsg {
+            let mut m = 0.0f64;
+            let mut f = 0.0f64;
+            for s in all {
+                m += s.mean[j] as f64;
+                f += s.sq_norm[j] as f64;
+            }
+            mean[j] = (m / n) as f32;
+            sq[j] = f as f32;
+        }
+        SuperGroupStats { mean, sq_norm: sq }
+    }
+}
+
+/// Subtract the global super-group mean from every entry (stage (c)
+/// normalization). Returns the means actually used so the inverse is exact.
+pub fn subtract_means(x: &mut [f32], means: &[f32], layout: &GroupLayout) {
+    let d = x.len();
+    for j in 0..layout.num_super_groups(d) {
+        let (a, b) = layout.super_range(j, d);
+        let m = means[j];
+        for v in x[a..b].iter_mut() {
+            *v -= m;
+        }
+    }
+}
+
+/// Inverse of [`subtract_means`]: add back `scale * mean` (stage (f)); the
+/// aggregated sum needs `n·µ_j` added back, so `scale = n`.
+pub fn add_means(x: &mut [f32], means: &[f32], scale: f32, layout: &GroupLayout) {
+    let d = x.len();
+    for j in 0..layout.num_super_groups(d) {
+        let (a, b) = layout.super_range(j, d);
+        let m = means[j] * scale;
+        for v in x[a..b].iter_mut() {
+            *v += m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn layout_counts() {
+        let l = GroupLayout::paper_default();
+        assert_eq!(l.groups_per_super(), 16);
+        assert_eq!(l.num_super_groups(256), 1);
+        assert_eq!(l.num_super_groups(257), 2);
+        assert_eq!(l.num_groups(1), 1);
+        assert_eq!(l.super_range(1, 300), (256, 300));
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn layout_rejects_non_pow2() {
+        GroupLayout::new(12, 256);
+    }
+
+    #[test]
+    fn stats_match_direct_computation() {
+        let l = GroupLayout::new(4, 8);
+        let x: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let s = SuperGroupStats::compute(&x, &l);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.mean[0], 3.5); // mean of 0..8
+        assert_eq!(s.mean[1], 8.5); // mean of 8, 9
+        assert_eq!(s.sq_norm[0], (0..8).map(|i| (i * i) as f32).sum::<f32>());
+        assert_eq!(s.sq_norm[1], 64.0 + 81.0);
+    }
+
+    #[test]
+    fn aggregate_is_mean_of_means_and_sum_of_norms() {
+        let l = GroupLayout::new(2, 4);
+        let a = SuperGroupStats::compute(&[1.0, 1.0, 1.0, 1.0], &l);
+        let b = SuperGroupStats::compute(&[3.0, 3.0, 3.0, 3.0], &l);
+        let g = SuperGroupStats::aggregate(&[&a, &b]);
+        assert_eq!(g.mean[0], 2.0);
+        assert_eq!(g.sq_norm[0], 4.0 + 36.0);
+    }
+
+    #[test]
+    fn subtract_then_add_roundtrips() {
+        let l = GroupLayout::new(4, 16);
+        let mut rng = Pcg::new(2);
+        let mut x = vec![0.0f32; 100];
+        rng.fill_normal(&mut x, 1.0);
+        let orig = x.clone();
+        let stats = SuperGroupStats::compute(&x, &l);
+        subtract_means(&mut x, &stats.mean, &l);
+        // after subtraction each super-group is ~zero-mean
+        let s2 = SuperGroupStats::compute(&x, &l);
+        for m in &s2.mean {
+            assert!(m.abs() < 1e-5);
+        }
+        add_means(&mut x, &stats.mean, 1.0, &l);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Hierarchical (two-level) scale quantization (paper §3.3, after GGUF [9]).
+//!
+//! Each group G carries a scale sf_G = max|G|. Transmitting it in BF16
+//! per 16-entry group would cost 1 bit/entry; instead DynamiQ keeps one
+//! BF16 scale per *super-group* (sf_SG = max|SG|) and stochastically
+//! quantizes each group's scale to UINT8 against it:
+//!
+//! ```text
+//! code r_G with E[r_G * sf_SG / 255] = sf_G
+//! ```
+//!
+//! Unbiasedness of individual entries is preserved because the entry
+//! quantization and the scale quantization use independent randomness:
+//! E[x̂' · ŝf_G] = E[x̂'] · E[ŝf_G] = (x/sf_G) · sf_G = x.
+
+use crate::quant::minifloat::bf16_round;
+use crate::util::rng::uniform_u01;
+
+/// Quantized scales for one super-group.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScaleCodes {
+    /// BF16-rounded super-group scale (transmitted as 2 bytes)
+    pub sf_super: f32,
+    /// per-group UINT8 codes
+    pub codes: Vec<u8>,
+}
+
+impl ScaleCodes {
+    /// Decoded (receiver-side) scale of group `g`.
+    #[inline]
+    pub fn decode(&self, g: usize) -> f32 {
+        self.codes[g] as f32 * self.sf_super * (1.0 / 255.0)
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        2 + self.codes.len()
+    }
+}
+
+/// Encode the scales of one super-group. `group_maxima[g] = max|G_g|`,
+/// `sf_super` should be `max(group_maxima)` (the caller computed it while
+/// scanning). `seed`/`ctr0` drive the stochastic scale rounding — a stream
+/// independent from entry rounding (domain-separated by the caller).
+pub fn encode_scales(group_maxima: &[f32], seed: u32, ctr0: u32) -> ScaleCodes {
+    let raw_max = group_maxima.iter().cloned().fold(0.0f32, f32::max);
+    // BF16 rounds to nearest, which may land *below* the true max; bump to
+    // the next representable so codes never need to exceed 255.
+    let mut sf_super = bf16_round(raw_max);
+    if sf_super < raw_max {
+        sf_super = f32::from_bits(((sf_super.to_bits() >> 16) + 1) << 16);
+    }
+    let mut codes = Vec::with_capacity(group_maxima.len());
+    if sf_super <= 0.0 {
+        codes.resize(group_maxima.len(), 0);
+        return ScaleCodes { sf_super: 0.0, codes };
+    }
+    let inv = 255.0 / sf_super;
+    for (g, &m) in group_maxima.iter().enumerate() {
+        let exact = m * inv; // ∈ [0, 255]
+        let lo = exact.floor();
+        let frac = exact - lo;
+        let u = uniform_u01(seed, ctr0.wrapping_add(g as u32));
+        let code = if u < frac { lo + 1.0 } else { lo };
+        codes.push(code.min(255.0) as u8);
+    }
+    ScaleCodes { sf_super, codes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn decode_inverts_exact_codes() {
+        // maxima that are exact integer multiples of sf_super/255
+        // (255 is exactly representable in bf16: 1.9921875 · 2^7)
+        let maxima = vec![0.0, 51.0, 102.0, 255.0];
+        let sc = encode_scales(&maxima, 3, 0);
+        assert_eq!(sc.sf_super, 255.0);
+        for (g, &m) in maxima.iter().enumerate() {
+            assert!((sc.decode(g) - m).abs() < 1e-3, "g={g}: {} vs {m}", sc.decode(g));
+        }
+    }
+
+    #[test]
+    fn scale_codes_are_unbiased() {
+        // sf = 0.3 of sf_super = 1.0 lies between code 76 and 77.
+        let trials = 100_000u32;
+        let mut sum = 0.0f64;
+        for t in 0..trials {
+            let sc = encode_scales(&[0.3, 1.0], 9, t * 2);
+            sum += sc.decode(0) as f64;
+        }
+        let mean = sum / trials as f64;
+        assert!((mean - 0.3).abs() < 1e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn super_scale_never_below_group_max() {
+        let mut rng = Pcg::new(4);
+        for _ in 0..500 {
+            let maxima: Vec<f32> =
+                (0..8).map(|_| rng.next_normal().abs() * 10f32.powi(rng.below(7) as i32 - 3)).collect();
+            let sc = encode_scales(&maxima, 1, 0);
+            let raw = maxima.iter().cloned().fold(0.0f32, f32::max);
+            assert!(sc.sf_super >= raw, "sf_super {} < max {}", sc.sf_super, raw);
+            // hence all codes fit in u8 without clamping error > 1 step
+            let tol = sc.sf_super * 1e-5;
+            for (g, &m) in maxima.iter().enumerate() {
+                assert!(sc.decode(g) <= sc.sf_super + tol);
+                // decoded scale within one code step of the true max
+                let step = sc.sf_super / 255.0;
+                assert!((sc.decode(g) - m).abs() <= step + tol, "g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_supergroup() {
+        let sc = encode_scales(&[0.0, 0.0], 7, 0);
+        assert_eq!(sc.sf_super, 0.0);
+        assert_eq!(sc.decode(0), 0.0);
+        assert_eq!(sc.wire_bytes(), 4);
+    }
+}

@@ -1,0 +1,264 @@
+//! Minifloat codecs: BF16 and the OCP microscaling element formats
+//! (FP8 E4M3, FP6 E3M2, FP4 E2M1) used by the MXFP4/6/8 baselines (§5).
+//!
+//! Encoders support round-to-nearest-even (the MX spec default) and
+//! stochastic rounding (used when quantizing gradients, to stay unbiased).
+//! Values beyond the format max saturate; the caller counts overflows to
+//! drive the FP8-LM-style automatic scaling (§C of the paper).
+
+use crate::util::rng::uniform_u01;
+
+/// Round an f32 to bfloat16 (round-to-nearest-even on the mantissa cut).
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // RNE: add 0x7fff + lsb-of-kept-part, then truncate low 16 bits.
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb) & 0xffff_0000;
+    f32::from_bits(rounded)
+}
+
+/// Encode to the 16-bit bf16 payload (for wire-size accounting and tests).
+#[inline]
+pub fn bf16_bits(x: f32) -> u16 {
+    (bf16_round(x).to_bits() >> 16) as u16
+}
+
+#[inline]
+pub fn bf16_from_bits(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// A sign + exponent + mantissa minifloat format with IEEE-style subnormals
+/// and *no* inf/nan encodings (all codes are finite, per the MX element
+/// format definitions — overflow saturates to ±max).
+#[derive(Clone, Debug)]
+pub struct Minifloat {
+    pub name: &'static str,
+    pub exp_bits: u32,
+    pub man_bits: u32,
+    pub bias: i32,
+    /// all non-negative representable values, ascending (2^(E+M) entries)
+    grid: Vec<f32>,
+}
+
+impl Minifloat {
+    pub fn new(name: &'static str, exp_bits: u32, man_bits: u32) -> Self {
+        let bias = (1 << (exp_bits - 1)) - 1;
+        let mut grid = Vec::with_capacity(1 << (exp_bits + man_bits));
+        for exp in 0..(1u32 << exp_bits) {
+            for man in 0..(1u32 << man_bits) {
+                grid.push(decode_parts(exp, man, exp_bits, man_bits, bias));
+            }
+        }
+        // decode_parts is monotone in (exp, man) so grid is sorted.
+        Minifloat { name, exp_bits, man_bits, bias, grid }
+    }
+
+    /// FP8 E4M3 — MXFP8 element type (max 448). Per the OCP spec, the top
+    /// (exp=15, man=7) code is NaN; we drop it from the grid so the max
+    /// finite value is 448 and encoders never emit it.
+    pub fn e4m3() -> Self {
+        let mut f = Minifloat::new("e4m3", 4, 3);
+        f.grid.pop();
+        f
+    }
+    /// FP6 E3M2 — MXFP6 element type (max 28).
+    pub fn e3m2() -> Self {
+        Minifloat::new("e3m2", 3, 2)
+    }
+    /// FP4 E2M1 — MXFP4 element type (max 6).
+    pub fn e2m1() -> Self {
+        Minifloat::new("e2m1", 2, 1)
+    }
+
+    pub fn code_bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    pub fn max_value(&self) -> f32 {
+        *self.grid.last().unwrap()
+    }
+
+    /// Smallest positive (subnormal) value.
+    pub fn min_positive(&self) -> f32 {
+        self.grid[1]
+    }
+
+    /// Decode a code (sign in the top bit of the code width).
+    #[inline]
+    pub fn decode(&self, code: u16) -> f32 {
+        let mag_bits = self.exp_bits + self.man_bits;
+        let sign = (code >> mag_bits) & 1;
+        // clamp guards formats (E4M3) whose top code is a NaN we never emit
+        let idx = ((code & ((1 << mag_bits) - 1)) as usize).min(self.grid.len() - 1);
+        let mag = self.grid[idx];
+        if sign == 1 {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Round-to-nearest-even encode. Returns (code, overflowed).
+    pub fn encode_rne(&self, x: f32) -> (u16, bool) {
+        let (mag, sign) = (x.abs(), (x < 0.0) as u16);
+        let (idx, ovf) = self.nearest_idx(mag);
+        (self.with_sign(idx, sign), ovf)
+    }
+
+    /// Stochastic-rounding encode with an explicit uniform `u ∈ [0,1)`.
+    /// Unbiased within range; saturates (biased) on overflow, reported via
+    /// the flag so callers can adapt scales.
+    pub fn encode_stochastic(&self, x: f32, u: f32) -> (u16, bool) {
+        let (mag, sign) = (x.abs(), (x < 0.0) as u16);
+        if !mag.is_finite() || mag >= self.max_value() {
+            return (self.with_sign(self.grid.len() - 1, sign), true);
+        }
+        // bracket mag in the grid: grid[lo] <= mag <= grid[lo+1]
+        let hi = self.grid.partition_point(|&g| g < mag);
+        if hi == 0 || self.grid[hi.min(self.grid.len() - 1)] == mag {
+            // exact (includes 0)
+            return (self.with_sign(hi.min(self.grid.len() - 1), sign), false);
+        }
+        let lo = hi - 1;
+        let (a, b) = (self.grid[lo], self.grid[hi]);
+        let p_up = (mag - a) / (b - a);
+        let idx = if u < p_up { hi } else { lo };
+        (self.with_sign(idx, sign), false)
+    }
+
+    /// Convenience: stochastic encode using the shared hash PRNG.
+    pub fn encode_stochastic_seeded(&self, x: f32, seed: u32, counter: u32) -> (u16, bool) {
+        self.encode_stochastic(x, uniform_u01(seed, counter))
+    }
+
+    #[inline]
+    fn with_sign(&self, idx: usize, sign: u16) -> u16 {
+        (sign << (self.exp_bits + self.man_bits)) | idx as u16
+    }
+
+    /// Nearest grid index with ties-to-even (even = even index, which for a
+    /// minifloat grid corresponds to an even mantissa code).
+    fn nearest_idx(&self, mag: f32) -> (usize, bool) {
+        if !mag.is_finite() || mag >= self.max_value() {
+            return (self.grid.len() - 1, mag > self.max_value());
+        }
+        let hi = self.grid.partition_point(|&g| g < mag);
+        if hi == 0 {
+            return (0, false);
+        }
+        let lo = hi - 1;
+        let (a, b) = (self.grid[lo], self.grid[hi]);
+        let idx = if mag - a < b - mag {
+            lo
+        } else if mag - a > b - mag {
+            hi
+        } else if lo % 2 == 0 {
+            lo
+        } else {
+            hi
+        };
+        (idx, false)
+    }
+}
+
+#[inline]
+fn decode_parts(exp: u32, man: u32, _exp_bits: u32, man_bits: u32, bias: i32) -> f32 {
+    let m = man as f32 / (1u32 << man_bits) as f32;
+    if exp == 0 {
+        // subnormal: m * 2^(1-bias)
+        m * (2.0f32).powi(1 - bias)
+    } else {
+        (1.0 + m) * (2.0f32).powi(exp as i32 - bias)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn bf16_roundtrip_and_rne() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        assert_eq!(bf16_round(-2.5), -2.5);
+        // bf16 has 7 mantissa bits: the step above 1.0 is 2^-7 and the
+        // halfway point 1 + 2^-8 ties-to-even down to 1.0.
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-8)), 1.0);
+        // just above halfway rounds up
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-8) + 2f32.powi(-11)), 1.0 + 2f32.powi(-7));
+        assert_eq!(bf16_from_bits(bf16_bits(3.1415927)), bf16_round(3.1415927));
+    }
+
+    #[test]
+    fn format_max_values_match_spec() {
+        // OCP MX spec: E4M3 max 448, E3M2 max 28, E2M1 max 6.
+        assert_eq!(Minifloat::e4m3().max_value(), 448.0);
+        assert_eq!(Minifloat::e3m2().max_value(), 28.0);
+        assert_eq!(Minifloat::e2m1().max_value(), 6.0);
+    }
+
+    #[test]
+    fn e2m1_grid_is_the_spec_set() {
+        // E2M1 positives: 0, 0.5, 1, 1.5, 2, 3, 4, 6
+        let g = Minifloat::e2m1();
+        assert_eq!(g.grid, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn decode_encode_roundtrip_all_codes() {
+        for f in [Minifloat::e4m3(), Minifloat::e3m2(), Minifloat::e2m1()] {
+            for code in 0..(1u16 << f.code_bits()) {
+                let v = f.decode(code);
+                let (c2, ovf) = f.encode_rne(v);
+                assert!(!ovf);
+                assert_eq!(f.decode(c2), v, "{} code {code}", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rne_picks_nearest() {
+        let f = Minifloat::e2m1();
+        assert_eq!(f.decode(f.encode_rne(1.1).0), 1.0);
+        assert_eq!(f.decode(f.encode_rne(1.4).0), 1.5);
+        assert_eq!(f.decode(f.encode_rne(-2.6).0), -3.0);
+        // saturation + overflow flag
+        let (c, ovf) = f.encode_rne(100.0);
+        assert!(ovf);
+        assert_eq!(f.decode(c), 6.0);
+    }
+
+    #[test]
+    fn stochastic_is_unbiased() {
+        let f = Minifloat::e2m1();
+        // 1.25 lies between 1.0 and 1.5: E[decode] should be 1.25
+        let mut rng = Pcg::new(11);
+        let n = 200_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let (c, _) = f.encode_stochastic(1.25, rng.next_f32());
+            sum += f.decode(c) as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.25).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn stochastic_exact_values_never_move() {
+        let f = Minifloat::e3m2();
+        let mut rng = Pcg::new(5);
+        for _ in 0..1000 {
+            let (c, _) = f.encode_stochastic(2.0, rng.next_f32());
+            assert_eq!(f.decode(c), 2.0);
+        }
+    }
+
+    #[test]
+    fn negative_zero_and_signs() {
+        let f = Minifloat::e4m3();
+        assert_eq!(f.decode(f.encode_rne(-0.0).0), 0.0);
+        assert!(f.decode(f.encode_rne(-5.0).0) < 0.0);
+    }
+}

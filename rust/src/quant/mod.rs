@@ -1,0 +1,18 @@
+//! Quantization substrate: every numeric building block DynamiQ and the
+//! baselines are assembled from.
+//!
+//! - [`minifloat`] — BF16 + MX element formats (FP8/6/4)
+//! - [`groups`] — group/super-group layout, statistics, mean normalization
+//! - [`nonuniform`] — ICE-buckets non-uniform quantization value tables
+//! - [`rounding`] — independent vs correlated (shared-randomness) rounding
+//! - [`hierarchical`] — two-level (UINT8-under-BF16) scale quantization
+//! - [`bitalloc`] — variable bitwidth allocation (exact §3.2 + fast §A)
+//! - [`packing`] — power-of-two bit packing, sign-magnitude codes
+
+pub mod bitalloc;
+pub mod groups;
+pub mod hierarchical;
+pub mod minifloat;
+pub mod nonuniform;
+pub mod packing;
+pub mod rounding;

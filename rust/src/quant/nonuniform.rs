@@ -1,0 +1,254 @@
+//! Non-uniform quantization value tables (paper §2.3, §3.3).
+//!
+//! For `b` bits per entry, one bit encodes the sign and the magnitude index
+//! r ∈ {0, …, 2^{b−1}−1} selects a quantization value in [0, 1]:
+//!
+//! ```text
+//! f(eps, r) = ((1+2*eps^2)^r - 1) / ((1+2*eps^2)^(2^(b-1)-1) - 1)
+//! ```
+//!
+//! (the ICE-buckets estimator of [31]). ε ≈ 0 recovers a uniform grid;
+//! larger ε concentrates values near zero, optimizing per-entry
+//! *multiplicative* error — the right objective for the skewed magnitude
+//! distributions gradients exhibit.
+
+use crate::util::rng::uniform_u01;
+
+/// A quantization-value table over [0, 1] for a given magnitude bitwidth.
+#[derive(Clone, Debug)]
+pub struct QTable {
+    /// magnitude bits (b − 1 where b counts the sign bit)
+    pub mag_bits: u32,
+    /// ε = 0 means uniform
+    pub epsilon: f64,
+    /// ascending values, grid[0] = 0, grid.last() = 1
+    pub grid: Vec<f32>,
+}
+
+impl QTable {
+    /// Non-uniform table per f(ε, r). `mag_bits` must be ≥ 1. Extreme
+    /// (ε, mag_bits) combinations whose small values underflow f32 are
+    /// rejected — the constructor asserts strict monotonicity.
+    pub fn nonuniform(mag_bits: u32, epsilon: f64) -> Self {
+        assert!(mag_bits >= 1 && mag_bits <= 15);
+        let levels = 1usize << mag_bits;
+        let top = levels - 1;
+        let base = 1.0 + 2.0 * epsilon * epsilon;
+        let denom = base.powi(top as i32) - 1.0;
+        let grid: Vec<f32> = (0..levels)
+            .map(|r| {
+                if denom <= 0.0 {
+                    // ε = 0 degenerates to uniform
+                    r as f64 / top as f64
+                } else {
+                    (base.powi(r as i32) - 1.0) / denom
+                }
+            })
+            .map(|v| v as f32)
+            .collect();
+        assert!(
+            grid.windows(2).all(|w| w[0] < w[1]),
+            "(ε={epsilon}, mag_bits={mag_bits}) degenerates in f32; reduce ε or bits"
+        );
+        QTable { mag_bits, epsilon, grid }
+    }
+
+    /// Uniform table (QSGD / Uniform-THC style), for the ablation (Tab 6).
+    pub fn uniform(mag_bits: u32) -> Self {
+        QTable::nonuniform(mag_bits, 0.0)
+    }
+
+    pub fn levels(&self) -> usize {
+        self.grid.len()
+    }
+
+    /// Bracket a normalized magnitude m ∈ [0, 1]: returns (lo_idx, p_up)
+    /// where quantizing rounds to lo_idx+1 with probability p_up and lo_idx
+    /// otherwise. Exact grid hits return p_up = 0.
+    #[inline]
+    pub fn bracket(&self, m: f32) -> (usize, f32) {
+        debug_assert!((0.0..=1.0 + 1e-4).contains(&m), "m={m} out of [0,1]");
+        let m = m.clamp(0.0, 1.0);
+        // grid is ascending with grid[0]=0, grid[last]=1
+        let hi = self.grid.partition_point(|&g| g < m);
+        if hi == 0 {
+            return (0, 0.0);
+        }
+        if hi >= self.grid.len() {
+            return (self.grid.len() - 1, 0.0);
+        }
+        if self.grid[hi] == m {
+            return (hi, 0.0);
+        }
+        let lo = hi - 1;
+        let (a, b) = (self.grid[lo], self.grid[hi]);
+        (lo, (m - a) / (b - a))
+    }
+
+    /// Stochastically quantize a normalized magnitude with uniform `u`.
+    #[inline]
+    pub fn quantize(&self, m: f32, u: f32) -> u16 {
+        let (lo, p_up) = self.bracket(m);
+        if u < p_up {
+            (lo + 1) as u16
+        } else {
+            lo as u16
+        }
+    }
+
+    /// Seeded variant using the shared counter hash.
+    #[inline]
+    pub fn quantize_seeded(&self, m: f32, seed: u32, counter: u32) -> u16 {
+        self.quantize(m, uniform_u01(seed, counter))
+    }
+
+    #[inline]
+    pub fn value(&self, r: u16) -> f32 {
+        self.grid[r as usize]
+    }
+}
+
+/// The table set used by a DynamiQ configuration: one table per allowed
+/// bitwidth, built once and shared.
+#[derive(Clone, Debug)]
+pub struct QTables {
+    pub epsilon: f64,
+    /// indexed by total bitwidth b (incl. sign); present for b in W
+    tables: Vec<Option<QTable>>,
+}
+
+impl QTables {
+    pub fn new(widths: &[u32], epsilon: f64, uniform: bool) -> Self {
+        let maxb = *widths.iter().max().unwrap() as usize;
+        let mut tables = vec![None; maxb + 1];
+        for &b in widths {
+            assert!(b >= 2, "need at least sign + 1 magnitude bit");
+            let t = if uniform {
+                QTable::uniform(b - 1)
+            } else {
+                QTable::nonuniform(b - 1, epsilon)
+            };
+            tables[b as usize] = Some(t);
+        }
+        QTables { epsilon, tables }
+    }
+
+    /// Paper configuration: W = {2,4,8}, non-uniform.
+    pub fn paper_default() -> Self {
+        QTables::new(&[2, 4, 8], DEFAULT_EPSILON, false)
+    }
+
+    #[inline]
+    pub fn get(&self, bits: u32) -> &QTable {
+        self.tables[bits as usize].as_ref().expect("bitwidth not configured")
+    }
+}
+
+/// ε default. [31] tunes ε per table size; ε ≈ 0.25 puts ~55% of an 8-bit
+/// table below m = 0.25 which matched gradient magnitude CDFs best in our
+/// sweeps (see EXPERIMENTS.md, parametric study).
+pub const DEFAULT_EPSILON: f64 = 0.25;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn table_endpoints_and_monotone() {
+        for eps in [0.0, 0.1, 0.25, 0.5] {
+            for bits in [1u32, 3, 7] {
+                let t = QTable::nonuniform(bits, eps);
+                assert_eq!(t.grid[0], 0.0);
+                assert!((t.grid[t.levels() - 1] - 1.0).abs() < 1e-6);
+                assert!(t.grid.windows(2).all(|w| w[0] < w[1]), "not strictly increasing");
+                assert_eq!(t.levels(), 1 << bits);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerates in f32")]
+    fn extreme_epsilon_bits_rejected() {
+        // base=3 at 7 magnitude bits: (3^1−1)/(3^127−1) underflows f32 to 0.
+        QTable::nonuniform(7, 1.0);
+    }
+
+    #[test]
+    fn epsilon_zero_is_uniform() {
+        let t = QTable::uniform(2);
+        assert_eq!(t.grid, vec![0.0, 1.0 / 3.0, 2.0 / 3.0, 1.0]);
+    }
+
+    #[test]
+    fn larger_epsilon_concentrates_near_zero() {
+        let small = QTable::nonuniform(4, 0.05);
+        let large = QTable::nonuniform(4, 0.5);
+        // count grid values below 0.25
+        let count = |t: &QTable| t.grid.iter().filter(|&&g| g < 0.25).count();
+        assert!(count(&large) > count(&small));
+    }
+
+    #[test]
+    fn bracket_edges() {
+        let t = QTable::uniform(2);
+        assert_eq!(t.bracket(0.0), (0, 0.0));
+        assert_eq!(t.bracket(1.0), (3, 0.0));
+        let (lo, p) = t.bracket(0.5);
+        assert_eq!(lo, 1);
+        assert!((p - 0.5).abs() < 1e-5);
+        // clamps slightly-out-of-range input (fp noise)
+        assert_eq!(t.bracket(1.0 + 5e-5), (3, 0.0));
+    }
+
+    #[test]
+    fn quantize_is_unbiased() {
+        let t = QTable::nonuniform(3, 0.25);
+        let mut rng = Pcg::new(7);
+        for &m in &[0.03f32, 0.2, 0.55, 0.9] {
+            let n = 100_000;
+            let mut sum = 0.0f64;
+            for _ in 0..n {
+                sum += t.value(t.quantize(m, rng.next_f32())) as f64;
+            }
+            let mean = sum / n as f64;
+            assert!((mean - m as f64).abs() < 0.004, "m={m} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn qtables_paper_default_has_w248() {
+        let qt = QTables::paper_default();
+        assert_eq!(qt.get(2).levels(), 2);
+        assert_eq!(qt.get(4).levels(), 8);
+        assert_eq!(qt.get(8).levels(), 128);
+    }
+
+    #[test]
+    fn nonuniform_beats_uniform_on_skewed_data() {
+        // The motivating claim of §2.3: for skewed magnitudes the
+        // non-uniform table has lower MSE.
+        let nu = QTable::nonuniform(3, 0.4);
+        let un = QTable::uniform(3);
+        let mut rng = Pcg::new(3);
+        let mut data = Vec::new();
+        for _ in 0..2000 {
+            // log-normal-ish magnitudes normalized to [0,1]
+            let v = (rng.next_normal().abs() * 0.1).min(1.0);
+            data.push(v * v); // extra skew
+        }
+        let mse = |t: &QTable| -> f64 {
+            let mut acc = 0.0;
+            for (i, &m) in data.iter().enumerate() {
+                // average over 64 stochastic draws
+                for k in 0..64u32 {
+                    let u = crate::util::rng::uniform_u01(99, i as u32 * 64 + k);
+                    let e = t.value(t.quantize(m, u)) - m;
+                    acc += (e as f64) * (e as f64);
+                }
+            }
+            acc
+        };
+        assert!(mse(&nu) < mse(&un), "nonuniform should beat uniform on skewed data");
+    }
+}

@@ -1,0 +1,158 @@
+//! Bit packing of quantization codes (paper §3.2/§4).
+//!
+//! DynamiQ restricts bitwidths to powers of two (1/2/4/8/16) so codes pack
+//! into bytes without crossing boundaries — the reason the paper gives for
+//! the power-of-two restriction. Codes are sign-magnitude: the top bit of
+//! each b-bit code is the sign, the low b−1 bits the magnitude index.
+//! Packing is little-endian within each byte (code k of a byte occupies
+//! bits [k·b, (k+1)·b)), matching the pallas kernel's layout so buffers are
+//! byte-identical across layers.
+
+/// Pack `codes` (each < 2^bits) at `bits` ∈ {1,2,4,8,16} into bytes.
+pub fn pack(codes: &[u16], bits: u32) -> Vec<u8> {
+    assert!(matches!(bits, 1 | 2 | 4 | 8 | 16), "bits must be a power of two ≤ 16");
+    match bits {
+        16 => {
+            let mut out = Vec::with_capacity(codes.len() * 2);
+            for &c in codes {
+                out.extend_from_slice(&c.to_le_bytes());
+            }
+            out
+        }
+        8 => codes.iter().map(|&c| {
+            debug_assert!(c < 256);
+            c as u8
+        }).collect(),
+        _ => {
+            let per_byte = (8 / bits) as usize;
+            let mask = (1u16 << bits) - 1;
+            let mut out = vec![0u8; codes.len().div_ceil(per_byte)];
+            for (i, &c) in codes.iter().enumerate() {
+                debug_assert!(c <= mask, "code {c} exceeds {bits}-bit range");
+                let byte = i / per_byte;
+                let shift = (i % per_byte) as u32 * bits;
+                out[byte] |= ((c & mask) as u8) << shift;
+            }
+            out
+        }
+    }
+}
+
+/// Unpack `count` codes of `bits` each from `bytes`.
+pub fn unpack(bytes: &[u8], bits: u32, count: usize) -> Vec<u16> {
+    assert!(matches!(bits, 1 | 2 | 4 | 8 | 16));
+    match bits {
+        16 => {
+            assert!(bytes.len() >= count * 2);
+            (0..count).map(|i| u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]])).collect()
+        }
+        8 => {
+            assert!(bytes.len() >= count);
+            bytes[..count].iter().map(|&b| b as u16).collect()
+        }
+        _ => {
+            let per_byte = (8 / bits) as usize;
+            assert!(bytes.len() >= count.div_ceil(per_byte));
+            let mask = (1u16 << bits) - 1;
+            (0..count)
+                .map(|i| {
+                    let byte = bytes[i / per_byte] as u16;
+                    let shift = (i % per_byte) as u32 * bits;
+                    (byte >> shift) & mask
+                })
+                .collect()
+        }
+    }
+}
+
+/// Bytes needed for `count` codes of `bits` each.
+#[inline]
+pub fn packed_len(count: usize, bits: u32) -> usize {
+    (count * bits as usize).div_ceil(8)
+}
+
+/// Compose a sign-magnitude code: sign ∈ {0,1} in the top bit of a b-bit
+/// code, magnitude index in the low b−1 bits.
+#[inline]
+pub fn sign_mag_code(sign: bool, mag: u16, bits: u32) -> u16 {
+    debug_assert!(mag < (1 << (bits - 1)), "magnitude overflows {bits}-bit code");
+    ((sign as u16) << (bits - 1)) | mag
+}
+
+/// Decompose a sign-magnitude code → (negative?, magnitude index).
+#[inline]
+pub fn split_sign_mag(code: u16, bits: u32) -> (bool, u16) {
+    let mag_mask = (1u16 << (bits - 1)) - 1;
+    ((code >> (bits - 1)) & 1 == 1, code & mag_mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        Prop::new(64).check(
+            "pack-roundtrip",
+            |rng| {
+                let bits = [1u32, 2, 4, 8, 16][rng.below(5) as usize];
+                let n = rng.below(100) as usize;
+                let codes: Vec<u16> =
+                    (0..n).map(|_| (rng.next_u32() & ((1u32 << bits) - 1)) as u16).collect();
+                (bits, codes)
+            },
+            |(bits, codes)| {
+                let packed = pack(codes, *bits);
+                if packed.len() != packed_len(codes.len(), *bits) {
+                    return Err("packed_len mismatch".into());
+                }
+                let un = unpack(&packed, *bits, codes.len());
+                if &un != codes {
+                    return Err(format!("roundtrip failed at bits={bits}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn layout_is_little_endian_within_byte() {
+        // codes [1, 2, 3, 0] at 2 bits → byte 0b00_11_10_01 = 0x39
+        assert_eq!(pack(&[1, 2, 3, 0], 2), vec![0x39]);
+        // codes [0xA, 0x5] at 4 bits → 0x5A
+        assert_eq!(pack(&[0xA, 0x5], 4), vec![0x5A]);
+        // 1-bit: [1,0,0,0,0,0,0,1] → 0x81
+        assert_eq!(pack(&[1, 0, 0, 0, 0, 0, 0, 1], 1), vec![0x81]);
+    }
+
+    #[test]
+    fn ragged_tail_pads_with_zero() {
+        let p = pack(&[3, 3, 3], 2);
+        assert_eq!(p, vec![0b00_11_11_11]);
+        assert_eq!(unpack(&p, 2, 3), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn sign_mag_roundtrip() {
+        for bits in [2u32, 4, 8] {
+            for mag in 0..(1u16 << (bits - 1)) {
+                for sign in [false, true] {
+                    let c = sign_mag_code(sign, mag, bits);
+                    assert!(c < (1 << bits));
+                    assert_eq!(split_sign_mag(c, bits), (sign, mag));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_len_examples() {
+        assert_eq!(packed_len(256, 2), 64);
+        assert_eq!(packed_len(256, 4), 128);
+        assert_eq!(packed_len(256, 8), 256);
+        assert_eq!(packed_len(3, 2), 1);
+        assert_eq!(packed_len(5, 4), 3);
+        assert_eq!(packed_len(4, 16), 8);
+    }
+}

@@ -1,0 +1,205 @@
+//! Rounding-randomness sources: independent vs *correlated* (paper §2.4,
+//! §3.3, after Suresh et al. [63]).
+//!
+//! Correlated rounding draws worker i's uniform as
+//!
+//! ```text
+//! u_i = (pi_i + gamma_i) / n
+//! ```
+//!
+//! where π is a random permutation of {0..n−1} implicitly shared by all
+//! workers (derived from the shared seed; never communicated) and γ_i is
+//! worker-private U[0,1). The u_i remain marginally uniform but exactly one
+//! worker lands in each interval [k/n, (k+1)/n) — a stratified sample — so
+//! when one worker rounds a partial sum up, another is likely to round
+//! down, canceling aggregation error.
+//!
+//! Cost note: we draw one shared permutation per (round, super-group), not
+//! per entry. Per-entry variance only depends on the *per-entry joint*
+//! distribution of (u_1..u_n), which is stratified either way; sharing π
+//! across a super-group amortizes the O(n) permutation generation to
+//! O(n/S) per entry. (Verified empirically in tests below and in the Tab 6
+//! ablation.)
+
+use crate::util::rng::{pcg_hash, shared_permutation, uniform_u01};
+
+/// How rounding uniforms are drawn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// i.i.d. per worker — the baseline.
+    Independent,
+    /// Suresh-et-al stratified sharing across `n` workers.
+    Correlated,
+    /// Round-to-nearest (biased; used only for scale metadata and tests).
+    Nearest,
+}
+
+/// Per-(worker, round) rounding context. `seed` is the *shared* job seed;
+/// worker privacy comes from folding `worker` into the γ stream only.
+#[derive(Clone, Debug)]
+pub struct RoundingCtx {
+    pub mode: Rounding,
+    pub shared_seed: u32,
+    pub worker: u32,
+    pub n_workers: u32,
+    pub round: u32,
+    /// cached γ-stream seed (perf: computing it per entry costs an extra
+    /// hash on the compression hot path — see EXPERIMENTS.md §Perf)
+    gamma_seed_cached: u32,
+    inv_n: f32,
+}
+
+impl RoundingCtx {
+    pub fn new(mode: Rounding, shared_seed: u32, worker: u32, n_workers: u32, round: u32) -> Self {
+        assert!(n_workers >= 1);
+        assert!(worker < n_workers);
+        let gamma_seed_cached = shared_seed
+            ^ pcg_hash(0x9E37_79B9, worker)
+            ^ round.wrapping_mul(0x85EB_CA6B);
+        RoundingCtx {
+            mode,
+            shared_seed,
+            worker,
+            n_workers,
+            round,
+            gamma_seed_cached,
+            inv_n: 1.0 / n_workers as f32,
+        }
+    }
+
+    /// γ stream: private to this worker (seed ⊕ hash(worker)) but still
+    /// deterministic given (seed, worker, round, counter).
+    #[inline]
+    fn gamma_seed(&self) -> u32 {
+        self.gamma_seed_cached
+    }
+
+    /// Shared-π slot of this worker for super-group `sg`: π is regenerated
+    /// per (shared_seed, round, sg) so different super-groups stratify
+    /// independently.
+    pub fn pi_slot(&self, sg: u32) -> u32 {
+        if self.n_workers == 1 {
+            return 0;
+        }
+        let perm = shared_permutation(
+            self.shared_seed ^ sg.wrapping_mul(0xC2B2_AE35),
+            self.round,
+            self.n_workers as usize,
+        );
+        perm[self.worker as usize]
+    }
+
+    /// The rounding uniform for entry counter `ctr` within super-group `sg`
+    /// (callers pass a per-chunk-unique counter; `pi` is the cached
+    /// [`Self::pi_slot`] for `sg`).
+    #[inline]
+    pub fn uniform(&self, pi: u32, ctr: u32) -> f32 {
+        match self.mode {
+            Rounding::Nearest => 0.5,
+            Rounding::Independent => uniform_u01(self.gamma_seed(), ctr),
+            Rounding::Correlated => {
+                let gamma = uniform_u01(self.gamma_seed(), ctr);
+                // NOTE: (pi + γ) · (1/n) == (pi + γ) / n exactly only when n
+                // is a power of two; to stay bit-compatible with the pallas
+                // kernel (which divides), keep the division.
+                (pi as f32 + gamma) / self.n_workers as f32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctxs(mode: Rounding, n: u32, round: u32) -> Vec<RoundingCtx> {
+        (0..n).map(|w| RoundingCtx::new(mode, 42, w, n, round)).collect()
+    }
+
+    #[test]
+    fn correlated_uniforms_are_stratified() {
+        for n in [2u32, 4, 8] {
+            let cs = ctxs(Rounding::Correlated, n, 3);
+            for sg in 0..16u32 {
+                let slots: Vec<u32> = cs.iter().map(|c| c.pi_slot(sg)).collect();
+                let mut sorted = slots.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..n).collect::<Vec<_>>(), "π slots must be a permutation");
+                for ctr in 0..8u32 {
+                    let mut us: Vec<f32> =
+                        cs.iter().map(|c| c.uniform(c.pi_slot(sg), ctr)).collect();
+                    us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    // exactly one per interval [k/n,(k+1)/n)
+                    for (k, u) in us.iter().enumerate() {
+                        assert!(
+                            *u >= k as f32 / n as f32 && *u < (k + 1) as f32 / n as f32,
+                            "u={u} not in stratum {k}/{n}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_marginals_are_uniform() {
+        let c = RoundingCtx::new(Rounding::Correlated, 7, 2, 4, 0);
+        let pi = c.pi_slot(5);
+        let mut sum = 0.0f64;
+        let n = 50_000;
+        for ctr in 0..n {
+            sum += c.uniform(pi, ctr) as f64;
+        }
+        // with fixed π the mean is (π + 0.5)/n_workers
+        let expect = (pi as f64 + 0.5) / 4.0;
+        assert!((sum / n as f64 - expect).abs() < 0.01);
+    }
+
+    #[test]
+    fn independent_workers_decorrelated() {
+        let cs = ctxs(Rounding::Independent, 2, 0);
+        let mut dot = 0.0f64;
+        let n = 20_000;
+        for ctr in 0..n {
+            let a = cs[0].uniform(0, ctr) as f64 - 0.5;
+            let b = cs[1].uniform(0, ctr) as f64 - 0.5;
+            dot += a * b;
+        }
+        assert!((dot / n as f64).abs() < 0.01, "independent streams correlate");
+    }
+
+    #[test]
+    fn correlated_halves_worst_case_variance() {
+        // §2.4's example: two workers quantize x=1/2 to {0,1}. Independent
+        // variance of the sum estimate is 1/2; correlated is ~0.
+        let quantize = |u: f32| if u < 0.5 { 1.0f64 } else { 0.0 };
+        for (mode, max_var) in [(Rounding::Independent, 0.6), (Rounding::Correlated, 0.05)] {
+            let cs = ctxs(mode, 2, 1);
+            let pis: Vec<u32> = cs.iter().map(|c| c.pi_slot(0)).collect();
+            let trials = 20_000;
+            let (mut s, mut s2) = (0.0f64, 0.0f64);
+            for ctr in 0..trials {
+                let est: f64 = cs.iter().zip(&pis).map(|(c, &p)| quantize(c.uniform(p, ctr))).sum();
+                s += est;
+                s2 += est * est;
+            }
+            let mean = s / trials as f64;
+            let var = s2 / trials as f64 - mean * mean;
+            assert!((mean - 1.0).abs() < 0.02, "biased: {mean}");
+            assert!(var <= max_var, "{mode:?} var={var} > {max_var}");
+        }
+    }
+
+    #[test]
+    fn nearest_is_deterministic_half() {
+        let c = RoundingCtx::new(Rounding::Nearest, 0, 0, 4, 0);
+        assert_eq!(c.uniform(3, 17), 0.5);
+    }
+
+    #[test]
+    fn single_worker_correlated_is_plain_uniform() {
+        let c = RoundingCtx::new(Rounding::Correlated, 5, 0, 1, 2);
+        let u = c.uniform(c.pi_slot(0), 9);
+        assert!((0.0..1.0).contains(&u));
+    }
+}

@@ -1,0 +1,114 @@
+//! Artifact loading + execution over the PJRT CPU client.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+/// The PJRT runtime: one client, a cache of compiled artifacts. The xla
+/// crate's client is not Send/Sync, so the shared instance is per-thread
+/// (the trainer and all experiment drivers run on the main thread; worker
+/// parallelism lives in the codec/coordinator layer, not in PJRT).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<Artifact>>>,
+}
+
+/// A compiled, loaded HLO artifact.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Thread-wide shared runtime: XLA compilation of the larger model
+    /// artifacts takes tens of seconds, so experiment drivers that build
+    /// many trainers must share one compiled-artifact cache.
+    pub fn global() -> Rc<Runtime> {
+        thread_local! {
+            static G: RefCell<Option<Rc<Runtime>>> = const { RefCell::new(None) };
+        }
+        G.with(|g| {
+            g.borrow_mut()
+                .get_or_insert_with(|| Rc::new(Runtime::cpu().expect("pjrt cpu client")))
+                .clone()
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) an HLO-text artifact.
+    pub fn load(&self, path: &str) -> Result<Rc<Artifact>> {
+        if let Some(a) = self.cache.borrow().get(path) {
+            return Ok(a.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {path}: {e:?}"))
+            .with_context(|| "run `make artifacts` to generate HLO artifacts")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {path}: {e:?}"))?;
+        let art = Rc::new(Artifact { exe, name: path.to_string() });
+        self.cache.borrow_mut().insert(path.to_string(), art.clone());
+        Ok(art)
+    }
+}
+
+impl Artifact {
+    /// Execute with literal inputs; returns the flattened tuple outputs
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+// ---- literal helpers ----
+
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_u8(data: &[u8], dims: &[i64]) -> Result<xla::Literal> {
+    let dims_us: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &dims_us, data)
+        .map_err(|e| anyhow!("u8 literal: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn to_u8(lit: &xla::Literal) -> Result<Vec<u8>> {
+    lit.to_vec::<u8>().map_err(|e| anyhow!("to_vec u8: {e:?}"))
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_f32(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}

@@ -1,0 +1,76 @@
+//! `artifacts/manifest.json` — the shape contract between the python
+//! compile path and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    /// padded flat parameter count (multiple of the super-group size)
+    pub d: usize,
+    /// raw parameter count before padding
+    pub d_raw: usize,
+    /// number of super-groups (= d / 256)
+    pub nsg: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub tile_sg: usize,
+    pub super_group: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Self> {
+        let path = Path::new(dir).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut models = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("models") {
+            for (name, v) in m {
+                let get = |k: &str| -> Result<usize> {
+                    v.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest: {name}.{k}"))
+                };
+                models.insert(
+                    name.clone(),
+                    ModelEntry {
+                        d: get("d")?,
+                        d_raw: get("d_raw")?,
+                        nsg: get("nsg")?,
+                        batch: get("batch")?,
+                        seq_len: get("seq_len")?,
+                        vocab: get("vocab")?,
+                    },
+                );
+            }
+        }
+        let k = j.get("kernels").ok_or_else(|| anyhow!("manifest: kernels"))?;
+        Ok(Manifest {
+            dir: dir.to_string(),
+            models,
+            tile_sg: k.get("tile_sg").and_then(Json::as_usize).unwrap_or(64),
+            super_group: k.get("super_group").and_then(Json::as_usize).unwrap_or(256),
+        })
+    }
+
+    pub fn model(&self, preset: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(preset)
+            .ok_or_else(|| anyhow!("preset {preset} not in manifest (lowered presets: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> String {
+        format!("{}/{}.hlo.txt", self.dir, name)
+    }
+}

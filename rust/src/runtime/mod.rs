@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and execute them from the rust hot path.
+//!
+//! Python runs only at `make artifacts` time; after that this module is
+//! the whole model/kernel execution layer — `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute` (the pattern
+//! of /opt/xla-example/load_hlo/).
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{Artifact, Runtime};
+pub use manifest::Manifest;

@@ -1,0 +1,115 @@
+//! Synthetic tiny-corpus workload (DESIGN.md substitution for
+//! Wikitext-103 / UltraChat): a Zipf-unigram + sparse-Markov-bigram token
+//! stream. Learnable — a transformer drops well below the unigram entropy
+//! by exploiting the transition structure — yet generated in milliseconds
+//! and fully deterministic.
+
+use crate::util::rng::Pcg;
+
+pub struct Corpus {
+    pub tokens: Vec<i32>,
+    pub vocab: usize,
+}
+
+impl Corpus {
+    pub fn synthetic(vocab: usize, n_tokens: usize, seed: u64) -> Self {
+        let mut rng = Pcg::new(seed);
+        // Zipf(1.1) unigram via inverse-CDF table
+        let mut cdf = Vec::with_capacity(vocab);
+        let mut acc = 0.0f64;
+        for r in 1..=vocab {
+            acc += 1.0 / (r as f64).powf(1.1);
+            cdf.push(acc);
+        }
+        let total = acc;
+        let n_succ = 8;
+        let succ: Vec<i32> =
+            (0..vocab * n_succ).map(|_| rng.below(vocab as u32) as i32).collect();
+        let mut out = Vec::with_capacity(n_tokens);
+        let mut cur = 0usize;
+        for _ in 0..n_tokens {
+            if rng.next_f32() < 0.7 {
+                cur = succ[cur * n_succ + rng.below(n_succ as u32) as usize] as usize;
+            } else {
+                let x = rng.next_f64() * total;
+                cur = cdf.partition_point(|&c| c < x).min(vocab - 1);
+            }
+            out.push(cur as i32);
+        }
+        Corpus { tokens: out, vocab }
+    }
+
+    /// Contiguous shard for worker `i` of `n` (data parallel split).
+    pub fn shard(&self, i: usize, n: usize) -> &[i32] {
+        let len = self.tokens.len() / n;
+        &self.tokens[i * len..(i + 1) * len]
+    }
+}
+
+/// Random-crop batch sampler over a shard (packed sequences, as the paper
+/// does for Wikitext/UltraChat).
+pub struct BatchSampler {
+    rng: Pcg,
+    pub batch: usize,
+    pub seq_plus1: usize,
+}
+
+impl BatchSampler {
+    pub fn new(batch: usize, seq_len: usize, seed: u64) -> Self {
+        BatchSampler { rng: Pcg::new(seed), batch, seq_plus1: seq_len + 1 }
+    }
+
+    /// Next batch: `batch × (seq_len+1)` tokens, row-major.
+    pub fn sample(&mut self, shard: &[i32]) -> Vec<i32> {
+        assert!(shard.len() > self.seq_plus1, "shard too small");
+        let mut out = Vec::with_capacity(self.batch * self.seq_plus1);
+        for _ in 0..self.batch {
+            let start = self.rng.below((shard.len() - self.seq_plus1) as u32) as usize;
+            out.extend_from_slice(&shard[start..start + self.seq_plus1]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_in_range_and_deterministic() {
+        let c = Corpus::synthetic(512, 10_000, 7);
+        assert_eq!(c.tokens.len(), 10_000);
+        assert!(c.tokens.iter().all(|&t| (0..512).contains(&t)));
+        let c2 = Corpus::synthetic(512, 10_000, 7);
+        assert_eq!(c.tokens, c2.tokens);
+    }
+
+    #[test]
+    fn corpus_is_zipf_skewed_with_bigram_structure() {
+        let c = Corpus::synthetic(512, 50_000, 1);
+        let mut counts = vec![0usize; 512];
+        for &t in &c.tokens {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // head-heavy unigram
+        let head: usize = counts[..16].iter().sum();
+        assert!(head as f64 > 0.2 * c.tokens.len() as f64);
+        // concentrated transitions
+        let pairs: std::collections::HashSet<(i32, i32)> =
+            c.tokens.windows(2).map(|w| (w[0], w[1])).collect();
+        assert!(pairs.len() < c.tokens.len() / 2);
+    }
+
+    #[test]
+    fn shards_disjoint_and_batches_shaped() {
+        let c = Corpus::synthetic(256, 40_000, 3);
+        let a = c.shard(0, 4);
+        let b = c.shard(3, 4);
+        assert_eq!(a.len(), 10_000);
+        assert_eq!(b.len(), 10_000);
+        let mut s = BatchSampler::new(4, 64, 9);
+        let batch = s.sample(a);
+        assert_eq!(batch.len(), 4 * 65);
+    }
+}

@@ -1,0 +1,319 @@
+//! The distributed trainer: n data-parallel workers, per-round fwd/bwd via
+//! the PJRT artifacts, gradient synchronization through the compressed
+//! multi-hop all-reduce, AdamW on the leader, TTA bookkeeping.
+//!
+//! All workers hold identical parameters by construction (they all decode
+//! the identical broadcast payloads — verified by the engine), so the
+//! leader runs one fwd/bwd per worker shard and one optimizer step, which
+//! is the honest CPU-simulation equivalent of the paper's 8-GPU testbed.
+
+pub mod data;
+
+use anyhow::{anyhow, Result};
+
+use crate::codec::{make_codecs, GradCodec};
+use crate::collective::{AllReduceEngine, NetworkModel, RoundReport, Topology};
+use crate::metrics::{ComputeModel, RoundTime, TtaCurve};
+use crate::runtime::exec::{lit_f32, lit_i32, scalar_f32, to_f32};
+use crate::runtime::{Manifest, Runtime};
+use crate::train::data::{BatchSampler, Corpus};
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub scheme: String,
+    pub n_workers: usize,
+    pub topology: Topology,
+    pub shared_network: bool,
+    pub rounds: u32,
+    /// initial LR; LinearLR decays to `lr * end_factor` over
+    /// `lr_total_iters` rounds (Table 1's schedule shape)
+    pub lr: f32,
+    pub lr_end_factor: f32,
+    pub lr_total_iters: u32,
+    pub eval_every: u32,
+    pub eval_batches: usize,
+    pub corpus_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "tiny".into(),
+            scheme: "DynamiQ".into(),
+            n_workers: 4,
+            topology: Topology::Ring,
+            shared_network: false,
+            rounds: 100,
+            lr: 3e-3,
+            lr_end_factor: 1.0 / 8.0,
+            lr_total_iters: 80,
+            eval_every: 10,
+            eval_batches: 4,
+            corpus_tokens: 200_000,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-round record (drives every TTA figure).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u32,
+    pub train_loss: f32,
+    pub eval_loss: Option<f32>,
+    /// simulated wall-clock time at the END of this round
+    pub sim_time_s: f64,
+    pub time: RoundTime,
+    pub vnmse: f64,
+    pub wire_bytes: u64,
+}
+
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    rt: std::rc::Rc<Runtime>,
+    train_step: std::rc::Rc<crate::runtime::Artifact>,
+    eval_step: std::rc::Rc<crate::runtime::Artifact>,
+    adamw: std::rc::Rc<crate::runtime::Artifact>,
+    pub d: usize,
+    d_raw: usize,
+    batch: usize,
+    seq_len: usize,
+    params: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    corpus: Corpus,
+    samplers: Vec<BatchSampler>,
+    eval_sampler: BatchSampler,
+    engine: AllReduceEngine,
+    codecs: Vec<Box<dyn GradCodec>>,
+    compute: ComputeModel,
+    pub records: Vec<RoundRecord>,
+    pub tta: TtaCurve,
+    sim_time_s: f64,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let entry = manifest.model(&cfg.preset)?.clone();
+        let rt = Runtime::global();
+        let train_step = rt.load(&manifest.artifact_path(&format!("model_{}_train_step", cfg.preset)))?;
+        let eval_step = rt.load(&manifest.artifact_path(&format!("model_{}_eval", cfg.preset)))?;
+        let adamw = rt.load(&manifest.artifact_path(&format!("model_{}_adamw", cfg.preset)))?;
+        let params = init_params_like_python(&entry, cfg.seed as u32)?;
+        let corpus = Corpus::synthetic(entry.vocab, cfg.corpus_tokens, cfg.seed);
+        let samplers = (0..cfg.n_workers)
+            .map(|i| BatchSampler::new(entry.batch, entry.seq_len, cfg.seed ^ (i as u64) << 17))
+            .collect();
+        let eval_sampler = BatchSampler::new(entry.batch, entry.seq_len, cfg.seed ^ 0xE7A1);
+        let mut net = if cfg.shared_network {
+            NetworkModel::shared_100g(cfg.seed as u32)
+        } else {
+            NetworkModel::isolated_100g()
+        };
+        // Scale the modeled bandwidth so the gradient-size : bandwidth
+        // ratio matches the paper's regime (~1.3 GB of BF16 gradient over
+        // 100 Gbps => beta-dominated transfers). Without this, a sub-MB
+        // gradient is pure-latency-bound and every scheme costs alpha*stages,
+        // which is not the operating point the paper studies.
+        const PAPER_GRAD_BYTES: f64 = 2.0 * 650e6;
+        net.bandwidth_bps *= (2.0 * entry.d as f64) / PAPER_GRAD_BYTES;
+        let engine = AllReduceEngine::new(cfg.topology, net);
+        let codecs = make_codecs(&cfg.scheme, cfg.n_workers);
+        // Calibrate the TTA time model so the compute : BF16-communication
+        // ratio matches the paper's testbed (Fig. 6: computation ~= 2x the
+        // exposed BF16 comm). On a real A6000 the sub-1M-param presets
+        // would be launch-latency-bound, which a pure FLOP model cannot
+        // express -- so we pin the ratio instead of the absolute FLOP/s.
+        let mut compute = ComputeModel::default();
+        {
+            let bf16_comm_est = (2 * entry.d * 2) as f64 / (100e9 / 8.0);
+            let flops = 6.0 * entry.d_raw as f64 * (entry.batch * entry.seq_len) as f64;
+            compute.flops_per_s = flops / (2.0 * bf16_comm_est);
+        }
+        Ok(Trainer {
+            d: entry.d,
+            d_raw: entry.d_raw,
+            batch: entry.batch,
+            seq_len: entry.seq_len,
+            m: vec![0.0; entry.d],
+            v: vec![0.0; entry.d],
+            params,
+            corpus,
+            samplers,
+            eval_sampler,
+            engine,
+            codecs,
+            compute,
+            records: Vec::new(),
+            tta: TtaCurve::default(),
+            sim_time_s: 0.0,
+            rt,
+            train_step,
+            eval_step,
+            adamw,
+            cfg,
+        })
+    }
+
+    fn lr_at(&self, round: u32) -> f32 {
+        // torch LinearLR: factor interpolates 1 → end_factor over total_iters
+        let t = (round.min(self.cfg.lr_total_iters)) as f32 / self.cfg.lr_total_iters as f32;
+        self.cfg.lr * (1.0 - t + t * self.cfg.lr_end_factor)
+    }
+
+    /// Run one worker's fwd/bwd via the PJRT artifact.
+    fn worker_step(&mut self, worker: usize) -> Result<(f32, Vec<f32>)> {
+        let shard = self.corpus.shard(worker, self.cfg.n_workers);
+        let tokens = self.samplers[worker].sample(shard);
+        let p = lit_f32(&self.params, &[self.d as i64])?;
+        let t = lit_i32(&tokens, &[self.batch as i64, self.seq_len as i64 + 1])?;
+        let out = self.train_step.run(&[p, t])?;
+        // (loss, grad, sg_mean, sg_sqnorm)
+        let loss = scalar_f32(&out[0])?;
+        let grad = to_f32(&out[1])?;
+        if !loss.is_finite() {
+            return Err(anyhow!("non-finite loss at worker {worker}"));
+        }
+        Ok((loss, grad))
+    }
+
+    /// Run the per-worker fwd/bwd passes and return the exact *average*
+    /// gradient without synchronizing or applying it (used by the
+    /// gradient-structure experiments, Figs 1/3/12).
+    pub fn capture_gradient(&mut self, _round: u32) -> Result<Vec<f32>> {
+        let n = self.cfg.n_workers;
+        let mut sum = vec![0.0f32; self.d];
+        for w in 0..n {
+            let (_, g) = self.worker_step(w)?;
+            for (s, &v) in sum.iter_mut().zip(&g) {
+                *s += v;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        Ok(sum.iter().map(|&x| x * inv).collect())
+    }
+
+    /// One worker's raw local gradient (parametric study, Tab 6).
+    pub fn capture_worker_gradient(&mut self, worker: usize) -> Result<Vec<f32>> {
+        Ok(self.worker_step(worker)?.1)
+    }
+
+    pub fn eval(&mut self) -> Result<f32> {
+        let mut total = 0.0f32;
+        // evaluate on the full (unsharded) corpus tail
+        for _ in 0..self.cfg.eval_batches {
+            let tokens = self.eval_sampler.sample(&self.corpus.tokens);
+            let p = lit_f32(&self.params, &[self.d as i64])?;
+            let t = lit_i32(&tokens, &[self.batch as i64, self.seq_len as i64 + 1])?;
+            let out = self.eval_step.run(&[p, t])?;
+            total += scalar_f32(&out[0])?;
+        }
+        Ok(total / self.cfg.eval_batches as f32)
+    }
+
+    /// Execute one training round: per-worker fwd/bwd → compressed
+    /// all-reduce → AdamW. Returns the record.
+    pub fn round(&mut self, round: u32) -> Result<&RoundRecord> {
+        let n = self.cfg.n_workers;
+        let mut grads = Vec::with_capacity(n);
+        let mut loss_sum = 0.0f32;
+        for w in 0..n {
+            let (loss, grad) = self.worker_step(w)?;
+            loss_sum += loss;
+            grads.push(grad);
+        }
+        let (sum, report): (Vec<f32>, RoundReport) =
+            self.engine.run(&grads, &mut self.codecs, round, self.sim_time_s);
+        let inv_n = 1.0 / n as f32;
+        let avg: Vec<f32> = sum.iter().map(|&x| x * inv_n).collect();
+
+        // AdamW via the PJRT artifact
+        let lr = self.lr_at(round);
+        let out = self.adamw.run(&[
+            lit_f32(&self.params, &[self.d as i64])?,
+            lit_f32(&self.m, &[self.d as i64])?,
+            lit_f32(&self.v, &[self.d as i64])?,
+            lit_f32(&avg, &[self.d as i64])?,
+            crate::runtime::exec::lit_scalar_f32(lr),
+            crate::runtime::exec::lit_scalar_f32(round as f32 + 1.0),
+        ])?;
+        self.params = to_f32(&out[0])?;
+        self.m = to_f32(&out[1])?;
+        self.v = to_f32(&out[2])?;
+
+        let tokens_per_batch = self.batch * self.seq_len;
+        let time = crate::metrics::timemodel::round_time(
+            &self.compute,
+            base_scheme(&self.cfg.scheme),
+            self.d_raw,
+            tokens_per_batch,
+            n,
+            &report,
+        );
+        self.sim_time_s += time.total_s();
+        let eval_loss = if round % self.cfg.eval_every == self.cfg.eval_every - 1 {
+            let e = self.eval()?;
+            self.tta.push(self.sim_time_s, e as f64);
+            Some(e)
+        } else {
+            None
+        };
+        self.records.push(RoundRecord {
+            round,
+            train_loss: loss_sum / n as f32,
+            eval_loss,
+            sim_time_s: self.sim_time_s,
+            time,
+            vnmse: report.vnmse,
+            wire_bytes: report.total_bytes(),
+        });
+        Ok(self.records.last().unwrap())
+    }
+
+    pub fn run(&mut self) -> Result<()> {
+        for r in 0..self.cfg.rounds {
+            self.round(r)?;
+        }
+        Ok(())
+    }
+
+    pub fn mean_vnmse(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.vnmse).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+}
+
+/// DynamiQ:b=X variants share DynamiQ's traffic model.
+fn base_scheme(scheme: &str) -> &str {
+    if scheme.starts_with("DynamiQ") {
+        "DynamiQ"
+    } else {
+        scheme
+    }
+}
+
+/// Load the GPT-2-style initial parameters emitted by aot.py (python owns
+/// the tensor layout; rust treats the vector as opaque).
+fn init_params_like_python(
+    entry: &crate::runtime::manifest::ModelEntry,
+    _seed: u32,
+) -> Result<Vec<f32>> {
+    let init_path = format!("artifacts/init_d{}.f32", entry.d);
+    let bytes = std::fs::read(&init_path)
+        .map_err(|_| anyhow!("missing {init_path} — run `make artifacts`"))?;
+    anyhow::ensure!(bytes.len() == entry.d * 4, "init size mismatch");
+    let mut out = vec![0.0f32; entry.d];
+    for (i, c) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(out)
+}

@@ -1,0 +1,165 @@
+//! Tiny benchmarking harness (the image vendors no `criterion`).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Method: warmup, then adaptively pick an iteration count targeting
+//! ~200ms per sample, collect N samples, report median / p10 / p90 and
+//! derived throughput. Deterministic workloads + median make the numbers
+//! stable enough for the before/after logs in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// median ns per iteration
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// optional bytes processed per iteration (for MB/s reporting)
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.median_ns)
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12.1} ns/iter  (p10 {:>10.1}, p90 {:>10.1})",
+            self.name, self.median_ns, self.p10_ns, self.p90_ns
+        );
+        if let Some(gbps) = self.throughput_gbps() {
+            s.push_str(&format!("  {:>8.3} GB/s", gbps));
+        }
+        s
+    }
+}
+
+pub struct Bench {
+    pub sample_target_ns: u64,
+    pub samples: usize,
+    pub warmup_iters: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { sample_target_ns: 100_000_000, samples: 11, warmup_iters: 3 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { sample_target_ns: 20_000_000, samples: 7, warmup_iters: 2 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, bytes_per_iter: Option<u64>, mut f: F) -> BenchResult {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let per_iter = (t0.elapsed().as_nanos() as u64 / self.warmup_iters).max(1);
+        let iters = (self.sample_target_ns / per_iter).clamp(1, 1_000_000);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |q: f64| samples_ns[((samples_ns.len() - 1) as f64 * q).round() as usize];
+        let r = BenchResult {
+            name: name.to_string(),
+            median_ns: pick(0.5),
+            p10_ns: pick(0.1),
+            p90_ns: pick(0.9),
+            bytes_per_iter,
+        };
+        println!("{}", r.report());
+        r
+    }
+}
+
+/// Simple aligned table printer used by experiment drivers to emit the
+/// paper's tables as text.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < ncol {
+                    w[i] = w[i].max(c.len());
+                }
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<width$} | ", c, width = w[i.min(w.len() - 1)]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &w));
+        out.push('\n');
+        out.push_str("|");
+        for wi in &w {
+            out.push_str(&format!("{}|", "-".repeat(wi + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let b = Bench { sample_target_ns: 1_000_000, samples: 5, warmup_iters: 2 };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", Some(8), || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.p90_ns);
+        assert!(r.throughput_gbps().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "vNMSE"]);
+        t.row(vec!["DynamiQ".into(), "0.00096".into()]);
+        t.row(vec!["MXFP8".into(), "0.00299".into()]);
+        let s = t.render();
+        assert!(s.contains("| DynamiQ | 0.00096 |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+}

@@ -1,0 +1,67 @@
+//! Infrastructure utilities: deterministic PRNG shared with the python
+//! layer, a minimal JSON codec (no serde offline), a mini property-test
+//! framework (no proptest offline), and a bench harness (no criterion
+//! offline). See DESIGN.md "Substitutions".
+
+pub mod benchkit;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+    }
+}
+
+/// Squared ℓ2 norm, accumulated in f64 (matters for 1e8-entry gradients).
+pub fn sq_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// vNMSE = ||x - x̂||² / ||x||² — the paper's compression-error metric (§5).
+pub fn vnmse(x: &[f32], xhat: &[f32]) -> f64 {
+    assert_eq!(x.len(), xhat.len());
+    let num: f64 = x
+        .iter()
+        .zip(xhat)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum();
+    let den = sq_norm(x);
+    if den == 0.0 {
+        if num == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_norm() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[1.0, 3.0]), 2.0);
+        assert_eq!(sq_norm(&[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn vnmse_basics() {
+        let x = [1.0f32, 2.0, 2.0];
+        assert_eq!(vnmse(&x, &x), 0.0);
+        assert!((vnmse(&[3.0, 4.0], &[3.0, 0.0]) - 16.0 / 25.0).abs() < 1e-12);
+        assert_eq!(vnmse(&[0.0], &[0.0]), 0.0);
+        assert_eq!(vnmse(&[0.0], &[1.0]), f64::INFINITY);
+    }
+}

@@ -1,0 +1,152 @@
+//! Mini property-testing framework (the image vendors no `proptest`).
+//!
+//! Deterministic: every case derives from the run seed, failures print the
+//! seed + case index so they replay exactly. Supports value generators and
+//! linear shrinking for `Vec<f32>` inputs (halve the vector, zero entries).
+
+use super::rng::Pcg;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 128, seed: 0xD15E_A5E }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Run `test` on `cases` inputs drawn by `gen`. On failure, attempts to
+    /// shrink (if `shrink` yields candidates) and panics with a replayable
+    /// description produced by `fmt`.
+    pub fn check<T, G, F>(&self, name: &str, mut gen: G, mut test: F)
+    where
+        T: Clone + std::fmt::Debug,
+        G: FnMut(&mut Pcg) -> T,
+        F: FnMut(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let mut rng = Pcg::new(self.seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+            let input = gen(&mut rng);
+            if let Err(msg) = test(&input) {
+                panic!(
+                    "property '{name}' failed (seed={:#x} case={case}): {msg}\ninput: {input:?}",
+                    self.seed
+                );
+            }
+        }
+    }
+
+    /// Specialized check over f32 vectors with shrinking: on failure, tries
+    /// successively smaller/simpler vectors that still fail and reports the
+    /// smallest found.
+    pub fn check_vec<F>(&self, name: &str, len_range: (usize, usize), scale: f32, mut test: F)
+    where
+        F: FnMut(&[f32]) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let mut rng = Pcg::new(self.seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15));
+            let len = len_range.0 + rng.below((len_range.1 - len_range.0 + 1) as u32) as usize;
+            let mut v = vec![0.0f32; len];
+            // Mix distributions: normal body + occasional outliers + zeros,
+            // mimicking gradient skew the paper leans on (§2.2).
+            for x in v.iter_mut() {
+                let r = rng.next_f32();
+                *x = if r < 0.05 {
+                    0.0
+                } else if r < 0.10 {
+                    rng.next_normal() * scale * 100.0
+                } else {
+                    rng.next_normal() * scale
+                };
+            }
+            if let Err(msg) = test(&v) {
+                let shrunk = shrink_vec(&v, &mut test);
+                panic!(
+                    "property '{name}' failed (seed={:#x} case={case}): {msg}\nshrunk input ({} elems): {:?}",
+                    self.seed,
+                    shrunk.len(),
+                    &shrunk[..shrunk.len().min(32)]
+                );
+            }
+        }
+    }
+}
+
+fn shrink_vec<F>(v: &[f32], test: &mut F) -> Vec<f32>
+where
+    F: FnMut(&[f32]) -> Result<(), String>,
+{
+    let mut cur = v.to_vec();
+    loop {
+        let mut improved = false;
+        // try halves
+        if cur.len() > 1 {
+            let halves = [cur[..cur.len() / 2].to_vec(), cur[cur.len() / 2..].to_vec()];
+            for half in halves {
+                if !half.is_empty() && test(&half).is_err() {
+                    cur = half;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if improved {
+            continue;
+        }
+        // try zeroing spans
+        let span = (cur.len() / 4).max(1);
+        for start in (0..cur.len()).step_by(span) {
+            let mut cand = cur.clone();
+            for x in cand[start..(start + span).min(cur.len())].iter_mut() {
+                *x = 0.0;
+            }
+            if cand != cur && test(&cand).is_err() {
+                cur = cand;
+                improved = true;
+                break;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new(32).check_vec("sum-finite", (1, 64), 1.0, |v| {
+            if v.iter().sum::<f32>().is_finite() {
+                Ok(())
+            } else {
+                Err("non-finite".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        Prop::new(4).check_vec("always-fails", (8, 16), 1.0, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generic_check_runs_all_cases() {
+        let mut n = 0;
+        Prop::new(17).check("count", |r| r.next_u32(), |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 17);
+    }
+}

@@ -1,0 +1,207 @@
+//! Deterministic counter-based PRNG shared between rust and the jax/pallas
+//! layer (`python/compile/kernels/prng.py` mirrors it bit-for-bit).
+//!
+//! DynamiQ's correlated rounding (§3.3) requires all workers to agree on a
+//! random permutation π and on per-entry uniforms *without communication*.
+//! We therefore use a stateless hash PRNG: `pcg_hash(seed, index)` yields a
+//! u32 from which uniforms are derived. Being counter-based (not
+//! sequential), the same (seed, counter) pair produces the same value in
+//! any layer, any worker, any execution order — which is also what makes
+//! the pallas kernel and the rust codec byte-compatible.
+
+/// One round of the PCG-RXS-M-XS-32 output function over a Weyl-sequence
+/// state. Matches `prng.pcg_hash` on the python side exactly (u32 wrap).
+#[inline(always)]
+pub fn pcg_hash(seed: u32, index: u32) -> u32 {
+    // Weyl increment keyed by seed; constants from PCG reference impl.
+    let mut state = index
+        .wrapping_mul(747796405)
+        .wrapping_add(seed.wrapping_mul(2891336453).wrapping_add(1));
+    state = state.wrapping_mul(747796405).wrapping_add(2891336453);
+    let word = ((state >> ((state >> 28).wrapping_add(4))) ^ state).wrapping_mul(277803737);
+    (word >> 22) ^ word
+}
+
+/// Uniform in [0, 1) with 24 bits of mantissa entropy (exact in f32 and in
+/// the jnp mirror: `(h >> 8) * 2^-24`).
+#[inline(always)]
+pub fn uniform_u01(seed: u32, index: u32) -> f32 {
+    ((pcg_hash(seed, index) >> 8) as f32) * (1.0 / 16_777_216.0)
+}
+
+/// Stateful convenience RNG over the same hash (sequential counter).
+/// Used where cross-layer reproducibility is not required (data generation,
+/// property tests); still fully deterministic.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    seed: u32,
+    counter: u32,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        // Fold the 64-bit seed into the 32-bit keyed hash domain.
+        let lo = (seed & 0xffff_ffff) as u32;
+        let hi = (seed >> 32) as u32;
+        Pcg { seed: lo ^ hi.wrapping_mul(0x9e37_79b9), counter: 0 }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let v = pcg_hash(self.seed, self.counter);
+        self.counter = self.counter.wrapping_add(1);
+        v
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        ((self.next_u32() >> 8) as f32) * (1.0 / 16_777_216.0)
+    }
+
+    /// Uniform in [0, 1) with f64 precision (32 bits of entropy).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        self.next_u32() as f64 * (1.0 / 4_294_967_296.0)
+    }
+
+    /// Uniform integer in [0, bound).
+    #[inline]
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        // Lemire-style rejection-free bounded sampling (biased < 2^-32; fine
+        // for simulation purposes and, crucially, deterministic).
+        ((self.next_u32() as u64 * bound as u64) >> 32) as u32
+    }
+
+    /// Standard normal via Box–Muller (deterministic).
+    pub fn next_normal(&mut self) -> f32 {
+        let u1 = (self.next_f64()).max(1e-12);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Fill a slice with iid normals scaled by `std`.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.next_normal() * std;
+        }
+    }
+}
+
+/// The shared permutation π of {0..n-1} used by correlated rounding (§3.3).
+/// All workers derive it from (seed, round) alone — no communication —
+/// using Fisher–Yates driven by the counter hash so every worker computes
+/// the identical π for a given round.
+pub fn shared_permutation(seed: u32, round: u32, n: usize) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    // Domain-separate the stream from entry-rounding uniforms.
+    let key = seed ^ round.wrapping_mul(0x85eb_ca6b) ^ 0x5bd1_e995;
+    for i in (1..n).rev() {
+        let j = (pcg_hash(key, i as u32) as u64 * (i as u64 + 1) >> 32) as usize;
+        perm.swap(i, j);
+    }
+    perm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_is_deterministic_and_spread() {
+        assert_eq!(pcg_hash(1, 0), pcg_hash(1, 0));
+        assert_ne!(pcg_hash(1, 0), pcg_hash(1, 1));
+        assert_ne!(pcg_hash(1, 0), pcg_hash(2, 0));
+        // Bit spread: over 4096 consecutive counters each of the 32 bits
+        // should flip at least once.
+        let mut or_all = 0u32;
+        let mut and_all = u32::MAX;
+        for i in 0..4096 {
+            let h = pcg_hash(42, i);
+            or_all |= h;
+            and_all &= h;
+        }
+        assert_eq!(or_all, u32::MAX);
+        assert_eq!(and_all, 0);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut sum = 0.0f64;
+        const N: u32 = 100_000;
+        for i in 0..N {
+            let u = uniform_u01(7, i);
+            assert!((0.0..1.0).contains(&u));
+            sum += u as f64;
+        }
+        let mean = sum / N as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn pcg_stateful_streams_differ_by_seed() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Pcg::new(3);
+        for _ in 0..10_000 {
+            assert!(r.below(17) < 17);
+        }
+        // all residues hit
+        let mut seen = [false; 17];
+        for _ in 0..10_000 {
+            seen[r.below(17) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normals_have_unit_variance() {
+        let mut r = Pcg::new(9);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = r.next_normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn permutation_is_valid_and_shared() {
+        for n in [1usize, 2, 3, 8, 64, 1000] {
+            let p = shared_permutation(5, 12, n);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>());
+            // same (seed, round) => same permutation (worker agreement)
+            assert_eq!(p, shared_permutation(5, 12, n));
+        }
+        assert_ne!(shared_permutation(5, 1, 64), shared_permutation(5, 2, 64));
+    }
+
+    /// Golden values — the python mirror (`python/tests/test_prng.py`)
+    /// asserts the identical constants, pinning cross-layer compatibility.
+    #[test]
+    fn golden_vectors() {
+        assert_eq!(pcg_hash(0, 0), 2831084092);
+        assert_eq!(pcg_hash(0, 1), 2696773594);
+        assert_eq!(pcg_hash(1, 0), 2325698533);
+        assert_eq!(pcg_hash(123456789, 987654321), 1725007857);
+    }
+}

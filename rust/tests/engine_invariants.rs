@@ -1,0 +1,135 @@
+//! Property tests over the whole collective stack: random worker counts,
+//! gradient sizes, schemes and topologies — the coordinator invariants
+//! must hold for every draw (routing completeness, chunk coverage, worker
+//! agreement, budget compliance, finiteness, metadata volume).
+
+use dynamiq::codec::{make_codecs, GradCodec};
+use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
+use dynamiq::coordinator::threaded_allreduce;
+use dynamiq::util::proptest::Prop;
+use dynamiq::util::rng::Pcg;
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(seed ^ (i as u64) << 13);
+            let mut region = 1.0f32;
+            (0..d)
+                .map(|k| {
+                    if k % 96 == 0 {
+                        region = (rng.next_normal() * 1.4).exp();
+                    }
+                    rng.next_normal() * 0.01 * region
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn engine_invariants_hold_for_random_configs() {
+    Prop::new(24).check(
+        "engine-invariants",
+        |rng| {
+            let n = 2 + rng.below(7) as usize; // 2..8
+            let d = 257 + rng.below(20_000) as usize; // ragged sizes
+            let scheme = ["BF16", "DynamiQ", "MXFP8", "MXFP4", "THC", "OmniReduce"]
+                [rng.below(6) as usize];
+            let topo = if n.is_power_of_two() && rng.below(2) == 1 {
+                Topology::Butterfly
+            } else {
+                Topology::Ring
+            };
+            let round = rng.below(1000);
+            (n, d, scheme, topo, round, rng.next_u64())
+        },
+        |&(n, d, scheme, topo, round, seed)| {
+            let g = grads(n, d, seed);
+            let mut codecs = make_codecs(scheme, n);
+            let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+            eng.verify_consistency = true; // worker-agreement invariant
+            let (out, rep) = eng.run(&g, &mut codecs, round, 0.0);
+            if out.len() != d {
+                return Err(format!("length {} != {d}", out.len()));
+            }
+            if !out.iter().all(|v| v.is_finite()) {
+                return Err("non-finite output".into());
+            }
+            if !rep.vnmse.is_finite() || rep.vnmse < 0.0 {
+                return Err(format!("bad vNMSE {}", rep.vnmse));
+            }
+            // sanity error bound per scheme class (generous: invariant is
+            // "bounded", the sharp numbers live in the experiment suite)
+            let bound = match scheme {
+                "BF16" => 1e-2,
+                "DynamiQ" | "MXFP8" => 0.35,
+                _ => 2.5,
+            };
+            if rep.vnmse > bound {
+                return Err(format!("{scheme} vNMSE {} > {bound}", rep.vnmse));
+            }
+            // reduce-scatter traffic exists and the metadata stage stays
+            // light relative to uncompressed traffic
+            if rep.rs_bytes == 0 {
+                return Err("no reduce-scatter traffic".into());
+            }
+            if scheme == "DynamiQ" {
+                // budget: rs payload per worker-hop ≤ b bits/coordinate
+                let hops = (topo.rs_stages(n) * n) as f64;
+                let per_hop_bits = rep.rs_bytes as f64 * 8.0 / hops;
+                let padded = d.div_ceil(256) * 256;
+                let per_entry = per_hop_bits / (padded as f64 / n as f64);
+                if per_entry > 5.0 + 1e-6 {
+                    return Err(format!("budget violated: {per_entry:.3} bits/entry"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn threaded_coordinator_matches_engine_for_random_configs() {
+    Prop::new(8).check(
+        "threaded-vs-engine",
+        |rng| {
+            let n = 2 + rng.below(5) as usize;
+            let d = 512 + rng.below(8_000) as usize;
+            let scheme = ["DynamiQ", "MXFP8", "THC"][rng.below(3) as usize];
+            (n, d, scheme, rng.next_u64())
+        },
+        |&(n, d, scheme, seed)| {
+            let g = grads(n, d, seed);
+            let mut eng_codecs = make_codecs(scheme, n);
+            let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+            let (expect, _) = eng.run(&g, &mut eng_codecs, 3, 0.0);
+            let out = threaded_allreduce(Topology::Ring, g, make_codecs(scheme, n), 3)
+                .map_err(|e| e.to_string())?;
+            for wr in &out {
+                if wr.aggregated != expect {
+                    return Err(format!("worker {} diverged from engine", wr.worker));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn repeated_rounds_keep_stateful_codecs_consistent() {
+    // MXFP µ auto-scaling, OmniReduce adaptive k, DynamiQ fast-u: state
+    // must stay agreed across workers over many rounds.
+    for scheme in ["DynamiQ", "MXFP4", "OmniReduce"] {
+        let n = 4;
+        let d = 6000;
+        let mut codecs = make_codecs(scheme, n);
+        let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+        eng.verify_consistency = true;
+        for round in 0..12 {
+            let g = grads(n, d, 40 + round as u64);
+            let (out, rep) = eng.run(&g, &mut codecs, round, 0.0);
+            assert!(out.iter().all(|v| v.is_finite()), "{scheme} round {round}");
+            assert!(rep.vnmse.is_finite());
+        }
+    }
+}

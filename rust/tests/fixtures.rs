@@ -1,0 +1,130 @@
+//! Cross-layer pinning: the rust codec must reproduce the python ref
+//! oracle (and therefore the pallas kernels, which pytest pins against the
+//! same oracle) byte-for-byte. Fixtures are emitted by `make artifacts`
+//! (python/compile/aot.py::emit_fixtures).
+
+use dynamiq::quant::groups::GroupLayout;
+use dynamiq::quant::hierarchical::encode_scales;
+use dynamiq::quant::nonuniform::{QTable, DEFAULT_EPSILON};
+use dynamiq::quant::packing::{sign_mag_code, split_sign_mag};
+use dynamiq::quant::rounding::{Rounding, RoundingCtx};
+use dynamiq::util::json::Json;
+use dynamiq::util::rng::{pcg_hash, shared_permutation};
+
+const SG: usize = 256;
+const GROUP: usize = 16;
+const GPSG: usize = 16;
+
+fn fixture(path: &str) -> Option<Json> {
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("fixture parse"))
+}
+
+fn require_fixture(path: &str) -> Json {
+    fixture(path).unwrap_or_else(|| {
+        panic!("fixture {path} missing — run `make artifacts` before `cargo test`")
+    })
+}
+
+#[test]
+fn permutations_match_python() {
+    let j = require_fixture("artifacts/fixtures/permutations.json");
+    for case in j.get("cases").unwrap().as_arr().unwrap() {
+        let seed = case.get("seed").unwrap().as_usize().unwrap() as u32;
+        let round = case.get("round").unwrap().as_usize().unwrap() as u32;
+        let n = case.get("n").unwrap().as_usize().unwrap();
+        let expect = case.get("perm").unwrap().as_u32_vec().unwrap();
+        assert_eq!(shared_permutation(seed, round, n), expect, "n={n} round={round}");
+    }
+}
+
+/// Reproduce `ref.compress_ref` for one super-group using the rust quant
+/// primitives directly (mirrors `Dynamiq::compress_sg`, which is private;
+/// the building blocks are the public API).
+#[allow(clippy::too_many_arguments)]
+fn compress_sg_rust(
+    x: &[f32],
+    width: u32,
+    sg_abs: usize,
+    rctx: &RoundingCtx,
+    scale_seed: u32,
+    pi: u32,
+) -> (Vec<u8>, Vec<u8>, f32) {
+    let table = QTable::nonuniform(width - 1, DEFAULT_EPSILON);
+    let maxima: Vec<f32> = x
+        .chunks_exact(GROUP)
+        .map(|g| g.iter().fold(0.0f32, |a, &v| a.max(v.abs())))
+        .collect();
+    let sc = encode_scales(&maxima, scale_seed, (sg_abs * GPSG) as u32);
+    let mut codes = Vec::with_capacity(SG);
+    for (gi, chunk) in x.chunks_exact(GROUP).enumerate() {
+        let inv = if maxima[gi] > 0.0 { 1.0 / maxima[gi] } else { 0.0 };
+        for (k, &v) in chunk.iter().enumerate() {
+            let ctr = (sg_abs * SG + gi * GROUP + k) as u32;
+            let m = (v.abs() * inv).min(1.0);
+            let u0 = rctx.uniform(pi, ctr);
+            let u = if v < 0.0 { 1.0 - u0 } else { u0 };
+            let mag = table.quantize(m, u);
+            codes.push(sign_mag_code(v < 0.0, mag, width) as u8);
+        }
+    }
+    (codes, sc.codes, sc.sf_super)
+}
+
+#[test]
+fn compress_matches_python_ref_bit_exactly() {
+    let j = require_fixture("artifacts/fixtures/dynamiq_compress.json");
+    let seed = j.get("seed").unwrap().as_usize().unwrap() as u32;
+    let mut checked = 0;
+    for case in j.get("cases").unwrap().as_arr().unwrap() {
+        let width = case.get("width").unwrap().as_usize().unwrap() as u32;
+        let worker = case.get("worker").unwrap().as_usize().unwrap() as u32;
+        let round = case.get("round").unwrap().as_usize().unwrap() as u32;
+        let n = case.get("n_workers").unwrap().as_usize().unwrap() as u32;
+        let sg0 = case.get("sg0").unwrap().as_usize().unwrap();
+        let x = case.get("x").unwrap().as_f32_vec().unwrap();
+        let pi = case.get("pi").unwrap().as_u32_vec().unwrap();
+        let want_codes = case.get("codes").unwrap().as_u32_vec().unwrap();
+        let want_scode = case.get("scode").unwrap().as_u32_vec().unwrap();
+        let want_sf = case.get("sf").unwrap().as_f32_vec().unwrap();
+        let want_dec = case.get("decoded").unwrap().as_f32_vec().unwrap();
+
+        let rctx = RoundingCtx::new(Rounding::Correlated, seed, worker, n, round);
+        // cross-check π agreement with python's host-side computation
+        for (k, &p) in pi.iter().enumerate() {
+            assert_eq!(rctx.pi_slot((sg0 + k) as u32), p, "π slot mismatch");
+        }
+        let sseed = seed
+            ^ pcg_hash(0x5CA1E, worker)
+            ^ round.wrapping_mul(0x9E37_79B9);
+
+        let nsg = x.len() / SG;
+        let table = QTable::nonuniform(width - 1, DEFAULT_EPSILON);
+        for sg in 0..nsg {
+            let seg = &x[sg * SG..(sg + 1) * SG];
+            let (codes, scode, sf) =
+                compress_sg_rust(seg, width, sg0 + sg, &rctx, sseed, pi[sg]);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(
+                    c as u32,
+                    want_codes[sg * SG + i],
+                    "code mismatch w={width} sg={sg} i={i}"
+                );
+            }
+            for (g, &sc) in scode.iter().enumerate() {
+                assert_eq!(sc as u32, want_scode[sg * GPSG + g], "scale code w={width} g={g}");
+            }
+            assert_eq!(sf, want_sf[sg], "sf_super w={width} sg={sg}");
+            // decode must match python's decoded values bit-exactly too
+            for (i, &c) in codes.iter().enumerate() {
+                let (neg, mag) = split_sign_mag(c as u16, width);
+                let scale = scode[i / GROUP] as f32 * sf * (1.0 / 255.0);
+                let v = table.value(mag) * scale;
+                let v = if neg { -v } else { v };
+                assert_eq!(v, want_dec[sg * SG + i], "decode mismatch w={width} sg={sg} i={i}");
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 9, "expected ≥ 9 fixture super-groups, got {checked}");
+}

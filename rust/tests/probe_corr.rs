@@ -1,0 +1,83 @@
+// Scratch probe: correlated vs independent rounding variance at various widths.
+use dynamiq::quant::nonuniform::QTable;
+use dynamiq::quant::rounding::{Rounding, RoundingCtx};
+use dynamiq::util::rng::Pcg;
+
+#[test]
+#[ignore]
+fn probe() {
+    let n = 4u32;
+    let d = 4096usize;
+    let mut rng = Pcg::new(1);
+    // per-worker values in [0,1] (normalized magnitudes)
+    let vals: Vec<Vec<f32>> = (0..n).map(|_| (0..d).map(|_| rng.next_f32()).collect()).collect();
+    let truth: Vec<f32> = (0..d).map(|e| vals.iter().map(|v| v[e]).sum()).collect();
+    for mag_bits in [1u32, 3, 7] {
+        let t = QTable::nonuniform(mag_bits, 0.25);
+        for mode in [Rounding::Independent, Rounding::Correlated] {
+            let mut tot = 0.0f64;
+            let rounds = 50;
+            for round in 0..rounds {
+                let mut sum = vec![0.0f32; d];
+                for w in 0..n {
+                    let c = RoundingCtx::new(mode, 42, w, n, round);
+                    for e in 0..d {
+                        let sg = (e / 256) as u32;
+                        let pi = c.pi_slot(sg);
+                        let u = c.uniform(pi, e as u32);
+                        sum[e] += t.value(t.quantize(vals[w as usize][e], u));
+                    }
+                }
+                let mse: f64 = sum.iter().zip(&truth).map(|(&a,&b)| ((a-b) as f64).powi(2)).sum();
+                tot += mse;
+            }
+            println!("mag_bits={mag_bits} {mode:?}: mse={:.4}", tot / rounds as f64);
+        }
+    }
+}
+
+#[test]
+#[ignore]
+fn probe_codec() {
+    use dynamiq::codec::dynamiq::{Dynamiq, DynamiqConfig};
+    use dynamiq::codec::{GradCodec, HopCtx};
+    let n = 4u32;
+    let d = 4096usize;
+    let mut rng = Pcg::new(9);
+    for (name, heavy) in [("uniform", false), ("heavy", true)] {
+        let grads: Vec<Vec<f32>> = (0..n).map(|_| (0..d).map(|_| {
+            let base = (rng.next_f32() * 2.0 - 1.0) * 0.01;
+            if heavy { base * (rng.next_normal() * 1.2).exp() } else { base }
+        }).collect()).collect();
+        let truth: Vec<f32> = (0..d).map(|e| grads.iter().map(|g| g[e]).sum()).collect();
+        let agg: Vec<f32> = {
+            let metas: Vec<Vec<f32>> = grads.iter().map(|g| {
+                let mut c = Dynamiq::paper_default();
+                c.metadata(g, &HopCtx{worker:0,n_workers:n,round:0,summed:1})
+            }).collect();
+            (0..metas[0].len()).map(|k| metas.iter().map(|m| m[k]).sum()).collect()
+        };
+        for mode in [Rounding::Independent, Rounding::Correlated] {
+            let mut tot = 0.0f64;
+            let rounds = 30;
+            for round in 0..rounds {
+                let mut sum: Vec<f32> = Vec::new();
+                let mut last = None;
+                for w in 0..n {
+                    let cfg = DynamiqConfig { rounding: mode, ..DynamiqConfig::default() };
+                    let mut c = Dynamiq::new(cfg);
+                    let ctx = HopCtx{worker:w,n_workers:n,round,summed:1};
+                    let pre = c.begin_round(&grads[w as usize], &agg, &ctx);
+                    let bytes = c.compress(&pre, 0..pre.len(), &ctx);
+                    let dec = c.decompress(&bytes, 0..pre.len(), &ctx);
+                    if sum.is_empty() { sum = vec![0.0; dec.len()]; }
+                    for (s,&o) in sum.iter_mut().zip(&dec) { *s += o; }
+                    last = Some(c);
+                }
+                let out = last.unwrap().end_round(sum, &HopCtx{worker:0,n_workers:n,round,summed:1});
+                tot += dynamiq::util::vnmse(&truth, &out);
+            }
+            println!("{name} {mode:?}: vnmse={:.6}", tot / rounds as f64);
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! End-to-end integration over the PJRT runtime: the AOT artifacts (L2
+//! model + L1 pallas kernels) loaded and executed from rust.
+//!
+//! Requires `make artifacts` (skipped gracefully if missing so `cargo
+//! test` before the first artifact build still passes unit tests).
+
+use dynamiq::collective::Topology;
+use dynamiq::runtime::exec::{lit_f32, lit_u32, lit_u8, scalar_f32, to_f32, to_u8};
+use dynamiq::runtime::{Manifest, Runtime};
+use dynamiq::train::{TrainConfig, Trainer};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn tiny_model_trains_and_loss_drops() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let cfg = TrainConfig {
+        preset: "tiny".into(),
+        scheme: "DynamiQ".into(),
+        n_workers: 4,
+        topology: Topology::Ring,
+        rounds: 25,
+        lr: 3e-3,
+        eval_every: 25,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, "artifacts").expect("trainer");
+    t.run().expect("train");
+    let first = t.records[0].train_loss;
+    let last = t.records.last().unwrap().train_loss;
+    assert!(
+        last < first - 0.3,
+        "loss should drop over 25 rounds: {first} → {last}"
+    );
+    assert!(t.mean_vnmse() < 0.05, "vNMSE {}", t.mean_vnmse());
+    // eval ran at the last round
+    assert!(t.records.last().unwrap().eval_loss.is_some());
+}
+
+#[test]
+fn bf16_and_dynamiq_reach_similar_loss_but_dynamiq_moves_fewer_bytes() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mk = |scheme: &str| {
+        let cfg = TrainConfig {
+            preset: "tiny".into(),
+            scheme: scheme.into(),
+            n_workers: 4,
+            rounds: 20,
+            eval_every: 20,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(cfg, "artifacts").unwrap();
+        t.run().unwrap();
+        (
+            t.records.last().unwrap().train_loss,
+            t.records.iter().map(|r| r.wire_bytes).sum::<u64>(),
+            t.records.last().unwrap().sim_time_s,
+        )
+    };
+    let (loss_bf16, bytes_bf16, _) = mk("BF16");
+    let (loss_dq, bytes_dq, _) = mk("DynamiQ");
+    assert!(
+        (loss_dq - loss_bf16).abs() < 0.35,
+        "DynamiQ must track BF16 loss: {loss_dq} vs {loss_bf16}"
+    );
+    assert!(
+        (bytes_dq as f64) < 0.45 * bytes_bf16 as f64,
+        "DynamiQ must move <45% of BF16 bytes: {bytes_dq} vs {bytes_bf16}"
+    );
+}
+
+/// The L1 kernel artifacts, executed through PJRT from rust, must
+/// reproduce the byte-exact fixtures (same pinning as the rust codec) —
+/// closing the loop: pallas == jnp ref == rust codec == PJRT-executed HLO.
+#[test]
+fn kernel_artifact_matches_fixtures_via_pjrt() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use dynamiq::util::json::Json;
+    use dynamiq::util::rng::pcg_hash;
+    let manifest = Manifest::load("artifacts").unwrap();
+    let tile = manifest.tile_sg; // kernel tile rows
+    let sg = manifest.super_group;
+    let gpsg = sg / 16;
+    let rt = Runtime::cpu().unwrap();
+
+    let j = Json::parse(&std::fs::read_to_string("artifacts/fixtures/dynamiq_compress.json").unwrap())
+        .unwrap();
+    let seed = j.get("seed").unwrap().as_usize().unwrap() as u32;
+    let mut tested = 0;
+    for case in j.get("cases").unwrap().as_arr().unwrap().iter() {
+        let width = case.get("width").unwrap().as_usize().unwrap();
+        let worker = case.get("worker").unwrap().as_usize().unwrap() as u32;
+        let round = case.get("round").unwrap().as_usize().unwrap() as u32;
+        let n = case.get("n_workers").unwrap().as_usize().unwrap() as u32;
+        let sg0 = case.get("sg0").unwrap().as_usize().unwrap() as u32;
+        let x = case.get("x").unwrap().as_f32_vec().unwrap();
+        let pi = case.get("pi").unwrap().as_u32_vec().unwrap();
+        let want_codes = case.get("codes").unwrap().as_u32_vec().unwrap();
+        let nsg = x.len() / sg;
+
+        // pad the case into a full kernel tile
+        let mut xt = vec![0.0f32; tile * sg];
+        xt[..x.len()].copy_from_slice(&x);
+        let mut pit = vec![0u32; tile];
+        pit[..nsg].copy_from_slice(&pi);
+
+        let gamma_seed = seed ^ pcg_hash(0x9E37_79B9, worker) ^ round.wrapping_mul(0x85EB_CA6B);
+        let scale_seed = seed ^ pcg_hash(0x5CA1E, worker) ^ round.wrapping_mul(0x9E37_79B9);
+        let meta = [sg0, gamma_seed, scale_seed, n, 1u32];
+
+        let art = rt
+            .load(&format!("artifacts/kernel_compress_w{width}.hlo.txt"))
+            .expect("kernel artifact");
+        let out = art
+            .run(&[
+                lit_f32(&xt, &[tile as i64, sg as i64]).unwrap(),
+                lit_u32(&pit, &[tile as i64]).unwrap(),
+                lit_u32(&meta, &[5]).unwrap(),
+            ])
+            .expect("kernel execute");
+        let codes = to_u8(&out[0]).unwrap();
+        let scode = to_u8(&out[1]).unwrap();
+        let _sf = to_f32(&out[2]).unwrap();
+        for (i, &want) in want_codes.iter().enumerate() {
+            assert_eq!(codes[i] as u32, want, "w={width} code {i}");
+        }
+        assert_eq!(scode.len(), tile * gpsg);
+        tested += 1;
+    }
+    assert!(tested >= 3, "expected ≥3 kernel fixture cases");
+}
+
+/// adamw artifact sanity: a step with zero gradient only applies weight
+/// decay; with a positive gradient parameters move against it.
+#[test]
+fn adamw_artifact_semantics() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load("artifacts").unwrap();
+    let entry = manifest.model("tiny").unwrap();
+    let d = entry.d;
+    let rt = Runtime::cpu().unwrap();
+    let art = rt.load(&manifest.artifact_path("model_tiny_adamw")).unwrap();
+    let params = vec![1.0f32; d];
+    let zeros = vec![0.0f32; d];
+    let mut grad = vec![0.0f32; d];
+    grad[0] = 1.0;
+    let out = art
+        .run(&[
+            lit_f32(&params, &[d as i64]).unwrap(),
+            lit_f32(&zeros, &[d as i64]).unwrap(),
+            lit_f32(&zeros, &[d as i64]).unwrap(),
+            lit_f32(&grad, &[d as i64]).unwrap(),
+            xla::Literal::scalar(0.01f32),
+            xla::Literal::scalar(1.0f32),
+        ])
+        .unwrap();
+    let new_params = to_f32(&out[0]).unwrap();
+    // coordinate 0: moves down by ≈ lr·(1 + wd) (adam normalizes |step|→lr)
+    assert!(new_params[0] < 1.0 - 0.005, "p0={}", new_params[0]);
+    // other coordinates: only weight decay
+    let wd_only = 1.0 - 0.01 * 0.01;
+    assert!((new_params[1] - wd_only).abs() < 1e-5, "p1={}", new_params[1]);
+    let _ = scalar_f32(&out[0].clone());
+    let _ = lit_u8(&[1, 2, 3], &[3]).unwrap();
+}
