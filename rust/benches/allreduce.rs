@@ -5,7 +5,7 @@
 //!     cargo bench --bench allreduce
 
 use dynamiq::codec::make_codecs;
-use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
+use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, Topology};
 use dynamiq::util::benchkit::Bench;
 use dynamiq::util::rng::Pcg;
 
@@ -31,9 +31,21 @@ fn main() {
     let d = 1 << 18;
     println!("== engine rounds (d = {d}) ==");
     for scheme in ["BF16", "DynamiQ", "MXFP8", "THC"] {
-        for (topo, n) in [(Topology::Ring, 4), (Topology::Ring, 8), (Topology::Butterfly, 8)] {
+        for (topo, n) in [
+            (Topology::Ring, 4),
+            (Topology::Ring, 8),
+            (Topology::Butterfly, 8),
+            // the hierarchical subsystem: 4 nodes × 4 workers over
+            // heterogeneous links (NVLink-class intra, NIC inter)
+            (Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+        ] {
             let g = grads(n, d);
-            let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+            let net = if matches!(topo, Topology::Hierarchical(_)) {
+                NetworkModel::hierarchical_100g(48.0)
+            } else {
+                NetworkModel::isolated_100g()
+            };
+            let mut eng = AllReduceEngine::new(topo, net);
             eng.measure_vnmse = false;
             let mut codecs = make_codecs(scheme, n);
             let mut round = 0u32;

@@ -18,7 +18,7 @@ use std::collections::HashMap;
 use std::ops::Range;
 
 use crate::codec::{GradCodec, HopCtx, MetaOp};
-use crate::collective::network::NetworkModel;
+use crate::collective::network::{LinkClass, NetworkModel};
 use crate::collective::topology::Topology;
 
 #[derive(Clone, Debug, Default)]
@@ -80,7 +80,9 @@ impl AllReduceEngine {
         t0: f64,
     ) -> (Vec<f32>, RoundReport) {
         let n = grads.len();
-        assert!(n >= 2, "all-reduce needs ≥ 2 workers");
+        if let Err(e) = self.topology.validate(n) {
+            panic!("{e}");
+        }
         assert_eq!(codecs.len(), n);
         let d = grads[0].len();
         assert!(grads.iter().all(|g| g.len() == d));
@@ -133,7 +135,9 @@ impl AllReduceEngine {
         let mut incoming: HashMap<(u32, u32), Vec<(Vec<u8>, u32)>> = HashMap::new();
         let rs_sched = self.topology.reduce_scatter(n);
         for hops in &rs_sched {
-            let mut stage_msgs: Vec<u64> = Vec::with_capacity(hops.len());
+            // each message priced on the link tier its hop crosses
+            // (intra-node vs NIC for hierarchical topologies)
+            let mut stage_msgs: Vec<(u64, LinkClass)> = Vec::with_capacity(hops.len());
             let mut deliveries: Vec<(u32, u32, Vec<u8>, u32)> = Vec::new();
             for h in hops {
                 let range = ranges[h.chunk as usize].clone();
@@ -147,14 +151,14 @@ impl AllReduceEngine {
                     &ctx(h.from, 1),
                     &mut report,
                 );
-                stage_msgs.push(payload.len() as u64);
+                stage_msgs.push((payload.len() as u64, self.topology.link_class(h.from, h.to)));
                 report.rs_bytes += payload.len() as u64;
                 deliveries.push((h.to, h.chunk, payload, summed));
             }
             for (to, chunk, payload, summed) in deliveries {
                 incoming.entry((to, chunk)).or_default().push((payload, summed));
             }
-            let dt = self.net.stage_time(&stage_msgs, now);
+            let dt = self.net.stage_time_classed(&stage_msgs, now);
             now += dt;
             report.rs_time_s += dt;
             report.stage_times_s.push(dt);
@@ -183,10 +187,17 @@ impl AllReduceEngine {
         // ---- stage 5: all-gather (broadcast compressed sums) ----
         let ag_sched = self.topology.all_gather(n);
         for hops in &ag_sched {
-            let msgs: Vec<u64> =
-                hops.iter().map(|h| broadcast[h.chunk as usize].0.len() as u64).collect();
-            report.ag_bytes += msgs.iter().sum::<u64>();
-            let dt = self.net.stage_time(&msgs, now);
+            let msgs: Vec<(u64, LinkClass)> = hops
+                .iter()
+                .map(|h| {
+                    (
+                        broadcast[h.chunk as usize].0.len() as u64,
+                        self.topology.link_class(h.from, h.to),
+                    )
+                })
+                .collect();
+            report.ag_bytes += msgs.iter().map(|&(b, _)| b).sum::<u64>();
+            let dt = self.net.stage_time_classed(&msgs, now);
             now += dt;
             report.ag_time_s += dt;
         }
@@ -370,6 +381,55 @@ mod tests {
             assert!(rep.vnmse < 0.05, "{:?} n={n} vNMSE {}", topo, rep.vnmse);
             assert!(rep.compress_calls > 0 && rep.dar_calls > 0);
         }
+    }
+
+    #[test]
+    fn bf16_hierarchical_matches_exact_sum() {
+        use crate::collective::topology::Level;
+        for (intra, inter, m, n) in [
+            (Level::Ring, Level::Ring, 2, 8),
+            (Level::Ring, Level::Butterfly, 4, 16),
+            (Level::Butterfly, Level::Ring, 4, 12),
+        ] {
+            let topo = Topology::hierarchical(intra, inter, m);
+            let (_, _, rep) = run_once("bf16", topo, n, 3000);
+            assert!(rep.vnmse < 1e-3, "{} n={n} vNMSE {}", topo.name(), rep.vnmse);
+        }
+    }
+
+    #[test]
+    fn dynamiq_hierarchical_error_is_bounded() {
+        use crate::collective::topology::Level;
+        let topo = Topology::hierarchical(Level::Ring, Level::Butterfly, 4);
+        let (_, _, rep) = run_once("dynamiq", topo, 16, 8192);
+        assert!(rep.vnmse < 0.05, "vNMSE {}", rep.vnmse);
+        assert!(rep.compress_calls > 0 && rep.dar_calls > 0);
+        assert_eq!(rep.stage_times_s.len(), topo.rs_stages(16));
+    }
+
+    #[test]
+    fn fast_intra_links_cut_hierarchical_comm_time() {
+        use crate::collective::topology::Level;
+        let n = 16;
+        let d = 1 << 18;
+        let g = grads(n, d, 3);
+        let topo = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+        let run_with = |net: NetworkModel| {
+            let mut codecs = mk_codecs("bf16", n);
+            let eng = AllReduceEngine::new(topo, net);
+            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+            rep
+        };
+        let iso = run_with(NetworkModel::isolated_100g());
+        let het = run_with(NetworkModel::hierarchical_100g(48.0));
+        // same schedule, same bytes — only the intra-node stages get faster
+        assert_eq!(iso.total_bytes(), het.total_bytes());
+        assert!(
+            het.comm_time_s() < iso.comm_time_s(),
+            "fast intra links must shorten the round: {} vs {}",
+            het.comm_time_s(),
+            iso.comm_time_s()
+        );
     }
 
     #[test]

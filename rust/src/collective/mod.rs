@@ -1,12 +1,23 @@
-//! The collective layer: all-reduce topologies (ring / butterfly), the
-//! simulated network (α-β + multi-tenant contention), and the compressed
+//! The collective layer: all-reduce topologies (ring / butterfly / multi-
+//! level hierarchies), the simulated network (α-β + multi-tenant
+//! contention + heterogeneous per-tier links), and the compressed
 //! multi-hop all-reduce engine that composes a [`crate::codec::GradCodec`]
 //! with a [`topology::Topology`] over a [`network::NetworkModel`].
+//!
+//! Hierarchies ([`Topology::Hierarchical`], built by [`hierarchy`])
+//! compose one flat topology per link tier — e.g. ring inside each node
+//! over NVLink, butterfly across nodes over the NIC — into a single
+//! deeper aggregation arborescence per chunk. The engine and the
+//! thread-per-worker coordinator execute the composed [`topology::Schedule`]
+//! unchanged; only stage *costing* is tier-aware: every hop carries a
+//! [`network::LinkClass`] and a stage is charged for the slowest link
+//! class active in it.
 
 pub mod allreduce;
+pub mod hierarchy;
 pub mod network;
 pub mod topology;
 
 pub use allreduce::{AllReduceEngine, RoundReport};
-pub use network::NetworkModel;
-pub use topology::Topology;
+pub use network::{LinkClass, LinkSpec, NetworkModel};
+pub use topology::{HierarchySpec, Level, Topology, TopologyError};

@@ -1,5 +1,6 @@
 //! Simulated network: α-β cost model with optional multi-tenant
-//! contention (paper §5.2's shared-network experiment).
+//! contention (paper §5.2's shared-network experiment) and heterogeneous
+//! per-link classes (the testbed's NVLink-inside / NIC-between shape).
 //!
 //! Substitution note (DESIGN.md): the paper's testbed is 100 Gbps Ethernet
 //! between 4 servers (2 GPUs each over NVLink). The claims under test are
@@ -10,8 +11,34 @@
 //! tenants are duty-cycled bandwidth consumers: while active, the NIC is
 //! shared equally (TCP-fair), which reproduces the paper's observation
 //! that contention stretches communication by less than the tenant count.
+//!
+//! Heterogeneity: each message carries a [`LinkClass`]. `Nic` messages ride
+//! the shared, tenant-contended NIC fields; `Level(l)` messages ride the
+//! private per-tier [`LinkSpec`]s in [`NetworkModel::links`] (index =
+//! hierarchy level, innermost first; a missing entry falls back to the
+//! NIC). A stage costs the **max** over its messages, each priced on its
+//! own link class — i.e. the slowest link class active in the stage.
 
 use crate::util::rng::pcg_hash;
+
+/// Which link tier a message crosses. Flat topologies put everything on
+/// the NIC; hierarchical topologies class intra-node hops `Level(0)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// The shared inter-node NIC (tenant contention applies).
+    Nic,
+    /// A private hierarchy-tier link (NVLink etc.); index = level.
+    Level(u8),
+}
+
+/// α-β parameters of one private link tier.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// bandwidth in bytes/second
+    pub bandwidth_bps: f64,
+    /// per-message latency in seconds (α)
+    pub latency_s: f64,
+}
 
 /// A background tenant: a periodic communication burst pattern.
 #[derive(Clone, Debug)]
@@ -31,12 +58,35 @@ pub struct NetworkModel {
     /// per-message latency in seconds (α)
     pub latency_s: f64,
     pub tenants: Vec<Tenant>,
+    /// private per-tier links for hierarchical topologies, innermost level
+    /// first; `LinkClass::Level(l)` messages use `links[l]` (uncontended),
+    /// missing entries fall back to the NIC fields above.
+    pub links: Vec<LinkSpec>,
 }
 
 impl NetworkModel {
     /// The paper's testbed NIC: 100 Gbps, ~10 µs α.
     pub fn isolated_100g() -> Self {
-        NetworkModel { bandwidth_bps: 100e9 / 8.0, latency_s: 10e-6, tenants: Vec::new() }
+        NetworkModel {
+            bandwidth_bps: 100e9 / 8.0,
+            latency_s: 10e-6,
+            tenants: Vec::new(),
+            links: Vec::new(),
+        }
+    }
+
+    /// The paper's heterogeneous testbed shape: intra-node links `ratio`×
+    /// the NIC bandwidth at ~1 µs α (NVLink 600 GB/s vs 100 Gbps ⇒
+    /// ratio ≈ 48), inter-node the isolated 100 Gbps NIC.
+    ///
+    /// Panics on non-positive/non-finite `ratio` (a zero or negative
+    /// bandwidth would silently run the simulated clock backwards).
+    pub fn hierarchical_100g(ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio.is_finite(), "bandwidth ratio must be positive, got {ratio}");
+        let mut net = Self::isolated_100g();
+        net.links =
+            vec![LinkSpec { bandwidth_bps: net.bandwidth_bps * ratio, latency_s: 1e-6 }];
+        net
     }
 
     /// §5.2: three additional DDP jobs continuously doing ring all-reduce.
@@ -54,7 +104,12 @@ impl NetworkModel {
                 }
             })
             .collect();
-        NetworkModel { bandwidth_bps: 100e9 / 8.0, latency_s: 10e-6, tenants }
+        NetworkModel {
+            bandwidth_bps: 100e9 / 8.0,
+            latency_s: 10e-6,
+            tenants,
+            links: Vec::new(),
+        }
     }
 
     /// Number of active background tenants at absolute time `t`.
@@ -109,12 +164,46 @@ impl NetworkModel {
         dt.min(0.01)
     }
 
+    /// The private-link spec serving `class`, if any (`None` ⇒ NIC).
+    pub fn link_spec(&self, class: LinkClass) -> Option<LinkSpec> {
+        match class {
+            LinkClass::Nic => None,
+            LinkClass::Level(l) => self.links.get(l as usize).copied(),
+        }
+    }
+
+    /// Time to move `bytes` over a link of `class` starting at `t0`.
+    /// Private tiers are uncontended α-β; NIC (and unlisted tiers) go
+    /// through the tenant-aware [`NetworkModel::transfer_time`].
+    pub fn transfer_time_class(&self, bytes: u64, class: LinkClass, t0: f64) -> f64 {
+        match self.link_spec(class) {
+            Some(spec) => {
+                if bytes == 0 {
+                    0.0
+                } else {
+                    spec.latency_s + bytes as f64 / spec.bandwidth_bps
+                }
+            }
+            None => self.transfer_time(bytes, t0),
+        }
+    }
+
     /// Stage time: the max over concurrent messages (they run on disjoint
     /// NIC pairs in ring/butterfly stages, so no intra-job sharing).
     pub fn stage_time(&self, message_bytes: &[u64], t0: f64) -> f64 {
         message_bytes
             .iter()
             .map(|&b| self.transfer_time(b, t0))
+            .fold(0.0, f64::max)
+    }
+
+    /// Heterogeneous stage time: each message priced on its own link
+    /// class, the stage costs the slowest one (hierarchical stages mix
+    /// NVLink and NIC hops; the NIC hops dominate).
+    pub fn stage_time_classed(&self, messages: &[(u64, LinkClass)], t0: f64) -> f64 {
+        messages
+            .iter()
+            .map(|&(b, class)| self.transfer_time_class(b, class, t0))
             .fold(0.0, f64::max)
     }
 }
@@ -169,6 +258,45 @@ mod tests {
         let t = net.stage_time(&[1000, 500, 2000], 0.0);
         assert_eq!(t, net.transfer_time(2000, 0.0));
         assert_eq!(net.stage_time(&[], 0.0), 0.0);
+    }
+
+    #[test]
+    fn intra_links_are_faster_and_uncontended() {
+        let net = NetworkModel::hierarchical_100g(48.0);
+        let bytes = 12_500_000u64;
+        let t_nic = net.transfer_time_class(bytes, LinkClass::Nic, 0.0);
+        let t_nvl = net.transfer_time_class(bytes, LinkClass::Level(0), 0.0);
+        assert!(t_nvl < t_nic / 10.0, "nvlink {t_nvl} vs nic {t_nic}");
+        // unlisted tiers fall back to the NIC
+        assert_eq!(net.transfer_time_class(bytes, LinkClass::Level(7), 0.0), t_nic);
+        assert_eq!(net.transfer_time_class(0, LinkClass::Level(0), 0.0), 0.0);
+        // tenants contend the NIC, never the private tier
+        let mut shared = NetworkModel::shared_100g(5);
+        shared.links = net.links.clone();
+        assert_eq!(
+            shared.transfer_time_class(bytes, LinkClass::Level(0), 0.0),
+            net.transfer_time_class(bytes, LinkClass::Level(0), 0.0)
+        );
+    }
+
+    #[test]
+    fn classed_stage_is_charged_on_slowest_link() {
+        let net = NetworkModel::hierarchical_100g(48.0);
+        let bytes = 1_000_000u64;
+        let t = net.stage_time_classed(
+            &[(bytes, LinkClass::Level(0)), (bytes, LinkClass::Nic)],
+            0.0,
+        );
+        assert_eq!(t, net.transfer_time(bytes, 0.0), "NIC hop must dominate the stage");
+        // all-intra stage costs only the fast tier
+        let t_intra = net.stage_time_classed(&[(bytes, LinkClass::Level(0))], 0.0);
+        assert!(t_intra < t / 10.0);
+        assert_eq!(net.stage_time_classed(&[], 0.0), 0.0);
+        // homogeneous path agrees with the classed path on NIC-only stages
+        assert_eq!(
+            net.stage_time(&[bytes, 2 * bytes], 0.0),
+            net.stage_time_classed(&[(bytes, LinkClass::Nic), (2 * bytes, LinkClass::Nic)], 0.0)
+        );
     }
 
     #[test]

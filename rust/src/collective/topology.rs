@@ -5,10 +5,20 @@
 //! (c+1 → c+2 → … → c); butterfly (recursive halving) makes it a binary
 //! in-tree of depth log₂ n (Fig. 13). The all-gather phase broadcasts each
 //! chunk's aggregated payload back out (ring forwarding / recursive
-//! doubling).
+//! doubling). [`Topology::Hierarchical`] composes one flat topology per
+//! hierarchy level (intra-node, inter-node) into a deeper arborescence —
+//! see [`super::hierarchy`] for the schedule builder.
 //!
 //! A schedule is a list of *stages*; all transfers within a stage are
-//! concurrent (that is what the network model charges).
+//! concurrent (that is what the network model charges). Invalid worker
+//! counts surface as [`TopologyError`] through the `try_*` constructors
+//! and [`Topology::validate`]; the panicking `reduce_scatter`/`all_gather`
+//! wrappers remain for infallible call sites that validated up front.
+
+use std::fmt;
+
+use super::hierarchy;
+use super::network::LinkClass;
 
 /// One transfer: `from` sends chunk `chunk`'s payload to `to`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,34 +31,102 @@ pub struct Hop {
 /// A phase schedule: stages of concurrent hops.
 pub type Schedule = Vec<Vec<Hop>>;
 
+/// Why a topology cannot run over a given worker count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TopologyError {
+    TooFewWorkers { n: usize },
+    NotPowerOfTwo { n: usize },
+    IndivisibleWorkers { n: usize, per_node: usize },
+    BadWorkersPerNode { per_node: usize },
+    TooFewNodes { nodes: usize },
+    TooFewLevels { levels: usize },
+}
+
+impl fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TopologyError::TooFewWorkers { n } => {
+                write!(f, "all-reduce needs at least 2 workers, got {n}")
+            }
+            TopologyError::NotPowerOfTwo { n } => {
+                write!(f, "butterfly requires power-of-two workers, got {n}")
+            }
+            TopologyError::IndivisibleWorkers { n, per_node } => {
+                write!(f, "{n} workers do not divide into nodes of {per_node}")
+            }
+            TopologyError::BadWorkersPerNode { per_node } => {
+                write!(f, "hierarchy needs at least 2 workers per node, got {per_node}")
+            }
+            TopologyError::TooFewNodes { nodes } => {
+                write!(f, "hierarchy needs at least 2 nodes, got {nodes}")
+            }
+            TopologyError::TooFewLevels { levels } => {
+                write!(f, "hierarchy needs at least 2 levels, got {levels}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
+
+/// A flat per-level topology (the building block hierarchies compose).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Topology {
+pub enum Level {
     Ring,
     Butterfly,
 }
 
-impl Topology {
+impl Level {
     pub fn name(&self) -> &'static str {
         match self {
-            Topology::Ring => "ring",
-            Topology::Butterfly => "butterfly",
+            Level::Ring => "ring",
+            Level::Butterfly => "butterfly",
         }
     }
 
-    /// Number of reduce-scatter stages.
+    /// Parse a CLI-facing level name.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s {
+            "ring" => Some(Level::Ring),
+            "butterfly" => Some(Level::Butterfly),
+            _ => None,
+        }
+    }
+
+    pub fn validate(&self, n: usize) -> Result<(), TopologyError> {
+        if n < 2 {
+            return Err(TopologyError::TooFewWorkers { n });
+        }
+        if *self == Level::Butterfly && !n.is_power_of_two() {
+            return Err(TopologyError::NotPowerOfTwo { n });
+        }
+        Ok(())
+    }
+
+    /// Number of reduce-scatter stages over `n` workers.
     pub fn rs_stages(&self, n: usize) -> usize {
         match self {
-            Topology::Ring => n - 1,
-            Topology::Butterfly => n.trailing_zeros() as usize,
+            Level::Ring => n - 1,
+            Level::Butterfly => n.trailing_zeros() as usize,
         }
+    }
+
+    /// Number of all-gather stages (same count as reduce-scatter).
+    pub fn ag_stages(&self, n: usize) -> usize {
+        self.rs_stages(n)
+    }
+
+    /// Longest hop count root-to-sink in any chunk's arborescence (the
+    /// requantization depth that drives §B's error analysis).
+    pub fn max_depth(&self, n: usize) -> usize {
+        self.rs_stages(n)
     }
 
     /// Reduce-scatter schedule for `n` workers (`n` chunks, chunk c sinks
-    /// at worker c).
-    pub fn reduce_scatter(&self, n: usize) -> Schedule {
-        assert!(n >= 2);
+    /// at worker c). Assumes `validate(n)` passed.
+    pub(crate) fn reduce_scatter(&self, n: usize) -> Schedule {
         match self {
-            Topology::Ring => {
+            Level::Ring => {
                 // stage s: worker (c + 1 + s) sends chunk c to (c + 2 + s),
                 // for every c concurrently. After n−1 stages chunk c rests
                 // at worker c.
@@ -64,8 +142,7 @@ impl Topology {
                     })
                     .collect()
             }
-            Topology::Butterfly => {
-                assert!(n.is_power_of_two(), "butterfly requires power-of-two workers");
+            Level::Butterfly => {
                 let l = n.trailing_zeros();
                 // stage s ∈ 0..L: distance bit = L−1−s. Worker w sends, for
                 // every chunk c that lies across that bit from w while
@@ -97,10 +174,10 @@ impl Topology {
     }
 
     /// All-gather schedule: broadcast chunk c's final payload from its sink
-    /// to everyone.
-    pub fn all_gather(&self, n: usize) -> Schedule {
+    /// to everyone. Assumes `validate(n)` passed.
+    pub(crate) fn all_gather(&self, n: usize) -> Schedule {
         match self {
-            Topology::Ring => {
+            Level::Ring => {
                 // stage s: worker (c + s) forwards chunk c to (c + s + 1)
                 (0..n - 1)
                     .map(|s| {
@@ -114,8 +191,7 @@ impl Topology {
                     })
                     .collect()
             }
-            Topology::Butterfly => {
-                assert!(n.is_power_of_two());
+            Level::Butterfly => {
                 let l = n.trailing_zeros();
                 // recursive doubling: stage s exchanges across bit 2^s; a
                 // worker forwards every chunk it already holds.
@@ -145,28 +221,176 @@ impl Topology {
         }
     }
 
+    /// The in-arborescence of one chunk: `(parent, stage)` per worker; the
+    /// sink has parent = itself and stage = `u32::MAX`.
+    pub(crate) fn arborescence(&self, n: usize, chunk: usize) -> Vec<(u32, u32)> {
+        arborescence_of(&self.reduce_scatter(n), n, chunk)
+    }
+}
+
+/// Extract chunk `chunk`'s in-arborescence from a reduce-scatter schedule.
+fn arborescence_of(sched: &Schedule, n: usize, chunk: usize) -> Vec<(u32, u32)> {
+    let mut parent: Vec<(u32, u32)> = (0..n).map(|w| (w as u32, u32::MAX)).collect();
+    for (s, hops) in sched.iter().enumerate() {
+        for h in hops {
+            if h.chunk as usize == chunk {
+                debug_assert_eq!(parent[h.from as usize].1, u32::MAX, "double send");
+                parent[h.from as usize] = (h.to, s as u32);
+            }
+        }
+    }
+    parent
+}
+
+/// A two-level hierarchy: `workers_per_node` consecutive worker ranks form
+/// a node; `intra` aggregates within nodes over the fast local links,
+/// `inter` aggregates across nodes over the NIC (paper §5's testbed shape:
+/// NVLink inside a server, 100 Gbps between servers).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HierarchySpec {
+    pub intra: Level,
+    pub inter: Level,
+    pub workers_per_node: u32,
+}
+
+impl HierarchySpec {
+    pub fn nodes(&self, n: usize) -> usize {
+        n / self.workers_per_node as usize
+    }
+
+    /// The per-level composition handed to the generic schedule builder
+    /// (innermost level first).
+    pub fn level_specs(&self, n: usize) -> Vec<hierarchy::LevelSpec> {
+        let m = self.workers_per_node as usize;
+        vec![
+            hierarchy::LevelSpec { topo: self.intra, size: m },
+            hierarchy::LevelSpec { topo: self.inter, size: n / m },
+        ]
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    Ring,
+    Butterfly,
+    /// Multi-level aggregation: per-level topologies composed into one
+    /// deeper arborescence (intra-node × inter-node).
+    Hierarchical(HierarchySpec),
+}
+
+impl Topology {
+    /// Convenience constructor for the two-level hierarchy.
+    pub fn hierarchical(intra: Level, inter: Level, workers_per_node: u32) -> Topology {
+        Topology::Hierarchical(HierarchySpec { intra, inter, workers_per_node })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Topology::Ring => "ring".into(),
+            Topology::Butterfly => "butterfly".into(),
+            Topology::Hierarchical(s) => {
+                format!("hier({}/{},m={})", s.intra.name(), s.inter.name(), s.workers_per_node)
+            }
+        }
+    }
+
+    /// Check that this topology can schedule `n` workers.
+    pub fn validate(&self, n: usize) -> Result<(), TopologyError> {
+        match self {
+            Topology::Ring => Level::Ring.validate(n),
+            Topology::Butterfly => Level::Butterfly.validate(n),
+            Topology::Hierarchical(spec) => {
+                let m = spec.workers_per_node as usize;
+                if m < 2 {
+                    return Err(TopologyError::BadWorkersPerNode { per_node: m });
+                }
+                if n % m != 0 {
+                    return Err(TopologyError::IndivisibleWorkers { n, per_node: m });
+                }
+                let nodes = n / m;
+                if nodes < 2 {
+                    return Err(TopologyError::TooFewNodes { nodes });
+                }
+                spec.intra.validate(m)?;
+                spec.inter.validate(nodes)
+            }
+        }
+    }
+
+    /// Number of reduce-scatter stages.
+    pub fn rs_stages(&self, n: usize) -> usize {
+        match self {
+            Topology::Ring => Level::Ring.rs_stages(n),
+            Topology::Butterfly => Level::Butterfly.rs_stages(n),
+            Topology::Hierarchical(spec) => hierarchy::rs_stages(&spec.level_specs(n)),
+        }
+    }
+
+    /// Reduce-scatter schedule for `n` workers (`n` chunks, chunk c sinks
+    /// at worker c), or the reason `n` does not fit this topology.
+    pub fn try_reduce_scatter(&self, n: usize) -> Result<Schedule, TopologyError> {
+        self.validate(n)?;
+        Ok(match self {
+            Topology::Ring => Level::Ring.reduce_scatter(n),
+            Topology::Butterfly => Level::Butterfly.reduce_scatter(n),
+            Topology::Hierarchical(spec) => hierarchy::reduce_scatter(&spec.level_specs(n)),
+        })
+    }
+
+    /// All-gather schedule: broadcast chunk c's final payload from its sink
+    /// to everyone, or the reason `n` does not fit this topology.
+    pub fn try_all_gather(&self, n: usize) -> Result<Schedule, TopologyError> {
+        self.validate(n)?;
+        Ok(match self {
+            Topology::Ring => Level::Ring.all_gather(n),
+            Topology::Butterfly => Level::Butterfly.all_gather(n),
+            Topology::Hierarchical(spec) => hierarchy::all_gather(&spec.level_specs(n)),
+        })
+    }
+
+    /// Panicking wrapper over [`Topology::try_reduce_scatter`] for call
+    /// sites that validated up front (the engine, benches, tests).
+    pub fn reduce_scatter(&self, n: usize) -> Schedule {
+        self.try_reduce_scatter(n).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Panicking wrapper over [`Topology::try_all_gather`].
+    pub fn all_gather(&self, n: usize) -> Schedule {
+        self.try_all_gather(n).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// The link tier a hop crosses, for heterogeneous stage costing: hops
+    /// inside a node ride the private intra-node links
+    /// (`LinkClass::Level(0)`); everything else is the shared NIC.
+    pub fn link_class(&self, from: u32, to: u32) -> LinkClass {
+        match self {
+            Topology::Ring | Topology::Butterfly => LinkClass::Nic,
+            Topology::Hierarchical(spec) => {
+                if from / spec.workers_per_node == to / spec.workers_per_node {
+                    LinkClass::Level(0)
+                } else {
+                    LinkClass::Nic
+                }
+            }
+        }
+    }
+
     /// The in-arborescence of one chunk: for each worker ≠ sink, the worker
     /// it sends its partial to, and the stage at which it sends. Returns
     /// `(parent, stage)` indexed by worker; the sink has parent = itself.
     pub fn arborescence(&self, n: usize, chunk: usize) -> Vec<(u32, u32)> {
-        let mut parent: Vec<(u32, u32)> = (0..n).map(|w| (w as u32, u32::MAX)).collect();
-        for (s, hops) in self.reduce_scatter(n).iter().enumerate() {
-            for h in hops {
-                if h.chunk as usize == chunk {
-                    debug_assert_eq!(parent[h.from as usize].1, u32::MAX, "double send");
-                    parent[h.from as usize] = (h.to, s as u32);
-                }
-            }
-        }
-        parent
+        arborescence_of(&self.reduce_scatter(n), n, chunk)
     }
 
     /// Longest hop count root-to-sink in chunk 0's arborescence (the
-    /// requantization depth that drives §B's error analysis).
+    /// requantization depth that drives §B's error analysis). For
+    /// hierarchies the per-level depths add — the axis the hierarchy
+    /// experiment sweeps.
     pub fn max_depth(&self, n: usize) -> usize {
         match self {
-            Topology::Ring => n - 1,
-            Topology::Butterfly => n.trailing_zeros() as usize,
+            Topology::Ring => Level::Ring.max_depth(n),
+            Topology::Butterfly => Level::Butterfly.max_depth(n),
+            Topology::Hierarchical(spec) => hierarchy::max_depth(&spec.level_specs(n)),
         }
     }
 }
@@ -231,9 +455,50 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_reduce_scatter_valid() {
+        for (intra, inter, m, n) in [
+            (Level::Ring, Level::Ring, 2, 8),
+            (Level::Ring, Level::Butterfly, 4, 16),
+            (Level::Butterfly, Level::Ring, 4, 12),
+            (Level::Butterfly, Level::Butterfly, 2, 32),
+            (Level::Ring, Level::Ring, 3, 15),
+        ] {
+            check_reduce_scatter(Topology::hierarchical(intra, inter, m), n);
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "power-of-two")]
     fn butterfly_rejects_non_pow2() {
         Topology::Butterfly.reduce_scatter(6);
+    }
+
+    #[test]
+    fn invalid_counts_are_errors_not_panics() {
+        assert_eq!(
+            Topology::Butterfly.try_reduce_scatter(6),
+            Err(TopologyError::NotPowerOfTwo { n: 6 })
+        );
+        assert_eq!(
+            Topology::Ring.try_reduce_scatter(1),
+            Err(TopologyError::TooFewWorkers { n: 1 })
+        );
+        let t = Topology::hierarchical(Level::Ring, Level::Ring, 3);
+        assert_eq!(
+            t.try_reduce_scatter(8),
+            Err(TopologyError::IndivisibleWorkers { n: 8, per_node: 3 })
+        );
+        assert_eq!(
+            Topology::hierarchical(Level::Ring, Level::Ring, 4).try_all_gather(4),
+            Err(TopologyError::TooFewNodes { nodes: 1 })
+        );
+        assert_eq!(
+            Topology::hierarchical(Level::Butterfly, Level::Ring, 6).try_reduce_scatter(12),
+            Err(TopologyError::NotPowerOfTwo { n: 6 })
+        );
+        // error strings are CLI-facing; keep them informative
+        let msg = Topology::Butterfly.try_reduce_scatter(6).unwrap_err().to_string();
+        assert!(msg.contains("power-of-two"), "{msg}");
     }
 
     fn check_all_gather(t: Topology, n: usize) {
@@ -277,11 +542,56 @@ mod tests {
     }
 
     #[test]
+    fn hierarchical_all_gather_complete() {
+        for (intra, inter, m, n) in [
+            (Level::Ring, Level::Ring, 2, 8),
+            (Level::Ring, Level::Butterfly, 4, 16),
+            (Level::Butterfly, Level::Ring, 4, 12),
+            (Level::Butterfly, Level::Butterfly, 2, 32),
+        ] {
+            check_all_gather(Topology::hierarchical(intra, inter, m), n);
+        }
+    }
+
+    #[test]
     fn butterfly_depth_is_logarithmic() {
         assert_eq!(Topology::Butterfly.max_depth(64), 6);
         assert_eq!(Topology::Ring.max_depth(64), 63);
         // §B: butterfly's shallower trees are why its error scales better
         assert!(Topology::Butterfly.max_depth(64) < Topology::Ring.max_depth(64));
+    }
+
+    #[test]
+    fn hierarchical_depth_adds_per_level() {
+        // 4 nodes × 4 workers: ring/ring = 3 + 3, butterfly/butterfly = 2 + 2
+        assert_eq!(Topology::hierarchical(Level::Ring, Level::Ring, 4).max_depth(16), 6);
+        assert_eq!(
+            Topology::hierarchical(Level::Butterfly, Level::Butterfly, 4).max_depth(16),
+            4
+        );
+        // and both are shallower than a flat 16-worker ring
+        assert!(Topology::hierarchical(Level::Ring, Level::Ring, 4).max_depth(16) < 15);
+    }
+
+    #[test]
+    fn hierarchical_link_classes_split_by_node() {
+        let t = Topology::hierarchical(Level::Ring, Level::Butterfly, 4);
+        let n = 16;
+        for sched in [t.reduce_scatter(n), t.all_gather(n)] {
+            for hops in &sched {
+                for h in hops {
+                    let same_node = h.from / 4 == h.to / 4;
+                    let class = t.link_class(h.from, h.to);
+                    if same_node {
+                        assert_eq!(class, LinkClass::Level(0), "hop {h:?}");
+                    } else {
+                        assert_eq!(class, LinkClass::Nic, "hop {h:?}");
+                    }
+                }
+            }
+        }
+        // flat topologies ride the NIC everywhere
+        assert_eq!(Topology::Ring.link_class(0, 1), LinkClass::Nic);
     }
 
     #[test]
@@ -314,5 +624,16 @@ mod tests {
             size[p] += size[w];
         }
         assert_eq!(size[3], n);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Topology::Ring.name(), "ring");
+        assert_eq!(
+            Topology::hierarchical(Level::Ring, Level::Butterfly, 2).name(),
+            "hier(ring/butterfly,m=2)"
+        );
+        assert_eq!(Level::parse("butterfly"), Some(Level::Butterfly));
+        assert_eq!(Level::parse("mesh"), None);
     }
 }

@@ -80,11 +80,11 @@ pub fn threaded_allreduce(
     round: u32,
 ) -> Result<Vec<WorkerRound>> {
     let n = grads.len();
-    assert!(n >= 2);
     assert_eq!(codecs.len(), n);
+    // invalid worker counts surface as errors (not panics) on this path
+    let rs_sched = topology.try_reduce_scatter(n)?;
+    let ag_sched = topology.try_all_gather(n)?;
     let links = mesh(n);
-    let rs_sched = topology.reduce_scatter(n);
-    let ag_sched = topology.all_gather(n);
 
     let mut handles = Vec::with_capacity(n);
     let mut txs: Vec<HashMap<u32, Sender<Msg>>> = links.tx;
@@ -345,6 +345,48 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn threaded_matches_engine_on_hierarchy() {
+        use crate::collective::topology::Level;
+        // acceptance: ≥ 2 levels, ≥ 16 workers, engine and coordinator
+        // bit-identical
+        let n = 16;
+        for (scheme, topo) in [
+            ("DynamiQ", Topology::hierarchical(Level::Ring, Level::Butterfly, 4)),
+            ("BF16", Topology::hierarchical(Level::Ring, Level::Ring, 2)),
+            ("MXFP8", Topology::hierarchical(Level::Butterfly, Level::Butterfly, 4)),
+        ] {
+            let g = grads(n, 4096, 23);
+            let mut eng_codecs = make_codecs(scheme, n);
+            let eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(48.0));
+            let (expect, _) = eng.run(&g, &mut eng_codecs, 2, 0.0);
+            let out = threaded_allreduce(topo, g, make_codecs(scheme, n), 2).unwrap();
+            for wr in &out {
+                assert_eq!(
+                    wr.aggregated,
+                    expect,
+                    "{scheme}/{} worker {} disagrees with engine",
+                    topo.name(),
+                    wr.worker
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_topology_is_an_error_not_a_panic() {
+        use crate::collective::topology::Level;
+        let g = grads(8, 1024, 1);
+        let r = threaded_allreduce(
+            Topology::hierarchical(Level::Ring, Level::Ring, 3),
+            g,
+            make_codecs("BF16", 8),
+            0,
+        );
+        let msg = r.err().expect("must reject 8 % 3 != 0").to_string();
+        assert!(msg.contains("do not divide"), "{msg}");
     }
 
     #[test]

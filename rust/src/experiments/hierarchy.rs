@@ -1,0 +1,106 @@
+//! Hierarchical-topology sweep: aggregation depth × intra/inter bandwidth
+//! ratio × codec, over a 32-worker cluster of 2-level hierarchies (plus
+//! the flat baselines).
+//!
+//! The axis the paper cannot reach with flat schedules: partial sums grow
+//! along the aggregation path, so a topology's *depth* (requantization
+//! count) interacts with each codec's representation — DynamiQ's shared
+//! scale tracking vs MXFP's per-block exponents vs THC's fixed table —
+//! while the intra/inter bandwidth ratio decides how much of the round the
+//! NIC tier exposes. Reports wire bytes, simulated comm time, overflow
+//! events and vNMSE per (topology, ratio, codec) cell; runs on synthetic
+//! region-structured gradients, so it needs no model artifacts.
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::codec::make_codecs;
+use crate::collective::{AllReduceEngine, Level, NetworkModel, Topology};
+use crate::util::benchkit::Table;
+use crate::util::json::Json;
+use crate::util::rng::Pcg;
+
+/// Region-structured heavy-tailed gradients (the shape §2.2 leans on).
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(seed ^ ((i as u64) << 21));
+            let mut region = 1.0f32;
+            (0..d)
+                .map(|k| {
+                    if k % 128 == 0 {
+                        region = (rng.next_normal() * 1.2).exp();
+                    }
+                    rng.next_normal() * 0.01 * region
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The swept topologies: flat baselines plus 2-level compositions chosen
+/// for their depth spread (5 … 31 requantizations at n = 32).
+fn swept_topologies() -> Vec<Topology> {
+    vec![
+        Topology::Ring,
+        Topology::Butterfly,
+        Topology::hierarchical(Level::Butterfly, Level::Butterfly, 4),
+        Topology::hierarchical(Level::Ring, Level::Butterfly, 4),
+        Topology::hierarchical(Level::Ring, Level::Butterfly, 8),
+        Topology::hierarchical(Level::Ring, Level::Ring, 8),
+        Topology::hierarchical(Level::Butterfly, Level::Ring, 2),
+    ]
+}
+
+pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
+    let n = 32;
+    let d = 1 << 16;
+    let rounds = ((3.0 * ctx.scale).ceil() as u32).clamp(1, 10);
+    let ratios = [1.0, 8.0, 48.0];
+    let schemes = ["BF16", "DynamiQ", "MXFP8", "MXFP4", "THC"];
+
+    let mut table = Table::new(&[
+        "topology", "depth", "intra:inter", "scheme", "wire MB", "comm ms", "ovf", "vNMSE",
+    ]);
+    let mut json = Vec::new();
+    for topo in swept_topologies() {
+        topo.validate(n)?;
+        let depth = topo.max_depth(n);
+        let g = grads(n, d, 0xD1A_0 + depth as u64);
+        for ratio in ratios {
+            for scheme in schemes {
+                let mut codecs = make_codecs(scheme, n);
+                let eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(ratio));
+                let mut last = None;
+                for round in 0..rounds {
+                    let (_, rep) = eng.run(&g, &mut codecs, round, 0.0);
+                    last = Some(rep);
+                }
+                let rep = last.expect("at least one round");
+                table.row(vec![
+                    topo.name(),
+                    depth.to_string(),
+                    format!("{ratio:.0}:1"),
+                    scheme.into(),
+                    format!("{:.2}", rep.total_bytes() as f64 / 1e6),
+                    format!("{:.3}", rep.comm_time_s() * 1e3),
+                    rep.overflow_events.to_string(),
+                    format!("{:.2e}", rep.vnmse),
+                ]);
+                json.push(Json::obj(vec![
+                    ("topology", Json::Str(topo.name())),
+                    ("depth", Json::Num(depth as f64)),
+                    ("bw_ratio", Json::Num(ratio)),
+                    ("scheme", Json::Str(scheme.into())),
+                    ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+                    ("comm_time_s", Json::Num(rep.comm_time_s())),
+                    ("overflow_events", Json::Num(rep.overflow_events as f64)),
+                    ("vnmse", Json::Num(rep.vnmse)),
+                ]));
+            }
+        }
+    }
+    let body = table.render();
+    println!("{body}");
+    ctx.save("hier_sweep", &body, Some(Json::Arr(json)))
+}

@@ -4,15 +4,27 @@
 //! Synchronization using Compressed Multi-hop All-reduce”*:
 //!
 //! - **L3 (this crate)** — the coordinator: multi-worker data-parallel
-//!   training runtime, ring/butterfly all-reduce over a simulated network,
-//!   the DynamiQ codec and all paper baselines, experiment drivers for
-//!   every table/figure.
+//!   training runtime, ring/butterfly/hierarchical all-reduce over a
+//!   simulated network, the DynamiQ codec and all paper baselines,
+//!   experiment drivers for every table/figure.
 //! - **L2 (python/compile/model.py)** — jax transformer fwd/bwd + AdamW,
 //!   AOT-lowered to HLO text under `artifacts/`, executed from rust via
 //!   PJRT (`runtime`).
 //! - **L1 (python/compile/kernels/)** — pallas compression kernels
 //!   (interpret mode), byte-compatible with the rust codec via the shared
 //!   counter PRNG ([`util::rng`]).
+//!
+//! ## Hierarchical topologies
+//!
+//! [`collective::Topology::Hierarchical`] composes per-level flat
+//! topologies (e.g. ring inside each node, butterfly across nodes) into a
+//! multi-level aggregation arborescence; [`collective::hierarchy`] is the
+//! generic schedule builder, and [`collective::NetworkModel::links`]
+//! prices intra-node hops on private NVLink-class tiers while inter-node
+//! hops keep the contended NIC. CLI: `dynamiq train --topology hier
+//! --intra ring --inter butterfly --workers-per-node 4 --intra-bw-ratio
+//! 48`, and `dynamiq repro --id hier` regenerates the depth ×
+//! bandwidth-ratio × codec sweep ([`experiments::hierarchy`]).
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 

@@ -6,10 +6,17 @@
 //!   repro --id <id> | --all   — regenerate a paper table/figure
 //!
 //! Train flags: --preset tiny|small|base  --scheme NAME  --workers N
-//!   --topology ring|butterfly  --rounds N  --shared-network
+//!   --topology ring|butterfly|hier  --rounds N  --shared-network
 //!   --threaded (use the thread-per-worker coordinator for the all-reduce)
+//!
+//! Hierarchical topology flags (with --topology hier):
+//!   --intra ring|butterfly    per-node level (default ring)
+//!   --inter ring|butterfly    cross-node level (default ring)
+//!   --workers-per-node N      node size (default 2; must divide --workers)
+//!   --intra-bw-ratio R        intra-node link speedup over the NIC
+//!                             (default 48 ≈ NVLink 600 GB/s : 100 Gbps)
 
-use dynamiq::collective::Topology;
+use dynamiq::collective::{Level, Topology};
 use dynamiq::experiments::{run, run_all, Ctx, ALL_IDS};
 use dynamiq::runtime::Manifest;
 use dynamiq::train::{TrainConfig, Trainer};
@@ -59,11 +66,38 @@ fn info() -> anyhow::Result<()> {
     Ok(())
 }
 
+fn parse_level(args: &[String], flag: &str) -> anyhow::Result<Level> {
+    match flag_value(args, flag) {
+        None => Ok(Level::Ring),
+        Some(s) => {
+            Level::parse(&s).ok_or_else(|| anyhow::anyhow!("{flag} must be ring|butterfly, got {s}"))
+        }
+    }
+}
+
+fn parse_topology(args: &[String]) -> anyhow::Result<Topology> {
+    match flag_value(args, "--topology").as_deref() {
+        None | Some("ring") => Ok(Topology::Ring),
+        Some("butterfly") => Ok(Topology::Butterfly),
+        Some("hier") | Some("hierarchical") => {
+            let workers_per_node = match flag_value(args, "--workers-per-node") {
+                None => 2,
+                Some(v) => v
+                    .parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("--workers-per-node must be an integer"))?,
+            };
+            Ok(Topology::Hierarchical(dynamiq::collective::HierarchySpec {
+                intra: parse_level(args, "--intra")?,
+                inter: parse_level(args, "--inter")?,
+                workers_per_node,
+            }))
+        }
+        Some(other) => anyhow::bail!("--topology must be ring|butterfly|hier, got {other}"),
+    }
+}
+
 fn train(args: &[String]) -> anyhow::Result<()> {
-    let topology = match flag_value(args, "--topology").as_deref() {
-        Some("butterfly") => Topology::Butterfly,
-        _ => Topology::Ring,
-    };
+    let topology = parse_topology(args)?;
     let cfg = TrainConfig {
         preset: flag_value(args, "--preset").unwrap_or_else(|| "tiny".into()),
         scheme: flag_value(args, "--scheme").unwrap_or_else(|| "DynamiQ".into()),
@@ -72,8 +106,19 @@ fn train(args: &[String]) -> anyhow::Result<()> {
         shared_network: has_flag(args, "--shared-network"),
         rounds: flag_value(args, "--rounds").and_then(|v| v.parse().ok()).unwrap_or(100),
         lr: flag_value(args, "--lr").and_then(|v| v.parse().ok()).unwrap_or(3e-3),
+        intra_bw_ratio: flag_value(args, "--intra-bw-ratio")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(48.0),
         ..Default::default()
     };
+    if !(cfg.intra_bw_ratio > 0.0 && cfg.intra_bw_ratio.is_finite()) {
+        anyhow::bail!("--intra-bw-ratio must be a positive number, got {}", cfg.intra_bw_ratio);
+    }
+    // invalid worker counts (non-pow2 butterfly, indivisible nodes, …)
+    // surface as CLI errors, not panics
+    cfg.topology
+        .validate(cfg.n_workers)
+        .map_err(|e| anyhow::anyhow!("invalid --topology/--workers combination: {e}"))?;
     println!(
         "training preset={} scheme={} workers={} topology={} rounds={}",
         cfg.preset,

@@ -12,7 +12,7 @@ pub mod data;
 use anyhow::{anyhow, Result};
 
 use crate::codec::{make_codecs, GradCodec};
-use crate::collective::{AllReduceEngine, NetworkModel, RoundReport, Topology};
+use crate::collective::{AllReduceEngine, LinkSpec, NetworkModel, RoundReport, Topology};
 use crate::metrics::{ComputeModel, RoundTime, TtaCurve};
 use crate::runtime::exec::{lit_f32, lit_i32, scalar_f32, to_f32};
 use crate::runtime::{Manifest, Runtime};
@@ -25,6 +25,9 @@ pub struct TrainConfig {
     pub n_workers: usize,
     pub topology: Topology,
     pub shared_network: bool,
+    /// intra-node link bandwidth as a multiple of the NIC (only used by
+    /// hierarchical topologies; 48 ≈ NVLink 600 GB/s over 100 Gbps)
+    pub intra_bw_ratio: f64,
     pub rounds: u32,
     /// initial LR; LinearLR decays to `lr * end_factor` over
     /// `lr_total_iters` rounds (Table 1's schedule shape)
@@ -45,6 +48,7 @@ impl Default for TrainConfig {
             n_workers: 4,
             topology: Topology::Ring,
             shared_network: false,
+            intra_bw_ratio: 48.0,
             rounds: 100,
             lr: 3e-3,
             lr_end_factor: 1.0 / 8.0,
@@ -96,6 +100,7 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
+        cfg.topology.validate(cfg.n_workers)?;
         let manifest = Manifest::load(artifacts_dir)?;
         let entry = manifest.model(&cfg.preset)?.clone();
         let rt = Runtime::global();
@@ -120,6 +125,19 @@ impl Trainer {
         // which is not the operating point the paper studies.
         const PAPER_GRAD_BYTES: f64 = 2.0 * 650e6;
         net.bandwidth_bps *= (2.0 * entry.d as f64) / PAPER_GRAD_BYTES;
+        if matches!(cfg.topology, Topology::Hierarchical(_)) {
+            anyhow::ensure!(
+                cfg.intra_bw_ratio > 0.0 && cfg.intra_bw_ratio.is_finite(),
+                "intra_bw_ratio must be positive, got {}",
+                cfg.intra_bw_ratio
+            );
+            // intra-node hops ride private links `intra_bw_ratio`× the
+            // (scaled) NIC; inter-node hops keep the contended NIC model
+            net.links = vec![LinkSpec {
+                bandwidth_bps: net.bandwidth_bps * cfg.intra_bw_ratio,
+                latency_s: 1e-6,
+            }];
+        }
         let engine = AllReduceEngine::new(cfg.topology, net);
         let codecs = make_codecs(&cfg.scheme, cfg.n_workers);
         // Calibrate the TTA time model so the compute : BF16-communication

@@ -1,0 +1,243 @@
+//! Property tests over the hierarchical-topology subsystem: every
+//! generated schedule must be a valid in-arborescence per chunk (each
+//! chunk reaches its sink exactly once, no worker forwards a partial
+//! before receiving everything sent to it, the all-gather delivers every
+//! chunk everywhere exactly once), hop link classes must split by node,
+//! and the simulated engine and the thread-per-worker coordinator must
+//! stay bit-identical on hierarchical schedules.
+
+use std::collections::{HashMap, HashSet};
+
+use dynamiq::codec::make_codecs;
+use dynamiq::collective::{AllReduceEngine, Level, LinkClass, NetworkModel, Topology};
+use dynamiq::coordinator::threaded_allreduce;
+use dynamiq::util::proptest::Prop;
+use dynamiq::util::rng::Pcg;
+
+/// A random 2-level hierarchy + worker count it must schedule.
+fn gen_hierarchy(rng: &mut Pcg) -> (Topology, usize) {
+    let levels = [Level::Ring, Level::Butterfly];
+    let intra = levels[rng.below(2) as usize];
+    let inter = levels[rng.below(2) as usize];
+    let m = match intra {
+        // keep sizes small: validity is combinatorial, not scale-bound
+        Level::Ring => 2 + rng.below(4) as usize, // 2..=5
+        Level::Butterfly => 1 << (1 + rng.below(2)), // 2 | 4
+    };
+    let nodes = match inter {
+        Level::Ring => 2 + rng.below(4) as usize,
+        Level::Butterfly => 1 << (1 + rng.below(2)),
+    };
+    (Topology::hierarchical(intra, inter, m as u32), m * nodes)
+}
+
+/// Reduce-scatter invariants: every non-sink sends each chunk exactly
+/// once, the sink never sends its own chunk, every worker drains into the
+/// sink, and a worker only sends after all its children have (strictly
+/// earlier stages).
+fn check_reduce_scatter(topo: &Topology, n: usize) -> Result<(), String> {
+    let sched = topo.try_reduce_scatter(n).map_err(|e| e.to_string())?;
+    if sched.len() != topo.rs_stages(n) {
+        return Err(format!("stage count {} != rs_stages {}", sched.len(), topo.rs_stages(n)));
+    }
+    for c in 0..n as u32 {
+        // sender -> (receiver, stage)
+        let mut sends: HashMap<u32, (u32, usize)> = HashMap::new();
+        for (s, hops) in sched.iter().enumerate() {
+            for h in hops.iter().filter(|h| h.chunk == c) {
+                if h.from == c {
+                    return Err(format!("sink {c} sends its own chunk"));
+                }
+                if sends.insert(h.from, (h.to, s)).is_some() {
+                    return Err(format!("worker {} sends chunk {c} twice", h.from));
+                }
+            }
+        }
+        if sends.len() != n - 1 {
+            return Err(format!("chunk {c}: {} senders, want {}", sends.len(), n - 1));
+        }
+        for (&w, &(to, s)) in &sends {
+            // a worker may only send after everything destined to it arrived
+            if let Some(&(_, ps)) = sends.get(&to) {
+                if ps <= s {
+                    return Err(format!(
+                        "chunk {c}: {to} forwards at stage {ps} ≤ child {w}'s stage {s}"
+                    ));
+                }
+            }
+        }
+        // every worker's partial drains into the sink
+        for w in 0..n as u32 {
+            let mut cur = w;
+            let mut steps = 0;
+            while cur != c {
+                cur = sends.get(&cur).ok_or_else(|| format!("worker {cur} stranded"))?.0;
+                steps += 1;
+                if steps > n {
+                    return Err(format!("chunk {c}: cycle through {w}"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// All-gather invariants: senders hold what they forward, and every
+/// worker ends up receiving every chunk exactly once.
+fn check_all_gather(topo: &Topology, n: usize) -> Result<(), String> {
+    let sched = topo.try_all_gather(n).map_err(|e| e.to_string())?;
+    let mut has = vec![vec![false; n]; n];
+    for (c, row) in has.iter_mut().enumerate() {
+        row[c] = true;
+    }
+    let mut recv_count: HashMap<(u32, u32), u32> = HashMap::new();
+    for hops in &sched {
+        let snapshot = has.clone();
+        for h in hops {
+            if !snapshot[h.from as usize][h.chunk as usize] {
+                return Err(format!("{} forwards chunk {} it does not hold", h.from, h.chunk));
+            }
+            *recv_count.entry((h.to, h.chunk)).or_default() += 1;
+            has[h.to as usize][h.chunk as usize] = true;
+        }
+    }
+    for w in 0..n as u32 {
+        for c in 0..n as u32 {
+            let got = recv_count.get(&(w, c)).copied().unwrap_or(0);
+            let want = u32::from(w != c);
+            if got != want {
+                return Err(format!("worker {w} received chunk {c} {got} times, want {want}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn hierarchical_schedules_are_valid_arborescences() {
+    Prop::new(48).check("hierarchy-schedules", gen_hierarchy, |(topo, n)| {
+        check_reduce_scatter(topo, *n)?;
+        check_all_gather(topo, *n)
+    });
+}
+
+#[test]
+fn link_classes_split_hops_by_node() {
+    Prop::new(24).check("hierarchy-link-classes", gen_hierarchy, |&(topo, n)| {
+        let (m, levels) = match topo {
+            Topology::Hierarchical(spec) => (spec.workers_per_node, spec.level_specs(n)),
+            _ => unreachable!("generator only yields hierarchies"),
+        };
+        let mut saw = HashSet::new();
+        for sched in [topo.reduce_scatter(n), topo.all_gather(n)] {
+            for hops in &sched {
+                for h in hops {
+                    let class = topo.link_class(h.from, h.to);
+                    let want = if h.from / m == h.to / m {
+                        LinkClass::Level(0)
+                    } else {
+                        LinkClass::Nic
+                    };
+                    if class != want {
+                        return Err(format!("hop {h:?}: class {class:?}, want {want:?}"));
+                    }
+                    // the generic multi-level classifier must agree with
+                    // the engine-facing 2-level one
+                    let lvl = dynamiq::collective::hierarchy::hop_level(&levels, h.from, h.to);
+                    let agree = match class {
+                        LinkClass::Level(0) => lvl == 0,
+                        _ => lvl == 1,
+                    };
+                    if !agree {
+                        return Err(format!("hop {h:?}: hop_level {lvl} vs class {class:?}"));
+                    }
+                    saw.insert(class);
+                }
+            }
+        }
+        // a 2-level hierarchy must exercise both link tiers
+        if saw.len() != 2 {
+            return Err(format!("expected both link tiers, saw {saw:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_and_coordinator_bit_identical_on_hierarchies() {
+    // acceptance: ≥ 2 levels, ≥ 16 workers, end-to-end through both
+    // execution paths with bit-identical aggregated gradients
+    Prop::new(6).check(
+        "hierarchy-engine-vs-coordinator",
+        |rng| {
+            let schemes = ["DynamiQ", "BF16", "MXFP8", "THC"];
+            let scheme = schemes[rng.below(4) as usize];
+            let d = 1024 + rng.below(6000) as usize;
+            let (topo, n) = loop {
+                let (t, n) = gen_hierarchy(rng);
+                if n >= 16 {
+                    break (t, n);
+                }
+            };
+            (scheme, topo, n, d, rng.next_u64())
+        },
+        |&(scheme, topo, n, d, seed)| {
+            let g: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    let mut rng = Pcg::new(seed ^ ((i as u64) << 9));
+                    let mut v = vec![0.0f32; d];
+                    rng.fill_normal(&mut v, 0.02);
+                    v
+                })
+                .collect();
+            let mut eng_codecs = make_codecs(scheme, n);
+            let mut eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(48.0));
+            eng.verify_consistency = true;
+            let (expect, rep) = eng.run(&g, &mut eng_codecs, 1, 0.0);
+            if !rep.vnmse.is_finite() {
+                return Err(format!("{scheme}: non-finite vNMSE"));
+            }
+            let out = threaded_allreduce(topo, g, make_codecs(scheme, n), 1)
+                .map_err(|e| e.to_string())?;
+            for wr in &out {
+                if wr.aggregated != expect {
+                    return Err(format!(
+                        "{scheme}/{}: worker {} diverged from engine",
+                        topo.name(),
+                        wr.worker
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hierarchy_moves_fewer_nic_bytes_than_flat() {
+    // the point of the subsystem: with fast private intra-node links, only
+    // the inter-node (NIC) stages are expensive — a hierarchy exposes
+    // fewer NIC bytes per worker than a flat ring over the same cluster
+    let n = 16;
+    let d = 1 << 15;
+    let g: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(77 + i as u64);
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.01);
+            v
+        })
+        .collect();
+    let time_of = |topo: Topology| {
+        let mut codecs = make_codecs("BF16", n);
+        let eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(48.0));
+        let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+        rep.comm_time_s()
+    };
+    let flat = time_of(Topology::Ring);
+    let hier = time_of(Topology::hierarchical(Level::Ring, Level::Butterfly, 4));
+    assert!(
+        hier < flat,
+        "hierarchy must beat a flat ring on heterogeneous links: {hier} vs {flat}"
+    );
+}

@@ -1,0 +1,204 @@
+//! Offline shim for the `anyhow` crate (the build image vendors no
+//! registry). Implements exactly the subset this workspace uses:
+//!
+//! - [`Error`]: an opaque error with a context chain; `Display` prints the
+//!   outermost message, `{:#}` prints the whole chain `a: b: c`, `Debug`
+//!   prints the chain over multiple lines (mirroring real anyhow).
+//! - [`Result`] with the `E = Error` default.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! - [`Context`] for `Result<T, E>` (any `E` convertible to [`Error`],
+//!   which covers both std errors and `anyhow::Error` itself).
+//! - `From<E: std::error::Error + Send + Sync + 'static>` so `?` lifts
+//!   std errors.
+//!
+//! Swapping the real crate back in is a one-line change in the root
+//! Cargo.toml; no call site depends on shim-only behavior.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus the contexts layered on top of it (outermost
+/// last; `chain[0]` is the root cause).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Layer a new outermost context onto the chain.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// Outermost message first, root cause last (anyhow's chain order).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, outermost first
+            for (i, c) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{c}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain.last().unwrap())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut it = self.chain();
+        write!(f, "{}", it.next().unwrap_or(""))?;
+        let rest: Vec<&str> = it.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in rest.iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `?` on std errors. (No overlap with the reflexive `From<Error>`:
+// `Error` itself does not implement `std::error::Error`, same trick as
+// real anyhow.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // keep source chain visible in one line per level
+        let mut chain = Vec::new();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        chain.reverse();
+        chain.push(e.to_string());
+        Error { chain }
+    }
+}
+
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/anywhere")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_lifts_std_errors() {
+        let e = io_err().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Result<()> = io_err().with_context(|| "loading config");
+        let e = e.unwrap_err();
+        let plain = format!("{e}");
+        let alt = format!("{e:#}");
+        assert_eq!(plain, "loading config");
+        assert!(alt.starts_with("loading config: "), "{alt}");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn macros_work() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+}

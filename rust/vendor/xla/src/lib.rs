@@ -1,0 +1,225 @@
+//! Offline stub of the xla-rs PJRT bindings — see README.md.
+//!
+//! [`Literal`] is a real typed host buffer; the PJRT client/compile/execute
+//! entry points report [`Error::Unavailable`]. The type and method
+//! signatures mirror the subset of xla-rs the `dynamiq` crate calls.
+
+use std::fmt;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Clone)]
+pub enum Error {
+    /// No PJRT backend in this build (stub crate).
+    Unavailable(&'static str),
+    /// Literal-layer misuse (shape/type mismatch).
+    Literal(String),
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what} unavailable: stub xla crate (point Cargo.toml at a real xla-rs to enable)"
+            ),
+            Error::Literal(msg) => write!(f, "literal: {msg}"),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for Error {}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+    U8,
+}
+
+impl ElementType {
+    fn size(self) -> usize {
+        match self {
+            ElementType::F32 | ElementType::S32 | ElementType::U32 => 4,
+            ElementType::U8 => 1,
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold natively.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn write(buf: &mut Vec<u8>, v: Self);
+    fn read(bytes: &[u8]) -> Self;
+}
+
+macro_rules! native {
+    ($t:ty, $ty:expr) => {
+        impl NativeType for $t {
+            const TY: ElementType = $ty;
+            fn write(buf: &mut Vec<u8>, v: Self) {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            fn read(bytes: &[u8]) -> Self {
+                let mut a = [0u8; std::mem::size_of::<$t>()];
+                a.copy_from_slice(bytes);
+                <$t>::from_le_bytes(a)
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(i32, ElementType::S32);
+native!(u32, ElementType::U32);
+native!(u8, ElementType::U8);
+
+/// A typed host tensor (little-endian byte storage + dims).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let mut buf = Vec::with_capacity(data.len() * std::mem::size_of::<T>());
+        for &v in data {
+            T::write(&mut buf, v);
+        }
+        Literal { ty: T::TY, dims: vec![data.len() as i64], data: buf }
+    }
+
+    pub fn scalar(v: f32) -> Literal {
+        let mut buf = Vec::with_capacity(4);
+        f32::write(&mut buf, v);
+        Literal { ty: ElementType::F32, dims: Vec::new(), data: buf }
+    }
+
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let count: usize = dims.iter().product();
+        if count * ty.size() != data.len() {
+            return Err(Error::Literal(format!(
+                "shape {dims:?} needs {} bytes, got {}",
+                count * ty.size(),
+                data.len()
+            )));
+        }
+        Ok(Literal { ty, dims: dims.iter().map(|&d| d as i64).collect(), data: data.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len() / self.ty.size()
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.element_count() {
+            return Err(Error::Literal(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { ty: self.ty, dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.ty != T::TY {
+            return Err(Error::Literal(format!("literal is {:?}, asked for {:?}", self.ty, T::TY)));
+        }
+        Ok(self.data.chunks_exact(self.ty.size()).map(T::read).collect())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("literal tuple"))
+    }
+}
+
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HLO parsing"))
+    }
+}
+
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PJRT compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PJRT execute"))
+    }
+}
+
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PJRT buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrips() {
+        let l = Literal::vec1(&[1.0f32, -2.5, 3.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.0]);
+        assert!(l.to_vec::<u32>().is_err());
+        let r = l.reshape(&[3, 1]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, -2.5, 3.0]);
+        assert!(l.reshape(&[4]).is_err());
+        let u = Literal::create_from_shape_and_untyped_data(ElementType::U8, &[2], &[7, 9]).unwrap();
+        assert_eq!(u.to_vec::<u8>().unwrap(), vec![7, 9]);
+        assert_eq!(Literal::scalar(2.0).to_vec::<f32>().unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn backend_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let msg = format!("{:?}", Error::Unavailable("PJRT CPU client"));
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}
