@@ -47,7 +47,7 @@ fn main() {
     for scheme in ["BF16", "DynamiQ", "MXFP8"] {
         let mut codecs = make_codecs(scheme, 4);
         let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
-        let (_, rep) = eng.run(&grads, &mut codecs, 0, 0.0);
+        let (_, rep) = eng.run(&grads, &mut codecs, 0, 0.0).expect("valid topology");
         println!(
             "{scheme:>8}: vNMSE {:.2e}, wire {:>9} B, comm {:.3} ms",
             rep.vnmse,

@@ -38,7 +38,7 @@ fn main() {
             for topo in [Topology::Ring, Topology::Butterfly] {
                 let mut codecs = make_codecs(scheme, n);
                 let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
-                let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+                let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0).expect("valid topology");
                 e.push(rep.vnmse);
             }
             println!(

@@ -4,7 +4,7 @@
 //!
 //!     cargo bench --bench allreduce
 
-use dynamiq::codec::make_codecs;
+use dynamiq::codec::{make_codecs, ScratchPool};
 use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, Topology};
 use dynamiq::util::benchkit::Bench;
 use dynamiq::util::rng::Pcg;
@@ -48,12 +48,14 @@ fn main() {
             let mut eng = AllReduceEngine::new(topo, net);
             eng.measure_vnmse = false;
             let mut codecs = make_codecs(scheme, n);
+            let mut pool = ScratchPool::new();
             let mut round = 0u32;
             let r = bench.run(
                 &format!("{scheme}/{}-n{n}", topo.name()),
                 Some((d * 4 * n) as u64),
                 || {
-                    let (_, rep) = eng.run(&g, &mut codecs, round, 0.0);
+                    let (_, rep) =
+                        eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool).unwrap();
                     round += 1;
                     std::hint::black_box(rep.rs_bytes);
                 },
@@ -68,8 +70,9 @@ fn main() {
     let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
     eng.measure_vnmse = false;
     let mut codecs = make_codecs("DynamiQ", n);
+    let mut pool = ScratchPool::new();
     bench.run("engine/round", Some((d * 4 * n) as u64), || {
-        let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+        let (_, rep) = eng.run_pooled(&g, &mut codecs, 0, 0.0, &mut pool).unwrap();
         std::hint::black_box(rep.rs_bytes);
     });
     bench.run("threaded/round", Some((d * 4 * n) as u64), || {

@@ -1,11 +1,19 @@
 //! Codec micro-benchmarks: compress / decompress / fused-DAR throughput per
 //! scheme, plus the fused-vs-unfused ablation DESIGN.md calls out (the
-//! Table 2 / Fig 6 story: fused kernels keep intermediates out of "HBM").
+//! Table 2 / Fig 6 story: fused kernels keep intermediates out of "HBM" —
+//! here, off the heap: the fused lane runs `_into` kernels against warm
+//! pooled buffers, the unfused lane is the legacy three-pass
+//! decompress → add → compress with fresh `Vec`s per pass).
 //!
 //!     cargo bench --bench codec_throughput
+//!
+//! Emits `BENCH_codec.json` (entries/s per scheme per kernel) next to the
+//! working directory so the perf trajectory is machine-readable. Set
+//! `BENCH_QUICK=1` for the CI smoke configuration (smaller vector, fewer
+//! samples).
 
-use dynamiq::codec::{make_codec, GradCodec, HopCtx};
-use dynamiq::util::benchkit::Bench;
+use dynamiq::codec::{make_codec, GradCodec, HopCtx, MetaOp, WorkerScratch};
+use dynamiq::util::benchkit::{Bench, BenchLog};
 use dynamiq::util::rng::Pcg;
 
 fn grad(d: usize, seed: u64) -> Vec<f32> {
@@ -22,51 +30,83 @@ fn grad(d: usize, seed: u64) -> Vec<f32> {
 }
 
 fn main() {
-    let d = 1 << 20; // 1M coordinates = 4 MB f32
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+    let d = if quick { 1 << 16 } else { 1 << 20 };
     let bytes = (d * 4) as u64;
-    let bench = Bench::default();
+    let bench = if quick { Bench::quick() } else { Bench::default() };
     let hop = HopCtx { worker: 0, n_workers: 4, round: 0, summed: 1 };
     println!("== codec throughput (d = {d}, {} MB f32) ==", bytes / 1_000_000);
 
+    let mut log = BenchLog::new();
     for scheme in ["BF16", "DynamiQ", "MXFP8", "MXFP4", "THC", "OmniReduce"] {
         let g = grad(d, 1);
         let g2 = grad(d, 2);
+        // proper 2-worker semantics: both codecs install the same
+        // aggregated metadata, so their bit allocations / scales agree and
+        // codec_b can decode codec's wire (as in a real hop)
         let mut codec = make_codec(scheme);
-        let meta = codec.metadata(&g, &hop);
-        // self-aggregated metadata (single-worker semantics are fine for
-        // timing; sizes are identical)
-        let pre = codec.begin_round(&g, &meta, &hop);
         let mut codec_b = make_codec(scheme);
-        let meta_b = codec_b.metadata(&g2, &hop);
-        let pre_b = codec_b.begin_round(&g2, &meta_b, &hop);
+        let hop_b = HopCtx { worker: 1, n_workers: 4, ..hop };
+        let meta = codec.metadata(&g, &hop);
+        let meta_b = codec_b.metadata(&g2, &hop_b);
+        let agg: Vec<f32> = match codec.metadata_op() {
+            MetaOp::Sum => meta.iter().zip(&meta_b).map(|(a, b)| a + b).collect(),
+            MetaOp::Max => meta.iter().zip(&meta_b).map(|(a, b)| a.max(*b)).collect(),
+        };
+        let pre = codec.begin_round(&g, &agg, &hop);
+        let pre_b = codec_b.begin_round(&g2, &agg, &hop_b);
         let r = 0..pre.len();
+        let entries = pre.len() as u64;
 
         let wire = codec.compress(&pre[r.clone()], r.clone(), &hop);
         println!(
             "-- {scheme}: wire {:.2} bits/coord",
             wire.len() as f64 * 8.0 / d as f64
         );
-        bench.run(&format!("{scheme}/compress"), Some(bytes), || {
-            std::hint::black_box(codec.compress(&pre[r.clone()], r.clone(), &hop));
+        // warm reusable buffers: the steady-state hot path the engine runs
+        let mut out = Vec::with_capacity(wire.len());
+        let mut dec = vec![0.0f32; pre.len()];
+        let mut scratch = WorkerScratch::default();
+
+        let res = bench.run(&format!("{scheme}/compress"), Some(bytes), || {
+            out.clear();
+            codec.compress_into(&pre[r.clone()], r.clone(), &hop, &mut out);
+            std::hint::black_box(out.len());
         });
-        bench.run(&format!("{scheme}/decompress"), Some(bytes), || {
-            std::hint::black_box(codec.decompress(&wire, r.clone(), &hop));
+        log.push(scheme, "compress", entries, &res);
+        let res = bench.run(&format!("{scheme}/decompress"), Some(bytes), || {
+            codec.decompress_into(&wire, r.clone(), &hop, &mut dec);
+            std::hint::black_box(dec.len());
         });
-        bench.run(&format!("{scheme}/fused-dar"), Some(bytes), || {
-            std::hint::black_box(codec_b.decompress_accumulate_recompress(
+        log.push(scheme, "decompress", entries, &res);
+        let res = bench.run(&format!("{scheme}/fused-dar"), Some(bytes), || {
+            out.clear();
+            codec_b.decompress_accumulate_recompress_into(
                 &wire,
                 &pre_b[r.clone()],
                 r.clone(),
                 &hop,
-            ));
+                &mut scratch,
+                &mut out,
+            );
+            std::hint::black_box(out.len());
         });
-        // unfused ablation: decompress → add → compress (three passes)
-        bench.run(&format!("{scheme}/unfused-dar"), Some(bytes), || {
+        log.push(scheme, "fused-dar", entries, &res);
+        // unfused ablation: decompress → add → compress, three passes with
+        // chunk-sized intermediates allocated per hop (the pre-`_into`
+        // default path — the Fig. 6 comparison point)
+        let res = bench.run(&format!("{scheme}/unfused-dar"), Some(bytes), || {
             let mut acc = codec_b.decompress(&wire, r.clone(), &hop);
             for (a, &p) in acc.iter_mut().zip(&pre_b[r.clone()]) {
                 *a += p;
             }
-            std::hint::black_box(codec_b.compress(&acc, r.clone(), &hop));
+            let next = HopCtx { summed: hop.summed + 1, ..hop };
+            std::hint::black_box(codec_b.compress(&acc, r.clone(), &next));
         });
+        log.push(scheme, "unfused-dar", entries, &res);
+    }
+    match log.write("BENCH_codec.json") {
+        Ok(()) => println!("\nwrote BENCH_codec.json"),
+        Err(e) => eprintln!("failed to write BENCH_codec.json: {e}"),
     }
 }

@@ -42,8 +42,9 @@ fn main() {
         let mut codecs = make_codecs(scheme, n);
         let mut comm = 0.0;
         let mut wire = 0u64;
+        let mut pool = dynamiq::codec::ScratchPool::new();
         let r = bench.run(&format!("tab4/{scheme}"), None, || {
-            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+            let (_, rep) = eng.run_pooled(&g, &mut codecs, 0, 0.0, &mut pool).unwrap();
             comm = rep.comm_time_s();
             wire = rep.rs_bytes + rep.ag_bytes;
         });

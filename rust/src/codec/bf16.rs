@@ -4,7 +4,7 @@
 
 use std::ops::Range;
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits};
 
 pub struct Bf16Codec {
@@ -47,21 +47,20 @@ impl GradCodec for Bf16Codec {
         16
     }
 
-    fn compress(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx) -> Vec<u8> {
+    fn compress_into(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx, out: &mut Vec<u8>) {
         debug_assert_eq!(data.len(), range.len());
-        let mut out = Vec::with_capacity(range.len() * 2);
+        out.reserve(range.len() * 2);
         for &v in data {
             out.extend_from_slice(&bf16_bits(v).to_le_bytes());
         }
-        out
     }
 
-    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
         assert_eq!(bytes.len(), range.len() * 2);
-        bytes
-            .chunks_exact(2)
-            .map(|b| bf16_from_bits(u16::from_le_bytes([b[0], b[1]])))
-            .collect()
+        debug_assert_eq!(out.len(), range.len());
+        for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+            *o = bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+        }
     }
 
     fn decompress_accumulate(
@@ -69,10 +68,31 @@ impl GradCodec for Bf16Codec {
         bytes: &[u8],
         acc: &mut [f32],
         range: Range<usize>,
-        ctx: &HopCtx,
+        _ctx: &HopCtx,
     ) {
-        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
-            *a += v;
+        assert_eq!(bytes.len(), range.len() * 2);
+        for (a, b) in acc.iter_mut().zip(bytes.chunks_exact(2)) {
+            *a += bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+        }
+    }
+
+    /// Single-pass fused hop: decode + add the local entry + re-round to
+    /// BF16, one entry at a time — no chunk-sized intermediate at all.
+    fn decompress_accumulate_recompress_into(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        assert_eq!(bytes.len(), range.len() * 2);
+        debug_assert_eq!(local.len(), range.len());
+        out.reserve(range.len() * 2);
+        for (&p, b) in local.iter().zip(bytes.chunks_exact(2)) {
+            let v = p + bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+            out.extend_from_slice(&bf16_bits(v).to_le_bytes());
         }
     }
 

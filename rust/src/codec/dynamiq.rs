@@ -18,13 +18,13 @@
 
 use std::ops::Range;
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
 use crate::quant::bitalloc::{solve_exact, BitAllocation, FastAllocator};
 use crate::quant::groups::{GroupLayout, SuperGroupStats};
-use crate::quant::hierarchical::{encode_scales, ScaleCodes};
+use crate::quant::hierarchical::encode_scales_into;
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits, bf16_round};
 use crate::quant::nonuniform::{QTables, DEFAULT_EPSILON};
-use crate::quant::packing::{pack, packed_len, sign_mag_code, split_sign_mag, unpack};
+use crate::quant::packing::{pack_into, packed_len, sign_mag_code, split_sign_mag};
 use crate::quant::rounding::{Rounding, RoundingCtx};
 use crate::util::rng::pcg_hash;
 
@@ -130,6 +130,9 @@ struct RoundState {
 pub struct Dynamiq {
     pub cfg: DynamiqConfig,
     tables: QTables,
+    /// signed decode LUTs per configured width, built once at construction
+    /// (lut[code] = ±grid[mag]) — the decode paths never allocate
+    luts: Vec<(u32, Vec<f32>)>,
     fast_alloc: FastAllocator,
     state: Option<RoundState>,
 }
@@ -141,12 +144,13 @@ impl Dynamiq {
             "widths must be ascending"
         );
         let tables = QTables::new(&cfg.widths, cfg.epsilon, cfg.uniform_values);
+        let luts = cfg.widths.iter().map(|&w| (w, build_lut(&tables, w))).collect();
         let w3: [u32; 3] = if cfg.widths.len() == 3 {
             [cfg.widths[0], cfg.widths[1], cfg.widths[2]]
         } else {
             [2, 4, 8] // fast allocator unused unless |W|=3
         };
-        Dynamiq { fast_alloc: FastAllocator::new(w3), tables, cfg, state: None }
+        Dynamiq { fast_alloc: FastAllocator::new(w3), tables, luts, cfg, state: None }
     }
 
     pub fn paper_default() -> Self {
@@ -202,11 +206,10 @@ impl Dynamiq {
             *m = x[gi * g..(gi + 1) * g].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
         }
         let entry_ctr0 = (sg_slot * self.s()) as u32;
-        let _scales: ScaleCodes = if self.cfg.hierarchical {
-            let sc = encode_scales(maxima, scale_seed, entry_ctr0 / g as u32);
-            out.extend_from_slice(&bf16_bits(sc.sf_super).to_le_bytes());
-            out.extend_from_slice(&sc.codes);
-            sc
+        if self.cfg.hierarchical {
+            // scales stream straight onto the wire (same bytes as the
+            // owned encode_scales; no per-super-group Vec)
+            encode_scales_into(maxima, scale_seed, entry_ctr0 / g as u32, out);
         } else {
             // BF16 per group, bumped so it never under-covers the max
             let mut codes = Vec::with_capacity(gpsg);
@@ -218,10 +221,9 @@ impl Dynamiq {
                 out.extend_from_slice(&bf16_bits(b).to_le_bytes());
                 codes.push(b);
             }
-            // reuse ScaleCodes shape: store decoded directly via sf_super=1
-            // trick is ugly; keep a parallel representation below instead.
+            // ablation path: per-group BF16 scales, general widths
             return self.compress_entries_plain(x, w, maxima, &codes, entry_ctr0, rctx, pi, out);
-        };
+        }
         let table = self.tables.get(w);
         // Perf: pack codes on the fly (w ∈ {2,4,8} divides 8, so the
         // accumulator flushes on byte boundaries) — no intermediate code
@@ -288,30 +290,23 @@ impl Dynamiq {
                 codes.push(sign_mag_code(v < 0.0, mag, w));
             }
         }
-        out.extend_from_slice(&pack(&codes, w));
+        pack_into(&codes, w, out);
     }
 
-    /// Signed decode LUT for width `w`: lut[code] = ±grid[mag]. Built once
-    /// per width run by the decode paths (the reorder guarantees
-    /// same-width runs, so this amortizes to ~1/S per entry).
-    fn decode_lut(&self, w: u32) -> Vec<f32> {
-        let table = self.tables.get(w);
-        (0..(1u16 << w))
-            .map(|c| {
-                let (neg, mag) = split_sign_mag(c, w);
-                let v = table.value(mag);
-                if neg {
-                    -v
-                } else {
-                    v
-                }
-            })
-            .collect()
+    /// The precomputed signed decode LUT for width `w` (luts are keyed by
+    /// the configured widths, so the linear scan is over ≤ |W| entries).
+    #[inline]
+    fn lut(&self, w: u32) -> &[f32] {
+        self.luts
+            .iter()
+            .find(|(lw, _)| *lw == w)
+            .map(|(_, l)| l.as_slice())
+            .expect("width outside configured set")
     }
 
     /// Decode one super-group from `bytes` at offset `off`; calls `sink`
     /// with (entry_index_within_sg, value). Returns bytes consumed.
-    /// `lut` must be `self.decode_lut(w)`.
+    /// `lut` must be `self.lut(w)`.
     fn decode_sg<F: FnMut(usize, f32)>(
         &self,
         bytes: &[u8],
@@ -395,6 +390,22 @@ impl Dynamiq {
     }
 }
 
+/// Signed decode LUT for width `w`: lut[code] = ±grid[mag].
+fn build_lut(tables: &QTables, w: u32) -> Vec<f32> {
+    let table = tables.get(w);
+    (0..(1u16 << w))
+        .map(|c| {
+            let (neg, mag) = split_sign_mag(c, w);
+            let v = table.value(mag);
+            if neg {
+                -v
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
 impl GradCodec for Dynamiq {
     fn name(&self) -> &'static str {
         "DynamiQ"
@@ -468,37 +479,32 @@ impl GradCodec for Dynamiq {
         self.s()
     }
 
-    fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8> {
+    fn compress_into(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
         debug_assert_eq!(data.len(), range.len());
         let st = self.state();
         let rctx = self.rctx(ctx);
         let sseed = self.scale_seed(ctx);
-        let mut out = Vec::with_capacity(self.chunk_wire_bytes(&range));
+        out.reserve(self.chunk_wire_bytes(&range));
         for k in self.slots(&range) {
             let w = st.widths[k] as u32;
             let pi = rctx.pi_slot(k as u32);
             let base = k * self.s() - range.start;
             let x = &data[base..base + self.s()];
-            self.compress_sg(x, w, k, &rctx, sseed, pi, &mut out);
+            self.compress_sg(x, w, k, &rctx, sseed, pi, out);
         }
-        out
     }
 
-    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
         let st = self.state();
-        let mut out = vec![0.0f32; range.len()];
         let mut off = 0usize;
-        let mut lut: (u32, Vec<f32>) = (0, Vec::new());
         for k in self.slots(&range) {
             let w = st.widths[k] as u32;
-            if lut.0 != w {
-                lut = (w, self.decode_lut(w));
-            }
+            let lut = self.lut(w);
             let base = k * self.s() - range.start;
-            off += self.decode_sg(&bytes[off..], w, &lut.1, |i, v| out[base + i] = v);
+            off += self.decode_sg(&bytes[off..], w, lut, |i, v| out[base + i] = v);
         }
         debug_assert_eq!(off, bytes.len());
-        out
     }
 
     fn decompress_accumulate(
@@ -510,51 +516,47 @@ impl GradCodec for Dynamiq {
     ) {
         let st = self.state();
         let mut off = 0usize;
-        let mut lut: (u32, Vec<f32>) = (0, Vec::new());
         for k in self.slots(&range) {
             let w = st.widths[k] as u32;
-            if lut.0 != w {
-                lut = (w, self.decode_lut(w));
-            }
+            let lut = self.lut(w);
             let base = k * self.s() - range.start;
-            off += self.decode_sg(&bytes[off..], w, &lut.1, |i, v| acc[base + i] += v);
+            off += self.decode_sg(&bytes[off..], w, lut, |i, v| acc[base + i] += v);
         }
         debug_assert_eq!(off, bytes.len());
     }
 
-    /// The fused kernel (§4, kernel 3): per super-group, decode into a
-    /// stack slab, accumulate the local contribution, recompress — one pass
-    /// over the wire data, no chunk-sized intermediate.
-    fn decompress_accumulate_recompress(
+    /// The fused kernel (§4, kernel 3): per super-group, decode into the
+    /// caller's scratch slab, accumulate the local contribution,
+    /// recompress — one pass over the wire data, no chunk-sized
+    /// intermediate and no heap traffic.
+    fn decompress_accumulate_recompress_into(
         &self,
         bytes: &[u8],
         local: &[f32],
         range: Range<usize>,
         ctx: &HopCtx,
-    ) -> Vec<u8> {
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
         debug_assert_eq!(local.len(), range.len());
         let st = self.state();
         let rctx = self.rctx(ctx);
         let sseed = self.scale_seed(ctx);
         let s = self.s();
-        let mut out = Vec::with_capacity(bytes.len());
-        let mut slab = vec![0.0f32; s];
+        out.reserve(bytes.len());
+        scratch.slab.resize(s, 0.0);
         let mut off = 0usize;
-        let mut lut: (u32, Vec<f32>) = (0, Vec::new());
         for k in self.slots(&range) {
             let w = st.widths[k] as u32;
-            if lut.0 != w {
-                lut = (w, self.decode_lut(w));
-            }
+            let lut = self.lut(w);
             let base = k * s - range.start;
             // decode + accumulate into the slab (registers/VMEM analogue)
-            slab.copy_from_slice(&local[base..base + s]);
-            off += self.decode_sg(&bytes[off..], w, &lut.1, |i, v| slab[i] += v);
+            scratch.slab.copy_from_slice(&local[base..base + s]);
+            off += self.decode_sg(&bytes[off..], w, lut, |i, v| scratch.slab[i] += v);
             let pi = rctx.pi_slot(k as u32);
-            self.compress_sg(&slab, w, k, &rctx, sseed, pi, &mut out);
+            self.compress_sg(&scratch.slab, w, k, &rctx, sseed, pi, out);
         }
         debug_assert_eq!(off, bytes.len());
-        out
     }
 
     fn end_round(&mut self, agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {

@@ -23,12 +23,41 @@
 //!
 //! All sizes returned on the wire are exact byte counts — the network
 //! simulator charges them, which is how TTA numbers are produced.
+//!
+//! ## The `_into` contract (zero-allocation hot path)
+//!
+//! The kernel methods come in caller-buffer form — this is the interface
+//! the engine and coordinator drive, and what codecs implement:
+//!
+//! - [`GradCodec::compress_into`] **appends** the payload to `out`
+//!   (callers clear/reuse the buffer; a warm buffer makes the call
+//!   allocation-free once capacity has peaked).
+//! - [`GradCodec::decompress_into`] **fully overwrites** `out`, whose
+//!   length must equal `range.len()` — every entry is written (sparse
+//!   codecs write explicit zeros), so callers may pass dirty buffers.
+//! - [`GradCodec::decompress_accumulate`] adds the decoded payload into
+//!   `acc` in place (already caller-buffer shaped).
+//! - [`GradCodec::decompress_accumulate_recompress_into`] is the fused
+//!   kernel 3: decode + accumulate the local chunk + re-encode in one
+//!   pass, staging through the caller's [`WorkerScratch`] (never the
+//!   heap) and appending to `out` like `compress_into`.
+//!
+//! The `Vec`-returning methods ([`GradCodec::compress`],
+//! [`GradCodec::decompress`],
+//! [`GradCodec::decompress_accumulate_recompress`]) are thin default
+//! wrappers over the `_into` forms, kept for tests and one-shot callers;
+//! per-hop code must use the `_into` forms with pooled buffers (see
+//! [`ScratchPool`]). Determinism is unchanged: both forms produce
+//! byte-identical payloads (asserted by `tests/into_bit_identity`).
 
 pub mod bf16;
 pub mod dynamiq;
 pub mod mxfp;
 pub mod omnireduce;
+pub mod scratch;
 pub mod thc;
+
+pub use scratch::{ScratchPool, WorkerScratch};
 
 use std::ops::Range;
 
@@ -57,8 +86,11 @@ pub struct HopCtx {
 }
 
 /// A gradient codec. One instance per worker; it may carry cross-round
-/// state (e.g. MXFP's µ auto-scale, OmniReduce's adaptive k).
-pub trait GradCodec: Send {
+/// state (e.g. MXFP's µ auto-scale, OmniReduce's adaptive k). `Sync` so
+/// the engine can run the per-worker kernel calls (`&self`) of one stage
+/// on scoped threads; the `&mut self` round-boundary methods are never
+/// called concurrently.
+pub trait GradCodec: Send + Sync {
     /// Human-readable scheme name (matches the paper's legend).
     fn name(&self) -> &'static str;
 
@@ -78,14 +110,18 @@ pub trait GradCodec: Send {
     /// Alignment (in entries) chunk boundaries must respect.
     fn chunk_alignment(&self) -> usize;
 
-    /// Compress one chunk at a leaf (kernel 1 of §4). `data` is exactly the
-    /// chunk slice (`data.len() == range.len()`); `range` gives its
-    /// absolute position in the preprocessed vector, which codecs use to
-    /// index per-super-group widths / per-block scales / selections.
-    fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8>;
+    /// Compress one chunk at a leaf (kernel 1 of §4), **appending** the
+    /// payload to `out`. `data` is exactly the chunk slice
+    /// (`data.len() == range.len()`); `range` gives its absolute position
+    /// in the preprocessed vector, which codecs use to index
+    /// per-super-group widths / per-block scales / selections. With a warm
+    /// `out` the call performs no heap allocation.
+    fn compress_into(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>);
 
-    /// Decompress a received payload for `range` (kernel 2).
-    fn decompress(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx) -> Vec<f32>;
+    /// Decompress a received payload for `range` (kernel 2), **fully
+    /// overwriting** `out` (`out.len() == range.len()`; dirty buffers are
+    /// fine — sparse codecs write explicit zeros). Allocation-free.
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx, out: &mut [f32]);
 
     /// Fused decompress + accumulate into `acc` (kernel 4): acc += decode.
     fn decompress_accumulate(
@@ -96,13 +132,49 @@ pub trait GradCodec: Send {
         ctx: &HopCtx,
     );
 
-    /// Fused decompress + accumulate + recompress (kernel 3): returns the
-    /// compressed `decode(bytes) + local` ready for the next hop. `local`
-    /// is the worker's own chunk slice (`local.len() == range.len()`).
-    /// Default: decompress → add → compress (the unfused path; DynamiQ
-    /// overrides with a single-pass implementation — the Fig. 6 /
-    /// Table 2 comparison point). On input, `ctx.summed` counts the
-    /// gradients in `bytes`; the output payload carries one more.
+    /// Fused decompress + accumulate + recompress (kernel 3): **appends**
+    /// the compressed `decode(bytes) + local` to `out`, ready for the next
+    /// hop. `local` is the worker's own chunk slice
+    /// (`local.len() == range.len()`); `scratch` provides the decode slab
+    /// so the call stays off the heap. Default: accumulate into the slab,
+    /// then `compress_into` (the unfused two-pass path; DynamiQ overrides
+    /// with a single-pass super-group-at-a-time implementation — the
+    /// Fig. 6 / Table 2 comparison point). On input, `ctx.summed` counts
+    /// the gradients in `bytes`; the output payload carries one more.
+    fn decompress_accumulate_recompress_into(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        debug_assert_eq!(local.len(), range.len());
+        scratch.slab.clear();
+        scratch.slab.extend_from_slice(local);
+        self.decompress_accumulate(bytes, &mut scratch.slab, range.clone(), ctx);
+        let out_ctx = HopCtx { summed: ctx.summed + 1, ..*ctx };
+        self.compress_into(&scratch.slab, range, &out_ctx, out);
+    }
+
+    /// Thin `Vec`-returning wrapper over [`GradCodec::compress_into`]
+    /// (tests / one-shot callers; hop paths use the `_into` form).
+    fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.compress_into(data, range, ctx, &mut out);
+        out
+    }
+
+    /// Thin `Vec`-returning wrapper over [`GradCodec::decompress_into`].
+    fn decompress(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx) -> Vec<f32> {
+        let mut out = vec![0.0f32; range.len()];
+        self.decompress_into(bytes, range, ctx, &mut out);
+        out
+    }
+
+    /// Thin `Vec`-returning wrapper over
+    /// [`GradCodec::decompress_accumulate_recompress_into`].
     fn decompress_accumulate_recompress(
         &self,
         bytes: &[u8],
@@ -110,12 +182,10 @@ pub trait GradCodec: Send {
         range: Range<usize>,
         ctx: &HopCtx,
     ) -> Vec<u8> {
-        let mut acc = self.decompress(bytes, range.clone(), ctx);
-        for (a, &p) in acc.iter_mut().zip(local) {
-            *a += p;
-        }
-        let out_ctx = HopCtx { summed: ctx.summed + 1, ..*ctx };
-        self.compress(&acc, range, &out_ctx)
+        let mut scratch = WorkerScratch::default();
+        let mut out = Vec::new();
+        self.decompress_accumulate_recompress_into(bytes, local, range, ctx, &mut scratch, &mut out);
+        out
     }
 
     /// Undo preprocessing on the aggregated sum (in place on the padded

@@ -14,7 +14,7 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits, bf16_round, Minifloat};
 
 pub const MX_BLOCK: usize = 32;
@@ -114,13 +114,19 @@ impl MxfpCodec {
     }
 
     /// Pack codes of element_bits each (4/6/8) — 6-bit codes pack 4-in-3
-    /// bytes as the OCP spec's packed layout.
-    fn pack_codes(&self, codes: &[u16]) -> Vec<u8> {
+    /// bytes as the OCP spec's packed layout. Appends to `out` so the hot
+    /// path never allocates.
+    fn pack_codes_into(&self, codes: &[u16], out: &mut Vec<u8>) {
         match self.format {
-            MxFormat::Mxfp8 => codes.iter().map(|&c| c as u8).collect(),
-            MxFormat::Mxfp4 => crate::quant::packing::pack(codes, 4),
+            MxFormat::Mxfp8 => {
+                out.reserve(codes.len());
+                for &c in codes {
+                    out.push(c as u8);
+                }
+            }
+            MxFormat::Mxfp4 => crate::quant::packing::pack_into(codes, 4, out),
             MxFormat::Mxfp6 => {
-                let mut out = Vec::with_capacity(codes.len() * 6 / 8 + 3);
+                out.reserve(codes.len().div_ceil(4) * 3);
                 for quad in codes.chunks(4) {
                     let mut word: u32 = 0;
                     for (k, &c) in quad.iter().enumerate() {
@@ -128,17 +134,41 @@ impl MxfpCodec {
                     }
                     out.extend_from_slice(&word.to_le_bytes()[..3]);
                 }
-                out
             }
         }
     }
 
+    #[cfg(test)]
+    fn pack_codes(&self, codes: &[u16]) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.pack_codes_into(codes, &mut out);
+        out
+    }
+
+    #[cfg(test)]
     fn unpack_codes(&self, bytes: &[u8], count: usize) -> Vec<u16> {
+        let mut out = vec![0u16; count];
+        self.for_each_code(bytes, count, |k, c| out[k] = c);
+        out
+    }
+
+    /// Stream `count` packed codes out of `bytes`, calling
+    /// `sink(index, code)` — the allocation-free decode primitive all the
+    /// decompress paths share.
+    fn for_each_code<F: FnMut(usize, u16)>(&self, bytes: &[u8], count: usize, mut sink: F) {
         match self.format {
-            MxFormat::Mxfp8 => bytes[..count].iter().map(|&b| b as u16).collect(),
-            MxFormat::Mxfp4 => crate::quant::packing::unpack(bytes, 4, count),
+            MxFormat::Mxfp8 => {
+                for (k, &b) in bytes[..count].iter().enumerate() {
+                    sink(k, b as u16);
+                }
+            }
+            MxFormat::Mxfp4 => {
+                for k in 0..count {
+                    let b = bytes[k / 2];
+                    sink(k, ((b >> ((k % 2) * 4)) & 0xf) as u16);
+                }
+            }
             MxFormat::Mxfp6 => {
-                let mut out = Vec::with_capacity(count);
                 for (q, tri) in bytes.chunks(3).enumerate() {
                     let word = u32::from_le_bytes([
                         tri[0],
@@ -148,11 +178,12 @@ impl MxfpCodec {
                     ]);
                     for k in 0..4 {
                         if q * 4 + k < count {
-                            out.push(((word >> (6 * k)) & 0x3f) as u16);
+                            sink(q * 4 + k, ((word >> (6 * k)) & 0x3f) as u16);
+                        } else {
+                            return;
                         }
                     }
                 }
-                out
             }
         }
     }
@@ -231,9 +262,9 @@ impl GradCodec for MxfpCodec {
         MX_BLOCK
     }
 
-    fn compress(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx) -> Vec<u8> {
+    fn compress_into(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx, out: &mut Vec<u8>) {
         debug_assert_eq!(data.len(), range.len());
-        let mut out = Vec::with_capacity(self.blocks(&range).len() * self.block_wire());
+        out.reserve(self.blocks(&range).len() * self.block_wire());
         let mut codes = [0u16; MX_BLOCK];
         for j in self.blocks(&range) {
             let s = self.scales[j];
@@ -243,26 +274,23 @@ impl GradCodec for MxfpCodec {
             for (k, &v) in x.iter().enumerate() {
                 codes[k] = self.encode(v, s);
             }
-            out.extend_from_slice(&self.pack_codes(&codes));
+            self.pack_codes_into(&codes, out);
         }
-        out
     }
 
-    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
-        let mut out = vec![0.0f32; range.len()];
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
         let mut off = 0usize;
+        let pb = self.payload_bytes(MX_BLOCK);
         for j in self.blocks(&range) {
             let s = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
             off += 2;
-            let pb = self.payload_bytes(MX_BLOCK);
-            let codes = self.unpack_codes(&bytes[off..off + pb], MX_BLOCK);
-            off += pb;
             let base = j * MX_BLOCK - range.start;
-            for (k, &c) in codes.iter().enumerate() {
+            self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
                 out[base + k] = self.decode(c, s);
-            }
+            });
+            off += pb;
         }
-        out
     }
 
     fn decompress_accumulate(
@@ -270,10 +298,56 @@ impl GradCodec for MxfpCodec {
         bytes: &[u8],
         acc: &mut [f32],
         range: Range<usize>,
-        ctx: &HopCtx,
+        _ctx: &HopCtx,
     ) {
-        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
-            *a += v;
+        let mut off = 0usize;
+        let pb = self.payload_bytes(MX_BLOCK);
+        for j in self.blocks(&range) {
+            let s = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+            off += 2;
+            let base = j * MX_BLOCK - range.start;
+            self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
+                acc[base + k] += self.decode(c, s);
+            });
+            off += pb;
+        }
+    }
+
+    /// Fused hop (block-at-a-time): decode against the payload's scale,
+    /// add the local contribution in a stack slab, re-encode with the
+    /// agreed round scale — no chunk-sized intermediate, no allocation.
+    fn decompress_accumulate_recompress_into(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        debug_assert_eq!(local.len(), range.len());
+        out.reserve(self.blocks(&range).len() * self.block_wire());
+        let pb = self.payload_bytes(MX_BLOCK);
+        let mut slab = [0.0f32; MX_BLOCK];
+        let mut codes = [0u16; MX_BLOCK];
+        let mut off = 0usize;
+        for j in self.blocks(&range) {
+            let s_in = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+            off += 2;
+            let base = j * MX_BLOCK - range.start;
+            slab.copy_from_slice(&local[base..base + MX_BLOCK]);
+            self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
+                slab[k] += self.decode(c, s_in);
+            });
+            off += pb;
+            // re-encode with the agreed round scale (identical to s_in in
+            // practice; kept separate to mirror the unfused path exactly)
+            let s_out = self.scales[j];
+            out.extend_from_slice(&bf16_bits(s_out).to_le_bytes());
+            for (k, &v) in slab.iter().enumerate() {
+                codes[k] = self.encode(v, s_out);
+            }
+            self.pack_codes_into(&codes, out);
         }
     }
 

@@ -122,37 +122,38 @@ impl GradCodec for OmniReduce {
         OR_BLOCK
     }
 
-    fn compress(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx) -> Vec<u8> {
+    fn compress_into(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx, out: &mut Vec<u8>) {
         debug_assert_eq!(data.len(), range.len());
         // only selected blocks travel; BF16 payload per block
-        let mut out = Vec::new();
         for b in self.blocks(&range) {
             if !self.selected[b] {
                 continue;
             }
             let base = b * OR_BLOCK - range.start;
+            out.reserve(OR_BLOCK * 2);
             for &v in &data[base..base + OR_BLOCK] {
                 out.extend_from_slice(&bf16_bits(v).to_le_bytes());
             }
         }
-        out
     }
 
-    fn decompress(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx) -> Vec<f32> {
-        let mut out = vec![0.0f32; range.len()];
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
         let mut off = 0usize;
         for b in self.blocks(&range) {
+            let base = b * OR_BLOCK - range.start;
             if !self.selected[b] {
+                // dropped blocks decode to explicit zeros (the _into
+                // contract fully overwrites dirty buffers)
+                out[base..base + OR_BLOCK].fill(0.0);
                 continue;
             }
-            let base = b * OR_BLOCK - range.start;
-            for k in 0..OR_BLOCK {
-                out[base + k] = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+            for o in out[base..base + OR_BLOCK].iter_mut() {
+                *o = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
                 off += 2;
             }
         }
         debug_assert_eq!(off, bytes.len());
-        out
     }
 
     fn decompress_accumulate(
@@ -160,11 +161,20 @@ impl GradCodec for OmniReduce {
         bytes: &[u8],
         acc: &mut [f32],
         range: Range<usize>,
-        ctx: &HopCtx,
+        _ctx: &HopCtx,
     ) {
-        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
-            *a += v;
+        let mut off = 0usize;
+        for b in self.blocks(&range) {
+            if !self.selected[b] {
+                continue; // unselected blocks carry nothing to add
+            }
+            let base = b * OR_BLOCK - range.start;
+            for a in acc[base..base + OR_BLOCK].iter_mut() {
+                *a += bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+                off += 2;
+            }
         }
+        debug_assert_eq!(off, bytes.len());
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {

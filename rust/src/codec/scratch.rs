@@ -1,0 +1,115 @@
+//! Reusable scratch memory for the allocation-free kernel hot path (§4).
+//!
+//! The fused decompress-accumulate-recompress story of the paper is about
+//! keeping intermediates out of HBM; the CPU analogue is keeping the hop
+//! path off the heap. Two kinds of memory recur every hop:
+//!
+//! - **payload arenas** — the `Vec<u8>` wire buffers a payload is encoded
+//!   into. They travel (engine: moved between stage tables; coordinator:
+//!   sent over channels) and come back after decode, so they live in a
+//!   free list and circulate instead of being reallocated.
+//! - **decode slabs** — per-worker f32 buffers the fused kernels decode
+//!   into ([`WorkerScratch::slab`]) and the multi-parent accumulate path
+//!   sums in ([`WorkerScratch::acc`]). Their capacity sticks at the
+//!   high-water mark, so steady-state rounds never grow them.
+//!
+//! [`ScratchPool`] bundles both (plus the engine's per-(worker, chunk)
+//! inbox spines) so `AllReduceEngine::run_pooled` can reuse everything
+//! across stages *and* rounds: after a warm-up round, the hop path
+//! performs zero heap allocations (asserted by `tests/alloc_regression`).
+
+/// Per-worker reusable f32 buffers for the decode/accumulate kernels.
+/// Buffers only ever grow; `Default` starts empty and warms up on first
+/// use.
+#[derive(Default)]
+pub struct WorkerScratch {
+    /// fused-kernel decode slab (super-group- or chunk-sized, codec's
+    /// choice) — the "registers/VMEM" analogue of §4's kernel 3
+    pub slab: Vec<f32>,
+    /// chunk-sized accumulator for the multi-parent (butterfly internal
+    /// node) decompress-accumulate path
+    pub acc: Vec<f32>,
+}
+
+/// Shared pool of payload arenas + per-worker scratch + engine inbox
+/// spines, reused across stages and rounds. One per engine caller (the
+/// trainer holds one across training rounds); the thread-per-worker
+/// coordinator gives each worker thread its own [`WorkerScratch`] and
+/// buffer free list instead (buffers cross threads there).
+#[derive(Default)]
+pub struct ScratchPool {
+    /// payload arena free list (cleared `Vec<u8>`s with warm capacity)
+    pub bufs: Vec<Vec<u8>>,
+    /// per-worker decode slabs, indexed by worker rank
+    pub workers: Vec<WorkerScratch>,
+    /// engine inbox: slot `worker * n + chunk` holds (payload, summed)
+    /// pairs received and not yet consumed; spines are retained across
+    /// rounds (entries are drained, never dropped)
+    pub inbox: Vec<Vec<(Vec<u8>, u32)>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        ScratchPool::default()
+    }
+
+    /// Size the per-worker scratch and inbox tables for `n` workers.
+    /// Growth-only: shrinking a pool warmed at a larger `n` keeps the
+    /// extra capacity around for reuse.
+    pub fn ensure_workers(&mut self, n: usize) {
+        if self.workers.len() < n {
+            self.workers.resize_with(n, WorkerScratch::default);
+        }
+        if self.inbox.len() < n * n {
+            self.inbox.resize_with(n * n, Vec::new);
+        }
+    }
+
+    /// Pop a cleared payload arena (warm capacity when available).
+    pub fn take_buf(&mut self) -> Vec<u8> {
+        match self.bufs.pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a payload arena to the free list.
+    pub fn put_buf(&mut self, buf: Vec<u8>) {
+        self.bufs.push(buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_retain_capacity_through_the_pool() {
+        let mut pool = ScratchPool::new();
+        let mut b = pool.take_buf();
+        b.extend_from_slice(&[1u8; 4096]);
+        let cap = b.capacity();
+        pool.put_buf(b);
+        let b2 = pool.take_buf();
+        assert!(b2.is_empty());
+        assert!(b2.capacity() >= cap, "pooled buffer lost its capacity");
+    }
+
+    #[test]
+    fn ensure_workers_grows_only() {
+        let mut pool = ScratchPool::new();
+        pool.ensure_workers(4);
+        assert_eq!(pool.workers.len(), 4);
+        assert_eq!(pool.inbox.len(), 16);
+        pool.workers[3].slab.resize(256, 0.0);
+        pool.ensure_workers(2);
+        assert_eq!(pool.workers.len(), 4, "shrinking must not drop warm scratch");
+        pool.ensure_workers(5);
+        assert_eq!(pool.workers.len(), 5);
+        assert_eq!(pool.inbox.len(), 25);
+        assert_eq!(pool.workers[3].slab.len(), 256);
+    }
+}

@@ -12,8 +12,66 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
 use crate::util::rng::{pcg_hash, uniform_u01};
+
+/// Little-endian bit stream writer for the 8/12/16-bit aggregation codes.
+/// Produces exactly the bytes of [`ThcCodec::pack`] (verified in tests)
+/// without the intermediate code vector.
+#[derive(Default)]
+struct BitWriter {
+    acc: u32,
+    nbits: u32,
+}
+
+impl BitWriter {
+    #[inline]
+    fn push(&mut self, code: u32, bits: u32, out: &mut Vec<u8>) {
+        debug_assert!(code < (1u32 << bits));
+        self.acc |= code << self.nbits;
+        self.nbits += bits;
+        while self.nbits >= 8 {
+            out.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn flush(&mut self, out: &mut Vec<u8>) {
+        if self.nbits > 0 {
+            out.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+}
+
+/// Matching little-endian bit stream reader.
+struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    acc: u32,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn read(&mut self, bits: u32) -> u32 {
+        while self.nbits < bits {
+            self.acc |= (self.bytes[self.pos] as u32) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let v = self.acc & ((1u32 << bits) - 1);
+        self.acc >>= bits;
+        self.nbits -= bits;
+        v
+    }
+}
 
 /// Hadamard block size (power of two).
 pub const HADAMARD_BLOCK: usize = 1024;
@@ -120,6 +178,7 @@ impl ThcCodec {
         code as f32 * (2.0 * s / Q_LEVELS as f32) - k as f32 * s
     }
 
+    #[cfg(test)]
     fn pack(&self, codes: &[u32]) -> Vec<u8> {
         match self.agg_bits {
             8 => codes.iter().map(|&c| c as u8).collect(),
@@ -140,6 +199,7 @@ impl ThcCodec {
         }
     }
 
+    #[cfg(test)]
     fn unpack(&self, bytes: &[u8], count: usize) -> Vec<u32> {
         match self.agg_bits {
             8 => bytes[..count].iter().map(|&b| b as u32).collect(),
@@ -224,28 +284,34 @@ impl GradCodec for ThcCodec {
         HADAMARD_BLOCK
     }
 
-    fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8> {
+    fn compress_into(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
         debug_assert_eq!(data.len(), range.len());
         let k = ctx.summed;
-        let mut codes = Vec::with_capacity(range.len());
+        let want = self.payload_bytes(range.len());
+        out.reserve(want);
+        let start = out.len();
+        let mut bw = BitWriter::default();
         for (i, &v) in data.iter().enumerate() {
             let idx = range.start + i;
             let s = self.scales[idx / HADAMARD_BLOCK];
-            codes.push(self.to_lattice(v, s, k, self.u(ctx.worker, idx as u32)));
+            let code = self.to_lattice(v, s, k, self.u(ctx.worker, idx as u32));
+            bw.push(code, self.agg_bits, out);
         }
-        self.pack(&codes)
+        bw.flush(out);
+        // the 12-bit layout pads odd tails to a full 3-byte triple
+        while out.len() - start < want {
+            out.push(0);
+        }
     }
 
-    fn decompress(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx) -> Vec<f32> {
-        let codes = self.unpack(bytes, range.len());
-        codes
-            .iter()
-            .enumerate()
-            .map(|(i, &c)| {
-                let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
-                self.from_lattice(c, s, ctx.summed)
-            })
-            .collect()
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        let mut br = BitReader::new(bytes);
+        for (i, o) in out.iter_mut().enumerate() {
+            let c = br.read(self.agg_bits);
+            let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
+            *o = self.from_lattice(c, s, ctx.summed);
+        }
     }
 
     fn decompress_accumulate(
@@ -255,35 +321,49 @@ impl GradCodec for ThcCodec {
         range: Range<usize>,
         ctx: &HopCtx,
     ) {
-        for (a, v) in acc.iter_mut().zip(self.decompress(bytes, range, ctx)) {
-            *a += v;
+        let mut br = BitReader::new(bytes);
+        for (i, a) in acc.iter_mut().enumerate() {
+            let c = br.read(self.agg_bits);
+            let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
+            *a += self.from_lattice(c, s, ctx.summed);
         }
     }
 
     /// Homomorphic fused hop: integer-add a fresh local 4-bit code to the
     /// incoming code sums — no decode/requantize, THC's one structural
-    /// advantage in multi-hop (paper Table 2's "+2·AR" row).
-    fn decompress_accumulate_recompress(
+    /// advantage in multi-hop (paper Table 2's "+2·AR" row). Streams codes
+    /// in and out; never touches the heap.
+    fn decompress_accumulate_recompress_into(
         &self,
         bytes: &[u8],
         local: &[f32],
         range: Range<usize>,
         ctx: &HopCtx,
-    ) -> Vec<u8> {
+        _scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
         debug_assert_eq!(local.len(), range.len());
-        let mut codes = self.unpack(bytes, range.len());
         let max_code = (1u32 << self.agg_bits) - 1;
-        for (i, c) in codes.iter_mut().enumerate() {
+        let want = self.payload_bytes(range.len());
+        out.reserve(want);
+        let start = out.len();
+        let mut br = BitReader::new(bytes);
+        let mut bw = BitWriter::default();
+        for (i, &p) in local.iter().enumerate() {
+            let c = br.read(self.agg_bits);
             let idx = range.start + i;
             let s = self.scales[idx / HADAMARD_BLOCK];
-            let lc = self.to_lattice(local[i], s, 1, self.u(ctx.worker, idx as u32));
-            let sum = *c + lc;
+            let lc = self.to_lattice(p, s, 1, self.u(ctx.worker, idx as u32));
+            let sum = c + lc;
             if sum > max_code {
                 self.ovf.fetch_add(1, Ordering::Relaxed);
             }
-            *c = sum.min(max_code);
+            bw.push(sum.min(max_code), self.agg_bits, out);
         }
-        self.pack(&codes)
+        bw.flush(out);
+        while out.len() - start < want {
+            out.push(0);
+        }
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {
@@ -317,6 +397,34 @@ mod tests {
         fwht(&mut x);
         for (a, b) in x.iter().zip(&orig) {
             assert!((a / 64.0 - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn streaming_bits_match_pack_layouts() {
+        // the hot path streams bits instead of materializing code vectors;
+        // the byte layout must stay identical to pack()/unpack()
+        let mut rng = Pcg::new(11);
+        for bits in [8u32, 12, 16] {
+            let c = ThcCodec { agg_bits: bits, ..ThcCodec::new(1) };
+            for n in [1usize, 2, 5, 64, 101] {
+                let codes: Vec<u32> =
+                    (0..n).map(|_| rng.next_u32() & ((1u32 << bits) - 1)).collect();
+                let reference = c.pack(&codes);
+                let mut out = Vec::new();
+                let mut bw = BitWriter::default();
+                for &code in &codes {
+                    bw.push(code, bits, &mut out);
+                }
+                bw.flush(&mut out);
+                while out.len() < c.payload_bytes(n) {
+                    out.push(0);
+                }
+                assert_eq!(out, reference, "bits={bits} n={n}");
+                let mut br = BitReader::new(&out);
+                let read: Vec<u32> = (0..n).map(|_| br.read(bits)).collect();
+                assert_eq!(read, codes, "bits={bits} n={n}");
+            }
         }
     }
 

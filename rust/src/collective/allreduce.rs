@@ -2,24 +2,35 @@
 //!
 //! Drives a [`GradCodec`] per worker over a [`Topology`] schedule, charging
 //! every byte to the [`NetworkModel`]. This is the deterministic
-//! simulation path used by all experiments (2–64 workers); the
+//! simulation path used by all experiments (2–128 workers); the
 //! thread-per-worker coordinator (`crate::coordinator`) reuses the same
-//! schedules and codecs over real channels.
+//! schedules, codecs and [`produce_hop`] kernel dispatch over real
+//! channels.
 //!
-//! Fused-kernel dispatch per §4: leaves call `compress`; internal nodes
-//! call `decompress_accumulate` for all but the last incoming partial and
-//! `decompress_accumulate_recompress` for the last; all-gather receivers
-//! call `decompress`. The sink produces the broadcast payload with the
-//! same fused call, so every worker decodes the *identical* byte stream —
-//! workers provably agree on the synced gradient (verified when
-//! `verify_consistency` is set).
+//! Fused-kernel dispatch per §4: leaves call `compress_into`; internal
+//! nodes call `decompress_accumulate` for multi-parent fan-in and
+//! `decompress_accumulate_recompress_into` for the single-parent chain;
+//! all-gather receivers call `decompress_into`. The sink produces the
+//! broadcast payload with the same fused call, so every worker decodes the
+//! *identical* byte stream — workers provably agree on the synced gradient
+//! (verified when `verify_consistency` is set).
+//!
+//! Execution model: invalid worker counts surface as
+//! [`TopologyError`] (`run` returns `Result`); kernel work within a stage
+//! runs on up to [`AllReduceEngine::threads`] scoped threads, partitioned
+//! by producing worker — results are byte-identical for every thread
+//! count because each worker's sends execute in hop order and outputs are
+//! consumed in hop order. With a caller-held [`ScratchPool`]
+//! ([`AllReduceEngine::run_pooled`]), payload arenas and decode slabs are
+//! reused across stages and rounds, so the steady-state hop path performs
+//! zero heap allocations (asserted by `tests/alloc_regression`).
 
-use std::collections::HashMap;
 use std::ops::Range;
 
-use crate::codec::{GradCodec, HopCtx, MetaOp};
+use crate::codec::{GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
 use crate::collective::network::{LinkClass, NetworkModel};
-use crate::collective::topology::Topology;
+use crate::collective::topology::{Hop, Topology, TopologyError};
+use crate::util::par;
 
 #[derive(Clone, Debug, Default)]
 pub struct RoundReport {
@@ -52,6 +63,101 @@ impl RoundReport {
     pub fn total_bytes(&self) -> u64 {
         self.meta_bytes + self.rs_bytes + self.ag_bytes
     }
+
+    /// Merge per-stage kernel counters (order-independent sums, so the
+    /// report is identical for any thread count).
+    pub fn absorb(&mut self, k: &KernelCounters) {
+        self.compress_calls += k.compress_calls;
+        self.dar_calls += k.dar_calls;
+        self.da_calls += k.da_calls;
+        self.entries_processed += k.entries_processed;
+    }
+}
+
+/// Kernel-call tallies produced by [`produce_hop`], merged into the
+/// [`RoundReport`] by the engine (each parallel job counts privately).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelCounters {
+    pub compress_calls: u64,
+    pub dar_calls: u64,
+    pub da_calls: u64,
+    pub entries_processed: u64,
+}
+
+/// Produce one outgoing payload for (worker, chunk): leaf compress or the
+/// fused accumulate/recompress path, per §4's kernel dispatch. Shared by
+/// the engine and the thread-per-worker coordinator so both execution
+/// paths stay bit-identical by construction.
+///
+/// `out` is cleared and filled with the produced payload (warm arenas make
+/// this allocation-free); consumed incoming payload arenas are drained
+/// into `recycle` for reuse. Returns the number of worker gradients
+/// aggregated in `out`.
+#[allow(clippy::too_many_arguments)]
+pub fn produce_hop(
+    codec: &dyn GradCodec,
+    pre: &[f32],
+    received: &mut Vec<(Vec<u8>, u32)>,
+    range: Range<usize>,
+    base_ctx: &HopCtx,
+    scratch: &mut WorkerScratch,
+    out: &mut Vec<u8>,
+    recycle: &mut Vec<Vec<u8>>,
+    counters: &mut KernelCounters,
+) -> u32 {
+    out.clear();
+    let local = &pre[range.clone()];
+    counters.entries_processed += range.len() as u64;
+    if received.is_empty() {
+        counters.compress_calls += 1;
+        let ctx = HopCtx { summed: 1, ..*base_ctx };
+        codec.compress_into(local, range, &ctx, out);
+        return 1;
+    }
+    let mut summed = 1u32;
+    if received.len() == 1 {
+        // single parent: fully fused DAR against the local slice
+        let (payload, k) = &received[0];
+        summed += *k;
+        let in_ctx = HopCtx { summed: *k, ..*base_ctx };
+        counters.dar_calls += 1;
+        codec.decompress_accumulate_recompress_into(payload, local, range, &in_ctx, scratch, out);
+    } else {
+        // multi-parent (butterfly internal nodes): accumulate every
+        // incoming partial into the scratch accumulator, then recompress
+        // the chunk once
+        scratch.acc.clear();
+        scratch.acc.extend_from_slice(local);
+        for (payload, k) in received.iter() {
+            summed += *k;
+            let in_ctx = HopCtx { summed: *k, ..*base_ctx };
+            counters.da_calls += 1;
+            codec.decompress_accumulate(payload, &mut scratch.acc, range.clone(), &in_ctx);
+        }
+        let out_ctx = HopCtx { summed, ..*base_ctx };
+        counters.compress_calls += 1;
+        codec.compress_into(&scratch.acc, range, &out_ctx, out);
+    }
+    for (buf, _) in received.drain(..) {
+        recycle.push(buf);
+    }
+    summed
+}
+
+/// Run a `&mut`-codec round-boundary method (`metadata` / `begin_round` /
+/// `end_round`) once per worker, on up to `threads` scoped threads, and
+/// collect the per-worker vectors in worker order.
+fn par_map_codecs<F>(codecs: &mut [Box<dyn GradCodec>], threads: usize, f: F) -> Vec<Vec<f32>>
+where
+    F: Fn(usize, &mut dyn GradCodec) -> Vec<f32> + Sync,
+{
+    let mut tasks: Vec<(usize, &mut Box<dyn GradCodec>, Vec<f32>)> =
+        codecs.iter_mut().enumerate().map(|(i, c)| (i, c, Vec::new())).collect();
+    par::par_iter_mut(&mut tasks, threads, |_, t| {
+        let (i, c, out) = t;
+        *out = f(*i, c.as_mut());
+    });
+    tasks.into_iter().map(|t| t.2).collect()
 }
 
 pub struct AllReduceEngine {
@@ -61,53 +167,89 @@ pub struct AllReduceEngine {
     pub verify_consistency: bool,
     /// compute the exact sum and record vNMSE (costs an extra O(nd) pass)
     pub measure_vnmse: bool,
+    /// scoped-thread budget for per-stage worker kernel execution (1 =
+    /// fully sequential; results are identical for any value)
+    pub threads: usize,
 }
 
 impl AllReduceEngine {
     pub fn new(topology: Topology, net: NetworkModel) -> Self {
-        AllReduceEngine { topology, net, verify_consistency: false, measure_vnmse: true }
+        AllReduceEngine {
+            topology,
+            net,
+            verify_consistency: false,
+            measure_vnmse: true,
+            threads: par::num_threads(),
+        }
     }
 
     /// Run one synchronization round. `grads[i]` is worker i's local
     /// gradient; returns the aggregated **sum** (identical on every
-    /// worker) plus the report. `t0` is the absolute start time (matters
-    /// under tenant contention).
+    /// worker) plus the report, or the [`TopologyError`] when the worker
+    /// count does not fit the topology. `t0` is the absolute start time
+    /// (matters under tenant contention). Allocates fresh scratch — call
+    /// sites that run many rounds should hold a [`ScratchPool`] and use
+    /// [`AllReduceEngine::run_pooled`].
     pub fn run(
         &self,
         grads: &[Vec<f32>],
         codecs: &mut [Box<dyn GradCodec>],
         round: u32,
         t0: f64,
-    ) -> (Vec<f32>, RoundReport) {
+    ) -> Result<(Vec<f32>, RoundReport), TopologyError> {
+        let mut pool = ScratchPool::new();
+        self.run_pooled(grads, codecs, round, t0, &mut pool)
+    }
+
+    /// [`AllReduceEngine::run`] with caller-held scratch: payload arenas,
+    /// per-worker decode slabs and inbox spines come from (and return to)
+    /// `pool`, so steady-state rounds keep the hop path off the heap.
+    pub fn run_pooled(
+        &self,
+        grads: &[Vec<f32>],
+        codecs: &mut [Box<dyn GradCodec>],
+        round: u32,
+        t0: f64,
+        pool: &mut ScratchPool,
+    ) -> Result<(Vec<f32>, RoundReport), TopologyError> {
         let n = grads.len();
-        if let Err(e) = self.topology.validate(n) {
-            panic!("{e}");
-        }
+        self.topology.validate(n)?;
         assert_eq!(codecs.len(), n);
         let d = grads[0].len();
         assert!(grads.iter().all(|g| g.len() == d));
+        let threads = self.threads.clamp(1, n.max(1));
         let mut report = RoundReport::default();
         let mut now = t0;
 
-        let ctx = |worker: u32, summed: u32| HopCtx {
-            worker,
-            n_workers: n as u32,
-            round,
-            summed,
-        };
+        let mk_ctx =
+            |worker: u32, summed: u32| HopCtx { worker, n_workers: n as u32, round, summed };
 
         // ---- stage 1: lightweight metadata all-reduce (Fig. 2b) ----
         let metas: Vec<Vec<f32>> =
-            codecs.iter_mut().enumerate().map(|(i, c)| c.metadata(&grads[i], &ctx(i as u32, 1))).collect();
+            par_map_codecs(codecs, threads, |i, c| c.metadata(&grads[i], &mk_ctx(i as u32, 1)));
         let mlen = metas[0].len();
         assert!(metas.iter().all(|m| m.len() == mlen), "metadata length disagreement");
         let op = codecs[0].metadata_op();
-        let agg_meta: Vec<f32> = (0..mlen)
-            .map(|k| match op {
-                MetaOp::Sum => metas.iter().map(|m| m[k]).sum(),
-                MetaOp::Max => metas.iter().map(|m| m[k]).fold(f32::MIN, f32::max),
-            })
-            .collect();
+        // row-major accumulate: one pass per worker vector, the MetaOp
+        // branch hoisted out of the element loop (element k still sums in
+        // worker order, so the f32 result is unchanged)
+        let mut agg_meta = metas[0].clone();
+        match op {
+            MetaOp::Sum => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a += v;
+                    }
+                }
+            }
+            MetaOp::Max => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a = a.max(v);
+                    }
+                }
+            }
+        }
         // cost: ring all-reduce of mlen f32 → 2(n−1) stages of mlen/n·4B
         if mlen > 0 {
             let per_stage = (mlen.div_ceil(n) * 4) as u64;
@@ -120,43 +262,40 @@ impl AllReduceEngine {
         }
 
         // ---- stage 2: preprocess (normalize, allocate, reorder) ----
-        let pres: Vec<Vec<f32>> = codecs
-            .iter_mut()
-            .enumerate()
-            .map(|(i, c)| c.begin_round(&grads[i], &agg_meta, &ctx(i as u32, 1)))
-            .collect();
+        let pres: Vec<Vec<f32>> = {
+            let agg = &agg_meta;
+            par_map_codecs(codecs, threads, |i, c| {
+                c.begin_round(&grads[i], agg, &mk_ctx(i as u32, 1))
+            })
+        };
         let padded = pres[0].len();
         assert!(pres.iter().all(|p| p.len() == padded), "padded length disagreement");
         let align = codecs[0].chunk_alignment();
         let ranges = crate::codec::chunk_ranges(padded, n, align);
 
         // ---- stage 3: reduce-scatter over the arborescences ----
-        // incoming[(worker, chunk)] = payloads received so far
-        let mut incoming: HashMap<(u32, u32), Vec<(Vec<u8>, u32)>> = HashMap::new();
+        pool.ensure_workers(n);
+        let codecs_ro: &[Box<dyn GradCodec>] = &*codecs;
         let rs_sched = self.topology.reduce_scatter(n);
+        report.stage_times_s.reserve(rs_sched.len());
+        // hoisted per-stage buffers (reused, so steady-state stages do not
+        // allocate them)
+        let mut produced: Vec<(u32, u32, Vec<u8>, u32)> = Vec::new();
+        let mut stage_msgs: Vec<(u64, LinkClass)> = Vec::new();
         for hops in &rs_sched {
+            self.run_stage(
+                hops, codecs_ro, &pres, &ranges, n, round, threads, pool, &mut report,
+                &mut produced,
+            );
             // each message priced on the link tier its hop crosses
             // (intra-node vs NIC for hierarchical topologies)
-            let mut stage_msgs: Vec<(u64, LinkClass)> = Vec::with_capacity(hops.len());
-            let mut deliveries: Vec<(u32, u32, Vec<u8>, u32)> = Vec::new();
-            for h in hops {
-                let range = ranges[h.chunk as usize].clone();
-                let (payload, summed) = self.produce(
-                    &mut incoming,
-                    codecs,
-                    &pres,
-                    h.from,
-                    h.chunk,
-                    range,
-                    &ctx(h.from, 1),
-                    &mut report,
-                );
+            stage_msgs.clear();
+            for (h, (_, _, payload, _)) in hops.iter().zip(produced.iter()) {
                 stage_msgs.push((payload.len() as u64, self.topology.link_class(h.from, h.to)));
                 report.rs_bytes += payload.len() as u64;
-                deliveries.push((h.to, h.chunk, payload, summed));
             }
-            for (to, chunk, payload, summed) in deliveries {
-                incoming.entry((to, chunk)).or_default().push((payload, summed));
+            for (to, chunk, payload, summed) in produced.drain(..) {
+                pool.inbox[to as usize * n + chunk as usize].push((payload, summed));
             }
             let dt = self.net.stage_time_classed(&stage_msgs, now);
             now += dt;
@@ -166,38 +305,30 @@ impl AllReduceEngine {
 
         // ---- stage 4: sinks finalize their chunk (fused DAR including the
         // local contribution) → the broadcast payloads ----
+        let sink_hops: Vec<Hop> =
+            (0..n as u32).map(|c| Hop { from: c, to: c, chunk: c }).collect();
+        self.run_stage(
+            &sink_hops, codecs_ro, &pres, &ranges, n, round, threads, pool, &mut report,
+            &mut produced,
+        );
         let mut broadcast: Vec<(Vec<u8>, u32)> = Vec::with_capacity(n);
-        for c in 0..n as u32 {
-            let range = ranges[c as usize].clone();
-            let (payload, summed) = self.produce(
-                &mut incoming,
-                codecs,
-                &pres,
-                c, // sink of chunk c is worker c
-                c,
-                range,
-                &ctx(c, 1),
-                &mut report,
-            );
+        for (_, chunk, payload, summed) in produced.drain(..) {
+            debug_assert_eq!(chunk as usize, broadcast.len());
             debug_assert_eq!(summed, n as u32, "sink payload must aggregate all workers");
             broadcast.push((payload, summed));
         }
-        debug_assert!(incoming.values().all(|v| v.is_empty()) || incoming.is_empty());
+        debug_assert!(pool.inbox.iter().all(|v| v.is_empty()));
 
         // ---- stage 5: all-gather (broadcast compressed sums) ----
         let ag_sched = self.topology.all_gather(n);
         for hops in &ag_sched {
-            let msgs: Vec<(u64, LinkClass)> = hops
-                .iter()
-                .map(|h| {
-                    (
-                        broadcast[h.chunk as usize].0.len() as u64,
-                        self.topology.link_class(h.from, h.to),
-                    )
-                })
-                .collect();
-            report.ag_bytes += msgs.iter().map(|&(b, _)| b).sum::<u64>();
-            let dt = self.net.stage_time_classed(&msgs, now);
+            stage_msgs.clear();
+            for h in hops {
+                let bytes = broadcast[h.chunk as usize].0.len() as u64;
+                stage_msgs.push((bytes, self.topology.link_class(h.from, h.to)));
+                report.ag_bytes += bytes;
+            }
+            let dt = self.net.stage_time_classed(&stage_msgs, now);
             now += dt;
             report.ag_time_s += dt;
         }
@@ -211,91 +342,193 @@ impl AllReduceEngine {
             if range.is_empty() {
                 continue;
             }
-            let dec = codecs[0].decompress(payload, range.clone(), &ctx(0, *k));
+            codecs_ro[0].decompress_into(
+                payload,
+                range.clone(),
+                &mk_ctx(0, *k),
+                &mut summed_pre[range.clone()],
+            );
             report.decompress_calls += 1;
-            summed_pre[range.clone()].copy_from_slice(&dec);
             if self.verify_consistency && n > 1 {
-                let dec2 = codecs[1].decompress(payload, range.clone(), &ctx(1, *k));
-                assert_eq!(dec, dec2, "workers decoded different results for chunk {c}");
+                let slab = &mut pool.workers[1].slab;
+                slab.resize(range.len(), 0.0);
+                codecs_ro[1].decompress_into(payload, range.clone(), &mk_ctx(1, *k), slab);
+                assert_eq!(
+                    &summed_pre[range],
+                    &slab[..],
+                    "workers decoded different results for chunk {c}"
+                );
             }
         }
+        for (payload, _) in broadcast {
+            pool.put_buf(payload);
+        }
+
         // end_round mutates per-worker codec state; run it on every codec
         // (workers all hold the same sum) and return worker 0's view.
-        let mut result = Vec::new();
-        for (i, c) in codecs.iter_mut().enumerate() {
-            let out = c.end_round(summed_pre.clone(), &ctx(i as u32, n as u32));
-            if i == 0 {
-                result = out;
-            } else if self.verify_consistency {
-                assert_eq!(result.len(), out.len());
+        let result = {
+            let sp = &summed_pre;
+            let outs = par_map_codecs(codecs, threads, |i, c| {
+                c.end_round(sp.clone(), &mk_ctx(i as u32, n as u32))
+            });
+            let mut outs = outs.into_iter();
+            let result = outs.next().expect("n >= 1 workers");
+            if self.verify_consistency {
+                for out in outs {
+                    assert_eq!(result.len(), out.len());
+                }
             }
-        }
+            result
+        };
 
         report.overflow_events = codecs.iter().map(|c| c.overflow_count()).sum();
 
         if self.measure_vnmse {
+            // row-major: accumulate the exact f64 sum one worker vector at
+            // a time (same per-element worker order as the old
+            // column-major pass, so the value is unchanged)
+            let mut exact = vec![0.0f64; d];
+            for g in grads {
+                for (e, &v) in exact.iter_mut().zip(g) {
+                    *e += v as f64;
+                }
+            }
             let mut num = 0.0f64;
             let mut den = 0.0f64;
-            for e in 0..d {
-                let exact: f64 = grads.iter().map(|g| g[e] as f64).sum();
-                let diff = exact - result[e] as f64;
+            for (e, &r) in exact.iter().zip(result.iter()) {
+                let diff = e - r as f64;
                 num += diff * diff;
-                den += exact * exact;
+                den += e * e;
             }
             report.vnmse = if den > 0.0 { num / den } else { 0.0 };
         }
 
-        (result, report)
+        Ok((result, report))
     }
 
-    /// Produce worker `w`'s outgoing payload for `chunk`: leaf compress or
-    /// the fused accumulate/recompress path, per §4's kernel dispatch.
+    /// Execute every kernel of one schedule stage (reduce-scatter stage or
+    /// the sink-finalize pseudo-stage), filling `produced` with
+    /// `(to, chunk, payload, summed)` in hop order. Sequential when
+    /// `threads <= 1` (the zero-allocation path); otherwise sends are
+    /// grouped by producing worker and run on scoped threads — numerics
+    /// are identical either way.
     #[allow(clippy::too_many_arguments)]
-    fn produce(
+    fn run_stage(
         &self,
-        incoming: &mut HashMap<(u32, u32), Vec<(Vec<u8>, u32)>>,
-        codecs: &mut [Box<dyn GradCodec>],
+        hops: &[Hop],
+        codecs: &[Box<dyn GradCodec>],
         pres: &[Vec<f32>],
-        w: u32,
-        chunk: u32,
-        range: Range<usize>,
-        base_ctx: &HopCtx,
+        ranges: &[Range<usize>],
+        n: usize,
+        round: u32,
+        threads: usize,
+        pool: &mut ScratchPool,
         report: &mut RoundReport,
-    ) -> (Vec<u8>, u32) {
-        let received = incoming.remove(&(w, chunk)).unwrap_or_default();
-        let codec = &codecs[w as usize];
-        let local = &pres[w as usize][range.clone()];
-        report.entries_processed += range.len() as u64;
-        if received.is_empty() {
-            report.compress_calls += 1;
-            let ctx = HopCtx { summed: 1, ..*base_ctx };
-            return (codec.compress(local, range, &ctx), 1);
-        }
-        // all but the last: decompress-accumulate into a local buffer
-        let (head, tail) = received.split_at(received.len() - 1);
-        let mut summed = 1u32;
-        let out = if head.is_empty() {
-            // single parent: fully fused DAR against the local slice
-            let (payload, k) = &tail[0];
-            summed += k;
-            let in_ctx = HopCtx { summed: *k, ..*base_ctx };
-            report.dar_calls += 1;
-            codec.decompress_accumulate_recompress(payload, local, range, &in_ctx)
-        } else {
-            // multi-parent (butterfly internal nodes): accumulate all but
-            // the last, then the last, then recompress the chunk once
-            let mut acc = local.to_vec();
-            for (payload, k) in head.iter().chain(tail) {
-                summed += k;
-                let in_ctx = HopCtx { summed: *k, ..*base_ctx };
-                report.da_calls += 1;
-                codec.decompress_accumulate(payload, &mut acc, range.clone(), &in_ctx);
+        produced: &mut Vec<(u32, u32, Vec<u8>, u32)>,
+    ) {
+        produced.clear();
+        if threads <= 1 || hops.len() <= 1 {
+            let mut counters = KernelCounters::default();
+            for h in hops {
+                let mut out = pool.take_buf();
+                let ctx = HopCtx { worker: h.from, n_workers: n as u32, round, summed: 1 };
+                let idx = h.from as usize * n + h.chunk as usize;
+                let summed = produce_hop(
+                    codecs[h.from as usize].as_ref(),
+                    &pres[h.from as usize],
+                    &mut pool.inbox[idx],
+                    ranges[h.chunk as usize].clone(),
+                    &ctx,
+                    &mut pool.workers[h.from as usize],
+                    &mut out,
+                    &mut pool.bufs,
+                    &mut counters,
+                );
+                produced.push((h.to, h.chunk, out, summed));
             }
-            let out_ctx = HopCtx { summed, ..*base_ctx };
-            report.compress_calls += 1;
-            codec.compress(&acc, range, &out_ctx)
-        };
-        (out, summed)
+            report.absorb(&counters);
+            return;
+        }
+
+        struct SendJob {
+            pos: usize,
+            to: u32,
+            chunk: u32,
+            range: Range<usize>,
+            received: Vec<(Vec<u8>, u32)>,
+            out: Vec<u8>,
+            summed: u32,
+        }
+        struct WorkerJob {
+            w: u32,
+            scratch: WorkerScratch,
+            recycle: Vec<Vec<u8>>,
+            counters: KernelCounters,
+            sends: Vec<SendJob>,
+        }
+        let mut slot: Vec<i32> = vec![-1; n];
+        let mut jobs: Vec<WorkerJob> = Vec::new();
+        for (pos, h) in hops.iter().enumerate() {
+            let ji = if slot[h.from as usize] >= 0 {
+                slot[h.from as usize] as usize
+            } else {
+                slot[h.from as usize] = jobs.len() as i32;
+                jobs.push(WorkerJob {
+                    w: h.from,
+                    scratch: std::mem::take(&mut pool.workers[h.from as usize]),
+                    recycle: Vec::new(),
+                    counters: KernelCounters::default(),
+                    sends: Vec::new(),
+                });
+                jobs.len() - 1
+            };
+            let idx = h.from as usize * n + h.chunk as usize;
+            let received = std::mem::take(&mut pool.inbox[idx]);
+            let out = pool.take_buf();
+            jobs[ji].sends.push(SendJob {
+                pos,
+                to: h.to,
+                chunk: h.chunk,
+                range: ranges[h.chunk as usize].clone(),
+                received,
+                out,
+                summed: 0,
+            });
+        }
+        let n_workers = n as u32;
+        par::par_iter_mut(&mut jobs, threads, |_, job| {
+            let codec = codecs[job.w as usize].as_ref();
+            let pre = &pres[job.w as usize];
+            let ctx = HopCtx { worker: job.w, n_workers, round, summed: 1 };
+            for s in job.sends.iter_mut() {
+                s.summed = produce_hop(
+                    codec,
+                    pre,
+                    &mut s.received,
+                    s.range.clone(),
+                    &ctx,
+                    &mut job.scratch,
+                    &mut s.out,
+                    &mut job.recycle,
+                    &mut job.counters,
+                );
+            }
+        });
+        // restore pool state + emit results in hop order
+        produced.resize_with(hops.len(), || (0, 0, Vec::new(), 0));
+        for mut job in jobs {
+            report.absorb(&job.counters);
+            let w = job.w as usize;
+            pool.workers[w] = job.scratch;
+            pool.bufs.append(&mut job.recycle);
+            for s in job.sends {
+                // hand the (drained) inbox spine back to its slot so the
+                // next stage's delivery push reuses its capacity
+                debug_assert!(s.received.is_empty());
+                pool.inbox[w * n + s.chunk as usize] = s.received;
+                produced[s.pos] = (s.to, s.chunk, s.out, s.summed);
+            }
+        }
     }
 }
 
@@ -352,7 +585,7 @@ mod tests {
         let mut codecs = mk_codecs(name, n);
         let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
         eng.verify_consistency = true;
-        let (out, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+        let (out, rep) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
         (out, g, rep)
     }
 
@@ -381,6 +614,17 @@ mod tests {
             assert!(rep.vnmse < 0.05, "{:?} n={n} vNMSE {}", topo, rep.vnmse);
             assert!(rep.compress_calls > 0 && rep.dar_calls > 0);
         }
+    }
+
+    #[test]
+    fn invalid_topology_is_an_error_not_a_panic() {
+        let g = grads(6, 1024, 1);
+        let mut codecs = mk_codecs("bf16", 6);
+        let eng = AllReduceEngine::new(Topology::Butterfly, NetworkModel::isolated_100g());
+        let err = eng.run(&g, &mut codecs, 0, 0.0).unwrap_err();
+        assert_eq!(err, TopologyError::NotPowerOfTwo { n: 6 });
+        // and the error formats with the CLI-facing message
+        assert!(err.to_string().contains("power-of-two"));
     }
 
     #[test]
@@ -417,7 +661,7 @@ mod tests {
         let run_with = |net: NetworkModel| {
             let mut codecs = mk_codecs("bf16", n);
             let eng = AllReduceEngine::new(topo, net);
-            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
             rep
         };
         let iso = run_with(NetworkModel::isolated_100g());
@@ -442,7 +686,7 @@ mod tests {
         for topo in [Topology::Ring, Topology::Butterfly] {
             let mut codecs = mk_codecs("dynamiq", n);
             let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
-            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
             err.push(rep.vnmse);
         }
         assert!(
@@ -512,16 +756,53 @@ mod tests {
     }
 
     #[test]
+    fn pooled_and_parallel_runs_are_bit_identical() {
+        use crate::collective::topology::Level;
+        // the tentpole invariant: scratch reuse and the scoped-thread stage
+        // execution must not perturb a single byte
+        for (scheme, topo, n) in [
+            ("dynamiq", Topology::Ring, 4),
+            ("dynamiq", Topology::Butterfly, 8),
+            ("thc", Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+            ("mxfp4", Topology::Ring, 5),
+        ] {
+            let g = grads(n, 6144, 77);
+            let run_with = |threads: usize, pool: &mut ScratchPool, rounds: u32| {
+                let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+                eng.threads = threads;
+                let mut codecs = mk_codecs(scheme, n);
+                let mut last = None;
+                for r in 0..rounds {
+                    last = Some(eng.run_pooled(&g, &mut codecs, r, 0.0, pool).unwrap());
+                }
+                last.unwrap()
+            };
+            let (seq, seq_rep) = run_with(1, &mut ScratchPool::new(), 3);
+            for threads in [2usize, 8] {
+                let mut pool = ScratchPool::new();
+                let (par_out, par_rep) = run_with(threads, &mut pool, 3);
+                assert_eq!(seq, par_out, "{scheme}/{} threads={threads}", topo.name());
+                assert_eq!(seq_rep.rs_bytes, par_rep.rs_bytes);
+                assert_eq!(seq_rep.compress_calls, par_rep.compress_calls);
+                assert_eq!(seq_rep.dar_calls, par_rep.dar_calls);
+                assert_eq!(seq_rep.da_calls, par_rep.da_calls);
+                assert_eq!(seq_rep.entries_processed, par_rep.entries_processed);
+            }
+        }
+    }
+
+    #[test]
     fn vnmse_improves_with_rounds_of_averaging_not_required_but_bounded() {
         // consecutive rounds keep working (stateful codecs: µ, fast-u, k_t)
         let n = 4;
         let d = 8192;
         let mut codecs = mk_codecs("mxfp4", n);
         let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+        let mut pool = ScratchPool::new();
         let mut last = f64::INFINITY;
         for round in 0..5 {
             let g = grads(n, d, 100 + round as u64);
-            let (_, rep) = eng.run(&g, &mut codecs, round, 0.0);
+            let (_, rep) = eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool).unwrap();
             last = rep.vnmse;
             assert!(rep.vnmse.is_finite());
         }

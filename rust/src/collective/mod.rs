@@ -18,6 +18,6 @@ pub mod hierarchy;
 pub mod network;
 pub mod topology;
 
-pub use allreduce::{AllReduceEngine, RoundReport};
+pub use allreduce::{produce_hop, AllReduceEngine, KernelCounters, RoundReport};
 pub use network::{LinkClass, LinkSpec, NetworkModel};
 pub use topology::{HierarchySpec, Level, Topology, TopologyError};

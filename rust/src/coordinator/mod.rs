@@ -6,18 +6,24 @@
 //! runs it: each worker is an OS thread owning its codec, exchanging
 //! framed byte payloads over `std::sync::mpsc` links wired according to
 //! the same [`Topology`] schedules. Numerics are bit-identical to the
-//! engine (asserted in tests) because codecs and schedules are shared —
-//! this is the deployment-shaped path (the paper's NCCL-P2P communication
-//! hook), while the engine is the experimentation path.
+//! engine (asserted in tests) because codecs, schedules and the
+//! [`produce_hop`] kernel dispatch are shared — this is the
+//! deployment-shaped path (the paper's NCCL-P2P communication hook),
+//! while the engine is the experimentation path.
+//!
+//! Each worker thread owns a [`WorkerScratch`] plus a payload-arena free
+//! list for the round: arenas received over a channel are recycled into
+//! the local pool after decode, so a worker's steady-state hop path stays
+//! allocation-free just like the engine's.
 
 use std::collections::HashMap;
-use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread;
 
 use anyhow::{anyhow, Result};
 
-use crate::codec::{chunk_ranges, GradCodec, HopCtx, MetaOp};
+use crate::codec::{chunk_ranges, GradCodec, HopCtx, MetaOp, WorkerScratch};
+use crate::collective::allreduce::{produce_hop, KernelCounters};
 use crate::collective::topology::{Hop, Topology};
 
 /// A framed message on a worker-to-worker link.
@@ -69,6 +75,9 @@ pub struct WorkerRound {
     pub aggregated: Vec<f32>,
     pub rs_bytes_sent: u64,
     pub ag_bytes_sent: u64,
+    /// this worker's kernel-call tallies (summed across workers they must
+    /// match the engine's RoundReport — asserted in tests)
+    pub counters: KernelCounters,
 }
 
 /// Run one all-reduce round with real threads. `grads[i]` is worker i's
@@ -159,6 +168,11 @@ fn run_worker(
     let ranges = chunk_ranges(pre.len(), n, codec.chunk_alignment());
 
     // ---- reduce-scatter ----
+    // Per-thread scratch for the round: decode slabs + a payload-arena
+    // free list fed by arenas that arrive over the channels.
+    let mut scratch = WorkerScratch::default();
+    let mut arenas: Vec<Vec<u8>> = Vec::new();
+    let mut counters = KernelCounters::default();
     let mut incoming: HashMap<u32, Vec<(Vec<u8>, u32)>> = HashMap::new();
     let mut rs_bytes = 0u64;
     for (stage, hops) in rs_sched.iter().enumerate() {
@@ -166,8 +180,19 @@ fn run_worker(
         let my_recvs = hops.iter().filter(|h| h.to == w).count();
         for h in my_sends {
             let range = ranges[h.chunk as usize].clone();
-            let (payload, summed) =
-                produce(codec, &pre, incoming.remove(&h.chunk), range, &ctx(1))?;
+            let mut received = incoming.remove(&h.chunk).unwrap_or_default();
+            let mut payload = arenas.pop().unwrap_or_default();
+            let summed = produce_hop(
+                codec,
+                &pre,
+                &mut received,
+                range,
+                &ctx(1),
+                &mut scratch,
+                &mut payload,
+                &mut arenas,
+                &mut counters,
+            );
             rs_bytes += payload.len() as u64;
             tx[&h.to]
                 .send(Msg::Chunk(0, stage as u32, h.chunk, payload, summed))
@@ -183,8 +208,19 @@ fn run_worker(
     let mut broadcast: HashMap<u32, (Vec<u8>, u32)> = HashMap::new();
     {
         let range = ranges[w as usize].clone();
-        let (payload, summed) =
-            produce(codec, &pre, incoming.remove(&w), range, &ctx(1))?;
+        let mut received = incoming.remove(&w).unwrap_or_default();
+        let mut payload = arenas.pop().unwrap_or_default();
+        let summed = produce_hop(
+            codec,
+            &pre,
+            &mut received,
+            range,
+            &ctx(1),
+            &mut scratch,
+            &mut payload,
+            &mut arenas,
+            &mut counters,
+        );
         debug_assert_eq!(summed, n as u32);
         broadcast.insert(w, (payload, summed));
     }
@@ -217,11 +253,16 @@ fn run_worker(
         if range.is_empty() {
             continue;
         }
-        let dec = codec.decompress(payload, range.clone(), &ctx(*k));
-        summed_pre[range].copy_from_slice(&dec);
+        codec.decompress_into(payload, range.clone(), &ctx(*k), &mut summed_pre[range]);
     }
     let aggregated = codec.end_round(summed_pre, &ctx(n as u32));
-    Ok(WorkerRound { worker: w, aggregated, rs_bytes_sent: rs_bytes, ag_bytes_sent: ag_bytes })
+    Ok(WorkerRound {
+        worker: w,
+        aggregated,
+        rs_bytes_sent: rs_bytes,
+        ag_bytes_sent: ag_bytes,
+        counters,
+    })
 }
 
 fn recv_from(rx: &Receiver<(u32, Msg)>) -> Result<(u32, Msg)> {
@@ -272,38 +313,6 @@ fn recv_chunk(
     }
 }
 
-/// Same fused-kernel dispatch as the engine's `produce` (kernels 1/3/4).
-fn produce(
-    codec: &dyn GradCodec,
-    pre: &[f32],
-    received: Option<Vec<(Vec<u8>, u32)>>,
-    range: Range<usize>,
-    base_ctx: &HopCtx,
-) -> Result<(Vec<u8>, u32)> {
-    let received = received.unwrap_or_default();
-    let local = &pre[range.clone()];
-    if received.is_empty() {
-        return Ok((codec.compress(local, range, base_ctx), 1));
-    }
-    let (head, tail) = received.split_at(received.len() - 1);
-    let mut summed = 1u32;
-    if head.is_empty() {
-        let (payload, k) = &tail[0];
-        summed += k;
-        let in_ctx = HopCtx { summed: *k, ..*base_ctx };
-        Ok((codec.decompress_accumulate_recompress(payload, local, range, &in_ctx), summed))
-    } else {
-        let mut acc = local.to_vec();
-        for (payload, k) in head.iter().chain(tail) {
-            summed += k;
-            let in_ctx = HopCtx { summed: *k, ..*base_ctx };
-            codec.decompress_accumulate(payload, &mut acc, range.clone(), &in_ctx);
-        }
-        let out_ctx = HopCtx { summed, ..*base_ctx };
-        Ok((codec.compress(&acc, range, &out_ctx), summed))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,7 +343,7 @@ mod tests {
             // engine (sequential simulation)
             let mut eng_codecs = make_codecs(scheme, n);
             let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
-            let (expect, _) = eng.run(&g, &mut eng_codecs, 5, 0.0);
+            let (expect, rep) = eng.run(&g, &mut eng_codecs, 5, 0.0).unwrap();
             // threaded (real channels)
             let out = threaded_allreduce(topo, g, make_codecs(scheme, n), 5).unwrap();
             for wr in &out {
@@ -344,6 +353,17 @@ mod tests {
                     wr.worker
                 );
             }
+            // both paths dispatch through produce_hop: the kernel-call
+            // profile must agree exactly
+            let total = |f: fn(&KernelCounters) -> u64| out.iter().map(|w| f(&w.counters)).sum::<u64>();
+            assert_eq!(total(|c| c.compress_calls), rep.compress_calls, "{scheme}/{topo:?}");
+            assert_eq!(total(|c| c.dar_calls), rep.dar_calls, "{scheme}/{topo:?}");
+            assert_eq!(total(|c| c.da_calls), rep.da_calls, "{scheme}/{topo:?}");
+            assert_eq!(
+                total(|c| c.entries_processed),
+                rep.entries_processed,
+                "{scheme}/{topo:?}"
+            );
         }
     }
 
@@ -361,7 +381,7 @@ mod tests {
             let g = grads(n, 4096, 23);
             let mut eng_codecs = make_codecs(scheme, n);
             let eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(48.0));
-            let (expect, _) = eng.run(&g, &mut eng_codecs, 2, 0.0);
+            let (expect, _) = eng.run(&g, &mut eng_codecs, 2, 0.0).unwrap();
             let out = threaded_allreduce(topo, g, make_codecs(scheme, n), 2).unwrap();
             for wr in &out {
                 assert_eq!(

@@ -1,6 +1,7 @@
-//! Hierarchical-topology sweep: aggregation depth × intra/inter bandwidth
-//! ratio × codec, over a 32-worker cluster of 2-level hierarchies (plus
-//! the flat baselines).
+//! Hierarchical-topology sweep: aggregation depth × worker count ×
+//! intra/inter bandwidth ratio × codec, over 2-level hierarchies (plus the
+//! flat baselines) at n = 32 and the 128-worker regime (16 × 8) the
+//! ROADMAP calls out.
 //!
 //! The axis the paper cannot reach with flat schedules: partial sums grow
 //! along the aggregation path, so a topology's *depth* (requantization
@@ -8,16 +9,24 @@
 //! scale tracking vs MXFP's per-block exponents vs THC's fixed table —
 //! while the intra/inter bandwidth ratio decides how much of the round the
 //! NIC tier exposes. Reports wire bytes, simulated comm time, overflow
-//! events and vNMSE per (topology, ratio, codec) cell; runs on synthetic
-//! region-structured gradients, so it needs no model artifacts.
+//! events and vNMSE per (topology, n, ratio, codec) cell; runs on
+//! synthetic region-structured gradients, so it needs no model artifacts.
+//!
+//! Parallelism: grid cells are self-contained (own codecs, own engine,
+//! own scratch pool), so `repro --id hier --jobs N` computes the cells
+//! of each (topology, n) case on N scoped threads (the case's gradient
+//! set is shared read-only and dropped before the next case — one ~8–32
+//! MB set alive at a time) and renders in grid order — byte-identical
+//! output for any N.
 
 use anyhow::Result;
 
 use super::Ctx;
-use crate::codec::make_codecs;
-use crate::collective::{AllReduceEngine, Level, NetworkModel, Topology};
+use crate::codec::{make_codecs, ScratchPool};
+use crate::collective::{AllReduceEngine, Level, NetworkModel, RoundReport, Topology};
 use crate::util::benchkit::Table;
 use crate::util::json::Json;
+use crate::util::par;
 use crate::util::rng::Pcg;
 
 /// Region-structured heavy-tailed gradients (the shape §2.2 leans on).
@@ -38,66 +47,103 @@ fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
-/// The swept topologies: flat baselines plus 2-level compositions chosen
-/// for their depth spread (5 … 31 requantizations at n = 32).
-fn swept_topologies() -> Vec<Topology> {
+/// The swept (topology, workers) cases: flat baselines plus 2-level
+/// compositions chosen for their depth spread (5 … 31 requantizations at
+/// n = 32), then the 128-worker hierarchies (16 nodes × 8 workers and
+/// 8 × 16) that chart vNMSE growth vs depth in the regime flat ring
+/// schedules cannot reach.
+fn swept_cases() -> Vec<(Topology, usize)> {
     vec![
-        Topology::Ring,
-        Topology::Butterfly,
-        Topology::hierarchical(Level::Butterfly, Level::Butterfly, 4),
-        Topology::hierarchical(Level::Ring, Level::Butterfly, 4),
-        Topology::hierarchical(Level::Ring, Level::Butterfly, 8),
-        Topology::hierarchical(Level::Ring, Level::Ring, 8),
-        Topology::hierarchical(Level::Butterfly, Level::Ring, 2),
+        (Topology::Ring, 32),
+        (Topology::Butterfly, 32),
+        (Topology::hierarchical(Level::Butterfly, Level::Butterfly, 4), 32),
+        (Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 32),
+        (Topology::hierarchical(Level::Ring, Level::Butterfly, 8), 32),
+        (Topology::hierarchical(Level::Ring, Level::Ring, 8), 32),
+        (Topology::hierarchical(Level::Butterfly, Level::Ring, 2), 32),
+        (Topology::Butterfly, 128),
+        (Topology::hierarchical(Level::Ring, Level::Butterfly, 8), 128),
+        (Topology::hierarchical(Level::Butterfly, Level::Butterfly, 8), 128),
+        (Topology::hierarchical(Level::Ring, Level::Ring, 16), 128),
     ]
 }
 
+/// One grid point of a case: fixed inputs plus the computed report.
+struct Cell {
+    ratio: f64,
+    scheme: &'static str,
+    report: Option<RoundReport>,
+}
+
 pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
-    let n = 32;
     let d = 1 << 16;
     let rounds = ((3.0 * ctx.scale).ceil() as u32).clamp(1, 10);
     let ratios = [1.0, 8.0, 48.0];
     let schemes = ["BF16", "DynamiQ", "MXFP8", "MXFP4", "THC"];
 
+    let cases = swept_cases();
+    for &(topo, n) in &cases {
+        topo.validate(n)?;
+    }
+
+    // under --jobs the engine itself runs single-threaded so parallelism
+    // lives at the cell level; --jobs 1 keeps it inside the engine
+    let engine_threads = if ctx.jobs > 1 { 1 } else { par::num_threads() };
     let mut table = Table::new(&[
-        "topology", "depth", "intra:inter", "scheme", "wire MB", "comm ms", "ovf", "vNMSE",
+        "topology", "n", "depth", "intra:inter", "scheme", "wire MB", "comm ms", "ovf", "vNMSE",
     ]);
     let mut json = Vec::new();
-    for topo in swept_topologies() {
-        topo.validate(n)?;
+    for &(topo, n) in &cases {
         let depth = topo.max_depth(n);
+        // one gradient set alive at a time (the n = 128 sets are ~32 MB);
+        // shared read-only across this case's cells
         let g = grads(n, d, 0xD1A_0 + depth as u64);
-        for ratio in ratios {
-            for scheme in schemes {
-                let mut codecs = make_codecs(scheme, n);
-                let eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(ratio));
-                let mut last = None;
-                for round in 0..rounds {
-                    let (_, rep) = eng.run(&g, &mut codecs, round, 0.0);
-                    last = Some(rep);
+        let mut cells: Vec<Cell> = ratios
+            .iter()
+            .flat_map(|&ratio| {
+                schemes.iter().map(move |&scheme| Cell { ratio, scheme, report: None })
+            })
+            .collect();
+        par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
+            let mut codecs = make_codecs(cell.scheme, n);
+            let mut eng =
+                AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(cell.ratio));
+            eng.threads = engine_threads;
+            let mut pool = ScratchPool::new();
+            let mut last = None;
+            for round in 0..rounds {
+                match eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool) {
+                    Ok((_, rep)) => last = Some(rep),
+                    Err(e) => unreachable!("validated up front: {e}"),
                 }
-                let rep = last.expect("at least one round");
-                table.row(vec![
-                    topo.name(),
-                    depth.to_string(),
-                    format!("{ratio:.0}:1"),
-                    scheme.into(),
-                    format!("{:.2}", rep.total_bytes() as f64 / 1e6),
-                    format!("{:.3}", rep.comm_time_s() * 1e3),
-                    rep.overflow_events.to_string(),
-                    format!("{:.2e}", rep.vnmse),
-                ]);
-                json.push(Json::obj(vec![
-                    ("topology", Json::Str(topo.name())),
-                    ("depth", Json::Num(depth as f64)),
-                    ("bw_ratio", Json::Num(ratio)),
-                    ("scheme", Json::Str(scheme.into())),
-                    ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
-                    ("comm_time_s", Json::Num(rep.comm_time_s())),
-                    ("overflow_events", Json::Num(rep.overflow_events as f64)),
-                    ("vnmse", Json::Num(rep.vnmse)),
-                ]));
             }
+            cell.report = last;
+        });
+        // render this case's cells in grid order (identical for any --jobs)
+        for cell in &cells {
+            let rep = cell.report.as_ref().expect("at least one round per cell");
+            table.row(vec![
+                topo.name(),
+                n.to_string(),
+                depth.to_string(),
+                format!("{:.0}:1", cell.ratio),
+                cell.scheme.into(),
+                format!("{:.2}", rep.total_bytes() as f64 / 1e6),
+                format!("{:.3}", rep.comm_time_s() * 1e3),
+                rep.overflow_events.to_string(),
+                format!("{:.2e}", rep.vnmse),
+            ]);
+            json.push(Json::obj(vec![
+                ("topology", Json::Str(topo.name())),
+                ("n", Json::Num(n as f64)),
+                ("depth", Json::Num(depth as f64)),
+                ("bw_ratio", Json::Num(cell.ratio)),
+                ("scheme", Json::Str(cell.scheme.into())),
+                ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+                ("comm_time_s", Json::Num(rep.comm_time_s())),
+                ("overflow_events", Json::Num(rep.overflow_events as f64)),
+                ("vnmse", Json::Num(rep.vnmse)),
+            ]));
         }
     }
     let body = table.render();

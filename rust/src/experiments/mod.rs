@@ -31,12 +31,22 @@ pub struct Ctx {
     /// scale factor for round counts (1.0 = full paper-shaped runs;
     /// CI uses 0.2 for speed)
     pub scale: f64,
+    /// concurrent sweep grid points (`repro --jobs N`); grid cells are
+    /// self-contained, so results are identical for any value
+    pub jobs: usize,
 }
 
 impl Ctx {
     pub fn new(artifacts: &str, results: &str, scale: f64) -> Self {
         std::fs::create_dir_all(results).ok();
-        Ctx { artifacts: artifacts.into(), results: results.into(), scale }
+        Ctx { artifacts: artifacts.into(), results: results.into(), scale, jobs: 1 }
+    }
+
+    /// `Ctx::new` with a sweep-parallelism budget (`--jobs N`).
+    pub fn with_jobs(artifacts: &str, results: &str, scale: f64, jobs: usize) -> Self {
+        let mut ctx = Ctx::new(artifacts, results, scale);
+        ctx.jobs = jobs.max(1);
+        ctx
     }
 
     pub fn rounds(&self, full: u32) -> u32 {

@@ -75,7 +75,7 @@ pub fn tab6_components(ctx: &Ctx) -> Result<()> {
                     .map(|_| Box::new(Dynamiq::new(variant(name))) as Box<dyn GradCodec>)
                     .collect();
                 let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
-                let (_, rep) = eng.run(&grads, &mut codecs, r, 0.0);
+                let (_, rep) = eng.run(&grads, &mut codecs, r, 0.0)?;
                 total += rep.vnmse;
             }
             col.push(total / rounds as f64);

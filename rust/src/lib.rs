@@ -14,6 +14,16 @@
 //!   (interpret mode), byte-compatible with the rust codec via the shared
 //!   counter PRNG ([`util::rng`]).
 //!
+//! ## Execution model
+//!
+//! The codec kernel interface is caller-buffer (`compress_into` /
+//! `decompress_into` / `decompress_accumulate_recompress_into` with
+//! [`codec::ScratchPool`]-pooled arenas), so the engine's steady-state
+//! hop path performs zero heap allocations; per-stage worker kernels run
+//! on scoped threads ([`collective::AllReduceEngine::threads`]) and
+//! `repro --jobs N` computes sweep grid points concurrently — all
+//! byte-identical to the sequential paths by construction.
+//!
 //! ## Hierarchical topologies
 //!
 //! [`collective::Topology::Hierarchical`] composes per-level flat

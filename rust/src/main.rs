@@ -4,6 +4,9 @@
 //!   info                      — platform + artifact inventory
 //!   train [flags]             — run distributed training
 //!   repro --id <id> | --all   — regenerate a paper table/figure
+//!     --jobs N                  compute sweep grid points on N threads
+//!                               (results identical to --jobs 1)
+//!     --scale S                 scale experiment round counts by S
 //!
 //! Train flags: --preset tiny|small|base  --scheme NAME  --workers N
 //!   --topology ring|butterfly|hier  --rounds N  --shared-network
@@ -150,7 +153,14 @@ fn train(args: &[String]) -> anyhow::Result<()> {
 fn repro(args: &[String]) -> anyhow::Result<()> {
     let scale: f64 =
         flag_value(args, "--scale").and_then(|v| v.parse().ok()).unwrap_or(1.0);
-    let ctx = Ctx::new("artifacts", "results", scale);
+    let jobs: usize = match flag_value(args, "--jobs") {
+        None => 1,
+        Some(v) => match v.parse() {
+            Ok(j) if j >= 1 => j,
+            _ => anyhow::bail!("--jobs must be a positive integer, got {v}"),
+        },
+    };
+    let ctx = Ctx::with_jobs("artifacts", "results", scale, jobs);
     if has_flag(args, "--all") {
         run_all(&ctx)
     } else if let Some(id) = flag_value(args, "--id") {

@@ -13,7 +13,7 @@
 //! quantization and the scale quantization use independent randomness:
 //! E[x̂' · ŝf_G] = E[x̂'] · E[ŝf_G] = (x/sf_G) · sf_G = x.
 
-use crate::quant::minifloat::bf16_round;
+use crate::quant::minifloat::{bf16_bits, bf16_round};
 use crate::util::rng::uniform_u01;
 
 /// Quantized scales for one super-group.
@@ -37,11 +37,13 @@ impl ScaleCodes {
     }
 }
 
-/// Encode the scales of one super-group. `group_maxima[g] = max|G_g|`,
-/// `sf_super` should be `max(group_maxima)` (the caller computed it while
-/// scanning). `seed`/`ctr0` drive the stochastic scale rounding — a stream
-/// independent from entry rounding (domain-separated by the caller).
-pub fn encode_scales(group_maxima: &[f32], seed: u32, ctr0: u32) -> ScaleCodes {
+/// Encode the scales of one super-group straight onto the wire: appends
+/// `[bf16(sf_super) (2 B, LE)][UINT8 code per group]` to `out` and returns
+/// the (bumped) sf_super. `group_maxima[g] = max|G_g|`; `seed`/`ctr0`
+/// drive the stochastic scale rounding — a stream independent from entry
+/// rounding (domain-separated by the caller). Allocation-free: this is the
+/// fused-kernel hot path's scale emitter.
+pub fn encode_scales_into(group_maxima: &[f32], seed: u32, ctr0: u32, out: &mut Vec<u8>) -> f32 {
     let raw_max = group_maxima.iter().cloned().fold(0.0f32, f32::max);
     // BF16 rounds to nearest, which may land *below* the true max; bump to
     // the next representable so codes never need to exceed 255.
@@ -49,11 +51,14 @@ pub fn encode_scales(group_maxima: &[f32], seed: u32, ctr0: u32) -> ScaleCodes {
     if sf_super < raw_max {
         sf_super = f32::from_bits(((sf_super.to_bits() >> 16) + 1) << 16);
     }
-    let mut codes = Vec::with_capacity(group_maxima.len());
     if sf_super <= 0.0 {
-        codes.resize(group_maxima.len(), 0);
-        return ScaleCodes { sf_super: 0.0, codes };
+        out.extend_from_slice(&bf16_bits(0.0).to_le_bytes());
+        for _ in group_maxima {
+            out.push(0);
+        }
+        return 0.0;
     }
+    out.extend_from_slice(&bf16_bits(sf_super).to_le_bytes());
     let inv = 255.0 / sf_super;
     for (g, &m) in group_maxima.iter().enumerate() {
         let exact = m * inv; // ∈ [0, 255]
@@ -61,9 +66,18 @@ pub fn encode_scales(group_maxima: &[f32], seed: u32, ctr0: u32) -> ScaleCodes {
         let frac = exact - lo;
         let u = uniform_u01(seed, ctr0.wrapping_add(g as u32));
         let code = if u < frac { lo + 1.0 } else { lo };
-        codes.push(code.min(255.0) as u8);
+        out.push(code.min(255.0) as u8);
     }
-    ScaleCodes { sf_super, codes }
+    sf_super
+}
+
+/// Encode the scales of one super-group into an owned [`ScaleCodes`]
+/// (diagnostics and the python↔rust fixture tests; the codec hot path
+/// uses [`encode_scales_into`]).
+pub fn encode_scales(group_maxima: &[f32], seed: u32, ctr0: u32) -> ScaleCodes {
+    let mut wire = Vec::with_capacity(2 + group_maxima.len());
+    let sf_super = encode_scales_into(group_maxima, seed, ctr0, &mut wire);
+    ScaleCodes { sf_super, codes: wire[2..].to_vec() }
 }
 
 #[cfg(test)]

@@ -7,62 +7,116 @@
 //! Packing is little-endian within each byte (code k of a byte occupies
 //! bits [k·b, (k+1)·b)), matching the pallas kernel's layout so buffers are
 //! byte-identical across layers.
+//!
+//! Perf: the sub-byte widths pack/unpack a whole 64-bit lane at a time
+//! (64/b codes per `u64`, serialized little-endian — bit p of the stream
+//! lands in byte p/8 either way, so the layout is unchanged from the
+//! byte-at-a-time implementation; asserted by the roundtrip/layout tests
+//! below). The `_into` variants append into caller-provided buffers so the
+//! engine's hot path stays allocation-free; `pack`/`unpack` are thin
+//! Vec-returning wrappers.
 
-/// Pack `codes` (each < 2^bits) at `bits` ∈ {1,2,4,8,16} into bytes.
-pub fn pack(codes: &[u16], bits: u32) -> Vec<u8> {
+/// Pack `codes` (each < 2^bits) at `bits` ∈ {1,2,4,8,16} into `out`
+/// (appended; the caller clears/reuses the buffer).
+pub fn pack_into(codes: &[u16], bits: u32, out: &mut Vec<u8>) {
     assert!(matches!(bits, 1 | 2 | 4 | 8 | 16), "bits must be a power of two ≤ 16");
     match bits {
         16 => {
-            let mut out = Vec::with_capacity(codes.len() * 2);
+            out.reserve(codes.len() * 2);
             for &c in codes {
                 out.extend_from_slice(&c.to_le_bytes());
             }
-            out
         }
-        8 => codes.iter().map(|&c| {
-            debug_assert!(c < 256);
-            c as u8
-        }).collect(),
-        _ => {
-            let per_byte = (8 / bits) as usize;
-            let mask = (1u16 << bits) - 1;
-            let mut out = vec![0u8; codes.len().div_ceil(per_byte)];
-            for (i, &c) in codes.iter().enumerate() {
-                debug_assert!(c <= mask, "code {c} exceeds {bits}-bit range");
-                let byte = i / per_byte;
-                let shift = (i % per_byte) as u32 * bits;
-                out[byte] |= ((c & mask) as u8) << shift;
+        8 => {
+            out.reserve(codes.len());
+            for &c in codes {
+                debug_assert!(c < 256);
+                out.push(c as u8);
             }
-            out
+        }
+        _ => {
+            let per_word = (64 / bits) as usize;
+            let mask = (1u64 << bits) - 1;
+            out.reserve(packed_len(codes.len(), bits));
+            let mut chunks = codes.chunks_exact(per_word);
+            for chunk in &mut chunks {
+                let mut w = 0u64;
+                for (k, &c) in chunk.iter().enumerate() {
+                    debug_assert!(c as u64 <= mask, "code {c} exceeds {bits}-bit range");
+                    w |= (c as u64 & mask) << (k as u32 * bits);
+                }
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            let rem = chunks.remainder();
+            if !rem.is_empty() {
+                let mut w = 0u64;
+                for (k, &c) in rem.iter().enumerate() {
+                    debug_assert!(c as u64 <= mask, "code {c} exceeds {bits}-bit range");
+                    w |= (c as u64 & mask) << (k as u32 * bits);
+                }
+                let nbytes = packed_len(rem.len(), bits);
+                out.extend_from_slice(&w.to_le_bytes()[..nbytes]);
+            }
         }
     }
 }
 
-/// Unpack `count` codes of `bits` each from `bytes`.
-pub fn unpack(bytes: &[u8], bits: u32, count: usize) -> Vec<u16> {
+/// Pack `codes` at `bits` ∈ {1,2,4,8,16} into a fresh vector.
+pub fn pack(codes: &[u16], bits: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(packed_len(codes.len(), bits));
+    pack_into(codes, bits, &mut out);
+    out
+}
+
+/// Unpack `count` codes of `bits` each from `bytes`, appending into `out`
+/// (cleared first so warm buffers can be reused).
+pub fn unpack_into(bytes: &[u8], bits: u32, count: usize, out: &mut Vec<u16>) {
     assert!(matches!(bits, 1 | 2 | 4 | 8 | 16));
+    out.clear();
+    out.reserve(count);
     match bits {
         16 => {
             assert!(bytes.len() >= count * 2);
-            (0..count).map(|i| u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]])).collect()
+            for i in 0..count {
+                out.push(u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]));
+            }
         }
         8 => {
             assert!(bytes.len() >= count);
-            bytes[..count].iter().map(|&b| b as u16).collect()
+            for &b in &bytes[..count] {
+                out.push(b as u16);
+            }
         }
         _ => {
-            let per_byte = (8 / bits) as usize;
-            assert!(bytes.len() >= count.div_ceil(per_byte));
-            let mask = (1u16 << bits) - 1;
-            (0..count)
-                .map(|i| {
-                    let byte = bytes[i / per_byte] as u16;
-                    let shift = (i % per_byte) as u32 * bits;
-                    (byte >> shift) & mask
-                })
-                .collect()
+            assert!(bytes.len() >= packed_len(count, bits));
+            let per_word = (64 / bits) as usize;
+            let mask = (1u64 << bits) - 1;
+            let full = count / per_word;
+            for wi in 0..full {
+                let w = u64::from_le_bytes(bytes[wi * 8..wi * 8 + 8].try_into().unwrap());
+                for k in 0..per_word {
+                    out.push(((w >> (k as u32 * bits)) & mask) as u16);
+                }
+            }
+            let rem = count - full * per_word;
+            if rem > 0 {
+                let mut lane = [0u8; 8];
+                let nbytes = packed_len(rem, bits);
+                lane[..nbytes].copy_from_slice(&bytes[full * 8..full * 8 + nbytes]);
+                let w = u64::from_le_bytes(lane);
+                for k in 0..rem {
+                    out.push(((w >> (k as u32 * bits)) & mask) as u16);
+                }
+            }
         }
     }
+}
+
+/// Unpack `count` codes of `bits` each from `bytes` into a fresh vector.
+pub fn unpack(bytes: &[u8], bits: u32, count: usize) -> Vec<u16> {
+    let mut out = Vec::with_capacity(count);
+    unpack_into(bytes, bits, count, &mut out);
+    out
 }
 
 /// Bytes needed for `count` codes of `bits` each.
@@ -91,6 +145,24 @@ mod tests {
     use super::*;
     use crate::util::proptest::Prop;
 
+    /// The original byte-at-a-time packer — the layout reference the
+    /// u64-lane implementation must match bit for bit.
+    fn pack_reference(codes: &[u16], bits: u32) -> Vec<u8> {
+        match bits {
+            16 => codes.iter().flat_map(|c| c.to_le_bytes()).collect(),
+            8 => codes.iter().map(|&c| c as u8).collect(),
+            _ => {
+                let per_byte = (8 / bits) as usize;
+                let mask = (1u16 << bits) - 1;
+                let mut out = vec![0u8; codes.len().div_ceil(per_byte)];
+                for (i, &c) in codes.iter().enumerate() {
+                    out[i / per_byte] |= ((c & mask) as u8) << ((i % per_byte) as u32 * bits);
+                }
+                out
+            }
+        }
+    }
+
     #[test]
     fn roundtrip_all_widths() {
         Prop::new(64).check(
@@ -107,6 +179,9 @@ mod tests {
                 if packed.len() != packed_len(codes.len(), *bits) {
                     return Err("packed_len mismatch".into());
                 }
+                if packed != pack_reference(codes, *bits) {
+                    return Err(format!("u64-lane layout diverges at bits={bits}"));
+                }
                 let un = unpack(&packed, *bits, codes.len());
                 if &un != codes {
                     return Err(format!("roundtrip failed at bits={bits}"));
@@ -117,6 +192,18 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_append_and_reuse() {
+        let codes: Vec<u16> = (0..37).map(|i| (i % 4) as u16).collect();
+        let mut out = Vec::new();
+        out.push(0xEE); // pre-existing content must survive (append contract)
+        pack_into(&codes, 2, &mut out);
+        assert_eq!(&out[1..], pack(&codes, 2).as_slice());
+        let mut decoded = vec![0xFFFFu16; 3]; // dirty warm buffer
+        unpack_into(&out[1..], 2, codes.len(), &mut decoded);
+        assert_eq!(decoded, codes);
+    }
+
+    #[test]
     fn layout_is_little_endian_within_byte() {
         // codes [1, 2, 3, 0] at 2 bits → byte 0b00_11_10_01 = 0x39
         assert_eq!(pack(&[1, 2, 3, 0], 2), vec![0x39]);
@@ -124,6 +211,19 @@ mod tests {
         assert_eq!(pack(&[0xA, 0x5], 4), vec![0x5A]);
         // 1-bit: [1,0,0,0,0,0,0,1] → 0x81
         assert_eq!(pack(&[1, 0, 0, 0, 0, 0, 0, 1], 1), vec![0x81]);
+    }
+
+    #[test]
+    fn multi_word_streams_cross_lane_boundaries_cleanly() {
+        // 40 4-bit codes = 2.5 u64 lanes; byte i must hold codes 2i, 2i+1
+        let codes: Vec<u16> = (0..40).map(|i| (i % 16) as u16).collect();
+        let p = pack(&codes, 4);
+        assert_eq!(p.len(), 20);
+        for (i, &b) in p.iter().enumerate() {
+            assert_eq!(b & 0xf, codes[2 * i] as u8, "byte {i} low nibble");
+            assert_eq!(b >> 4, codes[2 * i + 1] as u8, "byte {i} high nibble");
+        }
+        assert_eq!(unpack(&p, 4, 40), codes);
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //! O(n/S) per entry. (Verified empirically in tests below and in the Tab 6
 //! ablation.)
 
-use crate::util::rng::{pcg_hash, shared_permutation, uniform_u01};
+use crate::util::rng::{pcg_hash, shared_permutation_slot, uniform_u01};
 
 /// How rounding uniforms are drawn.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,12 +81,15 @@ impl RoundingCtx {
         if self.n_workers == 1 {
             return 0;
         }
-        let perm = shared_permutation(
+        // slot form: same value as indexing the materialized permutation,
+        // but allocation-free (this sits on the per-super-group compress
+        // hot path)
+        shared_permutation_slot(
             self.shared_seed ^ sg.wrapping_mul(0xC2B2_AE35),
             self.round,
             self.n_workers as usize,
-        );
-        perm[self.worker as usize]
+            self.worker as usize,
+        )
     }
 
     /// The rounding uniform for entry counter `ctr` within super-group `sg`

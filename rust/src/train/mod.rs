@@ -11,7 +11,7 @@ pub mod data;
 
 use anyhow::{anyhow, Result};
 
-use crate::codec::{make_codecs, GradCodec};
+use crate::codec::{make_codecs, GradCodec, ScratchPool};
 use crate::collective::{AllReduceEngine, LinkSpec, NetworkModel, RoundReport, Topology};
 use crate::metrics::{ComputeModel, RoundTime, TtaCurve};
 use crate::runtime::exec::{lit_f32, lit_i32, scalar_f32, to_f32};
@@ -92,6 +92,9 @@ pub struct Trainer {
     eval_sampler: BatchSampler,
     engine: AllReduceEngine,
     codecs: Vec<Box<dyn GradCodec>>,
+    /// payload arenas + decode slabs reused across training rounds (the
+    /// steady-state hop path allocates nothing)
+    pool: ScratchPool,
     compute: ComputeModel,
     pub records: Vec<RoundRecord>,
     pub tta: TtaCurve,
@@ -164,6 +167,7 @@ impl Trainer {
             eval_sampler,
             engine,
             codecs,
+            pool: ScratchPool::new(),
             compute,
             records: Vec::new(),
             tta: TtaCurve::default(),
@@ -243,8 +247,13 @@ impl Trainer {
             loss_sum += loss;
             grads.push(grad);
         }
-        let (sum, report): (Vec<f32>, RoundReport) =
-            self.engine.run(&grads, &mut self.codecs, round, self.sim_time_s);
+        let (sum, report): (Vec<f32>, RoundReport) = self.engine.run_pooled(
+            &grads,
+            &mut self.codecs,
+            round,
+            self.sim_time_s,
+            &mut self.pool,
+        )?;
         let inv_n = 1.0 / n as f32;
         let avg: Vec<f32> = sum.iter().map(|&x| x * inv_n).collect();
 

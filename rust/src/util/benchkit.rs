@@ -5,8 +5,72 @@
 //! ~200ms per sample, collect N samples, report median / p10 / p90 and
 //! derived throughput. Deterministic workloads + median make the numbers
 //! stable enough for the before/after logs in EXPERIMENTS.md §Perf.
+//!
+//! Also here: [`CountingAlloc`], a global-allocator shim that tallies
+//! every allocation (the allocation-regression test proves the engine's
+//! steady-state hop path allocates zero bytes), and [`BenchLog`], which
+//! serializes bench results to machine-readable JSON
+//! (`BENCH_codec.json`) so the perf trajectory is chartable.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Allocations observed by [`CountingAlloc`] since process start.
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// A counting wrapper over the system allocator. Install in a test binary
+/// with
+///
+/// ```ignore
+/// #[global_allocator]
+/// static GLOBAL: CountingAlloc = CountingAlloc;
+/// ```
+///
+/// then bracket the region under test with [`alloc_snapshot`] /
+/// [`alloc_delta`]. Counts allocation *requests* (alloc / alloc_zeroed /
+/// realloc) and their byte sizes; deallocation is free and uncounted.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// `(allocation_count, allocated_bytes)` so far. Meaningful only in a
+/// binary whose global allocator is [`CountingAlloc`]; otherwise both
+/// counters stay zero.
+pub fn alloc_snapshot() -> (u64, u64) {
+    (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+/// Allocations since `snap` (counts, bytes).
+pub fn alloc_delta(snap: (u64, u64)) -> (u64, u64) {
+    let now = alloc_snapshot();
+    (now.0 - snap.0, now.1 - snap.1)
+}
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -22,6 +86,11 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn throughput_gbps(&self) -> Option<f64> {
         self.bytes_per_iter.map(|b| b as f64 / self.median_ns)
+    }
+
+    /// Entries processed per second, given entries per iteration.
+    pub fn entries_per_s(&self, entries_per_iter: u64) -> f64 {
+        entries_per_iter as f64 * 1e9 / self.median_ns
     }
 
     pub fn report(&self) -> String {
@@ -81,6 +150,44 @@ impl Bench {
         };
         println!("{}", r.report());
         r
+    }
+}
+
+/// Collects bench results into machine-readable JSON (one entry per
+/// (scheme, kernel) with ns/iter percentiles and entries/s) — the
+/// `BENCH_codec.json` emitter the perf trajectory charts from.
+#[derive(Default)]
+pub struct BenchLog {
+    entries: Vec<Json>,
+}
+
+impl BenchLog {
+    pub fn new() -> Self {
+        BenchLog::default()
+    }
+
+    /// Record one result under (scheme, kernel), with throughput derived
+    /// from `entries_per_iter`.
+    pub fn push(&mut self, scheme: &str, kernel: &str, entries_per_iter: u64, r: &BenchResult) {
+        self.entries.push(Json::obj(vec![
+            ("scheme", Json::Str(scheme.into())),
+            ("kernel", Json::Str(kernel.into())),
+            ("median_ns_per_iter", Json::Num(r.median_ns)),
+            ("p10_ns_per_iter", Json::Num(r.p10_ns)),
+            ("p90_ns_per_iter", Json::Num(r.p90_ns)),
+            ("entries_per_iter", Json::Num(entries_per_iter as f64)),
+            ("entries_per_s", Json::Num(r.entries_per_s(entries_per_iter))),
+        ]));
+    }
+
+    /// The log as a JSON array value (for embedding or testing).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.entries.clone())
+    }
+
+    /// Write the log to `path` as a JSON array.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump())
     }
 }
 
@@ -151,6 +258,37 @@ mod tests {
         assert!(r.median_ns > 0.0);
         assert!(r.p10_ns <= r.p90_ns);
         assert!(r.throughput_gbps().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bench_log_serializes_round_trippable_json() {
+        let r = BenchResult {
+            name: "DynamiQ/fused-dar".into(),
+            median_ns: 2_000_000.0,
+            p10_ns: 1_900_000.0,
+            p90_ns: 2_100_000.0,
+            bytes_per_iter: Some(4 << 20),
+        };
+        let mut log = BenchLog::new();
+        log.push("DynamiQ", "fused-dar", 1 << 20, &r);
+        let parsed = Json::parse(&log.to_json().dump()).unwrap();
+        let e = &parsed.as_arr().unwrap()[0];
+        assert_eq!(e.get("scheme").unwrap().as_str().unwrap(), "DynamiQ");
+        assert_eq!(e.get("kernel").unwrap().as_str().unwrap(), "fused-dar");
+        let eps = e.get("entries_per_s").unwrap().as_f64().unwrap();
+        // 1M entries in 2ms → 524.288M entries/s
+        assert!((eps - (1 << 20) as f64 * 1e9 / 2_000_000.0).abs() < 1.0, "{eps}");
+    }
+
+    #[test]
+    fn alloc_counters_are_monotonic() {
+        // (the counting allocator is only installed in the dedicated
+        // regression test binary; here the counters just hold still)
+        let a = alloc_snapshot();
+        let (dc, db) = alloc_delta(a);
+        let b = alloc_snapshot();
+        assert!(b.0 >= a.0 && b.1 >= a.1);
+        let _ = (dc, db);
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Infrastructure utilities: deterministic PRNG shared with the python
 //! layer, a minimal JSON codec (no serde offline), a mini property-test
-//! framework (no proptest offline), and a bench harness (no criterion
-//! offline). See DESIGN.md "Substitutions".
+//! framework (no proptest offline), a bench harness with an
+//! allocation-counting global allocator (no criterion offline), and
+//! scoped-thread data parallelism (no rayon offline). See DESIGN.md
+//! "Substitutions".
 
 pub mod benchkit;
 pub mod json;
+pub mod par;
 pub mod proptest;
 pub mod rng;
 

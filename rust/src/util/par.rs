@@ -1,0 +1,99 @@
+//! Minimal scoped-thread data parallelism (the offline image vendors no
+//! rayon). One primitive: run a closure over every element of a mutable
+//! slice, partitioned contiguously across up to `threads` scoped threads.
+//!
+//! Determinism by construction: each element is visited exactly once and
+//! written only through its own `&mut`, and callers consume results in
+//! slice order afterwards — so outputs are identical for any thread
+//! count, which is what lets the engine parallelize per-worker kernel
+//! execution without perturbing a single byte of the simulation
+//! (asserted by `tests/into_bit_identity`).
+
+/// Available hardware parallelism (1 when undetectable).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f(index, &mut item)` to every item. With `threads <= 1` (or a
+/// single item) this is a plain loop — no threads are spawned, no
+/// allocation happens; the engine's allocation-free sequential hot path
+/// relies on that.
+///
+/// Work is assigned round-robin (`index % threads`), not in contiguous
+/// chunks: expensive items tend to cluster (e.g. a sweep's 128-worker
+/// cells sit at the end of the grid), and striding spreads such runs
+/// across the pool instead of serializing them on the last thread.
+pub fn par_iter_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let threads = threads.clamp(1, items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<(usize, &mut T)>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, item) in items.iter_mut().enumerate() {
+        buckets[i % threads].push((i, item));
+    }
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            let f = &f;
+            s.spawn(move || {
+                for (i, item) in bucket {
+                    f(i, item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visits_every_item_exactly_once_with_correct_index() {
+        for threads in [1usize, 2, 3, 7, 64] {
+            let mut xs: Vec<u64> = vec![0; 23];
+            par_iter_mut(&mut xs, threads, |i, x| *x += 1 + i as u64);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(x, 1 + i as u64, "threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn result_is_thread_count_invariant() {
+        let work = |i: usize, x: &mut f64| {
+            *x = (i as f64 + 1.0).sqrt() * 3.25;
+        };
+        let mut seq: Vec<f64> = vec![0.0; 100];
+        par_iter_mut(&mut seq, 1, work);
+        for threads in [2usize, 5, 16] {
+            let mut par: Vec<f64> = vec![0.0; 100];
+            par_iter_mut(&mut par, threads, work);
+            assert_eq!(seq, par);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut none: Vec<u8> = vec![];
+        par_iter_mut(&mut none, 4, |_, _| unreachable!());
+        let mut one = vec![5u8];
+        par_iter_mut(&mut one, 4, |i, x| {
+            assert_eq!(i, 0);
+            *x = 9;
+        });
+        assert_eq!(one, vec![9]);
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -109,6 +109,29 @@ pub fn shared_permutation(seed: u32, round: u32, n: usize) -> Vec<u32> {
     perm
 }
 
+/// `shared_permutation(seed, round, n)[pos]` without materializing the
+/// permutation: apply the Fisher–Yates transpositions in reverse order to
+/// the *index* (the array starts as identity, so tracing position `pos`
+/// back through the swaps yields its final value). Exactly the value the
+/// vector form produces (asserted in tests), O(n) time, zero allocation —
+/// this is what keeps the correlated-rounding compression hot path off
+/// the heap (one π lookup per super-group per hop).
+pub fn shared_permutation_slot(seed: u32, round: u32, n: usize, pos: usize) -> u32 {
+    debug_assert!(pos < n.max(1));
+    let key = seed ^ round.wrapping_mul(0x85eb_ca6b) ^ 0x5bd1_e995;
+    let mut q = pos;
+    // swaps were applied i = n−1 … 1; invert by replaying i = 1 … n−1
+    for i in 1..n {
+        let j = (pcg_hash(key, i as u32) as u64 * (i as u64 + 1) >> 32) as usize;
+        if q == i {
+            q = j;
+        } else if q == j {
+            q = i;
+        }
+    }
+    q as u32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +216,22 @@ mod tests {
             assert_eq!(p, shared_permutation(5, 12, n));
         }
         assert_ne!(shared_permutation(5, 1, 64), shared_permutation(5, 2, 64));
+    }
+
+    #[test]
+    fn slot_form_matches_vector_form_exactly() {
+        for n in [1usize, 2, 3, 5, 8, 64, 257] {
+            for (seed, round) in [(5u32, 12u32), (0, 0), (0xD14A_311, 999)] {
+                let p = shared_permutation(seed, round, n);
+                for pos in 0..n {
+                    assert_eq!(
+                        shared_permutation_slot(seed, round, n, pos),
+                        p[pos],
+                        "n={n} pos={pos} seed={seed} round={round}"
+                    );
+                }
+            }
+        }
     }
 
     /// Golden values — the python mirror (`python/tests/test_prng.py`)

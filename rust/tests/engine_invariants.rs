@@ -48,7 +48,7 @@ fn engine_invariants_hold_for_random_configs() {
             let mut codecs = make_codecs(scheme, n);
             let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
             eng.verify_consistency = true; // worker-agreement invariant
-            let (out, rep) = eng.run(&g, &mut codecs, round, 0.0);
+            let (out, rep) = eng.run(&g, &mut codecs, round, 0.0).map_err(|e| e.to_string())?;
             if out.len() != d {
                 return Err(format!("length {} != {d}", out.len()));
             }
@@ -102,7 +102,7 @@ fn threaded_coordinator_matches_engine_for_random_configs() {
             let g = grads(n, d, seed);
             let mut eng_codecs = make_codecs(scheme, n);
             let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
-            let (expect, _) = eng.run(&g, &mut eng_codecs, 3, 0.0);
+            let (expect, _) = eng.run(&g, &mut eng_codecs, 3, 0.0).map_err(|e| e.to_string())?;
             let out = threaded_allreduce(Topology::Ring, g, make_codecs(scheme, n), 3)
                 .map_err(|e| e.to_string())?;
             for wr in &out {
@@ -127,7 +127,7 @@ fn repeated_rounds_keep_stateful_codecs_consistent() {
         eng.verify_consistency = true;
         for round in 0..12 {
             let g = grads(n, d, 40 + round as u64);
-            let (out, rep) = eng.run(&g, &mut codecs, round, 0.0);
+            let (out, rep) = eng.run(&g, &mut codecs, round, 0.0).unwrap();
             assert!(out.iter().all(|v| v.is_finite()), "{scheme} round {round}");
             assert!(rep.vnmse.is_finite());
         }

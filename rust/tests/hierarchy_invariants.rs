@@ -193,7 +193,7 @@ fn engine_and_coordinator_bit_identical_on_hierarchies() {
             let mut eng_codecs = make_codecs(scheme, n);
             let mut eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(48.0));
             eng.verify_consistency = true;
-            let (expect, rep) = eng.run(&g, &mut eng_codecs, 1, 0.0);
+            let (expect, rep) = eng.run(&g, &mut eng_codecs, 1, 0.0).map_err(|e| e.to_string())?;
             if !rep.vnmse.is_finite() {
                 return Err(format!("{scheme}: non-finite vNMSE"));
             }
@@ -231,7 +231,7 @@ fn hierarchy_moves_fewer_nic_bytes_than_flat() {
     let time_of = |topo: Topology| {
         let mut codecs = make_codecs("BF16", n);
         let eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(48.0));
-        let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0);
+        let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
         rep.comm_time_s()
     };
     let flat = time_of(Topology::Ring);

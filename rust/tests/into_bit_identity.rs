@@ -1,0 +1,187 @@
+//! The `_into` redesign must be invisible on the wire: for every codec,
+//! the caller-buffer kernels produce byte-identical payloads and
+//! bit-identical decodes vs the legacy `Vec`-returning wrappers — even
+//! when the caller hands them dirty, previously-used buffers — and the
+//! pooled / multi-threaded engine paths reproduce the single-threaded
+//! engine exactly.
+
+use dynamiq::codec::{make_codec, GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
+use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, Topology};
+use dynamiq::util::rng::Pcg;
+
+const SCHEMES: &[&str] =
+    &["BF16", "DynamiQ", "DynamiQ:b=4", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
+
+fn grad(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    let mut region = 1.0f32;
+    (0..d)
+        .map(|i| {
+            if i % 128 == 0 {
+                region = (rng.next_normal() * 1.4).exp();
+            }
+            rng.next_normal() * 0.01 * region
+        })
+        .collect()
+}
+
+/// Two workers through metadata + begin_round, ready for chunk kernels.
+#[allow(clippy::type_complexity)]
+fn setup(
+    scheme: &str,
+    d: usize,
+    round: u32,
+) -> (Box<dyn GradCodec>, Box<dyn GradCodec>, Vec<f32>, Vec<f32>, HopCtx, HopCtx) {
+    let ga = grad(d, 101);
+    let gb = grad(d, 202);
+    let mut ca = make_codec(scheme);
+    let mut cb = make_codec(scheme);
+    let ctx_a = HopCtx { worker: 0, n_workers: 2, round, summed: 1 };
+    let ctx_b = HopCtx { worker: 1, n_workers: 2, round, summed: 1 };
+    let ma = ca.metadata(&ga, &ctx_a);
+    let mb = cb.metadata(&gb, &ctx_b);
+    let agg: Vec<f32> = match ca.metadata_op() {
+        MetaOp::Sum => ma.iter().zip(&mb).map(|(a, b)| a + b).collect(),
+        MetaOp::Max => ma.iter().zip(&mb).map(|(a, b)| a.max(*b)).collect(),
+    };
+    let pa = ca.begin_round(&ga, &agg, &ctx_a);
+    let pb = cb.begin_round(&gb, &agg, &ctx_b);
+    (ca, cb, pa, pb, ctx_a, ctx_b)
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn into_paths_match_legacy_vec_paths_with_dirty_buffers() {
+    let d = 8192; // multiple of every chunk alignment (1024 for THC)
+    for scheme in SCHEMES {
+        let (ca, cb, pa, pb, ctx_a, ctx_b) = setup(scheme, d, 3);
+        // full chunk and an offset sub-chunk (range arithmetic differs)
+        let align = ca.chunk_alignment();
+        let ranges = dynamiq::codec::chunk_ranges(pa.len(), 2, align);
+        for r in [0..pa.len(), ranges[1].clone()] {
+            if r.is_empty() {
+                continue;
+            }
+            // -- compress: legacy vs _into appending to a dirty warm buffer
+            let wire = ca.compress(&pa[r.clone()], r.clone(), &ctx_a);
+            let mut out = vec![0xABu8; 1777]; // dirty + warm capacity
+            out.clear();
+            ca.compress_into(&pa[r.clone()], r.clone(), &ctx_a, &mut out);
+            assert_eq!(out, wire, "{scheme}: compress_into diverges ({r:?})");
+
+            // -- decompress: legacy vs _into overwriting a poisoned buffer
+            let dec = cb.decompress(&wire, r.clone(), &ctx_b);
+            let mut dirty = vec![f32::NAN; r.len()];
+            cb.decompress_into(&wire, r.clone(), &ctx_b, &mut dirty);
+            assert_bits_eq(&dec, &dirty, &format!("{scheme}: decompress_into ({r:?})"));
+
+            // -- fused DAR: legacy wrapper vs _into with poisoned scratch
+            let fused = cb.decompress_accumulate_recompress(&wire, &pb[r.clone()], r.clone(), &ctx_b);
+            let mut scratch = WorkerScratch::default();
+            scratch.slab = vec![123.456f32; 77];
+            scratch.acc = vec![-9.0f32; 33];
+            let mut out2 = vec![0xCDu8; 4096];
+            out2.clear();
+            cb.decompress_accumulate_recompress_into(
+                &wire,
+                &pb[r.clone()],
+                r.clone(),
+                &ctx_b,
+                &mut scratch,
+                &mut out2,
+            );
+            assert_eq!(out2, fused, "{scheme}: fused _into diverges ({r:?})");
+
+            // -- and the fused payload equals the unfused 3-pass sequence
+            // (except THC, whose fused hop is homomorphic code addition —
+            // structurally different from decode → add → requantize)
+            if *scheme != "THC" {
+                let mut acc = cb.decompress(&wire, r.clone(), &ctx_b);
+                for (a, &p) in acc.iter_mut().zip(&pb[r.clone()]) {
+                    *a += p;
+                }
+                let next = HopCtx { summed: ctx_b.summed + 1, ..ctx_b };
+                let unfused = cb.compress(&acc, r.clone(), &next);
+                assert_eq!(
+                    fused, unfused,
+                    "{scheme}: fused and unfused paths must agree bit-exactly ({r:?})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_buffer_reuse_across_rounds_is_clean() {
+    // the same scratch/out buffers carried across rounds (the engine's
+    // steady state) must not leak state between payloads
+    let d = 4096;
+    for scheme in SCHEMES {
+        let mut scratch = WorkerScratch::default();
+        let mut out = Vec::new();
+        for round in 0..3u32 {
+            let (ca, cb, pa, pb, ctx_a, ctx_b) = setup(scheme, d, round);
+            let r = 0..pa.len();
+            let wire = ca.compress(&pa[r.clone()], r.clone(), &ctx_a);
+            let fresh = cb.decompress_accumulate_recompress(&wire, &pb[r.clone()], r.clone(), &ctx_b);
+            out.clear();
+            cb.decompress_accumulate_recompress_into(
+                &wire,
+                &pb[r.clone()],
+                r.clone(),
+                &ctx_b,
+                &mut scratch,
+                &mut out,
+            );
+            assert_eq!(out, fresh, "{scheme}: round {round} warm-buffer reuse diverges");
+        }
+    }
+}
+
+#[test]
+fn pooled_parallel_engine_matches_fresh_sequential_engine() {
+    for (scheme, topo, n) in [
+        ("DynamiQ", Topology::Ring, 4),
+        ("OmniReduce", Topology::Butterfly, 8),
+        ("MXFP8", Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+    ] {
+        let g: Vec<Vec<f32>> = (0..n).map(|i| grad(6000, 7 + i as u64)).collect();
+        let run_with = |threads: usize, pooled: bool| {
+            let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+            eng.threads = threads;
+            let mut codecs: Vec<Box<dyn GradCodec>> =
+                (0..n).map(|_| make_codec(scheme)).collect();
+            let mut pool = ScratchPool::new();
+            let mut last = None;
+            for round in 0..3 {
+                let res = if pooled {
+                    eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool)
+                } else {
+                    eng.run(&g, &mut codecs, round, 0.0)
+                };
+                last = Some(res.unwrap());
+            }
+            last.unwrap()
+        };
+        let (base_out, base_rep) = run_with(1, false);
+        for (threads, pooled) in [(1, true), (4, true), (3, false)] {
+            let (out, rep) = run_with(threads, pooled);
+            assert_eq!(
+                out, base_out,
+                "{scheme}/{}: threads={threads} pooled={pooled} diverged",
+                topo.name()
+            );
+            assert_eq!(rep.rs_bytes, base_rep.rs_bytes);
+            assert_eq!(rep.ag_bytes, base_rep.ag_bytes);
+            assert_eq!(rep.compress_calls, base_rep.compress_calls);
+            assert_eq!(rep.dar_calls, base_rep.dar_calls);
+            assert_eq!(rep.da_calls, base_rep.da_calls);
+        }
+    }
+}
