@@ -24,7 +24,7 @@ fn main() {
 
     // 2. single-worker roundtrip through the DynamiQ codec
     let mut codec = dynamiq::codec::dynamiq::Dynamiq::paper_default();
-    let hop = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+    let hop = HopCtx::flat(0, 1, 0, 1);
     let meta = codec.metadata(&grad, &hop);
     let pre = codec.begin_round(&grad, &meta, &hop);
     let wire = codec.compress(&pre, 0..pre.len(), &hop);

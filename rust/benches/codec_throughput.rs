@@ -34,7 +34,7 @@ fn main() {
     let d = if quick { 1 << 16 } else { 1 << 20 };
     let bytes = (d * 4) as u64;
     let bench = if quick { Bench::quick() } else { Bench::default() };
-    let hop = HopCtx { worker: 0, n_workers: 4, round: 0, summed: 1 };
+    let hop = HopCtx::flat(0, 4, 0, 1);
     println!("== codec throughput (d = {d}, {} MB f32) ==", bytes / 1_000_000);
 
     let mut log = BenchLog::new();

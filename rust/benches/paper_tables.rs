@@ -74,7 +74,7 @@ fn main() {
     // --- metadata stage cost (bytes) ---
     println!("== metadata volume ==");
     let mut c = make_codec("DynamiQ");
-    let hop = HopCtx { worker: 0, n_workers: 4, round: 0, summed: 1 };
+    let hop = HopCtx::flat(0, 4, 0, 1);
     let meta = c.metadata(&g[0], &hop);
     println!(
         "metadata: {} floats = {} bytes = {:.3}% of the BF16 gradient",

@@ -1,0 +1,178 @@
+//! `benchgate` — the CI perf-regression comparator over the
+//! `codec_throughput` bench's machine-readable output.
+//!
+//!     benchgate <BENCH_baseline.json> <BENCH_codec.json> [--tolerance F]
+//!     benchgate --update <BENCH_baseline.json> <BENCH_codec.json>
+//!
+//! Compares entries/s per (scheme, kernel) against the committed
+//! baseline and prints a per-scheme delta table into the job log. The
+//! job fails (exit 1) if any *fused-kernel* lane (compress / decompress /
+//! fused-dar — everything except the `unfused-dar` ablation) falls more
+//! than `--tolerance` (default 0.35, i.e. 35%) below baseline; gains and
+//! small losses are noise-tolerated. Entries missing from the baseline
+//! are reported as `new` and pass, so an empty (bootstrap) baseline
+//! gates nothing until a maintainer promotes real numbers with
+//! `--update` (which rewrites the baseline from the current run).
+//!
+//! Baselines are arrays in the exact `BENCH_codec.json` format, or an
+//! object `{"note": ..., "entries": [...]}` (what `--update` writes).
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use dynamiq::util::json::Json;
+
+/// Kernels gated against the baseline (the §4 fused lanes); the
+/// `unfused-dar` ablation lane is informational only.
+const GATED: &[&str] = &["compress", "decompress", "fused-dar"];
+
+fn entries_of(doc: &Json) -> Vec<Json> {
+    match doc {
+        Json::Arr(a) => a.clone(),
+        obj => obj.get("entries").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default(),
+    }
+}
+
+fn load(path: &str) -> Result<Vec<Json>, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: bad JSON: {e}"))?;
+    Ok(entries_of(&doc))
+}
+
+/// (scheme, kernel) → entries/s
+fn index(entries: &[Json]) -> BTreeMap<(String, String), f64> {
+    let mut out = BTreeMap::new();
+    for e in entries {
+        let (Some(scheme), Some(kernel), Some(eps)) = (
+            e.get("scheme").and_then(Json::as_str),
+            e.get("kernel").and_then(Json::as_str),
+            e.get("entries_per_s").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        out.insert((scheme.to_string(), kernel.to_string()), eps);
+    }
+    out
+}
+
+fn flag_value(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn run() -> Result<bool, String> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let update = args.iter().any(|a| a == "--update");
+    let mut paths = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--tolerance" {
+            i += 2;
+        } else if args[i].starts_with("--") {
+            i += 1;
+        } else {
+            paths.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let [baseline_path, current_path] = &paths[..] else {
+        return Err("usage: benchgate [--update] [--tolerance F] <baseline.json> <current.json>"
+            .to_string());
+    };
+    let tolerance: f64 = match flag_value(&args, "--tolerance") {
+        None => 0.35,
+        Some(v) => v.parse().map_err(|_| format!("bad --tolerance {v}"))?,
+    };
+
+    let current = load(current_path)?;
+    if update {
+        let doc = Json::obj(vec![
+            (
+                "note",
+                Json::Str(format!(
+                    "promoted baseline for the bench-gate (BENCH_QUICK=1 smoke numbers); \
+                     regenerate with: benchgate --update {baseline_path} {current_path}"
+                )),
+            ),
+            ("os", Json::Str(std::env::consts::OS.into())),
+            ("arch", Json::Str(std::env::consts::ARCH.into())),
+            ("entries", Json::Arr(current)),
+        ]);
+        std::fs::write(baseline_path, doc.dump())
+            .map_err(|e| format!("cannot write {baseline_path}: {e}"))?;
+        println!("promoted {current_path} -> {baseline_path}");
+        return Ok(true);
+    }
+
+    let base = index(&load(baseline_path)?);
+    let cur = index(&current);
+    if base.is_empty() {
+        println!(
+            "benchgate: baseline {baseline_path} is empty (bootstrap) — nothing gated.\n\
+             Promote this machine's numbers with: benchgate --update {baseline_path} {current_path}"
+        );
+    }
+
+    println!(
+        "{:<12} {:<12} {:>14} {:>14} {:>8}  verdict (tolerance -{:.0}%)",
+        "scheme",
+        "kernel",
+        "baseline e/s",
+        "current e/s",
+        "delta",
+        tolerance * 100.0
+    );
+    let mut ok = true;
+    for ((scheme, kernel), eps) in &cur {
+        let gated = GATED.contains(&kernel.as_str());
+        match base.get(&(scheme.clone(), kernel.clone())) {
+            None => {
+                println!(
+                    "{scheme:<12} {kernel:<12} {:>14} {eps:>14.3e} {:>8}  new (no baseline)",
+                    "—", "—"
+                );
+            }
+            Some(b) => {
+                let delta = eps / b - 1.0;
+                let fail = gated && delta < -tolerance;
+                let verdict = match (fail, gated) {
+                    (true, _) => "FAIL",
+                    (false, true) => "ok",
+                    (false, false) => "info",
+                };
+                println!(
+                    "{scheme:<12} {kernel:<12} {b:>14.3e} {eps:>14.3e} {:>+7.1}%  {verdict}",
+                    delta * 100.0
+                );
+                ok &= !fail;
+            }
+        }
+    }
+    // A gated lane vanishing from the bench is worse than it slowing down
+    // — losing coverage silently must fail the gate too.
+    for key in base.keys().filter(|k| !cur.contains_key(*k)) {
+        let gated = GATED.contains(&key.1.as_str());
+        println!(
+            "{:<12} {:<12} missing from current run (bench lane removed?)  {}",
+            key.0,
+            key.1,
+            if gated { "FAIL" } else { "info" }
+        );
+        ok &= !gated;
+    }
+    Ok(ok)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => {
+            eprintln!("benchgate: fused-kernel throughput regressed beyond tolerance");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("benchgate: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -113,7 +113,7 @@ mod tests {
         let mut g = vec![0.0f32; 1000];
         rng.fill_normal(&mut g, 0.01);
         let mut c = Bf16Codec::new();
-        let ctx = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let ctx = HopCtx::flat(0, 1, 0, 1);
         let pre = c.begin_round(&g, &[], &ctx);
         let bytes = c.compress(&pre, 0..pre.len(), &ctx);
         assert_eq!(bytes.len(), pre.len() * 2);
@@ -126,7 +126,7 @@ mod tests {
     #[test]
     fn accumulate_adds() {
         let mut c = Bf16Codec::new();
-        let ctx = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let ctx = HopCtx::flat(0, 1, 0, 1);
         let pre = c.begin_round(&[1.0; 16], &[], &ctx);
         let bytes = c.compress(&pre, 0..16, &ctx);
         let mut acc = vec![2.0f32; 16];

@@ -15,6 +15,16 @@
 //! is what lets all workers agree on allocation and shared randomness
 //! without extra communication, and what makes the pallas kernels (L1)
 //! byte-compatible with this implementation.
+//!
+//! Topology-aware per-level budgets: with
+//! [`DynamiqConfig::level_budgets`] set, step 2 solves one width
+//! allocation per hierarchy level (partial sums crossing outer tiers
+//! aggregate more gradients, so outer hops get more bits), compression
+//! picks the set for [`HopCtx::level`], and every chunk payload carries a
+//! compact width header so decode reads the widths actually used straight
+//! off the wire — no out-of-band agreement about which hop encoded a
+//! payload. Empty `level_budgets` (the default) is byte-identical to the
+//! level-unaware codec: uniform budget, no header.
 
 use std::ops::Range;
 
@@ -59,6 +69,21 @@ pub struct DynamiqConfig {
     /// subtract per-super-group global means (on in the paper's pipeline)
     pub subtract_mean: bool,
     pub seed: u32,
+    /// Topology-aware per-level bit budgets (bits/coordinate *including*
+    /// scale overhead) for reduce-scatter partial sums, indexed by
+    /// [`HopCtx::level`] — innermost tier first, clamped to the last
+    /// entry for deeper levels. Partial sums crossing outer tiers
+    /// aggregate whole subtrees (and outer hops are few), so outer levels
+    /// typically get more bits and the cheap, numerous NVLink hops fewer
+    /// — lower vNMSE at equal mean wire bytes. Broadcast/sink payloads
+    /// (the final sum, forwarded n−1 times in the all-gather) always keep
+    /// the nominal `budget_bits`. Empty (the default) → `budget_bits`
+    /// everywhere, with a byte stream identical to the level-unaware
+    /// codec; non-empty → every chunk payload carries a small
+    /// self-describing width header (see `encode_header`), so decoders
+    /// never need out-of-band agreement about the hop a payload was
+    /// encoded for.
+    pub level_budgets: Vec<f64>,
 }
 
 impl Default for DynamiqConfig {
@@ -75,6 +100,7 @@ impl Default for DynamiqConfig {
             uniform_values: false,
             subtract_mean: true,
             seed: 0xD14A_311,
+            level_budgets: Vec::new(),
         }
     }
 }
@@ -94,13 +120,47 @@ impl DynamiqConfig {
 
     /// Payload budget b̄ (§A): overall budget minus scale overhead.
     pub fn payload_budget_bits(&self) -> f64 {
-        (self.budget_bits - self.scale_overhead_bits()).max(*self.widths.first().unwrap() as f64)
+        self.payload_budget_for(self.budget_bits)
+    }
+
+    /// Payload budget for an arbitrary overall budget (per-level budgets
+    /// share the scale overhead — scales ride every payload regardless).
+    pub fn payload_budget_for(&self, budget_bits: f64) -> f64 {
+        (budget_bits - self.scale_overhead_bits()).max(*self.widths.first().unwrap() as f64)
+    }
+
+    /// The budgets actually in force, one per width set. Set 0 is always
+    /// `budget_bits`: the uniform budget when `level_budgets` is empty,
+    /// and the broadcast/sink payload's budget otherwise (the final sum
+    /// is forwarded unchanged along the whole all-gather — n−1 hops per
+    /// chunk — so a boosted tier budget on it would dominate total wire
+    /// bytes; its noise is injected once, making those the least
+    /// efficient bytes in the round). Sets 1.. are the per-level budgets
+    /// for reduce-scatter partial sums.
+    fn effective_budgets(&self) -> Vec<f64> {
+        let mut budgets = Vec::with_capacity(1 + self.level_budgets.len());
+        budgets.push(self.budget_bits);
+        budgets.extend_from_slice(&self.level_budgets);
+        budgets
+    }
+
+    /// Bits per width-header code: the smallest byte-aligning power of
+    /// two that indexes `widths` (drives the wire format — callers
+    /// modelling header overhead, like the hier sweep's equal-wire
+    /// budget solver, must use this rather than hardcode it).
+    pub fn width_code_bits(&self) -> usize {
+        match self.widths.len() {
+            0..=2 => 1,
+            3..=4 => 2,
+            5..=16 => 4,
+            _ => 8,
+        }
     }
 
     /// Fixed width used when variable bitwidth allocation is disabled: the
     /// largest allowed width fitting the payload budget.
-    fn fixed_width(&self) -> u32 {
-        let b = self.payload_budget_bits();
+    fn fixed_width(&self, budget_bits: f64) -> u32 {
+        let b = self.payload_budget_for(budget_bits);
         *self
             .widths
             .iter()
@@ -119,21 +179,27 @@ struct RoundState {
     /// global super-group means µ_j (original order)
     means: Vec<f32>,
     /// reorder permutation: `perm[k]` = original index of the super-group
-    /// at reordered slot k (stable sort by width desc)
+    /// at reordered slot k (stable sort by the *base* set's width desc)
     perm: Vec<u32>,
-    /// widths in *reordered* order: width_of_slot[k]
-    widths: Vec<u8>,
+    /// per budget-index widths in *reordered* order:
+    /// `width_sets[bi][k]` = width of reordered slot k under budget bi.
+    /// One set per entry of `level_budgets`, or a single uniform set when
+    /// it is empty. All sets share `perm` (the base set's ordering), so
+    /// only set 0 is guaranteed contiguous after reorder.
+    width_sets: Vec<Vec<u8>>,
 }
 
-/// The DynamiQ codec. One per worker; carries the fast allocator's `u`
-/// across rounds (§A) plus the current round's agreed state.
+/// The DynamiQ codec. One per worker; carries the fast allocators' `u`
+/// across rounds (§A; one allocator per budget index, so each level's `u`
+/// trajectory warm-starts against its own budget) plus the current
+/// round's agreed state.
 pub struct Dynamiq {
     pub cfg: DynamiqConfig,
     tables: QTables,
     /// signed decode LUTs per configured width, built once at construction
     /// (lut[code] = ±grid[mag]) — the decode paths never allocate
     luts: Vec<(u32, Vec<f32>)>,
-    fast_alloc: FastAllocator,
+    fast_alloc: Vec<FastAllocator>,
     state: Option<RoundState>,
 }
 
@@ -143,6 +209,11 @@ impl Dynamiq {
             cfg.widths.windows(2).all(|w| w[0] < w[1]) && !cfg.widths.is_empty(),
             "widths must be ascending"
         );
+        assert!(
+            cfg.level_budgets.iter().all(|b| b.is_finite() && *b > 0.0),
+            "level budgets must be positive, got {:?}",
+            cfg.level_budgets
+        );
         let tables = QTables::new(&cfg.widths, cfg.epsilon, cfg.uniform_values);
         let luts = cfg.widths.iter().map(|&w| (w, build_lut(&tables, w))).collect();
         let w3: [u32; 3] = if cfg.widths.len() == 3 {
@@ -150,7 +221,14 @@ impl Dynamiq {
         } else {
             [2, 4, 8] // fast allocator unused unless |W|=3
         };
-        Dynamiq { fast_alloc: FastAllocator::new(w3), tables, luts, cfg, state: None }
+        let n_sets = 1 + cfg.level_budgets.len();
+        Dynamiq {
+            fast_alloc: vec![FastAllocator::new(w3); n_sets],
+            tables,
+            luts,
+            cfg,
+            state: None,
+        }
     }
 
     pub fn paper_default() -> Self {
@@ -181,6 +259,94 @@ impl Dynamiq {
     /// entry rounding, still worker-private + round-fresh.
     fn scale_seed(&self, ctx: &HopCtx) -> u32 {
         self.cfg.seed ^ pcg_hash(0x5CA1E, ctx.worker) ^ ctx.round.wrapping_mul(0x9E37_79B9)
+    }
+
+    // ---- per-level width sets + the self-describing width header ----
+    //
+    // With `level_budgets` non-empty, every non-empty chunk payload starts
+    // with a header recording the widths it was actually encoded with:
+    //
+    //   byte 0:  budget index used (diagnostics / cross-checks)
+    //   then:    one `code_bits()`-bit code per super-group in the chunk,
+    //            packed little-endian; code = index into `cfg.widths`
+    //
+    // Decoders read widths straight off the wire, so a payload encoded for
+    // an NVLink hop decodes correctly at a NIC gateway (and vice versa)
+    // with no out-of-band agreement about which hop produced it. With
+    // `level_budgets` empty there is no header and the byte stream is
+    // identical to the level-unaware codec.
+
+    /// The width-set index a hop at `level` encodes with: 0 (the
+    /// `budget_bits` set) when level budgets are off or for
+    /// broadcast/sink payloads; otherwise `1 + level`, with deeper levels
+    /// clamping to the last configured budget.
+    fn budget_index(&self, level: u8) -> usize {
+        if self.cfg.level_budgets.is_empty() || level == HopCtx::BROADCAST_LEVEL {
+            0
+        } else {
+            1 + (level as usize).min(self.cfg.level_budgets.len() - 1)
+        }
+    }
+
+    /// Whether payloads carry the width header.
+    fn has_header(&self) -> bool {
+        !self.cfg.level_budgets.is_empty()
+    }
+
+    /// Bits per width code (see [`DynamiqConfig::width_code_bits`]).
+    fn code_bits(&self) -> usize {
+        self.cfg.width_code_bits()
+    }
+
+    /// Header bytes preceding the super-group payloads of a chunk with
+    /// `nsg` super-groups (0 when headerless or the chunk is empty).
+    fn header_bytes(&self, nsg: usize) -> usize {
+        if !self.has_header() || nsg == 0 {
+            0
+        } else {
+            1 + (nsg * self.code_bits()).div_ceil(8)
+        }
+    }
+
+    /// Append the width header for budget set `bi` covering `slots`.
+    fn encode_header(&self, bi: usize, slots: Range<usize>, out: &mut Vec<u8>) {
+        if !self.has_header() || slots.is_empty() {
+            return;
+        }
+        out.push(bi as u8);
+        let widths = &self.state().width_sets[bi];
+        let cb = self.code_bits();
+        let mut acc: u32 = 0;
+        let mut nbits = 0;
+        for k in slots {
+            let w = widths[k] as u32;
+            let code =
+                self.cfg.widths.iter().position(|&x| x == w).expect("width outside set") as u32;
+            acc |= code << nbits;
+            nbits += cb;
+            if nbits == 8 {
+                out.push(acc as u8);
+                acc = 0;
+                nbits = 0;
+            }
+        }
+        if nbits > 0 {
+            out.push(acc as u8);
+        }
+    }
+
+    /// Width of the `i`-th super-group of a payload, read from its header
+    /// codes (`bytes` starts at the header). Headerless mode reads the
+    /// agreed set instead — `k` is the absolute reordered slot.
+    #[inline]
+    fn wire_width(&self, bytes: &[u8], i: usize, k: usize) -> u32 {
+        if !self.has_header() {
+            return self.state().width_sets[0][k] as u32;
+        }
+        let cb = self.code_bits();
+        let bit = i * cb;
+        let code = (bytes[1 + bit / 8] as usize >> (bit % 8)) & ((1 << cb) - 1);
+        self.cfg.widths[code]
     }
 
     /// Compress the entries of one (already normalized, reordered)
@@ -343,8 +509,7 @@ impl Dynamiq {
         let bytes_per_group = g / per_byte;
         let mut i = 0usize;
         let mut p = off;
-        for gi in 0..gpsg {
-            let scale = scales[gi];
+        for &scale in scales.iter() {
             for _ in 0..bytes_per_group {
                 let mut b = bytes[p] as u32;
                 p += 1;
@@ -371,20 +536,31 @@ impl Dynamiq {
         (range.start / self.s())..(range.end / self.s())
     }
 
-    /// Exact wire size of a chunk under the agreed allocation (used by
-    /// tests and the Table 2 traffic model).
-    pub fn chunk_wire_bytes(&self, range: &Range<usize>) -> usize {
+    /// Exact wire size of a chunk under the agreed allocation for a hop at
+    /// `level` (used by tests and the Table 2 traffic model), including
+    /// the width header when per-level budgets are active.
+    pub fn chunk_wire_bytes_at(&self, range: &Range<usize>, level: u8) -> usize {
         let st = self.state();
-        self.slots(range).map(|k| self.sg_wire_bytes(st.widths[k] as u32)).sum()
+        let bi = self.budget_index(level);
+        let slots = self.slots(range);
+        self.header_bytes(slots.len())
+            + slots.map(|k| self.sg_wire_bytes(st.width_sets[bi][k] as u32)).sum::<usize>()
     }
 
-    /// The agreed allocation in *original* super-group order (diagnostics,
-    /// Fig. 3 reproduction).
+    /// [`Dynamiq::chunk_wire_bytes_at`] for the nominal-budget set
+    /// (`budget_bits`): the uniform allocation when `level_budgets` is
+    /// empty, the broadcast/sink payload's size otherwise.
+    pub fn chunk_wire_bytes(&self, range: &Range<usize>) -> usize {
+        self.chunk_wire_bytes_at(range, HopCtx::BROADCAST_LEVEL)
+    }
+
+    /// The agreed base (level-0 / uniform) allocation in *original*
+    /// super-group order (diagnostics, Fig. 3 reproduction).
     pub fn allocation_original_order(&self) -> Vec<u8> {
         let st = self.state();
-        let mut out = vec![0u8; st.widths.len()];
+        let mut out = vec![0u8; st.width_sets[0].len()];
         for (slot, &orig) in st.perm.iter().enumerate() {
-            out[orig as usize] = st.widths[slot];
+            out[orig as usize] = st.width_sets[0][slot];
         }
         out
     }
@@ -438,23 +614,40 @@ impl GradCodec for Dynamiq {
         // padding contributes nothing to F but is transmitted — exactly
         // like the CUDA kernels which operate on full tiles).
         let sg_entries = vec![s; nsg];
-        let alloc: BitAllocation = if self.cfg.variable_bitwidth {
-            let budget = self.cfg.payload_budget_bits();
-            match self.cfg.allocator {
-                Allocator::Fast if self.cfg.widths.len() == 3 => {
-                    self.fast_alloc.allocate(&f, &sg_entries, budget)
+        // One allocation per effective budget (the uniform budget alone,
+        // or one per hierarchy level). Every worker solves from the same
+        // aggregated F in the same order, so all sets agree across workers
+        // — including each fast allocator's cross-round `u` trajectory
+        // (one allocator per budget index keeps warm starts honest).
+        let allocs: Vec<BitAllocation> = self
+            .cfg
+            .effective_budgets()
+            .iter()
+            .enumerate()
+            .map(|(bi, &budget_bits)| {
+                if self.cfg.variable_bitwidth {
+                    let budget = self.cfg.payload_budget_for(budget_bits);
+                    match self.cfg.allocator {
+                        Allocator::Fast if self.cfg.widths.len() == 3 => {
+                            self.fast_alloc[bi].allocate(&f, &sg_entries, budget)
+                        }
+                        _ => solve_exact(&f, &sg_entries, &self.cfg.widths, budget),
+                    }
+                } else {
+                    BitAllocation {
+                        widths: vec![self.cfg.fixed_width(budget_bits) as u8; nsg],
+                    }
                 }
-                _ => solve_exact(&f, &sg_entries, &self.cfg.widths, budget),
-            }
-        } else {
-            BitAllocation { widths: vec![self.cfg.fixed_width() as u8; nsg] }
-        };
+            })
+            .collect();
 
-        // Stable sort super-groups by width descending → contiguous runs
-        // (Fig. 2c). Stability makes the permutation identical across
-        // workers (they computed identical allocations).
+        // Stable sort super-groups by the base set's width descending →
+        // contiguous runs (Fig. 2c). Stability makes the permutation
+        // identical across workers (they computed identical allocations).
+        // Other sets share the permutation: correctness never depends on
+        // contiguity, only kernel-friendliness of the common case.
         let mut perm: Vec<u32> = (0..nsg as u32).collect();
-        perm.sort_by_key(|&j| std::cmp::Reverse(alloc.widths[j as usize]));
+        perm.sort_by_key(|&j| std::cmp::Reverse(allocs[0].widths[j as usize]));
 
         // Build the preprocessed vector: padded, mean-subtracted, permuted.
         let mut pre = vec![0.0f32; padded];
@@ -470,8 +663,11 @@ impl GradCodec for Dynamiq {
                 }
             }
         }
-        let widths: Vec<u8> = perm.iter().map(|&j| alloc.widths[j as usize]).collect();
-        self.state = Some(RoundState { d, padded, means, perm, widths });
+        let width_sets: Vec<Vec<u8>> = allocs
+            .iter()
+            .map(|a| perm.iter().map(|&j| a.widths[j as usize]).collect())
+            .collect();
+        self.state = Some(RoundState { d, padded, means, perm, width_sets });
         pre
     }
 
@@ -484,9 +680,11 @@ impl GradCodec for Dynamiq {
         let st = self.state();
         let rctx = self.rctx(ctx);
         let sseed = self.scale_seed(ctx);
-        out.reserve(self.chunk_wire_bytes(&range));
+        let bi = self.budget_index(ctx.level);
+        out.reserve(self.chunk_wire_bytes_at(&range, ctx.level));
+        self.encode_header(bi, self.slots(&range), out);
         for k in self.slots(&range) {
-            let w = st.widths[k] as u32;
+            let w = st.width_sets[bi][k] as u32;
             let pi = rctx.pi_slot(k as u32);
             let base = k * self.s() - range.start;
             let x = &data[base..base + self.s()];
@@ -496,10 +694,10 @@ impl GradCodec for Dynamiq {
 
     fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
         debug_assert_eq!(out.len(), range.len());
-        let st = self.state();
-        let mut off = 0usize;
-        for k in self.slots(&range) {
-            let w = st.widths[k] as u32;
+        let slots = self.slots(&range);
+        let mut off = self.header_bytes(slots.len());
+        for (si, k) in slots.enumerate() {
+            let w = self.wire_width(bytes, si, k);
             let lut = self.lut(w);
             let base = k * self.s() - range.start;
             off += self.decode_sg(&bytes[off..], w, lut, |i, v| out[base + i] = v);
@@ -514,10 +712,10 @@ impl GradCodec for Dynamiq {
         range: Range<usize>,
         _ctx: &HopCtx,
     ) {
-        let st = self.state();
-        let mut off = 0usize;
-        for k in self.slots(&range) {
-            let w = st.widths[k] as u32;
+        let slots = self.slots(&range);
+        let mut off = self.header_bytes(slots.len());
+        for (si, k) in slots.enumerate() {
+            let w = self.wire_width(bytes, si, k);
             let lut = self.lut(w);
             let base = k * self.s() - range.start;
             off += self.decode_sg(&bytes[off..], w, lut, |i, v| acc[base + i] += v);
@@ -528,7 +726,11 @@ impl GradCodec for Dynamiq {
     /// The fused kernel (§4, kernel 3): per super-group, decode into the
     /// caller's scratch slab, accumulate the local contribution,
     /// recompress — one pass over the wire data, no chunk-sized
-    /// intermediate and no heap traffic.
+    /// intermediate and no heap traffic. Decode widths come off the
+    /// incoming payload's header; re-encode widths come from the width set
+    /// of the *outgoing* hop's level (`ctx.level`), so a gateway worker
+    /// transparently re-quantizes an NVLink-budget partial onto the NIC
+    /// budget.
     fn decompress_accumulate_recompress_into(
         &self,
         bytes: &[u8],
@@ -543,18 +745,22 @@ impl GradCodec for Dynamiq {
         let rctx = self.rctx(ctx);
         let sseed = self.scale_seed(ctx);
         let s = self.s();
-        out.reserve(bytes.len());
+        let bi = self.budget_index(ctx.level);
+        out.reserve(self.chunk_wire_bytes_at(&range, ctx.level));
+        self.encode_header(bi, self.slots(&range), out);
         scratch.slab.resize(s, 0.0);
-        let mut off = 0usize;
-        for k in self.slots(&range) {
-            let w = st.widths[k] as u32;
-            let lut = self.lut(w);
+        let slots = self.slots(&range);
+        let mut off = self.header_bytes(slots.len());
+        for (si, k) in slots.enumerate() {
+            let w_in = self.wire_width(bytes, si, k);
+            let lut = self.lut(w_in);
             let base = k * s - range.start;
             // decode + accumulate into the slab (registers/VMEM analogue)
             scratch.slab.copy_from_slice(&local[base..base + s]);
-            off += self.decode_sg(&bytes[off..], w, lut, |i, v| scratch.slab[i] += v);
+            off += self.decode_sg(&bytes[off..], w_in, lut, |i, v| scratch.slab[i] += v);
             let pi = rctx.pi_slot(k as u32);
-            self.compress_sg(&scratch.slab, w, k, &rctx, sseed, pi, out);
+            let w_out = st.width_sets[bi][k] as u32;
+            self.compress_sg(&scratch.slab, w_out, k, &rctx, sseed, pi, out);
         }
         debug_assert_eq!(off, bytes.len());
     }
@@ -587,7 +793,7 @@ mod tests {
     use crate::util::vnmse;
 
     fn hop(worker: u32, n: u32, round: u32) -> HopCtx {
-        HopCtx { worker, n_workers: n, round, summed: 1 }
+        HopCtx::flat(worker, n, round, 1)
     }
 
     /// Gradient-like data: spatially-correlated region scales (locality,
@@ -799,7 +1005,7 @@ mod tests {
         let ctx = hop(0, 1, 0);
         let meta = c.metadata(&g, &ctx);
         c.begin_round(&g, &meta, &ctx);
-        let w = &c.state().widths;
+        let w = &c.state().width_sets[0];
         // non-increasing sequence (8...8 4...4 2...2)
         assert!(w.windows(2).all(|p| p[0] >= p[1]), "widths not contiguous: {w:?}");
         // and uses more than one width on skewed data at b=5
@@ -861,6 +1067,125 @@ mod tests {
             errs[1],
             errs[0]
         );
+    }
+
+    /// Two workers through metadata + begin_round under `cfg`, returning
+    /// (codec_a, codec_b, pre_a, pre_b) ready for chunk kernels.
+    fn setup_pair(
+        cfg: &DynamiqConfig,
+        d: usize,
+        round: u32,
+    ) -> (Dynamiq, Dynamiq, Vec<f32>, Vec<f32>) {
+        let ga = fake_grad(d, 81);
+        let gb = fake_grad(d, 82);
+        let mut ca = Dynamiq::new(cfg.clone());
+        let mut cb = Dynamiq::new(cfg.clone());
+        let (ctx_a, ctx_b) = (hop(0, 2, round), hop(1, 2, round));
+        let ma = ca.metadata(&ga, &ctx_a);
+        let mb = cb.metadata(&gb, &ctx_b);
+        let agg: Vec<f32> = ma.iter().zip(&mb).map(|(x, y)| x + y).collect();
+        let pa = ca.begin_round(&ga, &agg, &ctx_a);
+        let pb = cb.begin_round(&gb, &agg, &ctx_b);
+        (ca, cb, pa, pb)
+    }
+
+    #[test]
+    fn uniform_level_budgets_differ_from_empty_only_by_the_header() {
+        // `level_budgets = [b, b]` must solve the same allocation as the
+        // empty (uniform) config; the only wire difference is the
+        // self-describing width header, and decode agrees bit-exactly.
+        let d = 8192;
+        let base = DynamiqConfig::default();
+        let lb = DynamiqConfig {
+            level_budgets: vec![base.budget_bits, base.budget_bits],
+            ..base.clone()
+        };
+        let (c0, _, p0, _) = setup_pair(&base, d, 2);
+        let (c1, _, p1, _) = setup_pair(&lb, d, 2);
+        assert_eq!(p0, p1, "preprocessing must not depend on level budgets");
+        let r = 0..p0.len();
+        for level in [0u8, 1, 5] {
+            let ctx = hop(0, 2, 2).at_level(level, 4);
+            let plain = c0.compress(&p0[r.clone()], r.clone(), &ctx);
+            let with_hdr = c1.compress(&p1[r.clone()], r.clone(), &ctx);
+            let hdr = with_hdr.len() - plain.len();
+            assert!(hdr > 0, "non-empty level_budgets must emit a width header");
+            assert_eq!(
+                &with_hdr[hdr..],
+                &plain[..],
+                "identical budgets must yield identical super-group payloads"
+            );
+            assert_eq!(with_hdr.len(), c1.chunk_wire_bytes_at(&r, level));
+            assert_eq!(plain.len(), c0.chunk_wire_bytes(&r));
+            let da = c0.decompress(&plain, r.clone(), &ctx);
+            let db = c1.decompress(&with_hdr, r.clone(), &ctx);
+            for (x, y) in da.iter().zip(&db) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_level_budgets_are_level_invariant() {
+        // the pre-level-budget behavior: ctx.level must not influence a
+        // single byte when level_budgets is empty
+        let d = 4096;
+        let (c, _, p, _) = setup_pair(&DynamiqConfig::default(), d, 1);
+        let r = 0..p.len();
+        let base = c.compress(&p[r.clone()], r.clone(), &hop(0, 2, 1));
+        for level in [1u8, 3, 250] {
+            let ctx = hop(0, 2, 1).at_level(level, 8);
+            assert_eq!(c.compress(&p[r.clone()], r.clone(), &ctx), base);
+        }
+    }
+
+    #[test]
+    fn per_level_budgets_spend_more_bits_on_outer_hops() {
+        let d = 16384;
+        let cfg = DynamiqConfig { level_budgets: vec![4.0, 6.0], ..DynamiqConfig::default() };
+        let (ca, cb, pa, pb) = setup_pair(&cfg, d, 3);
+        let r = 0..pa.len();
+        let w0 = ca.compress(&pa[r.clone()], r.clone(), &hop(0, 2, 3).at_level(0, 8));
+        let w1 = ca.compress(&pa[r.clone()], r.clone(), &hop(0, 2, 3).at_level(1, 4));
+        assert!(
+            w1.len() > w0.len(),
+            "a 6-bit NIC budget must emit more bytes than a 4-bit NVLink one: {} vs {}",
+            w1.len(),
+            w0.len()
+        );
+        assert_eq!(w0.len(), ca.chunk_wire_bytes_at(&r, 0));
+        assert_eq!(w1.len(), ca.chunk_wire_bytes_at(&r, 1));
+        // deeper levels clamp to the last budget
+        let w5 = ca.compress(&pa[r.clone()], r.clone(), &hop(0, 2, 3).at_level(5, 2));
+        assert_eq!(w5, w1);
+        // the broadcast payload rides the nominal budget_bits (5), strictly
+        // between the 4-bit NVLink and 6-bit NIC partial-sum budgets
+        let wb = ca.compress(&pa[r.clone()], r.clone(), &hop(0, 2, 3).at_broadcast());
+        assert!(
+            w0.len() < wb.len() && wb.len() < w1.len(),
+            "broadcast must price at budget_bits: {} < {} < {}",
+            w0.len(),
+            wb.len(),
+            w1.len()
+        );
+        // cross-level decode needs no out-of-band agreement: codec B
+        // decodes both payloads off their headers with a level-agnostic ctx
+        let ctx_b = hop(1, 2, 3);
+        let d0 = cb.decompress(&w0, r.clone(), &ctx_b);
+        let d1 = cb.decompress(&w1, r.clone(), &ctx_b);
+        let err0 = vnmse(&pa, &d0);
+        let err1 = vnmse(&pa, &d1);
+        assert!(err1 < err0, "more bits must mean less error: {err1} vs {err0}");
+        // and the fused gateway kernel re-quantizes a level-0 payload onto
+        // the level-1 budget bit-exactly like the unfused sequence
+        let next = HopCtx { summed: 2, ..ctx_b.at_level(1, 4) };
+        let fused = cb.decompress_accumulate_recompress(&w0, &pb[r.clone()], r.clone(), &next);
+        let mut acc = cb.decompress(&w0, r.clone(), &ctx_b);
+        for (a, &p) in acc.iter_mut().zip(&pb[r.clone()]) {
+            *a += p;
+        }
+        let unfused = cb.compress(&acc, r.clone(), &next);
+        assert_eq!(fused, unfused, "cross-level fused/unfused must agree bit-exactly");
     }
 
     #[test]

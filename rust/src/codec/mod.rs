@@ -69,9 +69,10 @@ pub enum MetaOp {
 }
 
 /// Per-hop context the engine passes to compression calls: which worker is
-/// executing (its rounding context identity) and how many gradients the
+/// executing (its rounding context identity), how many gradients the
 /// incoming partial sum already aggregates (for formats that track range
-/// growth).
+/// growth), and which hierarchy level the produced payload will cross
+/// (for codecs with per-level bit budgets).
 #[derive(Clone, Copy, Debug)]
 pub struct HopCtx {
     /// executing worker rank
@@ -83,6 +84,42 @@ pub struct HopCtx {
     /// number of worker gradients already summed into the payload being
     /// (re)compressed, including the local one. Leaf compression: 1.
     pub summed: u32,
+    /// hierarchy level whose links the payload produced under this context
+    /// will cross (0 = innermost/intra-node tier; flat topologies are all
+    /// level 0), or [`HopCtx::BROADCAST_LEVEL`] for sink-finalize /
+    /// broadcast payloads — the final sum, forwarded unchanged along the
+    /// whole all-gather, which budget-aware codecs therefore price at the
+    /// nominal budget rather than any one tier's. Budget-aware codecs
+    /// pick their per-level width allocation from this. Decode paths must
+    /// NOT rely on it: received payloads may have been encoded for a
+    /// *different* (earlier) hop, so budget-aware wire formats are
+    /// self-describing (see `dynamiq`'s width header).
+    pub level: u8,
+    /// member count of the level group the hop aggregates across (the
+    /// level's fan-in; `n_workers` for flat topologies and broadcast) —
+    /// range-growth accounting for budget-aware codecs and diagnostics.
+    pub fanin: u32,
+}
+
+impl HopCtx {
+    /// `level` marker for sink-finalize / broadcast payloads (the fully
+    /// aggregated result, not a per-tier partial sum).
+    pub const BROADCAST_LEVEL: u8 = u8::MAX;
+
+    /// Context on a flat (single-tier) topology: level 0, fanin = n.
+    pub fn flat(worker: u32, n_workers: u32, round: u32, summed: u32) -> Self {
+        HopCtx { worker, n_workers, round, summed, level: 0, fanin: n_workers }
+    }
+
+    /// Re-home this context onto a hierarchy level.
+    pub fn at_level(self, level: u8, fanin: u32) -> Self {
+        HopCtx { level, fanin, ..self }
+    }
+
+    /// Re-home this context onto the broadcast (sink-finalize) class.
+    pub fn at_broadcast(self) -> Self {
+        HopCtx { level: Self::BROADCAST_LEVEL, fanin: self.n_workers, ..self }
+    }
 }
 
 /// A gradient codec. One instance per worker; it may carry cross-round
@@ -203,11 +240,19 @@ pub const SCHEMES: &[&str] =
     &["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
 
 /// Construct a codec by scheme name with its paper-evaluated configuration
-/// (`DynamiQ:b=4`-style suffixes override DynamiQ's bit budget).
+/// (`DynamiQ:b=4`-style suffixes override DynamiQ's bit budget;
+/// `DynamiQ:lb=4.5,6`-style suffixes set the per-hierarchy-level budget
+/// vector, innermost level first).
 pub fn make_codec(name: &str) -> Box<dyn GradCodec> {
     if let Some(b) = name.strip_prefix("DynamiQ:b=") {
         let budget: f64 = b.parse().expect("bad bit budget");
         let cfg = dynamiq::DynamiqConfig { budget_bits: budget, ..Default::default() };
+        return Box::new(dynamiq::Dynamiq::new(cfg));
+    }
+    if let Some(lb) = name.strip_prefix("DynamiQ:lb=") {
+        let budgets: Vec<f64> =
+            lb.split(',').map(|b| b.parse().expect("bad per-level bit budget")).collect();
+        let cfg = dynamiq::DynamiqConfig { level_budgets: budgets, ..Default::default() };
         return Box::new(dynamiq::Dynamiq::new(cfg));
     }
     match name {

@@ -367,7 +367,7 @@ mod tests {
     use crate::util::{rng::Pcg, vnmse};
 
     fn ctx(n: u32) -> HopCtx {
-        HopCtx { worker: 0, n_workers: n, round: 0, summed: 1 }
+        HopCtx::flat(0, n, 0, 1)
     }
 
     fn grad(d: usize, seed: u64, scale: f32) -> Vec<f32> {

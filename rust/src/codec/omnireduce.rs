@@ -200,7 +200,7 @@ mod tests {
     use crate::util::{rng::Pcg, vnmse};
 
     fn ctx() -> HopCtx {
-        HopCtx { worker: 0, n_workers: 2, round: 0, summed: 1 }
+        HopCtx::flat(0, 2, 0, 1)
     }
 
     /// Sparse-ish gradient: most blocks tiny, some hot.
@@ -268,7 +268,7 @@ mod tests {
         let mut unions = Vec::new();
         for round in 0..12 {
             let (ga, gb) = (mk_grad(0, 10 + round), mk_grad(1, 20 + round));
-            let cx = HopCtx { worker: 0, n_workers: 2, round: round as u32, summed: 1 };
+            let cx = HopCtx::flat(0, 2, round as u32, 1);
             let ma = ca.metadata(&ga, &cx);
             let mb = cb.metadata(&gb, &cx);
             let agg: Vec<f32> = ma.iter().zip(&mb).map(|(a, b)| a + b).collect();

@@ -384,7 +384,7 @@ mod tests {
     use crate::util::{rng::Pcg, vnmse};
 
     fn ctx(worker: u32, n: u32, summed: u32) -> HopCtx {
-        HopCtx { worker, n_workers: n, round: 1, summed }
+        HopCtx::flat(worker, n, 1, summed)
     }
 
     #[test]

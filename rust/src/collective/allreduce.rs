@@ -221,8 +221,14 @@ impl AllReduceEngine {
         let mut report = RoundReport::default();
         let mut now = t0;
 
-        let mk_ctx =
-            |worker: u32, summed: u32| HopCtx { worker, n_workers: n as u32, round, summed };
+        // Round-boundary and broadcast-decode contexts carry the
+        // broadcast class: sink-finalize payloads are the final sum
+        // (encoded once, forwarded along the whole all-gather), priced at
+        // the codec's nominal budget; decode reads widths off the payload
+        // header regardless.
+        let mk_ctx = |worker: u32, summed: u32| {
+            HopCtx::flat(worker, n as u32, round, summed).at_broadcast()
+        };
 
         // ---- stage 1: lightweight metadata all-reduce (Fig. 2b) ----
         let metas: Vec<Vec<f32>> =
@@ -253,8 +259,9 @@ impl AllReduceEngine {
         // cost: ring all-reduce of mlen f32 → 2(n−1) stages of mlen/n·4B
         if mlen > 0 {
             let per_stage = (mlen.div_ceil(n) * 4) as u64;
+            let stage_msgs = vec![per_stage; n];
             for _ in 0..2 * (n - 1) {
-                let dt = self.net.stage_time(&vec![per_stage; n], now);
+                let dt = self.net.stage_time(&stage_msgs, now);
                 now += dt;
                 report.meta_time_s += dt;
             }
@@ -427,11 +434,24 @@ impl AllReduceEngine {
         produced: &mut Vec<(u32, u32, Vec<u8>, u32)>,
     ) {
         produced.clear();
+        // Sink-finalize pseudo-hops (from == to) never appear in real
+        // schedules, so they mark the broadcast payload (priced at the
+        // codec's nominal budget). Real hops carry the level their link
+        // rides.
+        let hop_ctx = |from: u32, to: u32| {
+            let base = HopCtx::flat(from, n as u32, round, 1);
+            if from == to {
+                base.at_broadcast()
+            } else {
+                let level = self.topology.hop_level(from, to);
+                base.at_level(level, self.topology.level_fanin(level, n))
+            }
+        };
         if threads <= 1 || hops.len() <= 1 {
             let mut counters = KernelCounters::default();
             for h in hops {
                 let mut out = pool.take_buf();
-                let ctx = HopCtx { worker: h.from, n_workers: n as u32, round, summed: 1 };
+                let ctx = hop_ctx(h.from, h.to);
                 let idx = h.from as usize * n + h.chunk as usize;
                 let summed = produce_hop(
                     codecs[h.from as usize].as_ref(),
@@ -455,6 +475,9 @@ impl AllReduceEngine {
             to: u32,
             chunk: u32,
             range: Range<usize>,
+            /// per-send context (hops of one worker can ride different
+            /// hierarchy levels within a stage)
+            ctx: HopCtx,
             received: Vec<(Vec<u8>, u32)>,
             out: Vec<u8>,
             summed: u32,
@@ -490,23 +513,22 @@ impl AllReduceEngine {
                 to: h.to,
                 chunk: h.chunk,
                 range: ranges[h.chunk as usize].clone(),
+                ctx: hop_ctx(h.from, h.to),
                 received,
                 out,
                 summed: 0,
             });
         }
-        let n_workers = n as u32;
         par::par_iter_mut(&mut jobs, threads, |_, job| {
             let codec = codecs[job.w as usize].as_ref();
             let pre = &pres[job.w as usize];
-            let ctx = HopCtx { worker: job.w, n_workers, round, summed: 1 };
             for s in job.sends.iter_mut() {
                 s.summed = produce_hop(
                     codec,
                     pre,
                     &mut s.received,
                     s.range.clone(),
-                    &ctx,
+                    &s.ctx,
                     &mut job.scratch,
                     &mut s.out,
                     &mut job.recycle,

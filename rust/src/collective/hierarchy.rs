@@ -25,10 +25,11 @@
 //! 0's stages first in reduce-scatter, last in all-gather). The engine and
 //! the thread-per-worker coordinator execute them unchanged. Per-hop link
 //! tiers for the engine's heterogeneous costing come from
-//! `Topology::link_class` (which, for the two-level `HierarchySpec` the
-//! engine exposes today, reduces to a same-node check); [`hop_level`] is
-//! the generic classifier for arbitrary level stacks — keep the two in
-//! agreement when exposing 3+-level topologies.
+//! `Topology::link_class` / `Topology::hop_level` (for the two-level
+//! `HierarchySpec` these reduce to a same-node check; for explicit
+//! `Topology::Stack` compositions they defer to [`hop_level`], the
+//! generic classifier — agreement between the two is pinned by the
+//! hierarchy-invariants tests).
 
 use super::topology::{Hop, Level, Schedule, TopologyError};
 
@@ -82,16 +83,19 @@ pub fn max_depth(levels: &[LevelSpec]) -> usize {
 }
 
 /// The level whose links a hop rides: the highest level at which the two
-/// ranks' digits differ (0 = intra-node).
+/// ranks' digits differ (0 = intra-node). Allocation-free (a running
+/// stride instead of the `strides` table): the engine classifies every
+/// hop on its zero-allocation path with this.
 pub fn hop_level(levels: &[LevelSpec], a: u32, b: u32) -> usize {
-    let st = strides(levels);
     let mut lvl = 0;
+    let mut stride = 1usize;
     for (l, spec) in levels.iter().enumerate() {
-        let da = (a as usize / st[l]) % spec.size;
-        let db = (b as usize / st[l]) % spec.size;
+        let da = (a as usize / stride) % spec.size;
+        let db = (b as usize / stride) % spec.size;
         if da != db {
             lvl = l;
         }
+        stride *= spec.size;
     }
     lvl
 }

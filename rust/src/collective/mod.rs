@@ -19,5 +19,6 @@ pub mod network;
 pub mod topology;
 
 pub use allreduce::{produce_hop, AllReduceEngine, KernelCounters, RoundReport};
+pub use hierarchy::LevelSpec;
 pub use network::{LinkClass, LinkSpec, NetworkModel};
-pub use topology::{HierarchySpec, Level, Topology, TopologyError};
+pub use topology::{HierarchySpec, Level, LevelStack, Topology, TopologyError};

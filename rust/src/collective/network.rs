@@ -82,11 +82,47 @@ impl NetworkModel {
     /// Panics on non-positive/non-finite `ratio` (a zero or negative
     /// bandwidth would silently run the simulated clock backwards).
     pub fn hierarchical_100g(ratio: f64) -> Self {
-        assert!(ratio > 0.0 && ratio.is_finite(), "bandwidth ratio must be positive, got {ratio}");
+        Self::tiered_100g(&[ratio])
+    }
+
+    /// Heterogeneous multi-tier testbed shape for 3+-level stacks:
+    /// private tier `l` runs `ratios[l]`× the NIC bandwidth at ~1 µs α
+    /// (innermost tier first: NVLink, then rack switch, …); the top level
+    /// stays the contended 100 Gbps NIC. `tiered_100g(&[r])` equals
+    /// [`NetworkModel::hierarchical_100g`]`(r)`.
+    ///
+    /// Panics on non-positive/non-finite ratios (a zero or negative
+    /// bandwidth would run the simulated clock backwards).
+    pub fn tiered_100g(ratios: &[f64]) -> Self {
         let mut net = Self::isolated_100g();
-        net.links =
-            vec![LinkSpec { bandwidth_bps: net.bandwidth_bps * ratio, latency_s: 1e-6 }];
+        net.set_tier_ratios(ratios);
         net
+    }
+
+    /// Install the private-tier links at `ratios[l]`× this model's
+    /// (possibly rescaled) NIC bandwidth, ~1 µs α — the single source of
+    /// the ratio → [`LinkSpec`] tier mapping, shared by the constructors
+    /// above and the trainer's scaled-bandwidth path. Panics on
+    /// non-positive/non-finite ratios.
+    pub fn set_tier_ratios(&mut self, ratios: &[f64]) {
+        self.links = ratios
+            .iter()
+            .map(|&r| {
+                assert!(r > 0.0 && r.is_finite(), "bandwidth ratio must be positive, got {r}");
+                LinkSpec { bandwidth_bps: self.bandwidth_bps * r, latency_s: 1e-6 }
+            })
+            .collect();
+    }
+
+    /// A geometric bandwidth ladder from `top_ratio`× (innermost private
+    /// tier) down toward the NIC's 1×: tier `l` of `private_tiers` gets
+    /// `top_ratio^((private_tiers − l) / private_tiers)`. With one private
+    /// tier this is just `[top_ratio]` (the two-level NVLink shape).
+    pub fn geometric_ladder(top_ratio: f64, private_tiers: usize) -> Vec<f64> {
+        assert!(top_ratio > 0.0 && top_ratio.is_finite());
+        (0..private_tiers)
+            .map(|l| top_ratio.powf((private_tiers - l) as f64 / private_tiers as f64))
+            .collect()
     }
 
     /// §5.2: three additional DDP jobs continuously doing ring all-reduce.
@@ -297,6 +333,31 @@ mod tests {
             net.stage_time(&[bytes, 2 * bytes], 0.0),
             net.stage_time_classed(&[(bytes, LinkClass::Nic), (2 * bytes, LinkClass::Nic)], 0.0)
         );
+    }
+
+    #[test]
+    fn tiered_links_cost_by_level() {
+        // 3-level shape: NVLink tier, rack tier, NIC — each slower than
+        // the one below, Level(l) priced on links[l]
+        let net = NetworkModel::tiered_100g(&[48.0, 8.0]);
+        let bytes = 12_500_000u64;
+        let t0 = net.transfer_time_class(bytes, LinkClass::Level(0), 0.0);
+        let t1 = net.transfer_time_class(bytes, LinkClass::Level(1), 0.0);
+        let t_nic = net.transfer_time_class(bytes, LinkClass::Nic, 0.0);
+        assert!(t0 < t1 && t1 < t_nic, "{t0} < {t1} < {t_nic}");
+        // tiers past the configured list fall back to the NIC
+        assert_eq!(net.transfer_time_class(bytes, LinkClass::Level(2), 0.0), t_nic);
+        // one private tier reproduces the two-level constructor
+        let two = NetworkModel::hierarchical_100g(48.0);
+        assert_eq!(
+            NetworkModel::tiered_100g(&[48.0]).transfer_time_class(bytes, LinkClass::Level(0), 0.0),
+            two.transfer_time_class(bytes, LinkClass::Level(0), 0.0)
+        );
+        // geometric ladder interpolates between top_ratio and the NIC
+        let ladder = NetworkModel::geometric_ladder(48.0, 2);
+        assert!((ladder[0] - 48.0).abs() < 1e-9);
+        assert!((ladder[1] - 48.0f64.sqrt()).abs() < 1e-9);
+        assert_eq!(NetworkModel::geometric_ladder(48.0, 1), vec![48.0]);
     }
 
     #[test]

@@ -40,6 +40,8 @@ pub enum TopologyError {
     BadWorkersPerNode { per_node: usize },
     TooFewNodes { nodes: usize },
     TooFewLevels { levels: usize },
+    TooManyLevels { levels: usize },
+    WorkerCountMismatch { n: usize, expect: usize },
 }
 
 impl fmt::Display for TopologyError {
@@ -62,6 +64,15 @@ impl fmt::Display for TopologyError {
             }
             TopologyError::TooFewLevels { levels } => {
                 write!(f, "hierarchy needs at least 2 levels, got {levels}")
+            }
+            TopologyError::TooManyLevels { levels } => {
+                write!(
+                    f,
+                    "level stacks support at most {MAX_STACK_LEVELS} levels, got {levels}"
+                )
+            }
+            TopologyError::WorkerCountMismatch { n, expect } => {
+                write!(f, "level stack schedules exactly {expect} workers, got {n}")
             }
         }
     }
@@ -269,6 +280,69 @@ impl HierarchySpec {
     }
 }
 
+/// Maximum depth of an explicit [`LevelStack`] (node / rack / pod / DC is
+/// as deep as real deployments tier; the fixed bound keeps [`Topology`]
+/// `Copy`, which the engine and every experiment driver lean on).
+pub const MAX_STACK_LEVELS: usize = 4;
+
+/// An explicit multi-level composition (3+ tiers), innermost level first.
+/// Fixed-capacity so [`Topology`] stays `Copy`; the worker count a stack
+/// schedules is exactly the product of its level sizes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LevelStack {
+    levels: [hierarchy::LevelSpec; MAX_STACK_LEVELS],
+    n_levels: u8,
+}
+
+impl LevelStack {
+    /// Build a stack from 2–[`MAX_STACK_LEVELS`] level specs (innermost
+    /// first). Per-level schedulability (butterfly power-of-two etc.) is
+    /// checked here too, so an invalid stack never constructs.
+    pub fn new(levels: &[hierarchy::LevelSpec]) -> Result<LevelStack, TopologyError> {
+        if levels.len() > MAX_STACK_LEVELS {
+            return Err(TopologyError::TooManyLevels { levels: levels.len() });
+        }
+        hierarchy::validate_levels(levels)?;
+        let mut arr = [hierarchy::LevelSpec { topo: Level::Ring, size: 2 }; MAX_STACK_LEVELS];
+        arr[..levels.len()].copy_from_slice(levels);
+        Ok(LevelStack { levels: arr, n_levels: levels.len() as u8 })
+    }
+
+    /// The populated level specs, innermost first.
+    pub fn specs(&self) -> &[hierarchy::LevelSpec] {
+        &self.levels[..self.n_levels as usize]
+    }
+
+    /// The exact worker count this stack schedules (product of sizes).
+    pub fn total_workers(&self) -> usize {
+        hierarchy::total_workers(self.specs())
+    }
+
+    /// Parse the CLI syntax `ring:8,butterfly:4,ring:2` (innermost level
+    /// first: node tier, then rack, then pod …).
+    pub fn parse(s: &str) -> Result<LevelStack, String> {
+        let mut specs = Vec::new();
+        for part in s.split(',') {
+            let (topo, size) = part
+                .split_once(':')
+                .ok_or_else(|| format!("level `{part}` is not of the form topo:size"))?;
+            let topo = Level::parse(topo)
+                .ok_or_else(|| format!("level topology must be ring|butterfly, got {topo}"))?;
+            let size: usize = size
+                .parse()
+                .map_err(|_| format!("level size must be an integer, got {size}"))?;
+            specs.push(hierarchy::LevelSpec { topo, size });
+        }
+        LevelStack::new(&specs).map_err(|e| e.to_string())
+    }
+
+    pub fn name(&self) -> String {
+        let parts: Vec<String> =
+            self.specs().iter().map(|l| format!("{}:{}", l.topo.name(), l.size)).collect();
+        format!("stack({})", parts.join("/"))
+    }
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Topology {
     Ring,
@@ -276,12 +350,20 @@ pub enum Topology {
     /// Multi-level aggregation: per-level topologies composed into one
     /// deeper arborescence (intra-node × inter-node).
     Hierarchical(HierarchySpec),
+    /// An explicit level stack (3+ tiers: node / rack / pod …), innermost
+    /// first; the worker count must equal the product of level sizes.
+    Stack(LevelStack),
 }
 
 impl Topology {
     /// Convenience constructor for the two-level hierarchy.
     pub fn hierarchical(intra: Level, inter: Level, workers_per_node: u32) -> Topology {
         Topology::Hierarchical(HierarchySpec { intra, inter, workers_per_node })
+    }
+
+    /// Convenience constructor for an explicit level stack.
+    pub fn stack(levels: &[hierarchy::LevelSpec]) -> Result<Topology, TopologyError> {
+        Ok(Topology::Stack(LevelStack::new(levels)?))
     }
 
     pub fn name(&self) -> String {
@@ -291,6 +373,7 @@ impl Topology {
             Topology::Hierarchical(s) => {
                 format!("hier({}/{},m={})", s.intra.name(), s.inter.name(), s.workers_per_node)
             }
+            Topology::Stack(ls) => ls.name(),
         }
     }
 
@@ -314,6 +397,13 @@ impl Topology {
                 spec.intra.validate(m)?;
                 spec.inter.validate(nodes)
             }
+            Topology::Stack(ls) => {
+                let expect = ls.total_workers();
+                if n != expect {
+                    return Err(TopologyError::WorkerCountMismatch { n, expect });
+                }
+                Ok(())
+            }
         }
     }
 
@@ -323,6 +413,7 @@ impl Topology {
             Topology::Ring => Level::Ring.rs_stages(n),
             Topology::Butterfly => Level::Butterfly.rs_stages(n),
             Topology::Hierarchical(spec) => hierarchy::rs_stages(&spec.level_specs(n)),
+            Topology::Stack(ls) => hierarchy::rs_stages(ls.specs()),
         }
     }
 
@@ -334,6 +425,7 @@ impl Topology {
             Topology::Ring => Level::Ring.reduce_scatter(n),
             Topology::Butterfly => Level::Butterfly.reduce_scatter(n),
             Topology::Hierarchical(spec) => hierarchy::reduce_scatter(&spec.level_specs(n)),
+            Topology::Stack(ls) => hierarchy::reduce_scatter(ls.specs()),
         })
     }
 
@@ -345,6 +437,7 @@ impl Topology {
             Topology::Ring => Level::Ring.all_gather(n),
             Topology::Butterfly => Level::Butterfly.all_gather(n),
             Topology::Hierarchical(spec) => hierarchy::all_gather(&spec.level_specs(n)),
+            Topology::Stack(ls) => hierarchy::all_gather(ls.specs()),
         })
     }
 
@@ -359,19 +452,64 @@ impl Topology {
         self.try_all_gather(n).unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// The link tier a hop crosses, for heterogeneous stage costing: hops
-    /// inside a node ride the private intra-node links
-    /// (`LinkClass::Level(0)`); everything else is the shared NIC.
-    pub fn link_class(&self, from: u32, to: u32) -> LinkClass {
+    /// Number of hierarchy levels (1 for flat topologies).
+    pub fn num_levels(&self) -> usize {
         match self {
-            Topology::Ring | Topology::Butterfly => LinkClass::Nic,
+            Topology::Ring | Topology::Butterfly => 1,
+            Topology::Hierarchical(_) => 2,
+            Topology::Stack(ls) => ls.specs().len(),
+        }
+    }
+
+    /// The outermost level index (`num_levels − 1`): what sink-finalize
+    /// and broadcast payloads are encoded for.
+    pub fn top_level(&self) -> u8 {
+        (self.num_levels() - 1) as u8
+    }
+
+    /// The hierarchy level whose links a hop rides: the highest level at
+    /// which the two ranks' mixed-radix digits differ (0 = intra-node;
+    /// flat topologies are all level 0). Allocation-free — this runs on
+    /// the engine's zero-allocation hop path.
+    pub fn hop_level(&self, from: u32, to: u32) -> u8 {
+        match self {
+            Topology::Ring | Topology::Butterfly => 0,
             Topology::Hierarchical(spec) => {
-                if from / spec.workers_per_node == to / spec.workers_per_node {
-                    LinkClass::Level(0)
+                u8::from(from / spec.workers_per_node != to / spec.workers_per_node)
+            }
+            Topology::Stack(ls) => hierarchy::hop_level(ls.specs(), from, to) as u8,
+        }
+    }
+
+    /// Members a `level` group aggregates across (the level's fan-in;
+    /// `n` for flat topologies, clamped to the top level beyond it).
+    pub fn level_fanin(&self, level: u8, n: usize) -> u32 {
+        match self {
+            Topology::Ring | Topology::Butterfly => n as u32,
+            Topology::Hierarchical(spec) => {
+                if level == 0 {
+                    spec.workers_per_node
                 } else {
-                    LinkClass::Nic
+                    (n / spec.workers_per_node as usize) as u32
                 }
             }
+            Topology::Stack(ls) => {
+                let specs = ls.specs();
+                specs[(level as usize).min(specs.len() - 1)].size as u32
+            }
+        }
+    }
+
+    /// The link tier a hop crosses, for heterogeneous stage costing: hops
+    /// below the top level ride the private per-tier links
+    /// (`LinkClass::Level(l)`); the top level is the shared NIC. Flat
+    /// topologies ride the NIC everywhere.
+    pub fn link_class(&self, from: u32, to: u32) -> LinkClass {
+        let l = self.hop_level(from, to);
+        if l >= self.top_level() {
+            LinkClass::Nic
+        } else {
+            LinkClass::Level(l)
         }
     }
 
@@ -391,6 +529,7 @@ impl Topology {
             Topology::Ring => Level::Ring.max_depth(n),
             Topology::Butterfly => Level::Butterfly.max_depth(n),
             Topology::Hierarchical(spec) => hierarchy::max_depth(&spec.level_specs(n)),
+            Topology::Stack(ls) => hierarchy::max_depth(ls.specs()),
         }
     }
 }
@@ -635,5 +774,101 @@ mod tests {
         );
         assert_eq!(Level::parse("butterfly"), Some(Level::Butterfly));
         assert_eq!(Level::parse("mesh"), None);
+        assert_eq!(
+            LevelStack::parse("ring:8,butterfly:4,ring:2").unwrap().name(),
+            "stack(ring:8/butterfly:4/ring:2)"
+        );
+    }
+
+    fn spec(topo: Level, size: usize) -> hierarchy::LevelSpec {
+        hierarchy::LevelSpec { topo, size }
+    }
+
+    #[test]
+    fn stack_schedules_are_valid() {
+        let t = Topology::stack(&[
+            spec(Level::Ring, 2),
+            spec(Level::Butterfly, 2),
+            spec(Level::Ring, 3),
+        ])
+        .unwrap();
+        check_reduce_scatter(t, 12);
+        check_all_gather(t, 12);
+        assert_eq!(t.rs_stages(12), 1 + 1 + 2);
+        assert_eq!(t.max_depth(12), 4);
+        assert_eq!(t.num_levels(), 3);
+        assert_eq!(t.top_level(), 2);
+    }
+
+    #[test]
+    fn stack_validation_and_parse_errors() {
+        // worker count must equal the level-size product
+        let t = LevelStack::parse("ring:2,ring:2,ring:2").map(Topology::Stack).unwrap();
+        assert_eq!(t.validate(8), Ok(()));
+        assert_eq!(
+            t.validate(12),
+            Err(TopologyError::WorkerCountMismatch { n: 12, expect: 8 })
+        );
+        // per-level schedulability checked at construction
+        assert_eq!(
+            Topology::stack(&[spec(Level::Butterfly, 3), spec(Level::Ring, 2)]),
+            Err(TopologyError::NotPowerOfTwo { n: 3 })
+        );
+        assert_eq!(
+            Topology::stack(&[spec(Level::Ring, 2)]),
+            Err(TopologyError::TooFewLevels { levels: 1 })
+        );
+        assert_eq!(
+            Topology::stack(&[spec(Level::Ring, 2); MAX_STACK_LEVELS + 1]),
+            Err(TopologyError::TooManyLevels { levels: MAX_STACK_LEVELS + 1 })
+        );
+        assert!(LevelStack::parse("ring:8,grid:4").is_err());
+        assert!(LevelStack::parse("ring").is_err());
+        assert!(LevelStack::parse("ring:x").is_err());
+        // the error strings are CLI-facing
+        let msg = t.validate(12).unwrap_err().to_string();
+        assert!(msg.contains("exactly 8 workers"), "{msg}");
+    }
+
+    #[test]
+    fn stack_levels_drive_link_classes_and_fanin() {
+        // 2 × 4 × 2 = 16 workers across three tiers
+        let t = Topology::stack(&[
+            spec(Level::Ring, 2),
+            spec(Level::Butterfly, 4),
+            spec(Level::Ring, 2),
+        ])
+        .unwrap();
+        let n = 16;
+        assert_eq!(t.hop_level(0, 1), 0); // same pair
+        assert_eq!(t.hop_level(0, 2), 1); // across pairs, same octet
+        assert_eq!(t.hop_level(0, 8), 2); // across octets
+        assert_eq!(t.link_class(0, 1), LinkClass::Level(0));
+        assert_eq!(t.link_class(0, 2), LinkClass::Level(1));
+        assert_eq!(t.link_class(0, 8), LinkClass::Nic);
+        assert_eq!(t.level_fanin(0, n), 2);
+        assert_eq!(t.level_fanin(1, n), 4);
+        assert_eq!(t.level_fanin(2, n), 2);
+        // every hop of every schedule classifies consistently with the
+        // generic hierarchy classifier
+        let specs = match t {
+            Topology::Stack(ls) => ls.specs().to_vec(),
+            _ => unreachable!(),
+        };
+        for sched in [t.reduce_scatter(n), t.all_gather(n)] {
+            for hops in &sched {
+                for h in hops {
+                    let lvl = hierarchy::hop_level(&specs, h.from, h.to);
+                    assert_eq!(t.hop_level(h.from, h.to) as usize, lvl, "hop {h:?}");
+                }
+            }
+        }
+        // flat and 2-level fanin/top-level sanity
+        assert_eq!(Topology::Ring.top_level(), 0);
+        assert_eq!(Topology::Ring.level_fanin(0, 7), 7);
+        let h = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+        assert_eq!(h.top_level(), 1);
+        assert_eq!(h.level_fanin(0, 16), 4);
+        assert_eq!(h.level_fanin(1, 16), 4);
     }
 }

@@ -38,32 +38,24 @@ enum Msg {
 }
 
 struct Links {
-    tx: Vec<HashMap<u32, Sender<Msg>>>,
+    tx: Vec<HashMap<u32, Sender<(u32, Msg)>>>,
     rx: Vec<Receiver<(u32, Msg)>>,
 }
 
-/// Build a full mesh of tagged channels (receiver demultiplexes by
-/// sender id).
+/// Build a full mesh of tagged channels: every worker holds one clone of
+/// each peer's inbox sender and tags messages with its own rank at send
+/// time (the receiver demultiplexes by that tag). No relay threads — a
+/// 128-worker mesh costs 128 channels, not 128² forwarders, which is what
+/// makes the 128-worker bit-identity tests tractable.
 fn mesh(n: usize) -> Links {
-    let mut tx: Vec<HashMap<u32, Sender<Msg>>> = (0..n).map(|_| HashMap::new()).collect();
+    let mut tx: Vec<HashMap<u32, Sender<(u32, Msg)>>> =
+        (0..n).map(|_| HashMap::new()).collect();
     let mut rx = Vec::with_capacity(n);
     for to in 0..n {
         let (s, r) = channel::<(u32, Msg)>();
         rx.push(r);
-        for (from, map) in tx.iter_mut().enumerate() {
-            let s2 = s.clone();
-            let from = from as u32;
-            // wrap: tag with sender
-            let (raw_s, raw_r) = channel::<Msg>();
-            map.insert(to as u32, raw_s);
-            let fwd = s2;
-            thread::spawn(move || {
-                while let Ok(m) = raw_r.recv() {
-                    if fwd.send((from, m)).is_err() {
-                        break;
-                    }
-                }
-            });
+        for map in tx.iter_mut() {
+            map.insert(to as u32, s.clone());
         }
     }
     Links { tx, rx }
@@ -96,7 +88,7 @@ pub fn threaded_allreduce(
     let links = mesh(n);
 
     let mut handles = Vec::with_capacity(n);
-    let mut txs: Vec<HashMap<u32, Sender<Msg>>> = links.tx;
+    let mut txs: Vec<HashMap<u32, Sender<(u32, Msg)>>> = links.tx;
     let mut rxs: Vec<Receiver<(u32, Msg)>> = links.rx;
     for (w_rev, (grad, mut codec)) in grads.into_iter().zip(codecs).enumerate().rev() {
         // (iterate in reverse so pop() hands out matching ends)
@@ -106,7 +98,7 @@ pub fn threaded_allreduce(
         let rs_sched = rs_sched.clone();
         let ag_sched = ag_sched.clone();
         handles.push(thread::spawn(move || -> Result<WorkerRound> {
-            run_worker(w, n, round, grad, codec.as_mut(), &tx, &rx, &rs_sched, &ag_sched)
+            run_worker(w, n, round, topology, grad, codec.as_mut(), &tx, &rx, &rs_sched, &ag_sched)
         }));
     }
     let mut out: Vec<WorkerRound> = handles
@@ -122,14 +114,23 @@ fn run_worker(
     w: u32,
     n: usize,
     round: u32,
+    topology: Topology,
     grad: Vec<f32>,
     codec: &mut dyn GradCodec,
-    tx: &HashMap<u32, Sender<Msg>>,
+    tx: &HashMap<u32, Sender<(u32, Msg)>>,
     rx: &Receiver<(u32, Msg)>,
     rs_sched: &[Vec<Hop>],
     ag_sched: &[Vec<Hop>],
 ) -> Result<WorkerRound> {
-    let ctx = |summed: u32| HopCtx { worker: w, n_workers: n as u32, round, summed };
+    // Round-boundary / sink / decode contexts ride the broadcast class
+    // (the final sum's nominal budget); per-send contexts carry the hop's
+    // level — both mirror the engine exactly, which is what keeps the two
+    // execution paths bit-identical for level-budgeted codecs.
+    let ctx = |summed: u32| HopCtx::flat(w, n as u32, round, summed).at_broadcast();
+    let hop_ctx = |to: u32| {
+        let level = topology.hop_level(w, to);
+        ctx(1).at_level(level, topology.level_fanin(level, n))
+    };
     // Out-of-phase buffer: a fast peer may already be in reduce-scatter
     // while we still await metadata (butterfly especially) — chunks that
     // arrive early are parked here.
@@ -151,14 +152,14 @@ fn run_worker(
         }
     }
     if (w as usize) < n - 1 {
-        tx[&next].send(Msg::Meta(acc.clone())).map_err(|_| anyhow!("send"))?;
+        tx[&next].send((w, Msg::Meta(acc.clone()))).map_err(|_| anyhow!("send"))?;
     }
     if (w as usize) == n - 1 {
-        tx[&next].send(Msg::Meta(acc.clone())).map_err(|_| anyhow!("send"))?;
+        tx[&next].send((w, Msg::Meta(acc.clone()))).map_err(|_| anyhow!("send"))?;
     } else {
         acc = recv_meta(rx, &mut pending)?;
         if (w as usize) != n - 2 {
-            tx[&next].send(Msg::Meta(acc.clone())).map_err(|_| anyhow!("send"))?;
+            tx[&next].send((w, Msg::Meta(acc.clone()))).map_err(|_| anyhow!("send"))?;
         }
     }
     let agg_meta = acc;
@@ -187,7 +188,7 @@ fn run_worker(
                 &pre,
                 &mut received,
                 range,
-                &ctx(1),
+                &hop_ctx(h.to),
                 &mut scratch,
                 &mut payload,
                 &mut arenas,
@@ -195,7 +196,7 @@ fn run_worker(
             );
             rs_bytes += payload.len() as u64;
             tx[&h.to]
-                .send(Msg::Chunk(0, stage as u32, h.chunk, payload, summed))
+                .send((w, Msg::Chunk(0, stage as u32, h.chunk, payload, summed)))
                 .map_err(|_| anyhow!("send"))?;
         }
         for _ in 0..my_recvs {
@@ -237,7 +238,7 @@ fn run_worker(
                 .clone();
             ag_bytes += payload.len() as u64;
             tx[&h.to]
-                .send(Msg::Chunk(1, stage as u32, h.chunk, payload, summed))
+                .send((w, Msg::Chunk(1, stage as u32, h.chunk, payload, summed)))
                 .map_err(|_| anyhow!("send"))?;
         }
         for _ in 0..my_recvs {

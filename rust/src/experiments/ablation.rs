@@ -51,7 +51,7 @@ pub fn sweep_group_sizes(ctx: &Ctx) -> Result<()> {
         let cfg = DynamiqConfig { layout: GroupLayout::new(s, sg), ..Default::default() };
         let overhead = cfg.scale_overhead_bits();
         let mut c = Dynamiq::new(cfg);
-        let hop = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let hop = HopCtx::flat(0, 1, 0, 1);
         let meta = c.metadata(&grad, &hop);
         let pre = c.begin_round(&grad, &meta, &hop);
         let bytes = c.compress(&pre, 0..pre.len(), &hop);

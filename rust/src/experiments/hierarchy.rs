@@ -1,7 +1,11 @@
 //! Hierarchical-topology sweep: aggregation depth × worker count ×
-//! intra/inter bandwidth ratio × codec, over 2-level hierarchies (plus the
-//! flat baselines) at n = 32 and the 128-worker regime (16 × 8) the
-//! ROADMAP calls out.
+//! intra/inter bandwidth ratio × codec, over 2-level hierarchies and
+//! 3-level stacks (plus the flat baselines) at n = 32 and the 128-worker
+//! regime (16 × 8) the ROADMAP calls out — plus the per-level-budget
+//! dimension: DynamiQ with topology-aware bit allocation (more bits on
+//! the few, deep NIC-tier partial sums, fewer on the numerous NVLink
+//! hops, broadcast pinned at the nominal budget) vs the uniform budget
+//! at equal predicted mean wire bytes.
 //!
 //! The axis the paper cannot reach with flat schedules: partial sums grow
 //! along the aggregation path, so a topology's *depth* (requantization
@@ -22,8 +26,9 @@
 use anyhow::Result;
 
 use super::Ctx;
-use crate::codec::{make_codecs, ScratchPool};
-use crate::collective::{AllReduceEngine, Level, NetworkModel, RoundReport, Topology};
+use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
+use crate::codec::{make_codecs, GradCodec, ScratchPool};
+use crate::collective::{AllReduceEngine, Level, LevelSpec, NetworkModel, RoundReport, Topology};
 use crate::util::benchkit::Table;
 use crate::util::json::Json;
 use crate::util::par;
@@ -47,11 +52,22 @@ fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
+/// An explicit 3-level stack (node / rack / pod), innermost tier first.
+fn stack3(l0: (Level, usize), l1: (Level, usize), l2: (Level, usize)) -> Topology {
+    Topology::stack(&[
+        LevelSpec { topo: l0.0, size: l0.1 },
+        LevelSpec { topo: l1.0, size: l1.1 },
+        LevelSpec { topo: l2.0, size: l2.1 },
+    ])
+    .expect("static level stacks are valid")
+}
+
 /// The swept (topology, workers) cases: flat baselines plus 2-level
 /// compositions chosen for their depth spread (5 … 31 requantizations at
 /// n = 32), then the 128-worker hierarchies (16 nodes × 8 workers and
 /// 8 × 16) that chart vNMSE growth vs depth in the regime flat ring
-/// schedules cannot reach.
+/// schedules cannot reach, and 3-level stacks exercising the third link
+/// tier end-to-end.
 fn swept_cases() -> Vec<(Topology, usize)> {
     vec![
         (Topology::Ring, 32),
@@ -61,11 +77,26 @@ fn swept_cases() -> Vec<(Topology, usize)> {
         (Topology::hierarchical(Level::Ring, Level::Butterfly, 8), 32),
         (Topology::hierarchical(Level::Ring, Level::Ring, 8), 32),
         (Topology::hierarchical(Level::Butterfly, Level::Ring, 2), 32),
+        (stack3((Level::Ring, 4), (Level::Ring, 4), (Level::Ring, 2)), 32),
         (Topology::Butterfly, 128),
         (Topology::hierarchical(Level::Ring, Level::Butterfly, 8), 128),
         (Topology::hierarchical(Level::Butterfly, Level::Butterfly, 8), 128),
         (Topology::hierarchical(Level::Ring, Level::Ring, 16), 128),
+        (stack3((Level::Ring, 8), (Level::Ring, 4), (Level::Butterfly, 4)), 128),
     ]
+}
+
+/// The network shape for a case: a geometric bandwidth ladder over the
+/// private tiers, scaled so the innermost tier runs `ratio`× the NIC
+/// (reduces to `hierarchical_100g(ratio)` for 2-level hierarchies, and to
+/// the isolated NIC for flat baselines).
+fn net_for(topo: &Topology, ratio: f64) -> NetworkModel {
+    let tiers = topo.num_levels() - 1;
+    if tiers == 0 {
+        NetworkModel::isolated_100g()
+    } else {
+        NetworkModel::tiered_100g(&NetworkModel::geometric_ladder(ratio, tiers))
+    }
 }
 
 /// One grid point of a case: fixed inputs plus the computed report.
@@ -106,8 +137,7 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
             .collect();
         par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
             let mut codecs = make_codecs(cell.scheme, n);
-            let mut eng =
-                AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(cell.ratio));
+            let mut eng = AllReduceEngine::new(topo, net_for(&topo, cell.ratio));
             eng.threads = engine_threads;
             let mut pool = ScratchPool::new();
             let mut last = None;
@@ -146,7 +176,128 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
             ]));
         }
     }
-    let body = table.render();
+    let mut body = table.render();
     println!("{body}");
+
+    // ---- per-level-budget dimension (DynamiQ only) ----
+    //
+    // The co-design the paper motivates: partial sums crossing the NIC
+    // tier aggregate whole-node subtrees yet ride few hops, so shift
+    // quantizer bits onto the top level's reduce-scatter hops and take
+    // the byte-balancing amount off the cheap, numerous private-tier
+    // hops (the broadcast payload keeps the nominal budget) — equal
+    // predicted mean wire bytes, lower vNMSE.
+    let budget_cases: Vec<(Topology, usize)> = vec![
+        (Topology::hierarchical(Level::Ring, Level::Butterfly, 8), 128),
+        (Topology::hierarchical(Level::Ring, Level::Ring, 16), 128),
+        (stack3((Level::Ring, 8), (Level::Ring, 4), (Level::Butterfly, 4)), 128),
+        (Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 32),
+    ];
+    let mut btable = Table::new(&[
+        "topology", "n", "budgets", "wire MB", "Δwire", "comm ms", "vNMSE", "ΔvNMSE",
+    ]);
+    let ratio = 48.0;
+    for &(topo, n) in &budget_cases {
+        topo.validate(n)?;
+        let g = grads(n, d, 0xB1D_0 + n as u64);
+        let (base_bits, budgets) = level_budgets_for(&topo, n, 5.0, 1.5, d);
+        let labels = [String::from("uniform"), budget_label(base_bits, &budgets)];
+        let mut cells: Vec<((f64, Vec<f64>), Option<RoundReport>)> =
+            vec![((5.0, Vec::new()), None), ((base_bits, budgets), None)];
+        par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
+            let cfg = DynamiqConfig {
+                budget_bits: cell.0 .0,
+                level_budgets: cell.0 .1.clone(),
+                ..Default::default()
+            };
+            let mut codecs: Vec<Box<dyn GradCodec>> =
+                (0..n).map(|_| Box::new(Dynamiq::new(cfg.clone())) as Box<dyn GradCodec>).collect();
+            let mut eng = AllReduceEngine::new(topo, net_for(&topo, ratio));
+            eng.threads = engine_threads;
+            let mut pool = ScratchPool::new();
+            let mut last = None;
+            for round in 0..rounds {
+                match eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool) {
+                    Ok((_, rep)) => last = Some(rep),
+                    Err(e) => unreachable!("validated up front: {e}"),
+                }
+            }
+            cell.1 = last;
+        });
+        let base = cells[0].1.as_ref().expect("at least one round").clone();
+        for (label, (_, rep)) in labels.iter().zip(&cells) {
+            let rep = rep.as_ref().expect("at least one round");
+            let dwire = rep.total_bytes() as f64 / base.total_bytes() as f64 - 1.0;
+            let dvnmse = rep.vnmse / base.vnmse - 1.0;
+            btable.row(vec![
+                topo.name(),
+                n.to_string(),
+                label.clone(),
+                format!("{:.2}", rep.total_bytes() as f64 / 1e6),
+                format!("{:+.1}%", dwire * 100.0),
+                format!("{:.3}", rep.comm_time_s() * 1e3),
+                format!("{:.2e}", rep.vnmse),
+                format!("{:+.1}%", dvnmse * 100.0),
+            ]);
+            json.push(Json::obj(vec![
+                ("topology", Json::Str(topo.name())),
+                ("n", Json::Num(n as f64)),
+                ("scheme", Json::Str("DynamiQ".into())),
+                ("budgets", Json::Str(label.clone())),
+                ("bw_ratio", Json::Num(ratio)),
+                ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+                ("comm_time_s", Json::Num(rep.comm_time_s())),
+                ("overflow_events", Json::Num(rep.overflow_events as f64)),
+                ("vnmse", Json::Num(rep.vnmse)),
+            ]));
+        }
+    }
+    let bbody = btable.render();
+    println!("{bbody}");
+    body.push('\n');
+    body.push_str(&bbody);
     ctx.save("hier_sweep", &body, Some(Json::Arr(json)))
+}
+
+/// Human-readable label for a levelled budget configuration.
+fn budget_label(base_bits: f64, budgets: &[f64]) -> String {
+    let parts: Vec<String> = budgets.iter().map(|b| format!("{b:.2}")).collect();
+    format!("lb={} bc={base_bits:.2}", parts.join("/"))
+}
+
+/// A levelled budget configuration `(budget_bits, level_budgets)` at
+/// equal predicted mean wire bytes vs the uniform `base`: count the
+/// reduce-scatter hops riding each level, shift `delta` bits/entry onto
+/// the top tier's few, deep partial sums and take the byte-balancing
+/// amount off the numerous private-tier hops; the broadcast payload
+/// (forwarded n−1 times in the all-gather — boosting it buys the least
+/// noise per byte, see the codec docs) keeps the base budget. Every
+/// budget is then shaved by the width-header overhead the levelled wire
+/// format adds per payload.
+fn level_budgets_for(topo: &Topology, n: usize, base: f64, delta: f64, d: usize) -> (f64, Vec<f64>) {
+    let top = topo.top_level() as usize;
+    assert!(
+        top > 0,
+        "per-level budgets need a multi-level topology; {} has a single tier",
+        topo.name()
+    );
+    let mut rs_hops = vec![0f64; top + 1];
+    for hops in &topo.reduce_scatter(n) {
+        for h in hops {
+            rs_hops[topo.hop_level(h.from, h.to) as usize] += 1.0;
+        }
+    }
+    let low: f64 = rs_hops[..top].iter().sum();
+    let take = delta * rs_hops[top] / low;
+    // width header: one code per super-group plus a 1-byte budget tag per
+    // chunk payload — derived from the codec config the sweep runs, so
+    // the equal-wire shave tracks the actual wire format
+    let cfg = DynamiqConfig::default();
+    let sg = cfg.layout.super_group as f64;
+    let code_bits = cfg.width_code_bits() as f64;
+    let sg_per_chunk = ((d as f64 / n as f64) / sg).max(1.0);
+    let hdr = (code_bits * sg_per_chunk + 8.0) / (sg_per_chunk * sg);
+    let mut budgets = vec![base - take - hdr; top + 1];
+    budgets[top] = base + delta - hdr;
+    (base - hdr, budgets)
 }

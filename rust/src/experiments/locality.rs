@@ -113,7 +113,7 @@ pub fn fig12_nonuniform_vs_uniform(ctx: &Ctx) -> Result<()> {
     for uniform in [false, true] {
         let cfg = DynamiqConfig { uniform_values: uniform, ..Default::default() };
         let mut c = Dynamiq::new(cfg);
-        let hop = HopCtx { worker: 0, n_workers: 1, round: 0, summed: 1 };
+        let hop = HopCtx::flat(0, 1, 0, 1);
         let meta = c.metadata(&grad, &hop);
         let pre = c.begin_round(&grad, &meta, &hop);
         let bytes = c.compress(&pre, 0..pre.len(), &hop);

@@ -28,15 +28,28 @@
 //!
 //! [`collective::Topology::Hierarchical`] composes per-level flat
 //! topologies (e.g. ring inside each node, butterfly across nodes) into a
-//! multi-level aggregation arborescence; [`collective::hierarchy`] is the
-//! generic schedule builder, and [`collective::NetworkModel::links`]
-//! prices intra-node hops on private NVLink-class tiers while inter-node
-//! hops keep the contended NIC. CLI: `dynamiq train --topology hier
+//! multi-level aggregation arborescence; [`collective::Topology::Stack`]
+//! exposes explicit 3+-tier stacks (`--levels ring:8,butterfly:4,ring:2`);
+//! [`collective::hierarchy`] is the generic schedule builder, and
+//! [`collective::NetworkModel::links`] prices below-top hops on private
+//! NVLink/rack-class tiers while the top level keeps the contended NIC.
+//! [`codec::dynamiq::DynamiqConfig::level_budgets`] co-designs the
+//! quantizer with the topology: per-level bit budgets for partial-sum
+//! hops (selected via [`codec::HopCtx::level`], self-described on the
+//! wire by a width header). CLI: `dynamiq train --topology hier
 //! --intra ring --inter butterfly --workers-per-node 4 --intra-bw-ratio
 //! 48`, and `dynamiq repro --id hier` regenerates the depth ×
-//! bandwidth-ratio × codec sweep ([`experiments::hierarchy`]).
+//! bandwidth-ratio × codec sweep plus the uniform-vs-levelled budget
+//! comparison ([`experiments::hierarchy`]).
 //!
 //! See DESIGN.md for the system inventory and experiment index.
+
+// Clippy adoption (PR 3): CI gates `clippy --all-targets -- -D warnings`.
+// The two allowances below are shape/style lints that fire across the
+// pre-existing kernel loops (explicit indices mirror the pallas kernels
+// they are byte-compatible with); burn down separately, never add
+// correctness lints here.
+#![allow(clippy::needless_range_loop, clippy::type_complexity)]
 
 pub mod codec;
 pub mod collective;

@@ -12,12 +12,23 @@
 //!   --topology ring|butterfly|hier  --rounds N  --shared-network
 //!   --threaded (use the thread-per-worker coordinator for the all-reduce)
 //!
+//! Scheme suffixes: DynamiQ:b=4 (uniform budget), DynamiQ:lb=4.5,6
+//! (per-hierarchy-level budgets, innermost tier first).
+//!
 //! Hierarchical topology flags (with --topology hier):
 //!   --intra ring|butterfly    per-node level (default ring)
 //!   --inter ring|butterfly    cross-node level (default ring)
 //!   --workers-per-node N      node size (default 2; must divide --workers)
 //!   --intra-bw-ratio R        intra-node link speedup over the NIC
 //!                             (default 48 ≈ NVLink 600 GB/s : 100 Gbps)
+//!
+//! Explicit level stacks (3+ tiers; overrides --topology):
+//!   --levels ring:8,butterfly:4,ring:2
+//!                             per-level topo:size, innermost (node) tier
+//!                             first; --workers must equal the size product
+//!   --level-bw-ratios R0,R1   private-tier bandwidth over the NIC, one
+//!                             per tier below the top (default: a
+//!                             geometric ladder from --intra-bw-ratio)
 
 use dynamiq::collective::{Level, Topology};
 use dynamiq::experiments::{run, run_all, Ctx, ALL_IDS};
@@ -79,6 +90,11 @@ fn parse_level(args: &[String], flag: &str) -> anyhow::Result<Level> {
 }
 
 fn parse_topology(args: &[String]) -> anyhow::Result<Topology> {
+    if let Some(spec) = flag_value(args, "--levels") {
+        let ls = dynamiq::collective::LevelStack::parse(&spec)
+            .map_err(|e| anyhow::anyhow!("--levels {spec}: {e}"))?;
+        return Ok(Topology::Stack(ls));
+    }
     match flag_value(args, "--topology").as_deref() {
         None | Some("ring") => Ok(Topology::Ring),
         Some("butterfly") => Ok(Topology::Butterfly),
@@ -112,6 +128,16 @@ fn train(args: &[String]) -> anyhow::Result<()> {
         intra_bw_ratio: flag_value(args, "--intra-bw-ratio")
             .and_then(|v| v.parse().ok())
             .unwrap_or(48.0),
+        level_bw_ratios: match flag_value(args, "--level-bw-ratios") {
+            None => Vec::new(),
+            Some(v) => v
+                .split(',')
+                .map(|r| r.parse::<f64>())
+                .collect::<Result<_, _>>()
+                .map_err(|_| {
+                    anyhow::anyhow!("--level-bw-ratios must be comma-separated numbers, got {v}")
+                })?,
+        },
         ..Default::default()
     };
     if !(cfg.intra_bw_ratio > 0.0 && cfg.intra_bw_ratio.is_finite()) {

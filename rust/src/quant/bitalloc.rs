@@ -208,11 +208,19 @@ impl FastAllocator {
             (-512.0, 512.0)
         };
         // Widen until bracketing (log2 F can be far out for extreme data).
+        // Step additively away from the warm window: doubling the edge
+        // value itself diverges on the wrong side of zero (a warm `u > 8`
+        // with a budget now below the warm one would loop `lo *= 2`
+        // forever *increasing* the bit count).
+        let mut step = 16.0;
         while self.bits_with(f, sg_entries, hi) as f64 <= budget && hi < 1e6 {
-            hi *= 2.0;
+            hi += step;
+            step *= 2.0;
         }
+        step = 16.0;
         while self.bits_with(f, sg_entries, lo) as f64 > budget && lo > -1e6 {
-            lo *= 2.0;
+            lo -= step;
+            step *= 2.0;
         }
         for _ in 0..iters {
             let mid = 0.5 * (lo + hi);

@@ -12,7 +12,7 @@ pub mod data;
 use anyhow::{anyhow, Result};
 
 use crate::codec::{make_codecs, GradCodec, ScratchPool};
-use crate::collective::{AllReduceEngine, LinkSpec, NetworkModel, RoundReport, Topology};
+use crate::collective::{AllReduceEngine, NetworkModel, RoundReport, Topology};
 use crate::metrics::{ComputeModel, RoundTime, TtaCurve};
 use crate::runtime::exec::{lit_f32, lit_i32, scalar_f32, to_f32};
 use crate::runtime::{Manifest, Runtime};
@@ -28,6 +28,10 @@ pub struct TrainConfig {
     /// intra-node link bandwidth as a multiple of the NIC (only used by
     /// hierarchical topologies; 48 ≈ NVLink 600 GB/s over 100 Gbps)
     pub intra_bw_ratio: f64,
+    /// explicit per-private-tier bandwidth ratios for 3+-level stacks,
+    /// innermost tier first (one entry per level below the top); empty →
+    /// a geometric ladder derived from `intra_bw_ratio`
+    pub level_bw_ratios: Vec<f64>,
     pub rounds: u32,
     /// initial LR; LinearLR decays to `lr * end_factor` over
     /// `lr_total_iters` rounds (Table 1's schedule shape)
@@ -49,6 +53,7 @@ impl Default for TrainConfig {
             topology: Topology::Ring,
             shared_network: false,
             intra_bw_ratio: 48.0,
+            level_bw_ratios: Vec::new(),
             rounds: 100,
             lr: 3e-3,
             lr_end_factor: 1.0 / 8.0,
@@ -128,18 +133,36 @@ impl Trainer {
         // which is not the operating point the paper studies.
         const PAPER_GRAD_BYTES: f64 = 2.0 * 650e6;
         net.bandwidth_bps *= (2.0 * entry.d as f64) / PAPER_GRAD_BYTES;
-        if matches!(cfg.topology, Topology::Hierarchical(_)) {
+        let private_tiers = cfg.topology.num_levels() - 1;
+        if private_tiers > 0 {
             anyhow::ensure!(
                 cfg.intra_bw_ratio > 0.0 && cfg.intra_bw_ratio.is_finite(),
                 "intra_bw_ratio must be positive, got {}",
                 cfg.intra_bw_ratio
             );
-            // intra-node hops ride private links `intra_bw_ratio`× the
-            // (scaled) NIC; inter-node hops keep the contended NIC model
-            net.links = vec![LinkSpec {
-                bandwidth_bps: net.bandwidth_bps * cfg.intra_bw_ratio,
-                latency_s: 1e-6,
-            }];
+            // tiers below the top ride private links faster than the
+            // (scaled) NIC; the top level keeps the contended NIC model.
+            // Explicit per-tier ratios when given, else a geometric ladder
+            // from intra_bw_ratio (one tier → exactly the old NVLink shape)
+            let ratios = if cfg.level_bw_ratios.is_empty() {
+                NetworkModel::geometric_ladder(cfg.intra_bw_ratio, private_tiers)
+            } else {
+                anyhow::ensure!(
+                    cfg.level_bw_ratios.len() == private_tiers,
+                    "level_bw_ratios needs one entry per private tier ({private_tiers}), got {}",
+                    cfg.level_bw_ratios.len()
+                );
+                for &r in &cfg.level_bw_ratios {
+                    anyhow::ensure!(
+                        r > 0.0 && r.is_finite(),
+                        "level_bw_ratios must be positive, got {r}"
+                    );
+                }
+                cfg.level_bw_ratios.clone()
+            };
+            // single source of the ratio → LinkSpec mapping (against the
+            // already-rescaled NIC bandwidth)
+            net.set_tier_ratios(&ratios);
         }
         let engine = AllReduceEngine::new(cfg.topology, net);
         let codecs = make_codecs(&cfg.scheme, cfg.n_workers);

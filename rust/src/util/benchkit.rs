@@ -228,7 +228,7 @@ impl Table {
         };
         out.push_str(&fmt_row(&self.header, &w));
         out.push('\n');
-        out.push_str("|");
+        out.push('|');
         for wi in &w {
             out.push_str(&format!("{}|", "-".repeat(wi + 2)));
         }

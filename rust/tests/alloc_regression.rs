@@ -43,7 +43,7 @@ fn setup_round(
         .iter_mut()
         .enumerate()
         .map(|(w, c)| {
-            c.metadata(&grads[w], &HopCtx { worker: w as u32, n_workers: n, round, summed: 1 })
+            c.metadata(&grads[w], &HopCtx::flat(w as u32, n, round, 1))
         })
         .collect();
     let op = codecs[0].metadata_op();
@@ -63,7 +63,7 @@ fn setup_round(
             c.begin_round(
                 &grads[w],
                 &agg,
-                &HopCtx { worker: w as u32, n_workers: n, round, summed: 1 },
+                &HopCtx::flat(w as u32, n, round, 1),
             )
         })
         .collect()
@@ -84,8 +84,8 @@ fn warm_kernels_allocate_zero_bytes() {
             (0..2).map(|_| make_codec(scheme)).collect();
         let pres = setup_round(&mut codecs, &grads, 0);
         let r = 0..pres[0].len();
-        let ctx_a = HopCtx { worker: 0, n_workers: 2, round: 0, summed: 1 };
-        let ctx_b = HopCtx { worker: 1, n_workers: 2, round: 0, summed: 1 };
+        let ctx_a = HopCtx::flat(0, 2, 0, 1);
+        let ctx_b = HopCtx::flat(1, 2, 0, 1);
 
         // warm every reusable buffer once
         let mut wire = Vec::new();
@@ -164,7 +164,7 @@ fn steady_state_ring_hop_chain_allocates_zero_bytes() {
                     }
                     None => Vec::new(),
                 };
-                let ctx = HopCtx { worker: w, n_workers: n as u32, round, summed: 1 };
+                let ctx = HopCtx::flat(w, n as u32, round, 1);
                 let summed = produce_hop(
                     codecs[w as usize].as_ref(),
                     &pres[w as usize],

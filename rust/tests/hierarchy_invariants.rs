@@ -8,8 +8,11 @@
 
 use std::collections::{HashMap, HashSet};
 
-use dynamiq::codec::make_codecs;
-use dynamiq::collective::{AllReduceEngine, Level, LinkClass, NetworkModel, Topology};
+use dynamiq::codec::dynamiq::{Dynamiq, DynamiqConfig};
+use dynamiq::codec::{make_codecs, GradCodec};
+use dynamiq::collective::{
+    AllReduceEngine, Level, LevelSpec, LinkClass, NetworkModel, Topology,
+};
 use dynamiq::coordinator::threaded_allreduce;
 use dynamiq::util::proptest::Prop;
 use dynamiq::util::rng::Pcg;
@@ -210,6 +213,121 @@ fn engine_and_coordinator_bit_identical_on_hierarchies() {
             }
             Ok(())
         },
+    );
+}
+
+fn spec(topo: Level, size: usize) -> LevelSpec {
+    LevelSpec { topo, size }
+}
+
+#[test]
+fn stack_schedules_are_valid_arborescences() {
+    // 3-level stacks through the same invariants as the 2-level property
+    // tests, including the 128-worker (8 × 4 × 4) shape the budget sweep
+    // uses
+    for (levels, n) in [
+        (vec![spec(Level::Ring, 2), spec(Level::Butterfly, 2), spec(Level::Ring, 3)], 12),
+        (vec![spec(Level::Ring, 4), spec(Level::Ring, 4), spec(Level::Ring, 2)], 32),
+        (vec![spec(Level::Ring, 8), spec(Level::Ring, 4), spec(Level::Butterfly, 4)], 128),
+    ] {
+        let topo = Topology::stack(&levels).unwrap();
+        check_reduce_scatter(&topo, n).unwrap();
+        check_all_gather(&topo, n).unwrap();
+        // link classes: below-top levels ride private tiers, top rides NIC
+        let top = topo.top_level();
+        for sched in [topo.reduce_scatter(n), topo.all_gather(n)] {
+            for hops in &sched {
+                for h in hops {
+                    let lvl =
+                        dynamiq::collective::hierarchy::hop_level(&levels, h.from, h.to) as u8;
+                    assert_eq!(topo.hop_level(h.from, h.to), lvl, "hop {h:?}");
+                    let want =
+                        if lvl >= top { LinkClass::Nic } else { LinkClass::Level(lvl) };
+                    assert_eq!(topo.link_class(h.from, h.to), want, "hop {h:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_and_coordinator_bit_identical_at_128_workers_with_level_budgets() {
+    // the acceptance shape: a 3-level 128-worker stack, DynamiQ with
+    // non-uniform per-level budgets, end-to-end through both execution
+    // paths with bit-identical aggregated gradients
+    let topo = Topology::stack(&[
+        spec(Level::Ring, 8),
+        spec(Level::Ring, 4),
+        spec(Level::Butterfly, 4),
+    ])
+    .unwrap();
+    let n = 128;
+    let d = 1 << 15; // one 256-entry super-group per chunk
+    let g: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(0xCAFE ^ ((i as u64) << 9));
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.02);
+            v
+        })
+        .collect();
+    let cfg = DynamiqConfig {
+        budget_bits: 5.0,
+        level_budgets: vec![4.4, 4.9, 6.4],
+        ..DynamiqConfig::default()
+    };
+    let mk = || -> Vec<Box<dyn GradCodec>> {
+        (0..n).map(|_| Box::new(Dynamiq::new(cfg.clone())) as Box<dyn GradCodec>).collect()
+    };
+    let mut eng_codecs = mk();
+    let mut eng = AllReduceEngine::new(
+        topo,
+        NetworkModel::tiered_100g(&NetworkModel::geometric_ladder(48.0, 2)),
+    );
+    eng.verify_consistency = true;
+    let (expect, rep) = eng.run(&g, &mut eng_codecs, 3, 0.0).unwrap();
+    assert!(rep.vnmse.is_finite() && rep.vnmse < 0.2, "vNMSE {}", rep.vnmse);
+    let out = threaded_allreduce(topo, g, mk(), 3).unwrap();
+    for wr in &out {
+        assert_eq!(
+            wr.aggregated, expect,
+            "worker {} diverged from engine under level budgets",
+            wr.worker
+        );
+    }
+}
+
+#[test]
+fn uniform_level_budget_matches_empty_on_the_engine_path() {
+    // pin: `level_budgets: []` and an all-equal levelled config decode to
+    // the identical aggregated gradient through the engine (wire differs
+    // only by headers, which decode strips)
+    let topo = Topology::hierarchical(Level::Ring, Level::Butterfly, 4);
+    let n = 16;
+    let d = 8192;
+    let g: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(31 + i as u64);
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.01);
+            v
+        })
+        .collect();
+    let run_with = |level_budgets: Vec<f64>| {
+        let cfg = DynamiqConfig { level_budgets, ..DynamiqConfig::default() };
+        let mut codecs: Vec<Box<dyn GradCodec>> =
+            (0..n).map(|_| Box::new(Dynamiq::new(cfg.clone())) as Box<dyn GradCodec>).collect();
+        let eng = AllReduceEngine::new(topo, NetworkModel::hierarchical_100g(48.0));
+        let (out, rep) = eng.run(&g, &mut codecs, 2, 0.0).unwrap();
+        (out, rep.rs_bytes)
+    };
+    let (plain, plain_bytes) = run_with(Vec::new());
+    let b = DynamiqConfig::default().budget_bits;
+    let (levelled, levelled_bytes) = run_with(vec![b, b]);
+    assert_eq!(plain, levelled, "equal budgets must aggregate bit-identically");
+    assert!(
+        levelled_bytes > plain_bytes,
+        "levelled wire must differ exactly by the added headers: {levelled_bytes} vs {plain_bytes}"
     );
 }
 

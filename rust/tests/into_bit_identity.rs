@@ -6,11 +6,20 @@
 //! engine exactly.
 
 use dynamiq::codec::{make_codec, GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
-use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, Topology};
+use dynamiq::collective::{AllReduceEngine, Level, LevelSpec, NetworkModel, Topology};
 use dynamiq::util::rng::Pcg;
 
-const SCHEMES: &[&str] =
-    &["BF16", "DynamiQ", "DynamiQ:b=4", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
+const SCHEMES: &[&str] = &[
+    "BF16",
+    "DynamiQ",
+    "DynamiQ:b=4",
+    "DynamiQ:lb=4,6",
+    "MXFP8",
+    "MXFP6",
+    "MXFP4",
+    "THC",
+    "OmniReduce",
+];
 
 fn grad(d: usize, seed: u64) -> Vec<f32> {
     let mut rng = Pcg::new(seed);
@@ -36,8 +45,8 @@ fn setup(
     let gb = grad(d, 202);
     let mut ca = make_codec(scheme);
     let mut cb = make_codec(scheme);
-    let ctx_a = HopCtx { worker: 0, n_workers: 2, round, summed: 1 };
-    let ctx_b = HopCtx { worker: 1, n_workers: 2, round, summed: 1 };
+    let ctx_a = HopCtx::flat(0, 2, round, 1);
+    let ctx_b = HopCtx::flat(1, 2, round, 1);
     let ma = ca.metadata(&ga, &ctx_a);
     let mb = cb.metadata(&gb, &ctx_b);
     let agg: Vec<f32> = match ca.metadata_op() {
@@ -83,9 +92,8 @@ fn into_paths_match_legacy_vec_paths_with_dirty_buffers() {
 
             // -- fused DAR: legacy wrapper vs _into with poisoned scratch
             let fused = cb.decompress_accumulate_recompress(&wire, &pb[r.clone()], r.clone(), &ctx_b);
-            let mut scratch = WorkerScratch::default();
-            scratch.slab = vec![123.456f32; 77];
-            scratch.acc = vec![-9.0f32; 33];
+            let mut scratch =
+                WorkerScratch { slab: vec![123.456f32; 77], acc: vec![-9.0f32; 33] };
             let mut out2 = vec![0xCDu8; 4096];
             out2.clear();
             cb.decompress_accumulate_recompress_into(
@@ -118,6 +126,41 @@ fn into_paths_match_legacy_vec_paths_with_dirty_buffers() {
 }
 
 #[test]
+fn empty_level_budgets_pin_the_uniform_wire_format() {
+    // `level_budgets: []` (the default) must reproduce the pre-level
+    // codec byte-for-byte: no width header, and bytes independent of the
+    // hop level / broadcast class the engine now threads through HopCtx.
+    let d = 4096;
+    let (ca, _cb, pa, _pb, ctx_a, _ctx_b) = setup("DynamiQ", d, 1);
+    let r = 0..pa.len();
+    let plain = ca.compress(&pa[r.clone()], r.clone(), &ctx_a);
+    for level in [1u8, 7] {
+        assert_eq!(
+            ca.compress(&pa[r.clone()], r.clone(), &ctx_a.at_level(level, 8)),
+            plain,
+            "uniform codec must ignore ctx.level"
+        );
+    }
+    assert_eq!(
+        ca.compress(&pa[r.clone()], r.clone(), &ctx_a.at_broadcast()),
+        plain,
+        "uniform codec must ignore the broadcast class"
+    );
+    // a levelled codec with every budget equal to the uniform one must
+    // solve the identical allocation: its wire differs from the uniform
+    // codec's exactly by the self-describing width-header prefix
+    let (cl, _, pl, _, ctx_l, _) = setup("DynamiQ:lb=5,5", d, 1);
+    assert_eq!(pl, pa, "preprocessing must not depend on level budgets");
+    let levelled = cl.compress(&pl[r.clone()], r.clone(), &ctx_l);
+    assert!(levelled.len() > plain.len());
+    assert_eq!(
+        &levelled[levelled.len() - plain.len()..],
+        &plain[..],
+        "identical budgets must yield identical super-group payloads"
+    );
+}
+
+#[test]
 fn warm_buffer_reuse_across_rounds_is_clean() {
     // the same scratch/out buffers carried across rounds (the engine's
     // steady state) must not leak state between payloads
@@ -146,10 +189,19 @@ fn warm_buffer_reuse_across_rounds_is_clean() {
 
 #[test]
 fn pooled_parallel_engine_matches_fresh_sequential_engine() {
+    let stack3 = Topology::stack(&[
+        LevelSpec { topo: Level::Ring, size: 4 },
+        LevelSpec { topo: Level::Ring, size: 4 },
+        LevelSpec { topo: Level::Ring, size: 2 },
+    ])
+    .unwrap();
     for (scheme, topo, n) in [
         ("DynamiQ", Topology::Ring, 4),
         ("OmniReduce", Topology::Butterfly, 8),
         ("MXFP8", Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+        // per-level budgets across a 3-tier stack: the width header and
+        // per-level width sets must be thread- and pool-invariant too
+        ("DynamiQ:lb=4,4.5,6", stack3, 32),
     ] {
         let g: Vec<Vec<f32>> = (0..n).map(|i| grad(6000, 7 + i as u64)).collect();
         let run_with = |threads: usize, pooled: bool| {
