@@ -3,7 +3,12 @@
 //! Table 2 / Fig 6 story: fused kernels keep intermediates out of "HBM" —
 //! here, off the heap: the fused lane runs `_into` kernels against warm
 //! pooled buffers, the unfused lane is the legacy three-pass
-//! decompress → add → compress with fresh `Vec`s per pass).
+//! decompress → add → compress with fresh `Vec`s per pass) — and the
+//! scalar-vs-vectorized kernel ablation: every kernel is measured in
+//! [`KernelMode::Vectorized`] (the default lane-batched inner loops;
+//! these are the gated lanes) and again in [`KernelMode::Scalar`]
+//! (`*-scalar` lanes, informational), with a byte-equality cross-check
+//! so a lane that drifted off the reference can never post a number.
 //!
 //!     cargo bench --bench codec_throughput
 //!
@@ -12,7 +17,7 @@
 //! `BENCH_QUICK=1` for the CI smoke configuration (smaller vector, fewer
 //! samples).
 
-use dynamiq::codec::{make_codec, GradCodec, HopCtx, MetaOp, WorkerScratch};
+use dynamiq::codec::{make_codec, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use dynamiq::util::benchkit::{Bench, BenchLog};
 use dynamiq::util::rng::Pcg;
 
@@ -68,30 +73,63 @@ fn main() {
         let mut dec = vec![0.0f32; pre.len()];
         let mut scratch = WorkerScratch::default();
 
-        let res = bench.run(&format!("{scheme}/compress"), Some(bytes), || {
-            out.clear();
-            codec.compress_into(&pre[r.clone()], r.clone(), &hop, &mut out);
-            std::hint::black_box(out.len());
-        });
-        log.push(scheme, "compress", entries, &res);
-        let res = bench.run(&format!("{scheme}/decompress"), Some(bytes), || {
-            codec.decompress_into(&wire, r.clone(), &hop, &mut dec);
-            std::hint::black_box(dec.len());
-        });
-        log.push(scheme, "decompress", entries, &res);
-        let res = bench.run(&format!("{scheme}/fused-dar"), Some(bytes), || {
-            out.clear();
-            codec_b.decompress_accumulate_recompress_into(
-                &wire,
-                &pre_b[r.clone()],
-                r.clone(),
-                &hop,
-                &mut scratch,
-                &mut out,
-            );
-            std::hint::black_box(out.len());
-        });
-        log.push(scheme, "fused-dar", entries, &res);
+        // cross-check before timing anything: the scalar reference and
+        // the vectorized lanes must agree bit-for-bit on every measured
+        // kernel — compress wire, decode values, fused-DAR wire — so a
+        // lane that drifted off the reference can never post a number
+        {
+            let fused =
+                codec_b.decompress_accumulate_recompress(&wire, &pre_b[r.clone()], r.clone(), &hop);
+            let decoded = codec.decompress(&wire, r.clone(), &hop);
+            codec.set_kernel_mode(KernelMode::Scalar);
+            codec_b.set_kernel_mode(KernelMode::Scalar);
+            let wire_s = codec.compress(&pre[r.clone()], r.clone(), &hop);
+            assert_eq!(wire_s, wire, "{scheme}: scalar/vectorized compress divergence");
+            let decoded_s = codec.decompress(&wire, r.clone(), &hop);
+            for (a, b) in decoded.iter().zip(&decoded_s) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{scheme}: decompress divergence");
+            }
+            let fused_s =
+                codec_b.decompress_accumulate_recompress(&wire, &pre_b[r.clone()], r.clone(), &hop);
+            assert_eq!(fused_s, fused, "{scheme}: scalar/vectorized fused-DAR divergence");
+            codec.set_kernel_mode(KernelMode::Vectorized);
+            codec_b.set_kernel_mode(KernelMode::Vectorized);
+        }
+
+        // one pass per kernel mode: vectorized lanes keep the historical
+        // (gated) names, the scalar reference logs as `<kernel>-scalar`
+        for (mode, suffix) in [(KernelMode::Vectorized, ""), (KernelMode::Scalar, "-scalar")] {
+            codec.set_kernel_mode(mode);
+            codec_b.set_kernel_mode(mode);
+            let res =
+                bench.run(&format!("{scheme}/compress{suffix}"), Some(bytes), || {
+                    out.clear();
+                    codec.compress_into(&pre[r.clone()], r.clone(), &hop, &mut out);
+                    std::hint::black_box(out.len());
+                });
+            log.push(scheme, &format!("compress{suffix}"), entries, &res);
+            let res =
+                bench.run(&format!("{scheme}/decompress{suffix}"), Some(bytes), || {
+                    codec.decompress_into(&wire, r.clone(), &hop, &mut dec);
+                    std::hint::black_box(dec.len());
+                });
+            log.push(scheme, &format!("decompress{suffix}"), entries, &res);
+            let res = bench.run(&format!("{scheme}/fused-dar{suffix}"), Some(bytes), || {
+                out.clear();
+                codec_b.decompress_accumulate_recompress_into(
+                    &wire,
+                    &pre_b[r.clone()],
+                    r.clone(),
+                    &hop,
+                    &mut scratch,
+                    &mut out,
+                );
+                std::hint::black_box(out.len());
+            });
+            log.push(scheme, &format!("fused-dar{suffix}"), entries, &res);
+        }
+        codec.set_kernel_mode(KernelMode::Vectorized);
+        codec_b.set_kernel_mode(KernelMode::Vectorized);
         // unfused ablation: decompress → add → compress, three passes with
         // chunk-sized intermediates allocated per hop (the pre-`_into`
         // default path — the Fig. 6 comparison point)

@@ -22,8 +22,9 @@ use std::process::ExitCode;
 
 use dynamiq::util::json::Json;
 
-/// Kernels gated against the baseline (the §4 fused lanes); the
-/// `unfused-dar` ablation lane is informational only.
+/// Kernels gated against the baseline (the §4 fused lanes, which run the
+/// default vectorized kernels); the `unfused-dar` ablation and the
+/// `*-scalar` reference lanes are informational only.
 const GATED: &[&str] = &["compress", "decompress", "fused-dar"];
 
 fn entries_of(doc: &Json) -> Vec<Json> {

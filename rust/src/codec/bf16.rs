@@ -1,19 +1,154 @@
 //! Uncompressed BF16 baseline — what PyTorch DDP transmits by default.
 //! Partial sums are accumulated in f32 and re-rounded to BF16 per hop,
 //! mirroring NCCL's behaviour with `bf16` buffers.
+//!
+//! Kernel structure: the encode/decode/fused loops run in fixed 8-entry
+//! lane batches (pure element-wise integer/float ops, no iterator-state
+//! dependency — LLVM autovectorizes them on stable rust) with a scalar
+//! tail shared with the [`KernelMode::Scalar`] reference path, so both
+//! modes are byte-identical. Under `--features simd` with AVX2 detected
+//! at runtime, the lane bodies dispatch to the `util::simd` intrinsics
+//! (same integer RNE, same single IEEE add — still byte-identical).
 
 use std::ops::Range;
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
+use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits};
+
+const LANE: usize = 8;
+
+/// Scalar BF16 encode (the reference path and every lane tail).
+#[inline]
+fn encode_scalar(data: &[f32], out: &mut Vec<u8>) {
+    for &v in data {
+        out.extend_from_slice(&bf16_bits(v).to_le_bytes());
+    }
+}
+
+/// Lane-batched BF16 encode: 8 entries → one 16-byte store.
+fn encode_lanes(data: &[f32], out: &mut Vec<u8>) {
+    let full = data.len() / LANE;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if crate::util::simd::have_avx2() {
+        for i in 0..full {
+            let lane: &[f32; LANE] = data[i * LANE..(i + 1) * LANE].try_into().unwrap();
+            let mut bytes = [0u8; 2 * LANE];
+            // Safety: AVX2 presence checked above.
+            unsafe { crate::util::simd::bf16_encode_8(lane, &mut bytes) };
+            out.extend_from_slice(&bytes);
+        }
+        encode_scalar(&data[full * LANE..], out);
+        return;
+    }
+    for i in 0..full {
+        let chunk = &data[i * LANE..(i + 1) * LANE];
+        let mut bytes = [0u8; 2 * LANE];
+        for k in 0..LANE {
+            let b = bf16_bits(chunk[k]).to_le_bytes();
+            bytes[2 * k] = b[0];
+            bytes[2 * k + 1] = b[1];
+        }
+        out.extend_from_slice(&bytes);
+    }
+    encode_scalar(&data[full * LANE..], out);
+}
+
+/// Scalar BF16 decode into `out` (overwrite).
+#[inline]
+fn decode_scalar(bytes: &[u8], out: &mut [f32]) {
+    for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+        *o = bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+    }
+}
+
+/// Lane-batched BF16 decode (overwrite).
+fn decode_lanes(bytes: &[u8], out: &mut [f32]) {
+    let full = out.len() / LANE;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if crate::util::simd::have_avx2() {
+        for i in 0..full {
+            let src: &[u8; 2 * LANE] = bytes[16 * i..16 * (i + 1)].try_into().unwrap();
+            let mut lane = [0.0f32; LANE];
+            // Safety: AVX2 presence checked above.
+            unsafe { crate::util::simd::bf16_decode_8(src, &mut lane) };
+            out[i * LANE..(i + 1) * LANE].copy_from_slice(&lane);
+        }
+        decode_scalar(&bytes[16 * full..], &mut out[LANE * full..]);
+        return;
+    }
+    for i in 0..full {
+        let src = &bytes[16 * i..16 * (i + 1)];
+        let dst = &mut out[i * LANE..(i + 1) * LANE];
+        for k in 0..LANE {
+            dst[k] = bf16_from_bits(u16::from_le_bytes([src[2 * k], src[2 * k + 1]]));
+        }
+    }
+    decode_scalar(&bytes[16 * full..], &mut out[LANE * full..]);
+}
+
+/// Lane-batched decode-accumulate (`acc[k] += decode`).
+fn accumulate_lanes(bytes: &[u8], acc: &mut [f32]) {
+    let full = acc.len() / LANE;
+    for i in 0..full {
+        let src = &bytes[16 * i..16 * (i + 1)];
+        let dst = &mut acc[i * LANE..(i + 1) * LANE];
+        for k in 0..LANE {
+            dst[k] += bf16_from_bits(u16::from_le_bytes([src[2 * k], src[2 * k + 1]]));
+        }
+    }
+    for (a, b) in acc[LANE * full..].iter_mut().zip(bytes[16 * full..].chunks_exact(2)) {
+        *a += bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+    }
+}
+
+/// Scalar fused hop (the reference path and the lane tail).
+#[inline]
+fn dar_scalar(bytes: &[u8], local: &[f32], out: &mut Vec<u8>) {
+    for (&p, b) in local.iter().zip(bytes.chunks_exact(2)) {
+        let v = p + bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+        out.extend_from_slice(&bf16_bits(v).to_le_bytes());
+    }
+}
+
+/// Lane-batched fused hop: decode + add + re-round, 8 entries per step.
+fn dar_lanes(bytes: &[u8], local: &[f32], out: &mut Vec<u8>) {
+    let full = local.len() / LANE;
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if crate::util::simd::have_avx2() {
+        for i in 0..full {
+            let wire: &[u8; 2 * LANE] = bytes[16 * i..16 * (i + 1)].try_into().unwrap();
+            let lane: &[f32; LANE] = local[i * LANE..(i + 1) * LANE].try_into().unwrap();
+            let mut enc = [0u8; 2 * LANE];
+            // Safety: AVX2 presence checked above.
+            unsafe { crate::util::simd::bf16_dar_8(wire, lane, &mut enc) };
+            out.extend_from_slice(&enc);
+        }
+        dar_scalar(&bytes[16 * full..], &local[LANE * full..], out);
+        return;
+    }
+    for i in 0..full {
+        let src = &bytes[16 * i..16 * (i + 1)];
+        let loc = &local[i * LANE..(i + 1) * LANE];
+        let mut enc = [0u8; 2 * LANE];
+        for k in 0..LANE {
+            let v = loc[k] + bf16_from_bits(u16::from_le_bytes([src[2 * k], src[2 * k + 1]]));
+            let b = bf16_bits(v).to_le_bytes();
+            enc[2 * k] = b[0];
+            enc[2 * k + 1] = b[1];
+        }
+        out.extend_from_slice(&enc);
+    }
+    dar_scalar(&bytes[16 * full..], &local[LANE * full..], out);
+}
 
 pub struct Bf16Codec {
     d: usize,
+    mode: KernelMode,
 }
 
 impl Bf16Codec {
     pub fn new() -> Self {
-        Bf16Codec { d: 0 }
+        Bf16Codec { d: 0, mode: KernelMode::default() }
     }
 }
 
@@ -50,16 +185,18 @@ impl GradCodec for Bf16Codec {
     fn compress_into(&self, data: &[f32], range: Range<usize>, _ctx: &HopCtx, out: &mut Vec<u8>) {
         debug_assert_eq!(data.len(), range.len());
         out.reserve(range.len() * 2);
-        for &v in data {
-            out.extend_from_slice(&bf16_bits(v).to_le_bytes());
+        match self.mode {
+            KernelMode::Scalar => encode_scalar(data, out),
+            KernelMode::Vectorized => encode_lanes(data, out),
         }
     }
 
     fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
         assert_eq!(bytes.len(), range.len() * 2);
         debug_assert_eq!(out.len(), range.len());
-        for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
-            *o = bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+        match self.mode {
+            KernelMode::Scalar => decode_scalar(bytes, out),
+            KernelMode::Vectorized => decode_lanes(bytes, out),
         }
     }
 
@@ -71,13 +208,18 @@ impl GradCodec for Bf16Codec {
         _ctx: &HopCtx,
     ) {
         assert_eq!(bytes.len(), range.len() * 2);
-        for (a, b) in acc.iter_mut().zip(bytes.chunks_exact(2)) {
-            *a += bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+        match self.mode {
+            KernelMode::Scalar => {
+                for (a, b) in acc.iter_mut().zip(bytes.chunks_exact(2)) {
+                    *a += bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
+                }
+            }
+            KernelMode::Vectorized => accumulate_lanes(bytes, acc),
         }
     }
 
     /// Single-pass fused hop: decode + add the local entry + re-round to
-    /// BF16, one entry at a time — no chunk-sized intermediate at all.
+    /// BF16, 8 entries per lane — no chunk-sized intermediate at all.
     fn decompress_accumulate_recompress_into(
         &self,
         bytes: &[u8],
@@ -90,15 +232,23 @@ impl GradCodec for Bf16Codec {
         assert_eq!(bytes.len(), range.len() * 2);
         debug_assert_eq!(local.len(), range.len());
         out.reserve(range.len() * 2);
-        for (&p, b) in local.iter().zip(bytes.chunks_exact(2)) {
-            let v = p + bf16_from_bits(u16::from_le_bytes([b[0], b[1]]));
-            out.extend_from_slice(&bf16_bits(v).to_le_bytes());
+        match self.mode {
+            KernelMode::Scalar => dar_scalar(bytes, local, out),
+            KernelMode::Vectorized => dar_lanes(bytes, local, out),
         }
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {
         agg.truncate(self.d);
         agg
+    }
+
+    fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.mode = mode;
+    }
+
+    fn kernel_mode(&self) -> KernelMode {
+        self.mode
     }
 }
 
@@ -132,5 +282,39 @@ mod tests {
         let mut acc = vec![2.0f32; 16];
         c.decompress_accumulate(&bytes, &mut acc, 0..16, &ctx);
         assert!(acc.iter().all(|&v| (v - 3.0).abs() < 1e-2));
+    }
+
+    #[test]
+    fn scalar_and_lane_kernels_agree_bitwise() {
+        let mut rng = Pcg::new(7);
+        // ragged lengths around the 8-entry lane width, plus specials
+        for d in [1usize, 7, 8, 9, 15, 16, 17, 100] {
+            let mut data = vec![0.0f32; d];
+            rng.fill_normal(&mut data, 3.0);
+            if d > 2 {
+                data[0] = -0.0;
+                data[1] = f32::MIN_POSITIVE;
+                data[2] = 1.0 + 2f32.powi(-8); // RNE tie
+            }
+            let mut scalar = Vec::new();
+            encode_scalar(&data, &mut scalar);
+            let mut lanes = Vec::new();
+            encode_lanes(&data, &mut lanes);
+            assert_eq!(scalar, lanes, "encode d={d}");
+
+            let mut ds = vec![f32::NAN; d];
+            decode_scalar(&scalar, &mut ds);
+            let mut dl = vec![f32::NAN; d];
+            decode_lanes(&scalar, &mut dl);
+            for (a, b) in ds.iter().zip(&dl) {
+                assert_eq!(a.to_bits(), b.to_bits(), "decode d={d}");
+            }
+
+            let mut fs = Vec::new();
+            dar_scalar(&scalar, &data, &mut fs);
+            let mut fl = Vec::new();
+            dar_lanes(&scalar, &data, &mut fl);
+            assert_eq!(fs, fl, "fused d={d}");
+        }
     }
 }

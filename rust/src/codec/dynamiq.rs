@@ -26,9 +26,23 @@
 //! payload. Empty `level_budgets` (the default) is byte-identical to the
 //! level-unaware codec: uniform budget, no header.
 
+//!
+//! Kernel structure (vectorized mode, the default): the per-entry
+//! normalize → flip-u → quantize → pack loop of `compress_sg` runs in
+//! fixed 8-entry lane batches — the branch-free phase (abs/normalize
+//! clamp via `min`, the correlated-rounding sign flip as a select, the
+//! counter-hash uniforms) is straight element-wise arithmetic LLVM
+//! autovectorizes, the data-dependent grid bracketing stays scalar per
+//! element, and the 8 codes of a lane pack into one little-endian word
+//! (8·w bits = w bytes, so lanes never split a byte). Decode runs the
+//! mirror image: w wire bytes → 8 codes → one LUT-gather + scale-multiply
+//! lane. [`KernelMode::Scalar`] keeps the original byte-at-a-time
+//! reference loops; both are byte-identical on the wire (pinned by the
+//! mode-parity tests and `tests/into_bit_identity`).
+
 use std::ops::Range;
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
+use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::bitalloc::{solve_exact, BitAllocation, FastAllocator};
 use crate::quant::groups::{GroupLayout, SuperGroupStats};
 use crate::quant::hierarchical::encode_scales_into;
@@ -201,7 +215,13 @@ pub struct Dynamiq {
     luts: Vec<(u32, Vec<f32>)>,
     fast_alloc: Vec<FastAllocator>,
     state: Option<RoundState>,
+    mode: KernelMode,
 }
+
+/// Entries per lane batch in the vectorized kernels. 8 entries × w bits
+/// is a whole number of bytes for every supported width, so lane packing
+/// never splits a byte.
+const LANE: usize = 8;
 
 impl Dynamiq {
     pub fn new(cfg: DynamiqConfig) -> Self {
@@ -228,7 +248,19 @@ impl Dynamiq {
             luts,
             cfg,
             state: None,
+            mode: KernelMode::default(),
         }
+    }
+
+    /// Whether the lane kernels cover this width: the vectorized paths
+    /// need 8-entry lanes to stay byte-aligned (w | 8) and groups to
+    /// split into whole lanes; anything else (exotic configs) falls back
+    /// to the scalar reference per super-group.
+    #[inline]
+    fn lanes_apply(&self, w: u32) -> bool {
+        self.mode == KernelMode::Vectorized
+            && matches!(w, 1 | 2 | 4 | 8)
+            && self.g() % LANE == 0
     }
 
     pub fn paper_default() -> Self {
@@ -424,6 +456,91 @@ impl Dynamiq {
         debug_assert_eq!(nbits, 0, "S·w must be byte-aligned");
     }
 
+    /// Pick the lane or scalar implementation of [`Dynamiq::compress_sg`]
+    /// (byte-identical; the lane kernel covers the hierarchical-scale
+    /// path, the BF16-per-group ablation stays on the reference).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    fn compress_sg_dispatch(
+        &self,
+        x: &[f32],
+        w: u32,
+        sg_slot: usize,
+        rctx: &RoundingCtx,
+        scale_seed: u32,
+        pi: u32,
+        out: &mut Vec<u8>,
+    ) {
+        if self.cfg.hierarchical && self.lanes_apply(w) {
+            self.compress_sg_lanes(x, w, sg_slot, rctx, scale_seed, pi, out);
+        } else {
+            self.compress_sg(x, w, sg_slot, rctx, scale_seed, pi, out);
+        }
+    }
+
+    /// Lane-batched super-group compression (hierarchical scales): the
+    /// normalize/flip/uniform phase runs 8 entries at a time with no
+    /// cross-element state (clamping is `min`, the correlated-rounding
+    /// direction flip is a select — no branches LLVM can't turn into
+    /// masks), the grid bracketing stays scalar, and each lane's 8 codes
+    /// assemble into one `u64` whose low `w` bytes are the wire bytes —
+    /// the same little-endian layout the scalar accumulator emits.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_sg_lanes(
+        &self,
+        x: &[f32],
+        w: u32,
+        sg_slot: usize,
+        rctx: &RoundingCtx,
+        scale_seed: u32,
+        pi: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let g = self.g();
+        debug_assert_eq!(x.len(), self.s());
+        debug_assert!(self.cfg.hierarchical && g % LANE == 0);
+        let gpsg = self.cfg.layout.groups_per_super();
+        // group maxima (identical fold to the scalar path; max over
+        // absolute values is order-insensitive)
+        let mut maxima = [0.0f32; 64];
+        let maxima = &mut maxima[..gpsg];
+        for (gi, m) in maxima.iter_mut().enumerate() {
+            *m = x[gi * g..(gi + 1) * g].iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        }
+        let entry_ctr0 = (sg_slot * self.s()) as u32;
+        encode_scales_into(maxima, scale_seed, entry_ctr0 / g as u32, out);
+        let table = self.tables.get(w);
+        for (gi, chunk) in x.chunks_exact(g).enumerate() {
+            let true_max = maxima[gi];
+            let inv = if true_max > 0.0 { 1.0 / true_max } else { 0.0 };
+            for (l, lane) in chunk.chunks_exact(LANE).enumerate() {
+                let ctr0 = entry_ctr0 + (gi * g + l * LANE) as u32;
+                // branch-free lane phase
+                let mut m = [0.0f32; LANE];
+                let mut uu = [0.0f32; LANE];
+                let mut neg = [false; LANE];
+                for j in 0..LANE {
+                    let v = lane[j];
+                    neg[j] = v < 0.0;
+                    m[j] = (v.abs() * inv).min(1.0);
+                    // see compress_sg: flipping u for negatives keeps the
+                    // rounding direction consistent in the value domain
+                    let u0 = rctx.uniform(pi, ctr0 + j as u32);
+                    uu[j] = if neg[j] { 1.0 - u0 } else { u0 };
+                }
+                // scalar bracket + sign-magnitude code, packed into one
+                // little-endian word (8·w bits = w bytes)
+                let mut word = 0u64;
+                for j in 0..LANE {
+                    let mag = table.quantize(m[j], uu[j]);
+                    let code = sign_mag_code(neg[j], mag, w) as u64;
+                    word |= code << (j as u32 * w);
+                }
+                out.extend_from_slice(&word.to_le_bytes()[..w as usize]);
+            }
+        }
+    }
+
     /// Entry compression with plain BF16 per-group scales (non-hierarchical
     /// ablation). `scales[gi]` is the decoded BF16 scale already ≥ max.
     #[allow(clippy::too_many_arguments)]
@@ -519,6 +636,73 @@ impl Dynamiq {
                     sink(i, lut[code] * scale);
                     i += 1;
                 }
+            }
+        }
+        debug_assert_eq!(p - off, payload);
+        off + payload
+    }
+
+    /// Lane-batched super-group decode into `dst` (`ACC` selects
+    /// overwrite vs accumulate): the mirror image of
+    /// [`Dynamiq::compress_sg_lanes`] — w wire bytes become one
+    /// little-endian word holding 8 codes, gathered through the signed
+    /// LUT and rescaled in one element-wise lane (same multiply and,
+    /// under `ACC`, the same per-entry add as the scalar sink). Returns
+    /// bytes consumed; layout-identical to [`Dynamiq::decode_sg`].
+    fn decode_sg_lanes<const ACC: bool>(
+        &self,
+        bytes: &[u8],
+        w: u32,
+        lut: &[f32],
+        dst: &mut [f32],
+    ) -> usize {
+        let g = self.g();
+        let gpsg = self.cfg.layout.groups_per_super();
+        let s = self.s();
+        debug_assert_eq!(dst.len(), s);
+        debug_assert!(g % LANE == 0);
+        let mut off = 0usize;
+        // decode scales (identical to the scalar path)
+        let mut scales = [0.0f32; 64];
+        let scales = &mut scales[..gpsg];
+        if self.cfg.hierarchical {
+            let sf_super = bf16_from_bits(u16::from_le_bytes([bytes[0], bytes[1]]));
+            off = 2;
+            for sc in scales.iter_mut() {
+                *sc = bytes[off] as f32 * sf_super * (1.0 / 255.0);
+                off += 1;
+            }
+        } else {
+            for sc in scales.iter_mut() {
+                *sc = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
+                off += 2;
+            }
+        }
+        let payload = packed_len(s, w);
+        let wb = w as usize; // wire bytes per 8-entry lane
+        let mask = (1u64 << w) - 1;
+        let mut p = off;
+        let mut i = 0usize;
+        for &scale in scales.iter() {
+            for _ in 0..g / LANE {
+                let mut word = [0u8; 8];
+                word[..wb].copy_from_slice(&bytes[p..p + wb]);
+                let word = u64::from_le_bytes(word);
+                p += wb;
+                let mut vals = [0.0f32; LANE];
+                for j in 0..LANE {
+                    let code = ((word >> (j as u32 * w)) & mask) as usize;
+                    vals[j] = lut[code] * scale;
+                }
+                let d = &mut dst[i..i + LANE];
+                if ACC {
+                    for j in 0..LANE {
+                        d[j] += vals[j];
+                    }
+                } else {
+                    d.copy_from_slice(&vals);
+                }
+                i += LANE;
             }
         }
         debug_assert_eq!(p - off, payload);
@@ -688,19 +872,24 @@ impl GradCodec for Dynamiq {
             let pi = rctx.pi_slot(k as u32);
             let base = k * self.s() - range.start;
             let x = &data[base..base + self.s()];
-            self.compress_sg(x, w, k, &rctx, sseed, pi, out);
+            self.compress_sg_dispatch(x, w, k, &rctx, sseed, pi, out);
         }
     }
 
     fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
         debug_assert_eq!(out.len(), range.len());
+        let s = self.s();
         let slots = self.slots(&range);
         let mut off = self.header_bytes(slots.len());
         for (si, k) in slots.enumerate() {
             let w = self.wire_width(bytes, si, k);
             let lut = self.lut(w);
-            let base = k * self.s() - range.start;
-            off += self.decode_sg(&bytes[off..], w, lut, |i, v| out[base + i] = v);
+            let base = k * s - range.start;
+            off += if self.lanes_apply(w) {
+                self.decode_sg_lanes::<false>(&bytes[off..], w, lut, &mut out[base..base + s])
+            } else {
+                self.decode_sg(&bytes[off..], w, lut, |i, v| out[base + i] = v)
+            };
         }
         debug_assert_eq!(off, bytes.len());
     }
@@ -712,13 +901,18 @@ impl GradCodec for Dynamiq {
         range: Range<usize>,
         _ctx: &HopCtx,
     ) {
+        let s = self.s();
         let slots = self.slots(&range);
         let mut off = self.header_bytes(slots.len());
         for (si, k) in slots.enumerate() {
             let w = self.wire_width(bytes, si, k);
             let lut = self.lut(w);
-            let base = k * self.s() - range.start;
-            off += self.decode_sg(&bytes[off..], w, lut, |i, v| acc[base + i] += v);
+            let base = k * s - range.start;
+            off += if self.lanes_apply(w) {
+                self.decode_sg_lanes::<true>(&bytes[off..], w, lut, &mut acc[base..base + s])
+            } else {
+                self.decode_sg(&bytes[off..], w, lut, |i, v| acc[base + i] += v)
+            };
         }
         debug_assert_eq!(off, bytes.len());
     }
@@ -757,10 +951,14 @@ impl GradCodec for Dynamiq {
             let base = k * s - range.start;
             // decode + accumulate into the slab (registers/VMEM analogue)
             scratch.slab.copy_from_slice(&local[base..base + s]);
-            off += self.decode_sg(&bytes[off..], w_in, lut, |i, v| scratch.slab[i] += v);
+            off += if self.lanes_apply(w_in) {
+                self.decode_sg_lanes::<true>(&bytes[off..], w_in, lut, &mut scratch.slab[..s])
+            } else {
+                self.decode_sg(&bytes[off..], w_in, lut, |i, v| scratch.slab[i] += v)
+            };
             let pi = rctx.pi_slot(k as u32);
             let w_out = st.width_sets[bi][k] as u32;
-            self.compress_sg(&scratch.slab, w_out, k, &rctx, sseed, pi, out);
+            self.compress_sg_dispatch(&scratch.slab, w_out, k, &rctx, sseed, pi, out);
         }
         debug_assert_eq!(off, bytes.len());
     }
@@ -783,6 +981,14 @@ impl GradCodec for Dynamiq {
             }
         }
         out
+    }
+
+    fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.mode = mode;
+    }
+
+    fn kernel_mode(&self) -> KernelMode {
+        self.mode
     }
 }
 
@@ -1186,6 +1392,68 @@ mod tests {
         }
         let unfused = cb.compress(&acc, r.clone(), &next);
         assert_eq!(fused, unfused, "cross-level fused/unfused must agree bit-exactly");
+    }
+
+    #[test]
+    fn scalar_and_lane_kernels_are_byte_identical() {
+        // the vectorized lane kernels must reproduce the scalar reference
+        // bit for bit: default config, per-level budgets (width header +
+        // cross-level requantization), uniform-values ablation, and the
+        // non-hierarchical ablation (which routes back to the scalar
+        // plain-scale path) — over ragged gradient lengths
+        let base = DynamiqConfig::default();
+        let cfgs = [
+            base.clone(),
+            DynamiqConfig { level_budgets: vec![4.0, 6.0], ..base.clone() },
+            DynamiqConfig { uniform_values: true, ..base.clone() },
+            DynamiqConfig { hierarchical: false, ..base.clone() },
+            DynamiqConfig { rounding: Rounding::Independent, ..base.clone() },
+        ];
+        for (ci, cfg) in cfgs.iter().enumerate() {
+            for d in [1usize, 255, 257, 4096, 8191] {
+                let ga = fake_grad(d, 90 + ci as u64);
+                let gb = fake_grad(d, 91 + ci as u64);
+                let build = |mode: KernelMode| {
+                    let mut ca = Dynamiq::new(cfg.clone());
+                    let mut cb = Dynamiq::new(cfg.clone());
+                    ca.set_kernel_mode(mode);
+                    cb.set_kernel_mode(mode);
+                    let (ctx_a, ctx_b) = (hop(0, 2, 5), hop(1, 2, 5));
+                    let ma = ca.metadata(&ga, &ctx_a);
+                    let mb = cb.metadata(&gb, &ctx_b);
+                    let agg: Vec<f32> = ma.iter().zip(&mb).map(|(x, y)| x + y).collect();
+                    let pa = ca.begin_round(&ga, &agg, &ctx_a);
+                    let pb = cb.begin_round(&gb, &agg, &ctx_b);
+                    (ca, cb, pa, pb)
+                };
+                let (sa, sb, ps_a, ps_b) = build(KernelMode::Scalar);
+                let (va, vb, pv_a, pv_b) = build(KernelMode::Vectorized);
+                assert_eq!(ps_a, pv_a);
+                let r = 0..ps_a.len();
+                for level in [0u8, 1, HopCtx::BROADCAST_LEVEL] {
+                    let ctx = hop(0, 2, 5).at_level(level, 2);
+                    let ws = sa.compress(&ps_a[r.clone()], r.clone(), &ctx);
+                    let wv = va.compress(&pv_a[r.clone()], r.clone(), &ctx);
+                    assert_eq!(ws, wv, "cfg {ci} d={d} level={level}: compress");
+                    let ctx_b = hop(1, 2, 5);
+                    let ds = sb.decompress(&ws, r.clone(), &ctx_b);
+                    let dv = vb.decompress(&wv, r.clone(), &ctx_b);
+                    for (x, y) in ds.iter().zip(&dv) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "cfg {ci} d={d} level={level}: decompress"
+                        );
+                    }
+                    let next = HopCtx { summed: 2, ..ctx_b.at_level(level, 2) };
+                    let local_s = &ps_b[r.clone()];
+                    let local_v = &pv_b[r.clone()];
+                    let fs = sb.decompress_accumulate_recompress(&ws, local_s, r.clone(), &next);
+                    let fv = vb.decompress_accumulate_recompress(&wv, local_v, r.clone(), &next);
+                    assert_eq!(fs, fv, "cfg {ci} d={d} level={level}: fused");
+                }
+            }
+        }
     }
 
     #[test]

@@ -68,6 +68,27 @@ pub enum MetaOp {
     Max,
 }
 
+/// Which inner-loop implementation a codec's chunk kernels run. Both
+/// produce **byte-identical** wire payloads and bit-identical decodes
+/// (asserted by `tests/into_bit_identity`); the choice is purely a
+/// throughput knob, kept so the scalar reference stays benchmarkable
+/// (`codec_throughput` emits one lane per mode) and testable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// The scalar reference loops (one entry at a time, iterator-state
+    /// bit accumulators) — the pre-vectorization implementations.
+    Scalar,
+    /// Lane-batched kernels: fixed-width `[f32; 8]`/`[u32; 8]` batches
+    /// with no per-element branch dependencies (clamping and correlated
+    /// rounding are select/mask arithmetic), written so stable-rust LLVM
+    /// autovectorizes them, plus a scalar tail shared with the reference
+    /// path. With the `simd` cargo feature enabled and AVX2 detected at
+    /// runtime, the BF16 and THC byte-lane kernels dispatch to explicit
+    /// `core::arch` intrinsics.
+    #[default]
+    Vectorized,
+}
+
 /// Per-hop context the engine passes to compression calls: which worker is
 /// executing (its rounding context identity), how many gradients the
 /// incoming partial sum already aggregates (for formats that track range
@@ -125,8 +146,8 @@ impl HopCtx {
 /// A gradient codec. One instance per worker; it may carry cross-round
 /// state (e.g. MXFP's µ auto-scale, OmniReduce's adaptive k). `Sync` so
 /// the engine can run the per-worker kernel calls (`&self`) of one stage
-/// on scoped threads; the `&mut self` round-boundary methods are never
-/// called concurrently.
+/// on its persistent worker-pool threads; the `&mut self` round-boundary
+/// methods are never called concurrently.
 pub trait GradCodec: Send + Sync {
     /// Human-readable scheme name (matches the paper's legend).
     fn name(&self) -> &'static str;
@@ -232,6 +253,17 @@ pub trait GradCodec: Send + Sync {
     /// Observability: overflow events in the last round (MXFP / THC).
     fn overflow_count(&self) -> u64 {
         0
+    }
+
+    /// Select the inner-loop implementation (see [`KernelMode`]). Wire
+    /// bytes are identical either way; codecs without a vectorized path
+    /// ignore this. Not called concurrently with kernel methods (same
+    /// rule as the `&mut self` round-boundary methods).
+    fn set_kernel_mode(&mut self, _mode: KernelMode) {}
+
+    /// The mode the chunk kernels currently run in.
+    fn kernel_mode(&self) -> KernelMode {
+        KernelMode::Vectorized
     }
 }
 

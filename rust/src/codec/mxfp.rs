@@ -11,10 +11,20 @@
 //! and re-encodes with the *same* round scale (overflow saturates and is
 //! counted).
 
+//!
+//! Kernel structure: the per-block (32-entry) loops run in two phases so
+//! the element-wise float work autovectorizes — a lane pass computing
+//! `v / s · FPX_MAX` (resp. `grid · s / FPX_MAX`) with the zero-scale
+//! branch hoisted to the block level, and a scalar pass over the
+//! minifloat grid bracketing (data-dependent `partition_point`, left
+//! scalar on purpose). [`KernelMode::Scalar`] keeps the original fused
+//! per-entry reference loops; both are byte-identical
+//! (`tests/into_bit_identity`).
+
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
+use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits, bf16_round, Minifloat};
 
 pub const MX_BLOCK: usize = 32;
@@ -68,6 +78,7 @@ pub struct MxfpCodec {
     /// overflows carried in the previous round's metadata (already agreed)
     last_round_entries: u64,
     initialized_mu: bool,
+    mode: KernelMode,
 }
 
 impl MxfpCodec {
@@ -81,6 +92,7 @@ impl MxfpCodec {
             ovf: AtomicU64::new(0),
             last_round_entries: 1,
             initialized_mu: false,
+            mode: KernelMode::default(),
         }
     }
 
@@ -196,6 +208,52 @@ impl MxfpCodec {
         }
     }
 
+    /// Lane-phased block encode: the `v / s · FPX_MAX` scaling runs as a
+    /// straight element-wise lane pass (autovectorized; zero-scale blocks
+    /// short-circuit exactly like the scalar `encode`), then the grid
+    /// bracketing runs scalar per element. Returns the overflow tally
+    /// (flushed to the atomic counter once per kernel call instead of
+    /// per event — same total).
+    fn encode_block(&self, x: &[f32], s: f32, codes: &mut [u16; MX_BLOCK]) -> u64 {
+        debug_assert_eq!(x.len(), MX_BLOCK);
+        if s <= 0.0 {
+            *codes = [0u16; MX_BLOCK];
+            return 0;
+        }
+        let max = self.element.max_value();
+        let mut scaled = [0.0f32; MX_BLOCK];
+        for k in 0..MX_BLOCK {
+            scaled[k] = x[k] / s * max;
+        }
+        let mut ovf = 0u64;
+        for k in 0..MX_BLOCK {
+            let (code, o) = self.element.encode_rne(scaled[k]);
+            codes[k] = code;
+            ovf += o as u64;
+        }
+        ovf
+    }
+
+    /// Lane-phased block decode: unpack the 32 codes into a stack slab,
+    /// gather the grid magnitudes (scalar), then the `· s / FPX_MAX`
+    /// rescale runs as one lane pass — same op order as the scalar
+    /// `decode`, so values are bit-identical.
+    fn decode_block(&self, payload: &[u8], s: f32, vals: &mut [f32; MX_BLOCK]) {
+        if s <= 0.0 {
+            *vals = [0.0f32; MX_BLOCK];
+            return;
+        }
+        let mut codes = [0u16; MX_BLOCK];
+        self.for_each_code(payload, MX_BLOCK, |k, c| codes[k] = c);
+        for k in 0..MX_BLOCK {
+            vals[k] = self.element.decode(codes[k]);
+        }
+        let max = self.element.max_value();
+        for v in vals.iter_mut() {
+            *v = *v * s / max;
+        }
+    }
+
     fn blocks(&self, range: &Range<usize>) -> Range<usize> {
         debug_assert_eq!(range.start % MX_BLOCK, 0);
         (range.start / MX_BLOCK)..(range.end / MX_BLOCK)
@@ -266,15 +324,24 @@ impl GradCodec for MxfpCodec {
         debug_assert_eq!(data.len(), range.len());
         out.reserve(self.blocks(&range).len() * self.block_wire());
         let mut codes = [0u16; MX_BLOCK];
+        let mut ovf = 0u64;
         for j in self.blocks(&range) {
             let s = self.scales[j];
             out.extend_from_slice(&bf16_bits(s).to_le_bytes());
             let base = j * MX_BLOCK - range.start;
             let x = &data[base..base + MX_BLOCK];
-            for (k, &v) in x.iter().enumerate() {
-                codes[k] = self.encode(v, s);
+            match self.mode {
+                KernelMode::Scalar => {
+                    for (k, &v) in x.iter().enumerate() {
+                        codes[k] = self.encode(v, s);
+                    }
+                }
+                KernelMode::Vectorized => ovf += self.encode_block(x, s, &mut codes),
             }
             self.pack_codes_into(&codes, out);
+        }
+        if ovf > 0 {
+            self.ovf.fetch_add(ovf, Ordering::Relaxed);
         }
     }
 
@@ -282,13 +349,22 @@ impl GradCodec for MxfpCodec {
         debug_assert_eq!(out.len(), range.len());
         let mut off = 0usize;
         let pb = self.payload_bytes(MX_BLOCK);
+        let mut vals = [0.0f32; MX_BLOCK];
         for j in self.blocks(&range) {
             let s = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
             off += 2;
             let base = j * MX_BLOCK - range.start;
-            self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
-                out[base + k] = self.decode(c, s);
-            });
+            match self.mode {
+                KernelMode::Scalar => {
+                    self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
+                        out[base + k] = self.decode(c, s);
+                    });
+                }
+                KernelMode::Vectorized => {
+                    self.decode_block(&bytes[off..off + pb], s, &mut vals);
+                    out[base..base + MX_BLOCK].copy_from_slice(&vals);
+                }
+            }
             off += pb;
         }
     }
@@ -302,13 +378,25 @@ impl GradCodec for MxfpCodec {
     ) {
         let mut off = 0usize;
         let pb = self.payload_bytes(MX_BLOCK);
+        let mut vals = [0.0f32; MX_BLOCK];
         for j in self.blocks(&range) {
             let s = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
             off += 2;
             let base = j * MX_BLOCK - range.start;
-            self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
-                acc[base + k] += self.decode(c, s);
-            });
+            match self.mode {
+                KernelMode::Scalar => {
+                    self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
+                        acc[base + k] += self.decode(c, s);
+                    });
+                }
+                KernelMode::Vectorized => {
+                    self.decode_block(&bytes[off..off + pb], s, &mut vals);
+                    let dst = &mut acc[base..base + MX_BLOCK];
+                    for k in 0..MX_BLOCK {
+                        dst[k] += vals[k];
+                    }
+                }
+            }
             off += pb;
         }
     }
@@ -329,25 +417,45 @@ impl GradCodec for MxfpCodec {
         out.reserve(self.blocks(&range).len() * self.block_wire());
         let pb = self.payload_bytes(MX_BLOCK);
         let mut slab = [0.0f32; MX_BLOCK];
+        let mut vals = [0.0f32; MX_BLOCK];
         let mut codes = [0u16; MX_BLOCK];
         let mut off = 0usize;
+        let mut ovf = 0u64;
         for j in self.blocks(&range) {
             let s_in = bf16_from_bits(u16::from_le_bytes([bytes[off], bytes[off + 1]]));
             off += 2;
             let base = j * MX_BLOCK - range.start;
             slab.copy_from_slice(&local[base..base + MX_BLOCK]);
-            self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
-                slab[k] += self.decode(c, s_in);
-            });
+            match self.mode {
+                KernelMode::Scalar => {
+                    self.for_each_code(&bytes[off..off + pb], MX_BLOCK, |k, c| {
+                        slab[k] += self.decode(c, s_in);
+                    });
+                }
+                KernelMode::Vectorized => {
+                    self.decode_block(&bytes[off..off + pb], s_in, &mut vals);
+                    for k in 0..MX_BLOCK {
+                        slab[k] += vals[k];
+                    }
+                }
+            }
             off += pb;
             // re-encode with the agreed round scale (identical to s_in in
             // practice; kept separate to mirror the unfused path exactly)
             let s_out = self.scales[j];
             out.extend_from_slice(&bf16_bits(s_out).to_le_bytes());
-            for (k, &v) in slab.iter().enumerate() {
-                codes[k] = self.encode(v, s_out);
+            match self.mode {
+                KernelMode::Scalar => {
+                    for (k, &v) in slab.iter().enumerate() {
+                        codes[k] = self.encode(v, s_out);
+                    }
+                }
+                KernelMode::Vectorized => ovf += self.encode_block(&slab, s_out, &mut codes),
             }
             self.pack_codes_into(&codes, out);
+        }
+        if ovf > 0 {
+            self.ovf.fetch_add(ovf, Ordering::Relaxed);
         }
     }
 
@@ -359,6 +467,14 @@ impl GradCodec for MxfpCodec {
     fn overflow_count(&self) -> u64 {
         self.ovf.load(Ordering::Relaxed)
     }
+
+    fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.mode = mode;
+    }
+
+    fn kernel_mode(&self) -> KernelMode {
+        self.mode
+    }
 }
 
 #[cfg(test)]
@@ -368,6 +484,40 @@ mod tests {
 
     fn ctx(n: u32) -> HopCtx {
         HopCtx::flat(0, n, 0, 1)
+    }
+
+    #[test]
+    fn scalar_and_lane_kernels_are_byte_identical() {
+        // every format, with a zero-scale block in the mix
+        for fmt in [MxFormat::Mxfp8, MxFormat::Mxfp6, MxFormat::Mxfp4] {
+            let mut g = grad(4 * MX_BLOCK, 17, 0.02);
+            for v in g[MX_BLOCK..2 * MX_BLOCK].iter_mut() {
+                *v = 0.0;
+            }
+            let build = |mode: KernelMode| {
+                let mut c = MxfpCodec::new(fmt);
+                c.set_kernel_mode(mode);
+                let meta = c.metadata(&g, &ctx(2));
+                let pre = c.begin_round(&g, &meta, &ctx(2));
+                (c, pre)
+            };
+            let (cs, pre) = build(KernelMode::Scalar);
+            let (cv, pre_v) = build(KernelMode::Vectorized);
+            assert_eq!(pre, pre_v);
+            let r = 0..pre.len();
+            let ws = cs.compress(&pre, r.clone(), &ctx(2));
+            let wv = cv.compress(&pre_v, r.clone(), &ctx(2));
+            assert_eq!(ws, wv, "{}: compress", fmt.name());
+            assert_eq!(cs.overflow_count(), cv.overflow_count(), "{}: ovf", fmt.name());
+            let ds = cs.decompress(&ws, r.clone(), &ctx(2));
+            let dv = cv.decompress(&wv, r.clone(), &ctx(2));
+            for (a, b) in ds.iter().zip(&dv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: decompress", fmt.name());
+            }
+            let fs = cs.decompress_accumulate_recompress(&ws, &pre, r.clone(), &ctx(2));
+            let fv = cv.decompress_accumulate_recompress(&wv, &pre_v, r.clone(), &ctx(2));
+            assert_eq!(fs, fv, "{}: fused", fmt.name());
+        }
     }
 
     fn grad(d: usize, seed: u64, scale: f32) -> Vec<f32> {

@@ -17,6 +17,11 @@
 //! inbox spines) so `AllReduceEngine::run_pooled` can reuse everything
 //! across stages *and* rounds: after a warm-up round, the hop path
 //! performs zero heap allocations (asserted by `tests/alloc_regression`).
+//! The engine's parallel stage path composes this with its persistent
+//! `util::pool::WorkerPool` and per-engine job spines: per-worker
+//! scratch moves (`std::mem::take`, two Vec headers) into the stage's
+//! worker jobs and back, so threaded stages reuse the same warm memory
+//! the sequential path does — and spawn no threads.
 
 /// Per-worker reusable f32 buffers for the decode/accumulate kernels.
 /// Buffers only ever grow; `Default` starts empty and warms up on first

@@ -8,12 +8,26 @@
 //! The rotation uses a shared ±1 diagonal (seed-derived), and the uniform
 //! lattice scale per Hadamard block is the all-reduced max — THC's shared
 //! "table", carried by the metadata stage here.
+//!
+//! Kernel structure: the lattice quantize/dequantize loops run in fixed
+//! 8-entry lane batches — the per-block scale is hoisted (blocks are
+//! 1024-aligned, so a chunk never splits one), the counter-hash uniforms
+//! and the floor/frac/select rounding are straight-line element-wise ops
+//! LLVM autovectorizes, and overflow tallies accumulate in a lane-local
+//! counter flushed once per call. Codes stream through the same
+//! little-endian bit layout as the scalar reference ([`KernelMode`]
+//! switches between them; byte-identical, pinned by
+//! `tests/into_bit_identity`). Under `--features simd` + AVX2 the 8-bit
+//! dequantize lane dispatches to `util::simd::thc8_decode_8`.
 
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp, WorkerScratch};
+use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::util::rng::{pcg_hash, uniform_u01};
+
+/// Entries per lane batch in the vectorized kernels.
+const LANE: usize = 8;
 
 /// Little-endian bit stream writer for the 8/12/16-bit aggregation codes.
 /// Produces exactly the bytes of [`ThcCodec::pack`] (verified in tests)
@@ -104,11 +118,20 @@ pub struct ThcCodec {
     /// aggregation container width in bits (8 or 12 or 16)
     agg_bits: u32,
     ovf: AtomicU64,
+    mode: KernelMode,
 }
 
 impl ThcCodec {
     pub fn new(seed: u32) -> Self {
-        ThcCodec { seed, d: 0, round: 0, scales: Vec::new(), agg_bits: 8, ovf: AtomicU64::new(0) }
+        ThcCodec {
+            seed,
+            d: 0,
+            round: 0,
+            scales: Vec::new(),
+            agg_bits: 8,
+            ovf: AtomicU64::new(0),
+            mode: KernelMode::default(),
+        }
     }
 
     /// Aggregation width rule from §6.1: 8 bits up to 8 workers, 12 beyond
@@ -178,6 +201,70 @@ impl ThcCodec {
         code as f32 * (2.0 * s / Q_LEVELS as f32) - k as f32 * s
     }
 
+    /// One lane of lattice quantization against a positive per-block
+    /// scale: exactly [`ThcCodec::to_lattice`]'s op sequence per element
+    /// (the clamp and stochastic round are selects, the overflow test a
+    /// mask), with the overflow tally returned instead of counted — so
+    /// the loop body carries no cross-element state and autovectorizes.
+    #[inline]
+    fn lattice_lane(
+        &self,
+        vals: &[f32; LANE],
+        s: f32,
+        kf: f32,
+        useed: u32,
+        ctr0: u32,
+        codes: &mut [u32; LANE],
+    ) -> u64 {
+        let max_code = (1u32 << self.agg_bits) - 1;
+        let qf = Q_LEVELS as f32;
+        let ovf_y = qf * kf + 1.0;
+        let mut ovf = 0u64;
+        for j in 0..LANE {
+            let u = uniform_u01(useed, ctr0.wrapping_add(j as u32));
+            let y = (vals[j] + kf * s) / (2.0 * s) * qf;
+            let lo = y.floor();
+            let frac = y - lo;
+            let code = if u < frac { lo + 1.0 } else { lo };
+            let code = code.max(0.0) as u32;
+            ovf += (code > max_code || y > ovf_y) as u64;
+            codes[j] = code.min(max_code);
+        }
+        ovf
+    }
+
+    /// Emit one lane of aggregation codes. 8/16-bit widths write whole
+    /// byte lanes (the BitWriter is empty between codes there, so
+    /// bypassing it is layout-identical); 12-bit streams through `bw`
+    /// (its 4-bit carry crosses lane and block boundaries).
+    #[inline]
+    fn emit_lane(&self, codes: &[u32; LANE], bw: &mut BitWriter, out: &mut Vec<u8>) {
+        match self.agg_bits {
+            8 => {
+                debug_assert_eq!(bw.nbits, 0);
+                let mut lane = [0u8; LANE];
+                for j in 0..LANE {
+                    lane[j] = codes[j] as u8;
+                }
+                out.extend_from_slice(&lane);
+            }
+            16 => {
+                debug_assert_eq!(bw.nbits, 0);
+                let mut lane = [0u8; 2 * LANE];
+                for j in 0..LANE {
+                    lane[2 * j] = codes[j] as u8;
+                    lane[2 * j + 1] = (codes[j] >> 8) as u8;
+                }
+                out.extend_from_slice(&lane);
+            }
+            _ => {
+                for &c in codes.iter() {
+                    bw.push(c, self.agg_bits, out);
+                }
+            }
+        }
+    }
+
     #[cfg(test)]
     fn pack(&self, codes: &[u32]) -> Vec<u8> {
         match self.agg_bits {
@@ -235,14 +322,212 @@ impl ThcCodec {
         }
     }
 
+    /// Seed of the private stochastic-rounding uniform stream (entry
+    /// index is the counter).
+    #[inline]
+    fn useed(&self, worker: u32) -> u32 {
+        self.seed ^ pcg_hash(0x7C3, worker) ^ self.round.wrapping_mul(0x9E37_79B9)
+    }
+
     /// Private stochastic-rounding uniform for entry `idx`.
     #[inline]
     fn u(&self, worker: u32, idx: u32) -> f32 {
-        uniform_u01(self.seed ^ pcg_hash(0x7C3, worker) ^ self.round.wrapping_mul(0x9E37_79B9), idx)
+        uniform_u01(self.useed(worker), idx)
     }
 
     pub fn wire_bits_per_entry(&self) -> f64 {
         self.agg_bits as f64
+    }
+
+    /// Scalar reference compress (one entry at a time through the bit
+    /// writer) — [`KernelMode::Scalar`]'s body.
+    fn compress_scalar(
+        &self,
+        data: &[f32],
+        range: &Range<usize>,
+        k: u32,
+        worker: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let mut bw = BitWriter::default();
+        for (i, &v) in data.iter().enumerate() {
+            let idx = range.start + i;
+            let s = self.scales[idx / HADAMARD_BLOCK];
+            let code = self.to_lattice(v, s, k, self.u(worker, idx as u32));
+            bw.push(code, self.agg_bits, out);
+        }
+        bw.flush(out);
+    }
+
+    /// Lane-batched compress: per Hadamard block (chunks are 1024-aligned
+    /// so the scale is constant across a block), quantize 8 entries per
+    /// step. Zero-scale blocks short-circuit to zero codes exactly like
+    /// the scalar `to_lattice`.
+    fn compress_lanes(
+        &self,
+        data: &[f32],
+        range: &Range<usize>,
+        k: u32,
+        worker: u32,
+        out: &mut Vec<u8>,
+    ) {
+        debug_assert_eq!(range.start % HADAMARD_BLOCK, 0);
+        debug_assert_eq!(data.len() % HADAMARD_BLOCK, 0);
+        let useed = self.useed(worker);
+        let kf = k as f32;
+        let mut bw = BitWriter::default();
+        let mut ovf = 0u64;
+        let zero = [0u32; LANE];
+        let mut codes = [0u32; LANE];
+        for (b, blk) in data.chunks_exact(HADAMARD_BLOCK).enumerate() {
+            let base = range.start + b * HADAMARD_BLOCK;
+            let s = self.scales[base / HADAMARD_BLOCK];
+            if s <= 0.0 {
+                for _ in 0..HADAMARD_BLOCK / LANE {
+                    self.emit_lane(&zero, &mut bw, out);
+                }
+                continue;
+            }
+            for (l, lane) in blk.chunks_exact(LANE).enumerate() {
+                let vals: &[f32; LANE] = lane.try_into().unwrap();
+                let ctr0 = (base + l * LANE) as u32;
+                ovf += self.lattice_lane(vals, s, kf, useed, ctr0, &mut codes);
+                self.emit_lane(&codes, &mut bw, out);
+            }
+        }
+        bw.flush(out);
+        if ovf > 0 {
+            self.ovf.fetch_add(ovf, Ordering::Relaxed);
+        }
+    }
+
+    /// Lane-batched dequantize: `sink(lane_values)` per 8 entries with
+    /// the per-block step/offset hoisted (8-bit codes read straight off
+    /// byte lanes; 12/16-bit through the bit reader).
+    fn decode_lanes<F: FnMut(usize, &[f32; LANE])>(
+        &self,
+        bytes: &[u8],
+        range: &Range<usize>,
+        k: u32,
+        mut sink: F,
+    ) {
+        debug_assert_eq!(range.start % HADAMARD_BLOCK, 0);
+        debug_assert_eq!(range.len() % HADAMARD_BLOCK, 0);
+        let kf = k as f32;
+        let qf = Q_LEVELS as f32;
+        let nblocks = range.len() / HADAMARD_BLOCK;
+        let mut br = BitReader::new(bytes);
+        let mut vals = [0.0f32; LANE];
+        for b in 0..nblocks {
+            let base = range.start + b * HADAMARD_BLOCK;
+            let s = self.scales[base / HADAMARD_BLOCK];
+            // same op sequence as from_lattice: 2s/q then mul, then − k·s
+            let step = 2.0 * s / qf;
+            let offset = kf * s;
+            for l in 0..HADAMARD_BLOCK / LANE {
+                let at = b * HADAMARD_BLOCK + l * LANE;
+                if self.agg_bits == 8 {
+                    let lane: &[u8; LANE] = bytes[at..at + LANE].try_into().unwrap();
+                    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                    if crate::util::simd::have_avx2() {
+                        // Safety: AVX2 presence checked.
+                        unsafe { crate::util::simd::thc8_decode_8(lane, step, offset, &mut vals) };
+                        sink(at, &vals);
+                        continue;
+                    }
+                    for j in 0..LANE {
+                        vals[j] = lane[j] as f32 * step - offset;
+                    }
+                } else {
+                    for v in vals.iter_mut() {
+                        *v = br.read(self.agg_bits) as f32 * step - offset;
+                    }
+                }
+                sink(at, &vals);
+            }
+        }
+    }
+
+    /// Scalar reference fused hop — [`KernelMode::Scalar`]'s body.
+    #[allow(clippy::too_many_arguments)]
+    fn dar_scalar(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: &Range<usize>,
+        worker: u32,
+        out: &mut Vec<u8>,
+    ) {
+        let max_code = (1u32 << self.agg_bits) - 1;
+        let mut br = BitReader::new(bytes);
+        let mut bw = BitWriter::default();
+        for (i, &p) in local.iter().enumerate() {
+            let c = br.read(self.agg_bits);
+            let idx = range.start + i;
+            let s = self.scales[idx / HADAMARD_BLOCK];
+            let lc = self.to_lattice(p, s, 1, self.u(worker, idx as u32));
+            let sum = c + lc;
+            if sum > max_code {
+                self.ovf.fetch_add(1, Ordering::Relaxed);
+            }
+            bw.push(sum.min(max_code), self.agg_bits, out);
+        }
+        bw.flush(out);
+    }
+
+    /// Lane-batched fused hop: read 8 incoming code sums, quantize the
+    /// 8 local entries (k = 1), integer-add, saturate, re-emit.
+    fn dar_lanes(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: &Range<usize>,
+        worker: u32,
+        out: &mut Vec<u8>,
+    ) {
+        debug_assert_eq!(range.start % HADAMARD_BLOCK, 0);
+        debug_assert_eq!(local.len() % HADAMARD_BLOCK, 0);
+        let useed = self.useed(worker);
+        let max_code = (1u32 << self.agg_bits) - 1;
+        let mut br = BitReader::new(bytes);
+        let mut bw = BitWriter::default();
+        let mut ovf = 0u64;
+        let mut incoming = [0u32; LANE];
+        let mut codes = [0u32; LANE];
+        for (b, blk) in local.chunks_exact(HADAMARD_BLOCK).enumerate() {
+            let base = range.start + b * HADAMARD_BLOCK;
+            let s = self.scales[base / HADAMARD_BLOCK];
+            for (l, lane) in blk.chunks_exact(LANE).enumerate() {
+                let at = b * HADAMARD_BLOCK + l * LANE;
+                if self.agg_bits == 8 {
+                    let src: &[u8; LANE] = bytes[at..at + LANE].try_into().unwrap();
+                    for j in 0..LANE {
+                        incoming[j] = src[j] as u32;
+                    }
+                } else {
+                    for c in incoming.iter_mut() {
+                        *c = br.read(self.agg_bits);
+                    }
+                }
+                if s <= 0.0 {
+                    codes = [0u32; LANE];
+                } else {
+                    let vals: &[f32; LANE] = lane.try_into().unwrap();
+                    let ctr0 = (base + l * LANE) as u32;
+                    ovf += self.lattice_lane(vals, s, 1.0, useed, ctr0, &mut codes);
+                }
+                for j in 0..LANE {
+                    let sum = incoming[j] + codes[j];
+                    ovf += (sum > max_code) as u64;
+                    codes[j] = sum.min(max_code);
+                }
+                self.emit_lane(&codes, &mut bw, out);
+            }
+        }
+        bw.flush(out);
+        if ovf > 0 {
+            self.ovf.fetch_add(ovf, Ordering::Relaxed);
+        }
     }
 }
 
@@ -286,18 +571,15 @@ impl GradCodec for ThcCodec {
 
     fn compress_into(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
         debug_assert_eq!(data.len(), range.len());
-        let k = ctx.summed;
         let want = self.payload_bytes(range.len());
         out.reserve(want);
         let start = out.len();
-        let mut bw = BitWriter::default();
-        for (i, &v) in data.iter().enumerate() {
-            let idx = range.start + i;
-            let s = self.scales[idx / HADAMARD_BLOCK];
-            let code = self.to_lattice(v, s, k, self.u(ctx.worker, idx as u32));
-            bw.push(code, self.agg_bits, out);
+        match self.mode {
+            KernelMode::Scalar => self.compress_scalar(data, &range, ctx.summed, ctx.worker, out),
+            KernelMode::Vectorized => {
+                self.compress_lanes(data, &range, ctx.summed, ctx.worker, out)
+            }
         }
-        bw.flush(out);
         // the 12-bit layout pads odd tails to a full 3-byte triple
         while out.len() - start < want {
             out.push(0);
@@ -306,11 +588,18 @@ impl GradCodec for ThcCodec {
 
     fn decompress_into(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx, out: &mut [f32]) {
         debug_assert_eq!(out.len(), range.len());
-        let mut br = BitReader::new(bytes);
-        for (i, o) in out.iter_mut().enumerate() {
-            let c = br.read(self.agg_bits);
-            let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
-            *o = self.from_lattice(c, s, ctx.summed);
+        match self.mode {
+            KernelMode::Scalar => {
+                let mut br = BitReader::new(bytes);
+                for (i, o) in out.iter_mut().enumerate() {
+                    let c = br.read(self.agg_bits);
+                    let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
+                    *o = self.from_lattice(c, s, ctx.summed);
+                }
+            }
+            KernelMode::Vectorized => self.decode_lanes(bytes, &range, ctx.summed, |at, vals| {
+                out[at..at + LANE].copy_from_slice(vals);
+            }),
         }
     }
 
@@ -321,11 +610,21 @@ impl GradCodec for ThcCodec {
         range: Range<usize>,
         ctx: &HopCtx,
     ) {
-        let mut br = BitReader::new(bytes);
-        for (i, a) in acc.iter_mut().enumerate() {
-            let c = br.read(self.agg_bits);
-            let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
-            *a += self.from_lattice(c, s, ctx.summed);
+        match self.mode {
+            KernelMode::Scalar => {
+                let mut br = BitReader::new(bytes);
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let c = br.read(self.agg_bits);
+                    let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
+                    *a += self.from_lattice(c, s, ctx.summed);
+                }
+            }
+            KernelMode::Vectorized => self.decode_lanes(bytes, &range, ctx.summed, |at, vals| {
+                let dst = &mut acc[at..at + LANE];
+                for j in 0..LANE {
+                    dst[j] += vals[j];
+                }
+            }),
         }
     }
 
@@ -343,24 +642,13 @@ impl GradCodec for ThcCodec {
         out: &mut Vec<u8>,
     ) {
         debug_assert_eq!(local.len(), range.len());
-        let max_code = (1u32 << self.agg_bits) - 1;
         let want = self.payload_bytes(range.len());
         out.reserve(want);
         let start = out.len();
-        let mut br = BitReader::new(bytes);
-        let mut bw = BitWriter::default();
-        for (i, &p) in local.iter().enumerate() {
-            let c = br.read(self.agg_bits);
-            let idx = range.start + i;
-            let s = self.scales[idx / HADAMARD_BLOCK];
-            let lc = self.to_lattice(p, s, 1, self.u(ctx.worker, idx as u32));
-            let sum = c + lc;
-            if sum > max_code {
-                self.ovf.fetch_add(1, Ordering::Relaxed);
-            }
-            bw.push(sum.min(max_code), self.agg_bits, out);
+        match self.mode {
+            KernelMode::Scalar => self.dar_scalar(bytes, local, &range, ctx.worker, out),
+            KernelMode::Vectorized => self.dar_lanes(bytes, local, &range, ctx.worker, out),
         }
-        bw.flush(out);
         while out.len() - start < want {
             out.push(0);
         }
@@ -375,6 +663,14 @@ impl GradCodec for ThcCodec {
 
     fn overflow_count(&self) -> u64 {
         self.ovf.load(Ordering::Relaxed)
+    }
+
+    fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.mode = mode;
+    }
+
+    fn kernel_mode(&self) -> KernelMode {
+        self.mode
     }
 }
 
@@ -484,6 +780,50 @@ mod tests {
         // weakness; cf. Table 3 where THC reaches 0.01–0.2)
         assert!(err < 0.12, "THC 2-worker vNMSE {err}");
         assert_eq!(cb.overflow_count(), 0, "no overflow expected at n=2/b=8");
+    }
+
+    #[test]
+    fn scalar_and_lane_kernels_are_byte_identical() {
+        // all three container widths (8/12/16), zero-scale blocks
+        // included — the scalar reference and the lane path must agree on
+        // every byte and on the overflow tally
+        let mut rng = Pcg::new(21);
+        let d = 4 * HADAMARD_BLOCK;
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 0.01);
+        // zero out one block (zero scale ⇒ the s <= 0 shortcut)
+        for v in g[HADAMARD_BLOCK..2 * HADAMARD_BLOCK].iter_mut() {
+            *v = 0.0;
+        }
+        for bits in [8u32, 12, 16] {
+            let build = |mode: KernelMode| {
+                let mut c = ThcCodec::new(7);
+                c.set_kernel_mode(mode);
+                let cx = ctx(0, 2, 1);
+                let meta = c.metadata(&g, &cx);
+                let pre = c.begin_round(&g, &meta, &cx);
+                c.agg_bits = bits; // exercise all widths regardless of n
+                (c, pre)
+            };
+            let (cs, pre) = build(KernelMode::Scalar);
+            let (cv, pre_v) = build(KernelMode::Vectorized);
+            assert_eq!(pre, pre_v);
+            let r = 0..pre.len();
+            let cx = ctx(0, 2, 1);
+            let ws = cs.compress(&pre, r.clone(), &cx);
+            let wv = cv.compress(&pre_v, r.clone(), &cx);
+            assert_eq!(ws, wv, "compress bits={bits}");
+            assert_eq!(cs.overflow_count(), cv.overflow_count(), "ovf bits={bits}");
+            let ds = cs.decompress(&ws, r.clone(), &cx);
+            let dv = cv.decompress(&wv, r.clone(), &cx);
+            for (a, b) in ds.iter().zip(&dv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "decompress bits={bits}");
+            }
+            let fs = cs.decompress_accumulate_recompress(&ws, &pre, r.clone(), &cx);
+            let fv = cv.decompress_accumulate_recompress(&wv, &pre_v, r.clone(), &cx);
+            assert_eq!(fs, fv, "fused bits={bits}");
+            assert_eq!(cs.overflow_count(), cv.overflow_count(), "fused ovf bits={bits}");
+        }
     }
 
     #[test]

@@ -17,20 +17,26 @@
 //!
 //! Execution model: invalid worker counts surface as
 //! [`TopologyError`] (`run` returns `Result`); kernel work within a stage
-//! runs on up to [`AllReduceEngine::threads`] scoped threads, partitioned
-//! by producing worker — results are byte-identical for every thread
-//! count because each worker's sends execute in hop order and outputs are
-//! consumed in hop order. With a caller-held [`ScratchPool`]
-//! ([`AllReduceEngine::run_pooled`]), payload arenas and decode slabs are
-//! reused across stages and rounds, so the steady-state hop path performs
-//! zero heap allocations (asserted by `tests/alloc_regression`).
+//! runs on the engine's persistent [`WorkerPool`] (up to
+//! [`AllReduceEngine::threads`] executors; the pool's threads are spawned
+//! once per engine lifetime and parked between stages — no per-stage
+//! `thread::scope` respawn), partitioned by producing worker — results
+//! are byte-identical for every thread count because each worker's sends
+//! execute in hop order and outputs are consumed in hop order. With a
+//! caller-held [`ScratchPool`] ([`AllReduceEngine::run_pooled`]), payload
+//! arenas and decode slabs are reused across stages and rounds, so the
+//! steady-state hop path performs zero heap allocations (asserted by
+//! `tests/alloc_regression`, which also pins that steady-state rounds
+//! spawn zero threads).
 
 use std::ops::Range;
+use std::sync::{Mutex, OnceLock};
 
 use crate::codec::{GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
 use crate::collective::network::{LinkClass, NetworkModel};
 use crate::collective::topology::{Hop, Topology, TopologyError};
 use crate::util::par;
+use crate::util::pool::WorkerPool;
 
 #[derive(Clone, Debug, Default)]
 pub struct RoundReport {
@@ -144,20 +150,44 @@ pub fn produce_hop(
     summed
 }
 
-/// Run a `&mut`-codec round-boundary method (`metadata` / `begin_round` /
-/// `end_round`) once per worker, on up to `threads` scoped threads, and
-/// collect the per-worker vectors in worker order.
-fn par_map_codecs<F>(codecs: &mut [Box<dyn GradCodec>], threads: usize, f: F) -> Vec<Vec<f32>>
-where
-    F: Fn(usize, &mut dyn GradCodec) -> Vec<f32> + Sync,
-{
-    let mut tasks: Vec<(usize, &mut Box<dyn GradCodec>, Vec<f32>)> =
-        codecs.iter_mut().enumerate().map(|(i, c)| (i, c, Vec::new())).collect();
-    par::par_iter_mut(&mut tasks, threads, |_, t| {
-        let (i, c, out) = t;
-        *out = f(*i, c.as_mut());
-    });
-    tasks.into_iter().map(|t| t.2).collect()
+/// One send of a stage, owned by its producing worker's [`WorkerJob`]
+/// while the pool executes the stage (always literal-constructed at
+/// stage build; only the containing `sends` Vec needs `Default`).
+struct SendJob {
+    /// position in the stage's hop list (restores hop-order output)
+    pos: usize,
+    to: u32,
+    chunk: u32,
+    range: Range<usize>,
+    /// per-send context (hops of one worker can ride different hierarchy
+    /// levels within a stage)
+    ctx: HopCtx,
+    received: Vec<(Vec<u8>, u32)>,
+    out: Vec<u8>,
+    summed: u32,
+}
+
+/// All sends of one producing worker within a stage — the unit the
+/// [`WorkerPool`] distributes (a worker's sends execute in hop order, so
+/// outputs are byte-identical for any executor count).
+#[derive(Default)]
+struct WorkerJob {
+    w: u32,
+    scratch: WorkerScratch,
+    recycle: Vec<Vec<u8>>,
+    counters: KernelCounters,
+    sends: Vec<SendJob>,
+}
+
+/// Reusable spines of the parallel stage path (worker→job slots, the job
+/// table, and a free list of drained jobs whose `sends`/`recycle`
+/// capacity carries over) — held per engine so steady-state stages push
+/// into warm capacity instead of allocating.
+#[derive(Default)]
+struct StageState {
+    slot: Vec<i32>,
+    jobs: Vec<WorkerJob>,
+    spare: Vec<WorkerJob>,
 }
 
 pub struct AllReduceEngine {
@@ -167,9 +197,23 @@ pub struct AllReduceEngine {
     pub verify_consistency: bool,
     /// compute the exact sum and record vNMSE (costs an extra O(nd) pass)
     pub measure_vnmse: bool,
-    /// scoped-thread budget for per-stage worker kernel execution (1 =
-    /// fully sequential; results are identical for any value)
+    /// executor budget for per-stage worker kernel execution (1 = fully
+    /// sequential; results are identical for any value). Values above 1
+    /// run on the engine's persistent worker pool.
     pub threads: usize,
+    /// Persistent pinned worker pool for stage execution, created lazily
+    /// on the first parallel round (so `threads = 1` engines — e.g. every
+    /// sweep cell under `repro --jobs` — never spawn a thread) and
+    /// reused across all stages and rounds of this engine's lifetime.
+    /// Sized from the `threads` budget in force at that first use,
+    /// capped by the hardware: raising `threads` afterwards does not
+    /// grow it.
+    pool: OnceLock<WorkerPool>,
+    /// Reusable parallel-stage spines (see [`StageState`]); also the
+    /// engine's round lock — `run_pooled` holds it end-to-end, so
+    /// concurrent rounds on one shared engine serialize instead of
+    /// tripping the pool's non-reentrancy assert.
+    stage: Mutex<StageState>,
 }
 
 impl AllReduceEngine {
@@ -180,7 +224,48 @@ impl AllReduceEngine {
             verify_consistency: false,
             measure_vnmse: true,
             threads: par::num_threads(),
+            pool: OnceLock::new(),
+            stage: Mutex::new(StageState::default()),
         }
+    }
+
+    /// The engine's persistent worker pool, spawned on first use and
+    /// sized to the smaller of the configured `threads` budget and the
+    /// hardware (the calling thread participates in every stage, so one
+    /// less pool thread than executors) — an engine throttled to
+    /// `threads = 2` parks one helper thread, not a whole machine.
+    fn worker_pool(&self) -> &WorkerPool {
+        self.pool.get_or_init(|| {
+            WorkerPool::new(self.threads.min(par::num_threads()).saturating_sub(1))
+        })
+    }
+
+    /// Run a `&mut`-codec round-boundary method (`metadata` /
+    /// `begin_round` / `end_round`) once per worker on the engine's pool,
+    /// collecting the per-worker vectors in worker order.
+    fn par_map_codecs<F>(
+        &self,
+        codecs: &mut [Box<dyn GradCodec>],
+        threads: usize,
+        f: F,
+    ) -> Vec<Vec<f32>>
+    where
+        F: Fn(usize, &mut dyn GradCodec) -> Vec<f32> + Sync,
+    {
+        let mut tasks: Vec<(usize, &mut Box<dyn GradCodec>, Vec<f32>)> =
+            codecs.iter_mut().enumerate().map(|(i, c)| (i, c, Vec::new())).collect();
+        if threads > 1 && tasks.len() > 1 {
+            self.worker_pool().run(&mut tasks, threads, |_, t| {
+                let (i, c, out) = t;
+                *out = f(*i, c.as_mut());
+            });
+        } else {
+            for t in tasks.iter_mut() {
+                let (i, c, out) = t;
+                *out = f(*i, c.as_mut());
+            }
+        }
+        tasks.into_iter().map(|t| t.2).collect()
     }
 
     /// Run one synchronization round. `grads[i]` is worker i's local
@@ -218,6 +303,17 @@ impl AllReduceEngine {
         let d = grads[0].len();
         assert!(grads.iter().all(|g| g.len() == d));
         let threads = self.threads.clamp(1, n.max(1));
+        // The engine's round lock: held end-to-end so concurrent rounds
+        // on one shared engine serialize (the worker pool is not
+        // reentrant), and the parallel-stage spines inside are reused
+        // across stages and rounds. A poisoned lock means an earlier
+        // round panicked mid-stage; the stale state is discarded at the
+        // next parallel stage, so recover the guard.
+        let mut round_guard = match self.stage.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let stage_state = &mut *round_guard;
         let mut report = RoundReport::default();
         let mut now = t0;
 
@@ -231,8 +327,9 @@ impl AllReduceEngine {
         };
 
         // ---- stage 1: lightweight metadata all-reduce (Fig. 2b) ----
-        let metas: Vec<Vec<f32>> =
-            par_map_codecs(codecs, threads, |i, c| c.metadata(&grads[i], &mk_ctx(i as u32, 1)));
+        let metas: Vec<Vec<f32>> = self.par_map_codecs(codecs, threads, |i, c| {
+            c.metadata(&grads[i], &mk_ctx(i as u32, 1))
+        });
         let mlen = metas[0].len();
         assert!(metas.iter().all(|m| m.len() == mlen), "metadata length disagreement");
         let op = codecs[0].metadata_op();
@@ -271,7 +368,7 @@ impl AllReduceEngine {
         // ---- stage 2: preprocess (normalize, allocate, reorder) ----
         let pres: Vec<Vec<f32>> = {
             let agg = &agg_meta;
-            par_map_codecs(codecs, threads, |i, c| {
+            self.par_map_codecs(codecs, threads, |i, c| {
                 c.begin_round(&grads[i], agg, &mk_ctx(i as u32, 1))
             })
         };
@@ -291,8 +388,8 @@ impl AllReduceEngine {
         let mut stage_msgs: Vec<(u64, LinkClass)> = Vec::new();
         for hops in &rs_sched {
             self.run_stage(
-                hops, codecs_ro, &pres, &ranges, n, round, threads, pool, &mut report,
-                &mut produced,
+                hops, codecs_ro, &pres, &ranges, n, round, threads, pool, stage_state,
+                &mut report, &mut produced,
             );
             // each message priced on the link tier its hop crosses
             // (intra-node vs NIC for hierarchical topologies)
@@ -315,8 +412,8 @@ impl AllReduceEngine {
         let sink_hops: Vec<Hop> =
             (0..n as u32).map(|c| Hop { from: c, to: c, chunk: c }).collect();
         self.run_stage(
-            &sink_hops, codecs_ro, &pres, &ranges, n, round, threads, pool, &mut report,
-            &mut produced,
+            &sink_hops, codecs_ro, &pres, &ranges, n, round, threads, pool, stage_state,
+            &mut report, &mut produced,
         );
         let mut broadcast: Vec<(Vec<u8>, u32)> = Vec::with_capacity(n);
         for (_, chunk, payload, summed) in produced.drain(..) {
@@ -375,7 +472,7 @@ impl AllReduceEngine {
         // (workers all hold the same sum) and return worker 0's view.
         let result = {
             let sp = &summed_pre;
-            let outs = par_map_codecs(codecs, threads, |i, c| {
+            let outs = self.par_map_codecs(codecs, threads, |i, c| {
                 c.end_round(sp.clone(), &mk_ctx(i as u32, n as u32))
             });
             let mut outs = outs.into_iter();
@@ -417,8 +514,10 @@ impl AllReduceEngine {
     /// the sink-finalize pseudo-stage), filling `produced` with
     /// `(to, chunk, payload, summed)` in hop order. Sequential when
     /// `threads <= 1` (the zero-allocation path); otherwise sends are
-    /// grouped by producing worker and run on scoped threads — numerics
-    /// are identical either way.
+    /// grouped by producing worker and run on the engine's persistent
+    /// [`WorkerPool`] (no per-stage thread spawn; the job spines come
+    /// from the reusable [`StageState`], so warm stages stay off the
+    /// heap here too) — numerics are identical either way.
     #[allow(clippy::too_many_arguments)]
     fn run_stage(
         &self,
@@ -430,6 +529,7 @@ impl AllReduceEngine {
         round: u32,
         threads: usize,
         pool: &mut ScratchPool,
+        stage: &mut StageState,
         report: &mut RoundReport,
         produced: &mut Vec<(u32, u32, Vec<u8>, u32)>,
     ) {
@@ -470,39 +570,24 @@ impl AllReduceEngine {
             return;
         }
 
-        struct SendJob {
-            pos: usize,
-            to: u32,
-            chunk: u32,
-            range: Range<usize>,
-            /// per-send context (hops of one worker can ride different
-            /// hierarchy levels within a stage)
-            ctx: HopCtx,
-            received: Vec<(Vec<u8>, u32)>,
-            out: Vec<u8>,
-            summed: u32,
-        }
-        struct WorkerJob {
-            w: u32,
-            scratch: WorkerScratch,
-            recycle: Vec<Vec<u8>>,
-            counters: KernelCounters,
-            sends: Vec<SendJob>,
-        }
-        let mut slot: Vec<i32> = vec![-1; n];
-        let mut jobs: Vec<WorkerJob> = Vec::new();
+        let StageState { slot, jobs, spare } = stage;
+        // a panicked earlier stage may have stranded jobs here (their
+        // scratch belonged to that round's ScratchPool); drop them rather
+        // than ever reusing stale state — the pools simply re-warm
+        jobs.clear();
+        slot.clear();
+        slot.resize(n, -1);
         for (pos, h) in hops.iter().enumerate() {
             let ji = if slot[h.from as usize] >= 0 {
                 slot[h.from as usize] as usize
             } else {
                 slot[h.from as usize] = jobs.len() as i32;
-                jobs.push(WorkerJob {
-                    w: h.from,
-                    scratch: std::mem::take(&mut pool.workers[h.from as usize]),
-                    recycle: Vec::new(),
-                    counters: KernelCounters::default(),
-                    sends: Vec::new(),
-                });
+                let mut job = spare.pop().unwrap_or_default();
+                debug_assert!(job.sends.is_empty() && job.recycle.is_empty());
+                job.w = h.from;
+                job.scratch = std::mem::take(&mut pool.workers[h.from as usize]);
+                job.counters = KernelCounters::default();
+                jobs.push(job);
                 jobs.len() - 1
             };
             let idx = h.from as usize * n + h.chunk as usize;
@@ -519,37 +604,61 @@ impl AllReduceEngine {
                 summed: 0,
             });
         }
-        par::par_iter_mut(&mut jobs, threads, |_, job| {
-            let codec = codecs[job.w as usize].as_ref();
-            let pre = &pres[job.w as usize];
-            for s in job.sends.iter_mut() {
-                s.summed = produce_hop(
-                    codec,
-                    pre,
-                    &mut s.received,
-                    s.range.clone(),
-                    &s.ctx,
-                    &mut job.scratch,
-                    &mut s.out,
-                    &mut job.recycle,
-                    &mut job.counters,
-                );
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.worker_pool().run(&mut jobs[..], threads, |_, job| {
+                let codec = codecs[job.w as usize].as_ref();
+                let pre = &pres[job.w as usize];
+                for s in job.sends.iter_mut() {
+                    let ctx = s.ctx;
+                    s.summed = produce_hop(
+                        codec,
+                        pre,
+                        &mut s.received,
+                        s.range.clone(),
+                        &ctx,
+                        &mut job.scratch,
+                        &mut s.out,
+                        &mut job.recycle,
+                        &mut job.counters,
+                    );
+                }
+            });
+        }));
+        if let Err(payload) = run {
+            // A codec panicked mid-stage (the pool completed the batch and
+            // re-threw). This round's outputs are void, but the engine
+            // must stay usable: hand every moved resource back to the
+            // ScratchPool before re-raising — per-worker scratch,
+            // recycled arenas, and the (possibly mid-fill) in-flight
+            // buffers of every send.
+            for mut job in jobs.drain(..) {
+                pool.workers[job.w as usize] = std::mem::take(&mut job.scratch);
+                pool.bufs.append(&mut job.recycle);
+                for mut s in job.sends.drain(..) {
+                    pool.put_buf(s.out);
+                    for (buf, _) in s.received.drain(..) {
+                        pool.put_buf(buf);
+                    }
+                }
             }
-        });
-        // restore pool state + emit results in hop order
+            std::panic::resume_unwind(payload);
+        }
+        // restore pool state + emit results in hop order; drained jobs go
+        // back to the spare list with their spine capacity intact
         produced.resize_with(hops.len(), || (0, 0, Vec::new(), 0));
-        for mut job in jobs {
+        for mut job in jobs.drain(..) {
             report.absorb(&job.counters);
             let w = job.w as usize;
-            pool.workers[w] = job.scratch;
+            pool.workers[w] = std::mem::take(&mut job.scratch);
             pool.bufs.append(&mut job.recycle);
-            for s in job.sends {
+            for s in job.sends.drain(..) {
                 // hand the (drained) inbox spine back to its slot so the
                 // next stage's delivery push reuses its capacity
                 debug_assert!(s.received.is_empty());
                 pool.inbox[w * n + s.chunk as usize] = s.received;
                 produced[s.pos] = (s.to, s.chunk, s.out, s.summed);
             }
+            spare.push(job);
         }
     }
 }

@@ -11,20 +11,25 @@
 //! deployment-shaped path (the paper's NCCL-P2P communication hook),
 //! while the engine is the experimentation path.
 //!
-//! Each worker thread owns a [`WorkerScratch`] plus a payload-arena free
-//! list for the round: arenas received over a channel are recycled into
-//! the local pool after decode, so a worker's steady-state hop path stays
-//! allocation-free just like the engine's.
+//! Execution model: a [`Coordinator`] is built once (codecs + channel
+//! mesh + a persistent pinned [`WorkerPool`] of n − 1 parked threads; the
+//! calling thread runs the n-th worker) and [`Coordinator::run_round`]
+//! reuses all of it every round — no per-round thread spawn, unlike the
+//! historical spawn-join-per-call shape ([`threaded_allreduce`] remains
+//! as a one-shot wrapper). Each worker keeps a [`WorkerScratch`] plus a
+//! payload-arena free list **across rounds**: arenas received over a
+//! channel are recycled into the local pool after decode, so a worker's
+//! steady-state hop path stays allocation-free just like the engine's.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread;
 
 use anyhow::{anyhow, Result};
 
 use crate::codec::{chunk_ranges, GradCodec, HopCtx, MetaOp, WorkerScratch};
 use crate::collective::allreduce::{produce_hop, KernelCounters};
 use crate::collective::topology::{Hop, Topology};
+use crate::util::pool::WorkerPool;
 
 /// A framed message on a worker-to-worker link.
 enum Msg {
@@ -72,56 +77,146 @@ pub struct WorkerRound {
     pub counters: KernelCounters,
 }
 
-/// Run one all-reduce round with real threads. `grads[i]` is worker i's
-/// local gradient; every worker returns the identical aggregated sum.
+/// Per-worker state the coordinator keeps alive across rounds: the codec
+/// (cross-round state like MXFP's µ), the channel endpoints, and the
+/// round-to-round warm buffers (decode scratch, payload-arena free list,
+/// out-of-phase message parking).
+struct CoWorker {
+    w: u32,
+    codec: Box<dyn GradCodec>,
+    tx: HashMap<u32, Sender<(u32, Msg)>>,
+    rx: Receiver<(u32, Msg)>,
+    scratch: WorkerScratch,
+    arenas: Vec<Vec<u8>>,
+    pending: VecDeque<(u32, Msg)>,
+    /// the current round's outcome, collected after the stage barrier
+    result: Option<Result<WorkerRound>>,
+}
+
+/// Persistent thread-per-worker coordinator: build once, run many
+/// rounds. Workers execute on a pinned [`WorkerPool`] created at
+/// construction (n − 1 parked threads + the calling thread), so rounds
+/// are spawn-free and every worker's scratch/arena pool stays warm from
+/// round to round.
+pub struct Coordinator {
+    topology: Topology,
+    n: usize,
+    pool: WorkerPool,
+    workers: Vec<CoWorker>,
+    /// set when a round failed (panic or recv error): channels may hold
+    /// stray messages, so later rounds would desynchronize — refuse them
+    failed: bool,
+}
+
+impl Coordinator {
+    /// Wire the channel mesh and park the worker threads. Invalid
+    /// (topology, worker count) combinations surface as errors here.
+    pub fn new(topology: Topology, codecs: Vec<Box<dyn GradCodec>>) -> Result<Self> {
+        let n = codecs.len();
+        // validate up front so run_round's schedules cannot fail
+        topology.try_reduce_scatter(n)?;
+        topology.try_all_gather(n)?;
+        let links = mesh(n);
+        let workers = codecs
+            .into_iter()
+            .zip(links.tx)
+            .zip(links.rx)
+            .enumerate()
+            .map(|(w, ((codec, tx), rx))| CoWorker {
+                w: w as u32,
+                codec,
+                tx,
+                rx,
+                scratch: WorkerScratch::default(),
+                arenas: Vec::new(),
+                pending: VecDeque::new(),
+                result: None,
+            })
+            .collect();
+        Ok(Coordinator {
+            topology,
+            n,
+            pool: WorkerPool::new(n.saturating_sub(1)),
+            workers,
+            failed: false,
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.n
+    }
+
+    /// Run one all-reduce round. `grads[i]` is worker i's local gradient;
+    /// every worker returns the identical aggregated sum. The pool's
+    /// stage barrier separates rounds completely (all channels drained
+    /// before this returns), so tags never leak across rounds.
+    ///
+    /// Failure model: a panicking worker is caught on its pool thread;
+    /// its peers cannot fast-fail (the mesh's senders live in the
+    /// coordinator, so channels never hang up) but their 60 s
+    /// `recv_timeout` bounds the stall — the round then returns `Err`.
+    /// Any failed round leaves channels in an unknown state, so the
+    /// coordinator marks itself poisoned and refuses further rounds;
+    /// rebuild it with [`Coordinator::new`].
+    pub fn run_round(&mut self, grads: &[Vec<f32>], round: u32) -> Result<Vec<WorkerRound>> {
+        assert_eq!(grads.len(), self.n, "gradient count must match the codec set");
+        if self.failed {
+            return Err(anyhow!(
+                "coordinator is poisoned by an earlier failed round; build a new one"
+            ));
+        }
+        let rs_sched = self.topology.reduce_scatter(self.n);
+        let ag_sched = self.topology.all_gather(self.n);
+        let (topology, n) = (self.topology, self.n);
+        let workers = &mut self.workers;
+        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.pool.run(workers, n, |i, st| {
+                st.result =
+                    Some(run_worker(st, &grads[i], n, round, topology, &rs_sched, &ag_sched));
+            });
+        }));
+        if run.is_err() {
+            self.failed = true;
+            return Err(anyhow!("worker panicked"));
+        }
+        let out: Result<Vec<WorkerRound>> = self
+            .workers
+            .iter_mut()
+            .map(|st| st.result.take().unwrap_or_else(|| Err(anyhow!("worker never ran"))))
+            .collect();
+        if out.is_err() {
+            self.failed = true;
+        }
+        out
+    }
+}
+
+/// Run one all-reduce round with real threads (one-shot wrapper over
+/// [`Coordinator`]: builds the mesh + pool, runs a single round, tears
+/// down). `grads[i]` is worker i's local gradient; every worker returns
+/// the identical aggregated sum. Call sites running many rounds should
+/// hold a [`Coordinator`] instead — that is the spawn-free path.
 pub fn threaded_allreduce(
     topology: Topology,
     grads: Vec<Vec<f32>>,
     codecs: Vec<Box<dyn GradCodec>>,
     round: u32,
 ) -> Result<Vec<WorkerRound>> {
-    let n = grads.len();
-    assert_eq!(codecs.len(), n);
-    // invalid worker counts surface as errors (not panics) on this path
-    let rs_sched = topology.try_reduce_scatter(n)?;
-    let ag_sched = topology.try_all_gather(n)?;
-    let links = mesh(n);
-
-    let mut handles = Vec::with_capacity(n);
-    let mut txs: Vec<HashMap<u32, Sender<(u32, Msg)>>> = links.tx;
-    let mut rxs: Vec<Receiver<(u32, Msg)>> = links.rx;
-    for (w_rev, (grad, mut codec)) in grads.into_iter().zip(codecs).enumerate().rev() {
-        // (iterate in reverse so pop() hands out matching ends)
-        let w = w_rev as u32;
-        let tx = txs.pop().unwrap();
-        let rx = rxs.pop().unwrap();
-        let rs_sched = rs_sched.clone();
-        let ag_sched = ag_sched.clone();
-        handles.push(thread::spawn(move || -> Result<WorkerRound> {
-            run_worker(w, n, round, topology, grad, codec.as_mut(), &tx, &rx, &rs_sched, &ag_sched)
-        }));
-    }
-    let mut out: Vec<WorkerRound> = handles
-        .into_iter()
-        .map(|h| h.join().map_err(|_| anyhow!("worker panicked"))?)
-        .collect::<Result<_>>()?;
-    out.sort_by_key(|w| w.worker);
-    Ok(out)
+    assert_eq!(codecs.len(), grads.len());
+    let mut coordinator = Coordinator::new(topology, codecs)?;
+    coordinator.run_round(&grads, round)
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_worker(
-    w: u32,
+    st: &mut CoWorker,
+    grad: &[f32],
     n: usize,
     round: u32,
     topology: Topology,
-    grad: Vec<f32>,
-    codec: &mut dyn GradCodec,
-    tx: &HashMap<u32, Sender<(u32, Msg)>>,
-    rx: &Receiver<(u32, Msg)>,
     rs_sched: &[Vec<Hop>],
     ag_sched: &[Vec<Hop>],
 ) -> Result<WorkerRound> {
+    let w = st.w;
     // Round-boundary / sink / decode contexts ride the broadcast class
     // (the final sum's nominal budget); per-send contexts carry the hop's
     // level — both mirror the engine exactly, which is what keeps the two
@@ -133,17 +228,20 @@ fn run_worker(
     };
     // Out-of-phase buffer: a fast peer may already be in reduce-scatter
     // while we still await metadata (butterfly especially) — chunks that
-    // arrive early are parked here.
-    let mut pending: std::collections::VecDeque<(u32, Msg)> = Default::default();
+    // arrive early are parked here. Persistent across rounds but always
+    // drained by round end (every expected message is received).
+    let pending = &mut st.pending;
+    let codec = st.codec.as_mut();
+    let (tx, rx) = (&st.tx, &st.rx);
 
     // ---- metadata ring all-reduce (reduce pass toward n−1, then
     // broadcast n−1 → 0 → 1 → … → n−2) ----
-    let local_meta = codec.metadata(&grad, &ctx(1));
+    let local_meta = codec.metadata(grad, &ctx(1));
     let op = codec.metadata_op();
     let next = ((w as usize + 1) % n) as u32;
     let mut acc = local_meta.clone();
     if w != 0 {
-        let v = recv_meta(rx, &mut pending)?;
+        let v = recv_meta(rx, pending)?;
         for (a, b) in acc.iter_mut().zip(v) {
             *a = match op {
                 MetaOp::Sum => *a + b,
@@ -157,7 +255,7 @@ fn run_worker(
     if (w as usize) == n - 1 {
         tx[&next].send((w, Msg::Meta(acc.clone()))).map_err(|_| anyhow!("send"))?;
     } else {
-        acc = recv_meta(rx, &mut pending)?;
+        acc = recv_meta(rx, pending)?;
         if (w as usize) != n - 2 {
             tx[&next].send((w, Msg::Meta(acc.clone()))).map_err(|_| anyhow!("send"))?;
         }
@@ -165,14 +263,15 @@ fn run_worker(
     let agg_meta = acc;
 
     // ---- preprocess ----
-    let pre = codec.begin_round(&grad, &agg_meta, &ctx(1));
+    let pre = codec.begin_round(grad, &agg_meta, &ctx(1));
     let ranges = chunk_ranges(pre.len(), n, codec.chunk_alignment());
 
     // ---- reduce-scatter ----
-    // Per-thread scratch for the round: decode slabs + a payload-arena
-    // free list fed by arenas that arrive over the channels.
-    let mut scratch = WorkerScratch::default();
-    let mut arenas: Vec<Vec<u8>> = Vec::new();
+    // This worker's warm scratch: decode slabs + a payload-arena free
+    // list fed by arenas that arrive over the channels — carried across
+    // rounds by the Coordinator, so steady-state rounds reuse capacity.
+    let scratch = &mut st.scratch;
+    let arenas = &mut st.arenas;
     let mut counters = KernelCounters::default();
     let mut incoming: HashMap<u32, Vec<(Vec<u8>, u32)>> = HashMap::new();
     let mut rs_bytes = 0u64;
@@ -183,15 +282,16 @@ fn run_worker(
             let range = ranges[h.chunk as usize].clone();
             let mut received = incoming.remove(&h.chunk).unwrap_or_default();
             let mut payload = arenas.pop().unwrap_or_default();
+            payload.clear();
             let summed = produce_hop(
                 codec,
                 &pre,
                 &mut received,
                 range,
                 &hop_ctx(h.to),
-                &mut scratch,
+                scratch,
                 &mut payload,
-                &mut arenas,
+                arenas,
                 &mut counters,
             );
             rs_bytes += payload.len() as u64;
@@ -200,7 +300,7 @@ fn run_worker(
                 .map_err(|_| anyhow!("send"))?;
         }
         for _ in 0..my_recvs {
-            let (c, payload, summed) = recv_chunk(rx, &mut pending, 0, stage as u32)?;
+            let (c, payload, summed) = recv_chunk(rx, pending, 0, stage as u32)?;
             incoming.entry(c).or_default().push((payload, summed));
         }
     }
@@ -211,15 +311,16 @@ fn run_worker(
         let range = ranges[w as usize].clone();
         let mut received = incoming.remove(&w).unwrap_or_default();
         let mut payload = arenas.pop().unwrap_or_default();
+        payload.clear();
         let summed = produce_hop(
             codec,
             &pre,
             &mut received,
             range,
             &ctx(1),
-            &mut scratch,
+            scratch,
             &mut payload,
-            &mut arenas,
+            arenas,
             &mut counters,
         );
         debug_assert_eq!(summed, n as u32);
@@ -242,7 +343,7 @@ fn run_worker(
                 .map_err(|_| anyhow!("send"))?;
         }
         for _ in 0..my_recvs {
-            let (c, payload, summed) = recv_chunk(rx, &mut pending, 1, stage as u32)?;
+            let (c, payload, summed) = recv_chunk(rx, pending, 1, stage as u32)?;
             broadcast.insert(c, (payload, summed));
         }
     }
@@ -256,7 +357,12 @@ fn run_worker(
         }
         codec.decompress_into(payload, range.clone(), &ctx(*k), &mut summed_pre[range]);
     }
+    // recycle the round's broadcast arenas into the warm free list
+    for (_, (payload, _)) in broadcast {
+        arenas.push(payload);
+    }
     let aggregated = codec.end_round(summed_pre, &ctx(n as u32));
+    debug_assert!(pending.is_empty(), "messages leaked across the round boundary");
     Ok(WorkerRound {
         worker: w,
         aggregated,
@@ -408,6 +514,32 @@ mod tests {
         );
         let msg = r.err().expect("must reject 8 % 3 != 0").to_string();
         assert!(msg.contains("do not divide"), "{msg}");
+    }
+
+    #[test]
+    fn persistent_coordinator_matches_engine_across_rounds() {
+        // One Coordinator, many rounds: warm scratch, reused channels and
+        // the parked worker pool must stay bit-identical to a fresh
+        // engine run every round. (Spawn-freeness of steady-state rounds
+        // is pinned by tests/alloc_regression, whose single-test binary
+        // can read the process-global spawn counter race-free.)
+        let n = 4;
+        let mut eng_codecs = make_codecs("DynamiQ", n);
+        let eng = AllReduceEngine::new(Topology::Butterfly, NetworkModel::isolated_100g());
+        let mut coordinator =
+            Coordinator::new(Topology::Butterfly, make_codecs("DynamiQ", n)).unwrap();
+        for round in 0..4u32 {
+            let g = grads(n, 4096, 60 + round as u64);
+            let (expect, _) = eng.run(&g, &mut eng_codecs, round, 0.0).unwrap();
+            let out = coordinator.run_round(&g, round).unwrap();
+            for wr in &out {
+                assert_eq!(
+                    wr.aggregated, expect,
+                    "round {round}: worker {} disagrees with engine",
+                    wr.worker
+                );
+            }
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@ use anyhow::Result;
 use super::Ctx;
 use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
 use crate::codec::{make_codecs, GradCodec, ScratchPool};
+use crate::quant::bitalloc::waterfill_level_budgets;
 use crate::collective::{AllReduceEngine, Level, LevelSpec, NetworkModel, RoundReport, Topology};
 use crate::util::benchkit::Table;
 use crate::util::json::Json;
@@ -200,7 +201,7 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
     for &(topo, n) in &budget_cases {
         topo.validate(n)?;
         let g = grads(n, d, 0xB1D_0 + n as u64);
-        let (base_bits, budgets) = level_budgets_for(&topo, n, 5.0, 1.5, d);
+        let (base_bits, budgets) = level_budgets_for(&topo, n, 5.0, d);
         let labels = [String::from("uniform"), budget_label(base_bits, &budgets)];
         let mut cells: Vec<((f64, Vec<f64>), Option<RoundReport>)> =
             vec![((5.0, Vec::new()), None), ((base_bits, budgets), None)];
@@ -266,15 +267,22 @@ fn budget_label(base_bits: f64, budgets: &[f64]) -> String {
 }
 
 /// A levelled budget configuration `(budget_bits, level_budgets)` at
-/// equal predicted mean wire bytes vs the uniform `base`: count the
-/// reduce-scatter hops riding each level, shift `delta` bits/entry onto
-/// the top tier's few, deep partial sums and take the byte-balancing
-/// amount off the numerous private-tier hops; the broadcast payload
-/// (forwarded n−1 times in the all-gather — boosting it buys the least
-/// noise per byte, see the codec docs) keeps the base budget. Every
-/// budget is then shaved by the width-header overhead the levelled wire
-/// format adds per payload.
-fn level_budgets_for(topo: &Topology, n: usize, base: f64, delta: f64, d: usize) -> (f64, Vec<f64>) {
+/// equal predicted mean wire bytes vs the uniform `base`, water-filled
+/// from the weighted reduce-scatter hop census (replacing the fixed
+/// +1.5-bit top-tier shift): walk the schedule simulating aggregated
+/// counts exactly as `produce_hop` does — a hop's weight is the number
+/// of worker gradients its partial sum carries, the energy its
+/// quantization noise scales with — and let
+/// [`waterfill_level_budgets`] place each level at
+/// `C + ½·log2(energy-per-hop)`. Deep, few top-tier partials sit above
+/// the water line; the numerous shallow private-tier hops pay for them.
+/// The broadcast payload (forwarded n−1 times in the all-gather —
+/// boosting it buys the least noise per byte, see the codec docs) keeps
+/// the base budget. Every budget is then shaved by the width-header
+/// overhead the levelled wire format adds per payload.
+/// `python/validate_level_budgets.py` is the offline oracle for this
+/// construction (same census, same water level, same shave).
+fn level_budgets_for(topo: &Topology, n: usize, base: f64, d: usize) -> (f64, Vec<f64>) {
     let top = topo.top_level() as usize;
     assert!(
         top > 0,
@@ -282,13 +290,27 @@ fn level_budgets_for(topo: &Topology, n: usize, base: f64, delta: f64, d: usize)
         topo.name()
     );
     let mut rs_hops = vec![0f64; top + 1];
+    let mut rs_weight = vec![0f64; top + 1];
+    // simulate per-hop aggregated counts over the schedule (stage-ordered
+    // delivery, mirroring the engine: same-stage sends don't see each
+    // other's payloads)
+    let mut inbox = vec![0u64; n * n];
+    let mut deliver: Vec<(usize, u64)> = Vec::new();
     for hops in &topo.reduce_scatter(n) {
+        deliver.clear();
         for h in hops {
-            rs_hops[topo.hop_level(h.from, h.to) as usize] += 1.0;
+            let idx = h.from as usize * n + h.chunk as usize;
+            let k_out = 1 + std::mem::take(&mut inbox[idx]);
+            let level = topo.hop_level(h.from, h.to) as usize;
+            rs_hops[level] += 1.0;
+            rs_weight[level] += k_out as f64;
+            deliver.push((h.to as usize * n + h.chunk as usize, k_out));
+        }
+        for &(idx, k) in &deliver {
+            inbox[idx] += k;
         }
     }
-    let low: f64 = rs_hops[..top].iter().sum();
-    let take = delta * rs_hops[top] / low;
+    let budgets = waterfill_level_budgets(&rs_hops, &rs_weight, base, 3.0, base + 3.0);
     // width header: one code per super-group plus a 1-byte budget tag per
     // chunk payload — derived from the codec config the sweep runs, so
     // the equal-wire shave tracks the actual wire format
@@ -297,7 +319,5 @@ fn level_budgets_for(topo: &Topology, n: usize, base: f64, delta: f64, d: usize)
     let code_bits = cfg.width_code_bits() as f64;
     let sg_per_chunk = ((d as f64 / n as f64) / sg).max(1.0);
     let hdr = (code_bits * sg_per_chunk + 8.0) / (sg_per_chunk * sg);
-    let mut budgets = vec![base - take - hdr; top + 1];
-    budgets[top] = base + delta - hdr;
-    (base - hdr, budgets)
+    (base - hdr, budgets.into_iter().map(|b| b - hdr).collect())
 }

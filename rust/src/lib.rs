@@ -19,10 +19,28 @@
 //! The codec kernel interface is caller-buffer (`compress_into` /
 //! `decompress_into` / `decompress_accumulate_recompress_into` with
 //! [`codec::ScratchPool`]-pooled arenas), so the engine's steady-state
-//! hop path performs zero heap allocations; per-stage worker kernels run
-//! on scoped threads ([`collective::AllReduceEngine::threads`]) and
+//! hop path performs zero heap allocations. Per-stage worker kernels run
+//! on a persistent pinned worker pool ([`util::pool::WorkerPool`]:
+//! parked threads + a stage barrier, spawned once per
+//! [`collective::AllReduceEngine`] / [`coordinator::Coordinator`]
+//! lifetime — steady-state rounds spawn zero threads), and
 //! `repro --jobs N` computes sweep grid points concurrently — all
 //! byte-identical to the sequential paths by construction.
+//!
+//! ## Kernel modes and the `simd` feature
+//!
+//! Codec inner loops (quantize → round → pack and the decode mirrors)
+//! run lane-batched by default ([`codec::KernelMode::Vectorized`]:
+//! fixed 8-entry batches, branch-free select/mask arithmetic, scalar
+//! tails) so stable-rust LLVM autovectorizes them;
+//! [`codec::KernelMode::Scalar`] switches any codec back to the
+//! byte-at-a-time reference — wire bytes are identical either way
+//! (`tests/into_bit_identity`), and `cargo bench --bench
+//! codec_throughput` reports one lane per mode. Building with
+//! `--features simd` additionally compiles x86_64 AVX2 intrinsics
+//! (`util::simd`, runtime-dispatched via `is_x86_feature_detected!`)
+//! for the BF16 and THC byte lanes — still byte-identical, purely a
+//! throughput knob.
 //!
 //! ## Hierarchical topologies
 //!

@@ -19,6 +19,93 @@
 //!   incremental adjustment. Restricted to |W| ≤ 3 (the prototype uses
 //!   W = {2,4,8}).
 
+/// Water-fill per-level bit budgets from a reduce-scatter hop census
+/// (the topology-aware allocation of ROADMAP §Hier-budget, replacing the
+/// fixed "+δ on the top tier" shift).
+///
+/// Model: a hop at level `l` quantizes a partial sum aggregating `k`
+/// worker gradients; for roughly independent gradients the energy of
+/// that partial — and so the MSE injected at any fixed width — scales
+/// with `k`, while each extra bit cuts the MSE ~4× (§3.2's per-bit
+/// benefit). With `hops[l]` messages at level `l` and noise weight
+/// `weights[l] = Σ_hops k_hop`, the equal-wire optimum of
+///
+/// ```text
+/// min Σ_l weights[l] · 4^(−b_l)   s.t.   Σ_l hops[l] · b_l = base · Σ_l hops[l]
+/// ```
+///
+/// is the water level `b_l = C + ½·log2(weights[l] / hops[l])` with `C`
+/// set by the constraint — levels whose average hop carries more
+/// aggregated energy per message sit above the water line and get more
+/// bits. Budgets clamp to `[lo, hi]` with the clamped mass re-spread
+/// over the active levels (standard water-filling); levels with no hops
+/// keep `base`. The weighted-mean wire cost is conserved exactly
+/// (up to clamping), which is what keeps the levelled configuration at
+/// equal predicted mean wire bytes vs the uniform budget.
+pub fn waterfill_level_budgets(
+    hops: &[f64],
+    weights: &[f64],
+    base: f64,
+    lo: f64,
+    hi: f64,
+) -> Vec<f64> {
+    assert_eq!(hops.len(), weights.len());
+    assert!(lo <= hi && base.is_finite());
+    let n = hops.len();
+    let mut budgets = vec![base; n];
+    // tilt t_l = ½ log2(w_l / h_l); active levels share one water level
+    let tilt: Vec<Option<f64>> = hops
+        .iter()
+        .zip(weights)
+        .map(|(&h, &w)| if h > 0.0 && w > 0.0 { Some(0.5 * (w / h).log2()) } else { None })
+        .collect();
+    let mut clamped = vec![false; n];
+    // ≤ n rounds: each round either converges or clamps ≥ 1 more level
+    for _ in 0..n.max(1) {
+        let mut h_active = 0.0f64;
+        for l in 0..n {
+            if tilt[l].is_some() && !clamped[l] {
+                h_active += hops[l];
+            }
+        }
+        if h_active <= 0.0 {
+            break;
+        }
+        // the active levels' bit pool: the tilted levels' total equal-wire
+        // bits minus what the already-clamped ones consume
+        let mut pool = 0.0f64;
+        for l in 0..n {
+            if tilt[l].is_some() {
+                pool += hops[l] * if clamped[l] { base - budgets[l] } else { base };
+            }
+        }
+        let mut t_mass = 0.0f64;
+        for l in 0..n {
+            if let (Some(t), false) = (tilt[l], clamped[l]) {
+                t_mass += hops[l] * t;
+            }
+        }
+        let c = (pool - t_mass) / h_active;
+        let mut newly_clamped = false;
+        for l in 0..n {
+            if let (Some(t), false) = (tilt[l], clamped[l]) {
+                let b = c + t;
+                if b < lo || b > hi {
+                    budgets[l] = b.clamp(lo, hi);
+                    clamped[l] = true;
+                    newly_clamped = true;
+                } else {
+                    budgets[l] = b;
+                }
+            }
+        }
+        if !newly_clamped {
+            break;
+        }
+    }
+    budgets
+}
+
 /// An allocation: bitwidth per super-group.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitAllocation {
@@ -373,6 +460,41 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn waterfill_equalizes_and_conserves_wire() {
+        // equal energy per hop on both levels → everything stays at base
+        let flat = waterfill_level_budgets(&[100.0, 10.0], &[100.0, 10.0], 5.0, 2.0, 9.0);
+        for b in &flat {
+            assert!((b - 5.0).abs() < 1e-12, "{flat:?}");
+        }
+        // top-tier hops carry 16× the energy per message → they sit
+        // ½·log2(16) = 2 bits above the lower tier, around the water level
+        let hops = [112.0f64, 16.0];
+        let w = [112.0f64, 16.0 * 16.0];
+        let b = waterfill_level_budgets(&hops, &w, 5.0, 2.0, 9.0);
+        assert!((b[1] - b[0] - 2.0).abs() < 1e-9, "{b:?}");
+        // equal-wire: weighted mean conserved
+        let mean = (hops[0] * b[0] + hops[1] * b[1]) / (hops[0] + hops[1]);
+        assert!((mean - 5.0).abs() < 1e-9, "{b:?}");
+        assert!(b[1] > 5.0 && b[0] < 5.0);
+    }
+
+    #[test]
+    fn waterfill_clamps_and_respects_bounds() {
+        // extreme tilt: the top level would blow past hi and must clamp,
+        // with the lower level re-solved over the remaining pool
+        let hops = [100.0f64, 1.0];
+        let w = [100.0f64, 1.0e9];
+        let b = waterfill_level_budgets(&hops, &w, 5.0, 3.0, 8.0);
+        assert!(b.iter().all(|&x| (3.0..=8.0).contains(&x)), "{b:?}");
+        assert_eq!(b[1], 8.0, "{b:?}");
+        // zero-traffic levels keep base and stay out of the pool
+        let b = waterfill_level_budgets(&[10.0, 0.0, 5.0], &[10.0, 0.0, 40.0], 5.0, 2.0, 9.0);
+        assert_eq!(b[1], 5.0);
+        let mean = (10.0 * b[0] + 5.0 * b[2]) / 15.0;
+        assert!((mean - 5.0).abs() < 1e-9, "{b:?}");
     }
 
     #[test]

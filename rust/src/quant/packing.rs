@@ -12,9 +12,13 @@
 //! (64/b codes per `u64`, serialized little-endian — bit p of the stream
 //! lands in byte p/8 either way, so the layout is unchanged from the
 //! byte-at-a-time implementation; asserted by the roundtrip/layout tests
-//! below). The `_into` variants append into caller-provided buffers so the
-//! engine's hot path stays allocation-free; `pack`/`unpack` are thin
-//! Vec-returning wrappers.
+//! below), and the byte-multiple widths (8/16) move fixed `[u8; 8]` /
+//! `[u8; 16]` lane batches per iteration — no per-element push, no
+//! iterator-state dependency, so stable-rust LLVM autovectorizes them —
+//! with a scalar tail shared with [`pack_scalar`], the byte-at-a-time
+//! reference the tests diff against. The `_into` variants append into
+//! caller-provided buffers so the engine's hot path stays
+//! allocation-free; `pack`/`unpack` are thin Vec-returning wrappers.
 
 /// Pack `codes` (each < 2^bits) at `bits` ∈ {1,2,4,8,16} into `out`
 /// (appended; the caller clears/reuses the buffer).
@@ -23,13 +27,32 @@ pub fn pack_into(codes: &[u16], bits: u32, out: &mut Vec<u8>) {
     match bits {
         16 => {
             out.reserve(codes.len() * 2);
-            for &c in codes {
+            let mut chunks = codes.chunks_exact(8);
+            for chunk in &mut chunks {
+                let mut lane = [0u8; 16];
+                for k in 0..8 {
+                    let b = chunk[k].to_le_bytes();
+                    lane[2 * k] = b[0];
+                    lane[2 * k + 1] = b[1];
+                }
+                out.extend_from_slice(&lane);
+            }
+            for &c in chunks.remainder() {
                 out.extend_from_slice(&c.to_le_bytes());
             }
         }
         8 => {
             out.reserve(codes.len());
-            for &c in codes {
+            let mut chunks = codes.chunks_exact(8);
+            for chunk in &mut chunks {
+                let mut lane = [0u8; 8];
+                for k in 0..8 {
+                    debug_assert!(chunk[k] < 256);
+                    lane[k] = chunk[k] as u8;
+                }
+                out.extend_from_slice(&lane);
+            }
+            for &c in chunks.remainder() {
                 debug_assert!(c < 256);
                 out.push(c as u8);
             }
@@ -77,13 +100,29 @@ pub fn unpack_into(bytes: &[u8], bits: u32, count: usize, out: &mut Vec<u16>) {
     match bits {
         16 => {
             assert!(bytes.len() >= count * 2);
-            for i in 0..count {
-                out.push(u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]));
+            let mut chunks = bytes[..count * 2].chunks_exact(16);
+            for chunk in &mut chunks {
+                let mut lane = [0u16; 8];
+                for k in 0..8 {
+                    lane[k] = u16::from_le_bytes([chunk[2 * k], chunk[2 * k + 1]]);
+                }
+                out.extend_from_slice(&lane);
+            }
+            for pair in chunks.remainder().chunks_exact(2) {
+                out.push(u16::from_le_bytes([pair[0], pair[1]]));
             }
         }
         8 => {
             assert!(bytes.len() >= count);
-            for &b in &bytes[..count] {
+            let mut chunks = bytes[..count].chunks_exact(8);
+            for chunk in &mut chunks {
+                let mut lane = [0u16; 8];
+                for k in 0..8 {
+                    lane[k] = chunk[k] as u16;
+                }
+                out.extend_from_slice(&lane);
+            }
+            for &b in chunks.remainder() {
                 out.push(b as u16);
             }
         }
@@ -125,6 +164,44 @@ pub fn packed_len(count: usize, bits: u32) -> usize {
     (count * bits as usize).div_ceil(8)
 }
 
+/// The byte-at-a-time scalar reference packer — the layout oracle the
+/// lane implementations must match bit for bit (diffed by the tests here
+/// and by `tests/into_bit_identity`'s scalar-vs-vectorized parity suite;
+/// also the `codec_throughput` bench's scalar lane).
+pub fn pack_scalar(codes: &[u16], bits: u32) -> Vec<u8> {
+    assert!(matches!(bits, 1 | 2 | 4 | 8 | 16));
+    match bits {
+        16 => codes.iter().flat_map(|c| c.to_le_bytes()).collect(),
+        8 => codes.iter().map(|&c| c as u8).collect(),
+        _ => {
+            let per_byte = (8 / bits) as usize;
+            let mask = (1u16 << bits) - 1;
+            let mut out = vec![0u8; codes.len().div_ceil(per_byte)];
+            for (i, &c) in codes.iter().enumerate() {
+                out[i / per_byte] |= ((c & mask) as u8) << ((i % per_byte) as u32 * bits);
+            }
+            out
+        }
+    }
+}
+
+/// Scalar reference unpacker (one code at a time, div/mod indexing) —
+/// the inverse oracle of [`pack_scalar`].
+pub fn unpack_scalar(bytes: &[u8], bits: u32, count: usize) -> Vec<u16> {
+    assert!(matches!(bits, 1 | 2 | 4 | 8 | 16));
+    match bits {
+        16 => (0..count).map(|i| u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]])).collect(),
+        8 => bytes[..count].iter().map(|&b| b as u16).collect(),
+        _ => {
+            let per_byte = (8 / bits) as usize;
+            let mask = (1u16 << bits) - 1;
+            (0..count)
+                .map(|i| ((bytes[i / per_byte] >> ((i % per_byte) as u32 * bits)) as u16) & mask)
+                .collect()
+        }
+    }
+}
+
 /// Compose a sign-magnitude code: sign ∈ {0,1} in the top bit of a b-bit
 /// code, magnitude index in the low b−1 bits.
 #[inline]
@@ -145,24 +222,6 @@ mod tests {
     use super::*;
     use crate::util::proptest::Prop;
 
-    /// The original byte-at-a-time packer — the layout reference the
-    /// u64-lane implementation must match bit for bit.
-    fn pack_reference(codes: &[u16], bits: u32) -> Vec<u8> {
-        match bits {
-            16 => codes.iter().flat_map(|c| c.to_le_bytes()).collect(),
-            8 => codes.iter().map(|&c| c as u8).collect(),
-            _ => {
-                let per_byte = (8 / bits) as usize;
-                let mask = (1u16 << bits) - 1;
-                let mut out = vec![0u8; codes.len().div_ceil(per_byte)];
-                for (i, &c) in codes.iter().enumerate() {
-                    out[i / per_byte] |= ((c & mask) as u8) << ((i % per_byte) as u32 * bits);
-                }
-                out
-            }
-        }
-    }
-
     #[test]
     fn roundtrip_all_widths() {
         Prop::new(64).check(
@@ -179,16 +238,37 @@ mod tests {
                 if packed.len() != packed_len(codes.len(), *bits) {
                     return Err("packed_len mismatch".into());
                 }
-                if packed != pack_reference(codes, *bits) {
-                    return Err(format!("u64-lane layout diverges at bits={bits}"));
+                if packed != pack_scalar(codes, *bits) {
+                    return Err(format!("lane layout diverges from scalar at bits={bits}"));
                 }
                 let un = unpack(&packed, *bits, codes.len());
                 if &un != codes {
                     return Err(format!("roundtrip failed at bits={bits}"));
                 }
+                if un != unpack_scalar(&packed, *bits, codes.len()) {
+                    return Err(format!("lane unpack diverges from scalar at bits={bits}"));
+                }
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn lane_batches_match_scalar_on_ragged_tails() {
+        // tail lengths around the 8-code lane width (0, 1, 7, 8±1) plus
+        // longer ragged streams — every width, bit for bit
+        for bits in [1u32, 2, 4, 8, 16] {
+            let mask: u16 = if bits == 16 { u16::MAX } else { (1u16 << bits) - 1 };
+            for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 64, 65, 100] {
+                let codes: Vec<u16> =
+                    (0..n).map(|i| (i as u32).wrapping_mul(2654435761) as u16 & mask).collect();
+                let lane = pack(&codes, bits);
+                assert_eq!(lane, pack_scalar(&codes, bits), "bits={bits} n={n}");
+                let un = unpack(&lane, bits, n);
+                assert_eq!(un, unpack_scalar(&lane, bits, n), "bits={bits} n={n}");
+                assert_eq!(un, codes, "bits={bits} n={n}");
+            }
+        }
     }
 
     #[test]

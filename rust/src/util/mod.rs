@@ -1,15 +1,20 @@
 //! Infrastructure utilities: deterministic PRNG shared with the python
 //! layer, a minimal JSON codec (no serde offline), a mini property-test
 //! framework (no proptest offline), a bench harness with an
-//! allocation-counting global allocator (no criterion offline), and
-//! scoped-thread data parallelism (no rayon offline). See DESIGN.md
-//! "Substitutions".
+//! allocation-counting global allocator (no criterion offline), and two
+//! data-parallel primitives (no rayon offline): scoped-thread
+//! [`par::par_iter_mut`] for coarse one-shot fan-outs and the persistent
+//! [`pool::WorkerPool`] for the engine/coordinator stage loops. See
+//! DESIGN.md "Substitutions".
 
 pub mod benchkit;
 pub mod json;
 pub mod par;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
+#[cfg(feature = "simd")]
+pub mod simd;
 
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f32]) -> f32 {

@@ -2,6 +2,14 @@
 //! rayon). One primitive: run a closure over every element of a mutable
 //! slice, partitioned contiguously across up to `threads` scoped threads.
 //!
+//! Spawn-cost note: `thread::scope` spawns (and joins) its threads every
+//! call, which is fine for the coarse one-shot fan-outs this is used for
+//! (sweep grid cells, round-boundary codec calls in experiments). Hot
+//! stage loops — the engine's per-stage kernel execution and the
+//! coordinator's worker threads — run on the persistent
+//! [`crate::util::pool::WorkerPool`] instead, which parks its threads
+//! between stages and spawns exactly once per pool lifetime.
+//!
 //! Determinism by construction: each element is visited exactly once and
 //! written only through its own `&mut`, and callers consume results in
 //! slice order afterwards — so outputs are identical for any thread

@@ -1,0 +1,387 @@
+//! Persistent pinned worker pool: parked threads, a stage barrier, and
+//! panic propagation — the spawn-free replacement for per-stage
+//! `thread::scope` on the engine/coordinator hot paths.
+//!
+//! `std::thread::scope` re-spawns (and re-joins) its threads on every
+//! call; at 128-worker sweeps that is thousands of spawns per round. A
+//! [`WorkerPool`] spawns its threads exactly once (pinned to the pool for
+//! its whole lifetime, parked on a condvar between stages) and
+//! [`WorkerPool::run`] hands them one *batch* — a slice of independent
+//! items — per call:
+//!
+//! - every item is visited exactly once (an atomic cursor hands out
+//!   indices), each through its own `&mut`, and the caller consumes
+//!   results in slice order afterwards, so outputs are **identical for
+//!   any worker count** — the same determinism-by-construction contract
+//!   as [`crate::util::par::par_iter_mut`];
+//! - `run` is a stage barrier: it returns only after every *participating*
+//!   thread has acknowledged the batch (a `threads` throttle below the
+//!   pool size leaves the rest parked and un-waited-on), so the borrowed
+//!   closure and items never outlive the call (this is what makes the
+//!   lifetime erasure below sound);
+//! - a panicking item is caught on the worker, the rest of the batch
+//!   still completes, and the first panic payload is re-thrown on the
+//!   calling thread after the barrier (so buffers held by the caller are
+//!   restored/dropped coherently).
+//!
+//! Blocking items (the thread-per-worker coordinator parks items on
+//! channel `recv`) are supported **iff** the pool provides at least
+//! `items − 1` threads (the caller executes too): the cursor only
+//! advances when an executor finishes an item, so with enough executors
+//! every item is started before any executor waits for a second one.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Pool threads spawned process-wide since start (diagnostics; the
+/// allocation-regression test pins that steady-state rounds spawn none).
+static SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Total pool worker threads ever spawned in this process.
+pub fn threads_spawned() -> u64 {
+    SPAWNED.load(Ordering::Relaxed)
+}
+
+/// Type-erased per-index job pointer, valid only for the epoch it was
+/// published in (the `run` barrier guarantees that).
+type RawJob = *const (dyn Fn(usize) + Sync);
+
+/// One published batch of work.
+struct Batch {
+    job: RawJob,
+    items: usize,
+    /// pool workers drafted for this batch (callers can throttle below
+    /// the pool size); the rest neither execute nor ack — the barrier
+    /// never waits on an idle thread
+    participants: usize,
+}
+
+// Safety: the raw job pointer is only dereferenced between publication
+// and the barrier in `run`, during which the referent is alive on the
+// calling thread's stack.
+unsafe impl Send for Batch {}
+
+struct State {
+    /// bumped once per batch; workers detect new work by comparing
+    epoch: u64,
+    batch: Option<Batch>,
+    /// *participating* workers that have not yet acknowledged the current
+    /// epoch — the barrier counts participants only, so a throttled batch
+    /// never waits on idle threads' wakeups
+    active: usize,
+    /// first panic payload caught while executing the current batch
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here between batches
+    work: Condvar,
+    /// the caller parks here until every worker acknowledged (the barrier)
+    done: Condvar,
+    /// next unclaimed item index of the current batch
+    cursor: AtomicUsize,
+}
+
+/// Wraps the batch's base pointer so the erased closure is `Sync`
+/// (indices are claimed exactly once, so every `&mut` is exclusive).
+struct SlicePtr<T>(*mut T);
+unsafe impl<T: Send> Sync for SlicePtr<T> {}
+unsafe impl<T: Send> Send for SlicePtr<T> {}
+
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` pool threads (parked until the first batch). The
+    /// caller participates in every batch, so a pool sized
+    /// `hardware_threads − 1` saturates the machine; `new(0)` is valid
+    /// and makes every `run` a plain sequential loop.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                batch: None,
+                active: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            cursor: AtomicUsize::new(0),
+        });
+        let handles = (0..workers)
+            .map(|id| {
+                let sh = Arc::clone(&shared);
+                SPAWNED.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("dynamiq-pool-{id}"))
+                    .spawn(move || worker_loop(&sh, id))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Pool threads held (excludes the participating caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(index, &mut items[index])` for every item on up to
+    /// `threads` executors (the caller plus at most `threads − 1` pool
+    /// workers). `threads <= 1`, a single item, or an empty pool degrade
+    /// to a plain in-place loop — no signalling, no allocation (the
+    /// engine's sequential zero-allocation path relies on that). The
+    /// parallel path allocates nothing either: publication is a mutex +
+    /// condvar handshake over pre-existing state.
+    ///
+    /// Outputs are byte-identical for every `threads` value by
+    /// construction (disjoint `&mut` per item, results consumed in slice
+    /// order by the caller). Panics in `f` propagate to the caller after
+    /// the whole batch finishes. Not reentrant: `f` must not call `run`
+    /// on the same pool.
+    pub fn run<T, F>(&self, items: &mut [T], threads: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let n = items.len();
+        if threads <= 1 || n <= 1 || self.handles.is_empty() {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let participants = self.handles.len().min(threads.saturating_sub(1)).min(n);
+        let base = SlicePtr(items.as_mut_ptr());
+        let call = move |i: usize| {
+            // Safety: i < n and each index is claimed exactly once by the
+            // cursor, so this &mut is exclusive; T: Send carries it
+            // across threads.
+            let item = unsafe { &mut *base.0.add(i) };
+            f(i, item);
+        };
+        let erased: &(dyn Fn(usize) + Sync) = &call;
+        // Safety: the 'static lifetime is a lie the barrier makes true —
+        // `run` does not return until every worker acknowledged the
+        // batch, after which no thread holds the pointer.
+        #[allow(clippy::useless_transmute)]
+        let job: RawJob = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(erased)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(
+                st.batch.is_none() && st.active == 0,
+                "WorkerPool::run is not reentrant"
+            );
+            self.shared.cursor.store(0, Ordering::Relaxed);
+            st.batch = Some(Batch { job, items: n, participants });
+            st.active = participants;
+            st.epoch = st.epoch.wrapping_add(1);
+            self.shared.work.notify_all();
+        }
+        // the caller is always an executor
+        execute(&self.shared, job, n);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.batch = None;
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job;
+        let items;
+        {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    // A batch can already be complete when an un-drafted
+                    // thread wakes late (the barrier only waits on
+                    // participants, so `run` may clear it first); a
+                    // *drafted* thread always finds its batch because the
+                    // leader blocks on its ack.
+                    let Some(b) = st.batch.as_ref() else {
+                        continue;
+                    };
+                    if id >= b.participants {
+                        // not drafted: it owes no ack — back to waiting
+                        continue;
+                    }
+                    job = b.job;
+                    items = b.items;
+                    break;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        }
+        execute(shared, job, items);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+/// Claim and execute items until the batch cursor runs out. Panics are
+/// caught per item so the rest of the batch completes; only the first
+/// payload is kept (re-thrown by the caller after the barrier).
+fn execute(shared: &Shared, job: RawJob, items: usize) {
+    // Safety: `job` is live for the whole batch (see `run`).
+    let f = unsafe { &*job };
+    loop {
+        let i = shared.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= items {
+            break;
+        }
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(i))) {
+            let mut st = shared.state.lock().unwrap();
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn visits_every_item_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for threads in [1usize, 2, 4, 16] {
+            let mut xs: Vec<u64> = vec![0; 37];
+            pool.run(&mut xs, threads, |i, x| *x += 1 + i as u64);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(x, 1 + i as u64, "threads={threads} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reuse_across_batches_matches_sequential() {
+        let pool = WorkerPool::new(2);
+        let work = |i: usize, x: &mut f64| *x = (i as f64 + 1.0).sqrt() * 3.25;
+        let mut seq: Vec<f64> = vec![0.0; 100];
+        for (i, x) in seq.iter_mut().enumerate() {
+            work(i, x);
+        }
+        for _round in 0..5 {
+            let mut par: Vec<f64> = vec![0.0; 100];
+            pool.run(&mut par, 8, work);
+            assert_eq!(seq, par);
+        }
+    }
+
+    #[test]
+    fn empty_single_and_zero_worker_pools() {
+        let pool = WorkerPool::new(0);
+        let mut xs = vec![1u8, 2, 3];
+        pool.run(&mut xs, 8, |_, x| *x *= 2);
+        assert_eq!(xs, vec![2, 4, 6]);
+        let pool = WorkerPool::new(2);
+        let mut none: Vec<u8> = vec![];
+        pool.run(&mut none, 4, |_, _| unreachable!());
+        let mut one = vec![5u8];
+        pool.run(&mut one, 4, |i, x| {
+            assert_eq!(i, 0);
+            *x = 9;
+        });
+        assert_eq!(one, vec![9]);
+    }
+
+    #[test]
+    fn panic_propagates_after_the_batch_completes() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let mut xs: Vec<u32> = (0..16).collect();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&mut xs, 4, |i, _| {
+                if i == 3 {
+                    panic!("item 3 exploded");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        assert_eq!(done.load(Ordering::Relaxed), 15, "other items still ran");
+        // the pool survives a panicked batch
+        let mut ys = vec![0u8; 8];
+        pool.run(&mut ys, 4, |_, y| *y = 7);
+        assert!(ys.iter().all(|&y| y == 7));
+    }
+
+    #[test]
+    fn blocking_items_complete_with_enough_executors() {
+        // items rendezvous pairwise over channels: requires all items
+        // running concurrently (the coordinator's usage shape)
+        use std::sync::mpsc::channel;
+        let n = 4;
+        let pool = WorkerPool::new(n - 1);
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..n).map(|_| channel::<u32>()).unzip();
+        struct Item {
+            tx: Vec<std::sync::mpsc::Sender<u32>>,
+            rx: std::sync::mpsc::Receiver<u32>,
+            got: u32,
+        }
+        let mut items: Vec<Item> = rxs
+            .into_iter()
+            .map(|rx| Item { tx: txs.clone(), rx, got: 0 })
+            .collect();
+        pool.run(&mut items, n, |i, it| {
+            let peer = (i + 1) % n;
+            it.tx[peer].send(i as u32).unwrap();
+            it.got = it.rx.recv().unwrap();
+        });
+        for (i, it) in items.iter().enumerate() {
+            assert_eq!(it.got as usize, (i + n - 1) % n);
+        }
+    }
+
+    #[test]
+    fn spawn_counter_is_flat_across_batches() {
+        let pool = WorkerPool::new(2);
+        let mut xs = vec![0u64; 64];
+        pool.run(&mut xs, 4, |i, x| *x = i as u64);
+        let snap = threads_spawned();
+        for _ in 0..10 {
+            pool.run(&mut xs, 4, |i, x| *x += i as u64);
+        }
+        assert_eq!(threads_spawned(), snap, "batches must not spawn threads");
+    }
+}

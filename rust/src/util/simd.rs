@@ -1,0 +1,120 @@
+//! Optional explicit-SIMD kernels (`--features simd`): x86_64 AVX2
+//! intrinsics for the byte-lane inner loops whose scalar semantics map
+//! exactly onto packed integer/float ops — BF16 encode/decode and the
+//! THC 8-bit lattice decode. Everything here is **bit-identical** to the
+//! portable lane kernels (and therefore to the scalar reference): the
+//! BF16 round is pure `u32` arithmetic, and the float paths use the same
+//! IEEE single-op sequences (mul then sub, add) with no FMA contraction.
+//! `tests/into_bit_identity` pins this under the feature.
+//!
+//! Dispatch is runtime: callers check [`have_avx2`] (cached
+//! `is_x86_feature_detected!`) and fall back to the portable lanes, so a
+//! `simd` build still runs correctly on machines without AVX2 — and the
+//! whole module compiles away on non-x86_64 targets.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+    use std::sync::atomic::{AtomicU8, Ordering};
+
+    /// 0 = unknown, 1 = no, 2 = yes
+    static AVX2: AtomicU8 = AtomicU8::new(0);
+
+    /// Whether AVX2 is available on this machine (detected once).
+    #[inline]
+    pub fn have_avx2() -> bool {
+        match AVX2.load(Ordering::Relaxed) {
+            2 => true,
+            1 => false,
+            _ => {
+                let yes = std::is_x86_feature_detected!("avx2");
+                AVX2.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+
+    /// Encode 8 f32 → 8 little-endian BF16 (16 bytes), the exact integer
+    /// round-to-nearest-even of `minifloat::bf16_bits`:
+    /// `u16 = (bits + 0x7fff + ((bits >> 16) & 1)) >> 16` with u32 wrap.
+    ///
+    /// # Safety
+    /// Requires AVX2 (guard with [`have_avx2`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_encode_8(src: &[f32; 8], dst: &mut [u8; 16]) {
+        let v = _mm256_loadu_ps(src.as_ptr());
+        let bits = _mm256_castps_si256(v);
+        let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(1));
+        let sum = _mm256_add_epi32(_mm256_add_epi32(bits, _mm256_set1_epi32(0x7fff)), lsb);
+        let h = _mm256_srli_epi32::<16>(sum); // 8 × u32 ≤ 0xffff
+        // pack u32 → u16 per 128-bit lane (values ≤ 0xffff: no saturation)
+        let packed = _mm256_packus_epi32(h, h);
+        let lo = _mm256_castsi256_si128(packed); // h0..h3 h0..h3
+        let hi = _mm256_extracti128_si256::<1>(packed); // h4..h7 h4..h7
+        _mm_storel_epi64(dst.as_mut_ptr() as *mut __m128i, lo);
+        _mm_storel_epi64(dst.as_mut_ptr().add(8) as *mut __m128i, hi);
+    }
+
+    /// Decode 8 little-endian BF16 (16 bytes) → 8 f32 (`(u16 as u32) << 16`
+    /// reinterpreted — exact, no rounding involved).
+    ///
+    /// # Safety
+    /// Requires AVX2 (guard with [`have_avx2`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_decode_8(src: &[u8; 16], dst: &mut [f32; 8]) {
+        let halves = _mm_loadu_si128(src.as_ptr() as *const __m128i);
+        let wide = _mm256_cvtepu16_epi32(halves);
+        let bits = _mm256_slli_epi32::<16>(wide);
+        _mm256_storeu_ps(dst.as_mut_ptr(), _mm256_castsi256_ps(bits));
+    }
+
+    /// Fused BF16 hop lane: `out = bf16(local + bf16_decode(in))` for 8
+    /// entries — decode, one IEEE add (same op as the scalar path), then
+    /// the integer RNE encode above.
+    ///
+    /// # Safety
+    /// Requires AVX2 (guard with [`have_avx2`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn bf16_dar_8(wire: &[u8; 16], local: &[f32; 8], dst: &mut [u8; 16]) {
+        let halves = _mm_loadu_si128(wire.as_ptr() as *const __m128i);
+        let wide = _mm256_cvtepu16_epi32(halves);
+        let decoded = _mm256_castsi256_ps(_mm256_slli_epi32::<16>(wide));
+        let sum = _mm256_add_ps(_mm256_loadu_ps(local.as_ptr()), decoded);
+        let bits = _mm256_castps_si256(sum);
+        let lsb = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(1));
+        let rnd = _mm256_add_epi32(_mm256_add_epi32(bits, _mm256_set1_epi32(0x7fff)), lsb);
+        let h = _mm256_srli_epi32::<16>(rnd);
+        let packed = _mm256_packus_epi32(h, h);
+        _mm_storel_epi64(dst.as_mut_ptr() as *mut __m128i, _mm256_castsi256_si128(packed));
+        _mm_storel_epi64(
+            dst.as_mut_ptr().add(8) as *mut __m128i,
+            _mm256_extracti128_si256::<1>(packed),
+        );
+    }
+
+    /// THC 8-bit lattice decode lane: `dst[k] = codes[k] as f32 * step −
+    /// offset` for 8 byte codes — the same mul-then-sub sequence as
+    /// `ThcCodec::from_lattice` with the caller-hoisted per-block `step =
+    /// 2s/q` and `offset = k·s` (u8 → f32 conversion is exact).
+    ///
+    /// # Safety
+    /// Requires AVX2 (guard with [`have_avx2`]).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn thc8_decode_8(codes: &[u8; 8], step: f32, offset: f32, dst: &mut [f32; 8]) {
+        let bytes = _mm_loadl_epi64(codes.as_ptr() as *const __m128i);
+        let wide = _mm256_cvtepu8_epi32(bytes);
+        let vals = _mm256_cvtepi32_ps(wide);
+        let scaled = _mm256_mul_ps(vals, _mm256_set1_ps(step));
+        _mm256_storeu_ps(dst.as_mut_ptr(), _mm256_sub_ps(scaled, _mm256_set1_ps(offset)));
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::{bf16_dar_8, bf16_decode_8, bf16_encode_8, have_avx2, thc8_decode_8};
+
+/// Non-x86_64 targets: no intrinsics, callers take the portable lanes.
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+pub fn have_avx2() -> bool {
+    false
+}

@@ -4,7 +4,10 @@
 //! the kernel-level and hop-chain checks assert an exact **zero** delta
 //! over the steady-state hop path, and the engine-level check pins the
 //! steady-state round profile (warm rounds allocate strictly less than
-//! the cold round, and identically to each other).
+//! the cold round, and identically to each other). The pooled-threaded
+//! check additionally pins that steady-state rounds spawn **zero**
+//! threads: stage execution runs on the engine's persistent WorkerPool,
+//! not a per-stage `thread::scope`.
 //!
 //! The counters are process-global and libtest's harness threads also
 //! allocate (result formatting, test scheduling), so all three checks
@@ -14,6 +17,7 @@
 use dynamiq::codec::{make_codec, GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
 use dynamiq::collective::{produce_hop, AllReduceEngine, KernelCounters, NetworkModel, Topology};
 use dynamiq::util::benchkit::{alloc_delta, alloc_snapshot, CountingAlloc};
+use dynamiq::util::pool::threads_spawned;
 use dynamiq::util::rng::Pcg;
 
 #[global_allocator]
@@ -74,6 +78,7 @@ fn hop_path_allocation_regression() {
     warm_kernels_allocate_zero_bytes();
     steady_state_ring_hop_chain_allocates_zero_bytes();
     engine_steady_state_rounds_are_cheaper_and_stable();
+    pooled_threaded_rounds_are_spawn_free_and_cheap();
 }
 
 fn warm_kernels_allocate_zero_bytes() {
@@ -223,4 +228,47 @@ fn engine_steady_state_rounds_are_cheaper_and_stable() {
         per_round[3], per_round[4],
         "steady-state rounds must have identical allocation profiles: {per_round:?}"
     );
+}
+
+fn pooled_threaded_rounds_are_spawn_free_and_cheap() {
+    // The parallel stage path runs on the engine's persistent WorkerPool:
+    // its threads spawn once (lazily, on the first parallel stage) and
+    // park between stages — steady-state rounds must spawn ZERO threads
+    // (the per-stage thread::scope respawn this replaces spawned
+    // threads × stages × rounds), and with the pool's reusable StageState
+    // spines plus the ScratchPool, warm threaded rounds must allocate
+    // strictly less than the cold round. (Byte counts aren't
+    // round-over-round identical here: which warm arena a payload lands
+    // in depends on thread timing, so only the cold/warm ordering is
+    // deterministic.)
+    let n = 4usize;
+    let d = 16384;
+    let grads: Vec<Vec<f32>> = (0..n).map(|w| grad(d, 70 + w as u64)).collect();
+    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec("DynamiQ")).collect();
+    let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+    eng.threads = 2;
+    let mut pool = ScratchPool::new();
+    let mut cold_bytes = 0u64;
+    let mut spawned_after_warmup = 0u64;
+    for round in 0..6u32 {
+        let snap = alloc_snapshot();
+        eng.run_pooled(&grads, &mut codecs, round, 0.0, &mut pool).unwrap();
+        let (_, bytes) = alloc_delta(snap);
+        match round {
+            0 => cold_bytes = bytes,
+            2 => spawned_after_warmup = threads_spawned(),
+            r if r > 2 => {
+                assert_eq!(
+                    threads_spawned(),
+                    spawned_after_warmup,
+                    "steady-state rounds must not spawn threads (no per-stage scope)"
+                );
+                assert!(
+                    bytes < cold_bytes,
+                    "warm threaded round {round} allocated {bytes} B, cold was {cold_bytes} B"
+                );
+            }
+            _ => {}
+        }
+    }
 }

@@ -5,7 +5,7 @@
 //! pooled / multi-threaded engine paths reproduce the single-threaded
 //! engine exactly.
 
-use dynamiq::codec::{make_codec, GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
+use dynamiq::codec::{make_codec, GradCodec, HopCtx, KernelMode, MetaOp, ScratchPool, WorkerScratch};
 use dynamiq::collective::{AllReduceEngine, Level, LevelSpec, NetworkModel, Topology};
 use dynamiq::util::rng::Pcg;
 
@@ -36,15 +36,18 @@ fn grad(d: usize, seed: u64) -> Vec<f32> {
 
 /// Two workers through metadata + begin_round, ready for chunk kernels.
 #[allow(clippy::type_complexity)]
-fn setup(
+fn setup_mode(
     scheme: &str,
     d: usize,
     round: u32,
+    mode: KernelMode,
 ) -> (Box<dyn GradCodec>, Box<dyn GradCodec>, Vec<f32>, Vec<f32>, HopCtx, HopCtx) {
     let ga = grad(d, 101);
     let gb = grad(d, 202);
     let mut ca = make_codec(scheme);
     let mut cb = make_codec(scheme);
+    ca.set_kernel_mode(mode);
+    cb.set_kernel_mode(mode);
     let ctx_a = HopCtx::flat(0, 2, round, 1);
     let ctx_b = HopCtx::flat(1, 2, round, 1);
     let ma = ca.metadata(&ga, &ctx_a);
@@ -56,6 +59,15 @@ fn setup(
     let pa = ca.begin_round(&ga, &agg, &ctx_a);
     let pb = cb.begin_round(&gb, &agg, &ctx_b);
     (ca, cb, pa, pb, ctx_a, ctx_b)
+}
+
+#[allow(clippy::type_complexity)]
+fn setup(
+    scheme: &str,
+    d: usize,
+    round: u32,
+) -> (Box<dyn GradCodec>, Box<dyn GradCodec>, Vec<f32>, Vec<f32>, HopCtx, HopCtx) {
+    setup_mode(scheme, d, round, KernelMode::Vectorized)
 }
 
 fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
@@ -121,6 +133,62 @@ fn into_paths_match_legacy_vec_paths_with_dirty_buffers() {
                     "{scheme}: fused and unfused paths must agree bit-exactly ({r:?})"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn vectorized_and_scalar_kernels_are_wire_identical() {
+    // The lane-batched kernels (the default) must reproduce the scalar
+    // reference bit for bit, per codec, with dirty reused buffers and
+    // gradient lengths straddling every batching boundary: 1 and 7
+    // entries, the 8-entry lane width ±1, super-group/Hadamard-block
+    // sizes ±1. (Zero-length code streams are pinned at the packing
+    // layer's lane-vs-scalar tests, where a 0-count payload is
+    // well-defined for every width.)
+    for scheme in SCHEMES {
+        for d in [1usize, 7, 9, 255, 257, 1023, 1025, 4096] {
+            let (sa, sb, ps_a, ps_b, sctx_a, sctx_b) =
+                setup_mode(scheme, d, 4, KernelMode::Scalar);
+            let (va, vb, pv_a, pv_b, vctx_a, vctx_b) =
+                setup_mode(scheme, d, 4, KernelMode::Vectorized);
+            assert_eq!(ps_a, pv_a, "{scheme} d={d}: preprocessing must not depend on mode");
+            let r = 0..ps_a.len();
+            if r.is_empty() {
+                continue;
+            }
+            let ws = sa.compress(&ps_a[r.clone()], r.clone(), &sctx_a);
+            // vectorized compress into a dirty warm buffer
+            let mut wv = vec![0x5Au8; 2048];
+            wv.clear();
+            va.compress_into(&pv_a[r.clone()], r.clone(), &vctx_a, &mut wv);
+            assert_eq!(ws, wv, "{scheme} d={d}: compress modes diverge");
+
+            let ds = sb.decompress(&ws, r.clone(), &sctx_b);
+            let mut dv = vec![f32::NAN; r.len()];
+            vb.decompress_into(&wv, r.clone(), &vctx_b, &mut dv);
+            assert_bits_eq(&ds, &dv, &format!("{scheme} d={d}: decompress modes"));
+
+            let mut accs = ds.clone();
+            sb.decompress_accumulate(&ws, &mut accs, r.clone(), &sctx_b);
+            let mut accv = dv.clone();
+            vb.decompress_accumulate(&wv, &mut accv, r.clone(), &vctx_b);
+            assert_bits_eq(&accs, &accv, &format!("{scheme} d={d}: accumulate modes"));
+
+            let local_s = &ps_b[r.clone()];
+            let fs = sb.decompress_accumulate_recompress(&ws, local_s, r.clone(), &sctx_b);
+            let mut scratch = WorkerScratch { slab: vec![9.9f32; 13], acc: vec![-1.0f32; 7] };
+            let mut fv = vec![0xC3u8; 1024];
+            fv.clear();
+            vb.decompress_accumulate_recompress_into(
+                &wv,
+                &pv_b[r.clone()],
+                r.clone(),
+                &vctx_b,
+                &mut scratch,
+                &mut fv,
+            );
+            assert_eq!(fs, fv, "{scheme} d={d}: fused modes diverge");
         }
     }
 }
@@ -204,11 +272,16 @@ fn pooled_parallel_engine_matches_fresh_sequential_engine() {
         ("DynamiQ:lb=4,4.5,6", stack3, 32),
     ] {
         let g: Vec<Vec<f32>> = (0..n).map(|i| grad(6000, 7 + i as u64)).collect();
-        let run_with = |threads: usize, pooled: bool| {
+        let run_with = |threads: usize, pooled: bool, mode: KernelMode| {
             let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
             eng.threads = threads;
-            let mut codecs: Vec<Box<dyn GradCodec>> =
-                (0..n).map(|_| make_codec(scheme)).collect();
+            let mut codecs: Vec<Box<dyn GradCodec>> = (0..n)
+                .map(|_| {
+                    let mut c = make_codec(scheme);
+                    c.set_kernel_mode(mode);
+                    c
+                })
+                .collect();
             let mut pool = ScratchPool::new();
             let mut last = None;
             for round in 0..3 {
@@ -221,12 +294,24 @@ fn pooled_parallel_engine_matches_fresh_sequential_engine() {
             }
             last.unwrap()
         };
-        let (base_out, base_rep) = run_with(1, false);
-        for (threads, pooled) in [(1, true), (4, true), (3, false)] {
-            let (out, rep) = run_with(threads, pooled);
+        let (base_out, base_rep) = run_with(1, false, KernelMode::Vectorized);
+        // every (executor count, scratch pooling) combination runs on the
+        // engine's persistent WorkerPool once threads > 1 — the pool's
+        // work-claiming order must never leak into a single byte — and
+        // the scalar kernel mode must agree end-to-end too, threaded and
+        // not (the WorkerPool × KernelMode parity matrix)
+        for (threads, pooled, mode) in [
+            (1, true, KernelMode::Vectorized),
+            (4, true, KernelMode::Vectorized),
+            (3, false, KernelMode::Vectorized),
+            (8, true, KernelMode::Vectorized),
+            (1, false, KernelMode::Scalar),
+            (4, true, KernelMode::Scalar),
+        ] {
+            let (out, rep) = run_with(threads, pooled, mode);
             assert_eq!(
                 out, base_out,
-                "{scheme}/{}: threads={threads} pooled={pooled} diverged",
+                "{scheme}/{}: threads={threads} pooled={pooled} mode={mode:?} diverged",
                 topo.name()
             );
             assert_eq!(rep.rs_bytes, base_rep.rs_bytes);
