@@ -1,0 +1,496 @@
+"""Offline oracle for the congestion-aware network model.
+
+Ports the stage-costing solve of rust/src/collective/network.rs
+(`NetworkModel::stage_time_congested`: per-message / NIC-gateway /
+spine fluid bounds) and the hierarchy schedule builders
+(rust/src/collective/hierarchy.rs, both phases) to validate the Rust
+implementation without a toolchain:
+
+1. **Property self-checks** — the same invariants the Rust unit tests
+   pin: the default NicProfile (1 port, oversub 1.0, full-bisection
+   spine) is exactly the per-message max; fan-in from m workers on one
+   node is charged >= the single-flow time and <= m x it; the spine
+   bound is monotone in its oversubscription factor and never binds at
+   full bisection; ports_per_node = per-node flow count at oversub 1
+   reproduces the per-worker-port default on balanced stages.
+
+2. **Golden stage times** — fixed flow sets evaluated through the
+   ported solve, printed to full precision. rust/tests/
+   congestion_invariants.rs embeds these constants and asserts the Rust
+   solve reproduces them to 1e-12 relative: both implementations walk
+   the same IEEE-f64 expressions in the same order, so agreement is a
+   genuine cross-validation of the arithmetic, not a tolerance fudge.
+
+3. **End-to-end BF16 comm times** — the `repro --id hier`
+   oversubscription cells (n = 128, d = 2^16, NIC 12.5 GB/s at 10 us,
+   intra tier 48x at 1 us) computed exactly: BF16 has no metadata phase
+   and a fixed 2-bytes/entry payload, so the model reproduces the
+   engine's comm_time_s to float noise. Compressed codecs get
+   approximate bits/entry, good enough to predict the *separation*
+   trend (speedup over BF16 grows with oversubscription).
+
+4. **Cross-check against results/hier_sweep.json** when present (the CI
+   perf-trajectory artifact): BF16 oversub cells must match the model
+   within 0.1%; every codec's comm time must be monotone in the
+   oversubscription factor; and each compressed codec's speedup over
+   BF16 must grow from oversub 1x to 8x.
+
+Run: python3 python/validate_congestion.py
+Exit status is non-zero on any violated invariant.
+"""
+
+import json
+import os
+import sys
+
+FAILURES = []
+
+
+def check(cond, msg):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {msg}")
+    if not cond:
+        FAILURES.append(msg)
+
+
+# ---- congestion solve (port of NetworkModel::stage_time_congested) ----
+class Net:
+    def __init__(self, bandwidth=100e9 / 8.0, latency=10e-6, links=(),
+                 nic_ports=1, nic_oversub=1.0, spine_oversub=1.0):
+        self.bandwidth = bandwidth
+        self.latency = latency
+        # private tiers: list of (bandwidth, latency), innermost first
+        self.links = list(links)
+        self.nic_ports = nic_ports
+        self.nic_oversub = nic_oversub
+        self.spine_oversub = spine_oversub
+
+    def contended(self):
+        return not (self.nic_ports == 1 and self.nic_oversub == 1.0)
+
+    def on_nic(self, level):
+        """True when a flow of this level rides (and contends for) the
+        NIC: Nic-class flows and private tiers with no configured link
+        (the pricing fallback routes those over the NIC)."""
+        return level is None or level >= len(self.links)
+
+    def egress_ports(self):
+        return self.nic_ports / self.nic_oversub
+
+    def transfer_time_f(self, bytes_f, _t0=0.0):
+        if bytes_f <= 0.0:
+            return 0.0
+        return self.latency + bytes_f / self.bandwidth
+
+    def transfer_time_class(self, bytes_u, level, t0=0.0):
+        """level None = NIC; integer = private tier index."""
+        if level is not None and level < len(self.links):
+            bw, lat = self.links[level]
+            return 0.0 if bytes_u == 0 else lat + float(bytes_u) / bw
+        return self.transfer_time_f(float(bytes_u), t0)
+
+    def stage_time_congested(self, flows, t0=0.0):
+        """flows: [(bytes, level-or-None, from_node, to_node)]."""
+        t = 0.0
+        nic_bytes = 0
+        # NIC tallies count only non-empty NIC-riding flows: zero-byte
+        # flows (empty chunks) carry no gateway/spine capacity, and a
+        # flow contends for the NIC exactly when it is priced on it
+        # (Nic class, or a private tier with no configured link)
+        for b, level, _f, _t in flows:
+            t = max(t, self.transfer_time_class(b, level, t0))
+            if b > 0 and self.on_nic(level):
+                nic_bytes += b
+        if nic_bytes == 0:
+            return t
+
+        def tally(key):
+            nodes = []  # (node, bytes, flows) in first-seen order
+            for flow in flows:
+                b, level = flow[0], flow[1]
+                if b == 0 or not self.on_nic(level):
+                    continue
+                node = key(flow)
+                for e in nodes:
+                    if e[0] == node:
+                        e[1] += b
+                        e[2] += 1
+                        break
+                else:
+                    nodes.append([node, b, 1])
+            return nodes
+
+        if self.contended():
+            egress = self.egress_ports()
+            senders = tally(lambda f: f[2])
+            receivers = tally(lambda f: f[3])
+            # both the egress and the ingress side of every gateway are
+            # fluid-bounded (incast = reduce-toward-root shapes)
+            for nodes in (senders, receivers):
+                for _node, bytes_v, _flows_v in nodes:
+                    t = max(t, self.transfer_time_f(float(bytes_v) / egress, t0))
+            if self.spine_oversub > 1.0:
+                cap = sum(min(float(fv), egress) for _n, _b, fv in senders)
+                t = max(t, self.transfer_time_f(
+                    float(nic_bytes) * self.spine_oversub / cap, t0))
+        elif self.spine_oversub > 1.0:
+            # per-worker ports: one line-rate spine feed per active
+            # (source, destination) pair — splitting bytes into more
+            # flows between the same endpoints buys no capacity
+            pairs = []
+            for b, level, f, to in flows:
+                if b > 0 and self.on_nic(level) and (f, to) not in pairs:
+                    pairs.append((f, to))
+            eff = float(nic_bytes) * self.spine_oversub / float(len(pairs))
+            t = max(t, self.transfer_time_f(eff, t0))
+        return t
+
+
+# ---- schedule builders (port of collective/{topology,hierarchy}.rs) ----
+def level_rs(topo, n):
+    if topo == "ring":
+        return [[((c + 1 + s) % n, (c + 2 + s) % n, c) for c in range(n)]
+                for s in range(n - 1)]
+    L = n.bit_length() - 1
+    out = []
+    for s in range(L):
+        bit = 1 << (L - 1 - s)
+        hops = []
+        for w in range(n):
+            for c in range(n):
+                high = ~(2 * bit - 1)
+                if (c & high) == (w & high) and (c & bit) != (w & bit):
+                    hops.append((w, w ^ bit, c))
+        out.append(hops)
+    return out
+
+
+def level_ag(topo, n):
+    if topo == "ring":
+        return [[((c + s) % n, (c + s + 1) % n, c) for c in range(n)]
+                for s in range(n - 1)]
+    L = n.bit_length() - 1
+    out = []
+    for s in range(L):
+        bit = 1 << s
+        hops = []
+        for w in range(n):
+            for c in range(n):
+                if (c ^ w) & ~(bit - 1) == 0:
+                    hops.append((w, w ^ bit, c))
+        out.append(hops)
+    return out
+
+
+def arbor(topo, m, j):
+    parent = [(w, None) for w in range(m)]
+    for s, hops in enumerate(level_rs(topo, m)):
+        for f, t, c in hops:
+            if c == j:
+                parent[f] = (t, s)
+    return parent
+
+
+def hier_rs(levels):
+    n = 1
+    for _, m in levels:
+        n *= m
+    n_stages = sum(len(level_rs(t, m)) for t, m in levels)
+    sched = [[] for _ in range(n_stages)]
+    off, stride = 0, 1
+    for topo, m in levels:
+        group = stride * m
+        n_groups = n // group
+        arbs = [arbor(topo, m, j) for j in range(m)]
+        for c in range(n):
+            j = (c // stride) % m
+            low = c % stride
+            for h in range(n_groups):
+                base = low + h * group
+                for a, (p, s) in enumerate(arbs[j]):
+                    if a == j:
+                        continue
+                    sched[off + s].append(
+                        (base + a * stride, base + p * stride, c))
+        off += len(level_rs(topo, m))
+        stride *= m
+    return sched
+
+
+def hier_ag(levels):
+    n = 1
+    for _, m in levels:
+        n *= m
+    n_stages = sum(len(level_ag(t, m)) for t, m in levels)
+    sched = [[] for _ in range(n_stages)]
+    offsets = [0] * len(levels)
+    acc = 0
+    for l in range(len(levels) - 1, -1, -1):
+        offsets[l] = acc
+        acc += len(level_ag(levels[l][0], levels[l][1]))
+    stride = 1
+    for l, (topo, m) in enumerate(levels):
+        group = stride * m
+        n_groups = n // group
+        flat = level_ag(topo, m)
+        for c in range(n):
+            j = (c // stride) % m
+            low = c % stride
+            for s, hops in enumerate(flat):
+                for f, t, ch in hops:
+                    if ch != j:
+                        continue
+                    for h in range(n_groups):
+                        base = low + h * group
+                        sched[offsets[l] + s].append(
+                            (base + f * stride, base + t * stride, c))
+        stride *= m
+    return sched
+
+
+def hop_level(levels, a, b):
+    lvl, stride = 0, 1
+    for l, (_, m) in enumerate(levels):
+        if (a // stride) % m != (b // stride) % m:
+            lvl = l
+        stride *= m
+    return lvl
+
+
+def chunk_entries(padded, n, align):
+    units = padded // align
+    base, extra = units // n, units % n
+    return [(base + (1 if i < extra else 0)) * align for i in range(n)]
+
+
+# ---- end-to-end comm model over the sweep cells ----
+def hier_comm_time(levels, d, bytes_per_entry, meta_floats, net):
+    """Simulated comm time of one round: metadata ring + reduce-scatter +
+    all-gather, priced exactly like AllReduceEngine::run_pooled (meta is
+    per-message-priced, rs/ag congestion-priced). bytes_per_entry is the
+    codec's mean payload density; exact (2.0) for BF16."""
+    n = 1
+    for _, m in levels:
+        n *= m
+    top = len(levels) - 1
+
+    def link(f, t):
+        lvl = hop_level(levels, f, t)
+        return None if lvl >= top else lvl
+
+    node_m = levels[0][1]
+    align = 16
+    padded = (d + align - 1) // align * align
+    entries = chunk_entries(padded, n, align)
+    pay = [round(e * bytes_per_entry) for e in entries]
+    now = 0.0
+    meta_t = 0.0
+    if meta_floats > 0:
+        per_stage = -(-meta_floats // n) * 4
+        msgs = [(per_stage, None, w, (w + 1) % n) for w in range(n)]
+        # engine meta uses per-message pricing (stage_time); replicate by
+        # pricing on an uncontended copy of the net
+        flat = Net(net.bandwidth, net.latency, net.links)
+        for _ in range(2 * (n - 1)):
+            dt = flat.stage_time_congested(msgs, now)
+            now += dt
+            meta_t += dt
+    rs_t = 0.0
+    for hops in hier_rs(levels):
+        flows = [(pay[c], link(f, t), f // node_m, t // node_m)
+                 for f, t, c in hops]
+        dt = net.stage_time_congested(flows, now)
+        now += dt
+        rs_t += dt
+    ag_t = 0.0
+    for hops in hier_ag(levels):
+        flows = [(pay[c], link(f, t), f // node_m, t // node_m)
+                 for f, t, c in hops]
+        dt = net.stage_time_congested(flows, now)
+        now += dt
+        ag_t += dt
+    return meta_t + rs_t + ag_t
+
+
+def fanin_stage(nodes, per_node, nbytes):
+    flows = []
+    for v in range(nodes):
+        for _ in range(per_node):
+            flows.append((nbytes, None, v, (v + 1) % nodes))
+    flows.append((nbytes // 2, 0, 0, 0))
+    return flows
+
+
+def self_checks():
+    print("== solve property self-checks ==")
+    links48 = [(48.0 * 100e9 / 8.0, 1e-6)]
+    base = Net(links=links48)
+    for nodes, per in [(2, 1), (4, 8), (16, 8)]:
+        flows = fanin_stage(nodes, per, 123_457)
+        classed = max(base.transfer_time_class(b, l) for b, l, _f, _t in flows)
+        check(base.stage_time_congested(flows) == classed,
+              f"default profile == per-message max ({nodes}x{per})")
+    single = Net(links=links48, nic_oversub=1.5).stage_time_congested(
+        fanin_stage(2, 1, 2_000_000))
+    for m in (2, 4, 8, 16):
+        t = Net(links=links48, nic_oversub=1.5).stage_time_congested(
+            fanin_stage(2, m, 2_000_000))
+        check(single <= t <= m * single, f"fan-in m={m} within [1x, {m}x] single")
+    prev = 0.0
+    for so in (1.0, 1.5, 2.0, 4.0, 8.0):
+        t = Net(links=links48, spine_oversub=so).stage_time_congested(
+            fanin_stage(8, 4, 1_500_000))
+        check(t >= prev, f"spine bound monotone at so={so}")
+        prev = t
+    iso = Net(links=links48).stage_time_congested(fanin_stage(4, 8, 1_000_000))
+    gw = Net(links=links48, nic_ports=8).stage_time_congested(
+        fanin_stage(4, 8, 1_000_000))
+    check(abs(gw - iso) < 1e-15, "ports == per-node flows reproduces default")
+    # incast: 8 nodes -> 1 receiver pays the ingress fluid bound
+    inc = [(1_000_000, None, v, 0) for v in range(1, 9)]
+    t_inc = Net(nic_oversub=2.0).stage_time_congested(inc)
+    check(abs(t_inc - Net().transfer_time_f(16_000_000.0)) < 1e-12,
+          "incast charged on the receiving gateway")
+    # zero-byte flows carry no capacity
+    real = [(1_000_000, None, v, (v + 1) % 4) for v in range(4)]
+    padded = real + [(0, None, v, (v + 1) % 4) for v in range(4)]
+    for kw in ({"spine_oversub": 4.0}, {"nic_oversub": 2.0, "spine_oversub": 4.0}):
+        check(Net(**kw).stage_time_congested(real)
+              == Net(**kw).stage_time_congested(padded),
+              f"zero-byte flows are capacity-neutral ({kw})")
+    # NIC-fallback tiers contend: with no links configured, a Level(0)
+    # flow is priced on the NIC and must join the gateway accounting
+    fb = [(1_000_000, None, 0, 1), (1_000_000, 0, 0, 1)]
+    t_fb = Net(nic_oversub=2.0).stage_time_congested(fb)
+    check(abs(t_fb - Net().transfer_time_f(4_000_000.0)) < 1e-12,
+          "unlisted private tiers contend for the NIC they ride")
+    # flow-splitting between one pair must not weaken the spine bound
+    one = [(4_000_000, None, 0, 1)]
+    four = [(1_000_000, None, 0, 1)] * 4
+    so4 = Net(spine_oversub=4.0)
+    check(so4.stage_time_congested(one) == so4.stage_time_congested(four),
+          "spine capacity is per endpoint pair, not per flow")
+
+
+GOLDEN_FLOWS = [
+    # (label, flows, ports, oversub, spine)
+    ("identity-hier", fanin_stage(4, 8, 1_000_000), 1, 1.0, 1.0),
+    ("gateway-1p-2x", fanin_stage(4, 8, 1_000_000), 1, 2.0, 1.0),
+    ("gateway-2p-4x", fanin_stage(8, 4, 777_777), 2, 4.0, 1.0),
+    ("spine-only-4x", fanin_stage(8, 4, 1_500_000), 1, 1.0, 4.0),
+    ("gateway+spine", fanin_stage(4, 16, 250_000), 2, 2.0, 8.0),
+    ("unbalanced", [(4_000_000, None, 0, 1), (1_000_000, None, 0, 1),
+                    (2_000_000, None, 1, 0), (500_000, 0, 2, 2)], 1, 3.0, 2.0),
+    # reduce-toward-root incast: 8 single-flow senders, one receiver —
+    # only the ingress-side gateway bound prices this
+    ("incast-8to1", [(1_000_000, None, v, 0) for v in range(1, 9)],
+     1, 2.0, 1.0),
+]
+
+
+def golden():
+    print("== golden stage times (embed in tests/congestion_invariants.rs) ==")
+    out = []
+    for label, flows, ports, oversub, spine in GOLDEN_FLOWS:
+        net = Net(links=[(48.0 * 100e9 / 8.0, 1e-6)], nic_ports=ports,
+                  nic_oversub=oversub, spine_oversub=spine)
+        t = net.stage_time_congested(flows)
+        out.append((label, t))
+        print(f"  {label:16s} ports={ports} oversub={oversub} "
+              f"spine={spine}  t={t!r}")
+    return out
+
+
+SWEEP_CELLS = [("hier(ring/ring,m=16)", [("ring", 16), ("ring", 8)]),
+               ("hier(ring/butterfly,m=8)", [("ring", 8), ("butterfly", 16)])]
+# mean wire density per codec: exact for BF16; measured means for the
+# rest (wire_bytes_reflect_compression_ratios + paper Table 3 operating
+# points) — only the *trend* matters for compressed codecs
+BPE = {"BF16": 2.0, "DynamiQ": 5.0 / 8.0, "MXFP8": 8.5 / 8.0, "THC": 7.8 / 8.0}
+OVERSUBS = [1.0, 2.0, 4.0, 8.0]
+D = 1 << 16
+# The oversub cells run on a 1 Gbps-class effective NIC (the
+# oversubscribed-cloud regime of Agarwal et al.), where an uncontended
+# BF16 chunk transfer costs about one α — the crossover point at which
+# compression barely pays uncontended, so the separation that appears
+# under oversubscription is genuinely the congestion model's doing.
+SWEEP_NIC_BW = 1e9 / 8.0
+
+
+def model_table():
+    print("== model-predicted comm time vs oversubscription (n=128, d=2^16) ==")
+    print(f"  {'topology':22s} {'oversub':7s} " +
+          " ".join(f"{s:>12s}" for s in BPE) + "   t_BF16/t_DynamiQ")
+    rows = {}
+    for name, levels in SWEEP_CELLS:
+        for so in OVERSUBS:
+            net = Net(bandwidth=SWEEP_NIC_BW,
+                      links=[(48.0 * SWEEP_NIC_BW, 1e-6)],
+                      nic_ports=1, nic_oversub=so)
+            times = {s: hier_comm_time(levels, D, bpe, 0, net)
+                     for s, bpe in BPE.items()}
+            rows[(name, so)] = times
+            sep = times["BF16"] / times["DynamiQ"]
+            print(f"  {name:22s} {so:5.0f}x  " +
+                  " ".join(f"{times[s]*1e3:10.3f}ms" for s in BPE) +
+                  f"   {sep:5.2f}x")
+    for name, _ in SWEEP_CELLS:
+        seps = [rows[(name, so)]["BF16"] / rows[(name, so)]["DynamiQ"]
+                for so in OVERSUBS]
+        check(all(b > a * 0.999 for a, b in zip(seps, seps[1:])),
+              f"{name}: BF16/DynamiQ separation grows with oversub "
+              f"({seps[0]:.2f}x -> {seps[-1]:.2f}x)")
+    return rows
+
+
+def cross_check(rows, path="results/hier_sweep.json"):
+    if not os.path.exists(path):
+        print(f"== no {path}; skipping sweep cross-check "
+              "(run `repro --id hier` first) ==")
+        return
+    print(f"== cross-checking {path} against the model ==")
+    data = json.load(open(path))
+    cells = [r for r in data if "oversub" in r]
+    check(len(cells) > 0, "sweep JSON contains oversubscription rows")
+    by_key = {}
+    for r in cells:
+        by_key[(r["topology"], r["oversub"], r["scheme"])] = r
+    for (name, _levels) in SWEEP_CELLS:
+        for so in OVERSUBS:
+            r = by_key.get((name, so, "BF16"))
+            if r is None:
+                check(False, f"missing BF16 cell {name} oversub={so}")
+                continue
+            model = rows[(name, so)]["BF16"]
+            rel = abs(r["comm_time_s"] - model) / model
+            check(rel < 1e-3,
+                  f"BF16 {name} oversub={so:.0f}: rust {r['comm_time_s']:.6e} "
+                  f"vs model {model:.6e} (rel {rel:.2e})")
+        for scheme in ("DynamiQ", "MXFP8", "THC"):
+            ts = [by_key[(name, so, scheme)]["comm_time_s"]
+                  for so in OVERSUBS if (name, so, scheme) in by_key]
+            if len(ts) == len(OVERSUBS):
+                check(all(b >= a for a, b in zip(ts, ts[1:])),
+                      f"{scheme} {name}: comm time monotone in oversub")
+                sp = [by_key[(name, so, scheme)]["speedup_vs_bf16"]
+                      for so in OVERSUBS]
+                check(sp[-1] > sp[0],
+                      f"{scheme} {name}: speedup over BF16 grows "
+                      f"({sp[0]:.2f}x -> {sp[-1]:.2f}x)")
+
+
+def main():
+    self_checks()
+    golden()
+    rows = model_table()
+    cross_check(rows)
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILURE(S)")
+        for f in FAILURES:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nall congestion-model checks passed")
+
+
+if __name__ == "__main__":
+    main()

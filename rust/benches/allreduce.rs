@@ -5,7 +5,7 @@
 //!     cargo bench --bench allreduce
 
 use dynamiq::codec::{make_codecs, ScratchPool};
-use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, Topology};
+use dynamiq::collective::{AllReduceEngine, Level, LinkClass, NetworkModel, NicProfile, Topology};
 use dynamiq::util::benchkit::Bench;
 use dynamiq::util::rng::Pcg;
 
@@ -84,5 +84,25 @@ fn main() {
         )
         .unwrap();
         std::hint::black_box(out.len());
+    });
+
+    // The congestion solve runs once per schedule stage on the engine's
+    // costing path; the default profile must stay on the allocation-free
+    // per-message fast path, and even the contended node-grouped solve
+    // should be noise next to the stage's kernel work (a 128-worker hier
+    // stage has ~128 flows over 8–16 nodes).
+    println!("\n== stage costing: per-message fast path vs congestion solve ==");
+    let flows: Vec<(u64, LinkClass, u32, u32)> = (0..128u32)
+        .map(|i| (1024 + (i as u64 % 7) * 128, LinkClass::Nic, i / 16, (i / 16 + 1) % 8))
+        .collect();
+    let calm = NetworkModel::hierarchical_100g(48.0);
+    let mut congested = NetworkModel::hierarchical_100g(48.0);
+    congested.nic = NicProfile::gateway(1, 4.0);
+    congested.spine_oversub = 2.0;
+    bench.run("stage_cost/default-fast-path", None, || {
+        std::hint::black_box(calm.stage_time_congested(&flows, 0.0));
+    });
+    bench.run("stage_cost/gateway+spine", None, || {
+        std::hint::black_box(congested.stage_time_congested(&flows, 0.0));
     });
 }

@@ -141,12 +141,14 @@ fn dar_lanes(bytes: &[u8], local: &[f32], out: &mut Vec<u8>) {
     dar_scalar(&bytes[16 * full..], &local[LANE * full..], out);
 }
 
+/// The uncompressed BF16 baseline codec (2 bytes per entry on the wire).
 pub struct Bf16Codec {
     d: usize,
     mode: KernelMode,
 }
 
 impl Bf16Codec {
+    /// A fresh BF16 codec (no cross-round state beyond the vector length).
     pub fn new() -> Self {
         Bf16Codec { d: 0, mode: KernelMode::default() }
     }

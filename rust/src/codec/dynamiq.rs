@@ -66,12 +66,17 @@ pub enum Allocator {
 /// hierarchical scales, correlated rounding, fast allocator.
 #[derive(Clone, Debug)]
 pub struct DynamiqConfig {
+    /// group/super-group geometry (s entries per scale, S per width)
     pub layout: GroupLayout,
+    /// allowed code widths in bits, ascending (paper: {2, 4, 8})
     pub widths: Vec<u32>,
     /// overall budget, bits per coordinate, *including* scale overhead
     pub budget_bits: f64,
+    /// the non-uniform value family's ε (see [`crate::quant::nonuniform`])
     pub epsilon: f64,
+    /// rounding mode (correlated / stochastic / nearest)
     pub rounding: Rounding,
+    /// which threshold solver drives the width allocation
     pub allocator: Allocator,
     /// ablation: UINT8 group scales under BF16 super-group scale (on) vs
     /// BF16 per group (off)
@@ -82,6 +87,7 @@ pub struct DynamiqConfig {
     pub uniform_values: bool,
     /// subtract per-super-group global means (on in the paper's pipeline)
     pub subtract_mean: bool,
+    /// shared-randomness seed (correlated rounding / permutations)
     pub seed: u32,
     /// Topology-aware per-level bit budgets (bits/coordinate *including*
     /// scale overhead) for reduce-scatter partial sums, indexed by
@@ -208,6 +214,7 @@ struct RoundState {
 /// trajectory warm-starts against its own budget) plus the current
 /// round's agreed state.
 pub struct Dynamiq {
+    /// the configuration this codec was built with
     pub cfg: DynamiqConfig,
     tables: QTables,
     /// signed decode LUTs per configured width, built once at construction
@@ -224,6 +231,9 @@ pub struct Dynamiq {
 const LANE: usize = 8;
 
 impl Dynamiq {
+    /// Build a codec from `cfg` (decode LUTs and value tables are
+    /// precomputed here; panics on non-ascending widths or non-positive
+    /// level budgets).
     pub fn new(cfg: DynamiqConfig) -> Self {
         assert!(
             cfg.widths.windows(2).all(|w| w[0] < w[1]) && !cfg.widths.is_empty(),
@@ -263,6 +273,7 @@ impl Dynamiq {
             && self.g() % LANE == 0
     }
 
+    /// The paper's evaluated configuration ([`DynamiqConfig::default`]).
     pub fn paper_default() -> Self {
         Dynamiq::new(DynamiqConfig::default())
     }

@@ -64,7 +64,9 @@ use std::ops::Range;
 /// Reduction used for the metadata all-reduce.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MetaOp {
+    /// Element-wise sum (energy statistics, mean accumulators).
     Sum,
+    /// Element-wise max (scale agreement, overflow indicators).
     Max,
 }
 

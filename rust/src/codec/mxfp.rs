@@ -27,15 +27,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits, bf16_round, Minifloat};
 
+/// MX block size: entries sharing one power-of-two scale.
 pub const MX_BLOCK: usize = 32;
 /// FP8-LM auto-scaling thresholds.
 const OVF_EPS: f64 = 1e-4;
 const MU_DECAY: f32 = 0.98;
 
+/// Which MX element format the codec encodes (OCP MX spec names).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MxFormat {
+    /// E4M3, 8 bits per element.
     Mxfp8,
+    /// E3M2, 6 bits per element.
     Mxfp6,
+    /// E2M1, 4 bits per element.
     Mxfp4,
 }
 
@@ -48,6 +53,7 @@ impl MxFormat {
         }
     }
 
+    /// Bits per encoded element (excluding the shared block scale).
     pub fn element_bits(&self) -> u32 {
         match self {
             MxFormat::Mxfp8 => 8,
@@ -56,6 +62,7 @@ impl MxFormat {
         }
     }
 
+    /// Scheme name as it appears in the paper's legend.
     pub fn name(&self) -> &'static str {
         match self {
             MxFormat::Mxfp8 => "MXFP8",
@@ -65,7 +72,9 @@ impl MxFormat {
     }
 }
 
+/// Microscaling (MX) block-format codec with FP8-LM-style µ auto-scaling.
 pub struct MxfpCodec {
+    /// the element format this codec encodes
     pub format: MxFormat,
     element: Minifloat,
     /// FP8-LM µ (agreed across workers via the overflow metadata slot)
@@ -82,6 +91,8 @@ pub struct MxfpCodec {
 }
 
 impl MxfpCodec {
+    /// A fresh codec for `format` (µ starts at 1 and auto-scales from the
+    /// first round's overflow metadata).
     pub fn new(format: MxFormat) -> Self {
         MxfpCodec {
             element: format.element(),

@@ -18,9 +18,12 @@ use std::ops::Range;
 use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits};
 
+/// Sparsification block size: entries selected or dropped together.
 pub const OR_BLOCK: usize = 256;
 const MOMENTUM: f32 = 0.8;
 
+/// The OmniReduce baseline: block-sparsified BF16 with an adaptive local
+/// top-k agreed through union metadata.
 pub struct OmniReduce {
     /// average bits/entry target (paper uses b = 8 → keep 50% of blocks)
     pub budget_bits: f64,
@@ -35,6 +38,7 @@ pub struct OmniReduce {
 }
 
 impl OmniReduce {
+    /// A codec targeting `budget_bits` mean bits per entry.
     pub fn new(budget_bits: f64) -> Self {
         OmniReduce {
             budget_bits,
@@ -46,6 +50,7 @@ impl OmniReduce {
         }
     }
 
+    /// The paper's evaluated operating point (b = 8 → keep 50% of blocks).
     pub fn paper_default() -> Self {
         OmniReduce::new(8.0)
     }

@@ -54,6 +54,7 @@ pub struct ScratchPool {
 }
 
 impl ScratchPool {
+    /// An empty pool (warms up to its high-water capacity on first use).
     pub fn new() -> Self {
         ScratchPool::default()
     }

@@ -109,7 +109,10 @@ pub fn fwht(x: &mut [f32]) {
     }
 }
 
+/// The THC baseline: Hadamard-rotated lattice quantization with
+/// homomorphic (decode-free) aggregation containers.
 pub struct ThcCodec {
+    /// shared rotation/dither seed (identical on every worker)
     pub seed: u32,
     d: usize,
     round: u32,
@@ -122,6 +125,7 @@ pub struct ThcCodec {
 }
 
 impl ThcCodec {
+    /// A fresh THC codec with the given shared seed.
     pub fn new(seed: u32) -> Self {
         ThcCodec {
             seed,
@@ -335,6 +339,7 @@ impl ThcCodec {
         uniform_u01(self.useed(worker), idx)
     }
 
+    /// Current wire density: the aggregation container width in bits.
     pub fn wire_bits_per_entry(&self) -> f64 {
         self.agg_bits as f64
     }

@@ -38,34 +38,51 @@ use crate::collective::topology::{Hop, Topology, TopologyError};
 use crate::util::par;
 use crate::util::pool::WorkerPool;
 
+/// What one synchronization round cost: wire bytes and simulated time per
+/// phase, kernel-call tallies, and the resulting aggregation error.
+/// Simulated times are congestion-aware (see
+/// [`NetworkModel::stage_time_congested`]).
 #[derive(Clone, Debug, Default)]
 pub struct RoundReport {
     /// wire bytes of the initial metadata all-reduce (per the whole job)
     pub meta_bytes: u64,
+    /// reduce-scatter wire bytes (all workers, all stages)
     pub rs_bytes: u64,
+    /// all-gather wire bytes (all workers, all stages)
     pub ag_bytes: u64,
+    /// simulated time of the metadata all-reduce
     pub meta_time_s: f64,
+    /// simulated time of the reduce-scatter phase
     pub rs_time_s: f64,
+    /// simulated time of the all-gather phase
     pub ag_time_s: f64,
     /// per reduce-scatter stage wall time (bandwidth trace, Fig. 17)
     pub stage_times_s: Vec<f64>,
+    /// leaf `compress_into` kernel invocations
     pub compress_calls: u64,
+    /// fused decompress-accumulate-recompress kernel invocations
     pub dar_calls: u64,
+    /// multi-parent decompress-accumulate kernel invocations
     pub da_calls: u64,
+    /// broadcast-payload decode invocations
     pub decompress_calls: u64,
     /// entries processed by compression kernels (drives the Fig. 6 /
     /// Table 2 compute model)
     pub entries_processed: u64,
+    /// codec overflow events observed this round (MXFP / THC)
     pub overflow_events: u64,
     /// vNMSE of the aggregated sum vs the exact f64 sum
     pub vnmse: f64,
 }
 
 impl RoundReport {
+    /// Total simulated communication time (metadata + reduce-scatter +
+    /// all-gather).
     pub fn comm_time_s(&self) -> f64 {
         self.meta_time_s + self.rs_time_s + self.ag_time_s
     }
 
+    /// Total wire bytes across all three phases.
     pub fn total_bytes(&self) -> u64 {
         self.meta_bytes + self.rs_bytes + self.ag_bytes
     }
@@ -84,9 +101,13 @@ impl RoundReport {
 /// [`RoundReport`] by the engine (each parallel job counts privately).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct KernelCounters {
+    /// leaf `compress_into` invocations
     pub compress_calls: u64,
+    /// fused decompress-accumulate-recompress invocations
     pub dar_calls: u64,
+    /// multi-parent decompress-accumulate invocations
     pub da_calls: u64,
+    /// gradient entries pushed through the kernels
     pub entries_processed: u64,
 }
 
@@ -190,8 +211,14 @@ struct StageState {
     spare: Vec<WorkerJob>,
 }
 
+/// The deterministic simulation engine: drives one codec per worker over
+/// a topology schedule and charges every byte to the (congestion-aware)
+/// network model. See the module docs for the execution model.
 pub struct AllReduceEngine {
+    /// the schedule source (also supplies per-hop link classes and node
+    /// identities for congestion-aware stage costing)
     pub topology: Topology,
+    /// the priced fabric (α-β, tenants, private tiers, NIC gateway, spine)
     pub net: NetworkModel,
     /// cross-check that two different workers decode identical results
     pub verify_consistency: bool,
@@ -217,6 +244,8 @@ pub struct AllReduceEngine {
 }
 
 impl AllReduceEngine {
+    /// Build an engine over `topology` priced by `net` (consistency
+    /// verification off, vNMSE measurement on, threads = hardware).
     pub fn new(topology: Topology, net: NetworkModel) -> Self {
         AllReduceEngine {
             topology,
@@ -385,23 +414,30 @@ impl AllReduceEngine {
         // hoisted per-stage buffers (reused, so steady-state stages do not
         // allocate them)
         let mut produced: Vec<(u32, u32, Vec<u8>, u32)> = Vec::new();
-        let mut stage_msgs: Vec<(u64, LinkClass)> = Vec::new();
+        let mut stage_msgs: Vec<(u64, LinkClass, u32, u32)> = Vec::new();
         for hops in &rs_sched {
             self.run_stage(
                 hops, codecs_ro, &pres, &ranges, n, round, threads, pool, stage_state,
                 &mut report, &mut produced,
             );
             // each message priced on the link tier its hop crosses
-            // (intra-node vs NIC for hierarchical topologies)
+            // (intra-node vs NIC for hierarchical topologies), carrying
+            // its endpoint node identities for the NIC-gateway / spine
+            // congestion bounds
             stage_msgs.clear();
             for (h, (_, _, payload, _)) in hops.iter().zip(produced.iter()) {
-                stage_msgs.push((payload.len() as u64, self.topology.link_class(h.from, h.to)));
+                stage_msgs.push((
+                    payload.len() as u64,
+                    self.topology.link_class(h.from, h.to),
+                    self.topology.node_of(h.from),
+                    self.topology.node_of(h.to),
+                ));
                 report.rs_bytes += payload.len() as u64;
             }
             for (to, chunk, payload, summed) in produced.drain(..) {
                 pool.inbox[to as usize * n + chunk as usize].push((payload, summed));
             }
-            let dt = self.net.stage_time_classed(&stage_msgs, now);
+            let dt = self.net.stage_time_congested(&stage_msgs, now);
             now += dt;
             report.rs_time_s += dt;
             report.stage_times_s.push(dt);
@@ -429,10 +465,15 @@ impl AllReduceEngine {
             stage_msgs.clear();
             for h in hops {
                 let bytes = broadcast[h.chunk as usize].0.len() as u64;
-                stage_msgs.push((bytes, self.topology.link_class(h.from, h.to)));
+                stage_msgs.push((
+                    bytes,
+                    self.topology.link_class(h.from, h.to),
+                    self.topology.node_of(h.from),
+                    self.topology.node_of(h.to),
+                ));
                 report.ag_bytes += bytes;
             }
-            let dt = self.net.stage_time_classed(&stage_msgs, now);
+            let dt = self.net.stage_time_congested(&stage_msgs, now);
             now += dt;
             report.ag_time_s += dt;
         }
@@ -805,6 +846,45 @@ mod tests {
             het.comm_time_s(),
             iso.comm_time_s()
         );
+    }
+
+    #[test]
+    fn oversubscribed_nic_stretches_hier_comm_time() {
+        use crate::collective::network::NicProfile;
+        use crate::collective::topology::Level;
+        let n = 16;
+        let d = 1 << 18;
+        let g = grads(n, d, 5);
+        let topo = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+        let run_with = |nic: NicProfile, spine: f64| {
+            let mut net = NetworkModel::hierarchical_100g(48.0);
+            net.nic = nic;
+            net.spine_oversub = spine;
+            let mut codecs = mk_codecs("bf16", n);
+            let eng = AllReduceEngine::new(topo, net);
+            let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
+            rep
+        };
+        let base = run_with(NicProfile::default(), 1.0);
+        // one shared port per 4-worker node: the NIC tier slows, the
+        // intra tier does not — same bytes, longer round, monotone in
+        // the oversubscription factor
+        let mut prev = base.comm_time_s();
+        for oversub in [2.0, 4.0] {
+            let rep = run_with(NicProfile::gateway(1, oversub), 1.0);
+            assert_eq!(rep.total_bytes(), base.total_bytes());
+            assert!(
+                rep.comm_time_s() >= prev,
+                "gateway oversub {oversub}: {} < {prev}",
+                rep.comm_time_s()
+            );
+            prev = rep.comm_time_s();
+        }
+        assert!(prev > 1.5 * base.comm_time_s(), "4 flows on 1/4-speed port must bite");
+        // spine oversubscription alone stretches the round too
+        let sp = run_with(NicProfile::default(), 4.0);
+        assert_eq!(sp.total_bytes(), base.total_bytes());
+        assert!(sp.comm_time_s() > base.comm_time_s());
     }
 
     #[test]

@@ -36,7 +36,9 @@ use super::topology::{Hop, Level, Schedule, TopologyError};
 /// One hierarchy level: a flat topology over `size` members.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct LevelSpec {
+    /// the flat topology aggregating this level's members
     pub topo: Level,
+    /// members per group at this level
     pub size: usize,
 }
 

@@ -9,9 +9,11 @@
 //! over NVLink, butterfly across nodes over the NIC — into a single
 //! deeper aggregation arborescence per chunk. The engine and the
 //! thread-per-worker coordinator execute the composed [`topology::Schedule`]
-//! unchanged; only stage *costing* is tier-aware: every hop carries a
-//! [`network::LinkClass`] and a stage is charged for the slowest link
-//! class active in it.
+//! unchanged; only stage *costing* is tier- and congestion-aware: every
+//! hop carries a [`network::LinkClass`] plus its endpoint node
+//! identities, and a stage is charged the slowest of the per-message,
+//! NIC-gateway ([`network::NicProfile`]) and spine-oversubscription
+//! bounds active in it (see [`network`]'s congestion-model docs).
 
 pub mod allreduce;
 pub mod hierarchy;
@@ -20,5 +22,5 @@ pub mod topology;
 
 pub use allreduce::{produce_hop, AllReduceEngine, KernelCounters, RoundReport};
 pub use hierarchy::LevelSpec;
-pub use network::{LinkClass, LinkSpec, NetworkModel};
+pub use network::{LinkClass, LinkSpec, NetworkModel, NicProfile};
 pub use topology::{HierarchySpec, Level, LevelStack, Topology, TopologyError};

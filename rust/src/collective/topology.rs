@@ -23,8 +23,11 @@ use super::network::LinkClass;
 /// One transfer: `from` sends chunk `chunk`'s payload to `to`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Hop {
+    /// sending worker rank
     pub from: u32,
+    /// receiving worker rank
     pub to: u32,
+    /// which chunk's payload moves
     pub chunk: u32,
 }
 
@@ -34,14 +37,50 @@ pub type Schedule = Vec<Vec<Hop>>;
 /// Why a topology cannot run over a given worker count.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum TopologyError {
-    TooFewWorkers { n: usize },
-    NotPowerOfTwo { n: usize },
-    IndivisibleWorkers { n: usize, per_node: usize },
-    BadWorkersPerNode { per_node: usize },
-    TooFewNodes { nodes: usize },
-    TooFewLevels { levels: usize },
-    TooManyLevels { levels: usize },
-    WorkerCountMismatch { n: usize, expect: usize },
+    /// All-reduce needs ≥ 2 workers.
+    TooFewWorkers {
+        /// the offending worker count
+        n: usize,
+    },
+    /// Butterfly schedules require a power-of-two member count.
+    NotPowerOfTwo {
+        /// the offending worker count
+        n: usize,
+    },
+    /// The worker count does not divide into whole nodes.
+    IndivisibleWorkers {
+        /// total workers
+        n: usize,
+        /// configured workers per node
+        per_node: usize,
+    },
+    /// Hierarchies need ≥ 2 workers per node.
+    BadWorkersPerNode {
+        /// the offending node size
+        per_node: usize,
+    },
+    /// Hierarchies need ≥ 2 nodes.
+    TooFewNodes {
+        /// the resulting node count
+        nodes: usize,
+    },
+    /// Level stacks need ≥ 2 levels.
+    TooFewLevels {
+        /// the offending level count
+        levels: usize,
+    },
+    /// Level stacks support at most [`MAX_STACK_LEVELS`] levels.
+    TooManyLevels {
+        /// the offending level count
+        levels: usize,
+    },
+    /// A [`LevelStack`] schedules exactly the product of its level sizes.
+    WorkerCountMismatch {
+        /// the offered worker count
+        n: usize,
+        /// the stack's exact worker count
+        expect: usize,
+    },
 }
 
 impl fmt::Display for TopologyError {
@@ -83,11 +122,15 @@ impl std::error::Error for TopologyError {}
 /// A flat per-level topology (the building block hierarchies compose).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Level {
+    /// Ring reduce-scatter / all-gather: n − 1 stages, depth n − 1.
     Ring,
+    /// Butterfly (recursive halving/doubling): log₂ n stages and depth.
     Butterfly,
 }
 
 impl Level {
+    /// CLI-facing name (`ring` / `butterfly`), the inverse of
+    /// [`Level::parse`].
     pub fn name(&self) -> &'static str {
         match self {
             Level::Ring => "ring",
@@ -104,6 +147,7 @@ impl Level {
         }
     }
 
+    /// Check that this flat topology can schedule `n` members.
     pub fn validate(&self, n: usize) -> Result<(), TopologyError> {
         if n < 2 {
             return Err(TopologyError::TooFewWorkers { n });
@@ -259,12 +303,16 @@ fn arborescence_of(sched: &Schedule, n: usize, chunk: usize) -> Vec<(u32, u32)> 
 /// NVLink inside a server, 100 Gbps between servers).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HierarchySpec {
+    /// topology aggregating inside each node (over the private links)
     pub intra: Level,
+    /// topology aggregating across nodes (over the NIC)
     pub inter: Level,
+    /// consecutive worker ranks forming one node
     pub workers_per_node: u32,
 }
 
 impl HierarchySpec {
+    /// Number of nodes `n` workers split into.
     pub fn nodes(&self, n: usize) -> usize {
         n / self.workers_per_node as usize
     }
@@ -336,6 +384,7 @@ impl LevelStack {
         LevelStack::new(&specs).map_err(|e| e.to_string())
     }
 
+    /// Display name in the CLI syntax, e.g. `stack(ring:8/butterfly:4)`.
     pub fn name(&self) -> String {
         let parts: Vec<String> =
             self.specs().iter().map(|l| format!("{}:{}", l.topo.name(), l.size)).collect();
@@ -343,9 +392,13 @@ impl LevelStack {
     }
 }
 
+/// An all-reduce topology: which arborescence the reduce-scatter phase
+/// aggregates over and which broadcast tree the all-gather replays.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Topology {
+    /// Flat ring: n − 1 pipelined stages, depth n − 1.
     Ring,
+    /// Flat butterfly (recursive halving): log₂ n stages and depth.
     Butterfly,
     /// Multi-level aggregation: per-level topologies composed into one
     /// deeper arborescence (intra-node × inter-node).
@@ -366,6 +419,7 @@ impl Topology {
         Ok(Topology::Stack(LevelStack::new(levels)?))
     }
 
+    /// Human-readable name (used in experiment tables and CLI errors).
     pub fn name(&self) -> String {
         match self {
             Topology::Ring => "ring".into(),
@@ -510,6 +564,21 @@ impl Topology {
             LinkClass::Nic
         } else {
             LinkClass::Level(l)
+        }
+    }
+
+    /// The physical node a worker lives on — the unit that shares one NIC
+    /// gateway under congestion-aware costing
+    /// ([`crate::collective::NicProfile`]): a worker's innermost-level
+    /// group. Flat topologies put every worker on its own node (each
+    /// with its own NIC, the paper's testbed shape), so node identity
+    /// degenerates to the worker rank there. Allocation-free — this runs
+    /// once per hop on the engine's stage-costing path.
+    pub fn node_of(&self, worker: u32) -> u32 {
+        match self {
+            Topology::Ring | Topology::Butterfly => worker,
+            Topology::Hierarchical(spec) => worker / spec.workers_per_node,
+            Topology::Stack(ls) => worker / ls.specs()[0].size as u32,
         }
     }
 
@@ -731,6 +800,35 @@ mod tests {
         }
         // flat topologies ride the NIC everywhere
         assert_eq!(Topology::Ring.link_class(0, 1), LinkClass::Nic);
+    }
+
+    #[test]
+    fn node_identity_follows_the_innermost_level() {
+        // flat: every worker its own node (per-worker NICs)
+        assert_eq!(Topology::Ring.node_of(5), 5);
+        assert_eq!(Topology::Butterfly.node_of(0), 0);
+        // 2-level: node = rank / workers_per_node
+        let h = Topology::hierarchical(Level::Ring, Level::Butterfly, 4);
+        assert_eq!(h.node_of(0), 0);
+        assert_eq!(h.node_of(3), 0);
+        assert_eq!(h.node_of(4), 1);
+        assert_eq!(h.node_of(15), 3);
+        // stacks: node = the innermost-level group
+        let t = Topology::stack(&[
+            spec(Level::Ring, 8),
+            spec(Level::Ring, 4),
+            spec(Level::Butterfly, 4),
+        ])
+        .unwrap();
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.node_of(127), 15);
+        // consistency: two workers share a node iff their hop stays below
+        // level 1
+        for (a, b) in [(0u32, 1u32), (0, 7), (0, 8), (3, 100)] {
+            let same = t.node_of(a) == t.node_of(b);
+            assert_eq!(same, t.hop_level(a, b) == 0, "workers {a},{b}");
+        }
     }
 
     #[test]

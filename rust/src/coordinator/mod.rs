@@ -20,6 +20,14 @@
 //! payload-arena free list **across rounds**: arenas received over a
 //! channel are recycled into the local pool after decode, so a worker's
 //! steady-state hop path stays allocation-free just like the engine's.
+//!
+//! Round pricing: real channels carry no simulated clock, so each worker
+//! records its sends ([`SendRecord`]) and [`Coordinator::price_round`]
+//! replays them onto the schedule's stages, charging each stage through
+//! the same congestion-aware [`NetworkModel::stage_time_congested`] the
+//! engine uses — with shared codecs and schedules the priced times match
+//! the engine's report exactly, including under NIC-gateway and spine
+//! oversubscription (asserted by `tests/congestion_invariants`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -28,6 +36,7 @@ use anyhow::{anyhow, Result};
 
 use crate::codec::{chunk_ranges, GradCodec, HopCtx, MetaOp, WorkerScratch};
 use crate::collective::allreduce::{produce_hop, KernelCounters};
+use crate::collective::network::{LinkClass, NetworkModel};
 use crate::collective::topology::{Hop, Topology};
 use crate::util::pool::WorkerPool;
 
@@ -66,15 +75,63 @@ fn mesh(n: usize) -> Links {
     Links { tx, rx }
 }
 
+/// One payload this worker put on the wire, tagged with where in the
+/// schedule it happened — the raw material [`Coordinator::price_round`]
+/// re-prices with the simulation's (congestion-aware) network model.
+#[derive(Clone, Copy, Debug)]
+pub struct SendRecord {
+    /// 0 = reduce-scatter, 1 = all-gather
+    pub phase: u8,
+    /// stage index within the phase
+    pub stage: u32,
+    /// which chunk's payload was sent
+    pub chunk: u32,
+    /// payload size on the wire
+    pub bytes: u64,
+}
+
 /// Outcome of one coordinated round on one worker.
 pub struct WorkerRound {
+    /// this worker's rank
     pub worker: u32,
+    /// the decoded aggregated sum (identical on every worker)
     pub aggregated: Vec<f32>,
+    /// reduce-scatter bytes this worker sent
     pub rs_bytes_sent: u64,
+    /// all-gather bytes this worker sent
     pub ag_bytes_sent: u64,
     /// this worker's kernel-call tallies (summed across workers they must
     /// match the engine's RoundReport — asserted in tests)
     pub counters: KernelCounters,
+    /// length of this worker's metadata vector (equal on all workers;
+    /// [`Coordinator::price_round`] derives the metadata-phase cost from
+    /// it exactly like the engine)
+    pub meta_len: usize,
+    /// every payload this worker sent, in schedule order
+    pub sends: Vec<SendRecord>,
+}
+
+/// Simulated communication cost of a coordinated round, phase by phase —
+/// the coordinator's counterpart of the engine's
+/// [`crate::collective::RoundReport`] timing fields, produced by
+/// [`Coordinator::price_round`].
+#[derive(Clone, Debug, Default)]
+pub struct CommCost {
+    /// simulated metadata all-reduce time
+    pub meta_time_s: f64,
+    /// simulated reduce-scatter time
+    pub rs_time_s: f64,
+    /// simulated all-gather time
+    pub ag_time_s: f64,
+    /// per reduce-scatter stage wall time
+    pub stage_times_s: Vec<f64>,
+}
+
+impl CommCost {
+    /// Total simulated communication time across all three phases.
+    pub fn comm_time_s(&self) -> f64 {
+        self.meta_time_s + self.rs_time_s + self.ag_time_s
+    }
 }
 
 /// Per-worker state the coordinator keeps alive across rounds: the codec
@@ -142,6 +199,7 @@ impl Coordinator {
         })
     }
 
+    /// Number of workers (= codecs) this coordinator was built over.
     pub fn workers(&self) -> usize {
         self.n
     }
@@ -188,6 +246,75 @@ impl Coordinator {
             self.failed = true;
         }
         out
+    }
+
+    /// Price a completed round's communication on `net`, exactly as the
+    /// simulation engine would have: the workers' [`SendRecord`]s are
+    /// laid back onto the schedule's stages and each stage is charged by
+    /// [`NetworkModel::stage_time_congested`] with the same link classes
+    /// and node identities, starting at absolute time `t0`. Because both
+    /// paths share codecs and schedules, the result agrees with the
+    /// engine's [`crate::collective::RoundReport`] timings to the last
+    /// bit (asserted by `tests/congestion_invariants`) — this is what
+    /// makes the deployment-shaped path's comm times auditable against
+    /// the experimentation path under NIC/spine oversubscription.
+    pub fn price_round(&self, net: &NetworkModel, rounds: &[WorkerRound], t0: f64) -> CommCost {
+        assert_eq!(rounds.len(), self.n, "price_round needs every worker's round");
+        let n = self.n;
+        let mut bytes_of: HashMap<(u8, u32, u32, u32), u64> = HashMap::new();
+        for wr in rounds {
+            for s in &wr.sends {
+                let prev = bytes_of.insert((s.phase, s.stage, wr.worker, s.chunk), s.bytes);
+                debug_assert!(prev.is_none(), "duplicate send record");
+            }
+        }
+        let mut cost = CommCost::default();
+        let mut now = t0;
+        // metadata ring all-reduce: the engine's exact formula — 2(n−1)
+        // stages of mlen/n·4-byte messages, priced per-message on the
+        // (tenant-aware) NIC. Deliberately not congestion-priced, in the
+        // engine too: metadata is <1% of gradient traffic and
+        // latency-dominated.
+        let mlen = rounds[0].meta_len;
+        if mlen > 0 {
+            let per_stage = (mlen.div_ceil(n) * 4) as u64;
+            let stage_msgs = vec![per_stage; n];
+            for _ in 0..2 * (n - 1) {
+                let dt = net.stage_time(&stage_msgs, now);
+                now += dt;
+                cost.meta_time_s += dt;
+            }
+        }
+        let mut flows: Vec<(u64, LinkClass, u32, u32)> = Vec::new();
+        let mut price_phase = |phase: u8, sched: &[Vec<Hop>], now: &mut f64| -> (f64, Vec<f64>) {
+            let mut total = 0.0;
+            let mut per_stage = Vec::with_capacity(sched.len());
+            for (stage, hops) in sched.iter().enumerate() {
+                flows.clear();
+                for h in hops {
+                    let bytes = bytes_of[&(phase, stage as u32, h.from, h.chunk)];
+                    flows.push((
+                        bytes,
+                        self.topology.link_class(h.from, h.to),
+                        self.topology.node_of(h.from),
+                        self.topology.node_of(h.to),
+                    ));
+                }
+                let dt = net.stage_time_congested(&flows, *now);
+                *now += dt;
+                total += dt;
+                per_stage.push(dt);
+            }
+            (total, per_stage)
+        };
+        let rs_sched = self.topology.reduce_scatter(n);
+        let (rs_time, stage_times) = price_phase(0, &rs_sched, &mut now);
+        cost.rs_time_s = rs_time;
+        cost.stage_times_s = stage_times;
+        let ag_sched = self.topology.all_gather(n);
+        let (ag_time, _) = price_phase(1, &ag_sched, &mut now);
+        cost.ag_time_s = ag_time;
+        cost
     }
 }
 
@@ -237,6 +364,8 @@ fn run_worker(
     // ---- metadata ring all-reduce (reduce pass toward n−1, then
     // broadcast n−1 → 0 → 1 → … → n−2) ----
     let local_meta = codec.metadata(grad, &ctx(1));
+    let meta_len = local_meta.len();
+    let mut sends: Vec<SendRecord> = Vec::new();
     let op = codec.metadata_op();
     let next = ((w as usize + 1) % n) as u32;
     let mut acc = local_meta.clone();
@@ -295,6 +424,12 @@ fn run_worker(
                 &mut counters,
             );
             rs_bytes += payload.len() as u64;
+            sends.push(SendRecord {
+                phase: 0,
+                stage: stage as u32,
+                chunk: h.chunk,
+                bytes: payload.len() as u64,
+            });
             tx[&h.to]
                 .send((w, Msg::Chunk(0, stage as u32, h.chunk, payload, summed)))
                 .map_err(|_| anyhow!("send"))?;
@@ -338,6 +473,12 @@ fn run_worker(
                 .ok_or_else(|| anyhow!("worker {w} lacks chunk {} to forward", h.chunk))?
                 .clone();
             ag_bytes += payload.len() as u64;
+            sends.push(SendRecord {
+                phase: 1,
+                stage: stage as u32,
+                chunk: h.chunk,
+                bytes: payload.len() as u64,
+            });
             tx[&h.to]
                 .send((w, Msg::Chunk(1, stage as u32, h.chunk, payload, summed)))
                 .map_err(|_| anyhow!("send"))?;
@@ -369,6 +510,8 @@ fn run_worker(
         rs_bytes_sent: rs_bytes,
         ag_bytes_sent: ag_bytes,
         counters,
+        meta_len,
+        sends,
     })
 }
 

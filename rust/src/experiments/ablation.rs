@@ -11,6 +11,7 @@ use crate::collective::Topology;
 use crate::quant::groups::GroupLayout;
 use crate::util::benchkit::Table;
 
+/// Fig. 7 / Table 4: accuracy and wire bytes across bit budgets.
 pub fn fig7_tab4_bit_budget(ctx: &Ctx) -> Result<()> {
     let (label, preset, seed, full_rounds) = super::tta::WORKLOADS[3];
     let rounds = ctx.rounds(full_rounds);

@@ -5,7 +5,11 @@
 //! dimension: DynamiQ with topology-aware bit allocation (more bits on
 //! the few, deep NIC-tier partial sums, fewer on the numerous NVLink
 //! hops, broadcast pinned at the nominal budget) vs the uniform budget
-//! at equal predicted mean wire bytes.
+//! at equal predicted mean wire bytes — plus the oversubscription
+//! dimension: comm time vs NIC-gateway oversubscription factor × codec
+//! at n = 128 under congestion-aware stage costing
+//! ([`crate::collective::NicProfile`]), where the compressed codecs'
+//! comm-time advantage over BF16 grows with the factor.
 //!
 //! The axis the paper cannot reach with flat schedules: partial sums grow
 //! along the aggregation path, so a topology's *depth* (requantization
@@ -29,7 +33,9 @@ use super::Ctx;
 use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
 use crate::codec::{make_codecs, GradCodec, ScratchPool};
 use crate::quant::bitalloc::waterfill_level_budgets;
-use crate::collective::{AllReduceEngine, Level, LevelSpec, NetworkModel, RoundReport, Topology};
+use crate::collective::{
+    AllReduceEngine, Level, LevelSpec, NetworkModel, NicProfile, RoundReport, Topology,
+};
 use crate::util::benchkit::Table;
 use crate::util::json::Json;
 use crate::util::par;
@@ -107,6 +113,9 @@ struct Cell {
     report: Option<RoundReport>,
 }
 
+/// `repro --id hier`: the full hierarchical sweep (depth × ratio × codec
+/// grid, the per-level-budget comparison, and the oversubscription
+/// dimension), rendered as text tables and saved with JSON rows.
 pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
     let d = 1 << 16;
     let rounds = ((3.0 * ctx.scale).ceil() as u32).clamp(1, 10);
@@ -257,6 +266,101 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
     println!("{bbody}");
     body.push('\n');
     body.push_str(&bbody);
+
+    // ---- oversubscription dimension (congestion-aware costing) ----
+    //
+    // The regime the congestion model exists for: every worker of a node
+    // funnels its NIC-tier sends through one shared gateway port, derated
+    // by the oversubscription factor (oversub = 1 is the legacy
+    // per-worker-NIC baseline — bit-identical to the cells above). The
+    // NIC stages stretch with the factor while the private intra-node
+    // stages do not, so the compressed codecs' comm-time advantage over
+    // BF16 *grows* with oversubscription — wire-byte savings translate
+    // into honest comm-time savings exactly where the network is the
+    // bottleneck. These cells run on a 1 Gbps-class effective NIC (the
+    // oversubscribed-cloud regime the motivation cites): at this sweep's
+    // 1 KB chunk payloads that is the α ≈ β crossover, where compression
+    // barely pays uncontended (≈1.4× over BF16) and the separation that
+    // appears under oversubscription (→ ≈3.1×, the wire-byte ratio) is
+    // genuinely the congestion model's doing. Cross-validated by
+    // python/validate_congestion.py (same schedules, same solve, same
+    // constants — keep SWEEP_NIC_BW in sync).
+    let oversub_cases: Vec<(Topology, usize)> = vec![
+        (Topology::hierarchical(Level::Ring, Level::Ring, 16), 128),
+        (Topology::hierarchical(Level::Ring, Level::Butterfly, 8), 128),
+    ];
+    let oversubs = [1.0, 2.0, 4.0, 8.0];
+    let oschemes = ["BF16", "DynamiQ", "MXFP8", "THC"];
+    let mut otable = Table::new(&[
+        "topology", "n", "oversub", "scheme", "wire MB", "comm ms", "t_BF16/t",
+    ]);
+    for &(topo, n) in &oversub_cases {
+        topo.validate(n)?;
+        let g = grads(n, d, 0x05E_0 + n as u64);
+        let mut cells: Vec<Cell> = oversubs
+            .iter()
+            .flat_map(|&oversub| {
+                oschemes.iter().map(move |&scheme| Cell { ratio: oversub, scheme, report: None })
+            })
+            .collect();
+        par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
+            let mut codecs = make_codecs(cell.scheme, n);
+            // 1 Gbps-class NIC, same 48× intra ladder and α as the grid
+            // above (mirrored by python/validate_congestion.py)
+            let mut net = NetworkModel::isolated_100g();
+            net.bandwidth_bps = 1e9 / 8.0;
+            net.set_tier_ratios(&NetworkModel::geometric_ladder(48.0, topo.num_levels() - 1));
+            net.nic = NicProfile { ports_per_node: 1, oversub: cell.ratio };
+            let mut eng = AllReduceEngine::new(topo, net);
+            eng.threads = engine_threads;
+            let mut pool = ScratchPool::new();
+            let mut last = None;
+            for round in 0..rounds {
+                match eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool) {
+                    Ok((_, rep)) => last = Some(rep),
+                    Err(e) => unreachable!("validated up front: {e}"),
+                }
+            }
+            cell.report = last;
+        });
+        // render grouped by oversub factor, with each cell's comm-time
+        // advantage over the same group's BF16 cell
+        for (gi, &oversub) in oversubs.iter().enumerate() {
+            let group = &cells[gi * oschemes.len()..(gi + 1) * oschemes.len()];
+            let t_bf16 = group[0].report.as_ref().expect("at least one round").comm_time_s();
+            debug_assert_eq!(group[0].scheme, "BF16");
+            for cell in group {
+                let rep = cell.report.as_ref().expect("at least one round");
+                otable.row(vec![
+                    topo.name(),
+                    n.to_string(),
+                    format!("{oversub:.0}x"),
+                    cell.scheme.into(),
+                    format!("{:.2}", rep.total_bytes() as f64 / 1e6),
+                    format!("{:.3}", rep.comm_time_s() * 1e3),
+                    format!("{:.2}", t_bf16 / rep.comm_time_s()),
+                ]);
+                json.push(Json::obj(vec![
+                    ("topology", Json::Str(topo.name())),
+                    ("n", Json::Num(n as f64)),
+                    ("scheme", Json::Str(cell.scheme.into())),
+                    ("oversub", Json::Num(oversub)),
+                    ("nic_ports", Json::Num(1.0)),
+                    ("spine_oversub", Json::Num(1.0)),
+                    ("bw_ratio", Json::Num(48.0)),
+                    ("nic_gbps", Json::Num(1.0)),
+                    ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+                    ("comm_time_s", Json::Num(rep.comm_time_s())),
+                    ("speedup_vs_bf16", Json::Num(t_bf16 / rep.comm_time_s())),
+                    ("vnmse", Json::Num(rep.vnmse)),
+                ]));
+            }
+        }
+    }
+    let obody = otable.render();
+    println!("{obody}");
+    body.push('\n');
+    body.push_str(&obody);
     ctx.save("hier_sweep", &body, Some(Json::Arr(json)))
 }
 

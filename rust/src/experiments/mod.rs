@@ -26,7 +26,9 @@ use crate::util::json::Json;
 
 /// Shared context for all experiment drivers.
 pub struct Ctx {
+    /// model-artifact directory (PJRT-driven experiments)
     pub artifacts: String,
+    /// output directory for tables and JSON rows
     pub results: String,
     /// scale factor for round counts (1.0 = full paper-shaped runs;
     /// CI uses 0.2 for speed)
@@ -37,6 +39,7 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// A context writing to `results/` with a given round-count scale.
     pub fn new(artifacts: &str, results: &str, scale: f64) -> Self {
         std::fs::create_dir_all(results).ok();
         Ctx { artifacts: artifacts.into(), results: results.into(), scale, jobs: 1 }
@@ -49,10 +52,12 @@ impl Ctx {
         ctx
     }
 
+    /// Scale a paper-shaped round count (min 10).
     pub fn rounds(&self, full: u32) -> u32 {
         ((full as f64 * self.scale) as u32).max(10)
     }
 
+    /// Write an experiment's text table (and optional JSON rows).
     pub fn save(&self, id: &str, body: &str, json: Option<Json>) -> Result<()> {
         std::fs::write(format!("{}/{}.txt", self.results, id), body)?;
         if let Some(j) = json {
@@ -95,6 +100,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
     }
 }
 
+/// Run every experiment once (ids sharing a driver deduped).
 pub fn run_all(ctx: &Ctx) -> Result<()> {
     // dedupe ids that share a driver
     let mut done = std::collections::HashSet::new();

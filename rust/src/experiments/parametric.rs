@@ -47,6 +47,7 @@ fn variant(name: &str) -> DynamiqConfig {
     }
 }
 
+/// Table 6: component ablation (rounding, values, scales, allocation).
 pub fn tab6_components(ctx: &Ctx) -> Result<()> {
     // capture a few real gradients from two workloads
     let mut table = Table::new(&["variant", "llama-chat", "llama-mmlu"]);

@@ -8,6 +8,7 @@ use crate::collective::Topology;
 use crate::metrics::memtraffic::traffic_model;
 use crate::util::benchkit::Table;
 
+/// Table 1: the evaluated workload inventory.
 pub fn tab1_workloads(ctx: &Ctx) -> Result<()> {
     let mut table = Table::new(&["workload", "preset", "tokens/batch", "batch", "LR", "end-factor"]);
     for (label, preset, lr) in [
@@ -30,6 +31,7 @@ pub fn tab1_workloads(ctx: &Ctx) -> Result<()> {
     ctx.save("tab1_workloads", &table.render(), None)
 }
 
+/// Table 2: per-scheme DRAM-traffic model coefficients.
 pub fn tab2_memtraffic(ctx: &Ctx) -> Result<()> {
     let mut table = Table::new(&["scheme", "model (fixed + hop·AR)", "n=2", "n=4", "n=8"]);
     for s in ["BF16", "DynamiQ", "MXFP8", "THC"] {

@@ -25,9 +25,12 @@ pub const WORKLOADS: &[(&str, &str, u64, u32)] = &[
     ("llama-mmlu", "tiny", 44, 120),
 ];
 
+/// The headline schemes every TTA figure sweeps.
 pub const SCHEMES_MAIN: &[&str] =
     &["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
 
+/// Train one (scheme, topology, network) workload and record its TTA
+/// curve (the shared driver behind the TTA figures).
 pub fn run_workload(
     ctx: &Ctx,
     label: &str,

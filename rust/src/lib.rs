@@ -60,8 +60,26 @@
 //! bandwidth-ratio × codec sweep plus the uniform-vs-levelled budget
 //! comparison ([`experiments::hierarchy`]).
 //!
-//! See DESIGN.md for the system inventory and experiment index.
+//! ## Congestion-aware network model
+//!
+//! [`collective::NetworkModel`] prices stages congestion-aware: a
+//! [`collective::NicProfile`] models per-node NIC gateway fan-in
+//! (concurrent NIC flows from one node share `ports / oversub` of line
+//! rate) and `spine_oversub` caps a stage's aggregate cross-node bytes
+//! at `1/spine_oversub` of full bisection — the default profile is
+//! bit-identical to the legacy per-message costing. CLI:
+//! `dynamiq train --nic-ports 1 --oversub 4 --spine-oversub 2`, and the
+//! `hier` sweep's oversubscription dimension charts comm time vs the
+//! factor per codec (oracle: `python/validate_congestion.py`).
+//!
+//! See ARCHITECTURE.md for the top-to-bottom tour (codec layer →
+//! schedules/topology → engine vs coordinator → network model →
+//! experiments/CLI) and DESIGN.md for the system inventory and
+//! experiment index.
 
+// Every public item carries rustdoc; CI keeps the docs build green with
+// `cargo doc --no-deps -D warnings` (see .github/workflows/ci.yml).
+#![warn(missing_docs)]
 // Clippy adoption (PR 3): CI gates `clippy --all-targets -- -D warnings`.
 // The two allowances below are shape/style lints that fire across the
 // pre-existing kernel loops (explicit indices mirror the pallas kernels

@@ -29,6 +29,15 @@
 //!   --level-bw-ratios R0,R1   private-tier bandwidth over the NIC, one
 //!                             per tier below the top (default: a
 //!                             geometric ladder from --intra-bw-ratio)
+//!
+//! Congestion flags (default: the legacy per-worker-NIC costing; any
+//! non-default --nic-ports/--oversub combination switches to the shared
+//! per-node gateway model):
+//!   --nic-ports N             NIC ports per node gateway
+//!   --oversub F               NIC gateway oversubscription factor ≥ 1
+//!   --spine-oversub F         spine oversubscription factor ≥ 1 (caps a
+//!                             stage's aggregate cross-node bytes at 1/F
+//!                             of full bisection)
 
 use dynamiq::collective::{Level, Topology};
 use dynamiq::experiments::{run, run_all, Ctx, ALL_IDS};
@@ -115,6 +124,19 @@ fn parse_topology(args: &[String]) -> anyhow::Result<Topology> {
     }
 }
 
+/// Parse an oversubscription flag: ≥ 1 and finite, defaulting to 1.0
+/// (the uncontended identity).
+fn parse_oversub(args: &[String], flag: &str) -> anyhow::Result<f64> {
+    match flag_value(args, flag) {
+        None => Ok(1.0),
+        Some(v) => v
+            .parse::<f64>()
+            .ok()
+            .filter(|f| *f >= 1.0 && f.is_finite())
+            .ok_or_else(|| anyhow::anyhow!("{flag} must be a finite number ≥ 1, got {v}")),
+    }
+}
+
 fn train(args: &[String]) -> anyhow::Result<()> {
     let topology = parse_topology(args)?;
     let cfg = TrainConfig {
@@ -128,6 +150,16 @@ fn train(args: &[String]) -> anyhow::Result<()> {
         intra_bw_ratio: flag_value(args, "--intra-bw-ratio")
             .and_then(|v| v.parse().ok())
             .unwrap_or(48.0),
+        nic_ports: match flag_value(args, "--nic-ports") {
+            None => 1,
+            Some(v) => v
+                .parse::<u32>()
+                .ok()
+                .filter(|&p| p >= 1)
+                .ok_or_else(|| anyhow::anyhow!("--nic-ports must be a positive integer, got {v}"))?,
+        },
+        nic_oversub: parse_oversub(args, "--oversub")?,
+        spine_oversub: parse_oversub(args, "--spine-oversub")?,
         level_bw_ratios: match flag_value(args, "--level-bw-ratios") {
             None => Vec::new(),
             Some(v) => v

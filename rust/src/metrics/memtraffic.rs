@@ -27,11 +27,14 @@
 /// Scheme coefficients: traffic = fixed + per_hop · AR (bytes/coordinate).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrafficModel {
+    /// fixed bytes per coordinate (read input + write output …)
     pub fixed: f64,
+    /// additional bytes per coordinate per aggregation hop
     pub per_hop: f64,
 }
 
 impl TrafficModel {
+    /// DRAM bytes per coordinate at the ring's AR = (n−1)/n hop ratio.
     pub fn bytes_per_coordinate(&self, n_workers: usize) -> f64 {
         let ar = (n_workers as f64 - 1.0) / n_workers as f64;
         self.fixed + self.per_hop * ar

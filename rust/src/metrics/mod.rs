@@ -9,10 +9,12 @@ pub use timemodel::{ComputeModel, RoundTime};
 /// Time-to-accuracy recorder: (simulated seconds, metric) samples.
 #[derive(Clone, Debug, Default)]
 pub struct TtaCurve {
+    /// (simulated time, metric) samples in recording order
     pub points: Vec<(f64, f64)>,
 }
 
 impl TtaCurve {
+    /// Record one (simulated time, metric) sample.
     pub fn push(&mut self, t_s: f64, metric: f64) {
         self.points.push((t_s, metric));
     }
@@ -26,6 +28,7 @@ impl TtaCurve {
             .map(|(t, _)| *t)
     }
 
+    /// The converged metric: median of the last few samples.
     pub fn final_metric(&self) -> Option<f64> {
         // median of the last few samples — the paper's "converged" value
         let k = self.points.len().min(5);

@@ -12,6 +12,8 @@
 use crate::collective::RoundReport;
 use crate::metrics::memtraffic::kernel_time_s;
 
+/// The modeled device: what compute costs and how much communication
+/// the backward pass can hide.
 #[derive(Clone, Debug)]
 pub struct ComputeModel {
     /// achievable dense-math throughput per worker (A6000 Ada bf16 ≈ 180
@@ -40,12 +42,16 @@ impl ComputeModel {
 /// One round's time decomposition (a Fig. 6 bar).
 #[derive(Clone, Debug, Default)]
 pub struct RoundTime {
+    /// modeled fwd+bwd time
     pub compute_s: f64,
+    /// communication left exposed after backward overlap
     pub exposed_comm_s: f64,
+    /// compression-kernel time (Table-2 traffic model)
     pub compression_s: f64,
 }
 
 impl RoundTime {
+    /// Total round wall time (compute + exposed comm + compression).
     pub fn total_s(&self) -> f64 {
         self.compute_s + self.exposed_comm_s + self.compression_s
     }

@@ -109,6 +109,7 @@ pub fn waterfill_level_budgets(
 /// An allocation: bitwidth per super-group.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitAllocation {
+    /// chosen code width per super-group, in vector order
     pub widths: Vec<u8>,
 }
 
@@ -228,15 +229,19 @@ pub fn solve_exact(
 /// half-interval step (steady state), exactly as the appendix prescribes.
 #[derive(Clone, Debug)]
 pub struct FastAllocator {
+    /// the three allowed widths, ascending (paper: [2, 4, 8])
     pub widths: [u32; 3],
     /// scale factor 4/log2(512/17) for W={2,4,8}; general: (hi−lo) interval
     /// width divided by log2 of the threshold ratio
     coeff: f64,
+    /// the §A threshold offset, warm-started across rounds
     pub u: f64,
     initialized: bool,
 }
 
 impl FastAllocator {
+    /// A solver over three ascending widths (cold `u`, initialized on
+    /// the first round's budget search).
     pub fn new(widths: [u32; 3]) -> Self {
         // z_j = coeff · log2(F_j) + u maps T_{w0,w1} → w1 and T_{w1,w2} → w2.
         // coeff = (w2 − w1) / log2(T_{w1,w2} / T_{w0,w1}).
@@ -246,6 +251,7 @@ impl FastAllocator {
         FastAllocator { widths, coeff, u: 0.0, initialized: false }
     }
 
+    /// The paper's width family W = {2, 4, 8}.
     pub fn paper_default() -> Self {
         FastAllocator::new([2, 4, 8])
     }

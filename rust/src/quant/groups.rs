@@ -17,6 +17,8 @@ pub struct GroupLayout {
 }
 
 impl GroupLayout {
+    /// A layout with `group` entries per scale and `super_group` per
+    /// width (both powers of two; super-group a multiple of group).
     pub fn new(group: usize, super_group: usize) -> Self {
         assert!(group.is_power_of_two(), "group size must be a power of two");
         assert!(super_group.is_power_of_two(), "super-group size must be a power of two");
@@ -24,10 +26,12 @@ impl GroupLayout {
         GroupLayout { group, super_group }
     }
 
+    /// The paper's layout: s = 16, S = 256.
     pub fn paper_default() -> Self {
         GroupLayout::new(16, 256)
     }
 
+    /// Groups per super-group (S / s).
     pub fn groups_per_super(&self) -> usize {
         self.super_group / self.group
     }
@@ -38,6 +42,7 @@ impl GroupLayout {
         d.div_ceil(self.super_group)
     }
 
+    /// Number of groups covering `d` entries.
     pub fn num_groups(&self, d: usize) -> usize {
         d.div_ceil(self.group)
     }
@@ -79,10 +84,12 @@ impl SuperGroupStats {
         SuperGroupStats { mean, sq_norm }
     }
 
+    /// Number of super-groups these statistics cover.
     pub fn len(&self) -> usize {
         self.mean.len()
     }
 
+    /// Whether the statistics cover zero super-groups.
     pub fn is_empty(&self) -> bool {
         self.mean.is_empty()
     }

@@ -32,6 +32,7 @@ impl ScaleCodes {
         self.codes[g] as f32 * self.sf_super * (1.0 / 255.0)
     }
 
+    /// Wire size of these scales: 2-byte super scale + 1 byte per group.
     pub fn wire_bytes(&self) -> usize {
         2 + self.codes.len()
     }

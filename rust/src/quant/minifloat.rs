@@ -24,6 +24,7 @@ pub fn bf16_bits(x: f32) -> u16 {
     (bf16_round(x).to_bits() >> 16) as u16
 }
 
+/// Decode a 16-bit bf16 payload back to f32.
 #[inline]
 pub fn bf16_from_bits(b: u16) -> f32 {
     f32::from_bits((b as u32) << 16)
@@ -34,15 +35,20 @@ pub fn bf16_from_bits(b: u16) -> f32 {
 /// format definitions — overflow saturates to ±max).
 #[derive(Clone, Debug)]
 pub struct Minifloat {
+    /// format name (e.g. `e4m3`)
     pub name: &'static str,
+    /// exponent field width
     pub exp_bits: u32,
+    /// mantissa field width
     pub man_bits: u32,
+    /// exponent bias (`2^(E-1) - 1`)
     pub bias: i32,
     /// all non-negative representable values, ascending (2^(E+M) entries)
     grid: Vec<f32>,
 }
 
 impl Minifloat {
+    /// Build a format from its field widths (grid precomputed, sorted).
     pub fn new(name: &'static str, exp_bits: u32, man_bits: u32) -> Self {
         let bias = (1 << (exp_bits - 1)) - 1;
         let mut grid = Vec::with_capacity(1 << (exp_bits + man_bits));
@@ -72,10 +78,12 @@ impl Minifloat {
         Minifloat::new("e2m1", 2, 1)
     }
 
+    /// Total bits per code (sign + exponent + mantissa).
     pub fn code_bits(&self) -> u32 {
         1 + self.exp_bits + self.man_bits
     }
 
+    /// Largest finite representable magnitude (overflow saturates here).
     pub fn max_value(&self) -> f32 {
         *self.grid.last().unwrap()
     }

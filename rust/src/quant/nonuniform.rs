@@ -58,6 +58,7 @@ impl QTable {
         QTable::nonuniform(mag_bits, 0.0)
     }
 
+    /// Number of magnitude levels in the grid.
     pub fn levels(&self) -> usize {
         self.grid.len()
     }
@@ -102,6 +103,7 @@ impl QTable {
         self.quantize(m, uniform_u01(seed, counter))
     }
 
+    /// Decode a magnitude code back to its normalized grid value.
     #[inline]
     pub fn value(&self, r: u16) -> f32 {
         self.grid[r as usize]
@@ -112,12 +114,14 @@ impl QTable {
 /// bitwidth, built once and shared.
 #[derive(Clone, Debug)]
 pub struct QTables {
+    /// the value family's ε shared by every table
     pub epsilon: f64,
     /// indexed by total bitwidth b (incl. sign); present for b in W
     tables: Vec<Option<QTable>>,
 }
 
 impl QTables {
+    /// One table per allowed width (uniform grids when `uniform` is set).
     pub fn new(widths: &[u32], epsilon: f64, uniform: bool) -> Self {
         let maxb = *widths.iter().max().unwrap() as usize;
         let mut tables = vec![None; maxb + 1];
@@ -138,6 +142,7 @@ impl QTables {
         QTables::new(&[2, 4, 8], DEFAULT_EPSILON, false)
     }
 
+    /// The table for a configured total bitwidth (panics otherwise).
     #[inline]
     pub fn get(&self, bits: u32) -> &QTable {
         self.tables[bits as usize].as_ref().expect("bitwidth not configured")

@@ -38,10 +38,15 @@ pub enum Rounding {
 /// worker privacy comes from folding `worker` into the γ stream only.
 #[derive(Clone, Debug)]
 pub struct RoundingCtx {
+    /// how uniforms are drawn
     pub mode: Rounding,
+    /// the job-wide shared seed
     pub shared_seed: u32,
+    /// this worker's rank (selects its private γ stream)
     pub worker: u32,
+    /// total workers (the stratification width)
     pub n_workers: u32,
+    /// training round (refreshes the shared permutation)
     pub round: u32,
     /// cached γ-stream seed (perf: computing it per entry costs an extra
     /// hash on the compression hot path — see EXPERIMENTS.md §Perf)
@@ -50,6 +55,7 @@ pub struct RoundingCtx {
 }
 
 impl RoundingCtx {
+    /// Context for one (worker, round); caches the γ-stream seed.
     pub fn new(mode: Rounding, shared_seed: u32, worker: u32, n_workers: u32, round: u32) -> Self {
         assert!(n_workers >= 1);
         assert!(worker < n_workers);

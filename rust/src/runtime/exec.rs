@@ -18,10 +18,12 @@ pub struct Runtime {
 /// A compiled, loaded HLO artifact.
 pub struct Artifact {
     exe: xla::PjRtLoadedExecutable,
+    /// the manifest name this artifact was loaded under
     pub name: String,
 }
 
 impl Runtime {
+    /// A fresh PJRT CPU client with an empty artifact cache.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(Runtime { client, cache: RefCell::new(HashMap::new()) })
@@ -41,6 +43,7 @@ impl Runtime {
         })
     }
 
+    /// The PJRT platform name (for `dynamiq info`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -78,36 +81,44 @@ impl Artifact {
 
 // ---- literal helpers ----
 
+/// Build an f32 literal of the given shape.
 pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
 }
 
+/// Build an i32 literal of the given shape.
 pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
 }
 
+/// Build a u32 literal of the given shape.
 pub fn lit_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
     xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
 }
 
+/// Build a u8 literal of the given shape.
 pub fn lit_u8(data: &[u8], dims: &[i64]) -> Result<xla::Literal> {
     let dims_us: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &dims_us, data)
         .map_err(|e| anyhow!("u8 literal: {e:?}"))
 }
 
+/// Build a scalar f32 literal.
 pub fn lit_scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+/// Read a literal back as a flat f32 vector.
 pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
 }
 
+/// Read a literal back as a flat u8 vector.
 pub fn to_u8(lit: &xla::Literal) -> Result<Vec<u8>> {
     lit.to_vec::<u8>().map_err(|e| anyhow!("to_vec u8: {e:?}"))
 }
 
+/// Read a scalar f32 out of a literal (its first element).
 pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
     let v = to_f32(lit)?;
     v.first().copied().ok_or_else(|| anyhow!("empty literal"))

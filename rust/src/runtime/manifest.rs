@@ -8,6 +8,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
+/// One lowered model preset's shape contract.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
     /// padded flat parameter count (multiple of the super-group size)
@@ -16,20 +17,30 @@ pub struct ModelEntry {
     pub d_raw: usize,
     /// number of super-groups (= d / 256)
     pub nsg: usize,
+    /// training batch size
     pub batch: usize,
+    /// sequence length
     pub seq_len: usize,
+    /// vocabulary size
     pub vocab: usize,
 }
 
+/// The parsed `artifacts/manifest.json`: lowered model presets plus the
+/// pallas kernel tile geometry.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// the artifacts directory the manifest was loaded from
     pub dir: String,
+    /// lowered model presets by name
     pub models: BTreeMap<String, ModelEntry>,
+    /// pallas kernel tile size in super-groups
     pub tile_sg: usize,
+    /// super-group size the kernels were lowered for
     pub super_group: usize,
 }
 
 impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &str) -> Result<Self> {
         let path = Path::new(dir).join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -63,6 +74,7 @@ impl Manifest {
         })
     }
 
+    /// The entry for a preset, or an error listing what was lowered.
     pub fn model(&self, preset: &str) -> Result<&ModelEntry> {
         self.models
             .get(preset)
@@ -70,6 +82,7 @@ impl Manifest {
                 self.models.keys().collect::<Vec<_>>()))
     }
 
+    /// Path of a lowered HLO artifact by manifest name.
     pub fn artifact_path(&self, name: &str) -> String {
         format!("{}/{}.hlo.txt", self.dir, name)
     }

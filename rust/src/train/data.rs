@@ -6,12 +6,16 @@
 
 use crate::util::rng::Pcg;
 
+/// A synthetic token corpus (the full stream; workers read shards).
 pub struct Corpus {
+    /// the token stream
     pub tokens: Vec<i32>,
+    /// vocabulary size tokens are drawn from
     pub vocab: usize,
 }
 
 impl Corpus {
+    /// Generate the Zipf-unigram + sparse-Markov-bigram stream.
     pub fn synthetic(vocab: usize, n_tokens: usize, seed: u64) -> Self {
         let mut rng = Pcg::new(seed);
         // Zipf(1.1) unigram via inverse-CDF table
@@ -50,11 +54,14 @@ impl Corpus {
 /// does for Wikitext/UltraChat).
 pub struct BatchSampler {
     rng: Pcg,
+    /// sequences per batch
     pub batch: usize,
+    /// tokens per sequence including the shifted target
     pub seq_plus1: usize,
 }
 
 impl BatchSampler {
+    /// A sampler drawing `batch` random crops of `seq_len`+1 tokens.
     pub fn new(batch: usize, seq_len: usize, seed: u64) -> Self {
         BatchSampler { rng: Pcg::new(seed), batch, seq_plus1: seq_len + 1 }
     }

@@ -18,12 +18,19 @@ use crate::runtime::exec::{lit_f32, lit_i32, scalar_f32, to_f32};
 use crate::runtime::{Manifest, Runtime};
 use crate::train::data::{BatchSampler, Corpus};
 
+/// Everything that defines one training run (model preset, codec,
+/// topology, network shape, schedule).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
+    /// lowered model preset name (`tiny` / `small` / `base`)
     pub preset: String,
+    /// codec scheme name (see [`crate::codec::make_codec`])
     pub scheme: String,
+    /// data-parallel worker count
     pub n_workers: usize,
+    /// all-reduce topology
     pub topology: Topology,
+    /// add §5.2's three background tenant jobs to the NIC
     pub shared_network: bool,
     /// intra-node link bandwidth as a multiple of the NIC (only used by
     /// hierarchical topologies; 48 ≈ NVLink 600 GB/s over 100 Gbps)
@@ -32,15 +39,33 @@ pub struct TrainConfig {
     /// innermost tier first (one entry per level below the top); empty →
     /// a geometric ladder derived from `intra_bw_ratio`
     pub level_bw_ratios: Vec<f64>,
+    /// NIC ports per node for congestion-aware costing; 1 with
+    /// `nic_oversub == 1.0` (the default) keeps the legacy
+    /// port-per-worker model (see
+    /// [`crate::collective::NicProfile`])
+    pub nic_ports: u32,
+    /// NIC gateway oversubscription factor (≥ 1; > 1 turns on per-node
+    /// gateway fan-in contention)
+    pub nic_oversub: f64,
+    /// spine oversubscription factor (≥ 1; > 1 caps a stage's aggregate
+    /// cross-node bytes at `1/spine_oversub` of full bisection)
+    pub spine_oversub: f64,
+    /// training rounds to run
     pub rounds: u32,
     /// initial LR; LinearLR decays to `lr * end_factor` over
     /// `lr_total_iters` rounds (Table 1's schedule shape)
     pub lr: f32,
+    /// LinearLR end factor (final lr = `lr × lr_end_factor`)
     pub lr_end_factor: f32,
+    /// rounds over which the LR decays
     pub lr_total_iters: u32,
+    /// evaluate every this many rounds
     pub eval_every: u32,
+    /// batches per evaluation
     pub eval_batches: usize,
+    /// synthetic corpus size in tokens
     pub corpus_tokens: usize,
+    /// run seed (data, init, codec randomness)
     pub seed: u64,
 }
 
@@ -54,6 +79,9 @@ impl Default for TrainConfig {
             shared_network: false,
             intra_bw_ratio: 48.0,
             level_bw_ratios: Vec::new(),
+            nic_ports: 1,
+            nic_oversub: 1.0,
+            spine_oversub: 1.0,
             rounds: 100,
             lr: 3e-3,
             lr_end_factor: 1.0 / 8.0,
@@ -69,22 +97,32 @@ impl Default for TrainConfig {
 /// Per-round record (drives every TTA figure).
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// the round index
     pub round: u32,
+    /// mean worker training loss this round
     pub train_loss: f32,
+    /// eval loss, on eval rounds
     pub eval_loss: Option<f32>,
     /// simulated wall-clock time at the END of this round
     pub sim_time_s: f64,
+    /// the round's time decomposition (Fig. 6)
     pub time: RoundTime,
+    /// aggregation error vs the exact sum
     pub vnmse: f64,
+    /// wire bytes moved this round
     pub wire_bytes: u64,
 }
 
+/// The training driver: n workers' fwd/bwd through PJRT, gradient sync
+/// through the compressed all-reduce, AdamW on the leader.
 pub struct Trainer {
+    /// the run's configuration
     pub cfg: TrainConfig,
     rt: std::rc::Rc<Runtime>,
     train_step: std::rc::Rc<crate::runtime::Artifact>,
     eval_step: std::rc::Rc<crate::runtime::Artifact>,
     adamw: std::rc::Rc<crate::runtime::Artifact>,
+    /// padded flat parameter count
     pub d: usize,
     d_raw: usize,
     batch: usize,
@@ -101,12 +139,16 @@ pub struct Trainer {
     /// steady-state hop path allocates nothing)
     pool: ScratchPool,
     compute: ComputeModel,
+    /// per-round records (drives every TTA figure)
     pub records: Vec<RoundRecord>,
+    /// the run's time-to-accuracy curve
     pub tta: TtaCurve,
     sim_time_s: f64,
 }
 
 impl Trainer {
+    /// Build a trainer: load artifacts, synthesize the corpus, assemble
+    /// the (congestion-aware) network model and the engine.
     pub fn new(cfg: TrainConfig, artifacts_dir: &str) -> Result<Self> {
         cfg.topology.validate(cfg.n_workers)?;
         let manifest = Manifest::load(artifacts_dir)?;
@@ -164,6 +206,28 @@ impl Trainer {
             // already-rescaled NIC bandwidth)
             net.set_tier_ratios(&ratios);
         }
+        // congestion profile: NIC gateway fan-in + spine oversubscription
+        // (defaults are the exact legacy per-message costing)
+        anyhow::ensure!(
+            cfg.nic_ports >= 1,
+            "nic_ports must be at least 1, got {}",
+            cfg.nic_ports
+        );
+        anyhow::ensure!(
+            cfg.nic_oversub >= 1.0 && cfg.nic_oversub.is_finite(),
+            "nic_oversub must be ≥ 1 and finite, got {}",
+            cfg.nic_oversub
+        );
+        anyhow::ensure!(
+            cfg.spine_oversub >= 1.0 && cfg.spine_oversub.is_finite(),
+            "spine_oversub must be ≥ 1 and finite, got {}",
+            cfg.spine_oversub
+        );
+        net.nic = crate::collective::NicProfile {
+            ports_per_node: cfg.nic_ports,
+            oversub: cfg.nic_oversub,
+        };
+        net.spine_oversub = cfg.spine_oversub;
         let engine = AllReduceEngine::new(cfg.topology, net);
         let codecs = make_codecs(&cfg.scheme, cfg.n_workers);
         // Calibrate the TTA time model so the compute : BF16-communication
@@ -246,6 +310,7 @@ impl Trainer {
         Ok(self.worker_step(worker)?.1)
     }
 
+    /// Mean eval loss over the held-out sampler.
     pub fn eval(&mut self) -> Result<f32> {
         let mut total = 0.0f32;
         // evaluate on the full (unsharded) corpus tail
@@ -323,6 +388,7 @@ impl Trainer {
         Ok(self.records.last().unwrap())
     }
 
+    /// Run every configured round.
     pub fn run(&mut self) -> Result<()> {
         for r in 0..self.cfg.rounds {
             self.round(r)?;
@@ -330,6 +396,7 @@ impl Trainer {
         Ok(())
     }
 
+    /// Mean per-round vNMSE over the whole run.
     pub fn mean_vnmse(&self) -> f64 {
         if self.records.is_empty() {
             return 0.0;
@@ -337,6 +404,7 @@ impl Trainer {
         self.records.iter().map(|r| r.vnmse).sum::<f64>() / self.records.len() as f64
     }
 
+    /// The PJRT platform the run executes on.
     pub fn platform(&self) -> String {
         self.rt.platform()
     }

@@ -72,18 +72,23 @@ pub fn alloc_delta(snap: (u64, u64)) -> (u64, u64) {
     (now.0 - snap.0, now.1 - snap.1)
 }
 
+/// One benchmark's timing summary.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// the benchmark's display name
     pub name: String,
     /// median ns per iteration
     pub median_ns: f64,
+    /// 10th-percentile ns per iteration
     pub p10_ns: f64,
+    /// 90th-percentile ns per iteration
     pub p90_ns: f64,
     /// optional bytes processed per iteration (for MB/s reporting)
     pub bytes_per_iter: Option<u64>,
 }
 
 impl BenchResult {
+    /// Bytes per nanosecond = GB/s, when a byte count was provided.
     pub fn throughput_gbps(&self) -> Option<f64> {
         self.bytes_per_iter.map(|b| b as f64 / self.median_ns)
     }
@@ -93,6 +98,7 @@ impl BenchResult {
         entries_per_iter as f64 * 1e9 / self.median_ns
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         let mut s = format!(
             "{:<44} {:>12.1} ns/iter  (p10 {:>10.1}, p90 {:>10.1})",
@@ -105,9 +111,14 @@ impl BenchResult {
     }
 }
 
+/// The measurement harness: samples of auto-calibrated iteration
+/// batches, reported by percentile.
 pub struct Bench {
+    /// target wall time per sample batch
     pub sample_target_ns: u64,
+    /// number of sample batches
     pub samples: usize,
+    /// un-timed warmup iterations
     pub warmup_iters: u64,
 }
 
@@ -118,10 +129,13 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// The CI smoke configuration (small batches, few samples).
     pub fn quick() -> Self {
         Bench { sample_target_ns: 20_000_000, samples: 7, warmup_iters: 2 }
     }
 
+    /// Measure `f`, returning percentile timings (and throughput when
+    /// `bytes_per_iter` is given).
     pub fn run<F: FnMut()>(&self, name: &str, bytes_per_iter: Option<u64>, mut f: F) -> BenchResult {
         // Warmup + calibration.
         let t0 = Instant::now();
@@ -162,6 +176,7 @@ pub struct BenchLog {
 }
 
 impl BenchLog {
+    /// An empty log.
     pub fn new() -> Self {
         BenchLog::default()
     }
@@ -199,12 +214,15 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
     }
+    /// Append one row (cells in header order).
     pub fn row(&mut self, cells: Vec<String>) {
         self.rows.push(cells);
     }
+    /// Render as a markdown-style aligned text table.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut w = vec![0usize; ncol];
@@ -239,6 +257,7 @@ impl Table {
         }
         out
     }
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

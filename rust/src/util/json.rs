@@ -9,17 +9,25 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A parsed JSON value (numbers held as f64).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object (key-sorted)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -32,33 +40,39 @@ impl Json {
     }
 
     // ---- typed accessors ----
+    /// The value as f64, if it is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The value truncated to usize, if it is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
+    /// The value as a string slice, if it is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The value as bool, if it is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The value's elements, if it is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// Object field lookup (None for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -69,24 +83,30 @@ impl Json {
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         self.as_arr()?.iter().map(|v| v.as_f64().map(|n| n as f32)).collect()
     }
+    /// Array of numbers → Vec<u32>; None if any element is not a number.
     pub fn as_u32_vec(&self) -> Option<Vec<u32>> {
         self.as_arr()?.iter().map(|v| v.as_f64().map(|n| n as u32)).collect()
     }
 
     // ---- construction helpers ----
+    /// Build an object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
+    /// Array value from an f32 slice.
     pub fn from_f32s(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
+    /// Array value from an f64 slice.
     pub fn from_f64s(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
+    /// Array value from a u32 slice.
     pub fn from_u32s(v: &[u32]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Serialize back to a compact JSON string.
     pub fn dump(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

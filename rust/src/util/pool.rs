@@ -92,6 +92,9 @@ struct SlicePtr<T>(*mut T);
 unsafe impl<T: Send> Sync for SlicePtr<T> {}
 unsafe impl<T: Send> Send for SlicePtr<T> {}
 
+/// The persistent pinned pool: spawn-once parked threads executing one
+/// batch of independent items per [`WorkerPool::run`] call (see the
+/// module docs for the execution and determinism contract).
 pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,

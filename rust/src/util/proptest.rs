@@ -6,8 +6,11 @@
 
 use super::rng::Pcg;
 
+/// A property-test run: how many cases to draw and from which seed.
 pub struct Prop {
+    /// number of generated cases
     pub cases: usize,
+    /// base seed every case derives from
     pub seed: u64,
 }
 
@@ -18,6 +21,7 @@ impl Default for Prop {
 }
 
 impl Prop {
+    /// A run of `cases` cases from the default seed.
     pub fn new(cases: usize) -> Self {
         Prop { cases, ..Default::default() }
     }

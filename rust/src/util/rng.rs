@@ -39,6 +39,7 @@ pub struct Pcg {
 }
 
 impl Pcg {
+    /// A sequential-counter RNG keyed by `seed`.
     pub fn new(seed: u64) -> Self {
         // Fold the 64-bit seed into the 32-bit keyed hash domain.
         let lo = (seed & 0xffff_ffff) as u32;
@@ -46,6 +47,7 @@ impl Pcg {
         Pcg { seed: lo ^ hi.wrapping_mul(0x9e37_79b9), counter: 0 }
     }
 
+    /// Next uniform u32.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let v = pcg_hash(self.seed, self.counter);
@@ -53,6 +55,7 @@ impl Pcg {
         v
     }
 
+    /// Next uniform u64 (two hash draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

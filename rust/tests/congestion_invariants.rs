@@ -1,0 +1,274 @@
+//! Congestion-model invariants: the NIC-gateway/spine stage-costing solve
+//! (`NetworkModel::stage_time_congested`) against its Python oracle
+//! (`python/validate_congestion.py`), the degenerate-profile identity
+//! that pins every pre-congestion comm-time output, the fan-in and
+//! spine bounds over randomized flow sets, and engine ↔ coordinator
+//! comm-time parity at 128 workers under oversubscription.
+
+use dynamiq::codec::make_codecs;
+use dynamiq::collective::{
+    AllReduceEngine, Level, LinkClass, NetworkModel, NicProfile, Topology,
+};
+use dynamiq::coordinator::Coordinator;
+use dynamiq::util::proptest::Prop;
+use dynamiq::util::rng::Pcg;
+
+/// The Rust twin of the oracle's `fanin_stage`: `nodes × per_node` NIC
+/// flows of `bytes` each (node v targets node v+1) plus one intra hop.
+fn fanin_stage(nodes: u32, per_node: u32, bytes: u64) -> Vec<(u64, LinkClass, u32, u32)> {
+    let mut flows = Vec::new();
+    for v in 0..nodes {
+        for _ in 0..per_node {
+            flows.push((bytes, LinkClass::Nic, v, (v + 1) % nodes));
+        }
+    }
+    flows.push((bytes / 2, LinkClass::Level(0), 0, 0));
+    flows
+}
+
+/// Golden stage times computed by `python/validate_congestion.py` (its
+/// `GOLDEN_FLOWS` table — regenerate by running the script). Both
+/// implementations evaluate the same IEEE-f64 expressions in the same
+/// order, so agreement to 1e-12 relative cross-validates the arithmetic,
+/// not just the shape.
+#[test]
+fn golden_cases_match_python_oracle() {
+    let cases: [(&str, Vec<(u64, LinkClass, u32, u32)>, u32, f64, f64, f64); 7] = [
+        ("identity-hier", fanin_stage(4, 8, 1_000_000), 1, 1.0, 1.0, 9e-05),
+        ("gateway-1p-2x", fanin_stage(4, 8, 1_000_000), 1, 2.0, 1.0, 0.0012900000000000001),
+        ("gateway-2p-4x", fanin_stage(8, 4, 777_777), 2, 4.0, 1.0, 0.00050777728),
+        ("spine-only-4x", fanin_stage(8, 4, 1_500_000), 1, 1.0, 4.0, 0.00193),
+        ("gateway+spine", fanin_stage(4, 16, 250_000), 2, 2.0, 8.0, 0.0025700000000000002),
+        (
+            "unbalanced",
+            vec![
+                (4_000_000, LinkClass::Nic, 0, 1),
+                (1_000_000, LinkClass::Nic, 0, 1),
+                (2_000_000, LinkClass::Nic, 1, 0),
+                (500_000, LinkClass::Level(0), 2, 2),
+            ],
+            1,
+            3.0,
+            2.0,
+            0.00169,
+        ),
+        // reduce-toward-root incast: 8 single-flow senders, one receiver
+        // — only the ingress-side gateway bound prices this
+        (
+            "incast-8to1",
+            (1..9u32).map(|v| (1_000_000, LinkClass::Nic, v, 0)).collect(),
+            1,
+            2.0,
+            1.0,
+            0.0012900000000000001,
+        ),
+    ];
+    for (label, flows, ports, oversub, spine, expect) in cases {
+        let mut net = NetworkModel::hierarchical_100g(48.0);
+        net.nic = NicProfile { ports_per_node: ports, oversub };
+        net.spine_oversub = spine;
+        let t = net.stage_time_congested(&flows, 0.0);
+        let rel = (t - expect).abs() / expect;
+        assert!(rel < 1e-12, "{label}: rust {t:e} vs oracle {expect:e} (rel {rel:e})");
+    }
+}
+
+/// Random flow sets over random node layouts: the default profile must
+/// reproduce `stage_time_classed` bit-exactly — the regression pin that
+/// keeps every pre-congestion comm-time output byte-identical.
+#[test]
+fn degenerate_profile_is_identical_on_random_flows() {
+    let gen_flows = |rng: &mut Pcg| -> Vec<(u64, LinkClass, u32, u32)> {
+        let n = 1 + rng.below(40) as usize;
+        (0..n)
+            .map(|_| {
+                let bytes = rng.below(4_000_000) as u64;
+                let class = match rng.below(4) {
+                    0 => LinkClass::Level(0),
+                    1 => LinkClass::Level(1),
+                    _ => LinkClass::Nic,
+                };
+                (bytes, class, rng.below(8), rng.below(8))
+            })
+            .collect()
+    };
+    for net in [
+        NetworkModel::isolated_100g(),
+        NetworkModel::tiered_100g(&[48.0, 8.0]),
+        NetworkModel::shared_100g(3),
+    ] {
+        Prop::new(128).check("degenerate-identity", gen_flows, |flows| {
+            let msgs: Vec<(u64, LinkClass)> = flows.iter().map(|&(b, c, _, _)| (b, c)).collect();
+            for t0 in [0.0, 0.123] {
+                let congested = net.stage_time_congested(flows, t0);
+                let classed = net.stage_time_classed(&msgs, t0);
+                if congested.to_bits() != classed.to_bits() {
+                    return Err(format!("congested {congested:e} != classed {classed:e} at {t0}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Random contended profiles: a node's fan-in is charged at least the
+/// single-flow stage and at most flow-count × it, and adding flows to a
+/// saturated gateway never makes the stage cheaper.
+#[test]
+fn fanin_bounds_hold_on_random_profiles() {
+    Prop::new(96).check(
+        "fanin-bounds",
+        |rng: &mut Pcg| {
+            let ports = 1 + rng.below(4);
+            // strictly > 1 so (ports = 1, oversub = 1.0) can never alias
+            // the uncontended identity profile (gateway() rejects it)
+            let oversub = 1.0 + (1 + rng.below(699)) as f64 / 100.0;
+            let m = 2 + rng.below(15);
+            let bytes = 10_000 + rng.below(4_000_000) as u64;
+            (ports, oversub, m, bytes)
+        },
+        |&(ports, oversub, m, bytes)| {
+            // configured private tier keeps the Level(0) bystander off
+            // the NIC accounting
+            let mut net = NetworkModel::hierarchical_100g(48.0);
+            net.nic = NicProfile::gateway(ports, oversub);
+            let single = net.stage_time_congested(&fanin_stage(2, 1, bytes), 0.0);
+            let t = net.stage_time_congested(&fanin_stage(2, m, bytes), 0.0);
+            if t < single {
+                return Err(format!("m={m}: {t:e} below single-flow {single:e}"));
+            }
+            if t > m as f64 * single * (1.0 + 1e-12) {
+                return Err(format!("m={m}: {t:e} above m×single {:e}", m as f64 * single));
+            }
+            let fewer = net.stage_time_congested(&fanin_stage(2, m - 1, bytes), 0.0);
+            if t < fewer {
+                return Err(format!("adding a flow got cheaper: {t:e} < {fewer:e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The spine bound is monotone in its oversubscription factor and never
+/// binds at full bisection, for random stage shapes and gateways.
+#[test]
+fn spine_bound_monotone_on_random_stages() {
+    Prop::new(96).check(
+        "spine-monotone",
+        |rng: &mut Pcg| {
+            let nodes = 2 + rng.below(15);
+            let per_node = 1 + rng.below(8);
+            let bytes = 10_000 + rng.below(3_000_000) as u64;
+            let gateway = rng.below(2) == 1;
+            (nodes, per_node, bytes, gateway)
+        },
+        |&(nodes, per_node, bytes, gateway)| {
+            let flows = fanin_stage(nodes, per_node, bytes);
+            let mk = |so: f64| {
+                let mut net = NetworkModel::hierarchical_100g(48.0);
+                if gateway {
+                    net.nic = NicProfile::gateway(2, 2.0);
+                }
+                net.spine_oversub = so;
+                net.stage_time_congested(&flows, 0.0)
+            };
+            let base = mk(1.0);
+            let mut prev = base;
+            for so in [1.5, 2.0, 4.0, 8.0, 16.0] {
+                let t = mk(so);
+                if t < prev {
+                    return Err(format!("so={so}: {t:e} < {prev:e}"));
+                }
+                prev = t;
+            }
+            // full bisection never binds: so=1 equals the spine-free cost
+            let mut net = NetworkModel::hierarchical_100g(48.0);
+            if gateway {
+                net.nic = NicProfile::gateway(2, 2.0);
+            }
+            let free = net.stage_time_congested(&flows, 0.0);
+            if base.to_bits() != free.to_bits() {
+                return Err(format!("so=1 binds: {base:e} vs {free:e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The acceptance shape: engine and coordinator price the same round's
+/// communication identically at 128 workers under NIC-gateway *and*
+/// spine oversubscription — shared codecs, shared schedules, shared
+/// congestion solve, so the two execution paths' comm times must agree
+/// to the last bit.
+#[test]
+fn engine_and_coordinator_comm_times_agree_at_128_under_oversubscription() {
+    let topo = Topology::hierarchical(Level::Ring, Level::Ring, 16);
+    let n = 128;
+    let d = 1 << 15;
+    let g: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(0xC0D6 ^ ((i as u64) << 9));
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.02);
+            v
+        })
+        .collect();
+    let mut net = NetworkModel::hierarchical_100g(48.0);
+    net.nic = NicProfile::gateway(1, 4.0);
+    net.spine_oversub = 2.0;
+    let mut eng_codecs = make_codecs("DynamiQ", n);
+    let eng = AllReduceEngine::new(topo, net.clone());
+    let (expect, rep) = eng.run(&g, &mut eng_codecs, 2, 0.0).unwrap();
+    let mut coordinator = Coordinator::new(topo, make_codecs("DynamiQ", n)).unwrap();
+    let rounds = coordinator.run_round(&g, 2).unwrap();
+    for wr in &rounds {
+        assert_eq!(wr.aggregated, expect, "worker {} payload divergence", wr.worker);
+    }
+    let cost = coordinator.price_round(&net, &rounds, 0.0);
+    assert_eq!(cost.meta_time_s, rep.meta_time_s, "metadata phase pricing diverged");
+    assert_eq!(cost.rs_time_s, rep.rs_time_s, "reduce-scatter pricing diverged");
+    assert_eq!(cost.ag_time_s, rep.ag_time_s, "all-gather pricing diverged");
+    assert_eq!(cost.stage_times_s, rep.stage_times_s, "per-stage trace diverged");
+    assert_eq!(cost.comm_time_s(), rep.comm_time_s());
+    // and the priced round is genuinely congestion-stretched: the same
+    // records on the default profile are strictly cheaper
+    let calm = coordinator.price_round(&NetworkModel::hierarchical_100g(48.0), &rounds, 0.0);
+    assert!(
+        calm.comm_time_s() < cost.comm_time_s(),
+        "oversubscription must stretch the round: {} vs {}",
+        calm.comm_time_s(),
+        cost.comm_time_s()
+    );
+}
+
+/// Oversubscription changes *time*, never *bytes* or numerics: the same
+/// round under an 8×-oversubscribed gateway produces bit-identical
+/// gradients and wire bytes, only a longer simulated round.
+#[test]
+fn oversubscription_is_cost_model_only() {
+    let topo = Topology::hierarchical(Level::Ring, Level::Butterfly, 4);
+    let n = 16;
+    let d = 8192;
+    let g: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(0xBEE ^ ((i as u64) << 7));
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 0.02);
+            v
+        })
+        .collect();
+    let run = |nic: NicProfile, spine: f64| {
+        let mut net = NetworkModel::hierarchical_100g(48.0);
+        net.nic = nic;
+        net.spine_oversub = spine;
+        let mut codecs = make_codecs("DynamiQ", n);
+        let eng = AllReduceEngine::new(topo, net);
+        eng.run(&g, &mut codecs, 0, 0.0).unwrap()
+    };
+    let (base_out, base_rep) = run(NicProfile::default(), 1.0);
+    let (oversub_out, oversub_rep) = run(NicProfile::gateway(1, 8.0), 4.0);
+    assert_eq!(base_out, oversub_out, "congestion must not touch numerics");
+    assert_eq!(base_rep.total_bytes(), oversub_rep.total_bytes());
+    assert_eq!(base_rep.rs_bytes, oversub_rep.rs_bytes);
+    assert!(oversub_rep.comm_time_s() > base_rep.comm_time_s());
+}
