@@ -1,0 +1,424 @@
+"""Offline oracle for the event-driven fleet backend.
+
+Ports the discrete-event loop of rust/src/sim/engine.rs (per-worker
+stage barriers, bit-equal-timestamp batching, one congestion-priced
+stage per batch) on top of the already-validated schedule builders and
+congestion solve of validate_congestion.py, to validate the Rust
+implementation without a toolchain:
+
+1. **DES == lockstep** — the tentpole invariant re-derived in an
+   independent implementation: with zero compute jitter the event
+   loop's batches collapse to exactly the synchronous engine's stages —
+   same flow sets, same order, same `now += dt` walk — so the per-batch
+   times, the reduce-scatter/all-gather accumulators and the span are
+   *equal* (same IEEE-f64 expressions in the same order), across flat
+   rings/butterflies, a two-level hierarchy, and a gateway-contended
+   net that exercises the order-sensitive tally path.
+
+2. **Jitter bracket** — with per-worker start delays and equal-size
+   flows (every batch of a stage prices to the stage's own dt), every
+   barrier resolution shifts by at least zero and at most the largest
+   delay, so `base <= span_jittered <= base + max_delay`.  The batch
+   count can only grow as stages split.
+
+3. **Golden comm times** — the two `repro --id fleet` golden cells
+   (BF16, d = 2^15: flat ring n = 16 on the isolated NIC, ring-in-node
+   x butterfly n = 32 with a 48x intra tier) computed exactly: BF16
+   has no metadata phase and a fixed 2-bytes/entry payload, so the
+   model reproduces the engine's virtual comm_time_s to float noise.
+
+4. **Cross-check against results/fleet.json** when present: golden
+   rows must match the model to 1e-9 relative (and wire bytes
+   exactly); every BF16 scale row is recomputed from first principles;
+   straggler p50/p95/p99 rows must be ordered and monotone in the
+   jitter scale; churn rows must follow the membership plan.
+
+Run: python3 python/validate_fleet.py
+Exit status is non-zero on any violated invariant.
+"""
+
+import heapq
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import validate_congestion as vc
+from validate_congestion import check
+
+ALIGN = 16  # chunk alignment of BF16 (codec/bf16.rs)
+BPE = 2.0   # BF16 wire bytes per entry, exact
+
+
+# ---- shared cell plumbing ------------------------------------------------
+def build_phases(levels):
+    """Combined reduce-scatter + all-gather stage list (each stage a
+    list of (from, to, chunk) hops in schedule order) and the RS stage
+    count. Single-level stacks use the flat builders so the within-
+    stage hop order matches the flat Topology schedules."""
+    if len(levels) == 1:
+        topo, m = levels[0]
+        return vc.level_rs(topo, m) + vc.level_ag(topo, m), m - 1 if topo == "ring" else m.bit_length() - 1
+    rs = vc.hier_rs(levels)
+    return rs + vc.hier_ag(levels), len(rs)
+
+
+def mk_pricing(levels):
+    """(pay-per-chunk is built separately) -> link-class and node-id
+    functions, matching hier_comm_time's conventions: the top level
+    rides the NIC (class None), lower levels their private tier."""
+    top = len(levels) - 1
+
+    def link(f, t):
+        lvl = vc.hop_level(levels, f, t)
+        return None if lvl >= top else lvl
+
+    node_m = levels[0][1]
+
+    def node(w):
+        return w // node_m
+
+    return link, node
+
+
+def bf16_pay(levels, d):
+    n = 1
+    for _, m in levels:
+        n *= m
+    padded = (d + ALIGN - 1) // ALIGN * ALIGN
+    return [round(e * BPE) for e in vc.chunk_entries(padded, n, ALIGN)]
+
+
+# ---- the discrete-event loop (port of EventEngine::run_scratch) ----------
+def des_round(phases, s_rs, pay, link, node, net, delays, t0=0.0):
+    """Timing-only port of the event loop: per-(worker, stage) barriers
+    armed from the schedule census, eligibility events at barrier
+    resolution, bit-equal-timestamp batches sorted into global schedule
+    order and priced by one stage_time_congested call, one Complete
+    event per batch. Payload bytes are static (BF16), so kernels need
+    not run. Returns per-batch (t, dt, is_rs), the phase accumulators,
+    and the span including straggler stalls."""
+    n = len(delays)
+    s_total = len(phases)
+    sends = [[0] * s_total for _ in range(n)]
+    remaining = [[0] * s_total for _ in range(n)]
+    by_sender = [dict() for _ in range(s_total)]
+    for s, hops in enumerate(phases):
+        for p, (f, t, c) in enumerate(hops):
+            sends[f][s] += 1
+            remaining[f][s] += 1
+            remaining[t][s] += 1
+            by_sender[s].setdefault(f, []).append((p, f, t, c))
+    latest = [[float("-inf")] * s_total for _ in range(n)]
+    resolved = [-1] * n
+    # BF16 has no metadata phase, so the bootstrap is t0 + delay exactly
+    done = [t0 + dl for dl in delays]
+    finish = [t0] * n
+    q = []  # (time, seq, kind, payload); seq keeps FIFO order on ties
+    seq = [0]
+
+    def push(t, kind, payload):
+        heapq.heappush(q, (t, seq[0], kind, payload))
+        seq[0] += 1
+
+    def arm_next(w):
+        while True:
+            nxt = resolved[w] + 1
+            if nxt >= s_total:
+                finish[w] = done[w]
+                return
+            if sends[w][nxt] > 0:
+                push(done[w], 0, (w, nxt))  # Eligible
+                return
+            if remaining[w][nxt] > 0:
+                return  # receive-only stage: deliveries drive it
+            resolved[w] = nxt  # no participation: resolves instantly
+
+    def complete_one(w, s, t):
+        if t > latest[w][s]:
+            latest[w][s] = t
+        assert remaining[w][s] > 0, "over-completion"
+        remaining[w][s] -= 1
+        if remaining[w][s] == 0 and resolved[w] + 1 == s:
+            if latest[w][s] > done[w]:
+                done[w] = latest[w][s]
+            resolved[w] = s
+            arm_next(w)
+
+    for w in range(n):
+        arm_next(w)
+    rs_t = ag_t = 0.0
+    hwm = t0
+    batches = []
+    while q:
+        t = q[0][0]
+        pending = []
+        # drain every event at this bit-identical instant; Completes are
+        # handled immediately (they can cascade same-time Eligibles back
+        # into the queue, which this inner loop then also drains)
+        while q and q[0][0] == t:
+            _t, _s, kind, payload = heapq.heappop(q)
+            if kind == 1:  # Complete
+                for f, to, s in payload:
+                    complete_one(f, s, t)
+                    complete_one(to, s, t)
+            else:  # Eligible (w, stage): expand the worker's sends
+                w, s = payload
+                for p, f, to, c in by_sender[s].get(w, ()):
+                    pending.append((s, p, f, to, c))
+        if not pending:
+            continue
+        pending.sort()  # global schedule order: (stage, pos)
+        flows = [(pay[c], link(f, to), node(f), node(to))
+                 for _s, _p, f, to, c in pending]
+        dt = net.stage_time_congested(flows, t)
+        if pending[0][0] < s_rs:
+            rs_t += dt
+        else:
+            ag_t += dt
+        end = t + dt
+        if end > hwm:
+            hwm = end
+        batches.append((t, dt, pending[0][0] < s_rs))
+        push(end, 1, [(f, to, s) for s, _p, f, to, _c in pending])
+    assert all(r == s_total - 1 for r in resolved), "DES deadlocked"
+    for f in finish:
+        if f > hwm:
+            hwm = f
+    return {"rs_t": rs_t, "ag_t": ag_t, "span": hwm - t0, "batches": batches}
+
+
+def lockstep_round(phases, s_rs, pay, link, node, net, t0=0.0):
+    """The synchronous engine's stage walk (the `now += dt` loop of
+    AllReduceEngine::run_pooled) over the same flows."""
+    now = t0
+    rs_t = ag_t = 0.0
+    dts = []
+    for s, hops in enumerate(phases):
+        flows = [(pay[c], link(f, to), node(f), node(to))
+                 for f, to, c in hops]
+        dt = net.stage_time_congested(flows, now)
+        now += dt
+        dts.append(dt)
+        if s < s_rs:
+            rs_t += dt
+        else:
+            ag_t += dt
+    return {"rs_t": rs_t, "ag_t": ag_t, "dts": dts, "span": now - t0}
+
+
+# ---- check 1: DES == lockstep with zero jitter ---------------------------
+LINKS48 = [(48.0 * 100e9 / 8.0, 1e-6)]
+IDENTITY_CELLS = [
+    ("ring n=8", [("ring", 8)], dict()),
+    ("butterfly n=8", [("butterfly", 8)], dict()),
+    ("hier(ring:4,butterfly:4) n=16", [("ring", 4), ("butterfly", 4)],
+     dict(links=LINKS48)),
+    # non-default NIC profile: the gateway tally is first-seen-order
+    # sensitive, so this cell also pins the batch flow *order*
+    ("hier contended n=16", [("ring", 4), ("butterfly", 4)],
+     dict(links=LINKS48, nic_ports=2, nic_oversub=2.0)),
+]
+
+
+def identity_checks(d=4096):
+    print("== DES == lockstep (no jitter) ==")
+    for label, levels, netkw in IDENTITY_CELLS:
+        net = vc.Net(**netkw)
+        phases, s_rs = build_phases(levels)
+        link, node = mk_pricing(levels)
+        pay = bf16_pay(levels, d)
+        lock = lockstep_round(phases, s_rs, pay, link, node, net)
+        n = 1
+        for _, m in levels:
+            n *= m
+        des = des_round(phases, s_rs, pay, link, node, net, [0.0] * n)
+        check(len(des["batches"]) == len(phases),
+              f"{label}: batches collapse to stages "
+              f"({len(des['batches'])} == {len(phases)})")
+        check(all(b[1] == dt for b, dt in zip(des["batches"], lock["dts"])),
+              f"{label}: per-batch times equal per-stage times")
+        check(des["rs_t"] == lock["rs_t"] and des["ag_t"] == lock["ag_t"],
+              f"{label}: phase accumulators equal")
+        check(des["span"] == lock["span"], f"{label}: spans equal")
+
+
+# ---- check 2: the jitter bracket -----------------------------------------
+def jitter_checks(d=4096):
+    print("== jitter bracket: base <= span <= base + max_delay ==")
+    levels = [("ring", 4), ("butterfly", 4)]
+    net = vc.Net(links=LINKS48)
+    phases, s_rs = build_phases(levels)
+    link, node = mk_pricing(levels)
+    pay = bf16_pay(levels, d)
+    n = 16
+    base = des_round(phases, s_rs, pay, link, node, net, [0.0] * n)
+    prev_span = base["span"]
+    for scale in (1.0, 2.0, 4.0):
+        # deterministic, uneven per-worker delays (seeded-draw stand-in)
+        delays = [scale * 1e-4 * ((w * 37) % 5) for w in range(n)]
+        jit = des_round(phases, s_rs, pay, link, node, net, delays)
+        dmax = max(delays)
+        check(base["span"] <= jit["span"] <= base["span"] + dmax + 1e-15,
+              f"scale {scale}: span {jit['span']:.6e} within "
+              f"[base, base + {dmax:.1e}]")
+        check(len(jit["batches"]) >= len(base["batches"]),
+              f"scale {scale}: stages only split ({len(jit['batches'])} "
+              f">= {len(base['batches'])})")
+        check(jit["span"] >= prev_span,
+              f"scale {scale}: span monotone in the jitter scale")
+        prev_span = jit["span"]
+        # jitter moves *when* flows go, never how many bytes
+        check(jit["rs_t"] + jit["ag_t"] >= base["rs_t"] + base["ag_t"] - 1e-15,
+              f"scale {scale}: busy time never shrinks below the baseline")
+
+
+# ---- check 3 + 4: golden cells and the saved-JSON cross-check ------------
+# the `repro --id fleet` part-4 cells: (topology name, levels, net kwargs)
+GOLDEN_CELLS = [
+    ("ring", 16, [("ring", 16)], dict()),
+    ("hier(ring/butterfly,m=8)", 32, [("ring", 8), ("butterfly", 4)],
+     dict(links=LINKS48)),
+]
+FLEET_D = 1 << 15
+
+
+def wire_bytes_model(levels, d):
+    phases, _ = build_phases(levels)
+    pay = bf16_pay(levels, d)
+    return sum(pay[c] for hops in phases for _f, _t, c in hops)
+
+
+def golden_model():
+    print("== golden BF16 comm times (repro --id fleet part 4) ==")
+    out = {}
+    for name, n, levels, netkw in GOLDEN_CELLS:
+        net = vc.Net(**netkw)
+        comm = vc.hier_comm_time(levels, FLEET_D, BPE, 0, net)
+        # the DES must agree with the lockstep model it is checked against
+        phases, s_rs = build_phases(levels)
+        link, node = mk_pricing(levels)
+        pay = bf16_pay(levels, FLEET_D)
+        des = des_round(phases, s_rs, pay, link, node, net, [0.0] * n)
+        check(des["rs_t"] + des["ag_t"] == comm,
+              f"{name} n={n}: DES comm equals the lockstep model")
+        wire = wire_bytes_model(levels, FLEET_D)
+        out[(name, n)] = (comm, wire, len(phases))
+        print(f"  {name:28s} n={n:<4d} comm_time_s={comm!r}  wire={wire}")
+    return out
+
+
+def levels_of(topo_name, n):
+    """Recover the level stack from a Topology::name() string."""
+    if topo_name == "ring" or topo_name == "butterfly":
+        return [(topo_name, n)]
+    if topo_name.startswith("hier(") and topo_name.endswith(")"):
+        inner = topo_name[len("hier("):-1]  # "ring/butterfly,m=8"
+        pair, m = inner.split(",m=")
+        intra, inter = pair.split("/")
+        m = int(m)
+        if n % m == 0 and n // m >= 2:
+            return [(intra, m), (inter, n // m)]
+    return None
+
+
+def cross_check(model, path="results/fleet.json"):
+    if not os.path.exists(path):
+        print(f"== no {path}; skipping fleet cross-check "
+              "(run `repro --id fleet` first) ==")
+        return
+    print(f"== cross-checking {path} against the model ==")
+    rows = [r for r in json.load(open(path)) if r.get("tag") == "fleet"]
+    check(len(rows) > 0, "fleet JSON contains tagged rows")
+
+    # golden rows: exact BF16 comm-time + wire-byte reproduction
+    golden = {(r["topology"], int(r["n"])): r
+              for r in rows if r["kind"] == "golden"}
+    for name, n, levels, netkw in GOLDEN_CELLS:
+        r = golden.get((name, n))
+        if r is None:
+            check(False, f"missing golden cell {name} n={n}")
+            continue
+        comm, wire, stages = model[(name, n)]
+        rel = abs(r["comm_time_s"] - comm) / comm
+        check(rel < 1e-9,
+              f"golden {name} n={n}: rust {r['comm_time_s']:.9e} vs model "
+              f"{comm:.9e} (rel {rel:.2e})")
+        check(abs(r["span_s"] - comm) / comm < 1e-9,
+              f"golden {name} n={n}: no-jitter span equals comm time")
+        check(int(r["wire_bytes"]) == wire,
+              f"golden {name} n={n}: wire bytes exact "
+              f"({int(r['wire_bytes'])} == {wire})")
+        check(int(r["batches"]) == stages,
+              f"golden {name} n={n}: batches == stages ({stages})")
+        check(r["meta_time_s"] == 0.0, f"golden {name} n={n}: BF16 has no "
+              "metadata phase")
+
+    # every BF16 scale row recomputed from first principles
+    for r in rows:
+        if r["kind"] != "scale" or r["scheme"] != "BF16":
+            continue
+        name, n, d = r["topology"], int(r["n"]), int(r["d"])
+        levels = levels_of(name, n)
+        if levels is None:
+            check(False, f"unparseable scale topology {name}")
+            continue
+        netkw = dict() if len(levels) == 1 else dict(links=LINKS48)
+        comm = vc.hier_comm_time(levels, d, BPE, 0, vc.Net(**netkw))
+        rel = abs(r["comm_time_s"] - comm) / comm
+        check(rel < 1e-9,
+              f"scale BF16 {name} n={n}: rust {r['comm_time_s']:.6e} vs "
+              f"model {comm:.6e} (rel {rel:.2e})")
+        check(int(r["wire_bytes"]) == wire_bytes_model(levels, d),
+              f"scale BF16 {name} n={n}: wire bytes exact")
+
+    # straggler rows: percentile ordering + monotonicity in jitter scale
+    strag = [r for r in rows if r["kind"] == "straggler"]
+    if strag:
+        for r in strag:
+            check(r["p50_s"] <= r["p95_s"] <= r["p99_s"],
+                  f"straggler {r['scheme']} {r['jitter']}: p50<=p95<=p99")
+            if r["jitter"] == "none":
+                check(r["mean_stall_s"] < 1e-9,
+                      f"straggler {r['scheme']} none: stall is float noise")
+        for scheme in sorted({r["scheme"] for r in strag}):
+            seq = sorted((r for r in strag if r["scheme"] == scheme),
+                         key=lambda r: 0.0 if r["jitter"] == "none"
+                         else float(r["jitter"].split(":")[1]))
+            p50s = [r["p50_s"] for r in seq]
+            check(all(b >= a for a, b in zip(p50s, p50s[1:])),
+                  f"straggler {scheme}: p50 monotone in jitter scale")
+
+    # churn rows: the membership plan, with rebuilds exactly on steps
+    churn = sorted((r for r in rows if r["kind"] == "churn"),
+                   key=lambda r: r["round"])
+    if churn:
+        plan = {0: 96, 2: 64, 4: 128, 6: 96}  # fleet.rs MembershipPlan
+        want_n, prev_n = [], 0
+        for rd in range(len(churn)):
+            prev_n = plan.get(rd, prev_n)
+            want_n.append(prev_n)
+        check([int(r["n"]) for r in churn] == want_n,
+              f"churn: worker counts follow the membership plan {want_n}")
+        check(all((int(r["rebuilt"]) == 1) == (int(r["round"]) in plan)
+                  for r in churn),
+              "churn: schedules rebuilt exactly when n steps")
+        check(all(r["rebuild_ms"] >= 0.0 for r in churn),
+              "churn: rebuild times are non-negative")
+
+
+def main():
+    identity_checks()
+    jitter_checks()
+    model = golden_model()
+    cross_check(model)
+    if vc.FAILURES:
+        print(f"\n{len(vc.FAILURES)} FAILURE(S)")
+        for f in vc.FAILURES:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nall fleet-backend checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,7 @@
 //!
 //!     benchgate <BENCH_baseline.json> <BENCH_codec.json> [--tolerance F]
 //!     benchgate --update <BENCH_baseline.json> <BENCH_codec.json>
+//!     benchgate --self <BENCH_codec.json> [--tolerance F]
 //!
 //! Compares entries/s per (scheme, kernel) against the committed
 //! baseline and prints a per-scheme delta table into the job log. The
@@ -13,6 +14,16 @@
 //! are reported as `new` and pass, so an empty (bootstrap) baseline
 //! gates nothing until a maintainer promotes real numbers with
 //! `--update` (which rewrites the baseline from the current run).
+//!
+//! `--self` is the baseline-free arm of the gate: it compares each gated
+//! vectorized lane against its own `<kernel>-scalar` reference from the
+//! *same* run, so it fires on the very first CI run of a machine class —
+//! no stored numbers, no cross-runner noise. A vectorized lane falling
+//! more than `--tolerance` below its scalar reference means the SIMD
+//! path regressed outright (the wire-identity tests pin that both lanes
+//! do identical work), which is exactly the regression the gate exists
+//! to catch. Finding *no* scalar reference lanes also fails: losing the
+//! ablation lanes would silently disarm this check.
 //!
 //! Baselines are arrays in the exact `BENCH_codec.json` format, or an
 //! object `{"note": ..., "entries": [...]}` (what `--update` writes).
@@ -61,9 +72,49 @@ fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
 }
 
+/// The baseline-free gate: every gated vectorized lane vs its own
+/// `-scalar` reference from the same run.
+fn self_gate(current_path: &str, tolerance: f64) -> Result<bool, String> {
+    let cur = index(&load(current_path)?);
+    println!(
+        "{:<12} {:<12} {:>14} {:>14} {:>8}  verdict (tolerance -{:.0}%)",
+        "scheme",
+        "kernel",
+        "scalar e/s",
+        "vector e/s",
+        "delta",
+        tolerance * 100.0
+    );
+    let mut ok = true;
+    let mut pairs = 0usize;
+    for ((scheme, kernel), eps) in &cur {
+        if !GATED.contains(&kernel.as_str()) {
+            continue;
+        }
+        let Some(scalar) = cur.get(&(scheme.clone(), format!("{kernel}-scalar"))) else {
+            continue;
+        };
+        pairs += 1;
+        let delta = eps / scalar - 1.0;
+        let fail = delta < -tolerance;
+        println!(
+            "{scheme:<12} {kernel:<12} {scalar:>14.3e} {eps:>14.3e} {:>+7.1}%  {}",
+            delta * 100.0,
+            if fail { "FAIL" } else { "ok" }
+        );
+        ok &= !fail;
+    }
+    if pairs == 0 {
+        println!("benchgate --self: no `-scalar` reference lanes in {current_path} — the ablation lanes are the gate's yardstick, so their absence fails");
+        return Ok(false);
+    }
+    Ok(ok)
+}
+
 fn run() -> Result<bool, String> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let update = args.iter().any(|a| a == "--update");
+    let self_mode = args.iter().any(|a| a == "--self");
     let mut paths = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -76,13 +127,19 @@ fn run() -> Result<bool, String> {
             i += 1;
         }
     }
-    let [baseline_path, current_path] = &paths[..] else {
-        return Err("usage: benchgate [--update] [--tolerance F] <baseline.json> <current.json>"
-            .to_string());
-    };
     let tolerance: f64 = match flag_value(&args, "--tolerance") {
         None => 0.35,
         Some(v) => v.parse().map_err(|_| format!("bad --tolerance {v}"))?,
+    };
+    if self_mode {
+        let [current_path] = &paths[..] else {
+            return Err("usage: benchgate --self [--tolerance F] <current.json>".to_string());
+        };
+        return self_gate(current_path, tolerance);
+    }
+    let [baseline_path, current_path] = &paths[..] else {
+        return Err("usage: benchgate [--update] [--tolerance F] <baseline.json> <current.json>"
+            .to_string());
     };
 
     let current = load(current_path)?;

@@ -32,8 +32,11 @@
 //! fixed 8-entry lane batches — the branch-free phase (abs/normalize
 //! clamp via `min`, the correlated-rounding sign flip as a select, the
 //! counter-hash uniforms) is straight element-wise arithmetic LLVM
-//! autovectorizes, the data-dependent grid bracketing stays scalar per
-//! element, and the 8 codes of a lane pack into one little-endian word
+//! autovectorizes, the grid bracketing runs table-first per element (the
+//! [`QTable`](crate::quant::nonuniform::QTable) inverse-index LUT keyed
+//! by the magnitude's float bits replaces the data-dependent binary
+//! search — bit-identical by construction), and the 8 codes of a lane
+//! pack into one little-endian word
 //! (8·w bits = w bytes, so lanes never split a byte). Decode runs the
 //! mirror image: w wire bytes → 8 codes → one LUT-gather + scale-multiply
 //! lane. [`KernelMode::Scalar`] keeps the original byte-at-a-time
@@ -96,8 +99,11 @@ pub struct DynamiqConfig {
     /// aggregate whole subtrees (and outer hops are few), so outer levels
     /// typically get more bits and the cheap, numerous NVLink hops fewer
     /// — lower vNMSE at equal mean wire bytes. Broadcast/sink payloads
-    /// (the final sum, forwarded n−1 times in the all-gather) always keep
-    /// the nominal `budget_bits`. Empty (the default) → `budget_bits`
+    /// (the final sum, forwarded n−1 times in the all-gather) encode
+    /// with `budget_bits` (width set 0) — which equal-wire callers may
+    /// themselves shave below the uniform reference, those being the
+    /// round's least efficient bytes (see the hier sweep's
+    /// `level_budgets_for`). Empty (the default) → `budget_bits`
     /// everywhere, with a byte stream identical to the level-unaware
     /// codec; non-empty → every chunk payload carries a small
     /// self-describing width header (see `encode_header`), so decoders
@@ -153,9 +159,11 @@ impl DynamiqConfig {
     /// `budget_bits`: the uniform budget when `level_budgets` is empty,
     /// and the broadcast/sink payload's budget otherwise (the final sum
     /// is forwarded unchanged along the whole all-gather — n−1 hops per
-    /// chunk — so a boosted tier budget on it would dominate total wire
-    /// bytes; its noise is injected once, making those the least
-    /// efficient bytes in the round). Sets 1.. are the per-level budgets
+    /// chunk — so every bit on it is paid n−1 times for a single noise
+    /// injection, making those the least efficient bytes in the round;
+    /// equal-wire callers shave this budget below the uniform reference
+    /// and spend the freed mass on reduce-scatter partials, see the hier
+    /// sweep's `level_budgets_for`). Sets 1.. are the per-level budgets
     /// for reduce-scatter partial sums.
     fn effective_budgets(&self) -> Vec<f64> {
         let mut budgets = Vec::with_capacity(1 + self.level_budgets.len());
@@ -493,9 +501,10 @@ impl Dynamiq {
     /// normalize/flip/uniform phase runs 8 entries at a time with no
     /// cross-element state (clamping is `min`, the correlated-rounding
     /// direction flip is a select — no branches LLVM can't turn into
-    /// masks), the grid bracketing stays scalar, and each lane's 8 codes
-    /// assemble into one `u64` whose low `w` bytes are the wire bytes —
-    /// the same little-endian layout the scalar accumulator emits.
+    /// masks), the grid bracketing is the O(1) inverse-index LUT with a
+    /// short in-bucket advance, and each lane's 8 codes assemble into
+    /// one `u64` whose low `w` bytes are the wire bytes — the same
+    /// little-endian layout the scalar accumulator emits.
     #[allow(clippy::too_many_arguments)]
     fn compress_sg_lanes(
         &self,
@@ -539,7 +548,7 @@ impl Dynamiq {
                     let u0 = rctx.uniform(pi, ctr0 + j as u32);
                     uu[j] = if neg[j] { 1.0 - u0 } else { u0 };
                 }
-                // scalar bracket + sign-magnitude code, packed into one
+                // LUT bracket + sign-magnitude code, packed into one
                 // little-endian word (8·w bits = w bytes)
                 let mut word = 0u64;
                 for j in 0..LANE {

@@ -273,20 +273,26 @@ pub trait GradCodec: Send + Sync {
 pub const SCHEMES: &[&str] =
     &["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
 
-/// Construct a codec by scheme name with its paper-evaluated configuration
-/// (`DynamiQ:b=4`-style suffixes override DynamiQ's bit budget;
-/// `DynamiQ:lb=4.5,6`-style suffixes set the per-hierarchy-level budget
-/// vector, innermost level first).
+/// Construct a codec by scheme name with its paper-evaluated configuration.
+/// DynamiQ accepts `:`-separated option suffixes, composable in any order:
+/// `b=4.63` overrides the bit budget (with `lb=` in force this is the
+/// broadcast/set-0 budget — how a shaved equal-wire base is expressed,
+/// see the hier sweep's `level_budgets_for`), and `lb=4.5,6` sets the
+/// per-hierarchy-level budget vector, innermost level first — e.g.
+/// `DynamiQ:b=4.63:lb=5.24,6.74`.
 pub fn make_codec(name: &str) -> Box<dyn GradCodec> {
-    if let Some(b) = name.strip_prefix("DynamiQ:b=") {
-        let budget: f64 = b.parse().expect("bad bit budget");
-        let cfg = dynamiq::DynamiqConfig { budget_bits: budget, ..Default::default() };
-        return Box::new(dynamiq::Dynamiq::new(cfg));
-    }
-    if let Some(lb) = name.strip_prefix("DynamiQ:lb=") {
-        let budgets: Vec<f64> =
-            lb.split(',').map(|b| b.parse().expect("bad per-level bit budget")).collect();
-        let cfg = dynamiq::DynamiqConfig { level_budgets: budgets, ..Default::default() };
+    if let Some(spec) = name.strip_prefix("DynamiQ:") {
+        let mut cfg = dynamiq::DynamiqConfig::default();
+        for part in spec.split(':') {
+            if let Some(b) = part.strip_prefix("b=") {
+                cfg.budget_bits = b.parse().expect("bad bit budget");
+            } else if let Some(lb) = part.strip_prefix("lb=") {
+                cfg.level_budgets =
+                    lb.split(',').map(|b| b.parse().expect("bad per-level bit budget")).collect();
+            } else {
+                panic!("unknown DynamiQ option {part} (expected b= or lb=)");
+            }
+        }
         return Box::new(dynamiq::Dynamiq::new(cfg));
     }
     match name {

@@ -171,6 +171,23 @@ pub fn produce_hop(
     summed
 }
 
+/// The per-hop codec context every execution backend must agree on: a
+/// sink-finalize pseudo-hop (`from == to`, which never appears in a real
+/// schedule) marks the broadcast payload, priced at the codec's nominal
+/// budget; a real hop carries the hierarchy level its link rides plus
+/// that level's fan-in. Shared by the engine's stage executor, the
+/// thread-per-worker coordinator and the event-driven fleet simulator so
+/// all three produce bit-identical payloads by construction.
+pub fn hop_context(topology: &Topology, n: usize, round: u32, from: u32, to: u32) -> HopCtx {
+    let base = HopCtx::flat(from, n as u32, round, 1);
+    if from == to {
+        base.at_broadcast()
+    } else {
+        let level = topology.hop_level(from, to);
+        base.at_level(level, topology.level_fanin(level, n))
+    }
+}
+
 /// One send of a stage, owned by its producing worker's [`WorkerJob`]
 /// while the pool executes the stage (always literal-constructed at
 /// stage build; only the containing `sends` Vec needs `Default`).
@@ -575,19 +592,7 @@ impl AllReduceEngine {
         produced: &mut Vec<(u32, u32, Vec<u8>, u32)>,
     ) {
         produced.clear();
-        // Sink-finalize pseudo-hops (from == to) never appear in real
-        // schedules, so they mark the broadcast payload (priced at the
-        // codec's nominal budget). Real hops carry the level their link
-        // rides.
-        let hop_ctx = |from: u32, to: u32| {
-            let base = HopCtx::flat(from, n as u32, round, 1);
-            if from == to {
-                base.at_broadcast()
-            } else {
-                let level = self.topology.hop_level(from, to);
-                base.at_level(level, self.topology.level_fanin(level, n))
-            }
-        };
+        let hop_ctx = |from: u32, to: u32| hop_context(&self.topology, n, round, from, to);
         if threads <= 1 || hops.len() <= 1 {
             let mut counters = KernelCounters::default();
             for h in hops {

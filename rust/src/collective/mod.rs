@@ -20,7 +20,7 @@ pub mod hierarchy;
 pub mod network;
 pub mod topology;
 
-pub use allreduce::{produce_hop, AllReduceEngine, KernelCounters, RoundReport};
+pub use allreduce::{hop_context, produce_hop, AllReduceEngine, KernelCounters, RoundReport};
 pub use hierarchy::LevelSpec;
 pub use network::{LinkClass, LinkSpec, NetworkModel, NicProfile};
-pub use topology::{HierarchySpec, Level, LevelStack, Topology, TopologyError};
+pub use topology::{stage_census, HierarchySpec, Level, LevelStack, Topology, TopologyError};

@@ -283,6 +283,26 @@ impl Level {
     }
 }
 
+/// Per-stage, per-worker participation census of a schedule: for every
+/// stage, how many hops each worker sends and receives. This is the
+/// introspection the event-driven backend replays a schedule from — a
+/// worker's stage-σ barrier resolves when exactly `sends + recvs` of its
+/// stage-σ transfers have completed, so the census doubles as the event
+/// count the simulator arms per (worker, stage).
+pub fn stage_census(schedule: &Schedule, n: usize) -> Vec<Vec<(u32, u32)>> {
+    schedule
+        .iter()
+        .map(|hops| {
+            let mut counts = vec![(0u32, 0u32); n];
+            for h in hops {
+                counts[h.from as usize].0 += 1;
+                counts[h.to as usize].1 += 1;
+            }
+            counts
+        })
+        .collect()
+}
+
 /// Extract chunk `chunk`'s in-arborescence from a reduce-scatter schedule.
 fn arborescence_of(sched: &Schedule, n: usize, chunk: usize) -> Vec<(u32, u32)> {
     let mut parent: Vec<(u32, u32)> = (0..n).map(|w| (w as u32, u32::MAX)).collect();
@@ -861,6 +881,32 @@ mod tests {
             size[p] += size[w];
         }
         assert_eq!(size[3], n);
+    }
+
+    #[test]
+    fn stage_census_counts_every_hop_once() {
+        for (t, n) in [
+            (Topology::Ring, 5usize),
+            (Topology::Butterfly, 8),
+            (Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+        ] {
+            for sched in [t.reduce_scatter(n), t.all_gather(n)] {
+                let census = stage_census(&sched, n);
+                assert_eq!(census.len(), sched.len());
+                for (hops, counts) in sched.iter().zip(&census) {
+                    let sends: u32 = counts.iter().map(|c| c.0).sum();
+                    let recvs: u32 = counts.iter().map(|c| c.1).sum();
+                    assert_eq!(sends as usize, hops.len());
+                    assert_eq!(recvs as usize, hops.len());
+                }
+                // every worker participates in every stage of these
+                // schedules — the property the event backend's no-jitter
+                // batch/stage equivalence rests on
+                for counts in &census {
+                    assert!(counts.iter().all(|&(s, r)| s + r > 0));
+                }
+            }
+        }
     }
 
     #[test]

@@ -349,10 +349,7 @@ fn run_worker(
     // level — both mirror the engine exactly, which is what keeps the two
     // execution paths bit-identical for level-budgeted codecs.
     let ctx = |summed: u32| HopCtx::flat(w, n as u32, round, summed).at_broadcast();
-    let hop_ctx = |to: u32| {
-        let level = topology.hop_level(w, to);
-        ctx(1).at_level(level, topology.level_fanin(level, n))
-    };
+    let hop_ctx = |to: u32| crate::collective::allreduce::hop_context(&topology, n, round, w, to);
     // Out-of-phase buffer: a fast peer may already be in reduce-scatter
     // while we still await metadata (butterfly especially) — chunks that
     // arrive early are parked here. Persistent across rounds but always

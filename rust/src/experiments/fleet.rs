@@ -1,0 +1,347 @@
+//! Fleet-scale sweep (`repro --id fleet`): the event-driven backend
+//! ([`crate::sim::EventEngine`]) at worker counts the lockstep engine's
+//! thread-per-worker coordinator cannot reach, in four parts:
+//!
+//! 1. **Scale** — comm time, wire bytes and vNMSE vs n ∈ 16…2048 across
+//!    codecs and topologies (flat ring/butterfly baselines at small n,
+//!    ring-in-node × butterfly-across-nodes hierarchies throughout).
+//!    Every cell runs in one OS process with a bounded kernel pool — no
+//!    per-worker threads — which is the point of the backend.
+//! 2. **Straggler ablation** — the paper-motivated question the sync
+//!    engine cannot pose: under seeded per-(round, worker) compute
+//!    jitter, does DynamiQ's fused-hop path shrink the straggler *tail*
+//!    of the round span or only the median? Reports p50/p95/p99 of the
+//!    round span over the run for BF16 vs DynamiQ at each jitter scale.
+//! 3. **Elastic membership** — workers join/leave between rounds
+//!    ([`crate::sim::MembershipPlan`]); the driver rebuilds schedules at
+//!    each step and reports the measured rebuild cost next to the
+//!    round's comm time.
+//! 4. **Golden cells** — no-jitter BF16 rounds whose virtual comm times
+//!    are reproduced to float noise by the offline oracle
+//!    (`python/validate_fleet.py` — the fixed 2-bytes/entry payload
+//!    makes BF16 exactly predictable); CI cross-checks the saved JSON.
+//!
+//! All JSON rows are tagged `"tag": "fleet"` with a `"kind"` field
+//! (`scale` / `straggler` / `churn` / `golden`). Scale cells drop
+//! codecs as n grows (DynamiQ/THC stop at 1024, BF16 carries the 2048
+//! cell) to bound the sweep's memory and runtime — the table prints
+//! exactly which cells ran, so nothing is silently truncated.
+//!
+//! Parallelism: grid cells are self-contained (own codecs, own engine,
+//! own scratch), so `repro --id fleet --jobs N` computes each part's
+//! cells on N scoped threads — byte-identical output for any N (the
+//! straggler draws are pure functions of (seed, round, worker)).
+
+use anyhow::Result;
+
+use super::hierarchy::{grads, net_for};
+use super::Ctx;
+use crate::collective::{stage_census, Level, RoundReport, Topology};
+use crate::codec::make_codecs;
+use crate::sim::{EventEngine, EventStats, FleetScratch, MembershipPlan, StragglerModel};
+use crate::util::benchkit::Table;
+use crate::util::json::Json;
+use crate::util::par;
+
+/// Gradient dimension of the scale/straggler/golden parts (2^15: big
+/// enough that every chunk is non-trivial at n = 2048, small enough
+/// that the 2048-worker gradient set stays ~256 MB).
+const FLEET_D: usize = 1 << 15;
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i]
+}
+
+/// The fleet topology family: ring inside each 8-worker node, butterfly
+/// across nodes (node counts stay powers of two for every swept n).
+fn hier8() -> Topology {
+    Topology::hierarchical(Level::Ring, Level::Butterfly, 8)
+}
+
+/// One scale/straggler grid cell: inputs plus the computed outputs.
+struct Cell {
+    scheme: &'static str,
+    jitter: &'static str,
+    out: Option<(RoundReport, EventStats)>,
+    spans: Vec<f64>,
+    stalls: Vec<f64>,
+}
+
+impl Cell {
+    fn new(scheme: &'static str, jitter: &'static str) -> Self {
+        Cell { scheme, jitter, out: None, spans: Vec::new(), stalls: Vec::new() }
+    }
+}
+
+/// `repro --id fleet`: the scale sweep, the straggler-tail ablation, the
+/// membership-churn trace and the oracle golden cells, rendered as text
+/// tables and saved with `"tag": "fleet"` JSON rows.
+pub fn fleet_sweep(ctx: &Ctx) -> Result<()> {
+    let engine_threads = if ctx.jobs > 1 { 1 } else { par::num_threads() };
+    let mut json = Vec::new();
+    let mut body = String::new();
+
+    // ---- part 1: scale (comm time + vNMSE vs n, one no-jitter round) ----
+    //
+    // codec roster per n (memory/runtime bound, printed — not silent):
+    // the 2048-worker cell is the backend's existence proof and runs
+    // BF16 only; DynamiQ rides to 1024, THC to 256.
+    let scale_cases: Vec<(Topology, usize, Vec<&'static str>)> = vec![
+        (Topology::Ring, 16, vec!["BF16", "DynamiQ", "THC"]),
+        (Topology::Butterfly, 16, vec!["BF16", "DynamiQ", "THC"]),
+        (Topology::Ring, 64, vec!["BF16", "DynamiQ", "THC"]),
+        (Topology::Butterfly, 64, vec!["BF16", "DynamiQ", "THC"]),
+        (hier8(), 16, vec!["BF16", "DynamiQ", "THC"]),
+        (hier8(), 64, vec!["BF16", "DynamiQ", "THC"]),
+        (hier8(), 256, vec!["BF16", "DynamiQ", "THC"]),
+        (hier8(), 1024, vec!["BF16", "DynamiQ"]),
+        (hier8(), 2048, vec!["BF16"]),
+    ];
+    for (topo, n, _) in &scale_cases {
+        topo.validate(*n)?;
+    }
+    let mut stable = Table::new(&[
+        "topology", "n", "scheme", "wire MB", "comm ms", "vNMSE", "events", "batches",
+    ]);
+    for (topo, n, schemes) in &scale_cases {
+        let (topo, n) = (*topo, *n);
+        // one gradient set alive at a time (~256 MB at n = 2048),
+        // shared read-only across this case's cells
+        let g = grads(n, FLEET_D, 0xF1EE_7 + n as u64);
+        let mut cells: Vec<Cell> = schemes.iter().map(|&s| Cell::new(s, "none")).collect();
+        par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
+            let mut codecs = make_codecs(cell.scheme, n);
+            let mut eng = EventEngine::new(topo, net_for(&topo, 48.0));
+            eng.threads = engine_threads;
+            let mut scratch = FleetScratch::new();
+            match eng.run_scratch(&g, &mut codecs, 0, 0.0, &mut scratch) {
+                Ok((_, rep, stats)) => cell.out = Some((rep, stats)),
+                Err(e) => unreachable!("validated up front: {e}"),
+            }
+        });
+        for cell in &cells {
+            let (rep, stats) = cell.out.as_ref().expect("one round per cell");
+            stable.row(vec![
+                topo.name(),
+                n.to_string(),
+                cell.scheme.into(),
+                format!("{:.2}", rep.total_bytes() as f64 / 1e6),
+                format!("{:.3}", rep.comm_time_s() * 1e3),
+                format!("{:.2e}", rep.vnmse),
+                stats.events.to_string(),
+                stats.batches.to_string(),
+            ]);
+            json.push(Json::obj(vec![
+                ("tag", Json::Str("fleet".into())),
+                ("kind", Json::Str("scale".into())),
+                ("topology", Json::Str(topo.name())),
+                ("n", Json::Num(n as f64)),
+                ("d", Json::Num(FLEET_D as f64)),
+                ("scheme", Json::Str(cell.scheme.into())),
+                ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+                ("comm_time_s", Json::Num(rep.comm_time_s())),
+                ("vnmse", Json::Num(rep.vnmse)),
+                ("events", Json::Num(stats.events as f64)),
+                ("batches", Json::Num(stats.batches as f64)),
+            ]));
+        }
+    }
+    body.push_str(&stable.render());
+    println!("{}", stable.render());
+
+    // ---- part 2: straggler-tail ablation ----
+    //
+    // Fixed fleet (n = 256, ring-in-node × butterfly), exponential
+    // per-(round, worker) compute jitter at three scales against the
+    // no-jitter baseline. Identical seeds across schemes: BF16 and
+    // DynamiQ see the *same* per-round delay draws, so differences in
+    // the span distribution are the codec's, not the RNG's.
+    let st_topo = hier8();
+    let st_n = 256usize;
+    st_topo.validate(st_n)?;
+    let st_rounds = ((16.0 * ctx.scale).ceil() as u32).clamp(6, 16);
+    let jitters = ["none", "exp:0.001", "exp:0.003", "exp:0.010"];
+    let mut cells: Vec<Cell> = jitters
+        .iter()
+        .flat_map(|&j| ["BF16", "DynamiQ"].into_iter().map(move |s| Cell::new(s, j)))
+        .collect();
+    let st_g = grads(st_n, FLEET_D, 0x57A6);
+    par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
+        let mut codecs = make_codecs(cell.scheme, st_n);
+        let mut eng = EventEngine::new(st_topo, net_for(&st_topo, 48.0));
+        eng.threads = engine_threads;
+        eng.straggler = StragglerModel::parse(cell.jitter, 11).expect("static jitter specs");
+        let mut scratch = FleetScratch::new();
+        for round in 0..st_rounds {
+            match eng.run_scratch(&st_g, &mut codecs, round, 0.0, &mut scratch) {
+                Ok((_, _, stats)) => {
+                    cell.spans.push(stats.span_s);
+                    cell.stalls.push(stats.stall_s);
+                }
+                Err(e) => unreachable!("validated up front: {e}"),
+            }
+        }
+    });
+    let mut jtable = Table::new(&[
+        "scheme", "jitter", "rounds", "p50 ms", "p95 ms", "p99 ms", "mean stall ms",
+    ]);
+    for cell in &cells {
+        let mut spans = cell.spans.clone();
+        spans.sort_by(f64::total_cmp);
+        let (p50, p95, p99) = (pctl(&spans, 0.50), pctl(&spans, 0.95), pctl(&spans, 0.99));
+        let stall = cell.stalls.iter().sum::<f64>() / cell.stalls.len() as f64;
+        jtable.row(vec![
+            cell.scheme.into(),
+            cell.jitter.into(),
+            st_rounds.to_string(),
+            format!("{:.3}", p50 * 1e3),
+            format!("{:.3}", p95 * 1e3),
+            format!("{:.3}", p99 * 1e3),
+            format!("{:.3}", stall * 1e3),
+        ]);
+        json.push(Json::obj(vec![
+            ("tag", Json::Str("fleet".into())),
+            ("kind", Json::Str("straggler".into())),
+            ("topology", Json::Str(st_topo.name())),
+            ("n", Json::Num(st_n as f64)),
+            ("d", Json::Num(FLEET_D as f64)),
+            ("scheme", Json::Str(cell.scheme.into())),
+            ("jitter", Json::Str(cell.jitter.into())),
+            ("rounds", Json::Num(st_rounds as f64)),
+            ("p50_s", Json::Num(p50)),
+            ("p95_s", Json::Num(p95)),
+            ("p99_s", Json::Num(p99)),
+            ("mean_stall_s", Json::Num(stall)),
+        ]));
+    }
+    body.push('\n');
+    body.push_str(&jtable.render());
+    println!("{}", jtable.render());
+
+    // ---- part 3: elastic membership ----
+    //
+    // A flat ring (valid at any n ≥ 2) under a join/leave plan; the
+    // schedule + census rebuild is timed whenever the worker count
+    // steps. Rebuild wall-time is a measurement, not a golden value —
+    // the CI cross-check ignores it.
+    let plan = MembershipPlan { steps: vec![(0, 96), (2, 64), (4, 128), (6, 96)] };
+    let churn_rounds = 8u32;
+    let churn_d = 1 << 14;
+    let mut ctable = Table::new(&[
+        "round", "n", "rebuilt", "rebuild ms", "hops", "comm ms", "wire MB",
+    ]);
+    let mut prev_n = 0usize;
+    let mut churn: Option<(Vec<Vec<f32>>, Vec<Box<dyn crate::codec::GradCodec>>, FleetScratch)> =
+        None;
+    for round in 0..churn_rounds {
+        let n = plan.n_at(round).expect("plan covers round 0");
+        let topo = Topology::Ring;
+        topo.validate(n)?;
+        let rebuilt = n != prev_n;
+        let mut rebuild_ms = 0.0;
+        let mut hops = 0usize;
+        if rebuilt {
+            // the measurable cost of elasticity: rebuild both phase
+            // schedules and their per-worker censuses at the new n
+            let t = std::time::Instant::now();
+            let rs = topo.reduce_scatter(n);
+            let ag = topo.all_gather(n);
+            let census = (stage_census(&rs, n), stage_census(&ag, n));
+            rebuild_ms = t.elapsed().as_secs_f64() * 1e3;
+            hops = rs.iter().chain(ag.iter()).map(Vec::len).sum::<usize>();
+            assert_eq!(census.0.len() + census.1.len(), rs.len() + ag.len());
+            churn = Some((
+                grads(n, churn_d, 0xC0_4E + n as u64),
+                make_codecs("DynamiQ", n),
+                FleetScratch::new(),
+            ));
+            prev_n = n;
+        }
+        let (g, codecs, scratch) = churn.as_mut().expect("rebuilt on round 0");
+        let mut eng = EventEngine::new(topo, net_for(&topo, 48.0));
+        eng.threads = engine_threads;
+        let (_, rep, _) = eng
+            .run_scratch(g, codecs, round, 0.0, scratch)
+            .expect("validated up front");
+        ctable.row(vec![
+            round.to_string(),
+            n.to_string(),
+            if rebuilt { "yes".into() } else { "".to_string() },
+            format!("{rebuild_ms:.3}"),
+            hops.to_string(),
+            format!("{:.3}", rep.comm_time_s() * 1e3),
+            format!("{:.2}", rep.total_bytes() as f64 / 1e6),
+        ]);
+        json.push(Json::obj(vec![
+            ("tag", Json::Str("fleet".into())),
+            ("kind", Json::Str("churn".into())),
+            ("topology", Json::Str(topo.name())),
+            ("round", Json::Num(round as f64)),
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(churn_d as f64)),
+            ("scheme", Json::Str("DynamiQ".into())),
+            ("rebuilt", Json::Num(if rebuilt { 1.0 } else { 0.0 })),
+            ("rebuild_ms", Json::Num(rebuild_ms)),
+            ("comm_time_s", Json::Num(rep.comm_time_s())),
+            ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+        ]));
+    }
+    body.push('\n');
+    body.push_str(&ctable.render());
+    println!("{}", ctable.render());
+
+    // ---- part 4: oracle golden cells ----
+    //
+    // BF16 has no metadata phase and a fixed 2-bytes/entry payload, so
+    // python/validate_fleet.py re-derives these virtual comm times from
+    // first principles (ported schedules + ported congestion solve) and
+    // CI compares the saved rows against its model to float noise.
+    let golden_cases: Vec<(Topology, usize)> = vec![(Topology::Ring, 16), (hier8(), 32)];
+    let mut gtable = Table::new(&[
+        "topology", "n", "scheme", "comm ms", "rs ms", "ag ms", "span ms", "wire MB",
+    ]);
+    for &(topo, n) in &golden_cases {
+        topo.validate(n)?;
+        let g = grads(n, FLEET_D, 0x601D + n as u64);
+        let mut codecs = make_codecs("BF16", n);
+        let mut eng = EventEngine::new(topo, net_for(&topo, 48.0));
+        eng.threads = engine_threads;
+        let (_, rep, stats) = eng
+            .run(&g, &mut codecs, 0, 0.0)
+            .expect("validated up front");
+        gtable.row(vec![
+            topo.name(),
+            n.to_string(),
+            "BF16".into(),
+            format!("{:.6}", rep.comm_time_s() * 1e3),
+            format!("{:.6}", rep.rs_time_s * 1e3),
+            format!("{:.6}", rep.ag_time_s * 1e3),
+            format!("{:.6}", stats.span_s * 1e3),
+            format!("{:.2}", rep.total_bytes() as f64 / 1e6),
+        ]);
+        json.push(Json::obj(vec![
+            ("tag", Json::Str("fleet".into())),
+            ("kind", Json::Str("golden".into())),
+            ("topology", Json::Str(topo.name())),
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(FLEET_D as f64)),
+            ("scheme", Json::Str("BF16".into())),
+            ("comm_time_s", Json::Num(rep.comm_time_s())),
+            ("meta_time_s", Json::Num(rep.meta_time_s)),
+            ("rs_time_s", Json::Num(rep.rs_time_s)),
+            ("ag_time_s", Json::Num(rep.ag_time_s)),
+            ("span_s", Json::Num(stats.span_s)),
+            ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+            ("batches", Json::Num(stats.batches as f64)),
+            ("vnmse", Json::Num(rep.vnmse)),
+        ]));
+    }
+    body.push('\n');
+    body.push_str(&gtable.render());
+    println!("{}", gtable.render());
+
+    ctx.save("fleet", &body, Some(Json::Arr(json)))
+}

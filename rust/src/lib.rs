@@ -60,6 +60,22 @@
 //! bandwidth-ratio × codec sweep plus the uniform-vs-levelled budget
 //! comparison ([`experiments::hierarchy`]).
 //!
+//! ## Execution backends: lockstep vs event-driven
+//!
+//! Two backends execute the same schedules with the same kernels:
+//! [`collective::AllReduceEngine`] runs stages in lockstep (the
+//! reference for every experiment up to a few hundred workers), and
+//! [`sim::EventEngine`] re-executes them as a discrete-event simulation
+//! — per-worker barriers on a virtual clock — so fleets of thousands
+//! run in one OS thread. With no jitter the two are bit-identical in
+//! values, bytes and virtual times (`tests/fleet_invariants`); beyond
+//! parity the event backend adds seeded straggler jitter
+//! ([`sim::StragglerModel`]), link flaps ([`sim::LinkFlap`]) and
+//! elastic membership ([`sim::MembershipPlan`]). CLI: `dynamiq train
+//! --backend event --n 4096 --straggler exp:0.003`, and `dynamiq repro
+//! --id fleet` runs the scale sweep + straggler-tail ablation
+//! ([`experiments::fleet`]).
+//!
 //! ## Congestion-aware network model
 //!
 //! [`collective::NetworkModel`] prices stages congestion-aware: a
@@ -93,6 +109,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod metrics;
 pub mod runtime;
+pub mod sim;
 pub mod train;
 pub mod quant;
 pub mod util;

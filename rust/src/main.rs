@@ -9,11 +9,26 @@
 //!     --scale S                 scale experiment round counts by S
 //!
 //! Train flags: --preset tiny|small|base  --scheme NAME  --workers N
+//!   (--n is an alias for --workers)
 //!   --topology ring|butterfly|hier  --rounds N  --shared-network
 //!   --threaded (use the thread-per-worker coordinator for the all-reduce)
 //!
+//! Execution backend flags:
+//!   --backend sync|event      sync = the lockstep stage-loop engine
+//!                             (default); event = the discrete-event
+//!                             fleet backend (no per-worker OS threads —
+//!                             use it for --n in the thousands)
+//!   --straggler SPEC          seeded per-(round, worker) compute jitter,
+//!                             event backend only: none |
+//!                             uniform:MAX[:frac] | exp:MEAN[:frac] |
+//!                             lognormal:MEDIAN:SIGMA[:frac]
+//!                             e.g. `--backend event --n 4096 --straggler
+//!                             exp:0.003`
+//!
 //! Scheme suffixes: DynamiQ:b=4 (uniform budget), DynamiQ:lb=4.5,6
-//! (per-hierarchy-level budgets, innermost tier first).
+//! (per-hierarchy-level budgets, innermost tier first); composable, e.g.
+//! DynamiQ:b=4.63:lb=5.24,6.74 (with lb= in force, b= is the
+//! broadcast/set-0 budget — a shaved equal-wire base).
 //!
 //! Hierarchical topology flags (with --topology hier):
 //!   --intra ring|butterfly    per-node level (default ring)
@@ -42,7 +57,7 @@
 use dynamiq::collective::{Level, Topology};
 use dynamiq::experiments::{run, run_all, Ctx, ALL_IDS};
 use dynamiq::runtime::Manifest;
-use dynamiq::train::{TrainConfig, Trainer};
+use dynamiq::train::{Backend, TrainConfig, Trainer};
 
 fn flag_value(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
@@ -142,8 +157,17 @@ fn train(args: &[String]) -> anyhow::Result<()> {
     let cfg = TrainConfig {
         preset: flag_value(args, "--preset").unwrap_or_else(|| "tiny".into()),
         scheme: flag_value(args, "--scheme").unwrap_or_else(|| "DynamiQ".into()),
-        n_workers: flag_value(args, "--workers").and_then(|v| v.parse().ok()).unwrap_or(4),
+        n_workers: flag_value(args, "--workers")
+            .or_else(|| flag_value(args, "--n"))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(4),
         topology,
+        backend: match flag_value(args, "--backend").as_deref() {
+            None | Some("sync") => Backend::Sync,
+            Some("event") => Backend::Event,
+            Some(other) => anyhow::bail!("--backend must be sync|event, got {other}"),
+        },
+        straggler: flag_value(args, "--straggler").unwrap_or_else(|| "none".into()),
         shared_network: has_flag(args, "--shared-network"),
         rounds: flag_value(args, "--rounds").and_then(|v| v.parse().ok()).unwrap_or(100),
         lr: flag_value(args, "--lr").and_then(|v| v.parse().ok()).unwrap_or(3e-3),
@@ -181,12 +205,16 @@ fn train(args: &[String]) -> anyhow::Result<()> {
         .validate(cfg.n_workers)
         .map_err(|e| anyhow::anyhow!("invalid --topology/--workers combination: {e}"))?;
     println!(
-        "training preset={} scheme={} workers={} topology={} rounds={}",
+        "training preset={} scheme={} workers={} topology={} rounds={} backend={}",
         cfg.preset,
         cfg.scheme,
         cfg.n_workers,
         cfg.topology.name(),
-        cfg.rounds
+        cfg.rounds,
+        match cfg.backend {
+            Backend::Sync => "sync".to_string(),
+            Backend::Event => format!("event (straggler {})", cfg.straggler),
+        }
     );
     let mut t = Trainer::new(cfg, "artifacts")?;
     let rounds = t.cfg.rounds;

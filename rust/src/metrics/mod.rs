@@ -1,10 +1,13 @@
 //! Measurement substrate: the Table-2 DRAM-traffic model, the Fig-6 round
-//! time decomposition, and TTA bookkeeping.
+//! time decomposition, virtual-time comm accounting for the event-driven
+//! backend, and TTA bookkeeping.
 
 pub mod memtraffic;
 pub mod timemodel;
+pub mod virtualtime;
 
 pub use timemodel::{ComputeModel, RoundTime};
+pub use virtualtime::{CommPhase, PhaseClock};
 
 /// Time-to-accuracy recorder: (simulated seconds, metric) samples.
 #[derive(Clone, Debug, Default)]

@@ -1,0 +1,159 @@
+//! Virtual-time communication accounting for the event-driven backend.
+//!
+//! The synchronous engine tracks one scalar `now` and three phase
+//! accumulators with a fixed `dt = price(...); now += dt; phase += dt`
+//! walk. The event backend must reproduce those *exact* f64 values in
+//! the no-jitter case (the fleet bit-identity invariant) while also
+//! tracking a high-water mark that can run ahead of the busy time when
+//! stragglers stall the round. [`PhaseClock`] packages both:
+//!
+//! * [`PhaseClock::advance`] is the engine-style walk — it adds `dt` to
+//!   the clock *and* the phase accumulator in one step, preserving the
+//!   engine's exact sequence of f64 additions (used for the metadata
+//!   ring, whose stages are priced at the running clock).
+//! * [`PhaseClock::charge_at`] accounts a batch priced at an explicit
+//!   start time `t` (event batches carry their own timestamps): the
+//!   phase accumulator gets the same `+= dt` the engine would perform,
+//!   and the high-water mark advances to `t + dt` — which in the
+//!   no-jitter case *is* `now + dt`, so the two walks stay bit-equal.
+//!
+//! Busy times are exact sums; the span is a subtraction from the
+//! high-water mark, so `stall ≈ span − busy` is float-noise-level (not
+//! bit-zero) on a jitter-free round — callers clamp it at zero.
+
+/// Which communication phase a priced transfer belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommPhase {
+    /// the metadata all-reduce (norms/scales ring)
+    Meta,
+    /// compressed reduce-scatter stages
+    ReduceScatter,
+    /// broadcast all-gather stages
+    AllGather,
+}
+
+/// A virtual clock with per-phase busy accounting. See the module docs
+/// for the two accounting modes and the bit-exactness contract.
+#[derive(Clone, Debug)]
+pub struct PhaseClock {
+    t0: f64,
+    /// high-water mark: the latest virtual instant observed
+    now: f64,
+    /// busy seconds charged to the metadata phase
+    pub meta_s: f64,
+    /// busy seconds charged to reduce-scatter
+    pub rs_s: f64,
+    /// busy seconds charged to all-gather
+    pub ag_s: f64,
+}
+
+impl PhaseClock {
+    /// A clock starting at absolute virtual time `t0` with zeroed phase
+    /// accumulators.
+    pub fn new(t0: f64) -> Self {
+        PhaseClock { t0, now: t0, meta_s: 0.0, rs_s: 0.0, ag_s: 0.0 }
+    }
+
+    /// The current virtual time (the high-water mark).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Engine-style step: the transfer starts at the current clock and
+    /// takes `dt`; clock and phase accumulator both advance by `dt`
+    /// (the exact `now += dt; phase += dt` sequence of the sync
+    /// engine).
+    pub fn advance(&mut self, phase: CommPhase, dt: f64) {
+        self.now += dt;
+        self.bucket(phase, dt);
+    }
+
+    /// Event-style step: a batch priced at explicit start time `t` took
+    /// `dt`. The phase accumulator advances by `dt`; the high-water
+    /// mark advances to `t + dt` if that is later.
+    pub fn charge_at(&mut self, phase: CommPhase, t: f64, dt: f64) {
+        let end = t + dt;
+        if end > self.now {
+            self.now = end;
+        }
+        self.bucket(phase, dt);
+    }
+
+    /// Pull the high-water mark up to `t` without charging any phase
+    /// (worker finish times, idle stalls).
+    pub fn observe(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+
+    /// Virtual time elapsed since `t0` (includes stalls).
+    pub fn span_s(&self) -> f64 {
+        self.now - self.t0
+    }
+
+    /// Total busy seconds across the three phases.
+    pub fn busy_s(&self) -> f64 {
+        self.meta_s + self.rs_s + self.ag_s
+    }
+
+    fn bucket(&mut self, phase: CommPhase, dt: f64) {
+        match phase {
+            CommPhase::Meta => self.meta_s += dt,
+            CommPhase::ReduceScatter => self.rs_s += dt,
+            CommPhase::AllGather => self.ag_s += dt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advance_matches_the_engine_walk() {
+        // the engine's walk: now = t0; now += dt for each stage
+        let dts = [1e-4, 3.7e-5, 2.2e-6, 9.1e-5];
+        let t0 = 123.456;
+        let mut now = t0;
+        let mut rs = 0.0f64;
+        let mut clock = PhaseClock::new(t0);
+        for &dt in &dts {
+            now += dt;
+            rs += dt;
+            clock.advance(CommPhase::ReduceScatter, dt);
+        }
+        assert_eq!(clock.now().to_bits(), now.to_bits());
+        assert_eq!(clock.rs_s.to_bits(), rs.to_bits());
+    }
+
+    #[test]
+    fn charge_at_is_bit_equal_when_batches_are_back_to_back() {
+        // no-jitter case: each batch starts exactly at the previous end
+        let dts = [1e-4, 3.7e-5, 2.2e-6];
+        let t0 = 5.0;
+        let mut engine = PhaseClock::new(t0);
+        let mut event = PhaseClock::new(t0);
+        let mut t = t0;
+        for &dt in &dts {
+            engine.advance(CommPhase::AllGather, dt);
+            event.charge_at(CommPhase::AllGather, t, dt);
+            t += dt;
+        }
+        assert_eq!(engine.now().to_bits(), event.now().to_bits());
+        assert_eq!(engine.ag_s.to_bits(), event.ag_s.to_bits());
+    }
+
+    #[test]
+    fn stalls_widen_the_span_not_the_busy_time() {
+        let mut clock = PhaseClock::new(0.0);
+        clock.advance(CommPhase::Meta, 1.0);
+        // a straggler delays the next batch to t = 5.0
+        clock.charge_at(CommPhase::ReduceScatter, 5.0, 2.0);
+        assert_eq!(clock.busy_s(), 3.0);
+        assert_eq!(clock.span_s(), 7.0);
+        // observing an earlier instant never rewinds the clock
+        clock.observe(4.0);
+        assert_eq!(clock.span_s(), 7.0);
+    }
+}

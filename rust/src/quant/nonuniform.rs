@@ -14,6 +14,18 @@
 
 use crate::util::rng::uniform_u01;
 
+/// Float-bits bucketing of the bracket's inverse-index table: a
+/// normalized magnitude is keyed by its sign-masked top 12 IEEE bits
+/// (exponent + 3 mantissa bits), so consecutive keys cover disjoint,
+/// ascending value intervals and one `u16` load replaces the bulk of
+/// the grid binary search.
+const INV_SHIFT: u32 = 20;
+/// `0x7FFF_FFFF >> INV_SHIFT` is the largest masked key, so the table
+/// covers *every* f32 input — including out-of-domain ±0.0/inf/NaN,
+/// which land in buckets whose entries reproduce `partition_point`'s
+/// answer for them (0 for NaN: no grid value compares below it).
+const INV_BUCKETS: usize = (0x7FFF_FFFFu32 >> INV_SHIFT) as usize + 1;
+
 /// A quantization-value table over [0, 1] for a given magnitude bitwidth.
 #[derive(Clone, Debug)]
 pub struct QTable {
@@ -23,6 +35,10 @@ pub struct QTable {
     pub epsilon: f64,
     /// ascending values, grid[0] = 0, grid.last() = 1
     pub grid: Vec<f32>,
+    /// `inv_idx[k] = |{g ∈ grid : g < f32::from_bits(k << INV_SHIFT)}|`
+    /// — the bracket's binary-search result at each bucket's lower
+    /// bound, from which the true result is a short in-bucket advance
+    inv_idx: Vec<u16>,
 }
 
 impl QTable {
@@ -50,7 +66,13 @@ impl QTable {
             grid.windows(2).all(|w| w[0] < w[1]),
             "(ε={epsilon}, mag_bits={mag_bits}) degenerates in f32; reduce ε or bits"
         );
-        QTable { mag_bits, epsilon, grid }
+        let inv_idx = (0..INV_BUCKETS)
+            .map(|k| {
+                let bound = f32::from_bits((k as u32) << INV_SHIFT);
+                grid.partition_point(|&g| g < bound) as u16
+            })
+            .collect();
+        QTable { mag_bits, epsilon, grid, inv_idx }
     }
 
     /// Uniform table (QSGD / Uniform-THC style), for the ablation (Tab 6).
@@ -66,12 +88,41 @@ impl QTable {
     /// Bracket a normalized magnitude m ∈ [0, 1]: returns (lo_idx, p_up)
     /// where quantizing rounds to lo_idx+1 with probability p_up and lo_idx
     /// otherwise. Exact grid hits return p_up = 0.
+    ///
+    /// The lookup is the inverse-index table: the bucket entry is the
+    /// binary search's answer at the bucket's lower bound, and the true
+    /// answer is reached by a short advance within the bucket (same
+    /// `g < m` predicate, so the result is bit-identical to
+    /// [`QTable::bracket_search`] — pinned by a dense test). Unlike the
+    /// log-depth search, the hot path has no data-dependent branch
+    /// ladder, which keeps the surrounding per-lane quantize loops of
+    /// the codecs from serializing on bracket mispredicts.
     #[inline]
     pub fn bracket(&self, m: f32) -> (usize, f32) {
         debug_assert!((0.0..=1.0 + 1e-4).contains(&m), "m={m} out of [0,1]");
         let m = m.clamp(0.0, 1.0);
+        // sign-masked so a (domain-violating) -0.0 keys like +0.0
+        let k = ((m.to_bits() & 0x7FFF_FFFF) >> INV_SHIFT) as usize;
+        let mut hi = self.inv_idx[k] as usize;
+        while hi < self.grid.len() && self.grid[hi] < m {
+            hi += 1;
+        }
+        self.finish_bracket(m, hi)
+    }
+
+    /// Reference bracketing via binary search over the grid — the
+    /// oracle the table-driven [`QTable::bracket`] is tested against.
+    #[inline]
+    pub fn bracket_search(&self, m: f32) -> (usize, f32) {
+        let m = m.clamp(0.0, 1.0);
         // grid is ascending with grid[0]=0, grid[last]=1
-        let hi = self.grid.partition_point(|&g| g < m);
+        self.finish_bracket(m, self.grid.partition_point(|&g| g < m))
+    }
+
+    /// Shared tail of both bracket paths: `hi` is
+    /// `partition_point(g < m)`.
+    #[inline]
+    fn finish_bracket(&self, m: f32, hi: usize) -> (usize, f32) {
         if hi == 0 {
             return (0, 0.0);
         }
@@ -204,6 +255,49 @@ mod tests {
         assert!((p - 0.5).abs() < 1e-5);
         // clamps slightly-out-of-range input (fp noise)
         assert_eq!(t.bracket(1.0 + 5e-5), (3, 0.0));
+    }
+
+    /// The inverse-index table must reproduce the binary search bit for
+    /// bit everywhere it matters: every grid point, both its f32
+    /// neighbours, interval midpoints, every bucket boundary (and *its*
+    /// neighbours), plus a dense random sweep — across uniform and
+    /// non-uniform tables at every paper bitwidth.
+    #[test]
+    fn lut_bracket_is_bit_exact() {
+        for (bits, eps) in [(1u32, 0.25), (3, 0.0), (3, 0.25), (7, 0.05), (7, 0.25)] {
+            let t = QTable::nonuniform(bits, eps);
+            let mut probe: Vec<f32> = vec![0.0, 1.0];
+            for w in t.grid.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                probe.extend([a, b, (a + b) * 0.5]);
+                probe.push(f32::from_bits(a.to_bits() + 1));
+                if b.to_bits() > 0 {
+                    probe.push(f32::from_bits(b.to_bits() - 1));
+                }
+            }
+            for k in 0..INV_BUCKETS as u32 {
+                let bound = f32::from_bits(k << INV_SHIFT);
+                if (0.0..=1.0).contains(&bound) {
+                    probe.push(bound);
+                    probe.push(f32::from_bits(bound.to_bits() + 1));
+                    if bound.to_bits() > 0 {
+                        probe.push(f32::from_bits(bound.to_bits() - 1));
+                    }
+                }
+            }
+            let mut rng = Pcg::new(0x1D9);
+            probe.extend((0..8192).map(|_| rng.next_f32()));
+            for &m in &probe {
+                let (lut_lo, lut_p) = t.bracket(m);
+                let (ref_lo, ref_p) = t.bracket_search(m);
+                assert_eq!(lut_lo, ref_lo, "bits={bits} eps={eps} m={m}");
+                assert_eq!(
+                    lut_p.to_bits(),
+                    ref_p.to_bits(),
+                    "bits={bits} eps={eps} m={m}: p_up diverged"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,958 @@
+//! The event-driven fleet engine: executes the *same* schedules with the
+//! *same* kernels and the *same* congestion pricing as
+//! [`AllReduceEngine`](crate::collective::AllReduceEngine), but as a
+//! discrete-event simulation — per-worker barriers instead of global
+//! stage barriers, one OS thread total instead of one per worker.
+//!
+//! ## Execution model
+//!
+//! Per round, each worker walks the combined stage sequence
+//! (reduce-scatter stages, then all-gather stages). A worker's stage-σ
+//! **barrier** arms with the number of its stage-σ sends plus receives
+//! (from [`stage_census`]); it resolves when all of them have completed
+//! *and* the worker's stage-(σ−1) barrier has resolved. Resolution time
+//! is the max of the completion times and the previous barrier — at
+//! which instant the worker's stage-(σ+1) sends become *eligible*.
+//!
+//! All sends becoming eligible at a **bit-identical** virtual time form
+//! one batch: their kernels run (grouped by producing worker on the
+//! engine-style [`WorkerPool`]), and the batch is priced by a single
+//! [`NetworkModel::stage_time_congested`] call with flows in global
+//! schedule order. With zero jitter every worker resolves every barrier
+//! at the same instant, so batches collapse to exactly the synchronous
+//! engine's stages — same flows, same order, same `now += dt` walk —
+//! which is what makes the no-jitter run **bit-identical** in both the
+//! reduced values and the virtual phase times (pinned by
+//! `tests/fleet_invariants`). Under jitter, a batch prices only the
+//! flows that start at its instant (a fluid approximation: transfers
+//! already in flight from earlier batches do not contend), and payload
+//! accumulation stays deterministic regardless of arrival order because
+//! inbox entries carry their global schedule index and are consumed in
+//! that order.
+//!
+//! ## What the sync engine cannot express
+//!
+//! Per-worker compute jitter ([`StragglerModel`]) delays a worker's
+//! first reduce-scatter eligibility — metadata (norms) is computable
+//! incrementally during the backward pass, but compression waits on the
+//! full gradient — so a straggler's delay propagates through the
+//! aggregation arborescence instead of being a flat additive term.
+//! Link flaps ride the existing multi-tenant pricing
+//! ([`net_with_flaps`]). Elastic membership is handled one level up:
+//! the fleet driver rebuilds the engine at the worker count a
+//! [`super::MembershipPlan`] dictates, and the rebuild cost is what
+//! `repro --id fleet` measures.
+//!
+//! ## Memory at fleet scale
+//!
+//! Nothing here is quadratic in resident memory: the inbox is a sparse
+//! map over in-flight `(worker, chunk)` pairs, barriers are `O(n ·
+//! stages)`, and the per-stage schedules are materialized by the
+//! existing [`Topology`] builders. The dominant cost is the caller's
+//! `n` gradient vectors.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+use crate::codec::{GradCodec, HopCtx, MetaOp, WorkerScratch};
+use crate::collective::allreduce::{hop_context, produce_hop, KernelCounters, RoundReport};
+use crate::collective::network::{LinkClass, NetworkModel};
+use crate::collective::topology::{stage_census, Schedule, Topology, TopologyError};
+use crate::metrics::virtualtime::{CommPhase, PhaseClock};
+use crate::util::par;
+use crate::util::pool::WorkerPool;
+
+use super::event::EventQueue;
+use super::scenario::{net_with_flaps, LinkFlap, StragglerModel};
+
+/// What the event loop observed beyond the [`RoundReport`]: simulation
+/// size, the virtual span including straggler stalls, and per-worker
+/// finish times (the raw material of tail-latency ablations).
+#[derive(Clone, Debug, Default)]
+pub struct EventStats {
+    /// events popped from the queue this round
+    pub events: u64,
+    /// priced send batches (== reduce-scatter + all-gather stages in
+    /// the no-jitter case)
+    pub batches: u64,
+    /// virtual time from `t0` to the last barrier resolution
+    pub span_s: f64,
+    /// span minus the busy phase times: idle time injected by jitter,
+    /// clamped at zero (without jitter the difference is float noise
+    /// from the span subtraction, not an exact zero)
+    pub stall_s: f64,
+    /// the largest compute delay drawn this round
+    pub max_delay_s: f64,
+    /// per-worker virtual time of the final barrier resolution
+    pub worker_finish_s: Vec<f64>,
+}
+
+/// Reusable per-engine scratch: per-worker kernel scratch and a payload
+/// arena free list, carried across rounds so the steady-state hop path
+/// reuses warm capacity. Unlike [`crate::codec::ScratchPool`] this
+/// holds **no n² inbox spine** — the event engine's inbox is sparse —
+/// which is what keeps four-digit worker counts tractable.
+#[derive(Default)]
+pub struct FleetScratch {
+    workers: Vec<WorkerScratch>,
+    bufs: Vec<Vec<u8>>,
+}
+
+impl FleetScratch {
+    /// Fresh, empty scratch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, n: usize) {
+        if self.workers.len() < n {
+            self.workers.resize_with(n, WorkerScratch::default);
+        }
+    }
+
+    fn take_buf(&mut self) -> Vec<u8> {
+        self.bufs.pop().unwrap_or_default()
+    }
+}
+
+/// What one send does when its batch executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SendKind {
+    /// reduce-scatter hop: run [`produce_hop`], deliver into the inbox
+    Reduce,
+    /// all-gather forward of an already-finalized broadcast payload
+    Forward,
+    /// the sink's first all-gather send: finalize the broadcast payload
+    /// (fused kernel over the completed inbox), then forward it
+    Finalize,
+}
+
+/// One send inside a timestamp batch. `(stage, pos)` is its global
+/// schedule coordinate — batch flows sort by it, and reduce-scatter
+/// deliveries are tagged with it so receivers accumulate in schedule
+/// order no matter when payloads arrived.
+struct BatchSend {
+    stage: u32,
+    pos: u32,
+    from: u32,
+    to: u32,
+    chunk: u32,
+    kind: SendKind,
+    /// inbox payloads consumed by the kernel, already in schedule order
+    received: Vec<(Vec<u8>, u32)>,
+    /// the produced payload (Reduce / Finalize)
+    out: Vec<u8>,
+    summed: u32,
+    /// wire bytes of this send
+    bytes: u64,
+}
+
+/// All kernel sends of one producing worker within a batch — the unit
+/// the [`WorkerPool`] distributes, mirroring the sync engine's stage
+/// executor (a worker's sends run in schedule order, so payloads are
+/// byte-identical for any executor count).
+#[derive(Default)]
+struct KernelJob {
+    w: u32,
+    scratch: WorkerScratch,
+    recycle: Vec<Vec<u8>>,
+    counters: KernelCounters,
+    /// `(slot-in-batch, send)` pairs, in batch order
+    sends: Vec<(usize, BatchSend)>,
+}
+
+/// An event in the round's queue.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// worker `w`'s sends of combined stage `stage` become available
+    Eligible { w: u32, stage: u32 },
+    /// priced batch `batch` finishes its transfers
+    Complete { batch: u32 },
+}
+
+/// Per-round simulation state: barriers, the queue, in-flight batches,
+/// the sparse inbox and the broadcast table. Kernel inputs (codecs,
+/// preprocessed gradients, ranges) live outside so the borrows stay
+/// disjoint.
+struct SimState {
+    s_total: usize,
+    s_rs: usize,
+    /// outstanding completions per `(worker, stage)`, flattened
+    /// `w * s_total + σ`
+    remaining: Vec<u32>,
+    /// latest completion time seen per `(worker, stage)`
+    latest: Vec<f64>,
+    /// the worker's send count per `(worker, stage)` (from the census)
+    send_count: Vec<u32>,
+    /// CSR send index per combined stage: hop positions grouped by
+    /// sender in hop order (`stage_pos[σ][stage_starts[σ][w] ..
+    /// stage_starts[σ][w+1]]`) — eligibility lookup must not scan whole
+    /// stages, which would be O(n³) per round
+    stage_starts: Vec<Vec<u32>>,
+    stage_pos: Vec<Vec<u32>>,
+    /// index of the last resolved stage per worker (−1 = none)
+    resolved: Vec<i32>,
+    /// resolution time of that stage (bootstrap: the worker's ready
+    /// time)
+    done: Vec<f64>,
+    /// virtual finish time per worker
+    finish: Vec<f64>,
+    queue: EventQueue<Ev>,
+    /// in-flight batches by id
+    batches: Vec<Option<Vec<BatchSend>>>,
+    /// payloads delivered to `(worker, chunk)`, tagged with the global
+    /// schedule index of the hop that produced them
+    inbox: HashMap<(u32, u32), Vec<(u64, Vec<u8>, u32)>>,
+    /// finalized broadcast payload per chunk
+    broadcast: Vec<Option<(Vec<u8>, u32)>>,
+}
+
+impl SimState {
+    /// Called after `resolved[w]` advanced: push the worker's next
+    /// eligibility, or cascade through stages it does not participate
+    /// in, or record its finish.
+    fn arm_next(&mut self, w: usize) {
+        loop {
+            let next = (self.resolved[w] + 1) as usize;
+            if next >= self.s_total {
+                self.finish[w] = self.done[w];
+                return;
+            }
+            let idx = w * self.s_total + next;
+            if self.send_count[idx] > 0 {
+                self.queue.push(self.done[w], Ev::Eligible { w: w as u32, stage: next as u32 });
+                return; // its own completions will drive resolution
+            }
+            if self.remaining[idx] > 0 {
+                return; // receive-only stage: deliveries drive it
+            }
+            // no participation at all: resolves instantly
+            self.resolved[w] = next as i32;
+        }
+    }
+
+    /// One transfer of `(w, stage)` completed at `t`.
+    fn complete_one(&mut self, w: usize, stage: usize, t: f64) {
+        let idx = w * self.s_total + stage;
+        if t > self.latest[idx] {
+            self.latest[idx] = t;
+        }
+        debug_assert!(self.remaining[idx] > 0, "over-completion at worker {w} stage {stage}");
+        self.remaining[idx] -= 1;
+        if self.remaining[idx] == 0 && self.resolved[w] + 1 == stage as i32 {
+            if self.latest[idx] > self.done[w] {
+                self.done[w] = self.latest[idx];
+            }
+            self.resolved[w] = stage as i32;
+            self.arm_next(w);
+        }
+    }
+}
+
+/// The event-driven execution backend. Same inputs and outputs as
+/// [`crate::collective::AllReduceEngine`] (topology + net, one round
+/// per call) plus the scenario axes: [`StragglerModel`] compute jitter
+/// and [`LinkFlap`] capacity spikes. See the module docs for the
+/// execution model and the bit-identity contract.
+pub struct EventEngine {
+    /// the schedule source (shared with the sync engine)
+    pub topology: Topology,
+    /// the priced fabric (shared with the sync engine)
+    pub net: NetworkModel,
+    /// per-(round, worker) compute jitter; [`StragglerModel::none`] is
+    /// the bit-identity configuration
+    pub straggler: StragglerModel,
+    /// transient capacity losses layered onto `net` as one-shot tenants
+    pub flaps: Vec<LinkFlap>,
+    /// compute the exact sum and record vNMSE (costs an extra O(nd)
+    /// pass)
+    pub measure_vnmse: bool,
+    /// executor budget for kernel batches (1 = fully sequential;
+    /// results are identical for any value)
+    pub threads: usize,
+    pool: OnceLock<WorkerPool>,
+}
+
+impl EventEngine {
+    /// Build an event engine over `topology` priced by `net`, with no
+    /// jitter and no flaps — the configuration that reproduces the sync
+    /// engine bit for bit.
+    pub fn new(topology: Topology, net: NetworkModel) -> Self {
+        EventEngine {
+            topology,
+            net,
+            straggler: StragglerModel::none(),
+            flaps: Vec::new(),
+            measure_vnmse: true,
+            threads: par::num_threads(),
+            pool: OnceLock::new(),
+        }
+    }
+
+    /// The engine's persistent worker pool for kernel batches, spawned
+    /// lazily (a `threads = 1` engine never spawns a thread).
+    fn worker_pool(&self) -> &WorkerPool {
+        self.pool.get_or_init(|| {
+            WorkerPool::new(self.threads.min(par::num_threads()).saturating_sub(1))
+        })
+    }
+
+    /// Run a `&mut`-codec round-boundary method once per worker,
+    /// collecting per-worker vectors in worker order — the same
+    /// dispatch as the sync engine; each worker's computation is
+    /// independent, so results are identical for any thread count.
+    fn par_map_codecs<F>(
+        &self,
+        codecs: &mut [Box<dyn GradCodec>],
+        threads: usize,
+        f: F,
+    ) -> Vec<Vec<f32>>
+    where
+        F: Fn(usize, &mut dyn GradCodec) -> Vec<f32> + Sync,
+    {
+        let mut tasks: Vec<(usize, &mut Box<dyn GradCodec>, Vec<f32>)> =
+            codecs.iter_mut().enumerate().map(|(i, c)| (i, c, Vec::new())).collect();
+        if threads > 1 && tasks.len() > 1 {
+            self.worker_pool().run(&mut tasks, threads, |_, t| {
+                let (i, c, out) = t;
+                *out = f(*i, c.as_mut());
+            });
+        } else {
+            for t in tasks.iter_mut() {
+                let (i, c, out) = t;
+                *out = f(*i, c.as_mut());
+            }
+        }
+        tasks.into_iter().map(|t| t.2).collect()
+    }
+
+    /// Run one round, allocating fresh scratch. Call sites running many
+    /// rounds should hold a [`FleetScratch`] and use
+    /// [`EventEngine::run_scratch`].
+    pub fn run(
+        &self,
+        grads: &[Vec<f32>],
+        codecs: &mut [Box<dyn GradCodec>],
+        round: u32,
+        t0: f64,
+    ) -> Result<(Vec<f32>, RoundReport, EventStats), TopologyError> {
+        let mut scratch = FleetScratch::new();
+        self.run_scratch(grads, codecs, round, t0, &mut scratch)
+    }
+
+    /// Run one synchronization round under the event clock. `grads[i]`
+    /// is worker i's local gradient; returns the aggregated **sum**
+    /// (bit-identical to the sync engine), the round report (phase
+    /// times and bytes bit-identical in the no-jitter / no-flap case),
+    /// and the event-level statistics.
+    pub fn run_scratch(
+        &self,
+        grads: &[Vec<f32>],
+        codecs: &mut [Box<dyn GradCodec>],
+        round: u32,
+        t0: f64,
+        scratch: &mut FleetScratch,
+    ) -> Result<(Vec<f32>, RoundReport, EventStats), TopologyError> {
+        let n = grads.len();
+        self.topology.validate(n)?;
+        assert_eq!(codecs.len(), n);
+        let d = grads[0].len();
+        assert!(grads.iter().all(|g| g.len() == d));
+        let threads = self.threads.clamp(1, n.max(1));
+        let net = net_with_flaps(&self.net, &self.flaps);
+        let mut report = RoundReport::default();
+        let mut clock = PhaseClock::new(t0);
+
+        // Round-boundary and broadcast-decode contexts: identical to the
+        // sync engine's `mk_ctx`.
+        let mk_ctx = |worker: u32, summed: u32| {
+            HopCtx::flat(worker, n as u32, round, summed).at_broadcast()
+        };
+
+        // ---- metadata all-reduce: identical computation and identical
+        // per-stage pricing walk as the sync engine ----
+        let metas: Vec<Vec<f32>> = self.par_map_codecs(codecs, threads, |i, c| {
+            c.metadata(&grads[i], &mk_ctx(i as u32, 1))
+        });
+        let mlen = metas[0].len();
+        assert!(metas.iter().all(|m| m.len() == mlen), "metadata length disagreement");
+        let op = codecs[0].metadata_op();
+        let mut agg_meta = metas[0].clone();
+        match op {
+            MetaOp::Sum => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a += v;
+                    }
+                }
+            }
+            MetaOp::Max => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a = a.max(v);
+                    }
+                }
+            }
+        }
+        if mlen > 0 {
+            let per_stage = (mlen.div_ceil(n) * 4) as u64;
+            let stage_msgs = vec![per_stage; n];
+            for _ in 0..2 * (n - 1) {
+                let dt = net.stage_time(&stage_msgs, clock.now());
+                clock.advance(CommPhase::Meta, dt);
+            }
+            report.meta_bytes = (2 * (n - 1) * n) as u64 * per_stage;
+        }
+
+        // ---- preprocess ----
+        let pres: Vec<Vec<f32>> = {
+            let agg = &agg_meta;
+            self.par_map_codecs(codecs, threads, |i, c| {
+                c.begin_round(&grads[i], agg, &mk_ctx(i as u32, 1))
+            })
+        };
+        let padded = pres[0].len();
+        assert!(pres.iter().all(|p| p.len() == padded), "padded length disagreement");
+        let align = codecs[0].chunk_alignment();
+        let ranges = crate::codec::chunk_ranges(padded, n, align);
+
+        // ---- build schedules, per-worker barriers, the send index ----
+        let rs_sched = self.topology.reduce_scatter(n);
+        let ag_sched = self.topology.all_gather(n);
+        let s_rs = rs_sched.len();
+        let s_total = s_rs + ag_sched.len();
+        report.stage_times_s.reserve(s_rs);
+        let mut remaining = vec![0u32; n * s_total];
+        let mut send_count = vec![0u32; n * s_total];
+        let mut stage_starts: Vec<Vec<u32>> = Vec::with_capacity(s_total);
+        let mut stage_pos: Vec<Vec<u32>> = Vec::with_capacity(s_total);
+        for (phase_off, sched) in [(0usize, &rs_sched), (s_rs, &ag_sched)] {
+            for (s, counts) in stage_census(sched, n).iter().enumerate() {
+                for (w, &(sends, recvs)) in counts.iter().enumerate() {
+                    remaining[w * s_total + phase_off + s] = sends + recvs;
+                    send_count[w * s_total + phase_off + s] = sends;
+                }
+            }
+            for hops in sched.iter() {
+                let mut starts = vec![0u32; n + 1];
+                for h in hops {
+                    starts[h.from as usize + 1] += 1;
+                }
+                for w in 0..n {
+                    starts[w + 1] += starts[w];
+                }
+                let mut cursor = starts.clone();
+                let mut pos = vec![0u32; hops.len()];
+                for (p, h) in hops.iter().enumerate() {
+                    pos[cursor[h.from as usize] as usize] = p as u32;
+                    cursor[h.from as usize] += 1;
+                }
+                stage_starts.push(starts);
+                stage_pos.push(pos);
+            }
+        }
+
+        // ---- straggler draws + bootstrap ----
+        scratch.ensure(n);
+        let mut stats = EventStats::default();
+        let mut st = SimState {
+            s_total,
+            s_rs,
+            remaining,
+            latest: vec![f64::NEG_INFINITY; n * s_total],
+            send_count,
+            stage_starts,
+            stage_pos,
+            resolved: vec![-1; n],
+            done: vec![0.0; n],
+            finish: vec![0.0; n],
+            queue: EventQueue::new(),
+            batches: Vec::new(),
+            inbox: HashMap::new(),
+            broadcast: (0..n).map(|_| None).collect(),
+        };
+        let meta_end = clock.now();
+        for w in 0..n {
+            let delay = self.straggler.delay_s(round, w as u32);
+            if delay > stats.max_delay_s {
+                stats.max_delay_s = delay;
+            }
+            // jitter lands *after* metadata (norms are computable during
+            // the backward pass; compression waits on the full gradient),
+            // so `max(meta_end, t0 + 0.0) == meta_end` exactly in the
+            // no-jitter case
+            st.done[w] = meta_end.max(t0 + delay);
+            st.arm_next(w);
+        }
+
+        // ---- the event loop ----
+        let codecs_ro: &[Box<dyn GradCodec>] = &*codecs;
+        let mut pending: Vec<BatchSend> = Vec::new();
+        while let Some(ev) = st.queue.pop() {
+            let t = ev.time;
+            pending.clear();
+            handle_event(ev.kind, t, &mut st, &rs_sched, &ag_sched, scratch, &mut pending);
+            while st.queue.next_is_at(t) {
+                let ev = st.queue.pop().expect("peeked");
+                handle_event(ev.kind, t, &mut st, &rs_sched, &ag_sched, scratch, &mut pending);
+            }
+            if pending.is_empty() {
+                continue;
+            }
+            // one timestamp batch: sort into global schedule order, run
+            // kernels, price as one congestion-aware stage
+            pending.sort_unstable_by_key(|s| (s.stage, s.pos));
+            let batch = std::mem::take(&mut pending);
+            let batch = self.run_kernels(
+                batch, codecs_ro, &pres, &ranges, n, round, threads, scratch, &mut st,
+                &mut report,
+            );
+            let mut flows: Vec<(u64, LinkClass, u32, u32)> = Vec::with_capacity(batch.len());
+            let mut any_rs = false;
+            for s in &batch {
+                flows.push((
+                    s.bytes,
+                    self.topology.link_class(s.from, s.to),
+                    self.topology.node_of(s.from),
+                    self.topology.node_of(s.to),
+                ));
+                if (s.stage as usize) < s_rs {
+                    any_rs = true;
+                    report.rs_bytes += s.bytes;
+                } else {
+                    report.ag_bytes += s.bytes;
+                }
+            }
+            let dt = net.stage_time_congested(&flows, t);
+            if any_rs {
+                clock.charge_at(CommPhase::ReduceScatter, t, dt);
+                report.stage_times_s.push(dt);
+            } else {
+                clock.charge_at(CommPhase::AllGather, t, dt);
+            }
+            let bid = st.batches.len() as u32;
+            st.batches.push(Some(batch));
+            stats.batches += 1;
+            st.queue.push(t + dt, Ev::Complete { batch: bid });
+        }
+        stats.events = st.queue.popped();
+        assert!(
+            st.resolved.iter().all(|&r| r == s_total as i32 - 1),
+            "event backend deadlocked before completing the round"
+        );
+        debug_assert!(st.inbox.values().all(|v| v.is_empty()));
+        for &f in &st.finish {
+            clock.observe(f);
+        }
+
+        // ---- decode + postprocess: identical to the sync engine ----
+        let mut summed_pre = vec![0.0f32; padded];
+        for (c, slot) in st.broadcast.iter_mut().enumerate() {
+            let (payload, k) = slot.take().expect("every chunk finalized");
+            let range = ranges[c].clone();
+            if !range.is_empty() {
+                codecs_ro[0].decompress_into(
+                    &payload,
+                    range.clone(),
+                    &mk_ctx(0, k),
+                    &mut summed_pre[range],
+                );
+                report.decompress_calls += 1;
+            }
+            scratch.bufs.push(payload);
+        }
+        let result = {
+            let sp = &summed_pre;
+            let outs = self.par_map_codecs(codecs, threads, |i, c| {
+                c.end_round(sp.clone(), &mk_ctx(i as u32, n as u32))
+            });
+            outs.into_iter().next().expect("n >= 1 workers")
+        };
+        report.overflow_events = codecs.iter().map(|c| c.overflow_count()).sum();
+        if self.measure_vnmse {
+            // row-major exact f64 sum — the engine's exact element order
+            let mut exact = vec![0.0f64; d];
+            for g in grads {
+                for (e, &v) in exact.iter_mut().zip(g) {
+                    *e += v as f64;
+                }
+            }
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (e, &r) in exact.iter().zip(result.iter()) {
+                let diff = e - r as f64;
+                num += diff * diff;
+                den += e * e;
+            }
+            report.vnmse = if den > 0.0 { num / den } else { 0.0 };
+        }
+
+        report.meta_time_s = clock.meta_s;
+        report.rs_time_s = clock.rs_s;
+        report.ag_time_s = clock.ag_s;
+        stats.span_s = clock.span_s();
+        stats.stall_s = (stats.span_s - report.comm_time_s()).max(0.0);
+        stats.worker_finish_s = st.finish;
+        Ok((result, report, stats))
+    }
+
+    /// Execute a batch's kernels grouped by producing worker (on the
+    /// worker pool when the executor budget allows), filling payloads,
+    /// byte counts and counters, then publish finalized broadcast
+    /// payloads. Returns the batch in its original (schedule) order.
+    #[allow(clippy::too_many_arguments)]
+    fn run_kernels(
+        &self,
+        batch: Vec<BatchSend>,
+        codecs: &[Box<dyn GradCodec>],
+        pres: &[Vec<f32>],
+        ranges: &[Range<usize>],
+        n: usize,
+        round: u32,
+        threads: usize,
+        scratch: &mut FleetScratch,
+        st: &mut SimState,
+        report: &mut RoundReport,
+    ) -> Vec<BatchSend> {
+        let mut slots: Vec<Option<BatchSend>> = Vec::with_capacity(batch.len());
+        let mut jobs: Vec<KernelJob> = Vec::new();
+        let mut job_of: HashMap<u32, usize> = HashMap::new();
+        for mut s in batch {
+            match s.kind {
+                SendKind::Forward => {
+                    // forwarded payloads exist before the batch: the sink
+                    // published its chunk when it first sent it, and a
+                    // non-sink only forwards after receiving
+                    s.bytes = st.broadcast[s.chunk as usize]
+                        .as_ref()
+                        .map(|(p, _)| p.len() as u64)
+                        .expect("forwarded chunk must be finalized");
+                    slots.push(Some(s));
+                }
+                SendKind::Reduce | SendKind::Finalize => {
+                    let ji = *job_of.entry(s.from).or_insert_with(|| {
+                        jobs.push(KernelJob {
+                            w: s.from,
+                            scratch: std::mem::take(&mut scratch.workers[s.from as usize]),
+                            ..KernelJob::default()
+                        });
+                        jobs.len() - 1
+                    });
+                    s.out = scratch.take_buf();
+                    let slot = slots.len();
+                    slots.push(None);
+                    jobs[ji].sends.push((slot, s));
+                }
+            }
+        }
+        let topology = &self.topology;
+        let exec = |job: &mut KernelJob| {
+            let codec = codecs[job.w as usize].as_ref();
+            let pre = &pres[job.w as usize];
+            for (_, s) in job.sends.iter_mut() {
+                // a Finalize is the sink's broadcast production: the
+                // shared context helper marks it via `from == to`
+                let target = if s.kind == SendKind::Finalize { s.from } else { s.to };
+                let ctx = hop_context(topology, n, round, s.from, target);
+                s.summed = produce_hop(
+                    codec,
+                    pre,
+                    &mut s.received,
+                    ranges[s.chunk as usize].clone(),
+                    &ctx,
+                    &mut job.scratch,
+                    &mut s.out,
+                    &mut job.recycle,
+                    &mut job.counters,
+                );
+                s.bytes = s.out.len() as u64;
+            }
+        };
+        if threads > 1 && jobs.len() > 1 {
+            self.worker_pool().run(&mut jobs, threads, |_, job| exec(job));
+        } else {
+            for job in jobs.iter_mut() {
+                exec(job);
+            }
+        }
+        for mut job in jobs {
+            report.absorb(&job.counters);
+            scratch.workers[job.w as usize] = std::mem::take(&mut job.scratch);
+            scratch.bufs.append(&mut job.recycle);
+            for (slot, mut s) in job.sends.drain(..) {
+                if s.kind == SendKind::Finalize {
+                    debug_assert_eq!(s.summed, n as u32, "sink must aggregate all workers");
+                    let payload = std::mem::take(&mut s.out);
+                    s.bytes = payload.len() as u64;
+                    st.broadcast[s.chunk as usize] = Some((payload, s.summed));
+                    s.kind = SendKind::Forward;
+                }
+                slots[slot] = Some(s);
+            }
+        }
+        slots.into_iter().map(|s| s.expect("every slot filled")).collect()
+    }
+}
+
+/// Remove and order the payloads delivered to `(worker, chunk)`: sorted
+/// by the global schedule index of their producing hop, so accumulation
+/// order is schedule order regardless of virtual arrival order.
+fn take_inbox(
+    inbox: &mut HashMap<(u32, u32), Vec<(u64, Vec<u8>, u32)>>,
+    worker: u32,
+    chunk: u32,
+) -> Vec<(Vec<u8>, u32)> {
+    let mut tagged = inbox.remove(&(worker, chunk)).unwrap_or_default();
+    tagged.sort_unstable_by_key(|e| e.0);
+    tagged.into_iter().map(|(_, payload, k)| (payload, k)).collect()
+}
+
+/// Process one event. A `Complete` delivers payloads and advances
+/// barriers (possibly cascading same-time eligibilities back into the
+/// queue); an `Eligible` expands the worker's stage sends into
+/// `pending` for the current timestamp batch.
+fn handle_event(
+    ev: Ev,
+    t: f64,
+    st: &mut SimState,
+    rs_sched: &Schedule,
+    ag_sched: &Schedule,
+    scratch: &mut FleetScratch,
+    pending: &mut Vec<BatchSend>,
+) {
+    match ev {
+        Ev::Complete { batch } => {
+            let sends = st.batches[batch as usize].take().expect("a batch completes once");
+            for s in sends {
+                if s.kind == SendKind::Reduce {
+                    let tag = ((s.stage as u64) << 32) | s.pos as u64;
+                    st.inbox.entry((s.to, s.chunk)).or_default().push((tag, s.out, s.summed));
+                } else {
+                    // all-gather payload content lives in the broadcast
+                    // table; recycle the (empty) per-send arena
+                    scratch.bufs.push(s.out);
+                }
+                st.complete_one(s.from as usize, s.stage as usize, t);
+                st.complete_one(s.to as usize, s.stage as usize, t);
+            }
+        }
+        Ev::Eligible { w, stage } => {
+            let sigma = stage as usize;
+            let lo = st.stage_starts[sigma][w as usize] as usize;
+            let hi = st.stage_starts[sigma][w as usize + 1] as usize;
+            for k in lo..hi {
+                let pos = st.stage_pos[sigma][k];
+                let h = if sigma < st.s_rs {
+                    rs_sched[sigma][pos as usize]
+                } else {
+                    ag_sched[sigma - st.s_rs][pos as usize]
+                };
+                debug_assert_eq!(h.from, w);
+                let (kind, received) = if sigma < st.s_rs {
+                    (SendKind::Reduce, take_inbox(&mut st.inbox, h.from, h.chunk))
+                } else if h.from == h.chunk && st.broadcast[h.chunk as usize].is_none() {
+                    // the sink's first forward of its own chunk: its
+                    // barrier chain guarantees the inbox is complete
+                    (SendKind::Finalize, take_inbox(&mut st.inbox, h.from, h.chunk))
+                } else {
+                    (SendKind::Forward, Vec::new())
+                };
+                pending.push(BatchSend {
+                    stage,
+                    pos,
+                    from: h.from,
+                    to: h.to,
+                    chunk: h.chunk,
+                    kind,
+                    received,
+                    out: Vec::new(),
+                    summed: 0,
+                    bytes: 0,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::bf16::Bf16Codec;
+    use crate::codec::dynamiq::Dynamiq;
+    use crate::collective::topology::Level;
+    use crate::collective::AllReduceEngine;
+    use crate::util::rng::Pcg;
+
+    fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|i| {
+                let mut rng = Pcg::new(seed + i as u64);
+                let mut g = vec![0.0f32; d];
+                let mut region = 1.0f32;
+                for (k, v) in g.iter_mut().enumerate() {
+                    if k % 128 == 0 {
+                        region = (rng.next_normal() * 1.2).exp();
+                    }
+                    *v = rng.next_normal() * 0.01 * region;
+                }
+                g
+            })
+            .collect()
+    }
+
+    fn mk_codecs(name: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+        (0..n)
+            .map(|_| -> Box<dyn GradCodec> {
+                match name {
+                    "bf16" => Box::new(Bf16Codec::new()),
+                    "dynamiq" => Box::new(Dynamiq::paper_default()),
+                    _ => unreachable!(),
+                }
+            })
+            .collect()
+    }
+
+    /// The tentpole invariant at unit-test scale (the full matrix lives
+    /// in `tests/fleet_invariants`): a no-jitter event round is
+    /// bit-identical to the sync engine in values, bytes and times.
+    #[test]
+    fn no_jitter_matches_sync_engine_bit_for_bit() {
+        for (scheme, topo, n) in [
+            ("bf16", Topology::Ring, 5),
+            ("dynamiq", Topology::Butterfly, 8),
+            ("dynamiq", Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+        ] {
+            let g = grads(n, 4096, 11);
+            let net = NetworkModel::hierarchical_100g(48.0);
+            let mut sync_codecs = mk_codecs(scheme, n);
+            let sync = AllReduceEngine::new(topo, net.clone());
+            let (want, want_rep) = sync.run(&g, &mut sync_codecs, 0, 0.0).unwrap();
+            let mut ev_codecs = mk_codecs(scheme, n);
+            let eng = EventEngine::new(topo, net);
+            let (got, got_rep, stats) = eng.run(&g, &mut ev_codecs, 0, 0.0).unwrap();
+            assert_eq!(want, got, "{scheme}/{} n={n}: values diverged", topo.name());
+            assert_eq!(want_rep.rs_bytes, got_rep.rs_bytes);
+            assert_eq!(want_rep.ag_bytes, got_rep.ag_bytes);
+            assert_eq!(want_rep.meta_bytes, got_rep.meta_bytes);
+            assert_eq!(want_rep.meta_time_s.to_bits(), got_rep.meta_time_s.to_bits());
+            assert_eq!(want_rep.rs_time_s.to_bits(), got_rep.rs_time_s.to_bits());
+            assert_eq!(want_rep.ag_time_s.to_bits(), got_rep.ag_time_s.to_bits());
+            let want_bits: Vec<u64> =
+                want_rep.stage_times_s.iter().map(|t| t.to_bits()).collect();
+            let got_bits: Vec<u64> =
+                got_rep.stage_times_s.iter().map(|t| t.to_bits()).collect();
+            assert_eq!(want_bits, got_bits, "per-stage trace diverged");
+            // without jitter, batches are exactly the schedule stages
+            assert_eq!(
+                stats.batches as usize,
+                topo.rs_stages(n) + topo.all_gather(n).len()
+            );
+            assert!(stats.stall_s < 1e-12, "no-jitter stall {}", stats.stall_s);
+        }
+    }
+
+    #[test]
+    fn jitter_delays_the_round_but_not_the_values() {
+        let n = 8;
+        let g = grads(n, 4096, 23);
+        let net = NetworkModel::isolated_100g();
+        let mut base_codecs = mk_codecs("dynamiq", n);
+        let base_eng = EventEngine::new(Topology::Butterfly, net.clone());
+        let (want, base_rep, base_stats) = base_eng.run(&g, &mut base_codecs, 0, 0.0).unwrap();
+        let mut codecs = mk_codecs("dynamiq", n);
+        let mut eng = EventEngine::new(Topology::Butterfly, net);
+        eng.straggler = StragglerModel::parse("uniform:0.01", 7).unwrap();
+        let (got, rep, stats) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
+        // jitter shifts *when* payloads move, never *what* they carry
+        assert_eq!(want, got);
+        assert_eq!(base_rep.rs_bytes, rep.rs_bytes);
+        assert!(stats.max_delay_s > 0.0);
+        // the span absorbs the straggler: at least the largest delay
+        assert!(stats.span_s >= stats.max_delay_s, "{} < {}", stats.span_s, stats.max_delay_s);
+        assert!(stats.span_s > base_stats.span_s);
+        assert!(stats.stall_s > 0.0);
+        // desynchronized workers split stages into more, smaller batches
+        assert!(stats.batches >= base_stats.batches);
+        // and the simulation stays deterministic
+        let mut codecs2 = mk_codecs("dynamiq", n);
+        let (got2, _, stats2) = eng.run(&g, &mut codecs2, 0, 0.0).unwrap();
+        assert_eq!(got, got2);
+        assert_eq!(stats.span_s.to_bits(), stats2.span_s.to_bits());
+    }
+
+    #[test]
+    fn flaps_stretch_the_round_without_touching_bytes() {
+        let n = 8;
+        let g = grads(n, 1 << 15, 31);
+        let net = NetworkModel::isolated_100g();
+        let quiet = EventEngine::new(Topology::Ring, net.clone());
+        let mut codecs = mk_codecs("bf16", n);
+        let (_, quiet_rep, _) = quiet.run(&g, &mut codecs, 0, 0.0).unwrap();
+        let mut flapped = EventEngine::new(Topology::Ring, net);
+        flapped.flaps = vec![LinkFlap { start_s: 0.0, duration_s: 1e6, severity: 2 }];
+        let mut codecs = mk_codecs("bf16", n);
+        let (_, flap_rep, _) = flapped.run(&g, &mut codecs, 0, 0.0).unwrap();
+        assert_eq!(quiet_rep.total_bytes(), flap_rep.total_bytes());
+        assert!(
+            flap_rep.comm_time_s() > quiet_rep.comm_time_s(),
+            "a flap covering the round must slow it: {} vs {}",
+            flap_rep.comm_time_s(),
+            quiet_rep.comm_time_s()
+        );
+    }
+
+    #[test]
+    fn invalid_worker_counts_are_errors_not_panics() {
+        let g = grads(1, 512, 3);
+        let mut codecs = mk_codecs("bf16", 1);
+        let eng = EventEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+        let err = eng.run(&g, &mut codecs, 0, 0.0).unwrap_err();
+        assert_eq!(err, TopologyError::TooFewWorkers { n: 1 });
+        let g = grads(6, 512, 3);
+        let mut codecs = mk_codecs("bf16", 6);
+        let eng = EventEngine::new(Topology::Butterfly, NetworkModel::isolated_100g());
+        let err = eng.run(&g, &mut codecs, 0, 0.0).unwrap_err();
+        assert_eq!(err, TopologyError::NotPowerOfTwo { n: 6 });
+    }
+
+    /// The smallest non-trivial fleet: two workers, one stage each way.
+    #[test]
+    fn two_worker_round_matches_sync_engine() {
+        let g = grads(2, 1024, 5);
+        let net = NetworkModel::isolated_100g();
+        let mut sync_codecs = mk_codecs("bf16", 2);
+        let sync = AllReduceEngine::new(Topology::Ring, net.clone());
+        let (want, want_rep) = sync.run(&g, &mut sync_codecs, 0, 0.0).unwrap();
+        let mut codecs = mk_codecs("bf16", 2);
+        let eng = EventEngine::new(Topology::Ring, net);
+        let (got, got_rep, stats) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
+        assert_eq!(want, got);
+        assert_eq!(want_rep.rs_bytes, got_rep.rs_bytes);
+        assert_eq!(stats.batches, 2);
+    }
+
+    #[test]
+    fn scratch_reuse_across_rounds_is_bit_identical() {
+        let n = 8;
+        let g = grads(n, 4096, 47);
+        let topo = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+        let net = NetworkModel::hierarchical_100g(48.0);
+        let run_rounds = |rounds: u32, scratch: &mut FleetScratch| {
+            let mut codecs = mk_codecs("dynamiq", n);
+            let eng = EventEngine::new(topo, net.clone());
+            let mut last = None;
+            for r in 0..rounds {
+                last = Some(eng.run_scratch(&g, &mut codecs, r, 0.0, scratch).unwrap());
+            }
+            last.unwrap()
+        };
+        let (cold, cold_rep, _) = run_rounds(3, &mut FleetScratch::new());
+        let mut warm_scratch = FleetScratch::new();
+        run_rounds(1, &mut warm_scratch); // pre-warm arenas
+        let (warm, warm_rep, _) = run_rounds(3, &mut warm_scratch);
+        assert_eq!(cold, warm);
+        assert_eq!(cold_rep.rs_bytes, warm_rep.rs_bytes);
+        assert_eq!(cold_rep.compress_calls, warm_rep.compress_calls);
+    }
+}

@@ -1,0 +1,42 @@
+//! The fleet-scale event-driven simulation backend.
+//!
+//! Everything the synchronous [`crate::collective::AllReduceEngine`]
+//! computes, re-executed as a single-threaded discrete-event simulation
+//! so worker counts in the thousands stay tractable: no OS thread per
+//! worker, no n² inbox spine, and a virtual clock that can express what
+//! lockstep stages cannot — per-worker compute jitter (stragglers),
+//! transient link capacity drops (flaps), and elastic membership
+//! between rounds.
+//!
+//! The backend's contract is **bit-identity**: with no jitter and no
+//! flaps, [`EventEngine`] produces the same aggregated values, the same
+//! wire bytes, and the same virtual phase times as the sync engine at
+//! any worker count both can run, because it executes the same
+//! [`crate::collective::Topology`] schedules through the same
+//! [`crate::collective::produce_hop`] kernels under the same
+//! [`crate::collective::NetworkModel`] congestion pricing (the shared
+//! context helper [`crate::collective::hop_context`] pins the codec
+//! contexts). `tests/fleet_invariants` holds the cross-backend matrix;
+//! `python/validate_fleet.py` re-derives the no-jitter virtual times in
+//! an independent implementation.
+//!
+//! Module map:
+//! - [`event`] — the generic virtual-clock event queue (binary heap,
+//!   total f64 order, FIFO ties, bit-exact batch predicate).
+//! - [`scenario`] — fleet scenario axes: [`StragglerModel`] (seeded,
+//!   deterministic per-(round, worker) delay distributions),
+//!   [`LinkFlap`] (one-shot capacity losses expressed as synthetic
+//!   tenants), [`MembershipPlan`] (worker counts per round).
+//! - [`engine`] — the [`EventEngine`] itself plus [`FleetScratch`]
+//!   (cross-round scratch) and [`EventStats`] (span, stall, per-worker
+//!   finish times).
+
+pub mod engine;
+pub mod event;
+pub mod scenario;
+
+pub use engine::{EventEngine, EventStats, FleetScratch};
+pub use event::{Event, EventQueue};
+pub use scenario::{
+    net_with_flaps, JitterDist, LinkFlap, MembershipPlan, StragglerModel,
+};

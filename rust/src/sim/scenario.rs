@@ -1,0 +1,362 @@
+//! Scenario axes of the fleet simulator: compute jitter (stragglers),
+//! link flaps / cost spikes, and elastic membership.
+//!
+//! Everything here is **deterministic**: straggler delays are pure
+//! functions of `(seed, round, worker)` over the counter-based
+//! [`pcg_hash`] (the same PRNG the codecs share with the pallas layer),
+//! flaps are encoded as one-shot synthetic tenants on the *existing*
+//! tenant-aware pricing in [`NetworkModel`], and membership plans are
+//! plain data. Re-running a scenario reproduces it bit for bit — which
+//! is what lets CI pin fleet sweeps as golden values.
+
+use crate::collective::network::{NetworkModel, Tenant};
+use crate::util::rng::pcg_hash;
+
+/// Domain separator for the straggler stream (keeps fleet jitter draws
+/// disjoint from codec rounding and data-generation streams that share
+/// the same `pcg_hash`).
+const STRAGGLER_DOMAIN: u32 = 0x5f1e_e7a1;
+
+/// A per-round compute-delay distribution (seconds).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum JitterDist {
+    /// no jitter: every worker is ready the instant metadata resolves
+    None,
+    /// uniform in `[0, max_s)`
+    Uniform {
+        /// upper bound of the delay (seconds)
+        max_s: f64,
+    },
+    /// exponential with the given mean — the classic memoryless straggler
+    Exp {
+        /// mean delay (seconds)
+        mean_s: f64,
+    },
+    /// log-normal around `median_s` with shape `sigma` — the heavy-tailed
+    /// shape real fleets exhibit (stragglers far beyond the median)
+    LogNormal {
+        /// median delay (seconds); the distribution's `exp(mu)`
+        median_s: f64,
+        /// log-space standard deviation (tail heaviness)
+        sigma: f64,
+    },
+}
+
+/// Seeded per-(round, worker) compute jitter: which workers straggle and
+/// by how much. `frac` limits the affected fraction (1.0 = everyone
+/// draws a delay); unaffected workers get exactly zero.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerModel {
+    /// the delay distribution
+    pub dist: JitterDist,
+    /// fraction of workers affected per round, in `[0, 1]`
+    pub frac: f64,
+    /// stream seed (domain-separated from every other PRNG consumer)
+    pub seed: u32,
+}
+
+impl Default for StragglerModel {
+    fn default() -> Self {
+        StragglerModel { dist: JitterDist::None, frac: 1.0, seed: 0 }
+    }
+}
+
+/// `pcg_hash` output as a uniform f64 in [0, 1) (32 bits of entropy).
+#[inline]
+fn u01(key: u32, index: u32) -> f64 {
+    pcg_hash(key, index) as f64 * (1.0 / 4_294_967_296.0)
+}
+
+/// As [`u01`] but shifted into (0, 1) — safe under `ln`.
+#[inline]
+fn u01_open(key: u32, index: u32) -> f64 {
+    (pcg_hash(key, index) as f64 + 0.5) * (1.0 / 4_294_967_296.0)
+}
+
+impl StragglerModel {
+    /// A model with no jitter (the bit-identity configuration).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Worker `worker`'s compute delay for `round`, in seconds. Pure in
+    /// `(seed, round, worker)`; exactly `0.0` for unaffected workers and
+    /// under [`JitterDist::None`], so the no-jitter run never perturbs
+    /// the virtual clock by even one ulp.
+    pub fn delay_s(&self, round: u32, worker: u32) -> f64 {
+        if self.dist == JitterDist::None || self.frac <= 0.0 {
+            return 0.0;
+        }
+        let key = self
+            .seed
+            .wrapping_add(round.wrapping_mul(0x85eb_ca6b))
+            ^ STRAGGLER_DOMAIN;
+        if self.frac < 1.0 && u01(key ^ 0x0000_a51c, worker) >= self.frac {
+            return 0.0;
+        }
+        match self.dist {
+            JitterDist::None => 0.0,
+            JitterDist::Uniform { max_s } => max_s * u01(key, worker),
+            JitterDist::Exp { mean_s } => -mean_s * u01_open(key, worker).ln(),
+            JitterDist::LogNormal { median_s, sigma } => {
+                // Box–Muller from two independent hash draws
+                let u1 = u01_open(key, worker);
+                let u2 = u01(key ^ 0x9e37_79b9, worker);
+                let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+                median_s * (sigma * z).exp()
+            }
+        }
+    }
+
+    /// Parse the CLI spec `dist:scale[:frac]`:
+    /// `none`, `uniform:0.01`, `exp:0.005`, `exp:0.005:0.25`,
+    /// `lognormal:0.004:0.5` (median:sigma), `lognormal:0.004:0.5:0.1`.
+    /// The seed is supplied separately (it rides the training seed).
+    pub fn parse(spec: &str, seed: u32) -> Result<StragglerModel, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let num = |s: &str| -> Result<f64, String> {
+            s.parse::<f64>().map_err(|_| format!("bad straggler number `{s}` in `{spec}`"))
+        };
+        let (dist, rest) = match parts[0] {
+            "none" => (JitterDist::None, &parts[1..]),
+            "uniform" if parts.len() >= 2 => {
+                (JitterDist::Uniform { max_s: num(parts[1])? }, &parts[2..])
+            }
+            "exp" if parts.len() >= 2 => {
+                (JitterDist::Exp { mean_s: num(parts[1])? }, &parts[2..])
+            }
+            "lognormal" if parts.len() >= 3 => (
+                JitterDist::LogNormal { median_s: num(parts[1])?, sigma: num(parts[2])? },
+                &parts[3..],
+            ),
+            _ => {
+                return Err(format!(
+                    "straggler spec `{spec}` must be none | uniform:MAX[:frac] | \
+                     exp:MEAN[:frac] | lognormal:MEDIAN:SIGMA[:frac]"
+                ))
+            }
+        };
+        let frac = match rest {
+            [] => 1.0,
+            [f] => {
+                let f = num(f)?;
+                if !(0.0..=1.0).contains(&f) {
+                    return Err(format!("straggler frac must be in [0,1], got {f}"));
+                }
+                f
+            }
+            _ => return Err(format!("too many `:` fields in straggler spec `{spec}`")),
+        };
+        Ok(StragglerModel { dist, frac, seed })
+    }
+}
+
+/// The synthetic-tenant period flaps ride (far beyond any simulated
+/// round, so each flap fires exactly once).
+const FLAP_PERIOD_S: f64 = 1e9;
+
+/// A transient capacity loss on the shared fabric: for
+/// `[start_s, start_s + duration_s)` the NIC behaves as if `severity`
+/// extra tenants were active (fair-share `1/(1 + severity)` of the
+/// bandwidth). Encoded as one-shot [`Tenant`]s so the *existing*
+/// piecewise tenant integration in the network model prices the spike —
+/// no new pricing code, and an empty flap list leaves the model
+/// untouched (bit-identical to the engine).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFlap {
+    /// virtual time the flap begins (seconds)
+    pub start_s: f64,
+    /// how long it lasts (seconds)
+    pub duration_s: f64,
+    /// how many tenant-equivalents of load the flap injects (≥ 1)
+    pub severity: u32,
+}
+
+impl LinkFlap {
+    /// The one-shot tenants this flap contributes: active exactly for
+    /// `t ∈ [start_s, start_s + duration_s)` under the model's
+    /// `((t + phase) mod period) / period < duty` activity rule.
+    pub fn tenants(&self) -> Vec<Tenant> {
+        let duty = (self.duration_s / FLAP_PERIOD_S).clamp(0.0, 1.0);
+        let tenant = Tenant {
+            period_s: FLAP_PERIOD_S,
+            duty,
+            phase_s: FLAP_PERIOD_S - self.start_s,
+        };
+        vec![tenant; self.severity.max(1) as usize]
+    }
+}
+
+/// A network model with `flaps` layered onto `base` as one-shot tenants.
+/// With no flaps this returns a clone of `base` (same pricing to the
+/// bit).
+pub fn net_with_flaps(base: &NetworkModel, flaps: &[LinkFlap]) -> NetworkModel {
+    let mut net = base.clone();
+    for f in flaps {
+        net.tenants.extend(f.tenants());
+    }
+    net
+}
+
+/// Elastic membership: the worker count in force per round. Plain data —
+/// the fleet driver rebuilds schedules (and measures the rebuild cost)
+/// whenever consecutive rounds disagree.
+#[derive(Clone, Debug, Default)]
+pub struct MembershipPlan {
+    /// `(first_round, n)` steps, in ascending round order; before the
+    /// first step the plan is empty and callers use their base `n`
+    pub steps: Vec<(u32, usize)>,
+}
+
+impl MembershipPlan {
+    /// A plan that keeps `n` forever.
+    pub fn fixed(n: usize) -> Self {
+        MembershipPlan { steps: vec![(0, n)] }
+    }
+
+    /// The worker count in force at `round` (the last step at or before
+    /// it), or `None` before the first step.
+    pub fn n_at(&self, round: u32) -> Option<usize> {
+        self.steps.iter().take_while(|(r, _)| *r <= round).last().map(|&(_, n)| n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_exactly_zero() {
+        let m = StragglerModel::none();
+        for w in 0..64 {
+            assert_eq!(m.delay_s(3, w), 0.0);
+        }
+    }
+
+    #[test]
+    fn delays_are_deterministic_and_positive() {
+        let m = StragglerModel {
+            dist: JitterDist::Exp { mean_s: 0.005 },
+            frac: 1.0,
+            seed: 7,
+        };
+        for round in [0u32, 5] {
+            for w in 0..256 {
+                let d = m.delay_s(round, w);
+                assert!(d >= 0.0 && d.is_finite());
+                assert_eq!(d, m.delay_s(round, w), "pure function of (seed, round, worker)");
+            }
+        }
+        // different rounds decorrelate
+        let same = (0..256)
+            .filter(|&w| m.delay_s(0, w) == m.delay_s(1, w))
+            .count();
+        assert!(same < 4, "{same} collisions across rounds");
+    }
+
+    #[test]
+    fn exp_mean_is_roughly_right() {
+        let m = StragglerModel { dist: JitterDist::Exp { mean_s: 0.01 }, frac: 1.0, seed: 1 };
+        let n = 20_000u32;
+        let mean: f64 = (0..n).map(|w| m.delay_s(0, w)).sum::<f64>() / n as f64;
+        assert!((mean - 0.01).abs() < 0.001, "mean {mean}");
+    }
+
+    #[test]
+    fn lognormal_median_is_roughly_right() {
+        let m = StragglerModel {
+            dist: JitterDist::LogNormal { median_s: 0.004, sigma: 0.5 },
+            frac: 1.0,
+            seed: 2,
+        };
+        let mut v: Vec<f64> = (0..10_001u32).map(|w| m.delay_s(0, w)).collect();
+        v.sort_by(f64::total_cmp);
+        let median = v[v.len() / 2];
+        assert!((median / 0.004 - 1.0).abs() < 0.1, "median {median}");
+        // heavy tail: p99 well above the median
+        assert!(v[v.len() * 99 / 100] > 2.0 * median);
+    }
+
+    #[test]
+    fn frac_limits_the_affected_share() {
+        let m = StragglerModel {
+            dist: JitterDist::Uniform { max_s: 1.0 },
+            frac: 0.25,
+            seed: 3,
+        };
+        let n = 10_000u32;
+        let hit = (0..n).filter(|&w| m.delay_s(0, w) > 0.0).count();
+        let share = hit as f64 / n as f64;
+        assert!((share - 0.25).abs() < 0.02, "share {share}");
+    }
+
+    #[test]
+    fn parse_round_trips_the_cli_grammar() {
+        assert_eq!(
+            StragglerModel::parse("none", 9).unwrap(),
+            StragglerModel { dist: JitterDist::None, frac: 1.0, seed: 9 }
+        );
+        assert_eq!(
+            StragglerModel::parse("exp:0.005", 9).unwrap().dist,
+            JitterDist::Exp { mean_s: 0.005 }
+        );
+        assert_eq!(StragglerModel::parse("uniform:0.01:0.5", 9).unwrap().frac, 0.5);
+        let ln = StragglerModel::parse("lognormal:0.004:0.5:0.1", 9).unwrap();
+        assert_eq!(ln.dist, JitterDist::LogNormal { median_s: 0.004, sigma: 0.5 });
+        assert_eq!(ln.frac, 0.1);
+        for bad in ["gauss:1", "exp", "exp:x", "uniform:1:2", "exp:1:0.5:0.5", "lognormal:1"] {
+            assert!(StragglerModel::parse(bad, 0).is_err(), "{bad} should fail");
+        }
+    }
+
+    #[test]
+    fn flap_tenant_window_is_exact() {
+        let flap = LinkFlap { start_s: 2.5, duration_s: 0.5, severity: 2 };
+        let ts = flap.tenants();
+        assert_eq!(ts.len(), 2);
+        for t in &ts {
+            // the activity rule the network model applies
+            let active = |x: f64| ((x + t.phase_s).rem_euclid(t.period_s)) / t.period_s < t.duty;
+            assert!(!active(0.0));
+            assert!(!active(2.499_999));
+            assert!(active(2.5));
+            assert!(active(2.999_999));
+            assert!(!active(3.000_001));
+            assert!(!active(100.0));
+        }
+    }
+
+    #[test]
+    fn empty_flaps_leave_the_model_untouched() {
+        let base = NetworkModel::isolated_100g();
+        let same = net_with_flaps(&base, &[]);
+        assert_eq!(same.tenants.len(), base.tenants.len());
+        let msgs = vec![100_000u64; 4];
+        assert_eq!(same.stage_time(&msgs, 0.0), base.stage_time(&msgs, 0.0));
+    }
+
+    #[test]
+    fn flaps_slow_transfers_only_inside_the_window() {
+        let base = NetworkModel::isolated_100g();
+        let flapped = net_with_flaps(
+            &base,
+            &[LinkFlap { start_s: 1.0, duration_s: 1.0, severity: 1 }],
+        );
+        let msgs = vec![1_000_000u64; 4];
+        assert_eq!(flapped.stage_time(&msgs, 0.0), base.stage_time(&msgs, 0.0));
+        assert!(flapped.stage_time(&msgs, 1.0) > base.stage_time(&msgs, 1.0));
+        assert_eq!(flapped.stage_time(&msgs, 5.0), base.stage_time(&msgs, 5.0));
+    }
+
+    #[test]
+    fn membership_plan_steps_apply_in_order() {
+        let plan = MembershipPlan { steps: vec![(0, 16), (4, 24), (8, 16)] };
+        assert_eq!(plan.n_at(0), Some(16));
+        assert_eq!(plan.n_at(3), Some(16));
+        assert_eq!(plan.n_at(4), Some(24));
+        assert_eq!(plan.n_at(7), Some(24));
+        assert_eq!(plan.n_at(100), Some(16));
+        assert_eq!(MembershipPlan::default().n_at(0), None);
+        assert_eq!(MembershipPlan::fixed(8).n_at(42), Some(8));
+    }
+}

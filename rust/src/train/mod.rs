@@ -14,9 +14,23 @@ use anyhow::{anyhow, Result};
 use crate::codec::{make_codecs, GradCodec, ScratchPool};
 use crate::collective::{AllReduceEngine, NetworkModel, RoundReport, Topology};
 use crate::metrics::{ComputeModel, RoundTime, TtaCurve};
+use crate::sim::{EventEngine, FleetScratch, StragglerModel};
 use crate::runtime::exec::{lit_f32, lit_i32, scalar_f32, to_f32};
 use crate::runtime::{Manifest, Runtime};
 use crate::train::data::{BatchSampler, Corpus};
+
+/// Which all-reduce execution backend a run synchronizes through.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// the lockstep stage-loop engine ([`AllReduceEngine`]) — the
+    /// reference backend
+    #[default]
+    Sync,
+    /// the discrete-event backend ([`crate::sim::EventEngine`]):
+    /// bit-identical results without per-worker OS threads, plus
+    /// straggler jitter (`--straggler`) — the fleet-scale path
+    Event,
+}
 
 /// Everything that defines one training run (model preset, codec,
 /// topology, network shape, schedule).
@@ -65,8 +79,14 @@ pub struct TrainConfig {
     pub eval_batches: usize,
     /// synthetic corpus size in tokens
     pub corpus_tokens: usize,
-    /// run seed (data, init, codec randomness)
+    /// run seed (data, init, codec randomness, straggler draws)
     pub seed: u64,
+    /// all-reduce execution backend (`--backend sync|event`)
+    pub backend: Backend,
+    /// straggler spec for the event backend (see
+    /// [`StragglerModel::parse`]: `none`, `uniform:MAX[:frac]`,
+    /// `exp:MEAN[:frac]`, `lognormal:MEDIAN:SIGMA[:frac]`)
+    pub straggler: String,
 }
 
 impl Default for TrainConfig {
@@ -90,6 +110,8 @@ impl Default for TrainConfig {
             eval_batches: 4,
             corpus_tokens: 200_000,
             seed: 7,
+            backend: Backend::Sync,
+            straggler: "none".into(),
         }
     }
 }
@@ -111,6 +133,9 @@ pub struct RoundRecord {
     pub vnmse: f64,
     /// wire bytes moved this round
     pub wire_bytes: u64,
+    /// virtual seconds the round stalled on straggler jitter beyond the
+    /// busy comm time (event backend only; exactly 0.0 on sync)
+    pub stall_s: f64,
 }
 
 /// The training driver: n workers' fwd/bwd through PJRT, gradient sync
@@ -134,6 +159,10 @@ pub struct Trainer {
     samplers: Vec<BatchSampler>,
     eval_sampler: BatchSampler,
     engine: AllReduceEngine,
+    /// the event backend when `cfg.backend == Backend::Event` (same
+    /// topology, same network model, optional straggler jitter)
+    event: Option<EventEngine>,
+    fleet_scratch: FleetScratch,
     codecs: Vec<Box<dyn GradCodec>>,
     /// payload arenas + decode slabs reused across training rounds (the
     /// steady-state hop path allocates nothing)
@@ -228,6 +257,25 @@ impl Trainer {
             oversub: cfg.nic_oversub,
         };
         net.spine_oversub = cfg.spine_oversub;
+        // the straggler spec is validated for every run (so a typo fails
+        // fast), but only the event backend can express non-zero jitter
+        let straggler = StragglerModel::parse(&cfg.straggler, cfg.seed as u32)
+            .map_err(|e| anyhow!("--straggler {}: {e}", cfg.straggler))?;
+        let event = match cfg.backend {
+            Backend::Sync => {
+                anyhow::ensure!(
+                    cfg.straggler == "none",
+                    "--straggler needs --backend event (the lockstep engine has no clock \
+                     to delay)"
+                );
+                None
+            }
+            Backend::Event => {
+                let mut eng = EventEngine::new(cfg.topology, net.clone());
+                eng.straggler = straggler;
+                Some(eng)
+            }
+        };
         let engine = AllReduceEngine::new(cfg.topology, net);
         let codecs = make_codecs(&cfg.scheme, cfg.n_workers);
         // Calibrate the TTA time model so the compute : BF16-communication
@@ -253,6 +301,8 @@ impl Trainer {
             samplers,
             eval_sampler,
             engine,
+            event,
+            fleet_scratch: FleetScratch::new(),
             codecs,
             pool: ScratchPool::new(),
             compute,
@@ -335,13 +385,28 @@ impl Trainer {
             loss_sum += loss;
             grads.push(grad);
         }
-        let (sum, report): (Vec<f32>, RoundReport) = self.engine.run_pooled(
-            &grads,
-            &mut self.codecs,
-            round,
-            self.sim_time_s,
-            &mut self.pool,
-        )?;
+        let (sum, report, stall_s): (Vec<f32>, RoundReport, f64) = match &self.event {
+            None => {
+                let (sum, report) = self.engine.run_pooled(
+                    &grads,
+                    &mut self.codecs,
+                    round,
+                    self.sim_time_s,
+                    &mut self.pool,
+                )?;
+                (sum, report, 0.0)
+            }
+            Some(eng) => {
+                let (sum, report, stats) = eng.run_scratch(
+                    &grads,
+                    &mut self.codecs,
+                    round,
+                    self.sim_time_s,
+                    &mut self.fleet_scratch,
+                )?;
+                (sum, report, stats.stall_s)
+            }
+        };
         let inv_n = 1.0 / n as f32;
         let avg: Vec<f32> = sum.iter().map(|&x| x * inv_n).collect();
 
@@ -368,7 +433,10 @@ impl Trainer {
             n,
             &report,
         );
-        self.sim_time_s += time.total_s();
+        // straggler stalls are exposed wait on top of the modeled
+        // compute/comm round (the compute model has no per-worker jitter
+        // of its own, so this adds no double counting)
+        self.sim_time_s += time.total_s() + stall_s;
         let eval_loss = if round % self.cfg.eval_every == self.cfg.eval_every - 1 {
             let e = self.eval()?;
             self.tta.push(self.sim_time_s, e as f64);
@@ -384,6 +452,7 @@ impl Trainer {
             time,
             vnmse: report.vnmse,
             wire_bytes: report.total_bytes(),
+            stall_s,
         });
         Ok(self.records.last().unwrap())
     }

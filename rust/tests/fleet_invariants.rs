@@ -1,0 +1,298 @@
+//! Cross-backend pinning for the fleet-scale event-driven backend
+//! (`sim::EventEngine`) — the ISSUE-6 acceptance matrix:
+//!
+//! 1. **Bit-identity**: at every (n, topology, codec) cell both backends
+//!    can run, the event backend must produce the *same* aggregated
+//!    values (f32 bit patterns), the same wire bytes and kernel tallies,
+//!    and — with no jitter — the same virtual phase times to the last
+//!    bit (`to_bits` on meta/rs/ag and every per-stage dt): the DES
+//!    batches are priced by the same `stage_time_congested` walk in the
+//!    same f64 order as the sync engine's stage loop.
+//! 2. **Coordinator cross-check**: the thread-per-worker coordinator's
+//!    per-send byte records (`SendRecord`) summed per phase equal the
+//!    event backend's phase byte totals, and its per-worker aggregated
+//!    vectors equal the event backend's output — three independent
+//!    executions of one schedule agreeing payload-for-payload.
+//! 3. **Elastic membership**: after every join/leave step of a
+//!    `MembershipPlan`, the rebuilt schedules are still a valid
+//!    aggregation arborescence (every contribution reaches its sink
+//!    exactly once; the all-gather re-broadcasts every chunk to every
+//!    worker) at several (n, topology) points.
+//! 4. **Jitter leaves values alone**: straggler delays and link flaps
+//!    reshape the virtual timeline only — payload bytes and reduced
+//!    values stay bit-identical to the sync engine.
+
+use dynamiq::codec::make_codecs;
+use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, Topology};
+use dynamiq::coordinator::Coordinator;
+use dynamiq::sim::{EventEngine, FleetScratch, LinkFlap, MembershipPlan, StragglerModel};
+use dynamiq::util::rng::Pcg;
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(seed ^ (i as u64) << 15);
+            let mut region = 1.0f32;
+            (0..d)
+                .map(|k| {
+                    if k % 128 == 0 {
+                        region = (rng.next_normal() * 1.2).exp();
+                    }
+                    rng.next_normal() * 0.01 * region
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The network shape of the fleet sweep: private tiers on a 48× ladder
+/// under the NIC for hierarchies, the plain isolated NIC for flat
+/// topologies.
+fn net_for(topo: &Topology) -> NetworkModel {
+    let tiers = topo.num_levels() - 1;
+    if tiers == 0 {
+        NetworkModel::isolated_100g()
+    } else {
+        NetworkModel::tiered_100g(&NetworkModel::geometric_ladder(48.0, tiers))
+    }
+}
+
+/// Assert full-report equality between the sync engine and the event
+/// backend for one cell, to the bit.
+fn assert_cell_identical(topo: Topology, n: usize, scheme: &str, d: usize, round: u32) {
+    let g = grads(n, d, 0xF1EE_7 ^ ((n as u64) << 8) ^ d as u64);
+    let net = net_for(&topo);
+
+    let mut sync_codecs = make_codecs(scheme, n);
+    let eng = AllReduceEngine::new(topo, net.clone());
+    let (want, want_rep) =
+        eng.run(&g, &mut sync_codecs, round, 0.0).expect("sync engine runs");
+
+    let mut event_codecs = make_codecs(scheme, n);
+    let ev = EventEngine::new(topo, net);
+    let (got, got_rep, stats) =
+        ev.run(&g, &mut event_codecs, round, 0.0).expect("event backend runs");
+
+    let tag = format!("{} n={n} {scheme}", topo.name());
+    assert_eq!(want.len(), got.len(), "{tag}: length");
+    for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: value {i}: {a} vs {b}");
+    }
+    assert_eq!(want_rep.meta_bytes, got_rep.meta_bytes, "{tag}: meta bytes");
+    assert_eq!(want_rep.rs_bytes, got_rep.rs_bytes, "{tag}: rs bytes");
+    assert_eq!(want_rep.ag_bytes, got_rep.ag_bytes, "{tag}: ag bytes");
+    assert_eq!(want_rep.compress_calls, got_rep.compress_calls, "{tag}: compress calls");
+    assert_eq!(want_rep.dar_calls, got_rep.dar_calls, "{tag}: dar calls");
+    assert_eq!(want_rep.da_calls, got_rep.da_calls, "{tag}: da calls");
+    assert_eq!(want_rep.decompress_calls, got_rep.decompress_calls, "{tag}: decompress calls");
+    assert_eq!(want_rep.entries_processed, got_rep.entries_processed, "{tag}: entries");
+    assert_eq!(want_rep.overflow_events, got_rep.overflow_events, "{tag}: overflow");
+    assert_eq!(want_rep.vnmse.to_bits(), got_rep.vnmse.to_bits(), "{tag}: vNMSE");
+    // virtual comm time equals the engine's congested stage costing to
+    // the last bit — phase sums and each per-stage dt
+    assert_eq!(
+        want_rep.meta_time_s.to_bits(),
+        got_rep.meta_time_s.to_bits(),
+        "{tag}: meta time"
+    );
+    assert_eq!(want_rep.rs_time_s.to_bits(), got_rep.rs_time_s.to_bits(), "{tag}: rs time");
+    assert_eq!(want_rep.ag_time_s.to_bits(), got_rep.ag_time_s.to_bits(), "{tag}: ag time");
+    assert_eq!(
+        want_rep.stage_times_s.len(),
+        got_rep.stage_times_s.len(),
+        "{tag}: stage count"
+    );
+    for (s, (a, b)) in want_rep.stage_times_s.iter().zip(&got_rep.stage_times_s).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: stage {s} dt");
+    }
+    // no jitter: the DES timeline is gapless (span == busy comm time up
+    // to subtraction noise) and one batch ran per schedule stage
+    assert!(stats.stall_s < 1e-12, "{tag}: stall {}", stats.stall_s);
+    let stages = topo.rs_stages(n) + topo.all_gather(n).len();
+    assert_eq!(stats.batches as usize, stages, "{tag}: batches");
+}
+
+/// The acceptance matrix: n ∈ {16, 128} × {flat, hierarchical} × two
+/// codec families, plus a THC spot-check.
+#[test]
+fn event_backend_is_bit_identical_to_sync_engine() {
+    for &n in &[16usize, 128] {
+        for topo in [Topology::Ring, Topology::hierarchical(Level::Ring, Level::Butterfly, 4)] {
+            topo.validate(n).expect("valid matrix point");
+            for scheme in ["BF16", "DynamiQ"] {
+                assert_cell_identical(topo, n, scheme, 4099, 3);
+            }
+        }
+    }
+    assert_cell_identical(Topology::Butterfly, 16, "THC", 2048, 1);
+}
+
+/// Three executions, one schedule: the coordinator's per-send byte
+/// records and per-worker outputs agree with the event backend.
+#[test]
+fn payload_bytes_match_the_coordinator() {
+    for (topo, n, scheme) in [
+        (Topology::Ring, 12, "DynamiQ"),
+        (Topology::Butterfly, 16, "BF16"),
+    ] {
+        let d = 3073;
+        let g = grads(n, d, 0xC0_0D ^ n as u64);
+        let round = 2;
+
+        let ev = EventEngine::new(topo, net_for(&topo));
+        let mut event_codecs = make_codecs(scheme, n);
+        let (out, rep, _) = ev.run(&g, &mut event_codecs, round, 0.0).expect("event runs");
+
+        let mut co = Coordinator::new(topo, make_codecs(scheme, n)).expect("coordinator spawns");
+        let rounds = co.run_round(&g, round).expect("coordinator runs");
+
+        let tag = format!("{} n={n} {scheme}", topo.name());
+        let mut rs = 0u64;
+        let mut ag = 0u64;
+        for wr in &rounds {
+            assert_eq!(wr.aggregated.len(), out.len(), "{tag}: w{} length", wr.worker);
+            for (i, (a, b)) in wr.aggregated.iter().zip(&out).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{tag}: w{} value {i} disagrees with the event backend",
+                    wr.worker
+                );
+            }
+            for s in &wr.sends {
+                match s.phase {
+                    0 => rs += s.bytes,
+                    1 => ag += s.bytes,
+                    p => panic!("{tag}: unknown phase {p}"),
+                }
+            }
+        }
+        assert_eq!(rs, rep.rs_bytes, "{tag}: reduce-scatter payload bytes");
+        assert_eq!(ag, rep.ag_bytes, "{tag}: all-gather payload bytes");
+    }
+}
+
+/// Exactly-once aggregation over a reduce-scatter schedule: simulate
+/// contribution counts hop by hop with stage-batched delivery (the
+/// engine's semantics) and require chunk c's sink to end the phase
+/// holding all n contributions, everyone else zero.
+fn check_exactly_once(topo: Topology, n: usize) {
+    let sched = topo.reduce_scatter(n);
+    let tag = format!("{} n={n}", topo.name());
+    // contrib[w][c]: how many worker gradients w's partial for chunk c
+    // carries; everyone starts holding their own contribution
+    let mut contrib = vec![vec![1u64; n]; n];
+    let mut deliveries: Vec<(usize, usize, u64)> = Vec::new();
+    for hops in &sched {
+        deliveries.clear();
+        for h in hops {
+            let k = std::mem::take(&mut contrib[h.from as usize][h.chunk as usize]);
+            assert!(k > 0, "{tag}: {} sends an empty partial for chunk {}", h.from, h.chunk);
+            deliveries.push((h.to as usize, h.chunk as usize, k));
+        }
+        for &(to, c, k) in &deliveries {
+            contrib[to][c] += k;
+        }
+    }
+    for c in 0..n {
+        for w in 0..n {
+            let want = if w == c { n as u64 } else { 0 };
+            assert_eq!(
+                contrib[w][c], want,
+                "{tag}: worker {w} ends with {} contributions for chunk {c}",
+                contrib[w][c]
+            );
+        }
+    }
+}
+
+/// All-gather completeness: every worker ends holding every chunk, and
+/// no worker forwards a chunk before holding it (stage-batched).
+fn check_broadcast_complete(topo: Topology, n: usize) {
+    let sched = topo.all_gather(n);
+    let tag = format!("{} n={n}", topo.name());
+    let mut has = vec![vec![false; n]; n];
+    for (c, row) in has.iter_mut().enumerate() {
+        row[c] = true;
+    }
+    for hops in &sched {
+        let snapshot = has.clone();
+        for h in hops {
+            assert!(
+                snapshot[h.from as usize][h.chunk as usize],
+                "{tag}: {} forwards chunk {} it does not hold",
+                h.from,
+                h.chunk
+            );
+            has[h.to as usize][h.chunk as usize] = true;
+        }
+    }
+    for (w, row) in has.iter().enumerate() {
+        for (c, held) in row.iter().enumerate() {
+            assert!(held, "{tag}: worker {w} missing chunk {c}");
+        }
+    }
+}
+
+/// Elastic membership: every worker count a join/leave plan steps
+/// through yields valid schedules on rebuild — exactly-once aggregation
+/// and complete broadcast at each (n, topology) point.
+#[test]
+fn membership_rebuild_keeps_schedules_valid() {
+    let plan = MembershipPlan { steps: vec![(0, 48), (1, 32), (2, 64), (3, 17), (4, 48)] };
+    for round in 0..5u32 {
+        let n = plan.n_at(round).expect("plan covers every round");
+        let mut topos = vec![Topology::Ring];
+        if n.is_power_of_two() {
+            topos.push(Topology::Butterfly);
+        }
+        if n % 4 == 0 && (n / 4) >= 2 {
+            topos.push(Topology::hierarchical(Level::Ring, Level::Ring, 4));
+        }
+        for topo in topos {
+            topo.validate(n).expect("plan points are valid");
+            check_exactly_once(topo, n);
+            check_broadcast_complete(topo, n);
+        }
+    }
+    // a plan step the topology cannot satisfy surfaces as an error, not
+    // a panic or a silently wrong schedule
+    assert!(Topology::Butterfly.validate(plan.n_at(3).unwrap()).is_err());
+}
+
+/// Straggler jitter and link flaps stretch the virtual timeline without
+/// touching a single payload byte or output bit.
+#[test]
+fn jitter_and_flaps_never_change_the_values() {
+    let topo = Topology::hierarchical(Level::Ring, Level::Butterfly, 4);
+    let n = 16;
+    let d = 4099;
+    let g = grads(n, d, 0x7A6);
+
+    let mut sync_codecs = make_codecs("DynamiQ", n);
+    let eng = AllReduceEngine::new(topo, net_for(&topo));
+    let (want, want_rep) = eng.run(&g, &mut sync_codecs, 0, 0.0).expect("sync engine runs");
+
+    let mut ev = EventEngine::new(topo, net_for(&topo));
+    ev.straggler = StragglerModel::parse("exp:0.002", 13).expect("spec parses");
+    ev.flaps = vec![LinkFlap { start_s: 0.0, duration_s: 0.5, severity: 2 }];
+    let mut event_codecs = make_codecs("DynamiQ", n);
+    let mut scratch = FleetScratch::new();
+    let (got, got_rep, stats) =
+        ev.run_scratch(&g, &mut event_codecs, 0, 0.0, &mut scratch).expect("event runs");
+
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.to_bits(), b.to_bits(), "jitter changed an output value");
+    }
+    assert_eq!(want_rep.rs_bytes, got_rep.rs_bytes);
+    assert_eq!(want_rep.ag_bytes, got_rep.ag_bytes);
+    assert_eq!(want_rep.vnmse.to_bits(), got_rep.vnmse.to_bits());
+    // the timeline did stretch: jitter shows up as stall, and the span
+    // covers at least the slowest worker's start delay
+    assert!(stats.stall_s > 0.0, "expected a straggler stall");
+    assert!(stats.span_s >= stats.max_delay_s, "span must cover the slowest start");
+    // determinism: the same seeds reproduce the same timeline bit-for-bit
+    let mut event_codecs2 = make_codecs("DynamiQ", n);
+    let (_, _, stats2) = ev.run(&g, &mut event_codecs2, 0, 0.0).expect("event reruns");
+    assert_eq!(stats.span_s.to_bits(), stats2.span_s.to_bits(), "jittered run not reproducible");
+}
