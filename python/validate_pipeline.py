@@ -1,0 +1,441 @@
+"""Offline oracle for the bucketed pipelined round scheduler.
+
+Ports the overlapped-flow costing of rust/src/collective/network.rs
+(`price_pipeline`: per-worker compute clocks + one wire channel per
+link level, greedy list scheduling with same-level cohort merging into
+a single `stage_time_congested` solve) and the bucket chain builder of
+rust/src/collective/allreduce.rs so the Rust implementation can be
+validated without a toolchain.
+
+The model, exactly as implemented in Rust:
+
+- **Bucket partition (diagonal).** `bucket_of(c) = (c % m0 + c / m0) % B`
+  with m0 = the level-0 arity (workers per node; m0 = n for flat
+  topologies). At an intra-node ring stage every worker forwards one
+  mod-m0 congruence class of chunks, and at an inter-node stage one
+  worker per node sends per class, so a naive `c % B` partition piles
+  a whole bucket-stage onto one worker. The diagonal spreads every
+  bucket evenly across both axes; chunk-disjoint buckets keep the
+  inbox collision-free and per-chunk hop order intact, which is what
+  makes payload bytes and values byte-identical at any depth.
+
+- **Per-bucket chains.** Each bucket prices as a chain of jobs:
+  K(begin: entries x fixed/2 bytes on every worker) -> per RS stage
+  [K(hop: summed entries x per_hop on each sending worker), W(stage
+  flows)] -> K(sink: entries x per_hop on each chunk owner) -> per AG
+  stage [W] -> K(decode: entries x fixed/2 on every worker). Kernel
+  seconds = bytes / kernel_bandwidth_bps. fixed/per_hop come from the
+  Table-2 memory-traffic model (metrics/memtraffic.rs).
+
+- **Resources.** One compute clock per worker, one wire server per
+  link *level* (the intra fabric and the NIC/spine are separate
+  hardware and overlap freely; two flows on the same level serialize
+  unless they join one cohort). A wire engagement merges every ready
+  same-level W job into one `stage_time_congested` solve, so
+  concurrently in-flight buckets are priced by the congestion model
+  in a single solve per virtual time step instead of per-stage
+  barriers.
+
+- **Admission gate.** Bucket b's first post-begin job waits for
+  `sink_done[b - depth]`: the compute-side scratch slab is freed at
+  sink-finalize (the payload has been handed to the wire), so `depth`
+  slots bound live scratch while early buckets' all-gather still
+  overlaps late buckets' reduce-scatter. Begin kernels are admitted
+  on readiness alone. depth = 1 means no pipelining: the Rust path
+  delegates to the serial stage walk, bit-identical to `run_pooled`.
+
+Checks:
+1. **Partition + scheduler self-checks** — disjoint cover, size
+   balance, flat-topology degeneracy to c % B; makespan >= compute
+   lower bound, serial >= makespan (depth >= 2 never prices worse than
+   the serial sum on these cells), wire-busy accounting sane.
+2. **Golden depth-2 comm times** — small BF16 cells (exact 2
+   bytes/entry payloads, no metadata phase) evaluated through the
+   ported scheduler, printed to full precision;
+   rust/tests/into_bit_identity.rs embeds these and asserts the Rust
+   pricer reproduces them to 1e-9 relative.
+3. **Model-predicted reduction table** — the `repro --id pipeline`
+   grid (n = 128, hier ring16/ring8, d = 2^20, NIC 12.5 GB/s at 2 us,
+   intra 48x at 1 us): modeled round-latency reduction vs the serial
+   baseline must reach >= 20% at depth >= 2 on the headline compressed
+   oversubscribed cells (DynamiQ 16x, THC 16x) and >= 18% for BF16.
+4. **Cross-check against results/pipeline.json** when present: BF16
+   cells must match the model within 0.1%; depth-1 cells must equal
+   the serial comm identically; at least one compressed oversubscribed
+   depth >= 2 cell must record >= 20% reduction.
+
+Run: python3 python/validate_pipeline.py
+Exit status is non-zero on any violated invariant.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from validate_congestion import (Net, hier_rs, hier_ag, chunk_entries,
+                                 hop_level)
+
+FAILURES = []
+
+
+def check(cond, msg):
+    status = "ok" if cond else "FAIL"
+    print(f"  [{status}] {msg}")
+    if not cond:
+        FAILURES.append(msg)
+
+
+# Table-2 memory-traffic model (bytes per coordinate), mirroring
+# rust/src/metrics/memtraffic.rs: (fixed, per_hop)
+TRAFFIC = {"BF16": (4.0, 4.0), "DynamiQ": (22.0, 11.875),
+           "MXFP8": (18.0, 13.0), "THC": (74.0, 2.0)}
+# mean wire density per codec: exact for BF16, nominal for the rest
+# (only the trend matters for compressed codecs; the Rust experiment
+# prices real payload bytes)
+BPE = {"BF16": 2.0, "DynamiQ": 5.0 / 8.0, "MXFP8": 8.5 / 8.0,
+       "THC": 7.8 / 8.0}
+KBW = 16e9       # default modeled fused-kernel memory bandwidth, B/s
+SPLIT = 0.5      # begin/decode share of the fixed per-coordinate bytes
+ALIGN = 16
+
+
+def bucket_of(c, m0, buckets):
+    """Diagonal bucket partition (degenerates to c % B when m0 = n)."""
+    return (c % m0 + c // m0) % buckets
+
+
+def build_chains(levels, n, d, scheme, buckets, kbw=KBW, pay=None):
+    """Per-bucket job chains. Returns (chains, sink_idx, rs, ag, pay).
+
+    chains[b] is a list of ('K', [(worker, secs), ...]) and
+    ('W', channel_level, [(bytes, class, from_node, to_node), ...]).
+    `pay` overrides per-chunk payload bytes (else nominal BPE)."""
+    fixed, per_hop = TRAFFIC[scheme]
+    top = len(levels) - 1
+    node_m = levels[0][1]
+    m0 = levels[0][1] if len(levels) > 1 else n
+    padded = (d + ALIGN - 1) // ALIGN * ALIGN
+    entries = chunk_entries(padded, n, ALIGN)
+    if pay is None:
+        pay = [round(e * BPE[scheme]) for e in entries]
+
+    def link(f, t):
+        lvl = hop_level(levels, f, t)
+        return None if lvl >= top else lvl
+
+    rs, ag = hier_rs(levels), hier_ag(levels)
+    chains, sink_idx = [], []
+    for b in range(buckets):
+        chain = []
+        bents = sum(entries[c] for c in range(n)
+                    if bucket_of(c, m0, buckets) == b)
+        if bents == 0:
+            chains.append(chain)
+            sink_idx.append(0)
+            continue
+        chain.append(('K', [(w, bents * (fixed * SPLIT) / kbw)
+                            for w in range(n)]))
+        for hops in rs:
+            mine = [h for h in hops if bucket_of(h[2], m0, buckets) == b]
+            if not mine:
+                continue
+            work = {}
+            for f, t, c in mine:
+                work[f] = work.get(f, 0) + entries[c]
+            chan = hop_level(levels, mine[0][0], mine[0][1])
+            chain.append(('K', [(w, e * per_hop / kbw)
+                                for w, e in sorted(work.items())]))
+            chain.append(('W', chan,
+                          [(pay[c], link(f, t), f // node_m, t // node_m)
+                           for f, t, c in mine]))
+        sink_idx.append(len(chain))
+        chain.append(('K', [(c, entries[c] * per_hop / kbw)
+                            for c in range(n)
+                            if bucket_of(c, m0, buckets) == b]))
+        for hops in ag:
+            mine = [h for h in hops if bucket_of(h[2], m0, buckets) == b]
+            if not mine:
+                continue
+            chan = hop_level(levels, mine[0][0], mine[0][1])
+            chain.append(('W', chan,
+                          [(pay[c], link(f, t), f // node_m, t // node_m)
+                           for f, t, c in mine]))
+        chain.append(('K', [(w, bents * (fixed * (1.0 - SPLIT)) / kbw)
+                            for w in range(n)]))
+        chains.append(chain)
+    return chains, sink_idx, rs, ag, pay
+
+
+def schedule(net, chains, sink_idx, depth, n, n_levels, t0=0.0,
+             ready=None):
+    """Greedy list scheduler: port of network.rs `price_pipeline`.
+
+    Returns (makespan, bucket_done[], wire_busy, cohorts)."""
+    B = len(chains)
+    ready = ready or [0.0] * B
+    wire_avail = [t0] * n_levels
+    worker_avail = [t0] * n
+    nxt = [0] * B
+    btime = [max(t0, ready[b]) for b in range(B)]
+    done = [None] * B
+    sink_done = [None] * B
+    wire_busy = 0.0
+    cohorts = 0
+    while True:
+        kand, wand = [], []
+        for b in range(B):
+            if nxt[b] >= len(chains[b]):
+                if done[b] is None:
+                    done[b] = btime[b]
+                continue
+            if nxt[b] == 1 and b >= depth and sink_done[b - depth] is None:
+                continue
+            cr = btime[b]
+            if nxt[b] == 1 and b >= depth:
+                cr = max(cr, sink_done[b - depth])
+            job = chains[b][nxt[b]]
+            if job[0] == 'K':
+                est = max(cr, max(worker_avail[w] for w, _ in job[1]))
+                kand.append((est, b, cr, None))
+            else:
+                est = max(cr, wire_avail[job[1]])
+                wand.append((est, b, cr, job[1]))
+        if not kand and not wand:
+            break
+        wbest = min(wand) if wand else None
+        kbest = min(kand) if kand else None
+        if wbest is not None and (kbest is None or wbest[0] <= kbest[0]):
+            start, _, _, lvl = wbest
+            members = sorted(b for e, b, cr, l in wand
+                             if l == lvl and cr <= start)
+            flows = []
+            for b in members:
+                flows.extend(chains[b][nxt[b]][2])
+            dt = net.stage_time_congested(flows, start)
+            wire_busy += dt
+            cohorts += 1
+            for b in members:
+                btime[b] = start + dt
+                nxt[b] += 1
+                if nxt[b] >= len(chains[b]):
+                    done[b] = btime[b]
+            wire_avail[lvl] = start + dt
+        else:
+            start, b, _, _ = kbest
+            job = chains[b][nxt[b]]
+            fin = start
+            for w, s in job[1]:
+                worker_avail[w] = start + s
+                fin = max(fin, start + s)
+            btime[b] = fin
+            if nxt[b] == sink_idx[b]:
+                sink_done[b] = fin
+            nxt[b] += 1
+            if nxt[b] >= len(chains[b]):
+                done[b] = fin
+    return max(done), done, wire_busy, cohorts
+
+
+def serial_comm(net, levels, n, rs, ag, pay, t0=0.0):
+    """Serial stage walk (run_pooled pricing): sum of per-stage solves."""
+    top = len(levels) - 1
+    node_m = levels[0][1]
+
+    def link(f, t):
+        lvl = hop_level(levels, f, t)
+        return None if lvl >= top else lvl
+
+    now = t0
+    for hops in list(rs) + list(ag):
+        flows = [(pay[c], link(f, t), f // node_m, t // node_m)
+                 for f, t, c in hops]
+        now += net.stage_time_congested(flows, now)
+    return now - t0
+
+
+def compute_makespan(chains, n):
+    """Serial-baseline kernel time: max over workers of total work."""
+    per_w = [0.0] * n
+    for chain in chains:
+        for job in chain:
+            if job[0] == 'K':
+                for w, s in job[1]:
+                    per_w[w] += s
+    return max(per_w)
+
+
+def cell(levels, n, d, scheme, buckets, depth, oversub, kbw=KBW,
+         nic_bw=12.5e9):
+    net = Net(bandwidth=nic_bw, latency=2e-6,
+              links=[(48.0 * nic_bw, 1e-6)], nic_ports=1,
+              nic_oversub=oversub)
+    chains, sidx, rs, ag, pay = build_chains(levels, n, d, scheme,
+                                             buckets, kbw)
+    comm = serial_comm(net, levels, n, rs, ag, pay)
+    K = compute_makespan(chains, n)
+    serial = comm + K
+    end, done, wb, co = schedule(net, chains, sidx, depth, n, len(levels))
+    return serial, end, 1.0 - end / serial, comm, K, wb, co
+
+
+def self_checks():
+    print("== partition + scheduler self-checks ==")
+    for n, m0, B in [(128, 16, 8), (128, 16, 16), (8, 2, 4), (8, 8, 4)]:
+        cover = sorted(bucket_of(c, m0, B) for c in range(n))
+        sizes = [cover.count(b) for b in range(B)]
+        check(len(cover) == n and min(sizes) >= 1,
+              f"n={n} m0={m0} B={B}: disjoint cover, min bucket {min(sizes)}")
+        check(max(sizes) - min(sizes) <= max(1, B // m0 + 1),
+              f"n={n} m0={m0} B={B}: size-balanced "
+              f"(spread {max(sizes) - min(sizes)})")
+    check(all(bucket_of(c, 8, 4) == c % 4 for c in range(8)),
+          "flat topology (m0 = n) degenerates to c % B")
+    levels = [("ring", 4), ("ring", 2)]
+    for scheme in ("BF16", "DynamiQ"):
+        net = Net(bandwidth=12.5e9, latency=2e-6,
+                  links=[(48.0 * 12.5e9, 1e-6)], nic_ports=1,
+                  nic_oversub=8.0)
+        chains, sidx, rs, ag, pay = build_chains(levels, 8, 4096, scheme, 4)
+        end, done, wb, co = schedule(net, chains, sidx, 2, 8, len(levels))
+        # note: at tiny n the pipelined walk pays alpha per bucket-stage
+        # and can price *worse* than the serial sum — overlap pays at
+        # scale (the n=128 grid asserts that); here we pin structure
+        check(end >= compute_makespan(chains, 8) - 1e-15,
+              f"{scheme} n=8: makespan >= compute lower bound")
+        check(all(b >= a for a, b in zip(done, done[1:])),
+              f"{scheme} n=8: bucket completion times nondecreasing")
+        check(abs(end - max(done)) == 0.0 and wb > 0.0 and co > 0,
+              f"{scheme} n=8: makespan = last bucket, wire busy accounted")
+
+
+GOLDEN_CELLS = [
+    # (label, levels, n, d, buckets, depth, oversub)
+    ("hier4x2-d4096-B4-D2", [("ring", 4), ("ring", 2)], 8, 4096, 4, 2, 8.0),
+    ("hier2x2x2-d4096-B4-D2",
+     [("ring", 2), ("ring", 2), ("ring", 2)], 8, 4096, 4, 2, 4.0),
+]
+
+
+def golden():
+    print("== golden depth-2 BF16 comm times "
+          "(embed in tests/into_bit_identity.rs) ==")
+    out = []
+    for label, levels, n, d, B, D, ov in GOLDEN_CELLS:
+        net = Net(bandwidth=12.5e9, latency=2e-6,
+                  links=[(48.0 * 12.5e9, 1e-6)], nic_ports=1,
+                  nic_oversub=ov)
+        chains, sidx, rs, ag, pay = build_chains(levels, n, d, "BF16", B)
+        comm = serial_comm(net, levels, n, rs, ag, pay)
+        end, done, _, _ = schedule(net, chains, sidx, D, n, len(levels))
+        out.append((label, end, comm))
+        print(f"  {label:24s} pipe_makespan={end!r}")
+        print(f"  {'':24s} serial_comm  ={comm!r}")
+        print(f"  {'':24s} bucket_done  ={[round(x, 12) for x in done]}")
+    return out
+
+
+# the `repro --id pipeline` grid (model-predicted at the full-scale d)
+LEVELS = [("ring", 16), ("ring", 8)]
+N, D_FULL = 128, 1 << 20
+SCHEMES = ("BF16", "DynamiQ", "THC")
+OVERSUBS = (4.0, 8.0, 16.0)
+GRID = ((8, 1), (8, 2), (8, 4), (8, 8), (16, 8))
+
+
+def model_table():
+    print(f"== model-predicted round-latency reduction "
+          f"(n={N}, d=2^{D_FULL.bit_length() - 1}, kbw={KBW:g}) ==")
+    rows = {}
+    for scheme in SCHEMES:
+        for ov in OVERSUBS:
+            for B, depth in GRID:
+                s, e, r, c, k, wb, co = cell(LEVELS, N, D_FULL, scheme,
+                                             B, depth, ov)
+                if depth == 1:
+                    e, r = s, 0.0  # depth 1 = serial delegation
+                rows[(scheme, ov, B, depth)] = (s, e, r)
+                print(f"  {scheme:8s} ov={ov:3.0f} B={B:2d} D={depth} "
+                      f"serial={s * 1e3:8.3f}ms pipe={e * 1e3:8.3f}ms "
+                      f"red={r * 100:6.1f}%")
+    check(rows[("DynamiQ", 16.0, 8, 4)][2] >= 0.20,
+          f"headline: DynamiQ 16x B=8 D=4 reduction "
+          f"{rows[('DynamiQ', 16.0, 8, 4)][2] * 100:.1f}% >= 20%")
+    check(rows[("THC", 16.0, 16, 8)][2] >= 0.20,
+          f"THC 16x B=16 D=8 reduction "
+          f"{rows[('THC', 16.0, 16, 8)][2] * 100:.1f}% >= 20%")
+    check(rows[("BF16", 4.0, 8, 8)][2] >= 0.18,
+          f"BF16 4x B=8 D=8 reduction "
+          f"{rows[('BF16', 4.0, 8, 8)][2] * 100:.1f}% >= 18%")
+    for scheme in SCHEMES:
+        for ov in OVERSUBS:
+            check(rows[(scheme, ov, 8, 4)][1] <= rows[(scheme, ov, 8, 1)][0],
+                  f"{scheme} ov={ov:.0f}: depth-4 never prices worse "
+                  "than serial")
+    ladder = [rows[("DynamiQ", 16.0, 8, dd)][1] for dd in (2, 4, 8)]
+    check(all(b <= a + 1e-15 for a, b in zip(ladder, ladder[1:])),
+          "DynamiQ 16x B=8: makespan monotone nonincreasing in depth")
+    return rows
+
+
+def cross_check(path="results/pipeline.json"):
+    if not os.path.exists(path):
+        print(f"== no {path}; skipping sweep cross-check "
+              "(run `repro --id pipeline` first) ==")
+        return
+    print(f"== cross-checking {path} against the model ==")
+    data = json.load(open(path))
+    cells = [r for r in data if "buckets" in r]
+    check(len(cells) > 0, "pipeline JSON contains bucketed rows")
+    best = 0.0
+    best_cell = None
+    for r in cells:
+        d = int(r["d"])
+        B, depth, ov = int(r["buckets"]), int(r["depth"]), float(r["oversub"])
+        kbw = float(r.get("kernel_bw", KBW))
+        if r["scheme"] == "BF16":
+            # exact payloads: the model must reproduce the Rust pricer
+            net = Net(bandwidth=12.5e9, latency=2e-6,
+                      links=[(48.0 * 12.5e9, 1e-6)], nic_ports=1,
+                      nic_oversub=ov)
+            chains, sidx, rs, ag, pay = build_chains(
+                LEVELS, N, d, "BF16", B, kbw)
+            comm = serial_comm(net, LEVELS, N, rs, ag, pay)
+            if depth == 1:
+                model = comm + compute_makespan(chains, N)
+            else:
+                model, _, _, _ = schedule(net, chains, sidx, depth, N,
+                                          len(LEVELS))
+            rel = abs(r["round_latency_s"] - model) / model
+            check(rel < 1e-3,
+                  f"BF16 ov={ov:.0f} B={B} D={depth}: rust "
+                  f"{r['round_latency_s']:.6e} vs model {model:.6e} "
+                  f"(rel {rel:.2e})")
+        if depth == 1:
+            check(abs(r["round_latency_s"] - r["serial_latency_s"])
+                  <= 1e-12 * r["serial_latency_s"],
+                  f"{r['scheme']} ov={ov:.0f} B={B}: depth-1 equals serial")
+        elif ov > 1.0 and r["scheme"] != "BF16":
+            red = r["reduction"]
+            if red > best:
+                best, best_cell = red, (r["scheme"], ov, B, depth)
+    check(best >= 0.20,
+          f"best compressed oversubscribed depth>=2 reduction "
+          f"{best * 100:.1f}% (cell {best_cell}) >= 20%")
+
+
+def main():
+    self_checks()
+    golden()
+    model_table()
+    cross_check()
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILURE(S)")
+        for f in FAILURES:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nall pipeline-model checks passed")
+
+
+if __name__ == "__main__":
+    main()

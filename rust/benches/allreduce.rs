@@ -3,10 +3,17 @@
 //! time is simulated separately and reported alongside).
 //!
 //!     cargo bench --bench allreduce
+//!
+//! Emits `BENCH_allreduce.json` (entries/s for the serial `round` and
+//! bucketed `round-pipelined-d{1,4}` engine lanes) for the `benchgate`
+//! comparator. Set `BENCH_QUICK=1` for the CI smoke configuration
+//! (smaller vector, fewer samples).
 
 use dynamiq::codec::{make_codecs, ScratchPool};
-use dynamiq::collective::{AllReduceEngine, Level, LinkClass, NetworkModel, NicProfile, Topology};
-use dynamiq::util::benchkit::Bench;
+use dynamiq::collective::{
+    AllReduceEngine, Level, LinkClass, NetworkModel, NicProfile, PipelineCfg, Topology,
+};
+use dynamiq::util::benchkit::{Bench, BenchLog};
 use dynamiq::util::rng::Pcg;
 
 fn grads(n: usize, d: usize) -> Vec<Vec<f32>> {
@@ -27,8 +34,9 @@ fn grads(n: usize, d: usize) -> Vec<Vec<f32>> {
 }
 
 fn main() {
-    let bench = Bench::quick();
-    let d = 1 << 18;
+    let quick = std::env::var("BENCH_QUICK").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+    let bench = if quick { Bench::quick() } else { Bench::default() };
+    let d = if quick { 1 << 16 } else { 1 << 18 };
     println!("== engine rounds (d = {d}) ==");
     for scheme in ["BF16", "DynamiQ", "MXFP8", "THC"] {
         for (topo, n) in [
@@ -85,6 +93,49 @@ fn main() {
         .unwrap();
         std::hint::black_box(out.len());
     });
+
+    // The bucketed pipelined rounds must not tax the hop path: the same
+    // kernels run the same hops (bucket-sliced, double-buffered scratch
+    // slots), so wall-clock should track the serial engine at every
+    // depth — any gap is bucket-plumbing overhead, which is exactly what
+    // the gate below watches. Lanes land in BENCH_allreduce.json under
+    // kernels `round` / `round-pipelined-d{1,4}` and `benchgate` holds
+    // them to the same -35% tolerance as the codec lanes.
+    println!("\n== pipelined engine rounds (hier 2x4, n=8, B=4) ==");
+    let mut log = BenchLog::new();
+    let ptopo = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+    let n = 8;
+    let g = grads(n, d);
+    for scheme in ["BF16", "DynamiQ", "THC"] {
+        let mut eng =
+            AllReduceEngine::new(ptopo.clone(), NetworkModel::hierarchical_100g(48.0));
+        eng.measure_vnmse = false;
+        let mut codecs = make_codecs(scheme, n);
+        let mut pool = ScratchPool::new();
+        let mut round = 0u32;
+        let r = bench.run(&format!("{scheme}/round"), Some((d * 4 * n) as u64), || {
+            let (_, rep) = eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool).unwrap();
+            round += 1;
+            std::hint::black_box(rep.rs_bytes);
+        });
+        log.push(scheme, "round", (d * n) as u64, &r);
+        for depth in [1usize, 4] {
+            let cfg = PipelineCfg { buckets: 4, depth, ..PipelineCfg::default() };
+            let r = bench.run(
+                &format!("{scheme}/round-pipelined-d{depth}"),
+                Some((d * 4 * n) as u64),
+                || {
+                    let (_, rep) =
+                        eng.run_pipelined(&g, &mut codecs, round, 0.0, &mut pool, &cfg).unwrap();
+                    round += 1;
+                    std::hint::black_box(rep.rs_bytes);
+                },
+            );
+            log.push(scheme, &format!("round-pipelined-d{depth}"), (d * n) as u64, &r);
+        }
+    }
+    log.write("BENCH_allreduce.json").expect("write BENCH_allreduce.json");
+    println!("wrote BENCH_allreduce.json");
 
     // The congestion solve runs once per schedule stage on the engine's
     // costing path; the default profile must stay on the allocation-free

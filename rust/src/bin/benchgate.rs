@@ -1,5 +1,5 @@
 //! `benchgate` — the CI perf-regression comparator over the
-//! `codec_throughput` bench's machine-readable output.
+//! `codec_throughput` / `allreduce` benches' machine-readable output.
 //!
 //!     benchgate <BENCH_baseline.json> <BENCH_codec.json> [--tolerance F]
 //!     benchgate --update <BENCH_baseline.json> <BENCH_codec.json>
@@ -7,12 +7,17 @@
 //!
 //! Compares entries/s per (scheme, kernel) against the committed
 //! baseline and prints a per-scheme delta table into the job log. The
-//! job fails (exit 1) if any *fused-kernel* lane (compress / decompress /
-//! fused-dar — everything except the `unfused-dar` ablation) falls more
-//! than `--tolerance` (default 0.35, i.e. 35%) below baseline; gains and
-//! small losses are noise-tolerated. Entries missing from the baseline
-//! are reported as `new` and pass, so an empty (bootstrap) baseline
-//! gates nothing until a maintainer promotes real numbers with
+//! job fails (exit 1) if any *gated* lane falls more than `--tolerance`
+//! (default 0.35, i.e. 35%) below baseline; gains and small losses are
+//! noise-tolerated. Gated lanes are the §4 fused codec kernels
+//! (compress / decompress / fused-dar — everything except the
+//! `unfused-dar` ablation) plus the end-to-end engine rounds from the
+//! `allreduce` bench (`round` and the bucketed `round-pipelined-d{1,4}`
+//! lanes — the pipelined hop path runs the same kernels over the same
+//! hops, so a throughput gap there is bucket-plumbing overhead, the
+//! regression the pipelined gate exists to catch). Entries missing from
+//! the baseline are reported as `new` and pass, so an empty (bootstrap)
+//! baseline gates nothing until a maintainer promotes real numbers with
 //! `--update` (which rewrites the baseline from the current run).
 //!
 //! `--self` is the baseline-free arm of the gate: it compares each gated
@@ -33,10 +38,13 @@ use std::process::ExitCode;
 
 use dynamiq::util::json::Json;
 
-/// Kernels gated against the baseline (the §4 fused lanes, which run the
-/// default vectorized kernels); the `unfused-dar` ablation and the
+/// Kernels gated against the baseline: the §4 fused codec lanes (which
+/// run the default vectorized kernels) plus the `allreduce` bench's
+/// engine-round lanes — `round` (serial hop path) and the bucketed
+/// pipelined rounds at depth 1 and 4. The `unfused-dar` ablation and the
 /// `*-scalar` reference lanes are informational only.
-const GATED: &[&str] = &["compress", "decompress", "fused-dar"];
+const GATED: &[&str] =
+    &["compress", "decompress", "fused-dar", "round", "round-pipelined-d1", "round-pipelined-d4"];
 
 fn entries_of(doc: &Json) -> Vec<Json> {
     match doc {

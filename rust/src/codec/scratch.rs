@@ -43,8 +43,18 @@ pub struct WorkerScratch {
 /// buffer free list instead (buffers cross threads there).
 #[derive(Default)]
 pub struct ScratchPool {
-    /// payload arena free list (cleared `Vec<u8>`s with warm capacity)
+    /// payload arena free list (cleared `Vec<u8>`s with warm capacity).
+    /// This is pipeline **slot 0**: serial rounds draw everything from
+    /// here; pipelined rounds key additional slots in [`ScratchPool::slots`]
+    /// so double-buffered buckets never alias a payload still referenced
+    /// by an in-flight send.
     pub bufs: Vec<Vec<u8>>,
+    /// Payload arena free lists for pipeline slots ≥ 1 (`slots[s - 1]`
+    /// serves slot `s`). A bucket's arenas are taken from and returned to
+    /// `bucket % depth`'s list only — a slot's arenas cannot be handed to
+    /// another bucket until the owning bucket's sink-finalize has retired
+    /// them, which is exactly the pipeline's admission gate.
+    pub slots: Vec<Vec<Vec<u8>>>,
     /// per-worker decode slabs, indexed by worker rank
     pub workers: Vec<WorkerScratch>,
     /// engine inbox: slot `worker * n + chunk` holds (payload, summed)
@@ -86,6 +96,43 @@ impl ScratchPool {
     pub fn put_buf(&mut self, buf: Vec<u8>) {
         self.bufs.push(buf);
     }
+
+    /// Size the slot-keyed free lists for a pipeline of `depth` slots
+    /// (slot 0 is [`ScratchPool::bufs`]; growth-only like
+    /// [`ScratchPool::ensure_workers`]).
+    pub fn ensure_slots(&mut self, depth: usize) {
+        let extra = depth.saturating_sub(1);
+        if self.slots.len() < extra {
+            self.slots.resize_with(extra, Vec::new);
+        }
+    }
+
+    /// The free list serving pipeline slot `slot` (slot 0 is
+    /// [`ScratchPool::bufs`], the serial list; slots ≥ 1 must have been
+    /// sized by [`ScratchPool::ensure_slots`]).
+    pub fn free_list(&mut self, slot: usize) -> &mut Vec<Vec<u8>> {
+        if slot == 0 {
+            &mut self.bufs
+        } else {
+            &mut self.slots[slot - 1]
+        }
+    }
+
+    /// Pop a cleared payload arena from pipeline slot `slot`'s free list.
+    pub fn take_buf_in(&mut self, slot: usize) -> Vec<u8> {
+        match self.free_list(slot).pop() {
+            Some(mut b) => {
+                b.clear();
+                b
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a payload arena to pipeline slot `slot`'s free list.
+    pub fn put_buf_in(&mut self, slot: usize, buf: Vec<u8>) {
+        self.free_list(slot).push(buf);
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +149,38 @@ mod tests {
         let b2 = pool.take_buf();
         assert!(b2.is_empty());
         assert!(b2.capacity() >= cap, "pooled buffer lost its capacity");
+    }
+
+    #[test]
+    fn slot_keyed_free_lists_do_not_share_arenas() {
+        let mut pool = ScratchPool::new();
+        pool.ensure_slots(3);
+        assert_eq!(pool.slots.len(), 2);
+        // warm one arena per slot, with distinct capacities
+        for slot in 0..3 {
+            let mut b = pool.take_buf_in(slot);
+            b.extend_from_slice(&vec![slot as u8; 1024 << slot]);
+            pool.put_buf_in(slot, b);
+        }
+        // each slot returns its own warm arena, never a neighbour's
+        for slot in 0..3 {
+            let b = pool.take_buf_in(slot);
+            assert!(b.is_empty());
+            assert!(
+                b.capacity() >= 1024 << slot && b.capacity() < 1024 << (slot + 2),
+                "slot {slot} got a foreign arena (cap {})",
+                b.capacity()
+            );
+            pool.put_buf_in(slot, b);
+        }
+        // slot 0 is the serial free list
+        let b = pool.take_buf();
+        assert!(b.capacity() >= 1024);
+        pool.put_buf_in(0, b);
+        assert_eq!(pool.bufs.len(), 1);
+        // growth-only
+        pool.ensure_slots(2);
+        assert_eq!(pool.slots.len(), 2, "shrinking must not drop warm slots");
     }
 
     #[test]

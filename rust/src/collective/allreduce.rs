@@ -33,8 +33,11 @@ use std::ops::Range;
 use std::sync::{Mutex, OnceLock};
 
 use crate::codec::{GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
-use crate::collective::network::{LinkClass, NetworkModel};
+use crate::collective::network::{
+    pipeline_compute_time, price_pipeline, BucketChain, LinkClass, NetworkModel, PipeJob,
+};
 use crate::collective::topology::{Hop, Topology, TopologyError};
+use crate::metrics::memtraffic::{traffic_model, TrafficModel};
 use crate::util::par;
 use crate::util::pool::WorkerPool;
 
@@ -73,6 +76,25 @@ pub struct RoundReport {
     pub overflow_events: u64,
     /// vNMSE of the aggregated sum vs the exact f64 sum
     pub vnmse: f64,
+    /// Modeled fused-kernel compute time of the round: max over workers
+    /// of their total Table-2 memory traffic at the configured kernel
+    /// bandwidth ([`PipelineCfg::kernel_bw_bps`]). Filled by
+    /// [`AllReduceEngine::run_pipelined`] only (0 for plain rounds);
+    /// independent of the bucket count by construction.
+    pub compute_time_s: f64,
+    /// Modeled end-to-end round latency (compute + comm overlapped).
+    /// Filled by [`AllReduceEngine::run_pipelined`]: at depth 1 this is
+    /// exactly the serial sum `meta + rs + ag + compute`; at depth ≥ 2
+    /// it is `meta + pipelined makespan` from the greedy list scheduler
+    /// ([`crate::collective::network::price_pipeline`]). 0 for plain
+    /// rounds.
+    pub round_latency_s: f64,
+    /// Per-bucket completion times relative to round start (the
+    /// trainer's per-bucket completion handles; empty for plain rounds).
+    /// Each includes the upfront metadata phase; their maximum equals
+    /// [`RoundReport::round_latency_s`] — the round ends when its last
+    /// bucket decodes.
+    pub bucket_done_s: Vec<f64>,
 }
 
 impl RoundReport {
@@ -186,6 +208,203 @@ pub fn hop_context(topology: &Topology, n: usize, round: u32, from: u32, to: u32
         let level = topology.hop_level(from, to);
         base.at_level(level, topology.level_fanin(level, n))
     }
+}
+
+/// Default modeled fused-kernel memory bandwidth for the pipeline's
+/// compute-side pricing: 16 GB/s of effective DRAM traffic through the
+/// Table-2 accounting (a deliberately conservative fraction of an A6000
+/// Ada's ~768 GB/s effective HBM rate — gradient kernels share the GPU
+/// with the backward pass they overlap).
+pub const DEFAULT_KERNEL_BW_BPS: f64 = 16e9;
+
+/// Share of a codec's fixed Table-2 traffic charged to the begin
+/// (preprocess) kernel; the remainder is charged to the final decode.
+/// Frozen with the oracle (`python/validate_pipeline.py`).
+const FIXED_SPLIT: f64 = 0.5;
+
+/// Configuration of a bucketed pipelined round
+/// ([`AllReduceEngine::run_pipelined`]).
+#[derive(Clone, Debug)]
+pub struct PipelineCfg {
+    /// Number of buckets `B` the chunk space is partitioned into (the
+    /// fixed diagonal partition [`bucket_of`]). Must be in `1..=n`.
+    pub buckets: usize,
+    /// Pipeline depth `D`: concurrently admitted buckets = live scratch
+    /// slots. `1` prices the serial baseline (and executes with slot 0
+    /// only); clamped to `buckets`.
+    pub depth: usize,
+    /// Modeled fused-kernel memory bandwidth (bytes/second) pricing the
+    /// chains' compute jobs; see [`DEFAULT_KERNEL_BW_BPS`].
+    pub kernel_bw_bps: f64,
+    /// Per-bucket readiness relative to round start — when the backward
+    /// pass hands each bucket's gradient range over. Missing entries
+    /// (and an empty vector) mean ready at round start.
+    pub bucket_ready_s: Vec<f64>,
+}
+
+impl Default for PipelineCfg {
+    fn default() -> Self {
+        PipelineCfg {
+            buckets: 1,
+            depth: 1,
+            kernel_bw_bps: DEFAULT_KERNEL_BW_BPS,
+            bucket_ready_s: Vec::new(),
+        }
+    }
+}
+
+/// The fixed diagonal bucket partition: chunk `c` belongs to bucket
+/// `(c % m0 + c / m0) % buckets`, with `m0` the level-0 arity
+/// ([`Topology::level_fanin`] at level 0 — workers per node; `m0 = n`
+/// for flat topologies, where this degenerates to `c % buckets`).
+///
+/// Why diagonal: at an intra-node ring stage every worker forwards one
+/// mod-`m0` congruence class of chunks, and at an inter-node stage one
+/// worker per node sends per class — a naive `c % B` partition piles a
+/// whole bucket-stage onto one worker per node. The diagonal spreads
+/// every bucket evenly across both axes. Buckets partition *chunks*, so
+/// they are trivially disjoint: per-chunk hop order (and therefore every
+/// payload byte) is independent of the bucket count and pipeline depth.
+pub fn bucket_of(chunk: u32, m0: u32, buckets: u32) -> u32 {
+    (chunk % m0 + chunk / m0) % buckets
+}
+
+/// Build the per-bucket pipeline job chains of one round from its
+/// schedule and observed payload sizes — the single chain constructor
+/// shared by [`AllReduceEngine::run_pipelined`] and the coordinator's
+/// `price_round_pipelined`, so both paths price the identical pipeline
+/// by construction (and both match `python/validate_pipeline.py`).
+///
+/// `rs_payload_bytes[s][p]` / `ag_payload_bytes[s][p]` is the wire size
+/// of stage `s`'s hop at position `p` (the engine captures them while
+/// executing; the coordinator reconstructs them from its per-bucket
+/// [`crate::coordinator::SendRecord`] streams). `entries[c]` is chunk
+/// `c`'s coordinate count, driving the Table-2 kernel jobs in `traffic`.
+/// Kernel jobs carry **bytes**; [`price_pipeline`] divides by the
+/// configured kernel bandwidth, so captured chains can be re-priced on
+/// other fabrics. Zero-entry buckets (tiny gradients) become empty
+/// chains, exactly like the oracle. `t0` anchors
+/// [`PipelineCfg::bucket_ready_s`] (which is relative to round start)
+/// to the absolute clock.
+#[allow(clippy::too_many_arguments)]
+pub fn build_bucket_chains(
+    topology: &Topology,
+    n: usize,
+    entries: &[u64],
+    traffic: &TrafficModel,
+    rs_payload_bytes: &[Vec<u64>],
+    ag_payload_bytes: &[Vec<u64>],
+    cfg: &PipelineCfg,
+    t0: f64,
+) -> Vec<BucketChain> {
+    let buckets = cfg.buckets as u32;
+    let m0 = topology.level_fanin(0, n);
+    let rs_sched = topology.reduce_scatter(n);
+    let ag_sched = topology.all_gather(n);
+    debug_assert_eq!(rs_sched.len(), rs_payload_bytes.len());
+    debug_assert_eq!(ag_sched.len(), ag_payload_bytes.len());
+    let bucket_ids: Vec<u32> = (0..n as u32).map(|c| bucket_of(c, m0, buckets)).collect();
+    let mut chains: Vec<BucketChain> = Vec::with_capacity(cfg.buckets);
+    for b in 0..buckets {
+        let mut chain = BucketChain {
+            ready_s: t0 + cfg.bucket_ready_s.get(b as usize).copied().unwrap_or(0.0),
+            ..BucketChain::default()
+        };
+        let bents: u64 = (0..n).filter(|&c| bucket_ids[c] == b).map(|c| entries[c]).sum();
+        if bents == 0 {
+            // degenerate zero-entry bucket (tiny d): empty chain — its
+            // header-only payloads still executed and hit the serial wire
+            // accounting, but the pipeline has no work to schedule
+            chains.push(chain);
+            continue;
+        }
+        chain.jobs.push(PipeJob::Kernel {
+            work: (0..n as u32)
+                .map(|w| (w, bents as f64 * (traffic.fixed * FIXED_SPLIT)))
+                .collect(),
+        });
+        for (hops, pay) in rs_sched.iter().zip(rs_payload_bytes) {
+            let mine: Vec<(usize, &Hop)> = hops
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| bucket_ids[h.chunk as usize] == b)
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            // fused-DAR kernel job: entries aggregated per sending worker
+            // (ascending worker order, as the oracle)
+            let mut work: Vec<(u32, u64)> = Vec::new();
+            for &(_, h) in &mine {
+                match work.iter_mut().find(|e| e.0 == h.from) {
+                    Some(e) => e.1 += entries[h.chunk as usize],
+                    None => work.push((h.from, entries[h.chunk as usize])),
+                }
+            }
+            work.sort_by_key(|e| e.0);
+            chain.jobs.push(PipeJob::Kernel {
+                work: work.iter().map(|&(w, e)| (w, e as f64 * traffic.per_hop)).collect(),
+            });
+            let first = mine[0].1;
+            let channel = topology.hop_level(first.from, first.to) as usize;
+            chain.jobs.push(PipeJob::Wire {
+                channel,
+                flows: mine
+                    .iter()
+                    .map(|&(pos, h)| {
+                        (
+                            pay[pos],
+                            topology.link_class(h.from, h.to),
+                            topology.node_of(h.from),
+                            topology.node_of(h.to),
+                        )
+                    })
+                    .collect(),
+            });
+        }
+        // sink-finalize kernel on each chunk owner; completing it frees
+        // the bucket's scratch slot (the pipeline's admission gate)
+        chain.sink_idx = chain.jobs.len();
+        chain.jobs.push(PipeJob::Kernel {
+            work: (0..n as u32)
+                .filter(|&c| bucket_ids[c as usize] == b)
+                .map(|c| (c, entries[c as usize] as f64 * traffic.per_hop))
+                .collect(),
+        });
+        for (hops, pay) in ag_sched.iter().zip(ag_payload_bytes) {
+            let mine: Vec<(usize, &Hop)> = hops
+                .iter()
+                .enumerate()
+                .filter(|(_, h)| bucket_ids[h.chunk as usize] == b)
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            let first = mine[0].1;
+            let channel = topology.hop_level(first.from, first.to) as usize;
+            chain.jobs.push(PipeJob::Wire {
+                channel,
+                flows: mine
+                    .iter()
+                    .map(|&(pos, h)| {
+                        (
+                            pay[pos],
+                            topology.link_class(h.from, h.to),
+                            topology.node_of(h.from),
+                            topology.node_of(h.to),
+                        )
+                    })
+                    .collect(),
+            });
+        }
+        chain.jobs.push(PipeJob::Kernel {
+            work: (0..n as u32)
+                .map(|w| (w, bents as f64 * (traffic.fixed * (1.0 - FIXED_SPLIT))))
+                .collect(),
+        });
+        chains.push(chain);
+    }
+    chains
 }
 
 /// One send of a stage, owned by its producing worker's [`WorkerJob`]
@@ -435,7 +654,7 @@ impl AllReduceEngine {
         for hops in &rs_sched {
             self.run_stage(
                 hops, codecs_ro, &pres, &ranges, n, round, threads, pool, stage_state,
-                &mut report, &mut produced,
+                &mut report, &mut produced, 0,
             );
             // each message priced on the link tier its hop crosses
             // (intra-node vs NIC for hierarchical topologies), carrying
@@ -466,7 +685,7 @@ impl AllReduceEngine {
             (0..n as u32).map(|c| Hop { from: c, to: c, chunk: c }).collect();
         self.run_stage(
             &sink_hops, codecs_ro, &pres, &ranges, n, round, threads, pool, stage_state,
-            &mut report, &mut produced,
+            &mut report, &mut produced, 0,
         );
         let mut broadcast: Vec<(Vec<u8>, u32)> = Vec::with_capacity(n);
         for (_, chunk, payload, summed) in produced.drain(..) {
@@ -568,6 +787,326 @@ impl AllReduceEngine {
         Ok((result, report))
     }
 
+    /// [`AllReduceEngine::run_pooled`] with bucketed pipelining: the
+    /// chunk space is split by the fixed diagonal partition
+    /// ([`bucket_of`]) and buckets flow through the multi-hop schedule
+    /// as independent pipelines — bucket `b+1` runs its compress /
+    /// fused-DAR kernels while bucket `b` is on the wire, bounded by
+    /// `depth` double-buffered [`ScratchPool`] slots.
+    ///
+    /// **Determinism contract**: payload bytes, wire bytes and values
+    /// are byte-identical to [`AllReduceEngine::run_pooled`] for every
+    /// `(buckets, depth, threads)` — buckets partition chunks, so every
+    /// per-chunk hop chain executes in the exact same order; only the
+    /// *pricing* changes. The report's `meta/rs/ag` times and
+    /// `stage_times_s` keep their serial stage-walk values at every
+    /// depth (flows are captured in original hop order, preserving the
+    /// congestion bounds' order-sensitive summation); the pipelined
+    /// latency lands in [`RoundReport::round_latency_s`] /
+    /// [`RoundReport::bucket_done_s`], priced by the greedy list
+    /// scheduler ([`price_pipeline`]) at depth ≥ 2 and by the serial sum
+    /// `meta + rs + ag + compute` at depth 1 (bit-equal comm times to
+    /// the unpipelined round). Oracle: `python/validate_pipeline.py`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_pipelined(
+        &self,
+        grads: &[Vec<f32>],
+        codecs: &mut [Box<dyn GradCodec>],
+        round: u32,
+        t0: f64,
+        pool: &mut ScratchPool,
+        cfg: &PipelineCfg,
+    ) -> Result<(Vec<f32>, RoundReport), TopologyError> {
+        let n = grads.len();
+        self.topology.validate(n)?;
+        assert_eq!(codecs.len(), n);
+        let d = grads[0].len();
+        assert!(grads.iter().all(|g| g.len() == d));
+        assert!(cfg.buckets >= 1, "bucket count must be ≥ 1, got {}", cfg.buckets);
+        assert!(
+            cfg.buckets <= n,
+            "more buckets ({}) than chunks (n = {n}) would leave empty pipelines",
+            cfg.buckets
+        );
+        assert!(cfg.depth >= 1, "pipeline depth must be ≥ 1, got {}", cfg.depth);
+        assert!(
+            cfg.kernel_bw_bps > 0.0 && cfg.kernel_bw_bps.is_finite(),
+            "kernel bandwidth must be positive, got {}",
+            cfg.kernel_bw_bps
+        );
+        let buckets = cfg.buckets as u32;
+        let depth = cfg.depth.min(cfg.buckets);
+        let threads = self.threads.clamp(1, n.max(1));
+        let m0 = self.topology.level_fanin(0, n);
+        let traffic = traffic_model(codecs[0].name());
+        let mut round_guard = match self.stage.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let stage_state = &mut *round_guard;
+        let mut report = RoundReport::default();
+        let mut now = t0;
+        let mk_ctx = |worker: u32, summed: u32| {
+            HopCtx::flat(worker, n as u32, round, summed).at_broadcast()
+        };
+
+        // ---- metadata all-reduce: identical to run_pooled (serial,
+        // upfront — the pipeline starts after it on every path) ----
+        let metas: Vec<Vec<f32>> = self.par_map_codecs(codecs, threads, |i, c| {
+            c.metadata(&grads[i], &mk_ctx(i as u32, 1))
+        });
+        let mlen = metas[0].len();
+        assert!(metas.iter().all(|m| m.len() == mlen), "metadata length disagreement");
+        let op = codecs[0].metadata_op();
+        let mut agg_meta = metas[0].clone();
+        match op {
+            MetaOp::Sum => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a += v;
+                    }
+                }
+            }
+            MetaOp::Max => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a = a.max(v);
+                    }
+                }
+            }
+        }
+        if mlen > 0 {
+            let per_stage = (mlen.div_ceil(n) * 4) as u64;
+            let stage_msgs = vec![per_stage; n];
+            for _ in 0..2 * (n - 1) {
+                let dt = self.net.stage_time(&stage_msgs, now);
+                now += dt;
+                report.meta_time_s += dt;
+            }
+            report.meta_bytes = (2 * (n - 1) * n) as u64 * per_stage;
+        }
+
+        // ---- preprocess (whole gradient, as run_pooled) ----
+        let pres: Vec<Vec<f32>> = {
+            let agg = &agg_meta;
+            self.par_map_codecs(codecs, threads, |i, c| {
+                c.begin_round(&grads[i], agg, &mk_ctx(i as u32, 1))
+            })
+        };
+        let padded = pres[0].len();
+        assert!(pres.iter().all(|p| p.len() == padded), "padded length disagreement");
+        let align = codecs[0].chunk_alignment();
+        let ranges = crate::codec::chunk_ranges(padded, n, align);
+
+        pool.ensure_workers(n);
+        pool.ensure_slots(depth);
+        let codecs_ro: &[Box<dyn GradCodec>] = &*codecs;
+        let rs_sched = self.topology.reduce_scatter(n);
+        let ag_sched = self.topology.all_gather(n);
+        report.stage_times_s.reserve(rs_sched.len());
+        let bucket_ids: Vec<u32> = (0..n as u32).map(|c| bucket_of(c, m0, buckets)).collect();
+        let entries: Vec<u64> = ranges.iter().map(|r| r.len() as u64).collect();
+        // per-stage flows captured at their ORIGINAL hop positions: the
+        // congestion bounds sum in first-seen order, so the serial
+        // pricing walk below must see exactly the flow order run_pooled
+        // prices (every hop belongs to exactly one bucket, so every
+        // placeholder is overwritten)
+        let hole = (0u64, LinkClass::Nic, 0u32, 0u32);
+        let mut rs_flows: Vec<Vec<(u64, LinkClass, u32, u32)>> =
+            rs_sched.iter().map(|h| vec![hole; h.len()]).collect();
+        let mut ag_flows: Vec<Vec<(u64, LinkClass, u32, u32)>> =
+            ag_sched.iter().map(|h| vec![hole; h.len()]).collect();
+
+        let mut broadcast: Vec<Option<(Vec<u8>, u32)>> = (0..n).map(|_| None).collect();
+        let mut summed_pre = vec![0.0f32; padded];
+        let mut produced: Vec<(u32, u32, Vec<u8>, u32)> = Vec::new();
+        let mut bucket_hops: Vec<(usize, Hop)> = Vec::new();
+        let mut slice: Vec<Hop> = Vec::new();
+
+        // ---- bucket-major walk: execute bucket b end-to-end (its RS
+        // slices, sink, AG capture, decode), then b+1 — valid because
+        // buckets partition chunks, so no cross-bucket data dependency
+        // exists; the pipelined *latency* is priced afterwards from the
+        // captured flows ----
+        for b in 0..buckets {
+            let slot = b as usize % depth;
+            for (s, hops) in rs_sched.iter().enumerate() {
+                bucket_hops.clear();
+                bucket_hops.extend(
+                    hops.iter()
+                        .enumerate()
+                        .filter(|(_, h)| bucket_ids[h.chunk as usize] == b)
+                        .map(|(p, h)| (p, *h)),
+                );
+                if bucket_hops.is_empty() {
+                    continue;
+                }
+                slice.clear();
+                slice.extend(bucket_hops.iter().map(|&(_, h)| h));
+                self.run_stage(
+                    &slice, codecs_ro, &pres, &ranges, n, round, threads, pool, stage_state,
+                    &mut report, &mut produced, slot,
+                );
+                for ((pos, h), (_, _, payload, _)) in bucket_hops.iter().zip(produced.iter()) {
+                    rs_flows[s][*pos] = (
+                        payload.len() as u64,
+                        self.topology.link_class(h.from, h.to),
+                        self.topology.node_of(h.from),
+                        self.topology.node_of(h.to),
+                    );
+                    report.rs_bytes += payload.len() as u64;
+                }
+                for (to, chunk, payload, summed) in produced.drain(..) {
+                    pool.inbox[to as usize * n + chunk as usize].push((payload, summed));
+                }
+            }
+
+            // sink-finalize: chunk owners fuse their chunk → broadcast
+            // payloads; completing this frees the bucket's scratch slot
+            slice.clear();
+            slice.extend(
+                (0..n as u32)
+                    .filter(|&c| bucket_ids[c as usize] == b)
+                    .map(|c| Hop { from: c, to: c, chunk: c }),
+            );
+            self.run_stage(
+                &slice, codecs_ro, &pres, &ranges, n, round, threads, pool, stage_state,
+                &mut report, &mut produced, slot,
+            );
+            for (_, chunk, payload, summed) in produced.drain(..) {
+                debug_assert_eq!(summed, n as u32, "sink payload must aggregate all workers");
+                broadcast[chunk as usize] = Some((payload, summed));
+            }
+
+            // all-gather: wire-only — capture flows for pricing
+            for (s, hops) in ag_sched.iter().enumerate() {
+                for (pos, h) in hops.iter().enumerate() {
+                    if bucket_ids[h.chunk as usize] != b {
+                        continue;
+                    }
+                    let bytes = broadcast[h.chunk as usize]
+                        .as_ref()
+                        .expect("sink produced this bucket's chunks")
+                        .0
+                        .len() as u64;
+                    ag_flows[s][pos] = (
+                        bytes,
+                        self.topology.link_class(h.from, h.to),
+                        self.topology.node_of(h.from),
+                        self.topology.node_of(h.to),
+                    );
+                    report.ag_bytes += bytes;
+                }
+            }
+
+            // decode this bucket's chunks, then hand its arenas back to
+            // its slot — never to another slot's in-flight bucket
+            for c in 0..n {
+                if bucket_ids[c] != b {
+                    continue;
+                }
+                let (payload, k) = broadcast[c].take().expect("sink produced the chunk");
+                let range = ranges[c].clone();
+                if !range.is_empty() {
+                    codecs_ro[0].decompress_into(
+                        &payload,
+                        range.clone(),
+                        &mk_ctx(0, k),
+                        &mut summed_pre[range.clone()],
+                    );
+                    report.decompress_calls += 1;
+                    if self.verify_consistency && n > 1 {
+                        let slab = &mut pool.workers[1].slab;
+                        slab.resize(range.len(), 0.0);
+                        codecs_ro[1].decompress_into(&payload, range.clone(), &mk_ctx(1, k), slab);
+                        assert_eq!(
+                            &summed_pre[range],
+                            &slab[..],
+                            "workers decoded different results for chunk {c}"
+                        );
+                    }
+                }
+                pool.put_buf_in(slot, payload);
+            }
+        }
+        debug_assert!(pool.inbox.iter().all(|v| v.is_empty()));
+
+        // ---- serial pricing walk over the captured flows: bit-identical
+        // to run_pooled's per-stage costing at any bucket count ----
+        for flows in rs_flows.iter() {
+            let dt = self.net.stage_time_congested(flows, now);
+            now += dt;
+            report.rs_time_s += dt;
+            report.stage_times_s.push(dt);
+        }
+        for flows in ag_flows.iter() {
+            let dt = self.net.stage_time_congested(flows, now);
+            now += dt;
+            report.ag_time_s += dt;
+        }
+
+        // ---- pipelined latency: greedy list scheduling of the chains
+        // (depth 1 = the serial sum, the exact unpipelined baseline) ----
+        let rs_pay: Vec<Vec<u64>> =
+            rs_flows.iter().map(|v| v.iter().map(|f| f.0).collect()).collect();
+        let ag_pay: Vec<Vec<u64>> =
+            ag_flows.iter().map(|v| v.iter().map(|f| f.0).collect()).collect();
+        let chains = build_bucket_chains(
+            &self.topology, n, &entries, &traffic, &rs_pay, &ag_pay, cfg, t0,
+        );
+        report.compute_time_s = pipeline_compute_time(&chains, n, cfg.kernel_bw_bps);
+        if depth <= 1 {
+            report.round_latency_s = report.comm_time_s() + report.compute_time_s;
+            report.bucket_done_s = vec![report.round_latency_s; cfg.buckets];
+        } else {
+            let sched = price_pipeline(
+                &self.net,
+                &chains,
+                depth,
+                n,
+                self.topology.num_levels(),
+                cfg.kernel_bw_bps,
+                t0 + report.meta_time_s,
+            );
+            report.round_latency_s = sched.makespan_s - t0;
+            report.bucket_done_s = sched.bucket_done_s.iter().map(|&x| x - t0).collect();
+        }
+
+        // ---- postprocess: identical to run_pooled ----
+        let result = {
+            let sp = &summed_pre;
+            let outs = self.par_map_codecs(codecs, threads, |i, c| {
+                c.end_round(sp.clone(), &mk_ctx(i as u32, n as u32))
+            });
+            let mut outs = outs.into_iter();
+            let result = outs.next().expect("n >= 1 workers");
+            if self.verify_consistency {
+                for out in outs {
+                    assert_eq!(result.len(), out.len());
+                }
+            }
+            result
+        };
+        report.overflow_events = codecs.iter().map(|c| c.overflow_count()).sum();
+        if self.measure_vnmse {
+            let mut exact = vec![0.0f64; d];
+            for g in grads {
+                for (e, &v) in exact.iter_mut().zip(g) {
+                    *e += v as f64;
+                }
+            }
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (e, &r) in exact.iter().zip(result.iter()) {
+                let diff = e - r as f64;
+                num += diff * diff;
+                den += e * e;
+            }
+            report.vnmse = if den > 0.0 { num / den } else { 0.0 };
+        }
+        Ok((result, report))
+    }
+
     /// Execute every kernel of one schedule stage (reduce-scatter stage or
     /// the sink-finalize pseudo-stage), filling `produced` with
     /// `(to, chunk, payload, summed)` in hop order. Sequential when
@@ -576,6 +1115,11 @@ impl AllReduceEngine {
     /// [`WorkerPool`] (no per-stage thread spawn; the job spines come
     /// from the reusable [`StageState`], so warm stages stay off the
     /// heap here too) — numerics are identical either way.
+    ///
+    /// `slot` keys the payload-arena free list (see
+    /// [`ScratchPool::take_buf_in`]): plain rounds pass 0; the pipelined
+    /// walk passes `bucket % depth` so double-buffered buckets never
+    /// alias an arena still referenced by an in-flight send.
     #[allow(clippy::too_many_arguments)]
     fn run_stage(
         &self,
@@ -590,24 +1134,36 @@ impl AllReduceEngine {
         stage: &mut StageState,
         report: &mut RoundReport,
         produced: &mut Vec<(u32, u32, Vec<u8>, u32)>,
+        slot: usize,
     ) {
         produced.clear();
         let hop_ctx = |from: u32, to: u32| hop_context(&self.topology, n, round, from, to);
         if threads <= 1 || hops.len() <= 1 {
             let mut counters = KernelCounters::default();
+            // disjoint field borrows: the slot's free list serves both
+            // arena takes and recycling alongside the inbox/worker tables
+            let ScratchPool { bufs, slots, workers, inbox } = &mut *pool;
+            let free: &mut Vec<Vec<u8>> =
+                if slot == 0 { bufs } else { &mut slots[slot - 1] };
             for h in hops {
-                let mut out = pool.take_buf();
+                let mut out = match free.pop() {
+                    Some(mut b) => {
+                        b.clear();
+                        b
+                    }
+                    None => Vec::new(),
+                };
                 let ctx = hop_ctx(h.from, h.to);
                 let idx = h.from as usize * n + h.chunk as usize;
                 let summed = produce_hop(
                     codecs[h.from as usize].as_ref(),
                     &pres[h.from as usize],
-                    &mut pool.inbox[idx],
+                    &mut inbox[idx],
                     ranges[h.chunk as usize].clone(),
                     &ctx,
-                    &mut pool.workers[h.from as usize],
+                    &mut workers[h.from as usize],
                     &mut out,
-                    &mut pool.bufs,
+                    &mut *free,
                     &mut counters,
                 );
                 produced.push((h.to, h.chunk, out, summed));
@@ -638,7 +1194,7 @@ impl AllReduceEngine {
             };
             let idx = h.from as usize * n + h.chunk as usize;
             let received = std::mem::take(&mut pool.inbox[idx]);
-            let out = pool.take_buf();
+            let out = pool.take_buf_in(slot);
             jobs[ji].sends.push(SendJob {
                 pos,
                 to: h.to,
@@ -679,11 +1235,11 @@ impl AllReduceEngine {
             // buffers of every send.
             for mut job in jobs.drain(..) {
                 pool.workers[job.w as usize] = std::mem::take(&mut job.scratch);
-                pool.bufs.append(&mut job.recycle);
+                pool.free_list(slot).append(&mut job.recycle);
                 for mut s in job.sends.drain(..) {
-                    pool.put_buf(s.out);
+                    pool.put_buf_in(slot, s.out);
                     for (buf, _) in s.received.drain(..) {
-                        pool.put_buf(buf);
+                        pool.put_buf_in(slot, buf);
                     }
                 }
             }
@@ -696,7 +1252,7 @@ impl AllReduceEngine {
             report.absorb(&job.counters);
             let w = job.w as usize;
             pool.workers[w] = std::mem::take(&mut job.scratch);
-            pool.bufs.append(&mut job.recycle);
+            pool.free_list(slot).append(&mut job.recycle);
             for s in job.sends.drain(..) {
                 // hand the (drained) inbox spine back to its slot so the
                 // next stage's delivery push reuses its capacity
@@ -1023,5 +1579,138 @@ mod tests {
             assert!(rep.vnmse.is_finite());
         }
         assert!(last < 1.0);
+    }
+
+    #[test]
+    fn bucket_partition_is_diagonal_and_total() {
+        // flat (m0 = n): degenerates to c % B
+        for c in 0..16u32 {
+            assert_eq!(bucket_of(c, 16, 4), c % 4);
+        }
+        // hierarchical m0 = 4: consecutive chunks of one node land in
+        // different buckets AND each mod-m0 class spreads across buckets
+        let ids: Vec<u32> = (0..16u32).map(|c| bucket_of(c, 4, 4)).collect();
+        for b in 0..4u32 {
+            assert_eq!(ids.iter().filter(|&&x| x == b).count(), 4, "bucket {b} unbalanced");
+        }
+        assert!((0..4).any(|k| ids[k] != ids[0]), "intra-node chunks must spread");
+    }
+
+    #[test]
+    fn pipelined_rounds_are_bit_identical_to_pooled() {
+        use crate::collective::topology::Level;
+        // the tentpole invariant: bucket count, pipeline depth and thread
+        // count must not perturb a single byte — payloads, wire bytes,
+        // kernel tallies, values, and the serial stage-walk comm times
+        for (scheme, topo, n) in [
+            ("dynamiq", Topology::Ring, 8),
+            ("thc", Topology::hierarchical(Level::Ring, Level::Ring, 4), 8),
+            ("bf16", Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+        ] {
+            let g = grads(n, 6144, 31);
+            let (base, base_rep) = {
+                let mut codecs = mk_codecs(scheme, n);
+                let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+                eng.threads = 1;
+                eng.verify_consistency = true;
+                eng.run_pooled(&g, &mut codecs, 0, 0.0, &mut ScratchPool::new()).unwrap()
+            };
+            for buckets in [2usize, 4] {
+                for depth in [1usize, 2, 4] {
+                    for threads in [1usize, 4] {
+                        let cfg = PipelineCfg { buckets, depth, ..PipelineCfg::default() };
+                        let mut codecs = mk_codecs(scheme, n);
+                        let mut eng =
+                            AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+                        eng.threads = threads;
+                        eng.verify_consistency = true;
+                        let mut pool = ScratchPool::new();
+                        let (out, rep) =
+                            eng.run_pipelined(&g, &mut codecs, 0, 0.0, &mut pool, &cfg).unwrap();
+                        let tag = format!(
+                            "{scheme}/{} B={buckets} D={depth} T={threads}",
+                            topo.name()
+                        );
+                        assert_eq!(base, out, "{tag}: values diverged");
+                        assert_eq!(base_rep.meta_bytes, rep.meta_bytes, "{tag}");
+                        assert_eq!(base_rep.rs_bytes, rep.rs_bytes, "{tag}");
+                        assert_eq!(base_rep.ag_bytes, rep.ag_bytes, "{tag}");
+                        assert_eq!(base_rep.compress_calls, rep.compress_calls, "{tag}");
+                        assert_eq!(base_rep.dar_calls, rep.dar_calls, "{tag}");
+                        assert_eq!(base_rep.da_calls, rep.da_calls, "{tag}");
+                        assert_eq!(
+                            base_rep.entries_processed, rep.entries_processed,
+                            "{tag}"
+                        );
+                        // the serial stage-walk pricing is bit-identical at
+                        // every depth (flows re-priced in original hop order)
+                        assert_eq!(base_rep.meta_time_s, rep.meta_time_s, "{tag}");
+                        assert_eq!(base_rep.rs_time_s, rep.rs_time_s, "{tag}");
+                        assert_eq!(base_rep.ag_time_s, rep.ag_time_s, "{tag}");
+                        assert_eq!(base_rep.stage_times_s, rep.stage_times_s, "{tag}");
+                        // completion handles: one per bucket, max = round end
+                        assert_eq!(rep.bucket_done_s.len(), buckets, "{tag}");
+                        let last = rep
+                            .bucket_done_s
+                            .iter()
+                            .cloned()
+                            .fold(f64::NEG_INFINITY, f64::max);
+                        assert_eq!(last, rep.round_latency_s, "{tag}");
+                        assert!(rep.compute_time_s > 0.0, "{tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depth_one_pipeline_prices_the_exact_serial_round() {
+        // depth 1 is the unpipelined baseline by construction: comm times
+        // bit-equal to run_pooled, latency = the serial sum
+        let n = 8;
+        let g = grads(n, 4096, 7);
+        let topo = Topology::hierarchical(
+            crate::collective::topology::Level::Ring,
+            crate::collective::topology::Level::Ring,
+            4,
+        );
+        let cfg = PipelineCfg { buckets: 4, depth: 1, ..PipelineCfg::default() };
+        let mut codecs = mk_codecs("dynamiq", n);
+        let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+        let (_, rep) =
+            eng.run_pipelined(&g, &mut codecs, 0, 0.0, &mut ScratchPool::new(), &cfg).unwrap();
+        assert_eq!(rep.round_latency_s, rep.comm_time_s() + rep.compute_time_s);
+        assert!(rep.bucket_done_s.iter().all(|&x| x == rep.round_latency_s));
+    }
+
+    #[test]
+    fn bucket_ready_times_delay_the_pipelined_round() {
+        // the trainer's backward-window input: a late last bucket pushes
+        // the modeled round end out, an early one does not
+        let n = 8;
+        let g = grads(n, 8192, 13);
+        let topo = Topology::hierarchical(
+            crate::collective::topology::Level::Ring,
+            crate::collective::topology::Level::Ring,
+            4,
+        );
+        let run_with = |ready: Vec<f64>| {
+            let cfg = PipelineCfg {
+                buckets: 4,
+                depth: 2,
+                bucket_ready_s: ready,
+                ..PipelineCfg::default()
+            };
+            let mut codecs = mk_codecs("dynamiq", n);
+            let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+            let (_, rep) = eng
+                .run_pipelined(&g, &mut codecs, 0, 0.0, &mut ScratchPool::new(), &cfg)
+                .unwrap();
+            rep
+        };
+        let base = run_with(Vec::new());
+        let late = run_with(vec![0.0, 0.0, 0.0, 10.0 * base.round_latency_s]);
+        assert!(late.round_latency_s > base.round_latency_s, "late bucket must delay");
+        assert_eq!(base.rs_bytes, late.rs_bytes, "readiness is pricing-only");
     }
 }

@@ -20,7 +20,13 @@ pub mod hierarchy;
 pub mod network;
 pub mod topology;
 
-pub use allreduce::{hop_context, produce_hop, AllReduceEngine, KernelCounters, RoundReport};
+pub use allreduce::{
+    bucket_of, build_bucket_chains, hop_context, produce_hop, AllReduceEngine, KernelCounters,
+    PipelineCfg, RoundReport,
+};
 pub use hierarchy::LevelSpec;
-pub use network::{LinkClass, LinkSpec, NetworkModel, NicProfile};
+pub use network::{
+    pipeline_compute_time, price_pipeline, price_stage_walk, BucketChain, LinkClass, LinkSpec,
+    NetworkModel, NicProfile, PipeJob, PipelineSchedule,
+};
 pub use topology::{stage_census, HierarchySpec, Level, LevelStack, Topology, TopologyError};

@@ -514,6 +514,257 @@ impl NetworkModel {
     }
 }
 
+/// One job in a bucket's pipeline chain (see [`BucketChain`]).
+///
+/// Kernel jobs carry modeled *bytes* of fused-kernel memory traffic, not
+/// seconds: seconds are assigned at pricing time (`bytes /
+/// kernel_bw_bps`), so one captured chain can be re-priced under
+/// different kernel-bandwidth assumptions without re-running the round.
+#[derive(Clone, Debug)]
+pub enum PipeJob {
+    /// A compute engagement on the participating workers.
+    Kernel {
+        /// `(worker, modeled kernel traffic in bytes)` per participant
+        work: Vec<(u32, f64)>,
+    },
+    /// A wire engagement: one bucket's slice of one schedule stage, in
+    /// original hop order, riding one wire channel (= link level; the
+    /// top level is the NIC).
+    Wire {
+        /// wire channel index — the stage's hierarchy level
+        channel: usize,
+        /// `(bytes, class, from_node, to_node)` flows, hop order
+        flows: Vec<(u64, LinkClass, u32, u32)>,
+    },
+}
+
+/// One bucket's job chain through the multi-hop schedule:
+/// K(begin) → per RS stage [K(hop), W] → K(sink-finalize) → per AG stage
+/// [W] → K(decode). Built by the engine's pipelined walk (and
+/// reconstructed by the coordinator's pipelined pricer) — see
+/// [`crate::collective::allreduce::AllReduceEngine::run_pipelined`].
+#[derive(Clone, Debug, Default)]
+pub struct BucketChain {
+    /// the chain's jobs, in dependency order
+    pub jobs: Vec<PipeJob>,
+    /// index of the sink-finalize kernel job: completing it frees the
+    /// bucket's compute-side scratch slot (the admission gate's signal)
+    pub sink_idx: usize,
+    /// earliest time the bucket's gradient range is available (backward
+    /// pass readiness; 0 = ready at round start)
+    pub ready_s: f64,
+}
+
+/// Result of [`price_pipeline`]: absolute completion times (the caller's
+/// `t0` is included, matching the event engine's virtual-clock
+/// convention).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineSchedule {
+    /// completion time of the last bucket (absolute)
+    pub makespan_s: f64,
+    /// per-bucket completion times (absolute) — the trainer's per-bucket
+    /// completion handles
+    pub bucket_done_s: Vec<f64>,
+    /// total seconds any wire channel was occupied (sums over channels)
+    pub wire_busy_s: f64,
+    /// number of merged wire engagements (congestion solves) performed
+    pub cohorts: u64,
+}
+
+/// Price a bucketed pipelined round by greedy list scheduling (oracle:
+/// `python/validate_pipeline.py::schedule`).
+///
+/// Resources: one compute clock per worker and one wire server per link
+/// *level* (`channels` = number of hierarchy levels; the intra fabric
+/// and the NIC are separate hardware and overlap freely, while two
+/// engagements on the same level serialize unless they merge). A wire
+/// engagement merges **every** ready same-level [`PipeJob::Wire`] front
+/// into a single [`NetworkModel::stage_time_congested`] solve — the
+/// concurrently in-flight buckets are priced together per virtual time
+/// step instead of per-stage barriers.
+///
+/// Admission gate: bucket `b`'s first post-begin job (chain index 1)
+/// waits for bucket `b − depth`'s sink-finalize — the compute-side
+/// scratch slot is freed there — so `depth` slots bound live scratch
+/// while early buckets' all-gather still overlaps late buckets'
+/// reduce-scatter. Begin kernels are admitted on readiness alone.
+///
+/// Ties prefer the wire (`wire_est ≤ kernel_est`) and, within a
+/// resource, the lowest bucket index — the walk is fully deterministic.
+pub fn price_pipeline(
+    net: &NetworkModel,
+    chains: &[BucketChain],
+    depth: usize,
+    workers: usize,
+    channels: usize,
+    kernel_bw_bps: f64,
+    t0: f64,
+) -> PipelineSchedule {
+    assert!(depth >= 1, "pipeline depth must be ≥ 1, got {depth}");
+    assert!(
+        kernel_bw_bps > 0.0 && kernel_bw_bps.is_finite(),
+        "kernel bandwidth must be positive, got {kernel_bw_bps}"
+    );
+    let nb = chains.len();
+    let mut wire_avail = vec![t0; channels.max(1)];
+    let mut worker_avail = vec![t0; workers];
+    let mut nxt = vec![0usize; nb];
+    let mut btime: Vec<f64> = chains.iter().map(|c| t0.max(c.ready_s)).collect();
+    let mut done: Vec<Option<f64>> = vec![None; nb];
+    let mut sink_done: Vec<Option<f64>> = vec![None; nb];
+    let mut wire_busy = 0.0f64;
+    let mut cohorts = 0u64;
+    // chain-ready time of bucket b's front job, or None when the bucket
+    // is finished or gated behind its scratch slot
+    let front_ready = |b: usize,
+                       nxt: &[usize],
+                       btime: &[f64],
+                       sink_done: &[Option<f64>]|
+     -> Option<f64> {
+        if nxt[b] >= chains[b].jobs.len() {
+            return None;
+        }
+        let mut cr = btime[b];
+        if nxt[b] == 1 && b >= depth {
+            cr = cr.max(sink_done[b - depth]?);
+        }
+        Some(cr)
+    };
+    loop {
+        // best (earliest-start, lowest-bucket) candidate per resource kind
+        let mut kbest: Option<(f64, usize)> = None;
+        let mut wbest: Option<(f64, usize)> = None;
+        for b in 0..nb {
+            if nxt[b] >= chains[b].jobs.len() {
+                if done[b].is_none() {
+                    done[b] = Some(btime[b]);
+                }
+                continue;
+            }
+            let Some(cr) = front_ready(b, &nxt, &btime, &sink_done) else {
+                continue;
+            };
+            match &chains[b].jobs[nxt[b]] {
+                PipeJob::Kernel { work } => {
+                    let est =
+                        work.iter().fold(cr, |a, &(w, _)| a.max(worker_avail[w as usize]));
+                    if kbest.is_none_or(|(e, _)| est < e) {
+                        kbest = Some((est, b));
+                    }
+                }
+                PipeJob::Wire { channel, .. } => {
+                    let est = cr.max(wire_avail[*channel]);
+                    if wbest.is_none_or(|(e, _)| est < e) {
+                        wbest = Some((est, b));
+                    }
+                }
+            }
+        }
+        let take_wire = match (wbest, kbest) {
+            (Some((we, _)), Some((ke, _))) => we <= ke,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        if take_wire {
+            let (start, bsel) = wbest.expect("wire candidate");
+            let lvl = match &chains[bsel].jobs[nxt[bsel]] {
+                PipeJob::Wire { channel, .. } => *channel,
+                PipeJob::Kernel { .. } => unreachable!("wire candidate is a kernel"),
+            };
+            // merge every ready same-level wire front into one solve,
+            // members bucket-ascending, flows in in-bucket hop order
+            let mut members: Vec<usize> = Vec::new();
+            let mut flows: Vec<(u64, LinkClass, u32, u32)> = Vec::new();
+            for b in 0..nb {
+                let Some(cr) = front_ready(b, &nxt, &btime, &sink_done) else {
+                    continue;
+                };
+                if let PipeJob::Wire { channel, flows: f } = &chains[b].jobs[nxt[b]] {
+                    if *channel == lvl && cr <= start {
+                        members.push(b);
+                        flows.extend_from_slice(f);
+                    }
+                }
+            }
+            let dt = net.stage_time_congested(&flows, start);
+            wire_busy += dt;
+            cohorts += 1;
+            for &b in &members {
+                btime[b] = start + dt;
+                nxt[b] += 1;
+                if nxt[b] >= chains[b].jobs.len() {
+                    done[b] = Some(btime[b]);
+                }
+            }
+            wire_avail[lvl] = start + dt;
+        } else {
+            let (start, b) = kbest.expect("kernel candidate");
+            let work = match &chains[b].jobs[nxt[b]] {
+                PipeJob::Kernel { work } => work,
+                PipeJob::Wire { .. } => unreachable!("kernel candidate is a wire"),
+            };
+            let mut fin = start;
+            for &(w, bytes) in work {
+                let s = bytes / kernel_bw_bps;
+                worker_avail[w as usize] = start + s;
+                fin = fin.max(start + s);
+            }
+            btime[b] = fin;
+            if nxt[b] == chains[b].sink_idx {
+                sink_done[b] = Some(fin);
+            }
+            nxt[b] += 1;
+            if nxt[b] >= chains[b].jobs.len() {
+                done[b] = Some(fin);
+            }
+        }
+    }
+    let bucket_done_s: Vec<f64> = (0..nb).map(|b| done[b].unwrap_or(btime[b])).collect();
+    let makespan_s = bucket_done_s.iter().fold(t0, |a, &x| a.max(x));
+    PipelineSchedule { makespan_s, bucket_done_s, wire_busy_s: wire_busy, cohorts }
+}
+
+/// Serial stage walk over pre-captured per-stage flows: the sum of
+/// per-stage [`NetworkModel::stage_time_congested`] solves, each started
+/// where the previous one ended — exactly `run_pooled`'s comm pricing.
+/// Returns the *duration* (not the absolute end time). Flow order within
+/// a stage matters to the congestion bounds' summation order, so callers
+/// must pass flows in original hop order.
+pub fn price_stage_walk(
+    net: &NetworkModel,
+    stages: &[Vec<(u64, LinkClass, u32, u32)>],
+    t0: f64,
+) -> f64 {
+    let mut now = t0;
+    for flows in stages {
+        now += net.stage_time_congested(flows, now);
+    }
+    now - t0
+}
+
+/// The serial baseline's kernel time: max over workers of their total
+/// chain work (every kernel job of every bucket, summed per worker, at
+/// `kernel_bw_bps`). Independent of bucket count by construction — the
+/// same bytes move through the same kernels however they are bucketed.
+pub fn pipeline_compute_time(
+    chains: &[BucketChain],
+    workers: usize,
+    kernel_bw_bps: f64,
+) -> f64 {
+    let mut per_w = vec![0.0f64; workers];
+    for chain in chains {
+        for job in &chain.jobs {
+            if let PipeJob::Kernel { work } = job {
+                for &(w, bytes) in work {
+                    per_w[w as usize] += bytes / kernel_bw_bps;
+                }
+            }
+        }
+    }
+    per_w.iter().fold(0.0, |a, &x| a.max(x))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -866,6 +1117,124 @@ mod tests {
     #[should_panic(expected = "uncontended default profile")]
     fn gateway_rejects_the_identity_combination() {
         NicProfile::gateway(1, 1.0);
+    }
+
+    /// A minimal 2-job chain: zero-cost begin kernel, then one NIC flow,
+    /// then a sink kernel of `sink_bytes` — the smallest shape exercising
+    /// the depth gate (sink frees the slot).
+    fn wire_chain(from: u32, to: u32, bytes: u64, sink_bytes: f64) -> BucketChain {
+        BucketChain {
+            jobs: vec![
+                PipeJob::Kernel { work: vec![(from, 0.0)] },
+                PipeJob::Wire { channel: 0, flows: vec![(bytes, LinkClass::Nic, from, to)] },
+                PipeJob::Kernel { work: vec![(to, sink_bytes)] },
+            ],
+            sink_idx: 2,
+            ready_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn pipeline_single_kernel_chain_prices_bytes_over_bandwidth() {
+        let net = NetworkModel::isolated_100g();
+        let chains = [BucketChain {
+            jobs: vec![PipeJob::Kernel { work: vec![(0, 1.6e9), (1, 0.8e9)] }],
+            sink_idx: 0,
+            ready_s: 0.0,
+        }];
+        let s = price_pipeline(&net, &chains, 1, 2, 1, 16e9, 0.25);
+        // slowest participant: 1.6e9 / 16e9 = 0.1 s past t0
+        assert!((s.makespan_s - 0.35).abs() < 1e-12, "{}", s.makespan_s);
+        assert_eq!(s.bucket_done_s.len(), 1);
+        assert_eq!(s.cohorts, 0);
+        assert_eq!(s.wire_busy_s, 0.0);
+        // and the serial compute bound agrees
+        assert!((pipeline_compute_time(&chains, 2, 16e9) - 0.1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pipeline_merges_ready_same_level_wire_fronts_into_one_solve() {
+        let net = NetworkModel::isolated_100g();
+        let chains = [wire_chain(0, 1, 1_000_000, 0.0), wire_chain(2, 3, 1_000_000, 0.0)];
+        let s = price_pipeline(&net, &chains, 2, 4, 1, 16e9, 0.0);
+        // both begin kernels cost 0, so both wire fronts are ready at t0
+        // and must merge into a single congestion solve
+        assert_eq!(s.cohorts, 1);
+        let dt = net.stage_time_congested(
+            &[(1_000_000, LinkClass::Nic, 0, 1), (1_000_000, LinkClass::Nic, 2, 3)],
+            0.0,
+        );
+        assert!((s.makespan_s - dt).abs() < 1e-15);
+        assert!((s.wire_busy_s - dt).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pipeline_depth_gate_serializes_scratch_slots() {
+        // sink kernel takes 1 ms; at depth 1 bucket 1's wire job (chain
+        // index 1) must wait for bucket 0's sink-finalize, at depth 2 it
+        // need not
+        let net = NetworkModel::isolated_100g();
+        let chains = [wire_chain(0, 1, 1_000_000, 16e6), wire_chain(2, 3, 1_000_000, 16e6)];
+        let d1 = price_pipeline(&net, &chains, 1, 4, 1, 16e9, 0.0);
+        let d2 = price_pipeline(&net, &chains, 2, 4, 1, 16e9, 0.0);
+        assert!(
+            d1.makespan_s > d2.makespan_s + 0.5e-3,
+            "depth 1 must serialize behind the sink: {} vs {}",
+            d1.makespan_s,
+            d2.makespan_s
+        );
+        // bucket completion handles are nondecreasing in both
+        for s in [&d1, &d2] {
+            assert!(s.bucket_done_s.windows(2).all(|w| w[1] >= w[0]));
+            assert_eq!(s.makespan_s, *s.bucket_done_s.last().unwrap());
+        }
+    }
+
+    #[test]
+    fn pipeline_wire_channels_are_independent_per_level() {
+        // one bucket on the intra tier, one on the NIC: separate wire
+        // servers, so the makespan is the max, not the sum
+        let net = NetworkModel::hierarchical_100g(48.0);
+        let mk = |chan: usize, class: LinkClass| BucketChain {
+            jobs: vec![PipeJob::Wire { channel: chan, flows: vec![(4_000_000, class, 0, 1)] }],
+            sink_idx: 0,
+            ready_s: 0.0,
+        };
+        let chains = [mk(0, LinkClass::Level(0)), mk(1, LinkClass::Nic)];
+        let s = price_pipeline(&net, &chains, 2, 2, 2, 16e9, 0.0);
+        let t_nic = net.transfer_time_class(4_000_000, LinkClass::Nic, 0.0);
+        assert_eq!(s.cohorts, 2, "different levels must not merge");
+        assert!((s.makespan_s - t_nic).abs() < 1e-15, "{} vs {t_nic}", s.makespan_s);
+        // same two engagements forced onto one channel serialize
+        let serial = [mk(0, LinkClass::Level(0)), mk(0, LinkClass::Nic)];
+        let ss = price_pipeline(&net, &serial, 2, 2, 1, 16e9, 0.0);
+        assert!(ss.makespan_s > s.makespan_s, "{} vs {}", ss.makespan_s, s.makespan_s);
+    }
+
+    #[test]
+    fn pipeline_ready_times_defer_admission() {
+        let net = NetworkModel::isolated_100g();
+        let mut chains = [wire_chain(0, 1, 1_000_000, 0.0), wire_chain(2, 3, 1_000_000, 0.0)];
+        chains[1].ready_s = 0.05; // backward pass hands bucket 1 over late
+        let s = price_pipeline(&net, &chains, 2, 4, 1, 16e9, 0.0);
+        assert_eq!(s.cohorts, 2, "late bucket cannot join the first cohort");
+        assert!(s.bucket_done_s[1] >= 0.05);
+    }
+
+    #[test]
+    fn price_stage_walk_sums_per_stage_solves() {
+        let net = NetworkModel::shared_100g(3);
+        let stages = vec![
+            vec![(1_000_000u64, LinkClass::Nic, 0u32, 1u32)],
+            vec![(2_000_000, LinkClass::Nic, 1, 0)],
+        ];
+        let t0 = 0.017;
+        let mut now = t0;
+        for st in &stages {
+            now += net.stage_time_congested(st, now);
+        }
+        assert_eq!(price_stage_walk(&net, &stages, t0), now - t0);
+        assert_eq!(price_stage_walk(&net, &[], 0.0), 0.0);
     }
 
     #[test]

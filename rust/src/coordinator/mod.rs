@@ -35,9 +35,12 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use anyhow::{anyhow, Result};
 
 use crate::codec::{chunk_ranges, GradCodec, HopCtx, MetaOp, WorkerScratch};
-use crate::collective::allreduce::{produce_hop, KernelCounters};
-use crate::collective::network::{LinkClass, NetworkModel};
+use crate::collective::allreduce::{
+    bucket_of, build_bucket_chains, produce_hop, KernelCounters, PipelineCfg,
+};
+use crate::collective::network::{pipeline_compute_time, price_pipeline, LinkClass, NetworkModel};
 use crate::collective::topology::{Hop, Topology};
+use crate::metrics::memtraffic::traffic_model;
 use crate::util::pool::WorkerPool;
 
 /// A framed message on a worker-to-worker link.
@@ -107,8 +110,28 @@ pub struct WorkerRound {
     /// [`Coordinator::price_round`] derives the metadata-phase cost from
     /// it exactly like the engine)
     pub meta_len: usize,
+    /// padded gradient length after `begin_round` (equal on all workers);
+    /// [`Coordinator::price_round_pipelined`] rebuilds the chunk ranges
+    /// — and so each chunk's coordinate count — from it
+    pub padded: usize,
     /// every payload this worker sent, in schedule order
     pub sends: Vec<SendRecord>,
+}
+
+impl WorkerRound {
+    /// This worker's [`SendRecord`]s split into per-bucket streams under
+    /// the fixed diagonal partition ([`bucket_of`]): stream `b` holds the
+    /// records of bucket `b`'s chunks in schedule order. Streams
+    /// partition `sends` — every record lands in exactly one stream —
+    /// which is what lets [`Coordinator::price_round_pipelined`] replay
+    /// a recorded round as `buckets` independent pipelines.
+    pub fn bucket_streams(&self, m0: u32, buckets: u32) -> Vec<Vec<SendRecord>> {
+        let mut streams: Vec<Vec<SendRecord>> = (0..buckets).map(|_| Vec::new()).collect();
+        for s in &self.sends {
+            streams[bucket_of(s.chunk, m0, buckets) as usize].push(*s);
+        }
+        streams
+    }
 }
 
 /// Simulated communication cost of a coordinated round, phase by phase —
@@ -132,6 +155,26 @@ impl CommCost {
     pub fn comm_time_s(&self) -> f64 {
         self.meta_time_s + self.rs_time_s + self.ag_time_s
     }
+}
+
+/// Pipelined pricing of a coordinated round, produced by
+/// [`Coordinator::price_round_pipelined`]: the serial phase costs plus
+/// the overlapped-round latency and per-bucket completion handles — the
+/// coordinator's counterpart of the engine's pipelined
+/// [`crate::collective::RoundReport`] fields.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineCost {
+    /// the serial stage-walk costs (bit-identical to
+    /// [`Coordinator::price_round`])
+    pub serial: CommCost,
+    /// modeled fused-kernel compute time of the round (max over workers)
+    pub compute_time_s: f64,
+    /// modeled end-to-end round latency: serial sum at depth 1, `meta +
+    /// pipelined makespan` at depth ≥ 2
+    pub round_latency_s: f64,
+    /// per-bucket completion times relative to round start; their
+    /// maximum equals `round_latency_s`
+    pub bucket_done_s: Vec<f64>,
 }
 
 /// Per-worker state the coordinator keeps alive across rounds: the codec
@@ -315,6 +358,77 @@ impl Coordinator {
         let (ag_time, _) = price_phase(1, &ag_sched, &mut now);
         cost.ag_time_s = ag_time;
         cost
+    }
+
+    /// [`Coordinator::price_round`] with bucketed pipelining: the
+    /// recorded [`SendRecord`]s are replayed as per-bucket streams
+    /// through the shared chain builder
+    /// ([`crate::collective::build_bucket_chains`]) and priced by the
+    /// same greedy list scheduler the engine uses
+    /// ([`crate::collective::price_pipeline`]) — so a real threaded
+    /// round's pipelined latency is bit-identical to what
+    /// `AllReduceEngine::run_pipelined` reports for the same codecs and
+    /// topology (asserted in tests). The serial phase costs ride along
+    /// unchanged in [`PipelineCost::serial`].
+    pub fn price_round_pipelined(
+        &self,
+        net: &NetworkModel,
+        rounds: &[WorkerRound],
+        cfg: &PipelineCfg,
+        t0: f64,
+    ) -> PipelineCost {
+        assert_eq!(rounds.len(), self.n, "pricing needs every worker's round");
+        let n = self.n;
+        assert!(cfg.buckets >= 1 && cfg.buckets <= n, "buckets must be in 1..=n");
+        assert!(cfg.depth >= 1, "pipeline depth must be ≥ 1");
+        let serial = self.price_round(net, rounds, t0);
+        let mut bytes_of: HashMap<(u8, u32, u32, u32), u64> = HashMap::new();
+        for wr in rounds {
+            for s in &wr.sends {
+                bytes_of.insert((s.phase, s.stage, wr.worker, s.chunk), s.bytes);
+            }
+        }
+        let lay_out = |phase: u8, sched: &[Vec<Hop>]| -> Vec<Vec<u64>> {
+            sched
+                .iter()
+                .enumerate()
+                .map(|(stage, hops)| {
+                    hops.iter()
+                        .map(|h| bytes_of[&(phase, stage as u32, h.from, h.chunk)])
+                        .collect()
+                })
+                .collect()
+        };
+        let rs_pay = lay_out(0, &self.topology.reduce_scatter(n));
+        let ag_pay = lay_out(1, &self.topology.all_gather(n));
+        let codec = self.workers[0].codec.as_ref();
+        let ranges = chunk_ranges(rounds[0].padded, n, codec.chunk_alignment());
+        let entries: Vec<u64> = ranges.iter().map(|r| r.len() as u64).collect();
+        let traffic = traffic_model(codec.name());
+        let chains = build_bucket_chains(
+            &self.topology, n, &entries, &traffic, &rs_pay, &ag_pay, cfg, t0,
+        );
+        let compute_time_s = pipeline_compute_time(&chains, n, cfg.kernel_bw_bps);
+        let depth = cfg.depth.min(cfg.buckets);
+        let (round_latency_s, bucket_done_s) = if depth <= 1 {
+            let l = serial.comm_time_s() + compute_time_s;
+            (l, vec![l; cfg.buckets])
+        } else {
+            let sched = price_pipeline(
+                net,
+                &chains,
+                depth,
+                n,
+                self.topology.num_levels(),
+                cfg.kernel_bw_bps,
+                t0 + serial.meta_time_s,
+            );
+            (
+                sched.makespan_s - t0,
+                sched.bucket_done_s.iter().map(|&x| x - t0).collect(),
+            )
+        };
+        PipelineCost { serial, compute_time_s, round_latency_s, bucket_done_s }
     }
 }
 
@@ -508,6 +622,7 @@ fn run_worker(
         ag_bytes_sent: ag_bytes,
         counters,
         meta_len,
+        padded: pre.len(),
         sends,
     })
 }

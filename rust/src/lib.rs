@@ -42,6 +42,13 @@
 //! for the BF16 and THC byte lanes — still byte-identical, purely a
 //! throughput knob.
 //!
+//! `--features numa` pins every [`util::pool::WorkerPool`] thread to a
+//! core (raw `sched_setaffinity`, Linux x86_64 only; a no-op stub
+//! elsewhere) so worker scratch/arena pages stay on the NUMA node that
+//! faulted them in. Off by default — shared runners lose to an unlucky
+//! pin — and byte-identical either way: affinity moves threads, never
+//! the batch cursor's work distribution.
+//!
 //! ## Hierarchical topologies
 //!
 //! [`collective::Topology::Hierarchical`] composes per-level flat

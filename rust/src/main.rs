@@ -25,6 +25,17 @@
 //!                             e.g. `--backend event --n 4096 --straggler
 //!                             exp:0.003`
 //!
+//! Pipelined-round flags (both backends; values and wire bytes stay
+//! byte-identical to the unpipelined round at any setting):
+//!   --buckets N               split the gradient into N buckets (fixed
+//!                             diagonal partition) flowing through the
+//!                             schedule as independent pipelines
+//!                             (default 1 = classic round); N ≤ workers
+//!   --pipeline-depth D        concurrently admitted buckets = live
+//!                             double-buffered scratch slots (default 1 =
+//!                             serial pricing; ≥ 2 overlaps bucket b+1's
+//!                             compression with bucket b's transfers)
+//!
 //! Scheme suffixes: DynamiQ:b=4 (uniform budget), DynamiQ:lb=4.5,6
 //! (per-hierarchy-level budgets, innermost tier first); composable, e.g.
 //! DynamiQ:b=4.63:lb=5.24,6.74 (with lb= in force, b= is the
@@ -168,6 +179,20 @@ fn train(args: &[String]) -> anyhow::Result<()> {
             Some(other) => anyhow::bail!("--backend must be sync|event, got {other}"),
         },
         straggler: flag_value(args, "--straggler").unwrap_or_else(|| "none".into()),
+        buckets: match flag_value(args, "--buckets") {
+            None => 1,
+            Some(v) => v
+                .parse::<usize>()
+                .ok()
+                .filter(|&b| b >= 1)
+                .ok_or_else(|| anyhow::anyhow!("--buckets must be a positive integer, got {v}"))?,
+        },
+        pipeline_depth: match flag_value(args, "--pipeline-depth") {
+            None => 1,
+            Some(v) => v.parse::<usize>().ok().filter(|&d| d >= 1).ok_or_else(|| {
+                anyhow::anyhow!("--pipeline-depth must be a positive integer, got {v}")
+            })?,
+        },
         shared_network: has_flag(args, "--shared-network"),
         rounds: flag_value(args, "--rounds").and_then(|v| v.parse().ok()).unwrap_or(100),
         lr: flag_value(args, "--lr").and_then(|v| v.parse().ok()).unwrap_or(3e-3),
@@ -205,7 +230,7 @@ fn train(args: &[String]) -> anyhow::Result<()> {
         .validate(cfg.n_workers)
         .map_err(|e| anyhow::anyhow!("invalid --topology/--workers combination: {e}"))?;
     println!(
-        "training preset={} scheme={} workers={} topology={} rounds={} backend={}",
+        "training preset={} scheme={} workers={} topology={} rounds={} backend={}{}",
         cfg.preset,
         cfg.scheme,
         cfg.n_workers,
@@ -214,6 +239,11 @@ fn train(args: &[String]) -> anyhow::Result<()> {
         match cfg.backend {
             Backend::Sync => "sync".to_string(),
             Backend::Event => format!("event (straggler {})", cfg.straggler),
+        },
+        if cfg.buckets > 1 || cfg.pipeline_depth > 1 {
+            format!(" pipeline=B{}xD{}", cfg.buckets, cfg.pipeline_depth)
+        } else {
+            String::new()
         }
     );
     let mut t = Trainer::new(cfg, "artifacts")?;

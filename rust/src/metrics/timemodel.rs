@@ -74,6 +74,24 @@ pub fn round_time(
     RoundTime { compute_s: compute, exposed_comm_s: exposed, compression_s: compression }
 }
 
+/// Combine a **pipelined** round report with the compute model: the
+/// report's [`RoundReport::round_latency_s`] already prices compression
+/// kernels and communication *overlapped* across the bucket pipeline
+/// (including per-bucket backward-window readiness), so the compression
+/// term is folded into the exposed remainder instead of added on top —
+/// only the latency beyond the backward overlap window stays exposed.
+pub fn pipelined_round_time(
+    model: &ComputeModel,
+    params: usize,
+    tokens_per_batch: usize,
+    report: &RoundReport,
+) -> RoundTime {
+    let compute = model.compute_time_s(params, tokens_per_batch);
+    let window = compute * model.backward_frac * model.overlap_eff;
+    let exposed = (report.round_latency_s - window).max(0.0);
+    RoundTime { compute_s: compute, exposed_comm_s: exposed, compression_s: 0.0 }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +122,18 @@ mod tests {
         let m = ComputeModel::default();
         let rt = round_time(&m, "DynamiQ", 100_000_000, 2048, 4, &report(0.01));
         assert!(rt.compression_s < 0.3 * rt.compute_s, "{rt:?}");
+    }
+
+    #[test]
+    fn pipelined_latency_replaces_the_comm_plus_compression_terms() {
+        let m = ComputeModel::default();
+        let rep = RoundReport { round_latency_s: 0.1, ..Default::default() };
+        let rt = pipelined_round_time(&m, 100_000_000, 2048, &rep);
+        assert_eq!(rt.compression_s, 0.0, "kernels are priced inside the pipeline");
+        let window = rt.compute_s * m.backward_frac * m.overlap_eff;
+        assert_eq!(rt.exposed_comm_s, (0.1 - window).max(0.0));
+        // a latency inside the backward window is fully hidden
+        let rep = RoundReport { round_latency_s: 1e-6, ..Default::default() };
+        assert_eq!(pipelined_round_time(&m, 100_000_000, 2048, &rep).exposed_comm_s, 0.0);
     }
 }

@@ -45,13 +45,35 @@ pub struct PhaseClock {
     pub rs_s: f64,
     /// busy seconds charged to all-gather
     pub ag_s: f64,
+    /// Bucket axis: busy seconds charged per pipeline bucket (empty
+    /// until [`PhaseClock::ensure_buckets`]). Filled by bucket-tagged
+    /// charges ([`PhaseClock::charge_bucket`]) alongside — not instead
+    /// of — the phase accumulators; the metadata phase precedes the
+    /// bucket partition, so bucket totals decompose `rs_s + ag_s` only.
+    pub bucket_s: Vec<f64>,
 }
 
 impl PhaseClock {
     /// A clock starting at absolute virtual time `t0` with zeroed phase
     /// accumulators.
     pub fn new(t0: f64) -> Self {
-        PhaseClock { t0, now: t0, meta_s: 0.0, rs_s: 0.0, ag_s: 0.0 }
+        PhaseClock { t0, now: t0, meta_s: 0.0, rs_s: 0.0, ag_s: 0.0, bucket_s: Vec::new() }
+    }
+
+    /// Size the bucket axis for `nb` pipeline buckets (growth-only, like
+    /// every other warm-capacity surface in the hot path).
+    pub fn ensure_buckets(&mut self, nb: usize) {
+        if self.bucket_s.len() < nb {
+            self.bucket_s.resize(nb, 0.0);
+        }
+    }
+
+    /// Charge `dt` busy seconds to pipeline bucket `b` on the bucket
+    /// axis. Callers split a mixed batch's wall time across its buckets
+    /// (the event backend apportions by wire-byte share) and charge the
+    /// phase axis separately via [`PhaseClock::charge_at`].
+    pub fn charge_bucket(&mut self, b: u32, dt: f64) {
+        self.bucket_s[b as usize] += dt;
     }
 
     /// The current virtual time (the high-water mark).
@@ -142,6 +164,23 @@ mod tests {
         }
         assert_eq!(engine.now().to_bits(), event.now().to_bits());
         assert_eq!(engine.ag_s.to_bits(), event.ag_s.to_bits());
+    }
+
+    #[test]
+    fn bucket_axis_accumulates_independently_of_phases() {
+        let mut clock = PhaseClock::new(0.0);
+        clock.ensure_buckets(3);
+        clock.charge_at(CommPhase::ReduceScatter, 0.0, 2.0);
+        clock.charge_bucket(0, 1.5);
+        clock.charge_bucket(2, 0.5);
+        clock.charge_at(CommPhase::AllGather, 2.0, 1.0);
+        clock.charge_bucket(2, 1.0);
+        assert_eq!(clock.bucket_s, vec![1.5, 0.0, 1.5]);
+        // buckets decompose the rs + ag busy time, never add to it
+        assert_eq!(clock.bucket_s.iter().sum::<f64>(), clock.rs_s + clock.ag_s);
+        // growth-only
+        clock.ensure_buckets(2);
+        assert_eq!(clock.bucket_s.len(), 3);
     }
 
     #[test]

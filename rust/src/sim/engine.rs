@@ -56,9 +56,13 @@ use std::ops::Range;
 use std::sync::OnceLock;
 
 use crate::codec::{GradCodec, HopCtx, MetaOp, WorkerScratch};
-use crate::collective::allreduce::{hop_context, produce_hop, KernelCounters, RoundReport};
-use crate::collective::network::{LinkClass, NetworkModel};
+use crate::collective::allreduce::{
+    bucket_of, build_bucket_chains, hop_context, produce_hop, KernelCounters, PipelineCfg,
+    RoundReport,
+};
+use crate::collective::network::{pipeline_compute_time, price_pipeline, LinkClass, NetworkModel};
 use crate::collective::topology::{stage_census, Schedule, Topology, TopologyError};
+use crate::metrics::memtraffic::traffic_model;
 use crate::metrics::virtualtime::{CommPhase, PhaseClock};
 use crate::util::par;
 use crate::util::pool::WorkerPool;
@@ -86,6 +90,12 @@ pub struct EventStats {
     pub max_delay_s: f64,
     /// per-worker virtual time of the final barrier resolution
     pub worker_finish_s: Vec<f64>,
+    /// Per-bucket wire busy seconds of the executed trace (the
+    /// [`PhaseClock`] bucket axis): each priced batch's wall time split
+    /// across its buckets by wire-byte share. Empty unless
+    /// [`EventEngine::pipeline`] is engaged; sums to the executed
+    /// `rs + ag` busy time.
+    pub bucket_busy_s: Vec<f64>,
 }
 
 /// Reusable per-engine scratch: per-worker kernel scratch and a payload
@@ -268,6 +278,16 @@ pub struct EventEngine {
     /// compute the exact sum and record vNMSE (costs an extra O(nd)
     /// pass)
     pub measure_vnmse: bool,
+    /// Bucketed pipelined rounds: when set, every reduce-scatter /
+    /// all-gather stage is sliced into per-bucket sub-stages (the fixed
+    /// diagonal partition [`bucket_of`], bucket-ascending) so each event
+    /// carries a bucket tag, and the round's pipelined latency /
+    /// per-bucket completion handles are priced through the same shared
+    /// chain builder + greedy scheduler the sync engine uses
+    /// ([`build_bucket_chains`] / [`price_pipeline`]) — values and wire
+    /// bytes stay byte-identical to the unsliced round (buckets
+    /// partition chunks). `None` (default) is the legacy behavior.
+    pub pipeline: Option<PipelineCfg>,
     /// executor budget for kernel batches (1 = fully sequential;
     /// results are identical for any value)
     pub threads: usize,
@@ -285,6 +305,7 @@ impl EventEngine {
             straggler: StragglerModel::none(),
             flaps: Vec::new(),
             measure_vnmse: true,
+            pipeline: None,
             threads: par::num_threads(),
             pool: OnceLock::new(),
         }
@@ -418,8 +439,39 @@ impl EventEngine {
         let ranges = crate::codec::chunk_ranges(padded, n, align);
 
         // ---- build schedules, per-worker barriers, the send index ----
-        let rs_sched = self.topology.reduce_scatter(n);
-        let ag_sched = self.topology.all_gather(n);
+        let rs_orig = self.topology.reduce_scatter(n);
+        let ag_orig = self.topology.all_gather(n);
+        // bucket-sliced schedules: each stage split into per-bucket
+        // sub-stages (bucket-ascending, hop order preserved inside each
+        // slice), flowing through the existing census/CSR machinery —
+        // every event is thereby bucket-tagged via its sub-stage index.
+        // Payload bytes are captured back at their ORIGINAL (stage, pos)
+        // coordinates for the shared pipeline pricer.
+        let mut submaps: Option<(SubMap, SubMap)> = None;
+        let mut rs_pay: Vec<Vec<u64>> = Vec::new();
+        let mut ag_pay: Vec<Vec<u64>> = Vec::new();
+        let (rs_sched, ag_sched) = if let Some(cfg) = &self.pipeline {
+            assert!(
+                cfg.buckets >= 1 && cfg.buckets <= n,
+                "buckets must be in 1..=n, got {}",
+                cfg.buckets
+            );
+            assert!(cfg.depth >= 1, "pipeline depth must be ≥ 1, got {}", cfg.depth);
+            assert!(
+                cfg.kernel_bw_bps > 0.0 && cfg.kernel_bw_bps.is_finite(),
+                "kernel bandwidth must be positive"
+            );
+            clock.ensure_buckets(cfg.buckets);
+            let m0 = self.topology.level_fanin(0, n);
+            let (rs2, rsm) = split_by_bucket(&rs_orig, m0, cfg.buckets as u32);
+            let (ag2, agm) = split_by_bucket(&ag_orig, m0, cfg.buckets as u32);
+            submaps = Some((rsm, agm));
+            rs_pay = rs_orig.iter().map(|h| vec![0u64; h.len()]).collect();
+            ag_pay = ag_orig.iter().map(|h| vec![0u64; h.len()]).collect();
+            (rs2, ag2)
+        } else {
+            (rs_orig.clone(), ag_orig.clone())
+        };
         let s_rs = rs_sched.len();
         let s_total = s_rs + ag_sched.len();
         report.stage_times_s.reserve(s_rs);
@@ -523,6 +575,20 @@ impl EventEngine {
                 } else {
                     report.ag_bytes += s.bytes;
                 }
+                // bucket-sliced: record the payload bytes back at the
+                // hop's ORIGINAL (stage, pos) coordinate for the shared
+                // pipeline pricer (flows must be re-walked in original
+                // hop order — the congestion bounds sum in first-seen
+                // order)
+                if let Some((rsm, agm)) = &submaps {
+                    if (s.stage as usize) < s_rs {
+                        let (os, pm) = &rsm[s.stage as usize];
+                        rs_pay[*os][pm[s.pos as usize] as usize] = s.bytes;
+                    } else {
+                        let (os, pm) = &agm[s.stage as usize - s_rs];
+                        ag_pay[*os][pm[s.pos as usize] as usize] = s.bytes;
+                    }
+                }
             }
             let dt = net.stage_time_congested(&flows, t);
             if any_rs {
@@ -530,6 +596,26 @@ impl EventEngine {
                 report.stage_times_s.push(dt);
             } else {
                 clock.charge_at(CommPhase::AllGather, t, dt);
+            }
+            // bucket axis: apportion the batch's wall time across its
+            // buckets by wire-byte share (a jittered batch can mix
+            // sub-stages of different buckets at one timestamp)
+            if let Some(cfg) = &self.pipeline {
+                let m0 = self.topology.level_fanin(0, n);
+                let total: u64 = batch.iter().map(|s| s.bytes).sum();
+                let mut per_b = vec![0u64; cfg.buckets];
+                for s in &batch {
+                    // zero-byte batches (degenerate payloads) split by
+                    // send count instead
+                    let w = if total > 0 { s.bytes } else { 1 };
+                    per_b[bucket_of(s.chunk, m0, cfg.buckets as u32) as usize] += w;
+                }
+                let denom: u64 = per_b.iter().sum();
+                for (b, &w) in per_b.iter().enumerate() {
+                    if w > 0 {
+                        clock.charge_bucket(b as u32, dt * (w as f64 / denom as f64));
+                    }
+                }
             }
             let bid = st.batches.len() as u32;
             st.batches.push(Some(batch));
@@ -594,6 +680,78 @@ impl EventEngine {
         stats.span_s = clock.span_s();
         stats.stall_s = (stats.span_s - report.comm_time_s()).max(0.0);
         stats.worker_finish_s = st.finish;
+        stats.bucket_busy_s = clock.bucket_s.clone();
+
+        // ---- pipelined pricing through the shared builder + scheduler.
+        // The event loop above executed bucket-sliced sub-stages, so the
+        // clock's phase times priced every slice separately (that is the
+        // executed trace, and `stats` keeps it). The *reported* comm
+        // times and pipelined latency are re-priced here from the
+        // payload bytes captured at their original (stage, pos)
+        // coordinates — the exact computation the sync engine's
+        // `run_pipelined` performs, so in the no-jitter / no-flap case
+        // every reported field is bit-identical to it. ----
+        if let Some(cfg) = &self.pipeline {
+            let depth = cfg.depth.min(cfg.buckets);
+            let flows_of = |sched: &Schedule, pay: &[Vec<u64>]| {
+                sched
+                    .iter()
+                    .zip(pay)
+                    .map(|(hops, bytes)| {
+                        hops.iter()
+                            .zip(bytes)
+                            .map(|(h, &b)| {
+                                (
+                                    b,
+                                    self.topology.link_class(h.from, h.to),
+                                    self.topology.node_of(h.from),
+                                    self.topology.node_of(h.to),
+                                )
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                    .collect::<Vec<_>>()
+            };
+            let rs_full = flows_of(&rs_orig, &rs_pay);
+            let ag_full = flows_of(&ag_orig, &ag_pay);
+            report.stage_times_s.clear();
+            report.rs_time_s = 0.0;
+            report.ag_time_s = 0.0;
+            let mut now = meta_end;
+            for flows in &rs_full {
+                let dt = net.stage_time_congested(flows, now);
+                now += dt;
+                report.rs_time_s += dt;
+                report.stage_times_s.push(dt);
+            }
+            for flows in &ag_full {
+                let dt = net.stage_time_congested(flows, now);
+                now += dt;
+                report.ag_time_s += dt;
+            }
+            let entries: Vec<u64> = ranges.iter().map(|r| r.len() as u64).collect();
+            let traffic = traffic_model(codecs[0].name());
+            let chains = build_bucket_chains(
+                &self.topology, n, &entries, &traffic, &rs_pay, &ag_pay, cfg, t0,
+            );
+            report.compute_time_s = pipeline_compute_time(&chains, n, cfg.kernel_bw_bps);
+            if depth <= 1 {
+                report.round_latency_s = report.comm_time_s() + report.compute_time_s;
+                report.bucket_done_s = vec![report.round_latency_s; cfg.buckets];
+            } else {
+                let sched = price_pipeline(
+                    &net,
+                    &chains,
+                    depth,
+                    n,
+                    self.topology.num_levels(),
+                    cfg.kernel_bw_bps,
+                    t0 + report.meta_time_s,
+                );
+                report.round_latency_s = sched.makespan_s - t0;
+                report.bucket_done_s = sched.bucket_done_s.iter().map(|&x| x - t0).collect();
+            }
+        }
         Ok((result, report, stats))
     }
 
@@ -693,6 +851,40 @@ impl EventEngine {
         }
         slots.into_iter().map(|s| s.expect("every slot filled")).collect()
     }
+}
+
+/// Per-sub-stage provenance of a bucket-sliced schedule: for each
+/// sub-stage, the original stage index plus the map from local hop
+/// position to the hop's position in the original stage.
+type SubMap = Vec<(usize, Vec<u32>)>;
+
+/// Slice every stage of `sched` into per-bucket sub-stages: sub-stages
+/// are emitted bucket-ascending within each original stage, each
+/// preserving original hop order, and empty slices are skipped. The
+/// refinement preserves every per-chunk hop chain's order (a chunk's
+/// bucket is fixed), so executing the sliced schedule is value- and
+/// byte-identical to the original; it only tags each event with its
+/// bucket via the sub-stage index.
+fn split_by_bucket(sched: &Schedule, m0: u32, buckets: u32) -> (Schedule, SubMap) {
+    let mut out: Schedule = Vec::new();
+    let mut map: SubMap = Vec::new();
+    for (s, hops) in sched.iter().enumerate() {
+        for b in 0..buckets {
+            let mut slice = Vec::new();
+            let mut posmap = Vec::new();
+            for (p, h) in hops.iter().enumerate() {
+                if bucket_of(h.chunk, m0, buckets) == b {
+                    slice.push(*h);
+                    posmap.push(p as u32);
+                }
+            }
+            if !slice.is_empty() {
+                out.push(slice);
+                map.push((s, posmap));
+            }
+        }
+    }
+    (out, map)
 }
 
 /// Remove and order the payloads delivered to `(worker, chunk)`: sorted
@@ -930,6 +1122,94 @@ mod tests {
         assert_eq!(want, got);
         assert_eq!(want_rep.rs_bytes, got_rep.rs_bytes);
         assert_eq!(stats.batches, 2);
+    }
+
+    /// Bucket-tagged events change *when* payloads move, never what
+    /// they carry: a pipeline-engaged event round matches the plain
+    /// event round in values and bytes, and matches the sync engine's
+    /// `run_pipelined` bit-for-bit in every reported pricing field
+    /// (the two paths share `build_bucket_chains` + `price_pipeline`).
+    #[test]
+    fn pipelined_event_round_matches_sync_pipelined_engine() {
+        use crate::codec::ScratchPool;
+        let n = 8;
+        let g = grads(n, 4096, 61);
+        let topo = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+        let net = NetworkModel::hierarchical_100g(48.0);
+        let mut plain_codecs = mk_codecs("dynamiq", n);
+        let plain = EventEngine::new(topo, net.clone());
+        let (want, plain_rep, _) = plain.run(&g, &mut plain_codecs, 0, 0.0).unwrap();
+        for (buckets, depth) in [(4usize, 1usize), (4, 2), (4, 4), (8, 2)] {
+            let cfg = PipelineCfg { buckets, depth, ..PipelineCfg::default() };
+            // sync engine, same pipeline config
+            let mut sync_codecs = mk_codecs("dynamiq", n);
+            let sync = AllReduceEngine::new(topo, net.clone());
+            let mut pool = ScratchPool::new();
+            let (sv, srep) =
+                sync.run_pipelined(&g, &mut sync_codecs, 0, 0.0, &mut pool, &cfg).unwrap();
+            // event engine, pipeline engaged
+            let mut ev_codecs = mk_codecs("dynamiq", n);
+            let mut eng = EventEngine::new(topo, net.clone());
+            eng.pipeline = Some(cfg.clone());
+            let (ev, erep, stats) = eng.run(&g, &mut ev_codecs, 0, 0.0).unwrap();
+            assert_eq!(want, ev, "B={buckets} D={depth}: values diverged from plain event run");
+            assert_eq!(sv, ev, "B={buckets} D={depth}: values diverged from sync pipelined");
+            assert_eq!(plain_rep.rs_bytes, erep.rs_bytes);
+            assert_eq!(plain_rep.ag_bytes, erep.ag_bytes);
+            assert_eq!(srep.meta_time_s.to_bits(), erep.meta_time_s.to_bits());
+            assert_eq!(srep.rs_time_s.to_bits(), erep.rs_time_s.to_bits());
+            assert_eq!(srep.ag_time_s.to_bits(), erep.ag_time_s.to_bits());
+            let sbits: Vec<u64> = srep.stage_times_s.iter().map(|t| t.to_bits()).collect();
+            let ebits: Vec<u64> = erep.stage_times_s.iter().map(|t| t.to_bits()).collect();
+            assert_eq!(sbits, ebits, "B={buckets} D={depth}: serial stage walk diverged");
+            assert_eq!(srep.compute_time_s.to_bits(), erep.compute_time_s.to_bits());
+            assert_eq!(
+                srep.round_latency_s.to_bits(),
+                erep.round_latency_s.to_bits(),
+                "B={buckets} D={depth}: pipelined latency diverged"
+            );
+            let sdone: Vec<u64> = srep.bucket_done_s.iter().map(|t| t.to_bits()).collect();
+            let edone: Vec<u64> = erep.bucket_done_s.iter().map(|t| t.to_bits()).collect();
+            assert_eq!(sdone, edone, "B={buckets} D={depth}: bucket handles diverged");
+            // sliced no-jitter batches: one per non-empty bucket sub-stage
+            assert!(
+                stats.batches as u64 >= plain_rep.stage_times_s.len() as u64,
+                "slicing cannot produce fewer batches than stages"
+            );
+            // the bucket axis decomposes the executed wire busy time
+            assert_eq!(stats.bucket_busy_s.len(), buckets);
+            assert!(stats.bucket_busy_s.iter().all(|&x| x >= 0.0 && x.is_finite()));
+            assert!(stats.bucket_busy_s.iter().sum::<f64>() > 0.0);
+        }
+    }
+
+    /// Straggler jitter composes with bucket-tagged events: values stay
+    /// put while the executed span stretches, and the pipelined pricing
+    /// fields stay deterministic.
+    #[test]
+    fn pipelined_event_round_under_jitter_keeps_values() {
+        let n = 8;
+        let g = grads(n, 4096, 67);
+        let net = NetworkModel::isolated_100g();
+        let cfg = PipelineCfg { buckets: 4, depth: 2, ..PipelineCfg::default() };
+        let mut base_codecs = mk_codecs("dynamiq", n);
+        let mut base = EventEngine::new(Topology::Butterfly, net.clone());
+        base.pipeline = Some(cfg.clone());
+        let (want, base_rep, _) = base.run(&g, &mut base_codecs, 0, 0.0).unwrap();
+        let mut codecs = mk_codecs("dynamiq", n);
+        let mut eng = EventEngine::new(Topology::Butterfly, net);
+        eng.pipeline = Some(cfg);
+        eng.straggler = StragglerModel::parse("uniform:0.01", 13).unwrap();
+        let (got, rep, stats) = eng.run(&g, &mut codecs, 0, 0.0).unwrap();
+        assert_eq!(want, got);
+        assert_eq!(base_rep.rs_bytes, rep.rs_bytes);
+        assert!(stats.max_delay_s > 0.0);
+        assert!(stats.span_s >= stats.max_delay_s);
+        assert_eq!(rep.bucket_done_s.len(), 4);
+        let mut codecs2 = mk_codecs("dynamiq", n);
+        let (got2, rep2, _) = eng.run(&g, &mut codecs2, 0, 0.0).unwrap();
+        assert_eq!(got, got2);
+        assert_eq!(rep.round_latency_s.to_bits(), rep2.round_latency_s.to_bits());
     }
 
     #[test]

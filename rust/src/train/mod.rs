@@ -12,7 +12,7 @@ pub mod data;
 use anyhow::{anyhow, Result};
 
 use crate::codec::{make_codecs, GradCodec, ScratchPool};
-use crate::collective::{AllReduceEngine, NetworkModel, RoundReport, Topology};
+use crate::collective::{AllReduceEngine, NetworkModel, PipelineCfg, RoundReport, Topology};
 use crate::metrics::{ComputeModel, RoundTime, TtaCurve};
 use crate::sim::{EventEngine, FleetScratch, StragglerModel};
 use crate::runtime::exec::{lit_f32, lit_i32, scalar_f32, to_f32};
@@ -87,6 +87,17 @@ pub struct TrainConfig {
     /// [`StragglerModel::parse`]: `none`, `uniform:MAX[:frac]`,
     /// `exp:MEAN[:frac]`, `lognormal:MEDIAN:SIGMA[:frac]`)
     pub straggler: String,
+    /// Bucket count for pipelined rounds (`--buckets N`): the gradient
+    /// is split by the fixed diagonal partition
+    /// ([`crate::collective::bucket_of`]) and buckets flow through the
+    /// multi-hop schedule as independent pipelines. `1` (default) runs
+    /// the classic unpipelined round.
+    pub buckets: usize,
+    /// Pipeline depth (`--pipeline-depth D`): concurrently admitted
+    /// buckets = live [`ScratchPool`] arena slots. `1` executes
+    /// bucket-sliced but prices the exact serial round; values and wire
+    /// bytes are byte-identical at every depth.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TrainConfig {
@@ -112,6 +123,8 @@ impl Default for TrainConfig {
             seed: 7,
             backend: Backend::Sync,
             straggler: "none".into(),
+            buckets: 1,
+            pipeline_depth: 1,
         }
     }
 }
@@ -136,6 +149,12 @@ pub struct RoundRecord {
     /// virtual seconds the round stalled on straggler jitter beyond the
     /// busy comm time (event backend only; exactly 0.0 on sync)
     pub stall_s: f64,
+    /// Per-bucket completion handles of a pipelined round, relative to
+    /// round start (empty when `--buckets 1 --pipeline-depth 1`): the
+    /// virtual instant each bucket's aggregated range finished decoding
+    /// — an optimizer sharded along the bucket partition could start
+    /// its step at these times instead of waiting for the round.
+    pub bucket_done_s: Vec<f64>,
 }
 
 /// The training driver: n workers' fwd/bwd through PJRT, gradient sync
@@ -167,6 +186,10 @@ pub struct Trainer {
     /// payload arenas + decode slabs reused across training rounds (the
     /// steady-state hop path allocates nothing)
     pool: ScratchPool,
+    /// the pipelined-round configuration when `--buckets`/
+    /// `--pipeline-depth` engage it (bucket readiness follows the
+    /// backward-window model), `None` for classic rounds
+    pipeline: Option<PipelineCfg>,
     compute: ComputeModel,
     /// per-round records (drives every TTA figure)
     pub records: Vec<RoundRecord>,
@@ -261,7 +284,7 @@ impl Trainer {
         // fast), but only the event backend can express non-zero jitter
         let straggler = StragglerModel::parse(&cfg.straggler, cfg.seed as u32)
             .map_err(|e| anyhow!("--straggler {}: {e}", cfg.straggler))?;
-        let event = match cfg.backend {
+        let mut event = match cfg.backend {
             Backend::Sync => {
                 anyhow::ensure!(
                     cfg.straggler == "none",
@@ -289,6 +312,43 @@ impl Trainer {
             let flops = 6.0 * entry.d_raw as f64 * (entry.batch * entry.seq_len) as f64;
             compute.flops_per_s = flops / (2.0 * bf16_comm_est);
         }
+        // Pipelined rounds (`--buckets N --pipeline-depth D`): validate
+        // the bucket axis and derive per-bucket readiness from the
+        // backward-window model — the backward pass streams gradients
+        // out over the same overlappable window the TTA time model uses,
+        // so bucket b's range is handed to the pipeline at the (b+1)/B
+        // fraction of that window. Readiness shifts *when* a bucket's
+        // pipeline may start (pricing only); payload bytes and values
+        // stay byte-identical to the unpipelined round.
+        anyhow::ensure!(
+            cfg.buckets >= 1 && cfg.buckets <= cfg.n_workers,
+            "--buckets must be in 1..=n_workers ({}), got {}",
+            cfg.n_workers,
+            cfg.buckets
+        );
+        anyhow::ensure!(
+            cfg.pipeline_depth >= 1,
+            "--pipeline-depth must be ≥ 1, got {}",
+            cfg.pipeline_depth
+        );
+        let pipeline = if cfg.buckets > 1 || cfg.pipeline_depth > 1 {
+            let window = compute.compute_time_s(entry.d_raw, entry.batch * entry.seq_len)
+                * compute.backward_frac
+                * compute.overlap_eff;
+            let b = cfg.buckets as f64;
+            let ready = (0..cfg.buckets).map(|i| window * (i as f64 + 1.0) / b).collect();
+            Some(PipelineCfg {
+                buckets: cfg.buckets,
+                depth: cfg.pipeline_depth.min(cfg.buckets),
+                bucket_ready_s: ready,
+                ..PipelineCfg::default()
+            })
+        } else {
+            None
+        };
+        if let (Some(eng), Some(p)) = (event.as_mut(), &pipeline) {
+            eng.pipeline = Some(p.clone());
+        }
         Ok(Trainer {
             d: entry.d,
             d_raw: entry.d_raw,
@@ -305,6 +365,7 @@ impl Trainer {
             fleet_scratch: FleetScratch::new(),
             codecs,
             pool: ScratchPool::new(),
+            pipeline,
             compute,
             records: Vec::new(),
             tta: TtaCurve::default(),
@@ -386,16 +447,30 @@ impl Trainer {
             grads.push(grad);
         }
         let (sum, report, stall_s): (Vec<f32>, RoundReport, f64) = match &self.event {
-            None => {
-                let (sum, report) = self.engine.run_pooled(
-                    &grads,
-                    &mut self.codecs,
-                    round,
-                    self.sim_time_s,
-                    &mut self.pool,
-                )?;
-                (sum, report, 0.0)
-            }
+            None => match &self.pipeline {
+                None => {
+                    let (sum, report) = self.engine.run_pooled(
+                        &grads,
+                        &mut self.codecs,
+                        round,
+                        self.sim_time_s,
+                        &mut self.pool,
+                    )?;
+                    (sum, report, 0.0)
+                }
+                Some(cfg) => {
+                    let (sum, report) = self.engine.run_pipelined(
+                        &grads,
+                        &mut self.codecs,
+                        round,
+                        self.sim_time_s,
+                        &mut self.pool,
+                        cfg,
+                    )?;
+                    (sum, report, 0.0)
+                }
+            },
+            // the event engine carries its own pipeline config
             Some(eng) => {
                 let (sum, report, stats) = eng.run_scratch(
                     &grads,
@@ -425,14 +500,26 @@ impl Trainer {
         self.v = to_f32(&out[2])?;
 
         let tokens_per_batch = self.batch * self.seq_len;
-        let time = crate::metrics::timemodel::round_time(
-            &self.compute,
-            base_scheme(&self.cfg.scheme),
-            self.d_raw,
-            tokens_per_batch,
-            n,
-            &report,
-        );
+        let time = if self.pipeline.is_some() {
+            // the pipelined latency already prices kernels + comm
+            // overlapped (with bucket readiness); only its excess over
+            // the backward window is exposed
+            crate::metrics::timemodel::pipelined_round_time(
+                &self.compute,
+                self.d_raw,
+                tokens_per_batch,
+                &report,
+            )
+        } else {
+            crate::metrics::timemodel::round_time(
+                &self.compute,
+                base_scheme(&self.cfg.scheme),
+                self.d_raw,
+                tokens_per_batch,
+                n,
+                &report,
+            )
+        };
         // straggler stalls are exposed wait on top of the modeled
         // compute/comm round (the compute model has no per-worker jitter
         // of its own, so this adds no double counting)
@@ -453,6 +540,7 @@ impl Trainer {
             vnmse: report.vnmse,
             wire_bytes: report.total_bytes(),
             stall_s,
+            bucket_done_s: report.bucket_done_s.clone(),
         });
         Ok(self.records.last().unwrap())
     }

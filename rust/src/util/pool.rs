@@ -29,6 +29,20 @@
 //! `items − 1` threads (the caller executes too): the cursor only
 //! advances when an executor finishes an item, so with enough executors
 //! every item is started before any executor waits for a second one.
+//!
+//! ## `numa` feature: thread/core affinity
+//!
+//! With `--features numa` each pool thread pins itself to one core
+//! (`sched_setaffinity`, Linux x86_64 only — a no-op stub elsewhere)
+//! before parking: thread `id` takes core `id + 1` modulo the CPU
+//! count, leaving core 0 to the calling thread. Pinning keeps a
+//! worker's scratch/arena pages on the NUMA node that faulted them in,
+//! which is where the warm-pool design pays off on multi-socket boxes;
+//! it is off by default because on shared/oversubscribed runners an
+//! unlucky pin serializes against other tenants. Affinity never moves
+//! *work* — the batch cursor hands out items identically — so outputs
+//! are byte-identical with the feature on, off, or failing (the syscall
+//! is best-effort: cpuset-restricted containers may reject the mask).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -43,6 +57,37 @@ static SPAWNED: AtomicU64 = AtomicU64::new(0);
 pub fn threads_spawned() -> u64 {
     SPAWNED.load(Ordering::Relaxed)
 }
+
+/// Best-effort pin of the calling thread to `core` (modulo the CPU
+/// count) — see the module docs' `numa` section. Raw `sched_setaffinity`
+/// syscall so no new dependency is pulled in; a rejected mask (cpuset
+/// jails) is deliberately ignored.
+#[cfg(all(feature = "numa", target_os = "linux", target_arch = "x86_64"))]
+fn pin_to_core(core: usize) {
+    let cpus = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let core = core % cpus;
+    // fixed 1024-bit mask (the kernel ignores trailing zero words)
+    let mut mask = [0u64; 16];
+    mask[core / 64] = 1u64 << (core % 64);
+    unsafe {
+        let mut ret: i64 = 203; // __NR_sched_setaffinity on x86_64
+        std::arch::asm!(
+            "syscall",
+            inout("rax") ret,
+            in("rdi") 0usize, // pid 0: the calling thread
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack, preserves_flags),
+        );
+        let _ = ret; // best-effort (negative errno on failure)
+    }
+}
+
+/// Stub when the `numa` feature is off or the target lacks the syscall.
+#[cfg(not(all(feature = "numa", target_os = "linux", target_arch = "x86_64")))]
+fn pin_to_core(_core: usize) {}
 
 /// Type-erased per-index job pointer, valid only for the epoch it was
 /// published in (the `run` barrier guarantees that).
@@ -124,7 +169,12 @@ impl WorkerPool {
                 SPAWNED.fetch_add(1, Ordering::Relaxed);
                 std::thread::Builder::new()
                     .name(format!("dynamiq-pool-{id}"))
-                    .spawn(move || worker_loop(&sh, id))
+                    .spawn(move || {
+                        // core 0 is left to the calling thread (it
+                        // executes every batch too)
+                        pin_to_core(id + 1);
+                        worker_loop(&sh, id)
+                    })
                     .expect("spawn pool worker")
             })
             .collect();
@@ -374,6 +424,23 @@ mod tests {
         for (i, it) in items.iter().enumerate() {
             assert_eq!(it.got as usize, (i + n - 1) % n);
         }
+    }
+
+    #[test]
+    fn affinity_pinning_never_changes_outputs() {
+        // passes with or without `--features numa`: pin_to_core is a
+        // no-op stub when the feature is off and best-effort otherwise,
+        // and affinity moves threads, never the work distribution
+        pin_to_core(1);
+        let work = |i: usize, x: &mut f64| *x = (i as f64).sin() * 0.5 + i as f64;
+        let mut a: Vec<f64> = vec![0.0; 64];
+        let mut b: Vec<f64> = vec![0.0; 64];
+        let pool = WorkerPool::new(3);
+        pool.run(&mut a, 4, work);
+        for (i, x) in b.iter_mut().enumerate() {
+            work(i, x);
+        }
+        assert_eq!(a, b, "pinned pool output must equal the sequential loop");
     }
 
     #[test]

@@ -78,6 +78,7 @@ fn hop_path_allocation_regression() {
     warm_kernels_allocate_zero_bytes();
     steady_state_ring_hop_chain_allocates_zero_bytes();
     engine_steady_state_rounds_are_cheaper_and_stable();
+    pipelined_steady_state_rounds_are_cheaper_and_stable();
     pooled_threaded_rounds_are_spawn_free_and_cheap();
 }
 
@@ -227,6 +228,42 @@ fn engine_steady_state_rounds_are_cheaper_and_stable() {
     assert_eq!(
         per_round[3], per_round[4],
         "steady-state rounds must have identical allocation profiles: {per_round:?}"
+    );
+}
+
+fn pipelined_steady_state_rounds_are_cheaper_and_stable() {
+    // The bucketed pipeline path (`run_pipelined`, depth >= 2): the
+    // ScratchPool's per-bucket-slot arena free lists must warm up
+    // exactly like the serial path — warm rounds allocate strictly less
+    // than the cold round, and *identically* to each other. The flat
+    // steady-state profile is the zero-growth pin for the hop path: the
+    // remaining per-round allocations are the bounded pricing
+    // structures (bucket chains, completion vectors), which do not
+    // scale with hops or rounds.
+    use dynamiq::collective::PipelineCfg;
+    let n = 4usize;
+    let d = 16384;
+    let grads: Vec<Vec<f32>> = (0..n).map(|w| grad(d, 55 + w as u64)).collect();
+    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec("DynamiQ")).collect();
+    let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+    eng.threads = 1; // the sequential zero-alloc hop path
+    let cfg = PipelineCfg { buckets: 4, depth: 2, ..PipelineCfg::default() };
+    let mut pool = ScratchPool::new();
+    let mut per_round: Vec<(u64, u64)> = Vec::new();
+    for round in 0..5u32 {
+        let snap = alloc_snapshot();
+        eng.run_pipelined(&grads, &mut codecs, round, 0.0, &mut pool, &cfg).unwrap();
+        per_round.push(alloc_delta(snap));
+    }
+    assert!(
+        per_round[3].1 < per_round[0].1,
+        "per-bucket slot pooling saved nothing: cold {:?} vs warm {:?}",
+        per_round[0],
+        per_round[3]
+    );
+    assert_eq!(
+        per_round[3], per_round[4],
+        "steady-state pipelined rounds must have identical allocation profiles: {per_round:?}"
     );
 }
 

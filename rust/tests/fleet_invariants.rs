@@ -22,8 +22,8 @@
 //!    reshape the virtual timeline only — payload bytes and reduced
 //!    values stay bit-identical to the sync engine.
 
-use dynamiq::codec::make_codecs;
-use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, Topology};
+use dynamiq::codec::{make_codecs, ScratchPool};
+use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, PipelineCfg, Topology};
 use dynamiq::coordinator::Coordinator;
 use dynamiq::sim::{EventEngine, FleetScratch, LinkFlap, MembershipPlan, StragglerModel};
 use dynamiq::util::rng::Pcg;
@@ -258,6 +258,105 @@ fn membership_rebuild_keeps_schedules_valid() {
     // a plan step the topology cannot satisfy surfaces as an error, not
     // a panic or a silently wrong schedule
     assert!(Topology::Butterfly.validate(plan.n_at(3).unwrap()).is_err());
+}
+
+/// The bucketed-pipeline matrix across backends: with a pipeline config
+/// engaged, the event backend's bucket-refined schedule must reproduce
+/// the sync `run_pipelined` path exactly — aggregated values and wire
+/// bytes bit-identical to the **unpipelined** event round (pipelining
+/// reshapes the modeled timeline only), and every reported time field
+/// (serial phases, per-stage dts, compute makespan, round latency,
+/// per-bucket completion handles) bit-equal to the sync pipelined
+/// engine's. Depth 1 pins the serial delegation on both backends.
+#[test]
+fn pipelined_event_backend_matches_sync_pipelined_engine() {
+    let topo = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+    let n = 8;
+    let d = 4099;
+    let g = grads(n, d, 0xB0C5E7);
+    let net = net_for(&topo);
+    for scheme in ["BF16", "DynamiQ", "THC"] {
+        // unpipelined event baseline: values + bytes must never move
+        let ev = EventEngine::new(topo, net.clone());
+        let mut plain_codecs = make_codecs(scheme, n);
+        let (plain, plain_rep, _) = ev.run(&g, &mut plain_codecs, 0, 0.0).expect("event runs");
+        for depth in [1usize, 2, 4] {
+            let tag = format!("{scheme} depth={depth}");
+            let cfg = PipelineCfg { buckets: 4, depth, ..PipelineCfg::default() };
+
+            let eng = AllReduceEngine::new(topo, net.clone());
+            let mut sync_codecs = make_codecs(scheme, n);
+            let mut pool = ScratchPool::new();
+            let (want, want_rep) = eng
+                .run_pipelined(&g, &mut sync_codecs, 0, 0.0, &mut pool, &cfg)
+                .expect("sync pipelined runs");
+
+            let mut ev = EventEngine::new(topo, net.clone());
+            ev.pipeline = Some(cfg.clone());
+            let mut event_codecs = make_codecs(scheme, n);
+            let (got, got_rep, stats) =
+                ev.run(&g, &mut event_codecs, 0, 0.0).expect("event pipelined runs");
+
+            for (i, (a, b)) in plain.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: value {i} moved vs unpipelined");
+            }
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: value {i} vs sync pipelined");
+            }
+            assert_eq!(got_rep.rs_bytes, plain_rep.rs_bytes, "{tag}: rs bytes moved");
+            assert_eq!(got_rep.ag_bytes, plain_rep.ag_bytes, "{tag}: ag bytes moved");
+            assert_eq!(got_rep.rs_bytes, want_rep.rs_bytes, "{tag}: rs bytes vs sync");
+            assert_eq!(got_rep.ag_bytes, want_rep.ag_bytes, "{tag}: ag bytes vs sync");
+            // the full pipelined timing report is bit-equal across backends
+            assert_eq!(
+                got_rep.meta_time_s.to_bits(),
+                want_rep.meta_time_s.to_bits(),
+                "{tag}: meta time"
+            );
+            assert_eq!(got_rep.rs_time_s.to_bits(), want_rep.rs_time_s.to_bits(), "{tag}: rs t");
+            assert_eq!(got_rep.ag_time_s.to_bits(), want_rep.ag_time_s.to_bits(), "{tag}: ag t");
+            for (s, (a, b)) in
+                want_rep.stage_times_s.iter().zip(&got_rep.stage_times_s).enumerate()
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: stage {s} dt");
+            }
+            assert_eq!(
+                got_rep.compute_time_s.to_bits(),
+                want_rep.compute_time_s.to_bits(),
+                "{tag}: compute makespan"
+            );
+            assert_eq!(
+                got_rep.round_latency_s.to_bits(),
+                want_rep.round_latency_s.to_bits(),
+                "{tag}: round latency"
+            );
+            assert_eq!(got_rep.bucket_done_s.len(), want_rep.bucket_done_s.len(), "{tag}");
+            for (b, (x, y)) in
+                want_rep.bucket_done_s.iter().zip(&got_rep.bucket_done_s).enumerate()
+            {
+                assert_eq!(x.to_bits(), y.to_bits(), "{tag}: bucket {b} completion");
+            }
+            if depth == 1 {
+                let serial = got_rep.comm_time_s() + got_rep.compute_time_s;
+                assert_eq!(
+                    got_rep.round_latency_s.to_bits(),
+                    serial.to_bits(),
+                    "{tag}: depth 1 must price as the serial sum"
+                );
+            }
+            // the executed bucket-refined trace ran more, smaller batches
+            let stages = topo.rs_stages(n) + topo.all_gather(n).len();
+            assert!(
+                stats.batches as usize >= stages,
+                "{tag}: bucket sub-stages cannot batch below the stage count"
+            );
+            assert_eq!(stats.bucket_busy_s.len(), 4, "{tag}: bucket busy axis");
+            assert!(
+                stats.bucket_busy_s.iter().all(|b| b.is_finite() && *b >= 0.0),
+                "{tag}: bucket busy sane"
+            );
+        }
+    }
 }
 
 /// Straggler jitter and link flaps stretch the virtual timeline without

@@ -6,7 +6,9 @@
 //! engine exactly.
 
 use dynamiq::codec::{make_codec, GradCodec, HopCtx, KernelMode, MetaOp, ScratchPool, WorkerScratch};
-use dynamiq::collective::{AllReduceEngine, Level, LevelSpec, NetworkModel, Topology};
+use dynamiq::collective::{
+    AllReduceEngine, Level, LevelSpec, NetworkModel, NicProfile, PipelineCfg, Topology,
+};
 use dynamiq::util::rng::Pcg;
 
 const SCHEMES: &[&str] = &[
@@ -252,6 +254,154 @@ fn warm_buffer_reuse_across_rounds_is_clean() {
             );
             assert_eq!(out, fresh, "{scheme}: round {round} warm-buffer reuse diverges");
         }
+    }
+}
+
+#[test]
+fn pipelined_rounds_are_bit_identical_to_run_pooled() {
+    // The tentpole determinism invariant: the fixed diagonal bucket
+    // partition + per-chunk hop-order accumulation keep payload bytes
+    // and aggregated values byte-identical to the unpipelined round for
+    // ANY pipeline depth and thread count — pipelining reshapes the
+    // modeled timeline only. Depth 1 additionally delegates to the
+    // serial walk, so its comm times are bit-equal too; and the serial
+    // phase costs ride along unchanged at every depth.
+    let topo = Topology::hierarchical(Level::Ring, Level::Ring, 4);
+    let n = 8;
+    let d = 4099; // unaligned: padding + ragged tail chunks in play
+    let g: Vec<Vec<f32>> = (0..n).map(|i| grad(d, 31 + i as u64)).collect();
+    let net = NetworkModel::tiered_100g(&NetworkModel::geometric_ladder(48.0, 1));
+    for scheme in ["BF16", "DynamiQ", "THC"] {
+        let mut eng = AllReduceEngine::new(topo, net.clone());
+        eng.threads = 1;
+        let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec(scheme)).collect();
+        let mut pool = ScratchPool::new();
+        let mut base = None;
+        for round in 0..2u32 {
+            base = Some(eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool).unwrap());
+        }
+        let (want, want_rep) = base.unwrap();
+        for depth in [1usize, 2, 4] {
+            for threads in [1usize, 4] {
+                let tag = format!("{scheme} depth={depth} threads={threads}");
+                let mut eng = AllReduceEngine::new(topo, net.clone());
+                eng.threads = threads;
+                let mut codecs: Vec<Box<dyn GradCodec>> =
+                    (0..n).map(|_| make_codec(scheme)).collect();
+                let mut pool = ScratchPool::new();
+                let cfg = PipelineCfg { buckets: 4, depth, ..PipelineCfg::default() };
+                let mut last = None;
+                for round in 0..2u32 {
+                    last = Some(
+                        eng.run_pipelined(&g, &mut codecs, round, 0.0, &mut pool, &cfg).unwrap(),
+                    );
+                }
+                let (out, rep) = last.unwrap();
+                assert_bits_eq(&want, &out, &tag);
+                assert_eq!(rep.rs_bytes, want_rep.rs_bytes, "{tag}: rs bytes");
+                assert_eq!(rep.ag_bytes, want_rep.ag_bytes, "{tag}: ag bytes");
+                assert_eq!(rep.compress_calls, want_rep.compress_calls, "{tag}: compress");
+                assert_eq!(rep.dar_calls, want_rep.dar_calls, "{tag}: dar");
+                assert_eq!(rep.vnmse.to_bits(), want_rep.vnmse.to_bits(), "{tag}: vNMSE");
+                // serial phase pricing is depth-invariant to the bit
+                assert_eq!(
+                    rep.meta_time_s.to_bits(),
+                    want_rep.meta_time_s.to_bits(),
+                    "{tag}: meta time"
+                );
+                assert_eq!(rep.rs_time_s.to_bits(), want_rep.rs_time_s.to_bits(), "{tag}: rs t");
+                assert_eq!(rep.ag_time_s.to_bits(), want_rep.ag_time_s.to_bits(), "{tag}: ag t");
+                assert_eq!(rep.bucket_done_s.len(), 4, "{tag}: bucket handles");
+                assert!(
+                    rep.bucket_done_s.windows(2).all(|w| w[1] >= w[0]),
+                    "{tag}: bucket completion must be nondecreasing: {:?}",
+                    rep.bucket_done_s
+                );
+                let last_done = *rep.bucket_done_s.last().unwrap();
+                assert_eq!(
+                    last_done.to_bits(),
+                    rep.round_latency_s.to_bits(),
+                    "{tag}: last bucket is the round"
+                );
+                if depth == 1 {
+                    // depth-1 comm-time identity: serial delegation
+                    let serial = rep.comm_time_s() + rep.compute_time_s;
+                    assert_eq!(
+                        rep.round_latency_s.to_bits(),
+                        serial.to_bits(),
+                        "{tag}: depth 1 must price as the serial sum"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_depth2_comm_times_match_the_python_oracle() {
+    // Golden cells printed by `python/validate_pipeline.py` (its
+    // `golden()` table, full f64 repr): BF16 payloads are exactly
+    // 2 bytes/entry with no metadata phase, so the oracle's ported
+    // scheduler and the Rust pricer evaluate the same IEEE-f64
+    // expressions — agreement at 1e-9 relative cross-validates the
+    // greedy list scheduler's arithmetic, not just its shape.
+    let stack3 = Topology::stack(&[
+        LevelSpec { topo: Level::Ring, size: 2 },
+        LevelSpec { topo: Level::Ring, size: 2 },
+        LevelSpec { topo: Level::Ring, size: 2 },
+    ])
+    .unwrap();
+    let cells: [(&str, Topology, f64, f64, f64); 2] = [
+        (
+            "hier4x2-d4096-B4-D2",
+            Topology::hierarchical(Level::Ring, Level::Ring, 4),
+            8.0,                     // NIC oversubscription
+            2.8118293333333332e-5,   // pipe_makespan
+            1.525312e-5,             // serial_comm
+        ),
+        (
+            "hier2x2x2-d4096-B4-D2",
+            stack3,
+            4.0,
+            2.3920213333333334e-5,
+            1.3935573333333333e-5,
+        ),
+    ];
+    let n = 8;
+    let d = 4096;
+    let g: Vec<Vec<f32>> = (0..n).map(|i| grad(d, 77 + i as u64)).collect();
+    for (label, topo, oversub, want_makespan, want_serial) in cells {
+        topo.validate(n).unwrap();
+        // the oracle's net: 12.5 GB/s NIC at 2 µs, ONE 48× intra link
+        // tier at 1 µs (deeper levels fall back to the NIC class, in
+        // both implementations), single-port gateway at `oversub`
+        let mut net = NetworkModel::isolated_100g();
+        net.latency_s = 2e-6;
+        net.set_tier_ratios(&[48.0]);
+        net.nic = NicProfile { ports_per_node: 1, oversub };
+        let eng = AllReduceEngine::new(topo, net);
+        let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec("BF16")).collect();
+        let mut pool = ScratchPool::new();
+        let cfg = PipelineCfg { buckets: 4, depth: 2, ..PipelineCfg::default() };
+        let (_, rep) = eng.run_pipelined(&g, &mut codecs, 0, 0.0, &mut pool, &cfg).unwrap();
+        let rel_m = (rep.round_latency_s - want_makespan).abs() / want_makespan;
+        assert!(
+            rel_m < 1e-9,
+            "{label}: makespan {:e} vs oracle {want_makespan:e} (rel {rel_m:e})",
+            rep.round_latency_s
+        );
+        let rel_s = (rep.comm_time_s() - want_serial).abs() / want_serial;
+        assert!(
+            rel_s < 1e-9,
+            "{label}: serial comm {:e} vs oracle {want_serial:e} (rel {rel_s:e})",
+            rep.comm_time_s()
+        );
+        assert_eq!(rep.bucket_done_s.len(), 4, "{label}: bucket handles");
+        assert!(
+            rep.bucket_done_s.windows(2).all(|w| w[1] >= w[0]),
+            "{label}: nondecreasing completion: {:?}",
+            rep.bucket_done_s
+        );
     }
 }
 
