@@ -3,7 +3,7 @@
 //!
 //!     cargo run --release --example quickstart
 
-use dynamiq::codec::{make_codecs, GradCodec, HopCtx};
+use dynamiq::codec::{CodecSpec, GradCodec, HopCtx};
 use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
 use dynamiq::util::rng::Pcg;
 use dynamiq::util::vnmse;
@@ -45,7 +45,7 @@ fn main() {
         })
         .collect();
     for scheme in ["BF16", "DynamiQ", "MXFP8"] {
-        let mut codecs = make_codecs(scheme, 4);
+        let mut codecs = scheme.parse::<CodecSpec>().expect("valid spec").build_n(4);
         let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
         let (_, rep) = eng.run(&grads, &mut codecs, 0, 0.0).expect("valid topology");
         println!(

@@ -4,7 +4,7 @@
 //!
 //!     cargo run --release --example scalability
 
-use dynamiq::codec::make_codecs;
+use dynamiq::codec::CodecSpec;
 use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
 use dynamiq::util::rng::Pcg;
 
@@ -36,7 +36,8 @@ fn main() {
             let g = grads(n, d, 42);
             let mut e = Vec::new();
             for topo in [Topology::Ring, Topology::Butterfly] {
-                let mut codecs = make_codecs(scheme, n);
+                let mut codecs =
+                    scheme.parse::<CodecSpec>().expect("valid spec").build_n(n);
                 let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
                 let (_, rep) = eng.run(&g, &mut codecs, 0, 0.0).expect("valid topology");
                 e.push(rep.vnmse);

@@ -9,12 +9,16 @@
 //! comparator. Set `BENCH_QUICK=1` for the CI smoke configuration
 //! (smaller vector, fewer samples).
 
-use dynamiq::codec::{make_codecs, ScratchPool};
+use dynamiq::codec::{CodecSpec, GradCodec, ScratchPool};
 use dynamiq::collective::{
     AllReduceEngine, Level, LinkClass, NetworkModel, NicProfile, PipelineCfg, Topology,
 };
 use dynamiq::util::benchkit::{Bench, BenchLog};
 use dynamiq::util::rng::Pcg;
+
+fn mk_codecs(spec: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
+}
 
 fn grads(n: usize, d: usize) -> Vec<Vec<f32>> {
     (0..n)
@@ -55,7 +59,7 @@ fn main() {
             };
             let mut eng = AllReduceEngine::new(topo, net);
             eng.measure_vnmse = false;
-            let mut codecs = make_codecs(scheme, n);
+            let mut codecs = mk_codecs(scheme, n);
             let mut pool = ScratchPool::new();
             let mut round = 0u32;
             let r = bench.run(
@@ -77,7 +81,7 @@ fn main() {
     let g = grads(n, d);
     let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
     eng.measure_vnmse = false;
-    let mut codecs = make_codecs("DynamiQ", n);
+    let mut codecs = mk_codecs("DynamiQ", n);
     let mut pool = ScratchPool::new();
     bench.run("engine/round", Some((d * 4 * n) as u64), || {
         let (_, rep) = eng.run_pooled(&g, &mut codecs, 0, 0.0, &mut pool).unwrap();
@@ -87,7 +91,7 @@ fn main() {
         let out = dynamiq::coordinator::threaded_allreduce(
             Topology::Ring,
             g.clone(),
-            make_codecs("DynamiQ", n),
+            mk_codecs("DynamiQ", n),
             0,
         )
         .unwrap();
@@ -110,7 +114,7 @@ fn main() {
         let mut eng =
             AllReduceEngine::new(ptopo.clone(), NetworkModel::hierarchical_100g(48.0));
         eng.measure_vnmse = false;
-        let mut codecs = make_codecs(scheme, n);
+        let mut codecs = mk_codecs(scheme, n);
         let mut pool = ScratchPool::new();
         let mut round = 0u32;
         let r = bench.run(&format!("{scheme}/round"), Some((d * 4 * n) as u64), || {

@@ -17,7 +17,7 @@
 //! `BENCH_QUICK=1` for the CI smoke configuration (smaller vector, fewer
 //! samples).
 
-use dynamiq::codec::{make_codec, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
+use dynamiq::codec::{CodecSpec, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use dynamiq::util::benchkit::{Bench, BenchLog};
 use dynamiq::util::rng::Pcg;
 
@@ -49,8 +49,9 @@ fn main() {
         // proper 2-worker semantics: both codecs install the same
         // aggregated metadata, so their bit allocations / scales agree and
         // codec_b can decode codec's wire (as in a real hop)
-        let mut codec = make_codec(scheme);
-        let mut codec_b = make_codec(scheme);
+        let spec = scheme.parse::<CodecSpec>().expect("codec spec");
+        let mut codec = spec.build();
+        let mut codec_b = spec.build();
         let hop_b = HopCtx { worker: 1, n_workers: 4, ..hop };
         let meta = codec.metadata(&g, &hop);
         let meta_b = codec_b.metadata(&g2, &hop_b);
@@ -142,6 +143,44 @@ fn main() {
             std::hint::black_box(codec_b.compress(&acc, r.clone(), &next));
         });
         log.push(scheme, "unfused-dar", entries, &res);
+    }
+
+    // entropy-coded wire lanes: the Ranged encode path (packed walk +
+    // range-coder transcode racing the fallback) end-to-end against warm
+    // pooled scratch, plus the matching decode. Lane labels carry the
+    // canonical spec string so the gate tracks the wire format
+    // explicitly; `ranged` is a gated lane in `benchgate`.
+    println!("\n== entropy-coded wire (wire=ranged) ==");
+    for scheme in ["DynamiQ", "THC"] {
+        let spec =
+            format!("{scheme}:wire=ranged").parse::<CodecSpec>().expect("codec spec");
+        let label = spec.to_string();
+        let mut codec = spec.build();
+        let g = grad(d, 1);
+        let meta = codec.metadata(&g, &hop);
+        let pre = codec.begin_round(&g, &meta, &hop);
+        let r = 0..pre.len();
+        let entries = pre.len() as u64;
+        let mut scratch = WorkerScratch::default();
+        let mut out = Vec::new();
+        codec.compress_pooled(&pre[r.clone()], r.clone(), &hop, &mut scratch, &mut out);
+        println!(
+            "-- {label}: wire {:.2} bits/coord",
+            out.len() as f64 * 8.0 / d as f64
+        );
+        let res = bench.run(&format!("{label}/ranged"), Some(bytes), || {
+            out.clear();
+            codec.compress_pooled(&pre[r.clone()], r.clone(), &hop, &mut scratch, &mut out);
+            std::hint::black_box(out.len());
+        });
+        log.push(&label, "ranged", entries, &res);
+        let wire = out.clone();
+        let mut dec = vec![0.0f32; pre.len()];
+        let res = bench.run(&format!("{label}/ranged-decode"), Some(bytes), || {
+            codec.decompress_pooled(&wire, r.clone(), &hop, &mut scratch, &mut dec);
+            std::hint::black_box(dec.len());
+        });
+        log.push(&label, "ranged-decode", entries, &res);
     }
     match log.write("BENCH_codec.json") {
         Ok(()) => println!("\nwrote BENCH_codec.json"),

@@ -4,7 +4,7 @@
 //!
 //!     cargo bench --bench paper_tables
 
-use dynamiq::codec::{make_codec, make_codecs, GradCodec, HopCtx};
+use dynamiq::codec::{CodecSpec, GradCodec, HopCtx};
 use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
 use dynamiq::quant::bitalloc::{solve_exact, FastAllocator};
 use dynamiq::util::benchkit::{Bench, Table};
@@ -39,7 +39,7 @@ fn main() {
     for scheme in ["DynamiQ:b=3", "DynamiQ:b=4", "DynamiQ:b=5", "DynamiQ:b=6", "MXFP8"] {
         let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
         eng.measure_vnmse = false;
-        let mut codecs = make_codecs(scheme, n);
+        let mut codecs = scheme.parse::<CodecSpec>().expect("codec spec").build_n(n);
         let mut comm = 0.0;
         let mut wire = 0u64;
         let mut pool = dynamiq::codec::ScratchPool::new();
@@ -73,7 +73,7 @@ fn main() {
 
     // --- metadata stage cost (bytes) ---
     println!("== metadata volume ==");
-    let mut c = make_codec("DynamiQ");
+    let mut c = "DynamiQ".parse::<CodecSpec>().expect("codec spec").build();
     let hop = HopCtx::flat(0, 4, 0, 1);
     let meta = c.metadata(&g[0], &hop);
     println!(

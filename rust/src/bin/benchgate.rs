@@ -39,12 +39,21 @@ use std::process::ExitCode;
 use dynamiq::util::json::Json;
 
 /// Kernels gated against the baseline: the §4 fused codec lanes (which
-/// run the default vectorized kernels) plus the `allreduce` bench's
+/// run the default vectorized kernels), the `allreduce` bench's
 /// engine-round lanes — `round` (serial hop path) and the bucketed
-/// pipelined rounds at depth 1 and 4. The `unfused-dar` ablation and the
-/// `*-scalar` reference lanes are informational only.
-const GATED: &[&str] =
-    &["compress", "decompress", "fused-dar", "round", "round-pipelined-d1", "round-pipelined-d4"];
+/// pipelined rounds at depth 1 and 4 — and the `ranged` entropy-coded
+/// encode lane (`wire=ranged` specs). The `unfused-dar` ablation, the
+/// `*-scalar` reference lanes and `ranged-decode` are informational
+/// only.
+const GATED: &[&str] = &[
+    "compress",
+    "decompress",
+    "fused-dar",
+    "round",
+    "round-pipelined-d1",
+    "round-pipelined-d4",
+    "ranged",
+];
 
 fn entries_of(doc: &Json) -> Vec<Json> {
     match doc {

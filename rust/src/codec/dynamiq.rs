@@ -45,6 +45,7 @@
 
 use std::ops::Range;
 
+use crate::codec::entropy::{ModelSet, RangeDecoder, RangeEncoder, WireFormat, RANGED_BIT};
 use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::bitalloc::{solve_exact, BitAllocation, FastAllocator};
 use crate::quant::groups::{GroupLayout, SuperGroupStats};
@@ -110,6 +111,15 @@ pub struct DynamiqConfig {
     /// never need out-of-band agreement about the hop a payload was
     /// encoded for.
     pub level_budgets: Vec<f64>,
+    /// Wire representation of the quantized codes:
+    /// [`WireFormat::Packed`] (the default — byte stream identical to
+    /// the pre-entropy-coding codec) or [`WireFormat::Ranged`], which
+    /// re-encodes the same packed body losslessly through the
+    /// `codec::entropy` range coder with adaptive per-width models,
+    /// falling back to the packed body per payload (tagged via
+    /// `RANGED_BIT` in the header byte) when entropy coding does not
+    /// shrink it. Decoded values are bit-identical either way.
+    pub wire: WireFormat,
 }
 
 impl Default for DynamiqConfig {
@@ -127,6 +137,7 @@ impl Default for DynamiqConfig {
             subtract_mean: true,
             seed: 0xD14A_311,
             level_budgets: Vec::new(),
+            wire: WireFormat::default(),
         }
     }
 }
@@ -231,6 +242,16 @@ pub struct Dynamiq {
     fast_alloc: Vec<FastAllocator>,
     state: Option<RoundState>,
     mode: KernelMode,
+    /// adaptive-model alphabet sizes for the Ranged transcoder: one slot
+    /// per configured width (`1 << w` symbols when codes are sub-byte
+    /// and byte-aligned, 256 otherwise — the low byte for w = 16, whole
+    /// packed bytes for exotic widths), then four 256-symbol slots: the
+    /// shared w = 16 high byte, and the three scale-byte classes (BF16
+    /// scale low/high byte, UINT8 group scale — the high byte is where
+    /// most of the win lives: clustered exponents carry ~2 bits of
+    /// entropy in 8). Precomputed so per-payload model resets never
+    /// allocate.
+    ranged_alphabets: Vec<usize>,
 }
 
 /// Entries per lane batch in the vectorized kernels. 8 entries × w bits
@@ -260,6 +281,12 @@ impl Dynamiq {
             [2, 4, 8] // fast allocator unused unless |W|=3
         };
         let n_sets = 1 + cfg.level_budgets.len();
+        let ranged_alphabets: Vec<usize> = cfg
+            .widths
+            .iter()
+            .map(|&w| if w < 8 && 8 % w == 0 { 1usize << w } else { 256 })
+            .chain([256; 4])
+            .collect();
         Dynamiq {
             fast_alloc: vec![FastAllocator::new(w3); n_sets],
             tables,
@@ -267,6 +294,7 @@ impl Dynamiq {
             cfg,
             state: None,
             mode: KernelMode::default(),
+            ranged_alphabets,
         }
     }
 
@@ -294,11 +322,21 @@ impl Dynamiq {
         self.cfg.layout.group
     }
 
-    /// Wire bytes of one super-group at width `w`.
-    fn sg_wire_bytes(&self, w: u32) -> usize {
+    /// Scale-metadata bytes preceding the packed codes of one
+    /// super-group (BF16 super scale + UINT8 per group hierarchical, or
+    /// BF16 per group in the ablation).
+    fn sg_scale_bytes(&self) -> usize {
         let gpsg = self.cfg.layout.groups_per_super();
-        let scales = if self.cfg.hierarchical { 2 + gpsg } else { 2 * gpsg };
-        scales + packed_len(self.s(), w)
+        if self.cfg.hierarchical {
+            2 + gpsg
+        } else {
+            2 * gpsg
+        }
+    }
+
+    /// Wire bytes of one super-group at width `w` (packed layout).
+    fn sg_wire_bytes(&self, w: u32) -> usize {
+        self.sg_scale_bytes() + packed_len(self.s(), w)
     }
 
     /// Rounding context for hop compression by `ctx.worker`.
@@ -339,9 +377,13 @@ impl Dynamiq {
         }
     }
 
-    /// Whether payloads carry the width header.
+    /// Whether payloads carry the header byte (budget-index tag, and —
+    /// for Ranged payloads — the `RANGED_BIT` coded/fallback flag).
+    /// Per-level budgets need it for the width codes; the Ranged wire
+    /// format needs it for the per-payload fallback tag even when the
+    /// budget is uniform.
     fn has_header(&self) -> bool {
-        !self.cfg.level_budgets.is_empty()
+        !self.cfg.level_budgets.is_empty() || self.cfg.wire == WireFormat::Ranged
     }
 
     /// Bits per width code (see [`DynamiqConfig::width_code_bits`]).
@@ -350,21 +392,32 @@ impl Dynamiq {
     }
 
     /// Header bytes preceding the super-group payloads of a chunk with
-    /// `nsg` super-groups (0 when headerless or the chunk is empty).
+    /// `nsg` super-groups (0 when headerless or the chunk is empty; the
+    /// tag byte alone when the budget is uniform but the wire format is
+    /// Ranged — there are no per-super-group width codes to carry).
     fn header_bytes(&self, nsg: usize) -> usize {
         if !self.has_header() || nsg == 0 {
             0
+        } else if self.cfg.level_budgets.is_empty() {
+            1
         } else {
             1 + (nsg * self.code_bits()).div_ceil(8)
         }
     }
 
-    /// Append the width header for budget set `bi` covering `slots`.
+    /// Append the width header for budget set `bi` covering `slots`
+    /// (tag byte + width codes; just the tag when the budget is
+    /// uniform). The `RANGED_BIT` of the tag byte starts clear — the
+    /// Ranged encoder sets it after the coded body wins the fallback
+    /// race.
     fn encode_header(&self, bi: usize, slots: Range<usize>, out: &mut Vec<u8>) {
         if !self.has_header() || slots.is_empty() {
             return;
         }
         out.push(bi as u8);
+        if self.cfg.level_budgets.is_empty() {
+            return;
+        }
         let widths = &self.state().width_sets[bi];
         let cb = self.code_bits();
         let mut acc: u32 = 0;
@@ -387,11 +440,13 @@ impl Dynamiq {
     }
 
     /// Width of the `i`-th super-group of a payload, read from its header
-    /// codes (`bytes` starts at the header). Headerless mode reads the
-    /// agreed set instead — `k` is the absolute reordered slot.
+    /// codes (`bytes` starts at the header). With a uniform budget there
+    /// are no codes on the wire (the header, if present, is the tag byte
+    /// alone) and the agreed set is read instead — `k` is the absolute
+    /// reordered slot.
     #[inline]
     fn wire_width(&self, bytes: &[u8], i: usize, k: usize) -> u32 {
-        if !self.has_header() {
+        if self.cfg.level_budgets.is_empty() {
             return self.state().width_sets[0][k] as u32;
         }
         let cb = self.code_bits();
@@ -740,9 +795,12 @@ impl Dynamiq {
         (range.start / self.s())..(range.end / self.s())
     }
 
-    /// Exact wire size of a chunk under the agreed allocation for a hop at
+    /// Wire size of a chunk under the agreed allocation for a hop at
     /// `level` (used by tests and the Table 2 traffic model), including
-    /// the width header when per-level budgets are active.
+    /// the width header when per-level budgets are active. Exact for
+    /// [`WireFormat::Packed`]; for [`WireFormat::Ranged`] it is the
+    /// fallback (worst-case) size — coded payloads are strictly
+    /// smaller, and their actual size is data-dependent.
     pub fn chunk_wire_bytes_at(&self, range: &Range<usize>, level: u8) -> usize {
         let st = self.state();
         let bi = self.budget_index(level);
@@ -767,6 +825,357 @@ impl Dynamiq {
             out[orig as usize] = st.width_sets[0][slot];
         }
         out
+    }
+
+    // ---- WireFormat::Ranged: lossless entropy transcoding ----
+    //
+    // A Ranged payload carries exactly the packed layout's information:
+    // the encoder first produces the packed header + body (the very
+    // bytes the Packed format would ship), then re-encodes the body
+    // through the carry-less range coder under per-chunk adaptive
+    // models (one per configured width, plus a shared high-byte model
+    // for 16-bit codes). If the coded stream is not strictly smaller,
+    // the packed body ships unchanged with `RANGED_BIT` clear — every
+    // payload names its own representation in the tag byte, and decoded
+    // values are bit-identical to Packed by construction (decode
+    // re-materializes the packed body and runs the packed walk).
+
+    /// Index of width `w` in the configured set (model-slot key).
+    #[inline]
+    fn width_index(&self, w: u32) -> usize {
+        self.cfg.widths.iter().position(|&x| x == w).expect("width outside set")
+    }
+
+    /// Model-slot indices past the per-width code models (must mirror
+    /// the `ranged_alphabets` layout built in [`Dynamiq::new`]).
+    #[inline]
+    fn slot_hi_byte(&self) -> usize {
+        self.cfg.widths.len()
+    }
+    #[inline]
+    fn slot_scale_lo(&self) -> usize {
+        self.cfg.widths.len() + 1
+    }
+    #[inline]
+    fn slot_scale_hi(&self) -> usize {
+        self.cfg.widths.len() + 2
+    }
+    #[inline]
+    fn slot_scale_group(&self) -> usize {
+        self.cfg.widths.len() + 3
+    }
+
+    /// Whether `bytes` is an entropy-coded payload: tag byte present
+    /// with [`RANGED_BIT`] set. Fallback payloads keep the bit clear
+    /// and decode by the packed walk directly.
+    #[inline]
+    fn is_ranged_payload(&self, bytes: &[u8]) -> bool {
+        self.has_header() && !bytes.is_empty() && bytes[0] & RANGED_BIT != 0
+    }
+
+    /// Range-encode a packed chunk body (everything after the header)
+    /// into `out`. Returns whether the coded stream came out strictly
+    /// smaller than `body` — aborting as soon as it cannot — so the
+    /// caller can discard the partial stream and ship the packed body.
+    fn encode_ranged_body(
+        &self,
+        body: &[u8],
+        slots: Range<usize>,
+        bi: usize,
+        models: &mut ModelSet,
+        out: &mut Vec<u8>,
+    ) -> bool {
+        let st = self.state();
+        let s = self.s();
+        let gpsg = self.cfg.layout.groups_per_super();
+        let coded_start = out.len();
+        models.reset(&self.ranged_alphabets);
+        let mut enc = RangeEncoder::new(out);
+        let mut off = 0usize;
+        for k in slots {
+            let w = st.width_sets[bi][k] as u32;
+            let wi = self.width_index(w);
+            // scale metadata by byte class: BF16 low/high bytes and the
+            // UINT8 group scales each get their own model (the BF16 high
+            // byte — clustered exponents — is the densest win)
+            if self.cfg.hierarchical {
+                models.slot(self.slot_scale_lo()).encode(&mut enc, body[off] as usize);
+                models.slot(self.slot_scale_hi()).encode(&mut enc, body[off + 1] as usize);
+                off += 2;
+                for _ in 0..gpsg {
+                    models.slot(self.slot_scale_group()).encode(&mut enc, body[off] as usize);
+                    off += 1;
+                }
+            } else {
+                for _ in 0..gpsg {
+                    models.slot(self.slot_scale_lo()).encode(&mut enc, body[off] as usize);
+                    models.slot(self.slot_scale_hi()).encode(&mut enc, body[off + 1] as usize);
+                    off += 2;
+                }
+            }
+            let nbytes = packed_len(s, w);
+            match w {
+                1 | 2 | 4 => {
+                    let per = (8 / w) as usize;
+                    let mask = (1u32 << w) - 1;
+                    for _ in 0..nbytes {
+                        let mut b = body[off] as u32;
+                        off += 1;
+                        for _ in 0..per {
+                            models.slot(wi).encode(&mut enc, (b & mask) as usize);
+                            b >>= w;
+                        }
+                    }
+                }
+                16 => {
+                    // sign-magnitude low byte per width model; top byte
+                    // (near-constant for small magnitudes) shares the
+                    // high-byte model across super-groups
+                    let hi = self.slot_hi_byte();
+                    for _ in 0..s {
+                        models.slot(wi).encode(&mut enc, body[off] as usize);
+                        models.slot(hi).encode(&mut enc, body[off + 1] as usize);
+                        off += 2;
+                    }
+                }
+                _ => {
+                    // exotic widths whose codes straddle bytes: model the
+                    // packed bytes themselves
+                    for _ in 0..nbytes {
+                        models.slot(wi).encode(&mut enc, body[off] as usize);
+                        off += 1;
+                    }
+                }
+            }
+            if enc.written() - coded_start >= body.len() {
+                return false;
+            }
+        }
+        debug_assert_eq!(off, body.len());
+        enc.finish();
+        out.len() - coded_start < body.len()
+    }
+
+    /// Append the Ranged form of a fully assembled packed payload
+    /// (header + body) to `out`: header verbatim, body entropy-coded,
+    /// `RANGED_BIT` set — or the packed payload unchanged when coding
+    /// does not shrink it.
+    fn emit_ranged(
+        &self,
+        packed: &[u8],
+        slots: Range<usize>,
+        bi: usize,
+        models: &mut ModelSet,
+        out: &mut Vec<u8>,
+    ) {
+        if slots.is_empty() {
+            debug_assert!(packed.is_empty());
+            return;
+        }
+        let hdr = self.header_bytes(slots.len());
+        let start = out.len();
+        out.extend_from_slice(&packed[..hdr]);
+        if self.encode_ranged_body(&packed[hdr..], slots, bi, models, out) {
+            out[start] |= RANGED_BIT;
+        } else {
+            out.truncate(start);
+            out.extend_from_slice(packed);
+        }
+    }
+
+    /// Re-materialize the packed payload a coded Ranged payload was
+    /// transcoded from (tag bit cleared, body decoded symbol-for-symbol
+    /// — byte-identical to what the encoder staged before coding).
+    fn ranged_to_packed(
+        &self,
+        bytes: &[u8],
+        range: &Range<usize>,
+        models: &mut ModelSet,
+        packed: &mut Vec<u8>,
+    ) {
+        debug_assert!(self.is_ranged_payload(bytes));
+        let slots = self.slots(range);
+        let hdr = self.header_bytes(slots.len());
+        let s = self.s();
+        let gpsg = self.cfg.layout.groups_per_super();
+        packed.clear();
+        packed.extend_from_slice(&bytes[..hdr]);
+        packed[0] &= !RANGED_BIT;
+        models.reset(&self.ranged_alphabets);
+        let mut dec = RangeDecoder::new(&bytes[hdr..]);
+        for (si, k) in slots.enumerate() {
+            let w = self.wire_width(bytes, si, k);
+            let wi = self.width_index(w);
+            if self.cfg.hierarchical {
+                let lo = models.slot(self.slot_scale_lo()).decode(&mut dec) as u8;
+                packed.push(lo);
+                let hi = models.slot(self.slot_scale_hi()).decode(&mut dec) as u8;
+                packed.push(hi);
+                for _ in 0..gpsg {
+                    let b = models.slot(self.slot_scale_group()).decode(&mut dec) as u8;
+                    packed.push(b);
+                }
+            } else {
+                for _ in 0..gpsg {
+                    let lo = models.slot(self.slot_scale_lo()).decode(&mut dec) as u8;
+                    packed.push(lo);
+                    let hi = models.slot(self.slot_scale_hi()).decode(&mut dec) as u8;
+                    packed.push(hi);
+                }
+            }
+            let nbytes = packed_len(s, w);
+            match w {
+                1 | 2 | 4 => {
+                    let per = (8 / w) as usize;
+                    for _ in 0..nbytes {
+                        let mut b = 0u32;
+                        for j in 0..per {
+                            let c = models.slot(wi).decode(&mut dec) as u32;
+                            b |= c << (j as u32 * w);
+                        }
+                        packed.push(b as u8);
+                    }
+                }
+                16 => {
+                    let hi = self.slot_hi_byte();
+                    for _ in 0..s {
+                        let lo = models.slot(wi).decode(&mut dec) as u8;
+                        let hb = models.slot(hi).decode(&mut dec) as u8;
+                        packed.push(lo);
+                        packed.push(hb);
+                    }
+                }
+                _ => {
+                    for _ in 0..nbytes {
+                        let b = models.slot(wi).decode(&mut dec) as u8;
+                        packed.push(b);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- packed-format walks (the trait impl dispatches here) ----
+
+    /// Packed-format chunk compression: header + per-super-group scale
+    /// and code bytes, straight into `out`.
+    fn compress_packed(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
+        debug_assert_eq!(data.len(), range.len());
+        let st = self.state();
+        let rctx = self.rctx(ctx);
+        let sseed = self.scale_seed(ctx);
+        let bi = self.budget_index(ctx.level);
+        out.reserve(self.chunk_wire_bytes_at(&range, ctx.level));
+        self.encode_header(bi, self.slots(&range), out);
+        for k in self.slots(&range) {
+            let w = st.width_sets[bi][k] as u32;
+            let pi = rctx.pi_slot(k as u32);
+            let base = k * self.s() - range.start;
+            let x = &data[base..base + self.s()];
+            self.compress_sg_dispatch(x, w, k, &rctx, sseed, pi, out);
+        }
+    }
+
+    /// Ranged-format chunk compression: stage the packed payload in the
+    /// pooled slab, then transcode (see [`Dynamiq::emit_ranged`]).
+    fn compress_ranged(
+        &self,
+        data: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        let slots = self.slots(&range);
+        if slots.is_empty() {
+            return;
+        }
+        let bi = self.budget_index(ctx.level);
+        let mut packed = std::mem::take(&mut scratch.coder.packed_out);
+        packed.clear();
+        self.compress_packed(data, range, ctx, &mut packed);
+        self.emit_ranged(&packed, slots, bi, &mut scratch.coder.models, out);
+        scratch.coder.packed_out = packed;
+    }
+
+    /// Packed-format chunk decode (overwrite sink).
+    fn decompress_packed(&self, bytes: &[u8], range: Range<usize>, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        let s = self.s();
+        let slots = self.slots(&range);
+        let mut off = self.header_bytes(slots.len());
+        for (si, k) in slots.enumerate() {
+            let w = self.wire_width(bytes, si, k);
+            let lut = self.lut(w);
+            let base = k * s - range.start;
+            off += if self.lanes_apply(w) {
+                self.decode_sg_lanes::<false>(&bytes[off..], w, lut, &mut out[base..base + s])
+            } else {
+                self.decode_sg(&bytes[off..], w, lut, |i, v| out[base + i] = v)
+            };
+        }
+        debug_assert_eq!(off, bytes.len());
+    }
+
+    /// Packed-format chunk decode (accumulate sink).
+    fn decompress_accumulate_packed(&self, bytes: &[u8], acc: &mut [f32], range: Range<usize>) {
+        let s = self.s();
+        let slots = self.slots(&range);
+        let mut off = self.header_bytes(slots.len());
+        for (si, k) in slots.enumerate() {
+            let w = self.wire_width(bytes, si, k);
+            let lut = self.lut(w);
+            let base = k * s - range.start;
+            off += if self.lanes_apply(w) {
+                self.decode_sg_lanes::<true>(&bytes[off..], w, lut, &mut acc[base..base + s])
+            } else {
+                self.decode_sg(&bytes[off..], w, lut, |i, v| acc[base + i] += v)
+            };
+        }
+        debug_assert_eq!(off, bytes.len());
+    }
+
+    /// The packed-format fused decompress-accumulate-recompress walk
+    /// (§4, kernel 3): per super-group, decode `bytes` into the scratch
+    /// slab over the local contribution, re-encode at the outgoing
+    /// hop's width — one pass, no chunk-sized intermediate. `bytes`
+    /// must be in packed layout (Ranged callers transcode first).
+    fn dar_packed(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        debug_assert_eq!(local.len(), range.len());
+        let st = self.state();
+        let rctx = self.rctx(ctx);
+        let sseed = self.scale_seed(ctx);
+        let s = self.s();
+        let bi = self.budget_index(ctx.level);
+        out.reserve(self.chunk_wire_bytes_at(&range, ctx.level));
+        self.encode_header(bi, self.slots(&range), out);
+        scratch.slab.resize(s, 0.0);
+        let slots = self.slots(&range);
+        let mut off = self.header_bytes(slots.len());
+        for (si, k) in slots.enumerate() {
+            let w_in = self.wire_width(bytes, si, k);
+            let lut = self.lut(w_in);
+            let base = k * s - range.start;
+            // decode + accumulate into the slab (registers/VMEM analogue)
+            scratch.slab.copy_from_slice(&local[base..base + s]);
+            off += if self.lanes_apply(w_in) {
+                self.decode_sg_lanes::<true>(&bytes[off..], w_in, lut, &mut scratch.slab[..s])
+            } else {
+                self.decode_sg(&bytes[off..], w_in, lut, |i, v| scratch.slab[i] += v)
+            };
+            let pi = rctx.pi_slot(k as u32);
+            let w_out = st.width_sets[bi][k] as u32;
+            self.compress_sg_dispatch(&scratch.slab, w_out, k, &rctx, sseed, pi, out);
+        }
+        debug_assert_eq!(off, bytes.len());
     }
 }
 
@@ -880,38 +1289,23 @@ impl GradCodec for Dynamiq {
     }
 
     fn compress_into(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
-        debug_assert_eq!(data.len(), range.len());
-        let st = self.state();
-        let rctx = self.rctx(ctx);
-        let sseed = self.scale_seed(ctx);
-        let bi = self.budget_index(ctx.level);
-        out.reserve(self.chunk_wire_bytes_at(&range, ctx.level));
-        self.encode_header(bi, self.slots(&range), out);
-        for k in self.slots(&range) {
-            let w = st.width_sets[bi][k] as u32;
-            let pi = rctx.pi_slot(k as u32);
-            let base = k * self.s() - range.start;
-            let x = &data[base..base + self.s()];
-            self.compress_sg_dispatch(x, w, k, &rctx, sseed, pi, out);
+        if self.cfg.wire == WireFormat::Ranged {
+            // one-shot convenience path: a throwaway scratch (the hop
+            // paths call `compress_pooled` and stay allocation-free)
+            let mut scratch = WorkerScratch::default();
+            self.compress_ranged(data, range, ctx, &mut scratch, out);
+        } else {
+            self.compress_packed(data, range, ctx, out);
         }
     }
 
-    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, _ctx: &HopCtx, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), range.len());
-        let s = self.s();
-        let slots = self.slots(&range);
-        let mut off = self.header_bytes(slots.len());
-        for (si, k) in slots.enumerate() {
-            let w = self.wire_width(bytes, si, k);
-            let lut = self.lut(w);
-            let base = k * s - range.start;
-            off += if self.lanes_apply(w) {
-                self.decode_sg_lanes::<false>(&bytes[off..], w, lut, &mut out[base..base + s])
-            } else {
-                self.decode_sg(&bytes[off..], w, lut, |i, v| out[base + i] = v)
-            };
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx, out: &mut [f32]) {
+        if self.is_ranged_payload(bytes) {
+            let mut scratch = WorkerScratch::default();
+            self.decompress_pooled(bytes, range, ctx, &mut scratch, out);
+        } else {
+            self.decompress_packed(bytes, range, out);
         }
-        debug_assert_eq!(off, bytes.len());
     }
 
     fn decompress_accumulate(
@@ -919,22 +1313,65 @@ impl GradCodec for Dynamiq {
         bytes: &[u8],
         acc: &mut [f32],
         range: Range<usize>,
-        _ctx: &HopCtx,
+        ctx: &HopCtx,
     ) {
-        let s = self.s();
-        let slots = self.slots(&range);
-        let mut off = self.header_bytes(slots.len());
-        for (si, k) in slots.enumerate() {
-            let w = self.wire_width(bytes, si, k);
-            let lut = self.lut(w);
-            let base = k * s - range.start;
-            off += if self.lanes_apply(w) {
-                self.decode_sg_lanes::<true>(&bytes[off..], w, lut, &mut acc[base..base + s])
-            } else {
-                self.decode_sg(&bytes[off..], w, lut, |i, v| acc[base + i] += v)
-            };
+        if self.is_ranged_payload(bytes) {
+            let mut scratch = WorkerScratch::default();
+            self.decompress_accumulate_pooled(bytes, acc, range, ctx, &mut scratch);
+        } else {
+            self.decompress_accumulate_packed(bytes, acc, range);
         }
-        debug_assert_eq!(off, bytes.len());
+    }
+
+    fn compress_pooled(
+        &self,
+        data: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        if self.cfg.wire == WireFormat::Ranged {
+            self.compress_ranged(data, range, ctx, scratch, out);
+        } else {
+            self.compress_packed(data, range, ctx, out);
+        }
+    }
+
+    fn decompress_pooled(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut [f32],
+    ) {
+        if self.is_ranged_payload(bytes) {
+            let mut pin = std::mem::take(&mut scratch.coder.packed_in);
+            self.ranged_to_packed(bytes, &range, &mut scratch.coder.models, &mut pin);
+            self.decompress_packed(&pin, range, out);
+            scratch.coder.packed_in = pin;
+        } else {
+            self.decompress_packed(bytes, range, out);
+        }
+    }
+
+    fn decompress_accumulate_pooled(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+    ) {
+        if self.is_ranged_payload(bytes) {
+            let mut pin = std::mem::take(&mut scratch.coder.packed_in);
+            self.ranged_to_packed(bytes, &range, &mut scratch.coder.models, &mut pin);
+            self.decompress_accumulate_packed(&pin, acc, range);
+            scratch.coder.packed_in = pin;
+        } else {
+            self.decompress_accumulate_packed(bytes, acc, range);
+        }
     }
 
     /// The fused kernel (§4, kernel 3): per super-group, decode into the
@@ -954,33 +1391,30 @@ impl GradCodec for Dynamiq {
         scratch: &mut WorkerScratch,
         out: &mut Vec<u8>,
     ) {
-        debug_assert_eq!(local.len(), range.len());
-        let st = self.state();
-        let rctx = self.rctx(ctx);
-        let sseed = self.scale_seed(ctx);
-        let s = self.s();
-        let bi = self.budget_index(ctx.level);
-        out.reserve(self.chunk_wire_bytes_at(&range, ctx.level));
-        self.encode_header(bi, self.slots(&range), out);
-        scratch.slab.resize(s, 0.0);
-        let slots = self.slots(&range);
-        let mut off = self.header_bytes(slots.len());
-        for (si, k) in slots.enumerate() {
-            let w_in = self.wire_width(bytes, si, k);
-            let lut = self.lut(w_in);
-            let base = k * s - range.start;
-            // decode + accumulate into the slab (registers/VMEM analogue)
-            scratch.slab.copy_from_slice(&local[base..base + s]);
-            off += if self.lanes_apply(w_in) {
-                self.decode_sg_lanes::<true>(&bytes[off..], w_in, lut, &mut scratch.slab[..s])
-            } else {
-                self.decode_sg(&bytes[off..], w_in, lut, |i, v| scratch.slab[i] += v)
-            };
-            let pi = rctx.pi_slot(k as u32);
-            let w_out = st.width_sets[bi][k] as u32;
-            self.compress_sg_dispatch(&scratch.slab, w_out, k, &rctx, sseed, pi, out);
+        if self.cfg.wire != WireFormat::Ranged {
+            return self.dar_packed(bytes, local, range, ctx, scratch, out);
         }
-        debug_assert_eq!(off, bytes.len());
+        let slots = self.slots(&range);
+        if slots.is_empty() {
+            return;
+        }
+        // Ranged: normalize the incoming payload to packed layout, run
+        // the packed fused walk into the staging slab, transcode the
+        // result. The fused kernel itself never sees coded bytes.
+        let mut pin = std::mem::take(&mut scratch.coder.packed_in);
+        let mut pout = std::mem::take(&mut scratch.coder.packed_out);
+        let packed_in: &[u8] = if self.is_ranged_payload(bytes) {
+            self.ranged_to_packed(bytes, &range, &mut scratch.coder.models, &mut pin);
+            &pin
+        } else {
+            bytes
+        };
+        pout.clear();
+        self.dar_packed(packed_in, local, range.clone(), ctx, scratch, &mut pout);
+        let bi = self.budget_index(ctx.level);
+        self.emit_ranged(&pout, slots, bi, &mut scratch.coder.models, out);
+        scratch.coder.packed_in = pin;
+        scratch.coder.packed_out = pout;
     }
 
     fn end_round(&mut self, agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {
@@ -1484,5 +1918,113 @@ mod tests {
         assert!((cfg.payload_budget_bits() - (5.0 - 0.5625)).abs() < 1e-12);
         let plain = DynamiqConfig { hierarchical: false, ..DynamiqConfig::default() };
         assert!((plain.scale_overhead_bits() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranged_wire_decodes_bit_identical_to_packed() {
+        let d = 16384;
+        let base = DynamiqConfig::default();
+        let ranged = DynamiqConfig { wire: WireFormat::Ranged, ..base.clone() };
+        let (cp, cp_b, pp, pp_b) = setup_pair(&base, d, 7);
+        let (cr, cr_b, pr, pr_b) = setup_pair(&ranged, d, 7);
+        assert_eq!(pp, pr, "preprocessing must not depend on the wire format");
+        let r = 0..pp.len();
+        let ctx = hop(0, 2, 7);
+        let wp = cp.compress(&pp[r.clone()], r.clone(), &ctx);
+        let wr = cr.compress(&pr[r.clone()], r.clone(), &ctx);
+        assert!(
+            wr.len() <= wp.len() + 1,
+            "ranged can cost at most the tag byte: {} vs {}",
+            wr.len(),
+            wp.len()
+        );
+        assert!(
+            wr[0] & RANGED_BIT != 0 && wr.len() < wp.len(),
+            "gradient-like data must entropy-code below the packed size: {} vs {}",
+            wr.len(),
+            wp.len()
+        );
+        assert!(wr.len() <= cr.chunk_wire_bytes_at(&r, ctx.level), "upper bound must hold");
+        let dp = cp.decompress(&wp, r.clone(), &ctx);
+        let dr = cr.decompress(&wr, r.clone(), &ctx);
+        for (x, y) in dp.iter().zip(&dr) {
+            assert_eq!(x.to_bits(), y.to_bits(), "wire format must not change decoded values");
+        }
+        // fused DAR through the transcoder agrees value-exactly with the
+        // packed fused kernel
+        let next = HopCtx { summed: 2, ..hop(1, 2, 7) };
+        let fp = cp_b.decompress_accumulate_recompress(&wp, &pp_b[r.clone()], r.clone(), &next);
+        let fr = cr_b.decompress_accumulate_recompress(&wr, &pr_b[r.clone()], r.clone(), &next);
+        let vp = cp_b.decompress(&fp, r.clone(), &next);
+        let vr = cr_b.decompress(&fr, r.clone(), &next);
+        for (x, y) in vp.iter().zip(&vr) {
+            assert_eq!(x.to_bits(), y.to_bits(), "fused DAR must be wire-format-invariant");
+        }
+    }
+
+    #[test]
+    fn ranged_pooled_scratch_is_reused_and_deterministic() {
+        let d = 8192;
+        let cfg = DynamiqConfig { wire: WireFormat::Ranged, ..DynamiqConfig::default() };
+        let (c, _, p, _) = setup_pair(&cfg, d, 11);
+        let r = 0..p.len();
+        let ctx = hop(0, 2, 11);
+        let mut scratch = WorkerScratch::default();
+        let mut w1 = Vec::new();
+        c.compress_pooled(&p[r.clone()], r.clone(), &ctx, &mut scratch, &mut w1);
+        assert!(scratch.coder.packed_out.capacity() > 0, "staging slab must be pooled");
+        let mut w2 = Vec::new();
+        c.compress_pooled(&p[r.clone()], r.clone(), &ctx, &mut scratch, &mut w2);
+        assert_eq!(w1, w2, "warm scratch must not leak model state across payloads");
+        assert_eq!(
+            w1,
+            c.compress(&p[r.clone()], r.clone(), &ctx),
+            "pooled and one-shot compression must agree byte-exactly"
+        );
+        let mut pooled = vec![0.0f32; r.len()];
+        c.decompress_pooled(&w1, r.clone(), &ctx, &mut scratch, &mut pooled);
+        assert_eq!(pooled, c.decompress(&w1, r.clone(), &ctx));
+        let mut acc = vec![1.0f32; r.len()];
+        let mut acc_ref = vec![1.0f32; r.len()];
+        c.decompress_accumulate_pooled(&w1, &mut acc, r.clone(), &ctx, &mut scratch);
+        c.decompress_accumulate(&w1, &mut acc_ref, r.clone(), &ctx);
+        assert_eq!(acc, acc_ref);
+    }
+
+    #[test]
+    fn packed_and_ranged_interoperate_under_level_budgets() {
+        // with level budgets active both formats share the header
+        // layout, so a ring can mix them: each side decodes the other's
+        // payloads off the tag bit alone
+        let d = 8192;
+        let base = DynamiqConfig { level_budgets: vec![4.0, 6.0], ..DynamiqConfig::default() };
+        let ranged = DynamiqConfig { wire: WireFormat::Ranged, ..base.clone() };
+        let (cp, _, pp, _) = setup_pair(&base, d, 13);
+        let (cr, _, pr, _) = setup_pair(&ranged, d, 13);
+        assert_eq!(pp, pr);
+        let r = 0..pp.len();
+        for level in [0u8, 1, HopCtx::BROADCAST_LEVEL] {
+            let ctx = hop(0, 2, 13).at_level(level, 4);
+            let wp = cp.compress(&pp[r.clone()], r.clone(), &ctx);
+            let wr = cr.compress(&pr[r.clone()], r.clone(), &ctx);
+            let own = cp.decompress(&wp, r.clone(), &ctx);
+            let cross_a = cr.decompress(&wp, r.clone(), &ctx); // ranged codec, packed payload
+            let cross_b = cp.decompress(&wr, r.clone(), &ctx); // packed codec, ranged payload
+            for ((x, y), z) in cross_a.iter().zip(&cross_b).zip(&own) {
+                assert_eq!(x.to_bits(), z.to_bits(), "level {level}: ranged→packed interop");
+                assert_eq!(y.to_bits(), z.to_bits(), "level {level}: packed→ranged interop");
+            }
+        }
+    }
+
+    #[test]
+    fn ranged_roundtrip_handles_ragged_tail() {
+        for d in [1usize, 255, 257, 4095] {
+            let cfg = DynamiqConfig { wire: WireFormat::Ranged, ..DynamiqConfig::default() };
+            let (grad, out, _) = roundtrip(cfg, d, 3);
+            assert_eq!(out.len(), grad.len());
+            let err = vnmse(&grad, &out);
+            assert!(err < 0.05, "d={d} vNMSE={err}");
+        }
     }
 }

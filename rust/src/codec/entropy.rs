@@ -1,0 +1,507 @@
+//! Entropy-coding layer for the wire: a carry-less u32 range coder with
+//! adaptive per-payload frequency models, plus the [`WireFormat`] axis
+//! that selects between fixed-width packed payloads and range-coded
+//! ones.
+//!
+//! After multi-hop aggregation the partial-sum symbol distribution is
+//! strongly non-uniform (near-Gaussian), so the fixed-width packed
+//! codes leave real bits on the wire. `WireFormat::Ranged` re-encodes
+//! the *same* quantized symbols losslessly through this coder — the
+//! decoded values are byte-identical to `Packed` for every topology,
+//! thread count, and bucket partition, only the wire bytes shrink.
+//!
+//! The coder is the classic Subbotin carry-less range coder (the same
+//! family as the Opus/CELT entropy coder): u32 state, [`TOP`] = 2^24,
+//! [`BOT`] = 2^16. Instead of propagating carries into already-emitted
+//! bytes, renormalization truncates the range whenever the top byte
+//! cannot settle, so encoder and decoder stay in exact byte lockstep.
+//! Frequency models are [`AdaptiveModel`]s — Fenwick-tree cumulative
+//! counts over alphabets of at most 256 symbols, reset per payload so
+//! every payload is decodable in isolation. Incompressible fields
+//! (quantizer scales) go through [`RangeEncoder::encode_byte`], the
+//! uniform byte distribution, at exactly 8 bits per byte.
+//!
+//! Every constant and update rule here is mirrored line-for-line by
+//! `python/validate_entropy.py`, which fuzzes round-trips and pins the
+//! golden vectors the unit tests below embed — a divergent port fails
+//! on both sides.
+
+/// Renormalization threshold: the top byte is emitted once `low` and
+/// `low + range` agree on it (differ by less than `TOP`).
+const TOP: u32 = 1 << 24;
+/// Minimum range after renormalization; model totals must stay at or
+/// below this so `range / total >= 1`.
+const BOT: u32 = 1 << 16;
+/// Count bump per coded symbol in [`AdaptiveModel`].
+const INC: u32 = 32;
+/// Rescale threshold for [`AdaptiveModel`] totals (halve-and-floor at
+/// 1); stays below [`BOT`] so coder precision never runs out.
+const MAX_TOTAL: u32 = 1 << 15;
+
+/// Tag bit set in a payload's leading header byte when the body is
+/// range-coded; clear means the body is the fixed-width packed
+/// fallback (bit-for-bit what `WireFormat::Packed` would have sent).
+pub const RANGED_BIT: u8 = 0x80;
+
+/// The wire representation of a codec's quantized symbols.
+///
+/// `Packed` is the legacy fixed-width bitstream; `Ranged` re-encodes
+/// the same symbols through the range coder with a per-payload packed
+/// fallback (tagged in the header byte) whenever entropy coding does
+/// not help. Both formats decode to bit-identical values; a
+/// `Ranged`-configured decoder accepts either body on the same ring.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum WireFormat {
+    /// Fixed-width packed codes (the legacy format; byte-identical to
+    /// payloads produced before the wire-format axis existed).
+    #[default]
+    Packed,
+    /// Range-coded symbols with adaptive per-payload models and a
+    /// packed fallback tagged per payload.
+    Ranged,
+}
+
+impl WireFormat {
+    /// Canonical lower-case name used in codec specs and sweep rows.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            WireFormat::Packed => "packed",
+            WireFormat::Ranged => "ranged",
+        }
+    }
+}
+
+impl std::fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Carry-less u32 range encoder appending to a caller-owned buffer.
+pub struct RangeEncoder<'a> {
+    low: u32,
+    range: u32,
+    out: &'a mut Vec<u8>,
+}
+
+impl<'a> RangeEncoder<'a> {
+    /// Start an encoder appending coded bytes to `out`.
+    pub fn new(out: &'a mut Vec<u8>) -> Self {
+        RangeEncoder { low: 0, range: u32::MAX, out }
+    }
+
+    /// Encode one symbol occupying `[cum, cum + freq)` of a model with
+    /// total frequency `tot` (`tot <= BOT`). The top interval absorbs
+    /// the division remainder, mirroring the decoder's clamp.
+    pub fn encode(&mut self, cum: u32, freq: u32, tot: u32) {
+        debug_assert!(0 < freq && cum + freq <= tot && tot <= BOT);
+        let r = self.range / tot;
+        self.low = self.low.wrapping_add(r * cum);
+        if cum + freq < tot {
+            self.range = r * freq;
+        } else {
+            self.range -= r * cum;
+        }
+        self.normalize();
+    }
+
+    /// Encode a byte at the uniform distribution: exactly 8 bits.
+    pub fn encode_byte(&mut self, b: u8) {
+        self.encode(b as u32, 1, 256);
+    }
+
+    /// Bytes emitted into the output buffer so far (excluding the 4
+    /// [`RangeEncoder::finish`] flush bytes) — the early-abort signal
+    /// for callers racing the coded stream against a packed fallback.
+    pub fn written(&self) -> usize {
+        self.out.len()
+    }
+
+    fn normalize(&mut self) {
+        loop {
+            if (self.low ^ self.low.wrapping_add(self.range)) >= TOP {
+                if self.range >= BOT {
+                    break;
+                }
+                // Carry-less rule: truncate the range up to the next
+                // 2^16 boundary instead of letting a carry escape.
+                self.range = self.low.wrapping_neg() & (BOT - 1);
+            }
+            self.out.push((self.low >> 24) as u8);
+            self.low <<= 8;
+            self.range <<= 8;
+        }
+    }
+
+    /// Flush the tail bytes; the stream is complete after this.
+    pub fn finish(mut self) {
+        for _ in 0..4 {
+            self.out.push((self.low >> 24) as u8);
+            self.low <<= 8;
+        }
+    }
+}
+
+/// Mirror of [`RangeEncoder`]; reads past the end of the buffer pad
+/// with zeros (the encoder's flush may fold trailing content bytes
+/// into its tail).
+pub struct RangeDecoder<'a> {
+    low: u32,
+    range: u32,
+    code: u32,
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    /// Prime a decoder over a coded byte stream.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        let mut d = RangeDecoder { low: 0, range: u32::MAX, code: 0, bytes, pos: 0 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | u32::from(d.next_byte());
+        }
+        d
+    }
+
+    fn next_byte(&mut self) -> u8 {
+        let b = self.bytes.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    /// Return the cumulative-frequency slot of the next symbol under a
+    /// model with total `tot`; follow with [`Self::decode_update`] for
+    /// the symbol found at that slot.
+    pub fn decode_freq(&mut self, tot: u32) -> u32 {
+        let r = self.range / tot;
+        (self.code.wrapping_sub(self.low) / r).min(tot - 1)
+    }
+
+    /// Consume the symbol identified from [`Self::decode_freq`]'s slot
+    /// (same `(cum, freq, tot)` the encoder used).
+    pub fn decode_update(&mut self, cum: u32, freq: u32, tot: u32) {
+        let r = self.range / tot;
+        self.low = self.low.wrapping_add(r * cum);
+        if cum + freq < tot {
+            self.range = r * freq;
+        } else {
+            self.range -= r * cum;
+        }
+        self.normalize();
+    }
+
+    /// Decode a byte coded with [`RangeEncoder::encode_byte`].
+    pub fn decode_byte(&mut self) -> u8 {
+        let v = self.decode_freq(256);
+        self.decode_update(v, 1, 256);
+        v as u8
+    }
+
+    fn normalize(&mut self) {
+        loop {
+            if (self.low ^ self.low.wrapping_add(self.range)) >= TOP {
+                if self.range >= BOT {
+                    break;
+                }
+                self.range = self.low.wrapping_neg() & (BOT - 1);
+            }
+            self.code = (self.code << 8) | u32::from(self.next_byte());
+            self.low <<= 8;
+            self.range <<= 8;
+        }
+    }
+}
+
+/// Adaptive frequency model over an alphabet of 2..=256 symbols:
+/// Fenwick-tree cumulative counts, all counts starting at 1, bumped by
+/// [`INC`] per coded symbol and halved (floored at 1) when the total
+/// reaches [`MAX_TOTAL`].
+pub struct AdaptiveModel {
+    syms: usize,
+    top_bit: usize,
+    cnt: Vec<u16>,
+    tree: Vec<u32>,
+    total: u32,
+}
+
+impl AdaptiveModel {
+    /// Fresh model over `syms` symbols (all equally likely).
+    pub fn new(syms: usize) -> Self {
+        let mut m =
+            AdaptiveModel { syms: 0, top_bit: 1, cnt: Vec::new(), tree: Vec::new(), total: 0 };
+        m.reset(syms);
+        m
+    }
+
+    /// Re-initialize for a new payload (and possibly a new alphabet),
+    /// reusing the allocations.
+    pub fn reset(&mut self, syms: usize) {
+        debug_assert!((2..=256).contains(&syms));
+        self.syms = syms;
+        self.top_bit = 1;
+        while self.top_bit * 2 <= syms {
+            self.top_bit *= 2;
+        }
+        self.cnt.clear();
+        self.cnt.resize(syms, 1);
+        self.tree.clear();
+        self.tree.resize(syms + 1, 0);
+        for i in 0..syms {
+            self.tree_add(i, 1);
+        }
+        self.total = syms as u32;
+    }
+
+    fn tree_add(&mut self, i: usize, delta: u32) {
+        let mut i = i + 1;
+        while i <= self.syms {
+            self.tree[i] += delta;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    fn prefix(&self, i: usize) -> u32 {
+        let mut i = i;
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Largest symbol whose prefix sum is `<= v`; returns `(sym, cum)`.
+    fn find(&self, v: u32) -> (usize, u32) {
+        let mut idx = 0;
+        let mut rem = v;
+        let mut bit = self.top_bit;
+        while bit != 0 {
+            let next = idx + bit;
+            if next <= self.syms && self.tree[next] <= rem {
+                rem -= self.tree[next];
+                idx = next;
+            }
+            bit >>= 1;
+        }
+        (idx, v - rem)
+    }
+
+    fn bump(&mut self, sym: usize) {
+        self.cnt[sym] += INC as u16;
+        self.tree_add(sym, INC);
+        self.total += INC;
+        if self.total >= MAX_TOTAL {
+            let mut total = 0u32;
+            for c in &mut self.cnt {
+                *c = (*c + 1) >> 1;
+                total += u32::from(*c);
+            }
+            self.total = total;
+            self.tree.iter_mut().for_each(|t| *t = 0);
+            for i in 0..self.syms {
+                self.tree_add(i, u32::from(self.cnt[i]));
+            }
+        }
+    }
+
+    /// Encode `sym` and adapt.
+    pub fn encode(&mut self, enc: &mut RangeEncoder<'_>, sym: usize) {
+        enc.encode(self.prefix(sym), u32::from(self.cnt[sym]), self.total);
+        self.bump(sym);
+    }
+
+    /// Decode the next symbol and adapt (mirror of [`Self::encode`]).
+    pub fn decode(&mut self, dec: &mut RangeDecoder<'_>) -> usize {
+        let v = dec.decode_freq(self.total);
+        let (sym, cum) = self.find(v);
+        dec.decode_update(cum, u32::from(self.cnt[sym]), self.total);
+        self.bump(sym);
+        sym
+    }
+}
+
+/// A reusable bank of [`AdaptiveModel`]s, reset per payload. Codecs
+/// index slots by symbol class (one per quantizer width, plus split
+/// low/high byte models for 16-bit codes).
+#[derive(Default)]
+pub struct ModelSet {
+    models: Vec<AdaptiveModel>,
+}
+
+impl ModelSet {
+    /// Reset slot `i`-of-`alphabets.len()` to a fresh model over
+    /// `alphabets[i]` symbols, growing the bank as needed. Call once at
+    /// the start of every payload.
+    pub fn reset(&mut self, alphabets: &[usize]) {
+        while self.models.len() < alphabets.len() {
+            self.models.push(AdaptiveModel::new(2));
+        }
+        for (m, &syms) in self.models.iter_mut().zip(alphabets) {
+            m.reset(syms);
+        }
+    }
+
+    /// The model in slot `i` (must be within the last `reset`).
+    pub fn slot(&mut self, i: usize) -> &mut AdaptiveModel {
+        &mut self.models[i]
+    }
+}
+
+/// Per-worker coder state slabs pooled inside `WorkerScratch`: the
+/// model bank plus staging buffers for transcoding between the packed
+/// and range-coded bodies without steady-state allocation.
+#[derive(Default)]
+pub struct CoderScratch {
+    /// Adaptive model bank, reset per payload.
+    pub models: ModelSet,
+    /// Staging slab for a payload re-materialized in packed form
+    /// (decode-side transcoding).
+    pub packed_in: Vec<u8>,
+    /// Staging slab for a freshly produced packed payload awaiting
+    /// entropy encoding (encode-side transcoding).
+    pub packed_out: Vec<u8>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The LCG shared with `python/validate_entropy.py`.
+    fn lcg(x: u64) -> u64 {
+        x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407)
+    }
+
+    /// Position-weighted byte checksum pinned on both sides.
+    fn checksum(data: &[u8]) -> u32 {
+        let mut s = 0u32;
+        for (i, &b) in data.iter().enumerate() {
+            s = s.wrapping_add((i as u32 + 1).wrapping_mul(u32::from(b)));
+        }
+        s
+    }
+
+    /// Skewed stream: min of `draws` uniforms over `syms` symbols.
+    fn golden_stream(syms: u64, count: usize, seed: u64, draws: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(count);
+        let mut x = seed;
+        for _ in 0..count {
+            let mut best = syms;
+            for _ in 0..draws {
+                x = lcg(x);
+                best = best.min((x >> 33) % syms);
+            }
+            out.push(best as usize);
+        }
+        out
+    }
+
+    #[test]
+    fn golden_short_pinned_bytes() {
+        // Pinned by python/validate_entropy.py (golden-short).
+        let stream = golden_stream(8, 32, 0xD14A, 2);
+        let mut out = Vec::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        let mut m = AdaptiveModel::new(8);
+        for &s in &stream {
+            m.encode(&mut enc, s);
+        }
+        enc.finish();
+        assert_eq!(
+            out,
+            vec![192, 99, 177, 27, 41, 7, 71, 246, 79, 226, 104, 0, 48, 27, 84, 63, 0, 0]
+        );
+        let mut dec = RangeDecoder::new(&out);
+        let mut m = AdaptiveModel::new(8);
+        let got: Vec<usize> = stream.iter().map(|_| m.decode(&mut dec)).collect();
+        assert_eq!(got, stream);
+    }
+
+    #[test]
+    fn golden_raw_bytes_cost_eight_bits() {
+        let mut out = Vec::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        for b in 0..=255u8 {
+            enc.encode_byte(b);
+        }
+        enc.finish();
+        assert!((256..=260).contains(&out.len()), "len {}", out.len());
+        assert_eq!(checksum(&out), 66046);
+        let mut dec = RangeDecoder::new(&out);
+        for b in 0..=255u8 {
+            assert_eq!(dec.decode_byte(), b);
+        }
+    }
+
+    #[test]
+    fn golden_long_pinned_and_compresses() {
+        // Skewed 256-symbol stream (~6.7 bits of entropy): the adaptive
+        // model must beat the 8-bit fixed width it replaces even paying
+        // the cold-start adaptation cost. Pinned by the Python oracle.
+        let stream = golden_stream(256, 4096, 0xBEEF, 4);
+        let mut out = Vec::new();
+        let mut enc = RangeEncoder::new(&mut out);
+        let mut m = AdaptiveModel::new(256);
+        for &s in &stream {
+            m.encode(&mut enc, s);
+        }
+        enc.finish();
+        assert_eq!(out.len(), 3767);
+        assert_eq!(checksum(&out), 914745280);
+        assert!(out.len() < 4096);
+    }
+
+    #[test]
+    fn fuzzed_interleaved_round_trips() {
+        let mut x = 0x5EEDu64;
+        for _ in 0..60 {
+            x = lcg(x);
+            let syms = 2 + ((x >> 40) % 255) as usize;
+            x = lcg(x);
+            let count = 1 + ((x >> 40) % 700) as usize;
+            let mut stream = Vec::new();
+            let mut raws = Vec::new();
+            for _ in 0..count {
+                x = lcg(x);
+                stream.push(((x >> 33) % syms as u64) as usize);
+                x = lcg(x);
+                raws.push(((x >> 33) % 256) as u8);
+            }
+            let mut out = Vec::new();
+            let mut enc = RangeEncoder::new(&mut out);
+            let mut m = AdaptiveModel::new(syms);
+            for (&s, &b) in stream.iter().zip(&raws) {
+                m.encode(&mut enc, s);
+                enc.encode_byte(b);
+            }
+            enc.finish();
+            let mut dec = RangeDecoder::new(&out);
+            let mut m = AdaptiveModel::new(syms);
+            for (&s, &b) in stream.iter().zip(&raws) {
+                assert_eq!(m.decode(&mut dec), s);
+                assert_eq!(dec.decode_byte(), b);
+            }
+        }
+    }
+
+    #[test]
+    fn model_set_resets_between_payloads() {
+        // Same symbols, two payloads through one ModelSet: identical
+        // bytes — the reset makes payloads decodable in isolation.
+        let stream = golden_stream(16, 128, 0xABCD, 2);
+        let mut set = ModelSet::default();
+        let encode_once = |set: &mut ModelSet| {
+            set.reset(&[16, 256]);
+            let mut out = Vec::new();
+            let mut enc = RangeEncoder::new(&mut out);
+            for &s in &stream {
+                set.slot(0).encode(&mut enc, s);
+                set.slot(1).encode(&mut enc, s * 16);
+            }
+            enc.finish();
+            out
+        };
+        let a = encode_once(&mut set);
+        let b = encode_once(&mut set);
+        assert_eq!(a, b);
+    }
+}

@@ -49,15 +49,29 @@
 //! per-hop code must use the `_into` forms with pooled buffers (see
 //! [`ScratchPool`]). Determinism is unchanged: both forms produce
 //! byte-identical payloads (asserted by `tests/into_bit_identity`).
+//!
+//! ## Wire formats
+//!
+//! DynamiQ and THC payloads carry a [`WireFormat`] axis (selected via
+//! the `wire=` spec option, see [`CodecSpec`]): `Packed` is the legacy
+//! fixed-width bitstream, `Ranged` losslessly re-encodes the same
+//! quantized symbols through the [`entropy`] range coder, tagging each
+//! payload's header byte so both body kinds interoperate on one ring.
+//! Decoded values are bit-identical either way; see
+//! `ARCHITECTURE.md`'s "Wire formats" section for the header layout.
 
 pub mod bf16;
 pub mod dynamiq;
+pub mod entropy;
 pub mod mxfp;
 pub mod omnireduce;
 pub mod scratch;
+pub mod spec;
 pub mod thc;
 
+pub use entropy::WireFormat;
 pub use scratch::{ScratchPool, WorkerScratch};
+pub use spec::{CodecSpec, CodecSpecError, Scheme};
 
 use std::ops::Range;
 
@@ -218,6 +232,51 @@ pub trait GradCodec: Send + Sync {
         self.compress_into(&scratch.slab, range, &out_ctx, out);
     }
 
+    /// [`GradCodec::compress_into`] with caller-pooled coder scratch:
+    /// codecs whose wire format needs per-payload working state (the
+    /// entropy-coded `WireFormat::Ranged` bodies stage through
+    /// `scratch.coder`) override this; everything else delegates. The
+    /// engine's hop paths call the `_pooled` forms so the hot path
+    /// stays allocation-free for every wire format.
+    fn compress_pooled(
+        &self,
+        data: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        self.compress_into(data, range, ctx, out);
+    }
+
+    /// [`GradCodec::decompress_into`] with caller-pooled coder scratch
+    /// (same contract and override rule as
+    /// [`GradCodec::compress_pooled`]).
+    fn decompress_pooled(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+        out: &mut [f32],
+    ) {
+        self.decompress_into(bytes, range, ctx, out);
+    }
+
+    /// [`GradCodec::decompress_accumulate`] with caller-pooled coder
+    /// scratch (same contract and override rule as
+    /// [`GradCodec::compress_pooled`]).
+    fn decompress_accumulate_pooled(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+    ) {
+        self.decompress_accumulate(bytes, acc, range, ctx);
+    }
+
     /// Thin `Vec`-returning wrapper over [`GradCodec::compress_into`]
     /// (tests / one-shot callers; hop paths use the `_into` form).
     fn compress(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx) -> Vec<u8> {
@@ -273,43 +332,22 @@ pub trait GradCodec: Send + Sync {
 pub const SCHEMES: &[&str] =
     &["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"];
 
-/// Construct a codec by scheme name with its paper-evaluated configuration.
-/// DynamiQ accepts `:`-separated option suffixes, composable in any order:
-/// `b=4.63` overrides the bit budget (with `lb=` in force this is the
-/// broadcast/set-0 budget — how a shaved equal-wire base is expressed,
-/// see the hier sweep's `level_budgets_for`), and `lb=4.5,6` sets the
-/// per-hierarchy-level budget vector, innermost level first — e.g.
-/// `DynamiQ:b=4.63:lb=5.24,6.74`.
+/// Construct a codec by spec string (`scheme[:b=…][:lb=…][:wire=…]`).
+///
+/// Thin wrapper over [`CodecSpec::parse`] + [`CodecSpec::build`] that
+/// panics on a malformed spec — kept for callers that predate the typed
+/// API. New code should parse a [`CodecSpec`] and surface the
+/// [`CodecSpecError`] instead.
+#[deprecated(note = "parse a `CodecSpec` and call `.build()`; this wrapper panics on bad specs")]
 pub fn make_codec(name: &str) -> Box<dyn GradCodec> {
-    if let Some(spec) = name.strip_prefix("DynamiQ:") {
-        let mut cfg = dynamiq::DynamiqConfig::default();
-        for part in spec.split(':') {
-            if let Some(b) = part.strip_prefix("b=") {
-                cfg.budget_bits = b.parse().expect("bad bit budget");
-            } else if let Some(lb) = part.strip_prefix("lb=") {
-                cfg.level_budgets =
-                    lb.split(',').map(|b| b.parse().expect("bad per-level bit budget")).collect();
-            } else {
-                panic!("unknown DynamiQ option {part} (expected b= or lb=)");
-            }
-        }
-        return Box::new(dynamiq::Dynamiq::new(cfg));
-    }
-    match name {
-        "BF16" => Box::new(bf16::Bf16Codec::new()),
-        "DynamiQ" => Box::new(dynamiq::Dynamiq::paper_default()),
-        "MXFP8" => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp8)),
-        "MXFP6" => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp6)),
-        "MXFP4" => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp4)),
-        "THC" => Box::new(thc::ThcCodec::new(0xD14A_311)),
-        "OmniReduce" => Box::new(omnireduce::OmniReduce::paper_default()),
-        other => panic!("unknown scheme {other}"),
-    }
+    CodecSpec::parse(name).unwrap_or_else(|e| panic!("{e}")).build()
 }
 
-/// Per-worker codec set.
+/// Per-worker codec set by spec string (deprecated wrapper; see
+/// [`make_codec`]).
+#[deprecated(note = "parse a `CodecSpec` and call `.build_n(n)`; this wrapper panics on bad specs")]
 pub fn make_codecs(name: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
-    (0..n).map(|_| make_codec(name)).collect()
+    CodecSpec::parse(name).unwrap_or_else(|e| panic!("{e}")).build_n(n)
 }
 
 /// Align `len` upward to `align`.

@@ -34,6 +34,10 @@ pub struct WorkerScratch {
     /// chunk-sized accumulator for the multi-parent (butterfly internal
     /// node) decompress-accumulate path
     pub acc: Vec<f32>,
+    /// entropy-coder state slabs (adaptive model bank + packed-body
+    /// staging) for `WireFormat::Ranged` payloads; empty and untouched
+    /// for packed-only codecs
+    pub coder: crate::codec::entropy::CoderScratch,
 }
 
 /// Shared pool of payload arenas + per-worker scratch + engine inbox

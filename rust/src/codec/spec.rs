@@ -1,0 +1,293 @@
+//! Typed codec specification: the parsed, validated form of the
+//! `scheme[:option…]` strings that used to be interpreted ad hoc (and
+//! panicked on bad input) inside `make_codec`.
+//!
+//! A spec is a [`Scheme`] plus options; [`CodecSpec::parse`] validates
+//! the whole grammar up front and returns actionable
+//! [`CodecSpecError`]s, so every later step — [`CodecSpec::build`],
+//! [`CodecSpec::build_n`] — is infallible. [`CodecSpec`]'s `Display`
+//! emits the canonical string (options in the fixed order `b=`, `lb=`,
+//! `wire=`, defaults omitted), and `parse(display(s)) == s` holds for
+//! every valid spec, which is what lets sweep JSON rows and bench lane
+//! names carry canonical specs round-trippably.
+//!
+//! Grammar, `:`-separated, options in any order:
+//!
+//! ```text
+//! spec    := scheme (":" option)*
+//! scheme  := "BF16" | "DynamiQ" | "MXFP8" | "MXFP6" | "MXFP4"
+//!          | "THC" | "OmniReduce"
+//! option  := "b=" float            (DynamiQ only; finite, > 0)
+//!          | "lb=" float ("," float)*   (DynamiQ only; each finite, > 0)
+//!          | "wire=" ("packed" | "ranged")   (ranged: DynamiQ, THC)
+//! ```
+
+use std::fmt;
+use std::str::FromStr;
+
+use super::entropy::WireFormat;
+use super::{bf16, dynamiq, mxfp, omnireduce, thc, GradCodec};
+
+/// A compression scheme name, the leading component of a codec spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Truncated bfloat16 (the uncompressed-in-spirit baseline).
+    Bf16,
+    /// The paper's codec: super-group quantization with agreed widths.
+    DynamiQ,
+    /// Microscaling FP8 blocks.
+    Mxfp8,
+    /// Microscaling FP6 blocks.
+    Mxfp6,
+    /// Microscaling FP4 blocks.
+    Mxfp4,
+    /// Tensor homomorphic compression (rotated lattice quantizer).
+    Thc,
+    /// Sparse block selection (top-k indicator baseline).
+    OmniReduce,
+}
+
+/// Every scheme, in the paper's legend order (mirrors `SCHEMES`).
+pub const ALL_SCHEMES: &[Scheme] = &[
+    Scheme::Bf16,
+    Scheme::DynamiQ,
+    Scheme::Mxfp8,
+    Scheme::Mxfp6,
+    Scheme::Mxfp4,
+    Scheme::Thc,
+    Scheme::OmniReduce,
+];
+
+impl Scheme {
+    /// The canonical (paper-legend) name this scheme parses from and
+    /// displays as.
+    pub fn canonical(self) -> &'static str {
+        match self {
+            Scheme::Bf16 => "BF16",
+            Scheme::DynamiQ => "DynamiQ",
+            Scheme::Mxfp8 => "MXFP8",
+            Scheme::Mxfp6 => "MXFP6",
+            Scheme::Mxfp4 => "MXFP4",
+            Scheme::Thc => "THC",
+            Scheme::OmniReduce => "OmniReduce",
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Scheme> {
+        ALL_SCHEMES.iter().copied().find(|s| s.canonical() == name)
+    }
+
+    /// Whether this scheme's codec understands `wire=ranged` (has an
+    /// entropy-coded payload path).
+    pub fn supports_ranged(self) -> bool {
+        matches!(self, Scheme::DynamiQ | Scheme::Thc)
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.canonical())
+    }
+}
+
+/// Why a codec spec string failed to parse. `Display` messages name the
+/// offending fragment and what would have been accepted.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CodecSpecError {
+    /// The leading scheme name is not one of [`ALL_SCHEMES`].
+    UnknownScheme(String),
+    /// An option key is not part of the grammar.
+    UnknownOption(String),
+    /// An option value failed validation; fields: option key, offending
+    /// value, what was expected.
+    InvalidValue(&'static str, String, &'static str),
+    /// The option exists but this scheme does not accept it; fields:
+    /// scheme, option key.
+    UnsupportedOption(Scheme, &'static str),
+    /// The same option was given twice.
+    DuplicateOption(&'static str),
+}
+
+impl fmt::Display for CodecSpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecSpecError::UnknownScheme(got) => {
+                write!(f, "unknown scheme `{got}` (expected one of ")?;
+                for (i, s) in ALL_SCHEMES.iter().enumerate() {
+                    write!(f, "{}{s}", if i > 0 { ", " } else { "" })?;
+                }
+                write!(f, ")")
+            }
+            CodecSpecError::UnknownOption(got) => {
+                write!(f, "unknown codec option `{got}` (expected b=, lb= or wire=)")
+            }
+            CodecSpecError::InvalidValue(opt, got, want) => {
+                write!(f, "bad value `{got}` for {opt}= ({want})")
+            }
+            CodecSpecError::UnsupportedOption(scheme, opt) => {
+                write!(f, "scheme {scheme} does not accept the {opt}= option")
+            }
+            CodecSpecError::DuplicateOption(opt) => {
+                write!(f, "duplicate {opt}= option")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecSpecError {}
+
+/// A parsed, validated codec specification. Construct with
+/// [`CodecSpec::parse`] (or `str::parse`); build codecs with
+/// [`CodecSpec::build`] / [`CodecSpec::build_n`] — infallible, because
+/// every constraint was checked at parse time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodecSpec {
+    /// The compression scheme.
+    pub scheme: Scheme,
+    /// `b=`: DynamiQ bit-budget override (with `lb=` in force this is
+    /// the broadcast/set-0 budget). `None` keeps the paper default.
+    pub budget_bits: Option<f64>,
+    /// `lb=`: DynamiQ per-hierarchy-level budgets, innermost level
+    /// first. Empty means uniform (no per-level header on the wire).
+    pub level_budgets: Vec<f64>,
+    /// `wire=`: payload representation (see [`WireFormat`]).
+    pub wire: WireFormat,
+}
+
+impl CodecSpec {
+    /// A spec for `scheme` with every option at its default.
+    pub fn new(scheme: Scheme) -> Self {
+        CodecSpec { scheme, budget_bits: None, level_budgets: Vec::new(), wire: WireFormat::Packed }
+    }
+
+    /// Parse and validate a spec string (see the module-level grammar).
+    pub fn parse(s: &str) -> Result<CodecSpec, CodecSpecError> {
+        let mut parts = s.split(':');
+        let name = parts.next().unwrap_or("");
+        let scheme = Scheme::from_name(name)
+            .ok_or_else(|| CodecSpecError::UnknownScheme(name.to_string()))?;
+        let mut spec = CodecSpec::new(scheme);
+        let (mut seen_b, mut seen_lb, mut seen_wire) = (false, false, false);
+        for part in parts {
+            if let Some(v) = part.strip_prefix("b=") {
+                if std::mem::replace(&mut seen_b, true) {
+                    return Err(CodecSpecError::DuplicateOption("b"));
+                }
+                if scheme != Scheme::DynamiQ {
+                    return Err(CodecSpecError::UnsupportedOption(scheme, "b"));
+                }
+                spec.budget_bits = Some(parse_budget("b", v)?);
+            } else if let Some(v) = part.strip_prefix("lb=") {
+                if std::mem::replace(&mut seen_lb, true) {
+                    return Err(CodecSpecError::DuplicateOption("lb"));
+                }
+                if scheme != Scheme::DynamiQ {
+                    return Err(CodecSpecError::UnsupportedOption(scheme, "lb"));
+                }
+                if v.is_empty() {
+                    return Err(CodecSpecError::InvalidValue(
+                        "lb",
+                        v.to_string(),
+                        "expected a non-empty comma-separated list of per-level bit budgets",
+                    ));
+                }
+                spec.level_budgets =
+                    v.split(',').map(|tok| parse_budget("lb", tok)).collect::<Result<_, _>>()?;
+            } else if let Some(v) = part.strip_prefix("wire=") {
+                if std::mem::replace(&mut seen_wire, true) {
+                    return Err(CodecSpecError::DuplicateOption("wire"));
+                }
+                spec.wire = match v {
+                    "packed" => WireFormat::Packed,
+                    "ranged" => {
+                        if !scheme.supports_ranged() {
+                            return Err(CodecSpecError::UnsupportedOption(scheme, "wire"));
+                        }
+                        WireFormat::Ranged
+                    }
+                    _ => {
+                        return Err(CodecSpecError::InvalidValue(
+                            "wire",
+                            v.to_string(),
+                            "expected `packed` or `ranged`",
+                        ))
+                    }
+                };
+            } else {
+                return Err(CodecSpecError::UnknownOption(part.to_string()));
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Build one codec instance with this spec's configuration.
+    pub fn build(&self) -> Box<dyn GradCodec> {
+        match self.scheme {
+            Scheme::Bf16 => Box::new(bf16::Bf16Codec::new()),
+            Scheme::DynamiQ => {
+                let mut cfg = dynamiq::DynamiqConfig::default();
+                if let Some(b) = self.budget_bits {
+                    cfg.budget_bits = b;
+                }
+                cfg.level_budgets = self.level_budgets.clone();
+                cfg.wire = self.wire;
+                Box::new(dynamiq::Dynamiq::new(cfg))
+            }
+            Scheme::Mxfp8 => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp8)),
+            Scheme::Mxfp6 => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp6)),
+            Scheme::Mxfp4 => Box::new(mxfp::MxfpCodec::new(mxfp::MxFormat::Mxfp4)),
+            Scheme::Thc => Box::new(thc::ThcCodec::new(0xD14A_311).with_wire(self.wire)),
+            Scheme::OmniReduce => Box::new(omnireduce::OmniReduce::paper_default()),
+        }
+    }
+
+    /// Build one codec per worker (the per-worker codec set the engine
+    /// and coordinator consume).
+    pub fn build_n(&self, n: usize) -> Vec<Box<dyn GradCodec>> {
+        (0..n).map(|_| self.build()).collect()
+    }
+}
+
+/// Shared validation for `b=`/`lb=` budget values.
+fn parse_budget(opt: &'static str, tok: &str) -> Result<f64, CodecSpecError> {
+    let v: f64 = tok.parse().map_err(|_| {
+        CodecSpecError::InvalidValue(opt, tok.to_string(), "expected a number of bits")
+    })?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(CodecSpecError::InvalidValue(
+            opt,
+            tok.to_string(),
+            "bit budgets must be finite and > 0",
+        ));
+    }
+    Ok(v)
+}
+
+impl FromStr for CodecSpec {
+    type Err = CodecSpecError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        CodecSpec::parse(s)
+    }
+}
+
+impl fmt::Display for CodecSpec {
+    /// The canonical spec string: options in the fixed order `b=`,
+    /// `lb=`, `wire=`, defaults omitted. `parse(display(s)) == s`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.scheme)?;
+        if let Some(b) = self.budget_bits {
+            write!(f, ":b={b}")?;
+        }
+        if !self.level_budgets.is_empty() {
+            write!(f, ":lb=")?;
+            for (i, b) in self.level_budgets.iter().enumerate() {
+                write!(f, "{}{b}", if i > 0 { "," } else { "" })?;
+            }
+        }
+        if self.wire == WireFormat::Ranged {
+            write!(f, ":wire=ranged")?;
+        }
+        Ok(())
+    }
+}

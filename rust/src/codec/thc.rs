@@ -23,6 +23,7 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::codec::entropy::{ModelSet, RangeDecoder, RangeEncoder, WireFormat, RANGED_BIT};
 use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::util::rng::{pcg_hash, uniform_u01};
 
@@ -122,6 +123,12 @@ pub struct ThcCodec {
     agg_bits: u32,
     ovf: AtomicU64,
     mode: KernelMode,
+    /// wire representation: [`WireFormat::Packed`] streams the code
+    /// containers as-is; [`WireFormat::Ranged`] prefixes a tag byte and
+    /// entropy-transcodes them (code sums cluster around the k·s
+    /// offset, so the high bits of wide containers are nearly free),
+    /// falling back per payload when coding does not shrink it
+    wire: WireFormat,
 }
 
 impl ThcCodec {
@@ -135,7 +142,14 @@ impl ThcCodec {
             agg_bits: 8,
             ovf: AtomicU64::new(0),
             mode: KernelMode::default(),
+            wire: WireFormat::default(),
         }
+    }
+
+    /// Builder: select the wire representation (see [`ThcCodec::wire`]).
+    pub fn with_wire(mut self, wire: WireFormat) -> Self {
+        self.wire = wire;
+        self
     }
 
     /// Aggregation width rule from §6.1: 8 bits up to 8 workers, 12 beyond
@@ -534,6 +548,201 @@ impl ThcCodec {
             self.ovf.fetch_add(ovf, Ordering::Relaxed);
         }
     }
+
+    // ---- WireFormat::Ranged: lossless entropy transcoding ----
+    //
+    // A Ranged THC payload is `tag byte + body`: tag [`RANGED_BIT`]
+    // means the body is the packed code stream re-encoded through the
+    // range coder (low byte and high part of each container under
+    // separate adaptive models); tag 0 means the packed body follows
+    // unchanged (per-payload fallback). Decode re-materializes the
+    // packed bytes, so values are bit-identical to Packed either way.
+
+    /// Adaptive-model alphabets per container width: low byte, plus the
+    /// high nibble (12-bit) or high byte (16-bit).
+    fn ranged_alphabets(&self) -> &'static [usize] {
+        match self.agg_bits {
+            8 => &[256],
+            12 => &[256, 16],
+            _ => &[256, 256],
+        }
+    }
+
+    /// Range-encode a packed code stream of `entries` containers into
+    /// `out`; returns whether the coded stream came out strictly
+    /// smaller (aborting as soon as it cannot).
+    fn encode_ranged_body(
+        &self,
+        body: &[u8],
+        entries: usize,
+        models: &mut ModelSet,
+        out: &mut Vec<u8>,
+    ) -> bool {
+        let coded_start = out.len();
+        models.reset(self.ranged_alphabets());
+        let mut enc = RangeEncoder::new(out);
+        let mut br = BitReader::new(body);
+        for _ in 0..entries {
+            let c = br.read(self.agg_bits);
+            models.slot(0).encode(&mut enc, (c & 0xff) as usize);
+            if self.agg_bits > 8 {
+                models.slot(1).encode(&mut enc, (c >> 8) as usize);
+            }
+            if enc.written() - coded_start >= body.len() {
+                return false;
+            }
+        }
+        enc.finish();
+        out.len() - coded_start < body.len()
+    }
+
+    /// Append the Ranged form of a packed code stream: tag + coded
+    /// body, or tag 0 + the packed body when coding does not shrink it.
+    fn emit_ranged(&self, body: &[u8], entries: usize, models: &mut ModelSet, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.push(RANGED_BIT);
+        if !self.encode_ranged_body(body, entries, models, out) {
+            out.truncate(start);
+            out.push(0);
+            out.extend_from_slice(body);
+        }
+    }
+
+    /// Re-materialize the packed code stream a coded payload (`tag +
+    /// coded body`) was transcoded from — byte-identical, including the
+    /// 12-bit layout's zero padding.
+    fn ranged_to_packed(
+        &self,
+        bytes: &[u8],
+        entries: usize,
+        models: &mut ModelSet,
+        packed: &mut Vec<u8>,
+    ) {
+        debug_assert!(!bytes.is_empty() && bytes[0] & RANGED_BIT != 0);
+        packed.clear();
+        models.reset(self.ranged_alphabets());
+        let mut dec = RangeDecoder::new(&bytes[1..]);
+        let mut bw = BitWriter::default();
+        for _ in 0..entries {
+            let mut c = models.slot(0).decode(&mut dec) as u32;
+            if self.agg_bits > 8 {
+                c |= (models.slot(1).decode(&mut dec) as u32) << 8;
+            }
+            bw.push(c, self.agg_bits, packed);
+        }
+        bw.flush(packed);
+        while packed.len() < self.payload_bytes(entries) {
+            packed.push(0);
+        }
+    }
+
+    /// The packed body of a Ranged payload for the decode walks:
+    /// transcode coded payloads into `scratch.coder.packed_in`, or step
+    /// past the tag of a fallback payload. Packed-wire payloads pass
+    /// through untouched.
+    fn unwrap_body<'a>(
+        &self,
+        bytes: &'a [u8],
+        entries: usize,
+        scratch: &'a mut WorkerScratch,
+    ) -> &'a [u8] {
+        if self.wire != WireFormat::Ranged || bytes.is_empty() {
+            return bytes;
+        }
+        if bytes[0] & RANGED_BIT != 0 {
+            let mut pin = std::mem::take(&mut scratch.coder.packed_in);
+            self.ranged_to_packed(bytes, entries, &mut scratch.coder.models, &mut pin);
+            scratch.coder.packed_in = pin;
+            &scratch.coder.packed_in
+        } else {
+            &bytes[1..]
+        }
+    }
+
+    /// Packed encode walk (the wire body both formats agree on; see
+    /// [`GradCodec::compress_into`]).
+    fn compress_packed(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
+        debug_assert_eq!(data.len(), range.len());
+        let want = self.payload_bytes(range.len());
+        out.reserve(want);
+        let start = out.len();
+        match self.mode {
+            KernelMode::Scalar => self.compress_scalar(data, &range, ctx.summed, ctx.worker, out),
+            KernelMode::Vectorized => {
+                self.compress_lanes(data, &range, ctx.summed, ctx.worker, out)
+            }
+        }
+        // the 12-bit layout pads odd tails to a full 3-byte triple
+        while out.len() - start < want {
+            out.push(0);
+        }
+    }
+
+    /// Packed decode walk over a code-stream body.
+    fn decompress_packed(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), range.len());
+        match self.mode {
+            KernelMode::Scalar => {
+                let mut br = BitReader::new(bytes);
+                for (i, o) in out.iter_mut().enumerate() {
+                    let c = br.read(self.agg_bits);
+                    let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
+                    *o = self.from_lattice(c, s, ctx.summed);
+                }
+            }
+            KernelMode::Vectorized => self.decode_lanes(bytes, &range, ctx.summed, |at, vals| {
+                out[at..at + LANE].copy_from_slice(vals);
+            }),
+        }
+    }
+
+    /// Packed decode-accumulate walk over a code-stream body.
+    fn decompress_accumulate_packed(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) {
+        match self.mode {
+            KernelMode::Scalar => {
+                let mut br = BitReader::new(bytes);
+                for (i, a) in acc.iter_mut().enumerate() {
+                    let c = br.read(self.agg_bits);
+                    let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
+                    *a += self.from_lattice(c, s, ctx.summed);
+                }
+            }
+            KernelMode::Vectorized => self.decode_lanes(bytes, &range, ctx.summed, |at, vals| {
+                let dst = &mut acc[at..at + LANE];
+                for j in 0..LANE {
+                    dst[j] += vals[j];
+                }
+            }),
+        }
+    }
+
+    /// Packed fused decompress-accumulate-recompress walk.
+    fn dar_packed(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        out: &mut Vec<u8>,
+    ) {
+        debug_assert_eq!(local.len(), range.len());
+        let want = self.payload_bytes(range.len());
+        out.reserve(want);
+        let start = out.len();
+        match self.mode {
+            KernelMode::Scalar => self.dar_scalar(bytes, local, &range, ctx.worker, out),
+            KernelMode::Vectorized => self.dar_lanes(bytes, local, &range, ctx.worker, out),
+        }
+        while out.len() - start < want {
+            out.push(0);
+        }
+    }
 }
 
 impl GradCodec for ThcCodec {
@@ -575,36 +784,21 @@ impl GradCodec for ThcCodec {
     }
 
     fn compress_into(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
-        debug_assert_eq!(data.len(), range.len());
-        let want = self.payload_bytes(range.len());
-        out.reserve(want);
-        let start = out.len();
-        match self.mode {
-            KernelMode::Scalar => self.compress_scalar(data, &range, ctx.summed, ctx.worker, out),
-            KernelMode::Vectorized => {
-                self.compress_lanes(data, &range, ctx.summed, ctx.worker, out)
-            }
-        }
-        // the 12-bit layout pads odd tails to a full 3-byte triple
-        while out.len() - start < want {
-            out.push(0);
+        if self.wire == WireFormat::Ranged {
+            // one-shot convenience path (hop paths use `compress_pooled`)
+            let mut scratch = WorkerScratch::default();
+            self.compress_pooled(data, range, ctx, &mut scratch, out);
+        } else {
+            self.compress_packed(data, range, ctx, out);
         }
     }
 
     fn decompress_into(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx, out: &mut [f32]) {
-        debug_assert_eq!(out.len(), range.len());
-        match self.mode {
-            KernelMode::Scalar => {
-                let mut br = BitReader::new(bytes);
-                for (i, o) in out.iter_mut().enumerate() {
-                    let c = br.read(self.agg_bits);
-                    let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
-                    *o = self.from_lattice(c, s, ctx.summed);
-                }
-            }
-            KernelMode::Vectorized => self.decode_lanes(bytes, &range, ctx.summed, |at, vals| {
-                out[at..at + LANE].copy_from_slice(vals);
-            }),
+        if self.wire == WireFormat::Ranged {
+            let mut scratch = WorkerScratch::default();
+            self.decompress_pooled(bytes, range, ctx, &mut scratch, out);
+        } else {
+            self.decompress_packed(bytes, range, ctx, out);
         }
     }
 
@@ -615,48 +809,87 @@ impl GradCodec for ThcCodec {
         range: Range<usize>,
         ctx: &HopCtx,
     ) {
-        match self.mode {
-            KernelMode::Scalar => {
-                let mut br = BitReader::new(bytes);
-                for (i, a) in acc.iter_mut().enumerate() {
-                    let c = br.read(self.agg_bits);
-                    let s = self.scales[(range.start + i) / HADAMARD_BLOCK];
-                    *a += self.from_lattice(c, s, ctx.summed);
-                }
-            }
-            KernelMode::Vectorized => self.decode_lanes(bytes, &range, ctx.summed, |at, vals| {
-                let dst = &mut acc[at..at + LANE];
-                for j in 0..LANE {
-                    dst[j] += vals[j];
-                }
-            }),
+        if self.wire == WireFormat::Ranged {
+            let mut scratch = WorkerScratch::default();
+            self.decompress_accumulate_pooled(bytes, acc, range, ctx, &mut scratch);
+        } else {
+            self.decompress_accumulate_packed(bytes, acc, range, ctx);
         }
+    }
+
+    fn compress_pooled(
+        &self,
+        data: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        if self.wire != WireFormat::Ranged {
+            return self.compress_packed(data, range, ctx, out);
+        }
+        if range.is_empty() {
+            return;
+        }
+        let mut packed = std::mem::take(&mut scratch.coder.packed_out);
+        packed.clear();
+        self.compress_packed(data, range.clone(), ctx, &mut packed);
+        self.emit_ranged(&packed, range.len(), &mut scratch.coder.models, out);
+        scratch.coder.packed_out = packed;
+    }
+
+    fn decompress_pooled(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut [f32],
+    ) {
+        let body = self.unwrap_body(bytes, range.len(), scratch);
+        self.decompress_packed(body, range, ctx, out);
+    }
+
+    fn decompress_accumulate_pooled(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+    ) {
+        let body = self.unwrap_body(bytes, range.len(), scratch);
+        self.decompress_accumulate_packed(body, acc, range, ctx);
     }
 
     /// Homomorphic fused hop: integer-add a fresh local 4-bit code to the
     /// incoming code sums — no decode/requantize, THC's one structural
     /// advantage in multi-hop (paper Table 2's "+2·AR" row). Streams codes
-    /// in and out; never touches the heap.
+    /// in and out; never touches the heap. Ranged payloads transcode at
+    /// the boundary — the fused kernel itself only sees packed bytes.
     fn decompress_accumulate_recompress_into(
         &self,
         bytes: &[u8],
         local: &[f32],
         range: Range<usize>,
         ctx: &HopCtx,
-        _scratch: &mut WorkerScratch,
+        scratch: &mut WorkerScratch,
         out: &mut Vec<u8>,
     ) {
-        debug_assert_eq!(local.len(), range.len());
-        let want = self.payload_bytes(range.len());
-        out.reserve(want);
-        let start = out.len();
-        match self.mode {
-            KernelMode::Scalar => self.dar_scalar(bytes, local, &range, ctx.worker, out),
-            KernelMode::Vectorized => self.dar_lanes(bytes, local, &range, ctx.worker, out),
+        if self.wire != WireFormat::Ranged {
+            return self.dar_packed(bytes, local, range, ctx, out);
         }
-        while out.len() - start < want {
-            out.push(0);
+        if range.is_empty() {
+            return;
         }
+        let mut pout = std::mem::take(&mut scratch.coder.packed_out);
+        pout.clear();
+        {
+            let body = self.unwrap_body(bytes, range.len(), scratch);
+            self.dar_packed(body, local, range.clone(), ctx, &mut pout);
+        }
+        self.emit_ranged(&pout, range.len(), &mut scratch.coder.models, out);
+        scratch.coder.packed_out = pout;
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {
@@ -837,6 +1070,83 @@ mod tests {
         assert_eq!(ThcCodec::agg_bits_for(8), 8);
         assert_eq!(ThcCodec::agg_bits_for(9), 12);
         assert_eq!(ThcCodec::agg_bits_for(64), 12);
+    }
+
+    #[test]
+    fn ranged_wire_decodes_bit_identical_to_packed() {
+        // all three container widths: the Ranged wire must shrink the
+        // payload (code sums are far from max-entropy) and decode to the
+        // exact packed bytes, through both the plain and the fused walks
+        let mut rng = Pcg::new(31);
+        let d = 4 * HADAMARD_BLOCK;
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 0.01);
+        for bits in [8u32, 12, 16] {
+            let build = |wire: WireFormat| {
+                let mut c = ThcCodec::new(7).with_wire(wire);
+                let cx = ctx(0, 2, 1);
+                let meta = c.metadata(&g, &cx);
+                let pre = c.begin_round(&g, &meta, &cx);
+                c.agg_bits = bits; // exercise all widths regardless of n
+                (c, pre)
+            };
+            let (cp, pre) = build(WireFormat::Packed);
+            let (cr, pre_r) = build(WireFormat::Ranged);
+            assert_eq!(pre, pre_r);
+            let r = 0..pre.len();
+            let cx = ctx(0, 2, 1);
+            let wp = cp.compress(&pre, r.clone(), &cx);
+            let wr = cr.compress(&pre_r, r.clone(), &cx);
+            assert!(wr.len() <= wp.len() + 1, "bits={bits}: fallback bound");
+            assert!(
+                wr[0] & RANGED_BIT != 0 && wr.len() < wp.len(),
+                "bits={bits}: expected a coded win ({} vs {})",
+                wr.len(),
+                wp.len()
+            );
+            let dp = cp.decompress(&wp, r.clone(), &cx);
+            let dr = cr.decompress(&wr, r.clone(), &cx);
+            for (a, b) in dp.iter().zip(&dr) {
+                assert_eq!(a.to_bits(), b.to_bits(), "decompress bits={bits}");
+            }
+            // fused hop parity: the Ranged wire transcodes at the
+            // boundary, so the homomorphic sums match bit for bit
+            let fp = cp.decompress_accumulate_recompress(&wp, &pre, r.clone(), &cx);
+            let fr = cr.decompress_accumulate_recompress(&wr, &pre_r, r.clone(), &cx);
+            let cx2 = ctx(0, 2, 2);
+            let sp = cp.decompress(&fp, r.clone(), &cx2);
+            let sr = cr.decompress(&fr, r.clone(), &cx2);
+            for (a, b) in sp.iter().zip(&sr) {
+                assert_eq!(a.to_bits(), b.to_bits(), "fused bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn ranged_pooled_reuses_scratch_deterministically() {
+        let mut rng = Pcg::new(33);
+        let d = 2 * HADAMARD_BLOCK;
+        let mut g = vec![0.0f32; d];
+        rng.fill_normal(&mut g, 0.01);
+        let mut c = ThcCodec::new(9).with_wire(WireFormat::Ranged);
+        let cx = ctx(0, 2, 1);
+        let meta = c.metadata(&g, &cx);
+        let pre = c.begin_round(&g, &meta, &cx);
+        let r = 0..pre.len();
+        let one_shot = c.compress(&pre, r.clone(), &cx);
+        let plain = c.decompress(&one_shot, r.clone(), &cx);
+        let mut scratch = WorkerScratch::default();
+        for pass in 0..3 {
+            let mut out = Vec::new();
+            c.compress_pooled(&pre, r.clone(), &cx, &mut scratch, &mut out);
+            assert_eq!(out, one_shot, "pass {pass}: warm scratch must not leak state");
+            let mut dec = vec![0.0f32; r.len()];
+            c.decompress_pooled(&out, r.clone(), &cx, &mut scratch, &mut dec);
+            for (a, b) in plain.iter().zip(&dec) {
+                assert_eq!(a.to_bits(), b.to_bits(), "pass {pass}");
+            }
+        }
+        assert!(scratch.coder.packed_out.capacity() > 0, "staging arena must be retained");
     }
 
     #[test]

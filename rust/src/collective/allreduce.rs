@@ -160,7 +160,7 @@ pub fn produce_hop(
     if received.is_empty() {
         counters.compress_calls += 1;
         let ctx = HopCtx { summed: 1, ..*base_ctx };
-        codec.compress_into(local, range, &ctx, out);
+        codec.compress_pooled(local, range, &ctx, scratch, out);
         return 1;
     }
     let mut summed = 1u32;
@@ -174,18 +174,21 @@ pub fn produce_hop(
     } else {
         // multi-parent (butterfly internal nodes): accumulate every
         // incoming partial into the scratch accumulator, then recompress
-        // the chunk once
-        scratch.acc.clear();
-        scratch.acc.extend_from_slice(local);
+        // the chunk once (the accumulator moves out of `scratch` so the
+        // pooled kernels can still borrow the coder state)
+        let mut acc = std::mem::take(&mut scratch.acc);
+        acc.clear();
+        acc.extend_from_slice(local);
         for (payload, k) in received.iter() {
             summed += *k;
             let in_ctx = HopCtx { summed: *k, ..*base_ctx };
             counters.da_calls += 1;
-            codec.decompress_accumulate(payload, &mut scratch.acc, range.clone(), &in_ctx);
+            codec.decompress_accumulate_pooled(payload, &mut acc, range.clone(), &in_ctx, scratch);
         }
         let out_ctx = HopCtx { summed, ..*base_ctx };
         counters.compress_calls += 1;
-        codec.compress_into(&scratch.acc, range, &out_ctx, out);
+        codec.compress_pooled(&acc, range, &out_ctx, scratch, out);
+        scratch.acc = acc;
     }
     for (buf, _) in received.drain(..) {
         recycle.push(buf);
@@ -723,22 +726,26 @@ impl AllReduceEngine {
             if range.is_empty() {
                 continue;
             }
-            codecs_ro[0].decompress_into(
+            codecs_ro[0].decompress_pooled(
                 payload,
                 range.clone(),
                 &mk_ctx(0, *k),
+                &mut pool.workers[0],
                 &mut summed_pre[range.clone()],
             );
             report.decompress_calls += 1;
             if self.verify_consistency && n > 1 {
-                let slab = &mut pool.workers[1].slab;
+                let ws = &mut pool.workers[1];
+                let mut slab = std::mem::take(&mut ws.slab);
                 slab.resize(range.len(), 0.0);
-                codecs_ro[1].decompress_into(payload, range.clone(), &mk_ctx(1, *k), slab);
+                let ctx1 = mk_ctx(1, *k);
+                codecs_ro[1].decompress_pooled(payload, range.clone(), &ctx1, ws, &mut slab);
                 assert_eq!(
                     &summed_pre[range],
                     &slab[..],
                     "workers decoded different results for chunk {c}"
                 );
+                ws.slab = slab;
             }
         }
         for (payload, _) in broadcast {
@@ -1008,22 +1015,31 @@ impl AllReduceEngine {
                 let (payload, k) = broadcast[c].take().expect("sink produced the chunk");
                 let range = ranges[c].clone();
                 if !range.is_empty() {
-                    codecs_ro[0].decompress_into(
+                    codecs_ro[0].decompress_pooled(
                         &payload,
                         range.clone(),
                         &mk_ctx(0, k),
+                        &mut pool.workers[0],
                         &mut summed_pre[range.clone()],
                     );
                     report.decompress_calls += 1;
                     if self.verify_consistency && n > 1 {
-                        let slab = &mut pool.workers[1].slab;
+                        let ws = &mut pool.workers[1];
+                        let mut slab = std::mem::take(&mut ws.slab);
                         slab.resize(range.len(), 0.0);
-                        codecs_ro[1].decompress_into(&payload, range.clone(), &mk_ctx(1, k), slab);
+                        codecs_ro[1].decompress_pooled(
+                            &payload,
+                            range.clone(),
+                            &mk_ctx(1, k),
+                            ws,
+                            &mut slab,
+                        );
                         assert_eq!(
                             &summed_pre[range],
                             &slab[..],
                             "workers decoded different results for chunk {c}"
                         );
+                        ws.slab = slab;
                     }
                 }
                 pool.put_buf_in(slot, payload);

@@ -607,7 +607,7 @@ fn run_worker(
         if range.is_empty() {
             continue;
         }
-        codec.decompress_into(payload, range.clone(), &ctx(*k), &mut summed_pre[range]);
+        codec.decompress_pooled(payload, range.clone(), &ctx(*k), scratch, &mut summed_pre[range]);
     }
     // recycle the round's broadcast arenas into the warm free list
     for (_, (payload, _)) in broadcast {
@@ -678,9 +678,13 @@ fn recv_chunk(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codec::make_codecs;
+    use crate::codec::CodecSpec;
     use crate::collective::{AllReduceEngine, NetworkModel};
     use crate::util::rng::Pcg;
+
+    fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn crate::codec::GradCodec>> {
+        spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
+    }
 
     fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
         (0..n)

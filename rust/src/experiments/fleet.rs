@@ -37,11 +37,16 @@ use anyhow::Result;
 use super::hierarchy::{grads, net_for};
 use super::Ctx;
 use crate::collective::{stage_census, Level, RoundReport, Topology};
-use crate::codec::make_codecs;
+use crate::codec::{CodecSpec, GradCodec};
 use crate::sim::{EventEngine, EventStats, FleetScratch, MembershipPlan, StragglerModel};
 use crate::util::benchkit::Table;
 use crate::util::json::Json;
 use crate::util::par;
+
+/// Per-worker codec set from a static, known-valid sweep spec.
+fn mk_codecs(spec: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+    spec.parse::<CodecSpec>().expect("sweep codec specs are valid").build_n(n)
+}
 
 /// Gradient dimension of the scale/straggler/golden parts (2^15: big
 /// enough that every chunk is non-trivial at n = 2048, small enough
@@ -113,7 +118,7 @@ pub fn fleet_sweep(ctx: &Ctx) -> Result<()> {
         let g = grads(n, FLEET_D, 0xF1EE_7 + n as u64);
         let mut cells: Vec<Cell> = schemes.iter().map(|&s| Cell::new(s, "none")).collect();
         par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
-            let mut codecs = make_codecs(cell.scheme, n);
+            let mut codecs = mk_codecs(cell.scheme, n);
             let mut eng = EventEngine::new(topo, net_for(&topo, 48.0));
             eng.threads = engine_threads;
             let mut scratch = FleetScratch::new();
@@ -170,7 +175,7 @@ pub fn fleet_sweep(ctx: &Ctx) -> Result<()> {
         .collect();
     let st_g = grads(st_n, FLEET_D, 0x57A6);
     par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
-        let mut codecs = make_codecs(cell.scheme, st_n);
+        let mut codecs = mk_codecs(cell.scheme, st_n);
         let mut eng = EventEngine::new(st_topo, net_for(&st_topo, 48.0));
         eng.threads = engine_threads;
         eng.straggler = StragglerModel::parse(cell.jitter, 11).expect("static jitter specs");
@@ -255,7 +260,7 @@ pub fn fleet_sweep(ctx: &Ctx) -> Result<()> {
             assert_eq!(census.0.len() + census.1.len(), rs.len() + ag.len());
             churn = Some((
                 grads(n, churn_d, 0xC0_4E + n as u64),
-                make_codecs("DynamiQ", n),
+                mk_codecs("DynamiQ", n),
                 FleetScratch::new(),
             ));
             prev_n = n;
@@ -306,7 +311,7 @@ pub fn fleet_sweep(ctx: &Ctx) -> Result<()> {
     for &(topo, n) in &golden_cases {
         topo.validate(n)?;
         let g = grads(n, FLEET_D, 0x601D + n as u64);
-        let mut codecs = make_codecs("BF16", n);
+        let mut codecs = mk_codecs("BF16", n);
         let mut eng = EventEngine::new(topo, net_for(&topo, 48.0));
         eng.threads = engine_threads;
         let (_, rep, stats) = eng

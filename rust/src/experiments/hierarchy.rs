@@ -31,7 +31,7 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
-use crate::codec::{make_codecs, GradCodec, ScratchPool};
+use crate::codec::{CodecSpec, GradCodec, ScratchPool};
 use crate::quant::bitalloc::waterfill_level_budgets;
 use crate::collective::{
     AllReduceEngine, Level, LevelSpec, NetworkModel, NicProfile, RoundReport, Topology,
@@ -107,6 +107,12 @@ pub(crate) fn net_for(topo: &Topology, ratio: f64) -> NetworkModel {
     }
 }
 
+/// Per-worker codec set from a spec literal (sweep specs are static
+/// and valid; user-supplied specs go through `train`'s error path).
+fn mk_codecs(spec: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+    spec.parse::<CodecSpec>().expect("sweep codec specs are valid").build_n(n)
+}
+
 /// One grid point of a case: fixed inputs plus the computed report.
 struct Cell {
     ratio: f64,
@@ -147,7 +153,7 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
             })
             .collect();
         par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
-            let mut codecs = make_codecs(cell.scheme, n);
+            let mut codecs = mk_codecs(cell.scheme, n);
             let mut eng = AllReduceEngine::new(topo, net_for(&topo, cell.ratio));
             eng.threads = engine_threads;
             let mut pool = ScratchPool::new();
@@ -270,6 +276,124 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
     body.push('\n');
     body.push_str(&bbody);
 
+    // ---- wire-format dimension (entropy-coded payloads) ----
+    //
+    // `wire=ranged` re-encodes the very same quantized symbols through
+    // the range coder (adaptive per-chunk models, per-payload packed
+    // fallback), so the aggregated values — and therefore vNMSE — are
+    // bit-identical to the packed cells by construction; the only thing
+    // this axis can move is wire bytes and the comm time they price.
+    // Both invariants are asserted here and re-checked offline by
+    // python/validate_entropy.py against the saved JSON rows. Swept on a
+    // 32- and a 128-worker hierarchy for DynamiQ uniform, DynamiQ with
+    // the levelled budgets from `level_budgets_for` (fractional widths +
+    // per-payload headers — the format the coder has to work hardest
+    // on), and THC.
+    let wire_cases: Vec<(Topology, usize)> = vec![
+        (Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 32),
+        (Topology::hierarchical(Level::Ring, Level::Ring, 16), 128),
+    ];
+    struct WireCell {
+        label: &'static str,
+        spec: String,
+        wire: &'static str,
+        report: Option<RoundReport>,
+    }
+    let mut wtable = Table::new(&[
+        "topology", "n", "scheme", "wire", "wire MB", "Δwire", "comm ms", "vNMSE",
+    ]);
+    for &(topo, n) in &wire_cases {
+        topo.validate(n)?;
+        let g = grads(n, d, 0xE27_0 + n as u64);
+        let (base_bits, budgets) = level_budgets_for(&topo, n, 5.0, d);
+        let lvl_spec = format!(
+            "DynamiQ:b={base_bits}:lb={}",
+            budgets.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+        );
+        let variants: [(&'static str, String); 3] =
+            [("DynamiQ", "DynamiQ".into()), ("DynamiQ-lvl", lvl_spec), ("THC", "THC".into())];
+        let mut cells: Vec<WireCell> = Vec::new();
+        for &(label, ref spec) in &variants {
+            cells.push(WireCell { label, spec: spec.clone(), wire: "packed", report: None });
+            cells.push(WireCell {
+                label,
+                spec: format!("{spec}:wire=ranged"),
+                wire: "ranged",
+                report: None,
+            });
+        }
+        par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
+            let mut codecs = mk_codecs(&cell.spec, n);
+            let mut eng = AllReduceEngine::new(topo, net_for(&topo, 48.0));
+            eng.threads = engine_threads;
+            let mut pool = ScratchPool::new();
+            let mut last = None;
+            for round in 0..rounds {
+                match eng.run_pooled(&g, &mut codecs, round, 0.0, &mut pool) {
+                    Ok((_, rep)) => last = Some(rep),
+                    Err(e) => unreachable!("validated up front: {e}"),
+                }
+            }
+            cell.report = last;
+        });
+        for pair in cells.chunks(2) {
+            let packed = pair[0].report.as_ref().expect("at least one round");
+            let ranged = pair[1].report.as_ref().expect("at least one round");
+            anyhow::ensure!(
+                ranged.total_bytes() <= packed.total_bytes(),
+                "{}/n={n}/{}: ranged wire ({}) exceeds packed ({})",
+                topo.name(),
+                pair[0].label,
+                ranged.total_bytes(),
+                packed.total_bytes()
+            );
+            anyhow::ensure!(
+                ranged.vnmse == packed.vnmse,
+                "{}/n={n}/{}: ranged vNMSE drifted ({} vs {}) — the re-encode must be lossless",
+                topo.name(),
+                pair[0].label,
+                ranged.vnmse,
+                packed.vnmse
+            );
+            for cell in pair {
+                let rep = cell.report.as_ref().expect("at least one round");
+                let dwire = rep.total_bytes() as f64 / packed.total_bytes() as f64 - 1.0;
+                // canonical spec string for the JSON rows (satisfies
+                // parse(display(s)) == s, pinned by tests/codec_spec)
+                let canonical = cell
+                    .spec
+                    .parse::<CodecSpec>()
+                    .expect("sweep codec specs are valid")
+                    .to_string();
+                wtable.row(vec![
+                    topo.name(),
+                    n.to_string(),
+                    cell.label.into(),
+                    cell.wire.into(),
+                    format!("{:.3}", rep.total_bytes() as f64 / 1e6),
+                    format!("{:+.2}%", dwire * 100.0),
+                    format!("{:.3}", rep.comm_time_s() * 1e3),
+                    format!("{:.2e}", rep.vnmse),
+                ]);
+                json.push(Json::obj(vec![
+                    ("topology", Json::Str(topo.name())),
+                    ("n", Json::Num(n as f64)),
+                    ("scheme", Json::Str(cell.label.into())),
+                    ("spec", Json::Str(canonical)),
+                    ("wire", Json::Str(cell.wire.into())),
+                    ("bw_ratio", Json::Num(48.0)),
+                    ("wire_bytes", Json::Num(rep.total_bytes() as f64)),
+                    ("comm_time_s", Json::Num(rep.comm_time_s())),
+                    ("vnmse", Json::Num(rep.vnmse)),
+                ]));
+            }
+        }
+    }
+    let wbody = wtable.render();
+    println!("{wbody}");
+    body.push('\n');
+    body.push_str(&wbody);
+
     // ---- oversubscription dimension (congestion-aware costing) ----
     //
     // The regime the congestion model exists for: every worker of a node
@@ -307,7 +431,7 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
             })
             .collect();
         par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
-            let mut codecs = make_codecs(cell.scheme, n);
+            let mut codecs = mk_codecs(cell.scheme, n);
             // 1 Gbps-class NIC, same 48× intra ladder and α as the grid
             // above (mirrored by python/validate_congestion.py)
             let mut net = NetworkModel::isolated_100g();

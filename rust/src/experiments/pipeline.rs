@@ -29,7 +29,7 @@ use anyhow::{ensure, Result};
 
 use super::hierarchy::grads;
 use super::Ctx;
-use crate::codec::make_codecs;
+use crate::codec::CodecSpec;
 use crate::collective::{Level, NetworkModel, NicProfile, PipelineCfg, Topology};
 use crate::coordinator::Coordinator;
 use crate::util::benchkit::Table;
@@ -66,7 +66,10 @@ pub fn pipeline_sweep(ctx: &Ctx) -> Result<()> {
     for scheme in schemes {
         // one real threaded round per scheme; everything below is pricing
         let g = grads(n, d, 0xD1A6 + n as u64);
-        let mut coord = Coordinator::new(topo, make_codecs(scheme, n))?;
+        let mut coord = Coordinator::new(
+            topo,
+            scheme.parse::<CodecSpec>().expect("sweep codec specs are valid").build_n(n),
+        )?;
         let rounds = coord.run_round(&g, 0)?;
         drop(g);
         for wr in &rounds {

@@ -8,7 +8,7 @@
 //!                               (results identical to --jobs 1)
 //!     --scale S                 scale experiment round counts by S
 //!
-//! Train flags: --preset tiny|small|base  --scheme NAME  --workers N
+//! Train flags: --preset tiny|small|base  --scheme SPEC  --workers N
 //!   (--n is an alias for --workers)
 //!   --topology ring|butterfly|hier  --rounds N  --shared-network
 //!   --threaded (use the thread-per-worker coordinator for the all-reduce)
@@ -36,10 +36,16 @@
 //!                             serial pricing; ≥ 2 overlaps bucket b+1's
 //!                             compression with bucket b's transfers)
 //!
-//! Scheme suffixes: DynamiQ:b=4 (uniform budget), DynamiQ:lb=4.5,6
-//! (per-hierarchy-level budgets, innermost tier first); composable, e.g.
-//! DynamiQ:b=4.63:lb=5.24,6.74 (with lb= in force, b= is the
-//! broadcast/set-0 budget — a shaved equal-wire base).
+//! Codec specs (`--scheme`, validated by [`dynamiq::codec::CodecSpec`];
+//! a bad spec is a CLI error naming the offending fragment, not a panic):
+//!   SPEC := scheme[:option…] with scheme one of BF16 | DynamiQ | MXFP8 |
+//!   MXFP6 | MXFP4 | THC | OmniReduce. Options: DynamiQ:b=4 (uniform
+//!   budget), DynamiQ:lb=4.5,6 (per-hierarchy-level budgets, innermost
+//!   tier first), wire=packed|ranged (DynamiQ/THC: `ranged` ships
+//!   entropy-coded payloads — same decoded values, fewer wire bytes);
+//!   composable, e.g. DynamiQ:b=4.63:lb=5.24,6.74:wire=ranged (with lb=
+//!   in force, b= is the broadcast/set-0 budget — a shaved equal-wire
+//!   base).
 //!
 //! Hierarchical topology flags (with --topology hier):
 //!   --intra ring|butterfly    per-node level (default ring)

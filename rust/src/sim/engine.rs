@@ -638,10 +638,11 @@ impl EventEngine {
             let (payload, k) = slot.take().expect("every chunk finalized");
             let range = ranges[c].clone();
             if !range.is_empty() {
-                codecs_ro[0].decompress_into(
+                codecs_ro[0].decompress_pooled(
                     &payload,
                     range.clone(),
                     &mk_ctx(0, k),
+                    &mut scratch.workers[0],
                     &mut summed_pre[range],
                 );
                 report.decompress_calls += 1;

@@ -11,7 +11,7 @@ pub mod data;
 
 use anyhow::{anyhow, Result};
 
-use crate::codec::{make_codecs, GradCodec, ScratchPool};
+use crate::codec::{CodecSpec, GradCodec, ScratchPool};
 use crate::collective::{AllReduceEngine, NetworkModel, PipelineCfg, RoundReport, Topology};
 use crate::metrics::{ComputeModel, RoundTime, TtaCurve};
 use crate::sim::{EventEngine, FleetScratch, StragglerModel};
@@ -38,7 +38,7 @@ pub enum Backend {
 pub struct TrainConfig {
     /// lowered model preset name (`tiny` / `small` / `base`)
     pub preset: String,
-    /// codec scheme name (see [`crate::codec::make_codec`])
+    /// codec spec string (see [`crate::codec::CodecSpec`])
     pub scheme: String,
     /// data-parallel worker count
     pub n_workers: usize,
@@ -300,7 +300,9 @@ impl Trainer {
             }
         };
         let engine = AllReduceEngine::new(cfg.topology, net);
-        let codecs = make_codecs(&cfg.scheme, cfg.n_workers);
+        let spec: CodecSpec =
+            cfg.scheme.parse().map_err(|e| anyhow!("--scheme {}: {e}", cfg.scheme))?;
+        let codecs = spec.build_n(cfg.n_workers);
         // Calibrate the TTA time model so the compute : BF16-communication
         // ratio matches the paper's testbed (Fig. 6: computation ~= 2x the
         // exposed BF16 comm). On a real A6000 the sub-1M-param presets

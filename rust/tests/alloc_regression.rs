@@ -14,11 +14,16 @@
 //! run inside ONE `#[test]` — the only measurement windows open while
 //! the harness is quiescent waiting on this single test.
 
-use dynamiq::codec::{make_codec, GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
+use dynamiq::codec::{CodecSpec, GradCodec, HopCtx, MetaOp, ScratchPool, WorkerScratch};
 use dynamiq::collective::{produce_hop, AllReduceEngine, KernelCounters, NetworkModel, Topology};
 use dynamiq::util::benchkit::{alloc_delta, alloc_snapshot, CountingAlloc};
 use dynamiq::util::pool::threads_spawned;
 use dynamiq::util::rng::Pcg;
+
+fn mk_codec(spec: &str) -> Box<dyn GradCodec> {
+    spec.parse::<CodecSpec>().expect("codec spec").build()
+}
+
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
@@ -87,7 +92,7 @@ fn warm_kernels_allocate_zero_bytes() {
     let grads = [grad(d, 1), grad(d, 2)];
     for scheme in ["BF16", "DynamiQ", "MXFP8", "MXFP6", "MXFP4", "THC", "OmniReduce"] {
         let mut codecs: Vec<Box<dyn GradCodec>> =
-            (0..2).map(|_| make_codec(scheme)).collect();
+            (0..2).map(|_| mk_codec(scheme)).collect();
         let pres = setup_round(&mut codecs, &grads, 0);
         let r = 0..pres[0].len();
         let ctx_a = HopCtx::flat(0, 2, 0, 1);
@@ -146,7 +151,7 @@ fn steady_state_ring_hop_chain_allocates_zero_bytes() {
     let grads: Vec<Vec<f32>> = (0..n).map(|w| grad(d, 10 + w as u64)).collect();
     for scheme in ["DynamiQ", "BF16", "MXFP8", "THC"] {
         let mut codecs: Vec<Box<dyn GradCodec>> =
-            (0..n).map(|_| make_codec(scheme)).collect();
+            (0..n).map(|_| mk_codec(scheme)).collect();
         let mut free: Vec<Vec<u8>> = Vec::new();
         let mut in_flight: Vec<(Vec<u8>, u32)> = Vec::new();
         let mut scratches: Vec<WorkerScratch> =
@@ -204,7 +209,7 @@ fn engine_steady_state_rounds_are_cheaper_and_stable() {
     let n = 4usize;
     let d = 16384;
     let grads: Vec<Vec<f32>> = (0..n).map(|w| grad(d, 40 + w as u64)).collect();
-    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec("DynamiQ")).collect();
+    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| mk_codec("DynamiQ")).collect();
     let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
     eng.threads = 1; // the sequential zero-alloc hop path
     let mut pool = ScratchPool::new();
@@ -244,7 +249,7 @@ fn pipelined_steady_state_rounds_are_cheaper_and_stable() {
     let n = 4usize;
     let d = 16384;
     let grads: Vec<Vec<f32>> = (0..n).map(|w| grad(d, 55 + w as u64)).collect();
-    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec("DynamiQ")).collect();
+    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| mk_codec("DynamiQ")).collect();
     let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
     eng.threads = 1; // the sequential zero-alloc hop path
     let cfg = PipelineCfg { buckets: 4, depth: 2, ..PipelineCfg::default() };
@@ -281,7 +286,7 @@ fn pooled_threaded_rounds_are_spawn_free_and_cheap() {
     let n = 4usize;
     let d = 16384;
     let grads: Vec<Vec<f32>> = (0..n).map(|w| grad(d, 70 + w as u64)).collect();
-    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec("DynamiQ")).collect();
+    let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| mk_codec("DynamiQ")).collect();
     let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
     eng.threads = 2;
     let mut pool = ScratchPool::new();

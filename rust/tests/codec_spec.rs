@@ -1,0 +1,311 @@
+//! The `CodecSpec` grammar contract: every accepted spec string, every
+//! rejection (with its error variant), the canonical-Display round-trip
+//! property, and the behavioural guarantees the spec layer makes — a
+//! spec-built codec is byte-identical to its default-built counterpart,
+//! and `wire=ranged` changes the payload but never the decoded values.
+
+use dynamiq::codec::spec::ALL_SCHEMES;
+use dynamiq::codec::{CodecSpec, CodecSpecError, HopCtx, WireFormat};
+use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
+use dynamiq::util::rng::Pcg;
+
+fn parse(s: &str) -> CodecSpec {
+    s.parse::<CodecSpec>().unwrap_or_else(|e| panic!("`{s}` should parse: {e}"))
+}
+
+fn err(s: &str) -> CodecSpecError {
+    match s.parse::<CodecSpec>() {
+        Ok(spec) => panic!("`{s}` should be rejected, parsed as `{spec}`"),
+        Err(e) => e,
+    }
+}
+
+fn grad(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    let mut region = 1.0f32;
+    (0..d)
+        .map(|k| {
+            if k % 96 == 0 {
+                region = (rng.next_normal() * 1.4).exp();
+            }
+            rng.next_normal() * 0.01 * region
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- grammar
+
+#[test]
+fn every_scheme_parses_by_canonical_name() {
+    for &scheme in ALL_SCHEMES {
+        let spec = parse(scheme.canonical());
+        assert_eq!(spec.scheme, scheme);
+        assert_eq!(spec.budget_bits, None);
+        assert!(spec.level_budgets.is_empty());
+        assert_eq!(spec.wire, WireFormat::Packed);
+        assert_eq!(spec.to_string(), scheme.canonical());
+        // the built codec reports the same legend name
+        assert_eq!(spec.build().name(), scheme.canonical());
+        assert_eq!(spec.build_n(3).len(), 3);
+    }
+}
+
+#[test]
+fn dynamiq_options_parse() {
+    assert_eq!(parse("DynamiQ:b=5").budget_bits, Some(5.0));
+    assert_eq!(parse("DynamiQ:b=4.5").budget_bits, Some(4.5));
+    assert_eq!(parse("DynamiQ:lb=3,4.5,6").level_budgets, vec![3.0, 4.5, 6.0]);
+    let full = parse("DynamiQ:b=6:lb=2.5,8:wire=ranged");
+    assert_eq!(full.budget_bits, Some(6.0));
+    assert_eq!(full.level_budgets, vec![2.5, 8.0]);
+    assert_eq!(full.wire, WireFormat::Ranged);
+}
+
+#[test]
+fn wire_option_parses_where_supported() {
+    assert_eq!(parse("DynamiQ:wire=ranged").wire, WireFormat::Ranged);
+    assert_eq!(parse("THC:wire=ranged").wire, WireFormat::Ranged);
+    // `wire=packed` is the default and legal for every scheme
+    for &scheme in ALL_SCHEMES {
+        let s = format!("{}:wire=packed", scheme.canonical());
+        assert_eq!(parse(&s).wire, WireFormat::Packed);
+    }
+}
+
+#[test]
+fn options_accepted_in_any_order() {
+    let a = parse("DynamiQ:b=5:lb=3,7:wire=ranged");
+    let b = parse("DynamiQ:wire=ranged:lb=3,7:b=5");
+    let c = parse("DynamiQ:lb=3,7:wire=ranged:b=5");
+    assert_eq!(a, b);
+    assert_eq!(b, c);
+}
+
+// ------------------------------------------------------------- rejections
+
+#[test]
+fn unknown_schemes_rejected() {
+    for s in ["", "dynamiq", "Dynamiq", "BF-16", "thc", "FP8", "DynamiQb=5"] {
+        assert!(
+            matches!(err(s), CodecSpecError::UnknownScheme(_)),
+            "`{s}` should be UnknownScheme"
+        );
+    }
+}
+
+#[test]
+fn unknown_options_rejected() {
+    for s in ["DynamiQ:k=3", "THC:fast", "BF16:", "DynamiQ:b=5:x=1", "DynamiQ:B=5"] {
+        assert!(
+            matches!(err(s), CodecSpecError::UnknownOption(_)),
+            "`{s}` should be UnknownOption"
+        );
+    }
+}
+
+#[test]
+fn bad_budget_values_rejected() {
+    // unparsable, empty, non-positive and non-finite budgets all fail —
+    // `b=`/`lb=` must be finite and > 0 (`lb=` additionally non-empty)
+    for s in [
+        "DynamiQ:b=",
+        "DynamiQ:b=abc",
+        "DynamiQ:b=0",
+        "DynamiQ:b=-2",
+        "DynamiQ:b=inf",
+        "DynamiQ:b=NaN",
+        "DynamiQ:lb=",
+        "DynamiQ:lb=3,,4",
+        "DynamiQ:lb=3,0",
+        "DynamiQ:lb=3,-1.5",
+        "DynamiQ:lb=3,inf",
+    ] {
+        assert!(
+            matches!(err(s), CodecSpecError::InvalidValue(_, _, _)),
+            "`{s}` should be InvalidValue"
+        );
+    }
+}
+
+#[test]
+fn options_rejected_on_unsupporting_schemes() {
+    // b=/lb= are DynamiQ-only
+    for s in ["THC:b=4", "BF16:b=4", "MXFP8:lb=3,4", "OmniReduce:b=2"] {
+        assert!(
+            matches!(err(s), CodecSpecError::UnsupportedOption(_, _)),
+            "`{s}` should be UnsupportedOption"
+        );
+    }
+    // wire=ranged needs an entropy-coded payload path
+    for scheme in ["BF16", "MXFP8", "MXFP6", "MXFP4", "OmniReduce"] {
+        let s = format!("{scheme}:wire=ranged");
+        let rejected = matches!(
+            err(&s),
+            CodecSpecError::UnsupportedOption(sc, "wire") if !sc.supports_ranged()
+        );
+        assert!(rejected, "`{s}` should be UnsupportedOption");
+    }
+}
+
+#[test]
+fn bad_wire_values_rejected() {
+    for s in ["DynamiQ:wire=", "DynamiQ:wire=zipped", "THC:wire=Ranged"] {
+        assert!(
+            matches!(err(s), CodecSpecError::InvalidValue("wire", _, _)),
+            "`{s}` should be InvalidValue(wire)"
+        );
+    }
+}
+
+#[test]
+fn duplicate_options_rejected() {
+    assert_eq!(err("DynamiQ:b=5:b=6"), CodecSpecError::DuplicateOption("b"));
+    assert_eq!(err("DynamiQ:lb=3:lb=4"), CodecSpecError::DuplicateOption("lb"));
+    assert_eq!(err("DynamiQ:wire=packed:wire=ranged"), CodecSpecError::DuplicateOption("wire"));
+    // duplicate detection fires even when the value would also be invalid
+    assert_eq!(err("DynamiQ:b=5:b=bogus"), CodecSpecError::DuplicateOption("b"));
+}
+
+#[test]
+fn error_messages_name_the_offending_fragment() {
+    assert!(err("Zstd").to_string().contains("Zstd"));
+    assert!(err("Zstd").to_string().contains("DynamiQ"), "should list accepted schemes");
+    assert!(err("DynamiQ:k=3").to_string().contains("k=3"));
+    assert!(err("DynamiQ:b=banana").to_string().contains("banana"));
+    assert!(err("THC:b=4").to_string().contains("THC"));
+    assert!(err("MXFP8:wire=ranged").to_string().contains("MXFP8"));
+    assert!(err("DynamiQ:wire=zip").to_string().contains("packed"));
+    assert!(err("DynamiQ:b=1:b=2").to_string().contains("duplicate"));
+}
+
+// ------------------------------------------------- canonical round-trip
+
+#[test]
+fn display_round_trips_for_every_valid_spec_shape() {
+    let mut cases: Vec<String> = Vec::new();
+    for &scheme in ALL_SCHEMES {
+        cases.push(scheme.canonical().into());
+        cases.push(format!("{}:wire=packed", scheme.canonical()));
+        if scheme.supports_ranged() {
+            cases.push(format!("{}:wire=ranged", scheme.canonical()));
+        }
+    }
+    for extra in [
+        "DynamiQ:b=5",
+        "DynamiQ:b=4.5",
+        "DynamiQ:lb=3,4.5,6",
+        "DynamiQ:b=6:lb=2.5,8",
+        "DynamiQ:b=6:lb=2.5,8:wire=ranged",
+        "DynamiQ:wire=ranged:b=5",
+        "THC:wire=ranged",
+    ] {
+        cases.push(extra.into());
+    }
+    for s in &cases {
+        let spec = parse(s);
+        let canon = spec.to_string();
+        assert_eq!(parse(&canon), spec, "parse(display(`{s}`)) must round-trip");
+        // canonical form is a fixed point of parse∘display
+        assert_eq!(parse(&canon).to_string(), canon);
+    }
+}
+
+#[test]
+fn display_emits_fixed_option_order_and_omits_defaults() {
+    let canon = parse("DynamiQ:wire=ranged:lb=3,7:b=5").to_string();
+    assert_eq!(canon, "DynamiQ:b=5:lb=3,7:wire=ranged");
+    assert_eq!(parse("DynamiQ:wire=packed").to_string(), "DynamiQ");
+    assert_eq!(parse("THC:wire=packed").to_string(), "THC");
+    assert_eq!(parse("DynamiQ:b=5").to_string(), "DynamiQ:b=5");
+}
+
+// --------------------------------------------------------- behavioural
+
+/// Leaf-compress a deterministic gradient through a spec-built codec
+/// (single worker: the aggregated metadata is the worker's own).
+fn leaf_payload(spec: &str, d: usize) -> Vec<u8> {
+    let mut codec = parse(spec).build();
+    let ctx = HopCtx::flat(0, 1, 0, 1);
+    let g = grad(d, 0xC0DE);
+    let meta = codec.metadata(&g, &ctx);
+    let pre = codec.begin_round(&g, &meta, &ctx);
+    let mut out = Vec::new();
+    codec.compress_into(&pre, 0..pre.len(), &ctx, &mut out);
+    out
+}
+
+#[test]
+fn spec_built_codecs_match_default_wire_bytes() {
+    // `wire=packed` (and the bare scheme name) must be byte-identical to
+    // the pre-spec default payloads — the spec layer is a parser, not a
+    // behaviour change. Compare against directly-constructed codecs, not
+    // another parse, so a default drifting inside `build()` is caught.
+    let direct: [(&str, Box<dyn dynamiq::codec::GradCodec>); 2] = [
+        ("DynamiQ", Box::new(dynamiq::codec::dynamiq::Dynamiq::new(Default::default()))),
+        ("THC", Box::new(dynamiq::codec::thc::ThcCodec::new(0xD14A_311))),
+    ];
+    for (scheme, mut codec) in direct {
+        let bare = leaf_payload(scheme, 4096);
+        let explicit = leaf_payload(&format!("{scheme}:wire=packed"), 4096);
+        assert_eq!(bare, explicit, "{scheme}: wire=packed must be the default byte-for-byte");
+        assert!(!bare.is_empty());
+
+        let ctx = HopCtx::flat(0, 1, 0, 1);
+        let g = grad(4096, 0xC0DE);
+        let meta = codec.metadata(&g, &ctx);
+        let pre = codec.begin_round(&g, &meta, &ctx);
+        let mut want = Vec::new();
+        codec.compress_into(&pre, 0..pre.len(), &ctx, &mut want);
+        assert_eq!(bare, want, "{scheme}: spec-built must match direct construction");
+    }
+}
+
+#[test]
+fn ranged_wire_is_value_identical_and_dirty_buffer_safe() {
+    for scheme in ["DynamiQ", "THC"] {
+        let d = 4096;
+        let ctx = HopCtx::flat(0, 1, 0, 1);
+        let g = grad(d, 0xC0DE);
+
+        let mut packed = parse(scheme).build();
+        let meta = packed.metadata(&g, &ctx);
+        let pre = packed.begin_round(&g, &meta, &ctx);
+        let mut pbytes = Vec::new();
+        packed.compress_into(&pre, 0..pre.len(), &ctx, &mut pbytes);
+
+        let mut ranged = parse(&format!("{scheme}:wire=ranged")).build();
+        let meta_r = ranged.metadata(&g, &ctx);
+        assert_eq!(meta, meta_r, "{scheme}: metadata must not depend on wire format");
+        let pre_r = ranged.begin_round(&g, &meta_r, &ctx);
+        assert_eq!(pre, pre_r);
+        let mut rbytes = Vec::new();
+        ranged.compress_into(&pre_r, 0..pre_r.len(), &ctx, &mut rbytes);
+        assert_ne!(pbytes, rbytes, "{scheme}: ranged payload should differ on the wire");
+
+        // decoded values are bit-identical across wire formats, and a
+        // dirty output buffer is fully overwritten
+        let want = packed.decompress(&pbytes, 0..pre.len(), &ctx);
+        let mut got = vec![f32::NAN; pre.len()];
+        ranged.decompress_into(&rbytes, 0..pre.len(), &ctx, &mut got);
+        assert_eq!(want, got, "{scheme}: ranged decode must be bit-identical");
+    }
+}
+
+#[test]
+fn ranged_specs_run_a_full_engine_round_bit_identically() {
+    for scheme in ["DynamiQ", "THC"] {
+        let n = 4;
+        let d = 6000;
+        let g: Vec<Vec<f32>> = (0..n as u64).map(|i| grad(d, 0xAB5 ^ (i << 9))).collect();
+        let run = |spec: &str| {
+            let mut codecs = parse(spec).build_n(n);
+            let mut eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+            eng.verify_consistency = true;
+            eng.run(&g, &mut codecs, 2, 0.0).unwrap()
+        };
+        let (out_p, rep_p) = run(scheme);
+        let (out_r, rep_r) = run(&format!("{scheme}:wire=ranged"));
+        assert_eq!(out_p, out_r, "{scheme}: aggregated values must be wire-format independent");
+        assert_eq!(rep_p.vnmse, rep_r.vnmse);
+    }
+}

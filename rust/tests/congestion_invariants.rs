@@ -5,13 +5,18 @@
 //! spine bounds over randomized flow sets, and engine ↔ coordinator
 //! comm-time parity at 128 workers under oversubscription.
 
-use dynamiq::codec::make_codecs;
+use dynamiq::codec::CodecSpec;
 use dynamiq::collective::{
     AllReduceEngine, Level, LinkClass, NetworkModel, NicProfile, Topology,
 };
 use dynamiq::coordinator::Coordinator;
 use dynamiq::util::proptest::Prop;
 use dynamiq::util::rng::Pcg;
+
+fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn dynamiq::codec::GradCodec>> {
+    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
+}
+
 
 /// The Rust twin of the oracle's `fanin_stage`: `nodes × per_node` NIC
 /// flows of `bytes` each (node v targets node v+1) plus one intra hop.

@@ -3,11 +3,16 @@
 //! must hold for every draw (routing completeness, chunk coverage, worker
 //! agreement, budget compliance, finiteness, metadata volume).
 
-use dynamiq::codec::{make_codecs, GradCodec};
+use dynamiq::codec::{CodecSpec, GradCodec};
 use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
 use dynamiq::coordinator::threaded_allreduce;
 use dynamiq::util::proptest::Prop;
 use dynamiq::util::rng::Pcg;
+
+fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
+}
+
 
 fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
     (0..n)

@@ -22,11 +22,16 @@
 //!    reshape the virtual timeline only — payload bytes and reduced
 //!    values stay bit-identical to the sync engine.
 
-use dynamiq::codec::{make_codecs, ScratchPool};
+use dynamiq::codec::{CodecSpec, ScratchPool};
 use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, PipelineCfg, Topology};
 use dynamiq::coordinator::Coordinator;
 use dynamiq::sim::{EventEngine, FleetScratch, LinkFlap, MembershipPlan, StragglerModel};
 use dynamiq::util::rng::Pcg;
+
+fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn dynamiq::codec::GradCodec>> {
+    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
+}
+
 
 fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
     (0..n)

@@ -5,11 +5,16 @@
 //! pooled / multi-threaded engine paths reproduce the single-threaded
 //! engine exactly.
 
-use dynamiq::codec::{make_codec, GradCodec, HopCtx, KernelMode, MetaOp, ScratchPool, WorkerScratch};
+use dynamiq::codec::{CodecSpec, GradCodec, HopCtx, KernelMode, MetaOp, ScratchPool, WorkerScratch};
 use dynamiq::collective::{
     AllReduceEngine, Level, LevelSpec, NetworkModel, NicProfile, PipelineCfg, Topology,
 };
 use dynamiq::util::rng::Pcg;
+
+fn mk_codec(spec: &str) -> Box<dyn GradCodec> {
+    spec.parse::<CodecSpec>().expect("codec spec").build()
+}
+
 
 const SCHEMES: &[&str] = &[
     "BF16",
@@ -46,8 +51,8 @@ fn setup_mode(
 ) -> (Box<dyn GradCodec>, Box<dyn GradCodec>, Vec<f32>, Vec<f32>, HopCtx, HopCtx) {
     let ga = grad(d, 101);
     let gb = grad(d, 202);
-    let mut ca = make_codec(scheme);
-    let mut cb = make_codec(scheme);
+    let mut ca = mk_codec(scheme);
+    let mut cb = mk_codec(scheme);
     ca.set_kernel_mode(mode);
     cb.set_kernel_mode(mode);
     let ctx_a = HopCtx::flat(0, 2, round, 1);
@@ -274,7 +279,7 @@ fn pipelined_rounds_are_bit_identical_to_run_pooled() {
     for scheme in ["BF16", "DynamiQ", "THC"] {
         let mut eng = AllReduceEngine::new(topo, net.clone());
         eng.threads = 1;
-        let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec(scheme)).collect();
+        let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| mk_codec(scheme)).collect();
         let mut pool = ScratchPool::new();
         let mut base = None;
         for round in 0..2u32 {
@@ -287,7 +292,7 @@ fn pipelined_rounds_are_bit_identical_to_run_pooled() {
                 let mut eng = AllReduceEngine::new(topo, net.clone());
                 eng.threads = threads;
                 let mut codecs: Vec<Box<dyn GradCodec>> =
-                    (0..n).map(|_| make_codec(scheme)).collect();
+                    (0..n).map(|_| mk_codec(scheme)).collect();
                 let mut pool = ScratchPool::new();
                 let cfg = PipelineCfg { buckets: 4, depth, ..PipelineCfg::default() };
                 let mut last = None;
@@ -380,7 +385,7 @@ fn pipelined_depth2_comm_times_match_the_python_oracle() {
         net.set_tier_ratios(&[48.0]);
         net.nic = NicProfile { ports_per_node: 1, oversub };
         let eng = AllReduceEngine::new(topo, net);
-        let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| make_codec("BF16")).collect();
+        let mut codecs: Vec<Box<dyn GradCodec>> = (0..n).map(|_| mk_codec("BF16")).collect();
         let mut pool = ScratchPool::new();
         let cfg = PipelineCfg { buckets: 4, depth: 2, ..PipelineCfg::default() };
         let (_, rep) = eng.run_pipelined(&g, &mut codecs, 0, 0.0, &mut pool, &cfg).unwrap();
@@ -427,7 +432,7 @@ fn pooled_parallel_engine_matches_fresh_sequential_engine() {
             eng.threads = threads;
             let mut codecs: Vec<Box<dyn GradCodec>> = (0..n)
                 .map(|_| {
-                    let mut c = make_codec(scheme);
+                    let mut c = mk_codec(scheme);
                     c.set_kernel_mode(mode);
                     c
                 })
