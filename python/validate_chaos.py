@@ -1,0 +1,317 @@
+"""Offline oracle for the chaos (fault-injection) layer.
+
+Ports the seeded fault machinery of rust/src/sim/scenario.rs and the
+CRC32C frame of rust/src/codec/integrity.rs, to validate the Rust
+implementation without a toolchain:
+
+1. **Hash-port golden vectors** — pcg_hash / send_key / draw / dies
+   values pinned as constants here AND in tests/chaos_invariants.rs
+   (`fault_draws_match_the_python_oracle`): the two implementations are
+   cross-pinned to the same numbers, so drift on either side fails one
+   of the two suites.
+
+2. **CRC32C vectors** — the RFC 3720 (iSCSI) test vectors, matching the
+   table-driven implementation in codec/integrity.rs bit for bit.
+
+3. **Draw-frequency sanity** — over a large keyed sample, each fault
+   class fires at its configured rate (law-of-large-numbers tolerance),
+   and draws are attempt-independent (retransmissions see fresh faults).
+
+4. **Cross-check against results/chaos.json** when present (written by
+   `repro --id chaos`):
+   - accounting identities on every row (outcome counts partition the
+     rounds; silent = injected - detected; CRC rows have silent == 0;
+     rate-0 rows are all clean; policy-specific tallies);
+   - the acceptance criterion: CRC + Retry cells recover at least the
+     analytically predicted fraction of rounds
+     (1 - sends * p_fault^max_attempts, minus 3-sigma binomial slack);
+   - sync vs event backend: matching gap-free cells resolved the same
+     seeded draws, so their fault tallies and outcome counts are equal;
+   - death trace: reported per-round death counts equal the ported
+     `dies()` draws for the surviving membership, and the rebuild
+     trajectory shrinks n by exactly the reported deaths.
+
+Run: python3 python/validate_chaos.py
+Exit status is non-zero on any violated invariant.
+"""
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from validate_congestion import check, FAILURES
+
+M32 = 0xFFFFFFFF
+
+# ---- ports of util/rng.rs + sim/scenario.rs (change both together) ----
+
+FAULT_DOMAIN = 0x0FA17A5E
+DEATH_SALT = 0x00DEAD00
+RETRY_BACKOFF_S = 1e-4
+
+
+def pcg_hash(seed, index):
+    """PCG-RXS-M-XS-32 over a Weyl sequence (util/rng.rs)."""
+    state = (index * 747796405 + (seed * 2891336453 + 1)) & M32
+    state = (state * 747796405 + 2891336453) & M32
+    word = (((state >> (((state >> 28) + 4) & M32)) ^ state) * 277803737) & M32
+    return ((word >> 22) ^ word) & M32
+
+
+def u01(key, index):
+    """pcg_hash output as uniform f64 in [0, 1) (sim/scenario.rs)."""
+    return pcg_hash(key, index) / 4294967296.0
+
+
+def send_key(seed, rnd, frm, to, chunk, attempt):
+    """FaultPlan::send_key — the per-(round, hop, chunk, attempt) key."""
+    k0 = ((seed + rnd * 0x85EBCA6B) & M32) ^ FAULT_DOMAIN
+    k1 = pcg_hash(k0, frm)
+    k2 = pcg_hash(k1 ^ 0x9E3779B9, to)
+    return pcg_hash(k2 ^ 0x85EBCA6B, (chunk * 31 + attempt) & M32)
+
+
+def draw(plan, rnd, frm, to, chunk, attempt):
+    """FaultPlan::draw -> None | ('drop',) | ('truncate', keep) |
+    ('bitflip', pos, bit)."""
+    drop, trunc, flip = plan["drop"], plan["truncate"], plan["bitflip"]
+    if drop <= 0 and trunc <= 0 and flip <= 0:
+        return None
+    key = send_key(plan["seed"], rnd, frm, to, chunk, attempt)
+    u = u01(key, 0)
+    if u < drop:
+        return ("drop",)
+    if u < drop + trunc:
+        return ("truncate", u01(key, 1))
+    if u < drop + trunc + flip:
+        return ("bitflip", pcg_hash(key, 2), pcg_hash(key, 3) % 8)
+    return None
+
+
+def dies(plan, rnd, worker):
+    """FaultPlan::dies."""
+    if plan["death"] <= 0:
+        return False
+    k0 = ((plan["seed"] + rnd * 0x85EBCA6B) & M32) ^ FAULT_DOMAIN
+    return u01(k0 ^ DEATH_SALT, worker) < plan["death"]
+
+
+def crc32c(data):
+    """CRC32C (Castagnoli, reflected 0x82F63B78, iSCSI init/xorout)."""
+    table = []
+    for i in range(256):
+        c = i
+        for _ in range(8):
+            c = (0x82F63B78 ^ (c >> 1)) if c & 1 else c >> 1
+        table.append(c)
+    c = M32
+    for b in data:
+        c = table[(c ^ b) & 0xFF] ^ (c >> 8)
+    return c ^ M32
+
+
+def uniform_plan(seed, rate):
+    return {"seed": seed, "drop": rate, "truncate": rate, "bitflip": rate, "death": 0.0}
+
+
+# ---- 1 + 2: golden vectors -----------------------------------------------
+
+# Pinned in tests/chaos_invariants.rs::fault_draws_match_the_python_oracle
+# — regenerate with: python3 -c "import validate_chaos as v; v.print_golden()"
+GOLDEN_KEYS = [
+    # (seed, round, from, to, chunk, attempt) -> send_key
+    ((41, 0, 0, 1, 0, 0), 1314186156),
+    ((41, 3, 2, 3, 5, 0), 2766905127),
+    ((41, 3, 2, 3, 5, 1), 3264038713),
+    ((7, 9, 6, 0, 6, 2), 3299121259),
+]
+
+
+def golden_checks():
+    print("== hash-port golden vectors ==")
+    # frozen values of this port (cross-pinned on the Rust side)
+    for args, want in GOLDEN_KEYS:
+        got = send_key(*args)
+        check(got == want, f"send_key{args} == {want} (got {got})")
+    # the draw partition is exhaustive and ordered drop < truncate < flip
+    # (vary the round — it decorrelates every other key input)
+    plan = uniform_plan(41, 0.15)
+    kinds = {"drop": 0, "truncate": 0, "bitflip": 0, None: 0}
+    for r in range(2000):
+        f = draw(plan, r, 1, 2, 3, 0)
+        kinds[f[0] if f else None] += 1
+    for k in ("drop", "truncate", "bitflip"):
+        frac = kinds[k] / 2000.0
+        check(abs(frac - 0.15) < 0.04, f"{k} rate {frac:.3f} ~ 0.15")
+    check(kinds[None] / 2000.0 > 0.45, "no-fault mass ~ 0.55")
+    # attempt-independence: consecutive attempts draw distinct keys
+    k_a = send_key(41, 5, 1, 2, 3, 0)
+    k_b = send_key(41, 5, 1, 2, 3, 1)
+    check(k_a != k_b, "retransmissions draw fresh fault keys")
+
+    print("== CRC32C (RFC 3720) vectors ==")
+    check(crc32c(b"") == 0x00000000, "crc32c(empty) == 0")
+    check(crc32c(b"123456789") == 0xE3069283, "crc32c('123456789') == 0xE3069283")
+    check(crc32c(bytes(32)) == 0x8A9136AA, "crc32c(32 x 00) == 0x8A9136AA")
+    check(crc32c(bytes([0xFF] * 32)) == 0x62A8AB43, "crc32c(32 x FF) == 0x62A8AB43")
+    check(crc32c(bytes(range(32))) == 0x46DD794E, "crc32c(00..1F) == 0x46DD794E")
+
+
+def print_golden():
+    """Print the Rust-side pin constants (see GOLDEN_KEYS)."""
+    for args, _ in GOLDEN_KEYS:
+        print(f"send_key{args} = {send_key(*args)}")
+    plan = uniform_plan(41, 0.15)
+    for a in range(4):
+        print(f"draw(41,0.15 @ r5,1->2,c3,a{a}) = {draw(plan, 5, 1, 2, 3, a)}")
+    dp = {"seed": 5, "drop": 0.01, "truncate": 0.0, "bitflip": 0.0, "death": 0.05}
+    print("dies(r0..9, w0..11):",
+          [[w for w in range(12) if dies(dp, r, w)] for r in range(10)])
+
+
+# ---- 4: cross-check against results/chaos.json ---------------------------
+
+def row_key(r):
+    return (r["scheme"], r["rate"], r["policy"])
+
+
+def policy_row_checks(rows):
+    print("== accounting identities (policy + event rows) ==")
+    check(len(rows) > 0, "chaos JSON contains policy rows")
+    for r in rows:
+        tag = f'{r["kind"]}:{r["scheme"]}@{r["rate"]}/{r["policy"]}'
+        rounds = r["rounds"]
+        parts = (r["clean_rounds"] + r["recovered_rounds"]
+                 + r["degraded_rounds"] + r["aborted_rounds"])
+        check(parts == rounds, f"{tag}: outcomes partition the {rounds} rounds")
+        check(r["silent"] == r["injected"] - r["detected"],
+              f"{tag}: silent == injected - detected")
+        check(r["silent"] >= 0 and r["detected"] <= r["injected"],
+              f"{tag}: detection never exceeds injection")
+        n = int(r["n"])
+        check(r["sends_per_round"] == 2 * n * (n - 1),
+              f"{tag}: ring sends/round == 2n(n-1)")
+        if r["crc"]:
+            check(r["silent"] == 0, f"{tag}: CRC admits no silent corruption")
+        if r["rate"] == 0:
+            check(r["clean_rounds"] == rounds and r["injected"] == 0,
+                  f"{tag}: fault-free cell is all clean")
+            if r["kind"] == "policy":  # deltas are vs the *sync* baseline
+                check(abs(r["added_latency_s"]) < 1e-15
+                      and abs(r["vnmse_delta"]) < 1e-30,
+                      f"{tag}: fault-free cell is the baseline itself")
+        else:
+            check(r["injected"] > 0, f"{tag}: a firing plan injects")
+        if r["policy"] in ("degrade", "abort"):
+            check(r["retransmits"] == 0, f"{tag}: {r['policy']} never retransmits")
+            check(r["recovered_rounds"] == 0,
+                  f"{tag}: recovery requires retransmission")
+            check(r["retry_latency_s"] == 0, f"{tag}: no retries, no backoff")
+        if r["policy"] == "degrade":
+            check(r["aborted_rounds"] == 0, f"{tag}: degrade never aborts")
+        if r["policy"] == "retry4" and r["crc"] and r["rate"] > 0:
+            check(r["retransmits"] > 0, f"{tag}: detected faults retransmit")
+            check(r["retry_latency_s"] > 0, f"{tag}: retries cost backoff")
+            if r["kind"] == "policy":  # deltas are vs the *sync* baseline
+                check(r["added_latency_s"] > 0,
+                      f"{tag}: recovery latency is priced")
+
+
+def retry_bound_checks(rows):
+    print("== acceptance: CRC+retry recovered fraction >= analytic bound ==")
+    cells = [r for r in rows if r["kind"] == "policy" and r["crc"]
+             and r["policy"] == "retry4" and r["rate"] > 0]
+    check(len(cells) > 0, "CRC+retry cells present")
+    for r in cells:
+        p_fault = min(1.0, 3.0 * r["rate"])          # uniform plan: 3 classes
+        a = int(r["max_attempts"])
+        p_gap = p_fault ** a                          # every fault detected (CRC)
+        q = min(1.0, r["sends_per_round"] * p_gap)    # union bound per round
+        rounds = r["rounds"]
+        slack = 3.0 * math.sqrt(max(q * (1 - q), 1e-12) / rounds)
+        predicted = max(0.0, 1.0 - q - slack)
+        actual = (r["clean_rounds"] + r["recovered_rounds"]) / rounds
+        check(actual >= predicted,
+              f'{r["scheme"]}@{r["rate"]}: recovered fraction {actual:.4f} '
+              f">= predicted {predicted:.4f}")
+
+
+def event_parity_checks(rows):
+    print("== sync vs event backend parity (gap-free cells) ==")
+    sync = {row_key(r): r for r in rows if r["kind"] == "policy"}
+    ev = {row_key(r): r for r in rows if r["kind"] == "event"}
+    check(len(ev) > 0, "event rows present")
+    compared = 0
+    for k, e in ev.items():
+        s = sync.get(k)
+        check(s is not None, f"event cell {k} has a sync twin")
+        if s is None or s["substituted"] > 0 or e["substituted"] > 0:
+            continue  # gaps reshape the downstream hop set; draws diverge
+        compared += 1
+        for f in ("injected", "detected", "silent", "retransmits",
+                  "clean_rounds", "recovered_rounds", "degraded_rounds"):
+            check(s[f] == e[f], f"{k}: {f} identical across backends "
+                                f'({s[f]} vs {e[f]})')
+    check(compared > 0, "at least one gap-free cell compared across backends")
+
+
+def death_trace_checks(rows):
+    print("== death trace: dies() port + rebuild trajectory ==")
+    trace = sorted([r for r in rows if r["kind"] == "death"],
+                   key=lambda r: r["round"])
+    check(len(trace) > 0, "death rows present")
+    n = None
+    pending_dead = 0
+    for r in trace:
+        rnd, rn = int(r["round"]), int(r["n"])
+        if n is not None:
+            if r["rebuilt"]:
+                check(rn == n - pending_dead,
+                      f"round {rnd}: rebuild shrinks n by the reported dead")
+            else:
+                check(rn == n, f"round {rnd}: membership unchanged without rebuild")
+        plan = {"seed": r["seed"], "drop": r["drop_rate"], "truncate": 0.0,
+                "bitflip": 0.0, "death": r["death_rate"]}
+        predicted = [w for w in range(rn) if dies(plan, rnd, w)]
+        check(len(predicted) == int(r["dead"]),
+              f"round {rnd}: reported deaths ({int(r['dead'])}) match the "
+              f"ported draws ({len(predicted)})")
+        if int(r["dead"]) > 0:
+            check(r["outcome"] == "degraded",
+                  f"round {rnd}: deaths degrade the round")
+        check(r["comm_time_s"] > 0, f"round {rnd}: comm time positive")
+        # the driver only rebuilds while >= 4 workers survive
+        pending_dead = int(r["dead"]) if rn - int(r["dead"]) >= 4 else 0
+        n = rn
+
+
+def cross_check(path="results/chaos.json"):
+    if not os.path.exists(path):
+        print(f"== no {path}; skipping chaos cross-check "
+              "(run `repro --id chaos` first) ==")
+        return
+    print(f"== cross-checking {path} ==")
+    rows = [r for r in json.load(open(path)) if r.get("tag") == "chaos"]
+    check(len(rows) > 0, "chaos JSON contains tagged rows")
+    pe = [r for r in rows if r["kind"] in ("policy", "event")]
+    policy_row_checks(pe)
+    retry_bound_checks(rows)
+    event_parity_checks(pe)
+    death_trace_checks(rows)
+
+
+def main():
+    golden_checks()
+    cross_check()
+    if FAILURES:
+        print(f"\n{len(FAILURES)} FAILURE(S)")
+        for f in FAILURES:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nall chaos-layer checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,7 @@
 
 use std::ops::Range;
 
-use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
+use crate::codec::{align_up, DecodeError, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits};
 
 const LANE: usize = 8;
@@ -238,6 +238,20 @@ impl GradCodec for Bf16Codec {
             KernelMode::Scalar => dar_scalar(bytes, local, out),
             KernelMode::Vectorized => dar_lanes(bytes, local, out),
         }
+    }
+
+    fn validate_payload(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        let expected = range.len() * 2;
+        if bytes.len() != expected {
+            return Err(DecodeError::Length { expected, got: bytes.len() });
+        }
+        Ok(())
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {

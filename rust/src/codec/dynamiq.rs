@@ -45,8 +45,10 @@
 
 use std::ops::Range;
 
-use crate::codec::entropy::{ModelSet, RangeDecoder, RangeEncoder, WireFormat, RANGED_BIT};
-use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
+use crate::codec::entropy::{
+    ModelSet, RangeDecoder, RangeEncoder, WireFormat, DECODER_SLACK, RANGED_BIT,
+};
+use crate::codec::{align_up, DecodeError, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::bitalloc::{solve_exact, BitAllocation, FastAllocator};
 use crate::quant::groups::{GroupLayout, SuperGroupStats};
 use crate::quant::hierarchical::encode_scales_into;
@@ -986,13 +988,16 @@ impl Dynamiq {
     /// Re-materialize the packed payload a coded Ranged payload was
     /// transcoded from (tag bit cleared, body decoded symbol-for-symbol
     /// — byte-identical to what the encoder staged before coding).
+    /// Returns the coded bytes the decoder consumed: a well-formed body
+    /// consumes exactly its own length (see [`DECODER_SLACK`]), so
+    /// validators compare the return against `bytes.len() - hdr`.
     fn ranged_to_packed(
         &self,
         bytes: &[u8],
         range: &Range<usize>,
         models: &mut ModelSet,
         packed: &mut Vec<u8>,
-    ) {
+    ) -> usize {
         debug_assert!(self.is_ranged_payload(bytes));
         let slots = self.slots(range);
         let hdr = self.header_bytes(slots.len());
@@ -1053,6 +1058,52 @@ impl Dynamiq {
                 }
             }
         }
+        dec.consumed()
+    }
+
+    /// Structural checks on the tag byte and width codes shared by the
+    /// packed and ranged walks. Must pass before any decode walk runs:
+    /// [`Dynamiq::wire_width`] indexes `cfg.widths` by the raw wire
+    /// code, so an out-of-range code would panic rather than error.
+    fn validate_header(&self, bytes: &[u8], slots: Range<usize>) -> Result<(), DecodeError> {
+        if !self.has_header() {
+            return Ok(());
+        }
+        let hdr = self.header_bytes(slots.len());
+        if bytes.len() < hdr {
+            return Err(DecodeError::Header("payload shorter than its width header"));
+        }
+        let bi = (bytes[0] & !RANGED_BIT) as usize;
+        if bi >= self.state().width_sets.len() {
+            return Err(DecodeError::Header("budget index outside the configured sets"));
+        }
+        if self.cfg.level_budgets.is_empty() {
+            return Ok(());
+        }
+        let cb = self.code_bits();
+        for (si, _) in slots.enumerate() {
+            let bit = si * cb;
+            let code = (bytes[1 + bit / 8] as usize >> (bit % 8)) & ((1 << cb) - 1);
+            if code >= self.cfg.widths.len() {
+                return Err(DecodeError::WidthCode { code });
+            }
+        }
+        Ok(())
+    }
+
+    /// Exact-length check of a packed-layout payload against the widths
+    /// its header (or the agreed allocation) names. Header validity is a
+    /// precondition ([`Dynamiq::validate_header`]).
+    fn validate_packed(&self, bytes: &[u8], slots: Range<usize>) -> Result<(), DecodeError> {
+        let mut expected = self.header_bytes(slots.len());
+        for (si, k) in slots.clone().enumerate() {
+            let w = self.wire_width(bytes, si, k);
+            expected += self.sg_wire_bytes(w);
+        }
+        if bytes.len() != expected {
+            return Err(DecodeError::Length { expected, got: bytes.len() });
+        }
+        Ok(())
     }
 
     // ---- packed-format walks (the trait impl dispatches here) ----
@@ -1415,6 +1466,45 @@ impl GradCodec for Dynamiq {
         self.emit_ranged(&pout, slots, bi, &mut scratch.coder.models, out);
         scratch.coder.packed_in = pin;
         scratch.coder.packed_out = pout;
+    }
+
+    fn validate_payload(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        let slots = self.slots(&range);
+        if slots.is_empty() {
+            return if bytes.is_empty() {
+                Ok(())
+            } else {
+                Err(DecodeError::Length { expected: 0, got: bytes.len() })
+            };
+        }
+        self.validate_header(bytes, slots.clone())?;
+        if !self.is_ranged_payload(bytes) {
+            return self.validate_packed(bytes, slots);
+        }
+        // Coded body: run the transcode walk and check the decoder
+        // landed on the stream boundary. A truncated body drifts into
+        // zero padding (overrun); appended garbage is never read
+        // (underrun). Either way the walk itself cannot fault — the
+        // decoder zero-pads past the end and the symbols it yields are
+        // alphabet-bounded by the models.
+        let hdr = self.header_bytes(slots.len());
+        let body = bytes.len() - hdr;
+        let mut pin = std::mem::take(&mut scratch.coder.packed_in);
+        let consumed = self.ranged_to_packed(bytes, &range, &mut scratch.coder.models, &mut pin);
+        scratch.coder.packed_in = pin;
+        if consumed > body + DECODER_SLACK {
+            return Err(DecodeError::Entropy("coded body shorter than its symbol stream"));
+        }
+        if consumed + DECODER_SLACK < body {
+            return Err(DecodeError::Entropy("trailing bytes after the coded body"));
+        }
+        Ok(())
     }
 
     fn end_round(&mut self, agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {

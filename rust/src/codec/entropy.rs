@@ -43,6 +43,15 @@ const MAX_TOTAL: u32 = 1 << 15;
 /// fallback (bit-for-bit what `WireFormat::Packed` would have sent).
 pub const RANGED_BIT: u8 = 0x80;
 
+/// Maximum legitimate overshoot of [`RangeDecoder::consumed`] past the
+/// stream length after a complete decode. The encoder's 4 flush bytes
+/// exactly balance the decoder's 4-byte prime, so well-formed streams
+/// finish with `consumed() == len` (pinned by the Python oracle's
+/// fuzz); the slack absorbs renormalization folding at the tail.
+/// Validators reject payloads whose decode walk consumes more — the
+/// signature of a truncated coded body drifting into zero padding.
+pub const DECODER_SLACK: usize = 4;
+
 /// The wire representation of a codec's quantized symbols.
 ///
 /// `Packed` is the legacy fixed-width bitstream; `Ranged` re-encodes
@@ -167,6 +176,17 @@ impl<'a> RangeDecoder<'a> {
         let b = self.bytes.get(self.pos).copied().unwrap_or(0);
         self.pos += 1;
         b
+    }
+
+    /// Bytes pulled from the stream so far, *including* zero pads read
+    /// past the end of the buffer. A well-formed stream finishes with
+    /// `consumed() <= bytes.len() + 4` (the encoder's flush tail is 4
+    /// bytes; legitimate decodes may fold a few of them into
+    /// renormalization) — payload validators use the margin to detect
+    /// truncated coded bodies, whose decode walks drift deep into the
+    /// zero padding.
+    pub fn consumed(&self) -> usize {
+        self.pos
     }
 
     /// Return the cumulative-frequency slot of the next symbol under a

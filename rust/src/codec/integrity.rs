@@ -1,0 +1,298 @@
+//! Wire integrity: an optional CRC32C frame around any codec's chunk
+//! payloads (the `wire=...+crc` spec option, see [`CodecSpec`]).
+//!
+//! Structural validation ([`GradCodec::validate_payload`]) proves a
+//! payload is *shaped* right; it cannot catch a bit flip that preserves
+//! the shape — for DynamiQ that is any flip in a scale or code byte,
+//! which silently poisons every downstream partial sum of the round.
+//! The CRC frame closes that hole: each non-empty chunk payload ships as
+//!
+//! ```text
+//! [CRC_TAG] [inner payload ...] [CRC32C(inner payload), 4 bytes LE]
+//! ```
+//!
+//! self-describing via the leading tag byte the way `RANGED_BIT` marks
+//! entropy-coded bodies. Empty inner payloads stay empty on the wire —
+//! the engines' "empty chunk ⇒ empty payload" invariant (and its
+//! pricing) is preserved. The 5-byte overhead is part of the payload,
+//! so the network model prices it with no extra plumbing.
+//!
+//! The checksum is verified by the fallible `try_*` decode forms (via
+//! [`CrcCodec::validate_payload`], surfacing [`DecodeError::Crc`]); the
+//! panicking forms strip the frame without verifying — they are the
+//! trusted-local-loop interface, and the engines' hop paths use the
+//! `try_*` forms.
+//!
+//! [`CodecSpec`]: crate::codec::CodecSpec
+
+use std::ops::Range;
+
+use crate::codec::{DecodeError, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
+
+/// Leading frame byte of a CRC-framed payload.
+pub const CRC_TAG: u8 = 0x43;
+
+/// Frame overhead per non-empty payload: tag byte + 4 trailer bytes.
+pub const CRC_FRAME_BYTES: usize = 5;
+
+/// CRC32C (Castagnoli) lookup table, reflected polynomial 0x82F63B78.
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0x82F6_3B78 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = build_table();
+
+/// CRC32C (Castagnoli) of `bytes` — the iSCSI/RFC 3720 variant
+/// (reflected, init/xorout `!0`), byte-at-a-time table walk. Mirrored
+/// bit-for-bit by `python/validate_chaos.py`.
+pub fn crc32c(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// A [`GradCodec`] decorator framing every chunk payload with a
+/// [`CRC_TAG`] byte and a CRC32C trailer (see the module docs). All
+/// round-boundary state, kernels and wire semantics are the wrapped
+/// codec's; only the per-chunk framing is added.
+pub struct CrcCodec {
+    inner: Box<dyn GradCodec>,
+}
+
+impl CrcCodec {
+    /// Frame `inner`'s payloads with CRC32C.
+    pub fn new(inner: Box<dyn GradCodec>) -> Self {
+        CrcCodec { inner }
+    }
+
+    /// Close the frame opened at `start` (where the tag byte sits):
+    /// append the trailer, or erase the frame entirely when the inner
+    /// codec emitted nothing (empty chunks stay empty on the wire).
+    fn seal(out: &mut Vec<u8>, start: usize) {
+        if out.len() == start + 1 {
+            out.truncate(start);
+            return;
+        }
+        let crc = crc32c(&out[start + 1..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+    }
+
+    /// Strip the frame of a received payload without verifying the
+    /// checksum (the panicking decode paths; `validate_payload` is the
+    /// verifying form the `try_*` decodes run first).
+    fn unframe(bytes: &[u8]) -> &[u8] {
+        if bytes.is_empty() {
+            return bytes;
+        }
+        assert!(
+            bytes.len() >= CRC_FRAME_BYTES && bytes[0] == CRC_TAG,
+            "malformed CRC frame (use the try_ decode forms on untrusted wire bytes)"
+        );
+        &bytes[1..bytes.len() - 4]
+    }
+}
+
+impl GradCodec for CrcCodec {
+    fn name(&self) -> &'static str {
+        // the scheme identity (legend, traffic model) is the inner codec's
+        self.inner.name()
+    }
+
+    fn metadata(&mut self, grad: &[f32], ctx: &HopCtx) -> Vec<f32> {
+        self.inner.metadata(grad, ctx)
+    }
+
+    fn metadata_op(&self) -> MetaOp {
+        self.inner.metadata_op()
+    }
+
+    fn begin_round(&mut self, grad: &[f32], agg_meta: &[f32], ctx: &HopCtx) -> Vec<f32> {
+        self.inner.begin_round(grad, agg_meta, ctx)
+    }
+
+    fn chunk_alignment(&self) -> usize {
+        self.inner.chunk_alignment()
+    }
+
+    fn compress_into(&self, data: &[f32], range: Range<usize>, ctx: &HopCtx, out: &mut Vec<u8>) {
+        let start = out.len();
+        out.push(CRC_TAG);
+        self.inner.compress_into(data, range, ctx, out);
+        Self::seal(out, start);
+    }
+
+    fn decompress_into(&self, bytes: &[u8], range: Range<usize>, ctx: &HopCtx, out: &mut [f32]) {
+        self.inner.decompress_into(Self::unframe(bytes), range, ctx, out);
+    }
+
+    fn decompress_accumulate(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+    ) {
+        self.inner.decompress_accumulate(Self::unframe(bytes), acc, range, ctx);
+    }
+
+    fn decompress_accumulate_recompress_into(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        let body = Self::unframe(bytes);
+        let start = out.len();
+        out.push(CRC_TAG);
+        self.inner.decompress_accumulate_recompress_into(body, local, range, ctx, scratch, out);
+        Self::seal(out, start);
+    }
+
+    fn compress_pooled(
+        &self,
+        data: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) {
+        let start = out.len();
+        out.push(CRC_TAG);
+        self.inner.compress_pooled(data, range, ctx, scratch, out);
+        Self::seal(out, start);
+    }
+
+    fn decompress_pooled(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut [f32],
+    ) {
+        self.inner.decompress_pooled(Self::unframe(bytes), range, ctx, scratch, out);
+    }
+
+    fn decompress_accumulate_pooled(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+    ) {
+        self.inner.decompress_accumulate_pooled(Self::unframe(bytes), acc, range, ctx, scratch);
+    }
+
+    fn validate_payload(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        if bytes.is_empty() {
+            // empty frames are erased at encode; the inner codec decides
+            // whether an empty payload is legitimate for this range
+            return self.inner.validate_payload(bytes, range, ctx, scratch);
+        }
+        if bytes.len() < CRC_FRAME_BYTES {
+            return Err(DecodeError::Length { expected: CRC_FRAME_BYTES, got: bytes.len() });
+        }
+        if bytes[0] != CRC_TAG {
+            return Err(DecodeError::Header("missing CRC frame tag"));
+        }
+        let body = &bytes[1..bytes.len() - 4];
+        let got = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let expected = crc32c(body);
+        if got != expected {
+            return Err(DecodeError::Crc { expected, got });
+        }
+        self.inner.validate_payload(body, range, ctx, scratch)
+    }
+
+    fn end_round(&mut self, agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {
+        self.inner.end_round(agg, ctx)
+    }
+
+    fn overflow_count(&self) -> u64 {
+        self.inner.overflow_count()
+    }
+
+    fn set_kernel_mode(&mut self, mode: KernelMode) {
+        self.inner.set_kernel_mode(mode);
+    }
+
+    fn kernel_mode(&self) -> KernelMode {
+        self.inner.kernel_mode()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::bf16::Bf16Codec;
+
+    #[test]
+    fn crc32c_known_vectors() {
+        // RFC 3720 §B.4 test vectors
+        assert_eq!(crc32c(b""), 0);
+        assert_eq!(crc32c(&[0u8; 32]), 0x8A91_36AA);
+        assert_eq!(crc32c(&[0xFFu8; 32]), 0x62A8_AB43);
+        let ascending: Vec<u8> = (0u8..32).collect();
+        assert_eq!(crc32c(&ascending), 0x46DD_794E);
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_tamper_detection() {
+        let mut c = CrcCodec::new(Box::new(Bf16Codec::new()));
+        let ctx = HopCtx::flat(0, 1, 0, 1);
+        let g = vec![0.5f32; 64];
+        let pre = c.begin_round(&g, &[], &ctx);
+        let r = 0..pre.len();
+        let bytes = c.compress(&pre, r.clone(), &ctx);
+        assert_eq!(bytes.len(), pre.len() * 2 + CRC_FRAME_BYTES);
+        assert_eq!(bytes[0], CRC_TAG);
+        let mut scratch = WorkerScratch::default();
+        assert!(c.validate_payload(&bytes, r.clone(), &ctx, &mut scratch).is_ok());
+        let dec = c.decompress(&bytes, r.clone(), &ctx);
+        assert!(dec.iter().all(|&v| (v - 0.5).abs() < 1e-2));
+        // any single bit flip in the body must be caught
+        let mut bad = bytes.clone();
+        bad[7] ^= 0x10;
+        match c.validate_payload(&bad, r, &ctx, &mut scratch) {
+            Err(DecodeError::Crc { .. }) => {}
+            other => panic!("expected Crc error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_payloads_stay_empty() {
+        let mut c = CrcCodec::new(Box::new(Bf16Codec::new()));
+        let ctx = HopCtx::flat(0, 1, 0, 1);
+        let pre = c.begin_round(&[1.0; 16], &[], &ctx);
+        let _ = pre;
+        let bytes = c.compress(&[], 16..16, &ctx);
+        assert!(bytes.is_empty());
+        let mut scratch = WorkerScratch::default();
+        assert!(c.validate_payload(&bytes, 16..16, &ctx, &mut scratch).is_ok());
+    }
+}

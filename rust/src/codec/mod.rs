@@ -63,6 +63,7 @@
 pub mod bf16;
 pub mod dynamiq;
 pub mod entropy;
+pub mod integrity;
 pub mod mxfp;
 pub mod omnireduce;
 pub mod scratch;
@@ -70,10 +71,70 @@ pub mod spec;
 pub mod thc;
 
 pub use entropy::WireFormat;
+pub use integrity::{crc32c, CrcCodec, CRC_TAG};
 pub use scratch::{ScratchPool, WorkerScratch};
 pub use spec::{CodecSpec, CodecSpecError, Scheme};
 
+use std::fmt;
 use std::ops::Range;
+
+/// Why a received payload failed validation before decode. The fallible
+/// `try_*` forms of [`GradCodec`] return this instead of panicking (or
+/// silently decoding garbage) on malformed wire bytes — the engines'
+/// recovery policies dispatch on it.
+///
+/// Validation is *structural*: header tags, width codes, lengths and
+/// range-coder termination. A payload whose structure survives a bit
+/// flip still decodes (to wrong values) — catching that is the CRC32C
+/// trailer's job (see [`integrity::CrcCodec`]), which surfaces here as
+/// [`DecodeError::Crc`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Payload length disagrees with the wire size its header/config
+    /// implies.
+    Length {
+        /// bytes the decoder expected
+        expected: usize,
+        /// bytes actually received
+        got: usize,
+    },
+    /// A malformed or missing header field (tag byte, frame marker).
+    Header(&'static str),
+    /// A super-group width code outside the configured width set.
+    WidthCode {
+        /// the out-of-range code read off the wire
+        code: usize,
+    },
+    /// A range-coded body failed to terminate inside the payload.
+    Entropy(&'static str),
+    /// The CRC32C trailer did not match the payload body.
+    Crc {
+        /// checksum recomputed over the received body
+        expected: u32,
+        /// checksum carried in the trailer
+        got: u32,
+    },
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::Length { expected, got } => {
+                write!(f, "payload length {got} != expected {expected}")
+            }
+            DecodeError::Header(what) => write!(f, "malformed payload header: {what}"),
+            DecodeError::WidthCode { code } => {
+                write!(f, "width code {code} outside the configured set")
+            }
+            DecodeError::Entropy(what) => write!(f, "malformed range-coded body: {what}"),
+            DecodeError::Crc { expected, got } => {
+                write!(f, "CRC32C mismatch: trailer {got:#010x}, body {expected:#010x}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 /// Reduction used for the metadata all-reduce.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -305,6 +366,90 @@ pub trait GradCodec: Send + Sync {
         let mut out = Vec::new();
         self.decompress_accumulate_recompress_into(bytes, local, range, ctx, &mut scratch, &mut out);
         out
+    }
+
+    /// Structurally validate a received payload before decoding it:
+    /// header tags, width codes, payload lengths, range-coder
+    /// termination, CRC trailers. `Ok(())` means the panicking decode
+    /// walks are safe to run on `bytes` (no out-of-bounds reads, no
+    /// `expect` on malformed headers) — it does **not** certify the
+    /// decoded values (a structure-preserving bit flip passes; pair
+    /// with [`integrity::CrcCodec`] to catch those). Codecs override
+    /// this; the default accepts everything (and the `try_*` forms
+    /// below then behave exactly like their panicking counterparts).
+    fn validate_payload(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        let _ = (bytes, range, ctx);
+        Ok(())
+    }
+
+    /// Fallible [`GradCodec::decompress_into`]: validate, then decode.
+    /// On `Err` nothing is written to `out`.
+    fn try_decompress_into(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        out: &mut [f32],
+    ) -> Result<(), DecodeError> {
+        let mut scratch = WorkerScratch::default();
+        self.validate_payload(bytes, range.clone(), ctx, &mut scratch)?;
+        self.decompress_into(bytes, range, ctx, out);
+        Ok(())
+    }
+
+    /// Fallible [`GradCodec::decompress_pooled`] (the hop-path form the
+    /// engines drive): validate, then decode. On `Err` nothing is
+    /// written to `out`.
+    fn try_decompress_pooled(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut [f32],
+    ) -> Result<(), DecodeError> {
+        self.validate_payload(bytes, range.clone(), ctx, scratch)?;
+        self.decompress_pooled(bytes, range, ctx, scratch, out);
+        Ok(())
+    }
+
+    /// Fallible [`GradCodec::decompress_accumulate_pooled`]: validate,
+    /// then accumulate. On `Err` the accumulator is untouched.
+    fn try_decompress_accumulate_pooled(
+        &self,
+        bytes: &[u8],
+        acc: &mut [f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        self.validate_payload(bytes, range.clone(), ctx, scratch)?;
+        self.decompress_accumulate_pooled(bytes, acc, range, ctx, scratch);
+        Ok(())
+    }
+
+    /// Fallible fused DAR
+    /// ([`GradCodec::decompress_accumulate_recompress_into`]): validate
+    /// the *incoming* payload, then run the fused kernel. On `Err`
+    /// nothing is appended to `out`.
+    fn try_decompress_accumulate_recompress_into(
+        &self,
+        bytes: &[u8],
+        local: &[f32],
+        range: Range<usize>,
+        ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+        out: &mut Vec<u8>,
+    ) -> Result<(), DecodeError> {
+        self.validate_payload(bytes, range.clone(), ctx, scratch)?;
+        self.decompress_accumulate_recompress_into(bytes, local, range, ctx, scratch, out);
+        Ok(())
     }
 
     /// Undo preprocessing on the aggregated sum (in place on the padded

@@ -24,7 +24,7 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
+use crate::codec::{align_up, DecodeError, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits, bf16_round, Minifloat};
 
 /// MX block size: entries sharing one power-of-two scale.
@@ -468,6 +468,20 @@ impl GradCodec for MxfpCodec {
         if ovf > 0 {
             self.ovf.fetch_add(ovf, Ordering::Relaxed);
         }
+    }
+
+    fn validate_payload(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        let expected = self.blocks(&range).len() * self.block_wire();
+        if bytes.len() != expected {
+            return Err(DecodeError::Length { expected, got: bytes.len() });
+        }
+        Ok(())
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {

@@ -15,7 +15,7 @@
 
 use std::ops::Range;
 
-use crate::codec::{align_up, GradCodec, HopCtx, MetaOp};
+use crate::codec::{align_up, DecodeError, GradCodec, HopCtx, MetaOp, WorkerScratch};
 use crate::quant::minifloat::{bf16_bits, bf16_from_bits};
 
 /// Sparsification block size: entries selected or dropped together.
@@ -180,6 +180,24 @@ impl GradCodec for OmniReduce {
             }
         }
         debug_assert_eq!(off, bytes.len());
+    }
+
+    fn validate_payload(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        _scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        // wire size is determined by the agreed per-round selection, not
+        // by the payload itself: selected blocks in `range` × BF16 block
+        let selected =
+            self.blocks(&range).filter(|&b| self.selected.get(b).copied().unwrap_or(false)).count();
+        let expected = selected * OR_BLOCK * 2;
+        if bytes.len() != expected {
+            return Err(DecodeError::Length { expected, got: bytes.len() });
+        }
+        Ok(())
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, _ctx: &HopCtx) -> Vec<f32> {

@@ -19,8 +19,13 @@
 //!          | "THC" | "OmniReduce"
 //! option  := "b=" float            (DynamiQ only; finite, > 0)
 //!          | "lb=" float ("," float)*   (DynamiQ only; each finite, > 0)
-//!          | "wire=" ("packed" | "ranged")   (ranged: DynamiQ, THC)
+//!          | "wire=" ("packed" | "ranged") ("+crc")?
+//!                                   (ranged: DynamiQ, THC; +crc: any scheme)
 //! ```
+//!
+//! The `+crc` suffix frames every chunk payload with a CRC32C trailer
+//! (see [`CrcCodec`](super::integrity::CrcCodec)); it composes with
+//! either representation, e.g. `DynamiQ:wire=ranged+crc`.
 
 use std::fmt;
 use std::str::FromStr;
@@ -152,12 +157,21 @@ pub struct CodecSpec {
     pub level_budgets: Vec<f64>,
     /// `wire=`: payload representation (see [`WireFormat`]).
     pub wire: WireFormat,
+    /// `wire=...+crc`: frame every chunk payload with a CRC32C trailer
+    /// (see [`CrcCodec`](super::integrity::CrcCodec)).
+    pub crc: bool,
 }
 
 impl CodecSpec {
     /// A spec for `scheme` with every option at its default.
     pub fn new(scheme: Scheme) -> Self {
-        CodecSpec { scheme, budget_bits: None, level_budgets: Vec::new(), wire: WireFormat::Packed }
+        CodecSpec {
+            scheme,
+            budget_bits: None,
+            level_budgets: Vec::new(),
+            wire: WireFormat::Packed,
+            crc: false,
+        }
     }
 
     /// Parse and validate a spec string (see the module-level grammar).
@@ -197,7 +211,19 @@ impl CodecSpec {
                 if std::mem::replace(&mut seen_wire, true) {
                     return Err(CodecSpecError::DuplicateOption("wire"));
                 }
-                spec.wire = match v {
+                let (repr, crc) = match v.split_once('+') {
+                    Some((repr, "crc")) => (repr, true),
+                    Some(_) => {
+                        return Err(CodecSpecError::InvalidValue(
+                            "wire",
+                            v.to_string(),
+                            "expected `packed` or `ranged`, optionally with a `+crc` suffix",
+                        ))
+                    }
+                    None => (v, false),
+                };
+                spec.crc = crc;
+                spec.wire = match repr {
                     "packed" => WireFormat::Packed,
                     "ranged" => {
                         if !scheme.supports_ranged() {
@@ -209,7 +235,7 @@ impl CodecSpec {
                         return Err(CodecSpecError::InvalidValue(
                             "wire",
                             v.to_string(),
-                            "expected `packed` or `ranged`",
+                            "expected `packed` or `ranged`, optionally with a `+crc` suffix",
                         ))
                     }
                 };
@@ -222,6 +248,15 @@ impl CodecSpec {
 
     /// Build one codec instance with this spec's configuration.
     pub fn build(&self) -> Box<dyn GradCodec> {
+        let inner = self.build_inner();
+        if self.crc {
+            Box::new(super::integrity::CrcCodec::new(inner))
+        } else {
+            inner
+        }
+    }
+
+    fn build_inner(&self) -> Box<dyn GradCodec> {
         match self.scheme {
             Scheme::Bf16 => Box::new(bf16::Bf16Codec::new()),
             Scheme::DynamiQ => {
@@ -285,8 +320,13 @@ impl fmt::Display for CodecSpec {
                 write!(f, "{}{b}", if i > 0 { "," } else { "" })?;
             }
         }
-        if self.wire == WireFormat::Ranged {
-            write!(f, ":wire=ranged")?;
+        // `+crc` rides on the wire option, so it forces the wire key out
+        // even at the packed default
+        match (self.wire, self.crc) {
+            (WireFormat::Ranged, true) => write!(f, ":wire=ranged+crc")?,
+            (WireFormat::Ranged, false) => write!(f, ":wire=ranged")?,
+            (WireFormat::Packed, true) => write!(f, ":wire=packed+crc")?,
+            (WireFormat::Packed, false) => {}
         }
         Ok(())
     }

@@ -23,8 +23,10 @@
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use crate::codec::entropy::{ModelSet, RangeDecoder, RangeEncoder, WireFormat, RANGED_BIT};
-use crate::codec::{align_up, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
+use crate::codec::entropy::{
+    ModelSet, RangeDecoder, RangeEncoder, WireFormat, DECODER_SLACK, RANGED_BIT,
+};
+use crate::codec::{align_up, DecodeError, GradCodec, HopCtx, KernelMode, MetaOp, WorkerScratch};
 use crate::util::rng::{pcg_hash, uniform_u01};
 
 /// Entries per lane batch in the vectorized kernels.
@@ -610,14 +612,16 @@ impl ThcCodec {
 
     /// Re-materialize the packed code stream a coded payload (`tag +
     /// coded body`) was transcoded from — byte-identical, including the
-    /// 12-bit layout's zero padding.
+    /// 12-bit layout's zero padding. Returns the coded bytes the
+    /// decoder consumed (a well-formed body consumes exactly its own
+    /// length; see [`DECODER_SLACK`]).
     fn ranged_to_packed(
         &self,
         bytes: &[u8],
         entries: usize,
         models: &mut ModelSet,
         packed: &mut Vec<u8>,
-    ) {
+    ) -> usize {
         debug_assert!(!bytes.is_empty() && bytes[0] & RANGED_BIT != 0);
         packed.clear();
         models.reset(self.ranged_alphabets());
@@ -634,6 +638,7 @@ impl ThcCodec {
         while packed.len() < self.payload_bytes(entries) {
             packed.push(0);
         }
+        dec.consumed()
     }
 
     /// The packed body of a Ranged payload for the decode walks:
@@ -890,6 +895,60 @@ impl GradCodec for ThcCodec {
         }
         self.emit_ranged(&pout, range.len(), &mut scratch.coder.models, out);
         scratch.coder.packed_out = pout;
+    }
+
+    fn validate_payload(
+        &self,
+        bytes: &[u8],
+        range: Range<usize>,
+        _ctx: &HopCtx,
+        scratch: &mut WorkerScratch,
+    ) -> Result<(), DecodeError> {
+        let want = self.payload_bytes(range.len());
+        if self.wire != WireFormat::Ranged {
+            return if bytes.len() == want {
+                Ok(())
+            } else {
+                Err(DecodeError::Length { expected: want, got: bytes.len() })
+            };
+        }
+        if range.is_empty() {
+            return if bytes.is_empty() {
+                Ok(())
+            } else {
+                Err(DecodeError::Length { expected: 0, got: bytes.len() })
+            };
+        }
+        // Ranged wire: a tag byte names the representation. The fallback
+        // body must be the exact packed length; a coded body must land
+        // the decoder on the stream boundary (the transcode walk itself
+        // cannot fault — the decoder zero-pads past the end and the
+        // BitWriter output is length-bounded by `entries`).
+        match bytes.first() {
+            None => Err(DecodeError::Header("missing THC wire tag")),
+            Some(&0) => {
+                if bytes.len() - 1 == want {
+                    Ok(())
+                } else {
+                    Err(DecodeError::Length { expected: want + 1, got: bytes.len() })
+                }
+            }
+            Some(&RANGED_BIT) => {
+                let body = bytes.len() - 1;
+                let mut pin = std::mem::take(&mut scratch.coder.packed_in);
+                let consumed =
+                    self.ranged_to_packed(bytes, range.len(), &mut scratch.coder.models, &mut pin);
+                scratch.coder.packed_in = pin;
+                if consumed > body + DECODER_SLACK {
+                    return Err(DecodeError::Entropy("coded body shorter than its symbol stream"));
+                }
+                if consumed + DECODER_SLACK < body {
+                    return Err(DecodeError::Entropy("trailing bytes after the coded body"));
+                }
+                Ok(())
+            }
+            Some(_) => Err(DecodeError::Header("unrecognized THC wire tag")),
+        }
     }
 
     fn end_round(&mut self, mut agg: Vec<f32>, ctx: &HopCtx) -> Vec<f32> {

@@ -38,6 +38,9 @@ use crate::collective::network::{
 };
 use crate::collective::topology::{Hop, Topology, TopologyError};
 use crate::metrics::memtraffic::{traffic_model, TrafficModel};
+use crate::sim::{
+    resolve_send, ChaosStats, FaultPlan, RecoveryPolicy, RoundOutcome, SendOutcome,
+};
 use crate::util::par;
 use crate::util::pool::WorkerPool;
 
@@ -131,6 +134,23 @@ pub struct KernelCounters {
     pub da_calls: u64,
     /// gradient entries pushed through the kernels
     pub entries_processed: u64,
+}
+
+/// One synchronization round executed under fault injection
+/// ([`AllReduceEngine::run_chaos`]): the aggregated values and report,
+/// plus how the round terminated and the fault accounting behind it.
+#[derive(Clone, Debug)]
+pub struct ChaosRound {
+    /// the aggregated sum, worker 0's view (substituted chunks fall back
+    /// to the local contribution — see [`ChaosStats::substituted`])
+    pub result: Vec<f32>,
+    /// wire/time/kernel accounting (retry backoff is folded into the
+    /// faulted stages' times; retransmitted bytes are charged per attempt)
+    pub report: RoundReport,
+    /// how the round terminated (never a panic)
+    pub outcome: RoundOutcome,
+    /// per-round fault tally audited by `python/validate_chaos.py`
+    pub stats: ChaosStats,
 }
 
 /// Produce one outgoing payload for (worker, chunk): leaf compress or the
@@ -792,6 +812,382 @@ impl AllReduceEngine {
         }
 
         Ok((result, report))
+    }
+
+    /// [`AllReduceEngine::run_pooled`] under deterministic fault
+    /// injection: every reduce-scatter hop and all-gather hop passes
+    /// through [`resolve_send`], where the seeded [`FaultPlan`] draws
+    /// drops, truncations and bit flips and the [`RecoveryPolicy`]
+    /// decides between abort, gap (graceful degradation) and bounded
+    /// retransmission from the sender's retained payload. Receivers
+    /// detect corruption structurally via
+    /// [`GradCodec::validate_payload`] (add the `wire=...+crc` frame to
+    /// also catch structure-preserving flips); the final broadcast
+    /// decode runs the fallible [`GradCodec::try_decompress_pooled`],
+    /// and a chunk with no surviving aggregate falls back to the local
+    /// contribution (reported via [`ChaosStats::substituted`]). Workers
+    /// drawn dead by [`FaultPlan::dies`] complete the (cheap) metadata
+    /// exchange and then go silent: every one of their sends gaps, and
+    /// the round reports them in [`RoundOutcome::Degraded`] so the
+    /// driver can rebuild the schedule without them for later rounds.
+    ///
+    /// With [`FaultPlan::is_none`] this delegates to
+    /// [`AllReduceEngine::run_pooled`] — payload bytes, values and comm
+    /// times are bit-identical to the engine without the chaos layer
+    /// (pinned by `tests/chaos_invariants`). Faulted rounds execute
+    /// sequentially (fault draws are keyed per `(round, hop, attempt)`,
+    /// so determinism beats throughput here) and always terminate with
+    /// a typed [`RoundOutcome`], never a panic. Retry backoff is added
+    /// to the faulted stage's wall time; retransmitted payloads are
+    /// charged to the wire once per attempt. Silent all-gather
+    /// corruption is tallied but not materialized per worker — the
+    /// returned values are worker 0's view decoded from the sink
+    /// payloads it actually received.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_chaos(
+        &self,
+        grads: &[Vec<f32>],
+        codecs: &mut [Box<dyn GradCodec>],
+        round: u32,
+        t0: f64,
+        pool: &mut ScratchPool,
+        plan: &FaultPlan,
+        policy: RecoveryPolicy,
+    ) -> Result<ChaosRound, TopologyError> {
+        if plan.is_none() {
+            let (result, report) = self.run_pooled(grads, codecs, round, t0, pool)?;
+            return Ok(ChaosRound {
+                result,
+                report,
+                outcome: RoundOutcome::Clean,
+                stats: ChaosStats::default(),
+            });
+        }
+        let n = grads.len();
+        self.topology.validate(n)?;
+        assert_eq!(codecs.len(), n);
+        let d = grads[0].len();
+        assert!(grads.iter().all(|g| g.len() == d));
+        // hold the round lock like run_pooled so shared engines serialize
+        let _round_guard = match self.stage.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let mut report = RoundReport::default();
+        let mut stats = ChaosStats::default();
+        let mut counters = KernelCounters::default();
+        let mut now = t0;
+        let mk_ctx = |worker: u32, summed: u32| {
+            HopCtx::flat(worker, n as u32, round, summed).at_broadcast()
+        };
+
+        // deaths are fixed at round start; the dead complete the metadata
+        // exchange and never send gradient bytes
+        let dead_workers: Vec<u32> = (0..n as u32).filter(|&w| plan.dies(round, w)).collect();
+        stats.dead_workers = dead_workers.clone();
+
+        // ---- metadata + preprocess: identical to run_pooled ----
+        let metas: Vec<Vec<f32>> = self.par_map_codecs(codecs, 1, |i, c| {
+            c.metadata(&grads[i], &mk_ctx(i as u32, 1))
+        });
+        let mlen = metas[0].len();
+        assert!(metas.iter().all(|m| m.len() == mlen), "metadata length disagreement");
+        let op = codecs[0].metadata_op();
+        let mut agg_meta = metas[0].clone();
+        match op {
+            MetaOp::Sum => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a += v;
+                    }
+                }
+            }
+            MetaOp::Max => {
+                for m in &metas[1..] {
+                    for (a, &v) in agg_meta.iter_mut().zip(m) {
+                        *a = a.max(v);
+                    }
+                }
+            }
+        }
+        if mlen > 0 {
+            let per_stage = (mlen.div_ceil(n) * 4) as u64;
+            let stage_msgs = vec![per_stage; n];
+            for _ in 0..2 * (n - 1) {
+                let dt = self.net.stage_time(&stage_msgs, now);
+                now += dt;
+                report.meta_time_s += dt;
+            }
+            report.meta_bytes = (2 * (n - 1) * n) as u64 * per_stage;
+        }
+        let pres: Vec<Vec<f32>> = {
+            let agg = &agg_meta;
+            self.par_map_codecs(codecs, 1, |i, c| {
+                c.begin_round(&grads[i], agg, &mk_ctx(i as u32, 1))
+            })
+        };
+        let padded = pres[0].len();
+        assert!(pres.iter().all(|p| p.len() == padded), "padded length disagreement");
+        let align = codecs[0].chunk_alignment();
+        let ranges = crate::codec::chunk_ranges(padded, n, align);
+
+        pool.ensure_workers(n);
+        let codecs_ro: &[Box<dyn GradCodec>] = &*codecs;
+        let ScratchPool { bufs, workers, inbox, .. } = &mut *pool;
+        // the receiver-side validation scratch (separate from the kernel
+        // scratch so the fault boundary never aliases a producer's state)
+        let mut vscratch = WorkerScratch::default();
+        // have[w * n + c]: worker w holds chunk c's aggregate (all-gather
+        // reachability — a gap or dead forwarder starves its subtree)
+        let mut have = vec![false; n * n];
+        let rs_sched = self.topology.reduce_scatter(n);
+        report.stage_times_s.reserve(rs_sched.len());
+        let mut stage_msgs: Vec<(u64, LinkClass, u32, u32)> = Vec::new();
+
+        // ---- reduce-scatter under fault draws ----
+        for hops in &rs_sched {
+            stage_msgs.clear();
+            let mut stage_retry_s = 0.0;
+            for h in hops {
+                let idx = h.from as usize * n + h.chunk as usize;
+                if dead_workers.contains(&h.from) {
+                    // the dead worker sends nothing; partials parked at
+                    // it are lost with it
+                    for (buf, _) in inbox[idx].drain(..) {
+                        bufs.push(buf);
+                    }
+                    stats.substituted += 1;
+                    continue;
+                }
+                let ctx = hop_context(&self.topology, n, round, h.from, h.to);
+                let mut out = match bufs.pop() {
+                    Some(mut b) => {
+                        b.clear();
+                        b
+                    }
+                    None => Vec::new(),
+                };
+                let summed = produce_hop(
+                    codecs_ro[h.from as usize].as_ref(),
+                    &pres[h.from as usize],
+                    &mut inbox[idx],
+                    ranges[h.chunk as usize].clone(),
+                    &ctx,
+                    &mut workers[h.from as usize],
+                    &mut out,
+                    bufs,
+                    &mut counters,
+                );
+                let range = ranges[h.chunk as usize].clone();
+                let rcodec = codecs_ro[h.to as usize].as_ref();
+                let mut validate = |bytes: &[u8]| {
+                    rcodec
+                        .validate_payload(bytes, range.clone(), &ctx, &mut vscratch)
+                        .map_err(|e| e.to_string())
+                };
+                let res = resolve_send(
+                    plan, policy, round, h.from, h.to, h.chunk, &out, &mut validate,
+                );
+                stats.absorb(&res);
+                stage_retry_s += res.retry_latency_s;
+                let attempts = 1 + res.retransmits as u64;
+                stage_msgs.push((
+                    out.len() as u64 * attempts,
+                    self.topology.link_class(h.from, h.to),
+                    self.topology.node_of(h.from),
+                    self.topology.node_of(h.to),
+                ));
+                report.rs_bytes += out.len() as u64 * attempts;
+                match res.outcome {
+                    SendOutcome::Deliver { payload, .. } => {
+                        bufs.push(out);
+                        inbox[h.to as usize * n + h.chunk as usize].push((payload, summed));
+                    }
+                    SendOutcome::Gap { .. } => bufs.push(out),
+                    SendOutcome::Abort { error } => {
+                        bufs.push(out);
+                        for v in inbox.iter_mut() {
+                            for (buf, _) in v.drain(..) {
+                                bufs.push(buf);
+                            }
+                        }
+                        report.absorb(&counters);
+                        return Ok(ChaosRound {
+                            result: vec![0.0; d],
+                            report,
+                            outcome: RoundOutcome::Aborted { reason: error },
+                            stats,
+                        });
+                    }
+                }
+            }
+            let dt = self.net.stage_time_congested(&stage_msgs, now) + stage_retry_s;
+            now += dt;
+            report.rs_time_s += dt;
+            report.stage_times_s.push(dt);
+        }
+
+        // ---- sink finalize: live chunk owners fuse their chunk; a dead
+        // sink leaves its chunk with no aggregate ----
+        let mut broadcast: Vec<Option<(Vec<u8>, u32)>> = (0..n).map(|_| None).collect();
+        for c in 0..n as u32 {
+            let idx = c as usize * n + c as usize;
+            if dead_workers.contains(&c) {
+                for (buf, _) in inbox[idx].drain(..) {
+                    bufs.push(buf);
+                }
+                continue;
+            }
+            let ctx = hop_context(&self.topology, n, round, c, c);
+            let mut out = match bufs.pop() {
+                Some(mut b) => {
+                    b.clear();
+                    b
+                }
+                None => Vec::new(),
+            };
+            let summed = produce_hop(
+                codecs_ro[c as usize].as_ref(),
+                &pres[c as usize],
+                &mut inbox[idx],
+                ranges[c as usize].clone(),
+                &ctx,
+                &mut workers[c as usize],
+                &mut out,
+                bufs,
+                &mut counters,
+            );
+            have[c as usize * n + c as usize] = true;
+            broadcast[c as usize] = Some((out, summed));
+        }
+
+        // ---- all-gather: the forwarding tree under fault draws ----
+        let ag_sched = self.topology.all_gather(n);
+        for hops in &ag_sched {
+            stage_msgs.clear();
+            let mut stage_retry_s = 0.0;
+            for h in hops {
+                let c = h.chunk as usize;
+                if dead_workers.contains(&h.from) || !have[h.from as usize * n + c] {
+                    continue; // nothing to forward — no bytes on the wire
+                }
+                let (payload, _) = broadcast[c].as_ref().expect("holder implies a live sink");
+                let range = ranges[c].clone();
+                let ctx = hop_context(&self.topology, n, round, h.from, h.to);
+                let rcodec = codecs_ro[h.to as usize].as_ref();
+                let mut validate = |bytes: &[u8]| {
+                    rcodec
+                        .validate_payload(bytes, range.clone(), &ctx, &mut vscratch)
+                        .map_err(|e| e.to_string())
+                };
+                let res = resolve_send(
+                    plan, policy, round, h.from, h.to, h.chunk, payload, &mut validate,
+                );
+                stats.absorb(&res);
+                stage_retry_s += res.retry_latency_s;
+                let attempts = 1 + res.retransmits as u64;
+                stage_msgs.push((
+                    payload.len() as u64 * attempts,
+                    self.topology.link_class(h.from, h.to),
+                    self.topology.node_of(h.from),
+                    self.topology.node_of(h.to),
+                ));
+                report.ag_bytes += payload.len() as u64 * attempts;
+                match res.outcome {
+                    SendOutcome::Deliver { .. } => have[h.to as usize * n + c] = true,
+                    SendOutcome::Gap { .. } => {}
+                    SendOutcome::Abort { error } => {
+                        for e in broadcast.iter_mut() {
+                            if let Some((buf, _)) = e.take() {
+                                bufs.push(buf);
+                            }
+                        }
+                        report.absorb(&counters);
+                        return Ok(ChaosRound {
+                            result: vec![0.0; d],
+                            report,
+                            outcome: RoundOutcome::Aborted { reason: error },
+                            stats,
+                        });
+                    }
+                }
+            }
+            let dt = self.net.stage_time_congested(&stage_msgs, now) + stage_retry_s;
+            now += dt;
+            report.ag_time_s += dt;
+        }
+
+        // ---- decode (worker 0's view) through the fallible forms ----
+        let mut summed_pre = vec![0.0f32; padded];
+        for c in 0..n {
+            let range = ranges[c].clone();
+            let slot = broadcast[c].take();
+            if range.is_empty() {
+                if let Some((buf, _)) = slot {
+                    bufs.push(buf);
+                }
+                continue;
+            }
+            let decoded = match (have[c], slot) {
+                (true, Some((payload, k))) => {
+                    let ok = codecs_ro[0]
+                        .try_decompress_pooled(
+                            &payload,
+                            range.clone(),
+                            &mk_ctx(0, k),
+                            &mut workers[0],
+                            &mut summed_pre[range.clone()],
+                        )
+                        .is_ok();
+                    if ok {
+                        report.decompress_calls += 1;
+                    }
+                    bufs.push(payload);
+                    ok
+                }
+                (_, slot) => {
+                    if let Some((buf, _)) = slot {
+                        bufs.push(buf);
+                    }
+                    false
+                }
+            };
+            if !decoded {
+                // graceful degradation: the worker falls back to its own
+                // contribution for the starved chunk
+                summed_pre[range.clone()].copy_from_slice(&pres[0][range]);
+                stats.substituted += 1;
+            }
+        }
+
+        // ---- postprocess: identical to run_pooled ----
+        let result = {
+            let sp = &summed_pre;
+            let outs = self.par_map_codecs(codecs, 1, |i, c| {
+                c.end_round(sp.clone(), &mk_ctx(i as u32, n as u32))
+            });
+            outs.into_iter().next().expect("n >= 1 workers")
+        };
+        report.absorb(&counters);
+        report.overflow_events = codecs.iter().map(|c| c.overflow_count()).sum();
+        if self.measure_vnmse {
+            let mut exact = vec![0.0f64; d];
+            for g in grads {
+                for (e, &v) in exact.iter_mut().zip(g) {
+                    *e += v as f64;
+                }
+            }
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (e, &r) in exact.iter().zip(result.iter()) {
+                let diff = e - r as f64;
+                num += diff * diff;
+                den += e * e;
+            }
+            report.vnmse = if den > 0.0 { num / den } else { 0.0 };
+        }
+        let outcome = stats.outcome();
+        Ok(ChaosRound { result, report, outcome, stats })
     }
 
     /// [`AllReduceEngine::run_pooled`] with bucketed pipelining: the

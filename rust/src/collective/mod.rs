@@ -21,8 +21,8 @@ pub mod network;
 pub mod topology;
 
 pub use allreduce::{
-    bucket_of, build_bucket_chains, hop_context, produce_hop, AllReduceEngine, KernelCounters,
-    PipelineCfg, RoundReport,
+    bucket_of, build_bucket_chains, hop_context, produce_hop, AllReduceEngine, ChaosRound,
+    KernelCounters, PipelineCfg, RoundReport,
 };
 pub use hierarchy::LevelSpec;
 pub use network::{

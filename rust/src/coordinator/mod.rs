@@ -41,6 +41,9 @@ use crate::collective::allreduce::{
 use crate::collective::network::{pipeline_compute_time, price_pipeline, LinkClass, NetworkModel};
 use crate::collective::topology::{Hop, Topology};
 use crate::metrics::memtraffic::traffic_model;
+use crate::sim::{
+    resolve_send, ChaosStats, FaultPlan, RecoveryPolicy, RoundOutcome, SendOutcome,
+};
 use crate::util::pool::WorkerPool;
 
 /// A framed message on a worker-to-worker link.
@@ -52,6 +55,12 @@ enum Msg {
     /// to the engine's stage-ordered schedule even when a fast peer runs
     /// ahead (f32 addition is not associative).
     Chunk(u8, u32, u32, Vec<u8>, u32),
+    /// (phase, stage, chunk): the sender resolved this payload as lost
+    /// under fault injection (exhausted retries, degrade policy, or a
+    /// dead worker's zombie emission). Receivers count it against their
+    /// expected-sender accounting and proceed — a gap is a *known*
+    /// missing contribution, never a silent stall.
+    Gap(u8, u32, u32),
 }
 
 struct Links {
@@ -116,6 +125,9 @@ pub struct WorkerRound {
     pub padded: usize,
     /// every payload this worker sent, in schedule order
     pub sends: Vec<SendRecord>,
+    /// this worker's fault tally (all-zero without a fault plan);
+    /// [`Coordinator::chaos_summary`] merges the per-worker tallies
+    pub chaos: ChaosStats,
 }
 
 impl WorkerRound {
@@ -203,9 +215,22 @@ pub struct Coordinator {
     n: usize,
     pool: WorkerPool,
     workers: Vec<CoWorker>,
-    /// set when a round failed (panic or recv error): channels may hold
-    /// stray messages, so later rounds would desynchronize — refuse them
+    /// set when a round failed (panic, recv error or chaos abort):
+    /// channels may hold stray messages, so the next round first drains
+    /// them back to a clean state ([`Coordinator::run_round`] recovers
+    /// automatically)
     failed: bool,
+    /// seeded wire faults + worker deaths injected at every send
+    /// boundary through [`resolve_send`] — the same draws, keyed by
+    /// `(round, from, to, chunk, attempt)`, that the two engine
+    /// backends make for the same hops. [`FaultPlan::none`] (default)
+    /// is the bit-identity configuration.
+    pub fault_plan: FaultPlan,
+    /// what a sender does when a fault is detected (validation is
+    /// performed sender-side with its own codec — schemes are
+    /// homogeneous across workers, so the structural verdict matches
+    /// the receiver's)
+    pub recovery: RecoveryPolicy,
 }
 
 impl Coordinator {
@@ -239,6 +264,8 @@ impl Coordinator {
             pool: WorkerPool::new(n.saturating_sub(1)),
             workers,
             failed: false,
+            fault_plan: FaultPlan::none(),
+            recovery: RecoveryPolicy::Retry { max_attempts: 3 },
         })
     }
 
@@ -256,24 +283,27 @@ impl Coordinator {
     /// its peers cannot fast-fail (the mesh's senders live in the
     /// coordinator, so channels never hang up) but their 60 s
     /// `recv_timeout` bounds the stall — the round then returns `Err`.
-    /// Any failed round leaves channels in an unknown state, so the
-    /// coordinator marks itself poisoned and refuses further rounds;
-    /// rebuild it with [`Coordinator::new`].
+    /// A failed round leaves channels in an unknown state, so the
+    /// coordinator marks itself failed and the **next** `run_round`
+    /// first drains every channel and parking queue back to a clean
+    /// state ([`Coordinator::recover`]) — a failed round costs its
+    /// caller one `Err`, not the coordinator.
     pub fn run_round(&mut self, grads: &[Vec<f32>], round: u32) -> Result<Vec<WorkerRound>> {
         assert_eq!(grads.len(), self.n, "gradient count must match the codec set");
         if self.failed {
-            return Err(anyhow!(
-                "coordinator is poisoned by an earlier failed round; build a new one"
-            ));
+            self.recover();
         }
         let rs_sched = self.topology.reduce_scatter(self.n);
         let ag_sched = self.topology.all_gather(self.n);
         let (topology, n) = (self.topology, self.n);
+        let plan = self.fault_plan;
+        let policy = self.recovery;
         let workers = &mut self.workers;
         let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             self.pool.run(workers, n, |i, st| {
-                st.result =
-                    Some(run_worker(st, &grads[i], n, round, topology, &rs_sched, &ag_sched));
+                st.result = Some(run_worker(
+                    st, &grads[i], n, round, topology, &rs_sched, &ag_sched, &plan, policy,
+                ));
             });
         }));
         if run.is_err() {
@@ -289,6 +319,40 @@ impl Coordinator {
             self.failed = true;
         }
         out
+    }
+
+    /// Drain the mesh back to a clean state after a failed round: every
+    /// in-flight message still sitting in a channel is received and
+    /// dropped, per-worker parking queues and stale results are
+    /// cleared, and the arena free lists survive (they hold capacity,
+    /// not round state). By the time a failed `run_round` has returned,
+    /// all worker threads have passed the pool barrier, so nothing
+    /// races the drain. Called automatically at the start of the next
+    /// round; public so callers can pay the drain cost eagerly.
+    pub fn recover(&mut self) {
+        for cw in self.workers.iter_mut() {
+            while cw.rx.try_recv().is_ok() {}
+            cw.pending.clear();
+            cw.result = None;
+        }
+        self.failed = false;
+    }
+
+    /// Merge a completed round's per-worker fault tallies into the
+    /// round-level accounting plus its typed [`RoundOutcome`] — the
+    /// coordinator's counterpart of what the engine backends report
+    /// directly. `round` must be the value passed to
+    /// [`Coordinator::run_round`] (death draws re-derive from it).
+    pub fn chaos_summary(&self, round: u32, rounds: &[WorkerRound]) -> (ChaosStats, RoundOutcome) {
+        let mut total = ChaosStats::default();
+        for wr in rounds {
+            total.merge(&wr.chaos);
+        }
+        total.dead_workers =
+            (0..self.n as u32).filter(|&x| self.fault_plan.dies(round, x)).collect();
+        let outcome =
+            if self.fault_plan.is_none() { RoundOutcome::Clean } else { total.outcome() };
+        (total, outcome)
     }
 
     /// Price a completed round's communication on `net`, exactly as the
@@ -448,6 +512,7 @@ pub fn threaded_allreduce(
     coordinator.run_round(&grads, round)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_worker(
     st: &mut CoWorker,
     grad: &[f32],
@@ -456,8 +521,17 @@ fn run_worker(
     topology: Topology,
     rs_sched: &[Vec<Hop>],
     ag_sched: &[Vec<Hop>],
+    plan: &FaultPlan,
+    policy: RecoveryPolicy,
 ) -> Result<WorkerRound> {
     let w = st.w;
+    let chaos_on = !plan.is_none();
+    // a dead worker completes the (cheap) metadata exchange, then turns
+    // zombie: every scheduled send becomes an explicit Gap so peers
+    // never block on its silence
+    let is_dead = chaos_on && plan.dies(round, w);
+    let mut chaos = ChaosStats::default();
+    let mut aborted: Option<String> = None;
     // Round-boundary / sink / decode contexts ride the broadcast class
     // (the final sum's nominal budget); per-send contexts carry the hop's
     // level — both mirror the engine exactly, which is what keeps the two
@@ -514,13 +588,38 @@ fn run_worker(
     let arenas = &mut st.arenas;
     let mut counters = KernelCounters::default();
     let mut incoming: HashMap<u32, Vec<(Vec<u8>, u32)>> = HashMap::new();
+    // Gap messages received per chunk: they satisfy the expected-sender
+    // accounting below (a gapped contribution is *known* missing, not
+    // merely late)
+    let mut gaps: HashMap<u32, u32> = HashMap::new();
     let mut rs_bytes = 0u64;
     for (stage, hops) in rs_sched.iter().enumerate() {
         let my_sends: Vec<&Hop> = hops.iter().filter(|h| h.from == w).collect();
         let my_recvs = hops.iter().filter(|h| h.to == w).count();
         for h in my_sends {
+            if is_dead || aborted.is_some() {
+                if let Some(rcv) = incoming.remove(&h.chunk) {
+                    for (b, _) in rcv {
+                        arenas.push(b);
+                    }
+                }
+                sends.push(SendRecord { phase: 0, stage: stage as u32, chunk: h.chunk, bytes: 0 });
+                tx[&h.to]
+                    .send((w, Msg::Gap(0, stage as u32, h.chunk)))
+                    .map_err(|_| anyhow!("send"))?;
+                continue;
+            }
             let range = ranges[h.chunk as usize].clone();
             let mut received = incoming.remove(&h.chunk).unwrap_or_default();
+            let expected = inbound_before(rs_sched, stage, w, h.chunk);
+            let got = received.len() as u32 + gaps.remove(&h.chunk).unwrap_or(0);
+            if got != expected {
+                return Err(anyhow!(
+                    "worker {w}: chunk {} expects {expected} inbound payloads before its \
+                     stage-{stage} send, got {got} — a sender is missing",
+                    h.chunk
+                ));
+            }
             let mut payload = arenas.pop().unwrap_or_default();
             payload.clear();
             let summed = produce_hop(
@@ -534,28 +633,80 @@ fn run_worker(
                 arenas,
                 &mut counters,
             );
-            rs_bytes += payload.len() as u64;
-            sends.push(SendRecord {
-                phase: 0,
-                stage: stage as u32,
-                chunk: h.chunk,
-                bytes: payload.len() as u64,
-            });
-            tx[&h.to]
-                .send((w, Msg::Chunk(0, stage as u32, h.chunk, payload, summed)))
-                .map_err(|_| anyhow!("send"))?;
+            if chaos_on {
+                let vctx = hop_ctx(h.to);
+                let res = {
+                    let vrange = ranges[h.chunk as usize].clone();
+                    let mut validate = |bytes: &[u8]| {
+                        codec
+                            .validate_payload(bytes, vrange.clone(), &vctx, scratch)
+                            .map_err(|e| e.to_string())
+                    };
+                    resolve_send(plan, policy, round, w, h.to, h.chunk, &payload, &mut validate)
+                };
+                chaos.absorb(&res);
+                // every attempt transited the wire — price them all
+                let bytes = payload.len() as u64 * (1 + res.retransmits as u64);
+                rs_bytes += bytes;
+                sends.push(SendRecord { phase: 0, stage: stage as u32, chunk: h.chunk, bytes });
+                arenas.push(payload);
+                let msg = match res.outcome {
+                    SendOutcome::Deliver { payload: wire, .. } => {
+                        Msg::Chunk(0, stage as u32, h.chunk, wire, summed)
+                    }
+                    SendOutcome::Gap { .. } => Msg::Gap(0, stage as u32, h.chunk),
+                    SendOutcome::Abort { error } => {
+                        aborted = Some(error);
+                        Msg::Gap(0, stage as u32, h.chunk)
+                    }
+                };
+                tx[&h.to].send((w, msg)).map_err(|_| anyhow!("send"))?;
+            } else {
+                rs_bytes += payload.len() as u64;
+                sends.push(SendRecord {
+                    phase: 0,
+                    stage: stage as u32,
+                    chunk: h.chunk,
+                    bytes: payload.len() as u64,
+                });
+                tx[&h.to]
+                    .send((w, Msg::Chunk(0, stage as u32, h.chunk, payload, summed)))
+                    .map_err(|_| anyhow!("send"))?;
+            }
         }
         for _ in 0..my_recvs {
-            let (c, payload, summed) = recv_chunk(rx, pending, 0, stage as u32)?;
-            incoming.entry(c).or_default().push((payload, summed));
+            match recv_chunk(rx, pending, 0, stage as u32)? {
+                (c, Some((payload, summed))) => {
+                    incoming.entry(c).or_default().push((payload, summed));
+                }
+                (c, None) => {
+                    *gaps.entry(c).or_default() += 1;
+                }
+            }
         }
     }
 
     // ---- sink finalize: chunk w's broadcast payload ----
     let mut broadcast: HashMap<u32, (Vec<u8>, u32)> = HashMap::new();
-    {
+    if is_dead {
+        // the dead sink never finalizes: its chunk starves and every
+        // downstream forward of it becomes a gap
+        if let Some(rcv) = incoming.remove(&w) {
+            for (b, _) in rcv {
+                arenas.push(b);
+            }
+        }
+    } else {
         let range = ranges[w as usize].clone();
         let mut received = incoming.remove(&w).unwrap_or_default();
+        let expected = inbound_before(rs_sched, rs_sched.len(), w, w);
+        let got = received.len() as u32 + gaps.remove(&w).unwrap_or(0);
+        if got != expected {
+            return Err(anyhow!(
+                "worker {w}: sink chunk {w} expects {expected} inbound payloads before \
+                 finalize, got {got} — a sender is missing"
+            ));
+        }
         let mut payload = arenas.pop().unwrap_or_default();
         payload.clear();
         let summed = produce_hop(
@@ -569,7 +720,9 @@ fn run_worker(
             arenas,
             &mut counters,
         );
-        debug_assert_eq!(summed, n as u32);
+        // gaps and dead senders thin the sink's inbox under fault
+        // injection; the full count only holds on the clean path
+        debug_assert!(chaos_on || summed == n as u32);
         broadcast.insert(w, (payload, summed));
     }
 
@@ -579,35 +732,130 @@ fn run_worker(
         let my_sends: Vec<&Hop> = hops.iter().filter(|h| h.from == w).collect();
         let my_recvs = hops.iter().filter(|h| h.to == w).count();
         for h in my_sends {
-            let (payload, summed) = broadcast
-                .get(&h.chunk)
-                .ok_or_else(|| anyhow!("worker {w} lacks chunk {} to forward", h.chunk))?
-                .clone();
-            ag_bytes += payload.len() as u64;
-            sends.push(SendRecord {
-                phase: 1,
-                stage: stage as u32,
-                chunk: h.chunk,
-                bytes: payload.len() as u64,
-            });
-            tx[&h.to]
-                .send((w, Msg::Chunk(1, stage as u32, h.chunk, payload, summed)))
-                .map_err(|_| anyhow!("send"))?;
+            if is_dead || aborted.is_some() {
+                sends.push(SendRecord { phase: 1, stage: stage as u32, chunk: h.chunk, bytes: 0 });
+                tx[&h.to]
+                    .send((w, Msg::Gap(1, stage as u32, h.chunk)))
+                    .map_err(|_| anyhow!("send"))?;
+                continue;
+            }
+            let (payload, summed) = match broadcast.get(&h.chunk) {
+                Some(e) => e.clone(),
+                None if chaos_on => {
+                    // the chunk's aggregate was starved upstream (gapped
+                    // delivery or dead sink): propagate the gap
+                    sends.push(SendRecord {
+                        phase: 1,
+                        stage: stage as u32,
+                        chunk: h.chunk,
+                        bytes: 0,
+                    });
+                    tx[&h.to]
+                        .send((w, Msg::Gap(1, stage as u32, h.chunk)))
+                        .map_err(|_| anyhow!("send"))?;
+                    continue;
+                }
+                None => return Err(anyhow!("worker {w} lacks chunk {} to forward", h.chunk)),
+            };
+            if chaos_on {
+                let vctx = hop_ctx(h.to);
+                let res = {
+                    let vrange = ranges[h.chunk as usize].clone();
+                    let mut validate = |bytes: &[u8]| {
+                        codec
+                            .validate_payload(bytes, vrange.clone(), &vctx, scratch)
+                            .map_err(|e| e.to_string())
+                    };
+                    resolve_send(plan, policy, round, w, h.to, h.chunk, &payload, &mut validate)
+                };
+                chaos.absorb(&res);
+                let bytes = payload.len() as u64 * (1 + res.retransmits as u64);
+                ag_bytes += bytes;
+                sends.push(SendRecord { phase: 1, stage: stage as u32, chunk: h.chunk, bytes });
+                arenas.push(payload);
+                let msg = match res.outcome {
+                    SendOutcome::Deliver { payload: wire, .. } => {
+                        Msg::Chunk(1, stage as u32, h.chunk, wire, summed)
+                    }
+                    SendOutcome::Gap { .. } => Msg::Gap(1, stage as u32, h.chunk),
+                    SendOutcome::Abort { error } => {
+                        aborted = Some(error);
+                        Msg::Gap(1, stage as u32, h.chunk)
+                    }
+                };
+                tx[&h.to].send((w, msg)).map_err(|_| anyhow!("send"))?;
+            } else {
+                ag_bytes += payload.len() as u64;
+                sends.push(SendRecord {
+                    phase: 1,
+                    stage: stage as u32,
+                    chunk: h.chunk,
+                    bytes: payload.len() as u64,
+                });
+                tx[&h.to]
+                    .send((w, Msg::Chunk(1, stage as u32, h.chunk, payload, summed)))
+                    .map_err(|_| anyhow!("send"))?;
+            }
         }
         for _ in 0..my_recvs {
-            let (c, payload, summed) = recv_chunk(rx, pending, 1, stage as u32)?;
-            broadcast.insert(c, (payload, summed));
+            if let (c, Some((payload, summed))) = recv_chunk(rx, pending, 1, stage as u32)? {
+                broadcast.insert(c, (payload, summed));
+            }
         }
     }
 
-    // ---- decode + postprocess ----
+    // ---- abort surfaces only after the schedule walk: every peer has
+    // been fed its expected messages (as gaps), so nobody stalls ----
+    if let Some(e) = aborted {
+        for (_, (payload, _)) in broadcast {
+            arenas.push(payload);
+        }
+        debug_assert!(pending.is_empty(), "messages leaked across the round boundary");
+        return Err(anyhow!("worker {w}: round aborted under fault injection: {e}"));
+    }
+
+    // ---- decode + postprocess. Under a fault plan the decode is
+    // fallible, and a chunk with no surviving aggregate (gapped
+    // delivery chain or dead sink) falls back to the local
+    // contribution — the same graceful degradation as the engines. ----
     let mut summed_pre = vec![0.0f32; pre.len()];
-    for (c, (payload, k)) in &broadcast {
-        let range = ranges[*c as usize].clone();
+    for c in 0..n as u32 {
+        let range = ranges[c as usize].clone();
         if range.is_empty() {
             continue;
         }
-        codec.decompress_pooled(payload, range.clone(), &ctx(*k), scratch, &mut summed_pre[range]);
+        match broadcast.get(&c) {
+            Some((payload, k)) => {
+                if chaos_on {
+                    let decoded = codec
+                        .try_decompress_pooled(
+                            payload,
+                            range.clone(),
+                            &ctx(*k),
+                            scratch,
+                            &mut summed_pre[range.clone()],
+                        )
+                        .is_ok();
+                    if !decoded {
+                        summed_pre[range.clone()].copy_from_slice(&pre[range]);
+                        chaos.substituted += 1;
+                    }
+                } else {
+                    codec.decompress_pooled(
+                        payload,
+                        range.clone(),
+                        &ctx(*k),
+                        scratch,
+                        &mut summed_pre[range],
+                    );
+                }
+            }
+            None if chaos_on => {
+                summed_pre[range.clone()].copy_from_slice(&pre[range]);
+                chaos.substituted += 1;
+            }
+            None => return Err(anyhow!("worker {w}: chunk {c} never arrived")),
+        }
     }
     // recycle the round's broadcast arenas into the warm free list
     for (_, (payload, _)) in broadcast {
@@ -624,7 +872,22 @@ fn run_worker(
         meta_len,
         padded: pre.len(),
         sends,
+        chaos,
     })
+}
+
+/// Number of payloads worker `w` must have received for `chunk` before
+/// its own send (or sink finalize) at `stage` — the hops delivering
+/// that chunk to `w` in all strictly earlier reduce-scatter stages.
+/// The explicit count turns a silently-empty inbox into a loud
+/// missing-sender error; received [`Msg::Gap`]s count (a gapped
+/// contribution is accounted for, not missing).
+fn inbound_before(rs_sched: &[Vec<Hop>], stage: usize, w: u32, chunk: u32) -> u32 {
+    rs_sched[..stage]
+        .iter()
+        .flat_map(|hops| hops.iter())
+        .filter(|h| h.to == w && h.chunk == chunk)
+        .count() as u32
 }
 
 fn recv_from(rx: &Receiver<(u32, Msg)>) -> Result<(u32, Msg)> {
@@ -650,26 +913,34 @@ fn recv_meta(
     }
 }
 
-/// Receive the next Chunk of the given (phase, stage), parking others.
+/// Receive the next Chunk **or Gap** of the given (phase, stage),
+/// parking others. A gap returns `(chunk, None)`: the sender resolved
+/// that payload as lost, so the receiver proceeds without it instead of
+/// blocking on bytes that will never arrive.
+#[allow(clippy::type_complexity)]
 fn recv_chunk(
     rx: &Receiver<(u32, Msg)>,
     pending: &mut std::collections::VecDeque<(u32, Msg)>,
     phase: u8,
     stage: u32,
-) -> Result<(u32, Vec<u8>, u32)> {
-    let matches_tag =
-        |m: &Msg| matches!(m, Msg::Chunk(ph, st, ..) if *ph == phase && *st == stage);
+) -> Result<(u32, Option<(Vec<u8>, u32)>)> {
+    let matches_tag = |m: &Msg| match m {
+        Msg::Chunk(ph, st, ..) | Msg::Gap(ph, st, _) => *ph == phase && *st == stage,
+        Msg::Meta(_) => false,
+    };
+    let unpack = |m: Msg| match m {
+        Msg::Chunk(_, _, c, p, s) => (c, Some((p, s))),
+        Msg::Gap(_, _, c) => (c, None),
+        Msg::Meta(_) => unreachable!("tag match excludes Meta"),
+    };
     if let Some(pos) = pending.iter().position(|(_, m)| matches_tag(m)) {
-        if let Some((_, Msg::Chunk(_, _, c, p, s))) = pending.remove(pos) {
-            return Ok((c, p, s));
-        }
+        let (_, m) = pending.remove(pos).expect("position is in range");
+        return Ok(unpack(m));
     }
     loop {
         let (from, m) = recv_from(rx)?;
         if matches_tag(&m) {
-            if let Msg::Chunk(_, _, c, p, s) = m {
-                return Ok((c, p, s));
-            }
+            return Ok(unpack(m));
         }
         pending.push_back((from, m));
     }
@@ -810,6 +1081,130 @@ mod tests {
             assert_eq!(wr.aggregated, out[0].aggregated);
         }
         assert!(out.iter().all(|w| w.rs_bytes_sent > 0));
+    }
+
+    #[test]
+    fn inbound_accounting_matches_the_schedule() {
+        // soundness of the missing-sender check: every delivery of a
+        // chunk to a worker happens in a stage strictly before that
+        // worker's own send of it (the aggregation arborescence is
+        // stage-ordered), so counting earlier stages counts everything
+        use crate::collective::topology::Level;
+        for (topo, n) in [
+            (Topology::Ring, 5),
+            (Topology::Butterfly, 8),
+            (Topology::hierarchical(Level::Ring, Level::Butterfly, 4), 16),
+        ] {
+            let rs = topo.reduce_scatter(n);
+            for (s, hops) in rs.iter().enumerate() {
+                for h in hops {
+                    assert_eq!(
+                        inbound_before(&rs, s, h.from, h.chunk),
+                        inbound_before(&rs, rs.len(), h.from, h.chunk),
+                        "{}: worker {} would send chunk {} before receiving it",
+                        topo.name(),
+                        h.from,
+                        h.chunk
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn failed_round_recovers_without_rebuild() {
+        // a failed round used to poison the coordinator for good; now
+        // the next round drains the mesh and runs clean on the same
+        // channels, scratch and pool
+        let n = 4;
+        let mut coordinator = Coordinator::new(Topology::Ring, make_codecs("BF16", n)).unwrap();
+        coordinator.fault_plan = FaultPlan::uniform(7, 0.9);
+        coordinator.recovery = RecoveryPolicy::Abort;
+        let g = grads(n, 4096, 77);
+        let err = coordinator.run_round(&g, 0).expect_err("all-faults + Abort must fail");
+        assert!(err.to_string().contains("aborted under fault injection"), "{err}");
+        // clean plan, same coordinator: bit-identical to a fresh engine
+        coordinator.fault_plan = FaultPlan::none();
+        let g = grads(n, 4096, 78);
+        let mut eng_codecs = make_codecs("BF16", n);
+        let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+        let (expect, _) = eng.run(&g, &mut eng_codecs, 1, 0.0).unwrap();
+        let out = coordinator.run_round(&g, 1).expect("recovered coordinator must run");
+        for wr in &out {
+            assert_eq!(wr.aggregated, expect, "post-recovery worker {} diverged", wr.worker);
+            assert!(wr.rs_bytes_sent > 0);
+        }
+    }
+
+    #[test]
+    fn retried_faults_keep_values_bit_identical_with_crc() {
+        // drop/truncate/bitflip at 15% per attempt, CRC-framed wire, a
+        // generous retry budget: every fault is detected (CRC catches
+        // structure-preserving flips) and repaired by retransmission,
+        // so values match the fault-free engine bit for bit
+        let n = 4;
+        let spec = "DynamiQ:wire=packed+crc";
+        let g = grads(n, 4096, 91);
+        let mut eng_codecs = make_codecs(spec, n);
+        let eng = AllReduceEngine::new(Topology::Ring, NetworkModel::isolated_100g());
+        let (expect, _) = eng.run(&g, &mut eng_codecs, 3, 0.0).unwrap();
+        let mut coordinator = Coordinator::new(Topology::Ring, make_codecs(spec, n)).unwrap();
+        coordinator.fault_plan = FaultPlan::uniform(13, 0.15);
+        coordinator.recovery = RecoveryPolicy::Retry { max_attempts: 16 };
+        let out = coordinator.run_round(&g, 3).unwrap();
+        for wr in &out {
+            assert_eq!(wr.aggregated, expect, "worker {} diverged under recovery", wr.worker);
+        }
+        let (stats, outcome) = coordinator.chaos_summary(3, &out);
+        assert!(stats.injected > 0, "15% across every send must fire");
+        assert_eq!(stats.silent, 0, "CRC framing must catch every corruption");
+        assert_eq!(stats.substituted, 0, "the retry budget must repair every fault");
+        assert!(stats.retransmits > 0);
+        assert_eq!(outcome.tag(), "recovered");
+    }
+
+    #[test]
+    fn degrade_policy_terminates_with_typed_outcome() {
+        let n = 4;
+        let g = grads(n, 2048, 17);
+        let mut coordinator = Coordinator::new(Topology::Ring, make_codecs("BF16", n)).unwrap();
+        coordinator.fault_plan = FaultPlan::uniform(5, 0.5);
+        coordinator.recovery = RecoveryPolicy::Degrade;
+        let out = coordinator.run_round(&g, 0).expect("degrade never fails the round");
+        let (stats, outcome) = coordinator.chaos_summary(0, &out);
+        assert!(stats.injected > 0);
+        assert!(stats.substituted > 0, "degrade turns every detected fault into a gap");
+        assert_eq!(outcome.tag(), "degraded");
+        // the same coordinator still runs clean rounds afterwards
+        coordinator.fault_plan = FaultPlan::none();
+        let out = coordinator.run_round(&g, 1).unwrap();
+        let (_, outcome) = coordinator.chaos_summary(1, &out);
+        assert_eq!(outcome.tag(), "clean");
+        for wr in &out[1..] {
+            assert_eq!(wr.aggregated, out[0].aggregated);
+        }
+    }
+
+    #[test]
+    fn dead_worker_round_terminates_and_next_round_runs_clean() {
+        let n = 4;
+        let g = grads(n, 2048, 29);
+        let mut coordinator = Coordinator::new(Topology::Ring, make_codecs("BF16", n)).unwrap();
+        coordinator.fault_plan =
+            FaultPlan { seed: 3, drop: 0.0, truncate: 0.0, bitflip: 0.0, death: 0.4 };
+        let round = (0..100)
+            .find(|&r| (0..n as u32).any(|x| coordinator.fault_plan.dies(r, x)))
+            .expect("a 40% death rate must kill someone within 100 rounds");
+        let out = coordinator.run_round(&g, round).expect("zombie gaps keep peers unblocked");
+        let (stats, outcome) = coordinator.chaos_summary(round, &out);
+        assert!(!stats.dead_workers.is_empty());
+        assert_eq!(outcome.tag(), "degraded");
+        // survivors terminated; the next clean round agrees everywhere
+        coordinator.fault_plan = FaultPlan::none();
+        let out = coordinator.run_round(&g, round + 1).unwrap();
+        for wr in &out[1..] {
+            assert_eq!(wr.aggregated, out[0].aggregated);
+        }
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! Chaos sweep (`repro --id chaos`): the fault-tolerance layer under a
+//! deterministic fault grid, in three parts:
+//!
+//! 1. **Policy grid** — the sync engine's [`AllReduceEngine::run_chaos`]
+//!    over fault rate × [`RecoveryPolicy`] × wire (plain vs `+crc`):
+//!    recovered-round fraction, added comm latency and vNMSE delta vs
+//!    the fault-free baseline (the rate-0 cell, which delegates to
+//!    `run_pooled` and is bit-identical to it).
+//! 2. **Event-backend cross-check** — the same plans on the
+//!    [`EventEngine`]: identical seeded draws resolve identically, so
+//!    gap-free cells must report the same fault tallies and outcomes
+//!    (`python/validate_chaos.py` asserts the match).
+//! 3. **Worker death + rebuild** — a death-bearing plan under
+//!    `Degrade`; the driver removes reported dead workers after the
+//!    round and rebuilds the schedule at the surviving count — the
+//!    membership-churn discipline of the fleet sweep, driven by faults.
+//!
+//! All JSON rows are tagged `"tag": "chaos"` with a `"kind"` field
+//! (`policy` / `event` / `death`). `python/validate_chaos.py` re-derives
+//! the seeded fault draws from a port of the keyed hash, checks the
+//! accounting identities on every row, and lower-bounds the CRC+retry
+//! cells' recovered fraction analytically — the acceptance criterion.
+
+use anyhow::Result;
+
+use super::hierarchy::grads;
+use super::Ctx;
+use crate::codec::{CodecSpec, GradCodec, ScratchPool};
+use crate::collective::{AllReduceEngine, NetworkModel, Topology};
+use crate::sim::{ChaosStats, EventEngine, FaultPlan, FleetScratch, RecoveryPolicy};
+use crate::util::benchkit::Table;
+use crate::util::json::Json;
+use crate::util::par;
+
+/// Per-worker codec set from a static, known-valid sweep spec.
+fn mk_codecs(spec: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+    spec.parse::<CodecSpec>().expect("sweep codec specs are valid").build_n(n)
+}
+
+/// Grid shape shared by the sync and event parts.
+const CHAOS_N: usize = 8;
+const CHAOS_D: usize = 1 << 14;
+const CHAOS_SEED: u32 = 41;
+
+/// Fault-eligible logical sends per round: every reduce-scatter hop and
+/// every all-gather hop of the schedule (the set both backends pass
+/// through [`crate::sim::resolve_send`] when nobody gaps or dies).
+fn sends_per_round(topo: &Topology, n: usize) -> usize {
+    let rs: usize = topo.reduce_scatter(n).iter().map(Vec::len).sum();
+    let ag: usize = topo.all_gather(n).iter().map(Vec::len).sum();
+    rs + ag
+}
+
+/// One grid cell: plan inputs plus tallies accumulated over the rounds.
+struct Cell {
+    wire: &'static str,
+    rate: f64,
+    policy_name: &'static str,
+    policy: RecoveryPolicy,
+    outcomes: [u64; 4], // clean / recovered / degraded / aborted
+    stats: ChaosStats,
+    comm_s: Vec<f64>,
+    vnmse: Vec<f64>,
+}
+
+impl Cell {
+    fn new(wire: &'static str, rate: f64, policy_name: &'static str, policy: RecoveryPolicy) -> Self {
+        Cell {
+            wire,
+            rate,
+            policy_name,
+            policy,
+            outcomes: [0; 4],
+            stats: ChaosStats::default(),
+            comm_s: Vec::new(),
+            vnmse: Vec::new(),
+        }
+    }
+
+    fn tally(&mut self, tag: &str, stats: &ChaosStats, comm_s: f64, vnmse: f64) {
+        let slot = match tag {
+            "clean" => 0,
+            "recovered" => 1,
+            "degraded" => 2,
+            _ => 3,
+        };
+        self.outcomes[slot] += 1;
+        self.stats.merge(stats);
+        self.comm_s.push(comm_s);
+        self.vnmse.push(vnmse);
+    }
+
+    fn mean_comm(&self) -> f64 {
+        self.comm_s.iter().sum::<f64>() / self.comm_s.len().max(1) as f64
+    }
+
+    fn mean_vnmse(&self) -> f64 {
+        self.vnmse.iter().sum::<f64>() / self.vnmse.len().max(1) as f64
+    }
+}
+
+/// The grid: one fault-free baseline per wire plus rate × policy cells.
+fn grid() -> Vec<Cell> {
+    let policies: [(&'static str, RecoveryPolicy); 3] = [
+        ("retry4", RecoveryPolicy::Retry { max_attempts: 4 }),
+        ("degrade", RecoveryPolicy::Degrade),
+        ("abort", RecoveryPolicy::Abort),
+    ];
+    let mut cells = Vec::new();
+    for wire in ["DynamiQ", "DynamiQ:wire=packed+crc"] {
+        cells.push(Cell::new(wire, 0.0, "retry4", RecoveryPolicy::Retry { max_attempts: 4 }));
+        for rate in [0.01, 0.05] {
+            for (name, policy) in policies {
+                cells.push(Cell::new(wire, rate, name, policy));
+            }
+        }
+    }
+    cells
+}
+
+fn policy_row(
+    kind: &str,
+    cell: &Cell,
+    rounds: u32,
+    sends: usize,
+    base_comm: f64,
+    base_vnmse: f64,
+) -> Json {
+    Json::obj(vec![
+        ("tag", Json::Str("chaos".into())),
+        ("kind", Json::Str(kind.into())),
+        ("topology", Json::Str("ring".into())),
+        ("n", Json::Num(CHAOS_N as f64)),
+        ("d", Json::Num(CHAOS_D as f64)),
+        ("scheme", Json::Str(cell.wire.into())),
+        ("crc", Json::Num(if cell.wire.contains("+crc") { 1.0 } else { 0.0 })),
+        ("seed", Json::Num(CHAOS_SEED as f64)),
+        ("rate", Json::Num(cell.rate)),
+        ("policy", Json::Str(cell.policy_name.into())),
+        (
+            "max_attempts",
+            Json::Num(match cell.policy {
+                RecoveryPolicy::Retry { max_attempts } => max_attempts as f64,
+                _ => 1.0,
+            }),
+        ),
+        ("rounds", Json::Num(rounds as f64)),
+        ("sends_per_round", Json::Num(sends as f64)),
+        ("clean_rounds", Json::Num(cell.outcomes[0] as f64)),
+        ("recovered_rounds", Json::Num(cell.outcomes[1] as f64)),
+        ("degraded_rounds", Json::Num(cell.outcomes[2] as f64)),
+        ("aborted_rounds", Json::Num(cell.outcomes[3] as f64)),
+        ("injected", Json::Num(cell.stats.injected as f64)),
+        ("detected", Json::Num(cell.stats.detected as f64)),
+        ("silent", Json::Num(cell.stats.silent as f64)),
+        ("retransmits", Json::Num(cell.stats.retransmits as f64)),
+        ("substituted", Json::Num(cell.stats.substituted as f64)),
+        ("retry_latency_s", Json::Num(cell.stats.retry_latency_s)),
+        ("mean_comm_s", Json::Num(cell.mean_comm())),
+        ("added_latency_s", Json::Num(cell.mean_comm() - base_comm)),
+        ("mean_vnmse", Json::Num(cell.mean_vnmse())),
+        ("vnmse_delta", Json::Num(cell.mean_vnmse() - base_vnmse)),
+    ])
+}
+
+/// `repro --id chaos`: the policy grid, the event-backend cross-check
+/// and the death/rebuild trace, saved with `"tag": "chaos"` JSON rows.
+pub fn chaos_sweep(ctx: &Ctx) -> Result<()> {
+    let engine_threads = if ctx.jobs > 1 { 1 } else { par::num_threads() };
+    let topo = Topology::Ring;
+    topo.validate(CHAOS_N)?;
+    let rounds = ctx.rounds(48).min(64);
+    let sends = sends_per_round(&topo, CHAOS_N);
+    let g = grads(CHAOS_N, CHAOS_D, 0x0C4A_05);
+    let mut json = Vec::new();
+    let mut body = String::new();
+
+    // ---- part 1: policy grid on the sync engine ----
+    let mut cells = grid();
+    par::par_iter_mut(&mut cells, ctx.jobs, |_, cell| {
+        let plan = FaultPlan::uniform(CHAOS_SEED, cell.rate);
+        let mut codecs = mk_codecs(cell.wire, CHAOS_N);
+        let mut eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+        eng.threads = engine_threads;
+        let mut pool = ScratchPool::new();
+        for round in 0..rounds {
+            let out = eng
+                .run_chaos(&g, &mut codecs, round, 0.0, &mut pool, &plan, cell.policy)
+                .expect("validated up front");
+            cell.tally(out.outcome.tag(), &out.stats, out.report.comm_time_s(), out.report.vnmse);
+        }
+    });
+    // the rate-0 cell per wire is the fault-free baseline (it delegates
+    // to run_pooled, so its comm times and vNMSE are the engine's own)
+    let base: Vec<(&'static str, f64, f64)> = cells
+        .iter()
+        .filter(|c| c.rate == 0.0)
+        .map(|c| (c.wire, c.mean_comm(), c.mean_vnmse()))
+        .collect();
+    let base_for = |wire: &str| {
+        base.iter().find(|(w, _, _)| *w == wire).map(|&(_, c, v)| (c, v)).expect("baseline ran")
+    };
+    let mut ptable = Table::new(&[
+        "wire", "rate", "policy", "clean", "recov", "degr", "abort", "inj", "silent", "rexmit",
+        "gaps", "added ms", "vNMSE delta",
+    ]);
+    for cell in &cells {
+        let (bc, bv) = base_for(cell.wire);
+        ptable.row(vec![
+            cell.wire.into(),
+            format!("{}", cell.rate),
+            cell.policy_name.into(),
+            cell.outcomes[0].to_string(),
+            cell.outcomes[1].to_string(),
+            cell.outcomes[2].to_string(),
+            cell.outcomes[3].to_string(),
+            cell.stats.injected.to_string(),
+            cell.stats.silent.to_string(),
+            cell.stats.retransmits.to_string(),
+            cell.stats.substituted.to_string(),
+            format!("{:.4}", (cell.mean_comm() - bc) * 1e3),
+            format!("{:.2e}", cell.mean_vnmse() - bv),
+        ]);
+        json.push(policy_row("policy", cell, rounds, sends, bc, bv));
+    }
+    body.push_str(&ptable.render());
+    println!("{}", ptable.render());
+
+    // ---- part 2: the same plans on the event backend ----
+    //
+    // Fault draws are keyed by (round, from, to, chunk, attempt), so a
+    // cell in which no send ever gaps walks the identical hop set and
+    // must resolve identically on both backends; the oracle compares
+    // the matching rows wherever both report `substituted == 0`.
+    let mut ecells: Vec<Cell> = grid()
+        .into_iter()
+        .filter(|c| c.rate == 0.0 || c.policy_name != "abort")
+        .collect();
+    par::par_iter_mut(&mut ecells, ctx.jobs, |_, cell| {
+        let mut codecs = mk_codecs(cell.wire, CHAOS_N);
+        let mut eng = EventEngine::new(topo, NetworkModel::isolated_100g());
+        eng.threads = engine_threads;
+        eng.fault_plan = FaultPlan::uniform(CHAOS_SEED, cell.rate);
+        eng.recovery = cell.policy;
+        let mut scratch = FleetScratch::new();
+        for round in 0..rounds {
+            let (_, rep, stats) = eng
+                .run_scratch(&g, &mut codecs, round, 0.0, &mut scratch)
+                .expect("validated up front");
+            cell.tally(stats.outcome.tag(), &stats.chaos, rep.comm_time_s(), rep.vnmse);
+        }
+    });
+    let mut etable = Table::new(&[
+        "wire", "rate", "policy", "clean", "recov", "degr", "inj", "rexmit", "gaps",
+    ]);
+    for cell in &ecells {
+        let (bc, bv) = base_for(cell.wire);
+        etable.row(vec![
+            cell.wire.into(),
+            format!("{}", cell.rate),
+            cell.policy_name.into(),
+            cell.outcomes[0].to_string(),
+            cell.outcomes[1].to_string(),
+            cell.outcomes[2].to_string(),
+            cell.stats.injected.to_string(),
+            cell.stats.retransmits.to_string(),
+            cell.stats.substituted.to_string(),
+        ]);
+        json.push(policy_row("event", cell, rounds, sends, bc, bv));
+    }
+    body.push('\n');
+    body.push_str(&etable.render());
+    println!("{}", etable.render());
+
+    // ---- part 3: worker death + schedule rebuild ----
+    //
+    // A death-bearing plan under Degrade on a flat ring. After a round
+    // reports deaths the driver drops those workers and rebuilds the
+    // schedule at the surviving count (fresh codecs — adaptive state is
+    // membership-shaped), exactly the churn discipline of `--id fleet`.
+    let death_rounds = ctx.rounds(24).min(32);
+    let death_plan =
+        FaultPlan { seed: 5, drop: 0.01, truncate: 0.0, bitflip: 0.0, death: 0.05 };
+    let full_n = 12usize;
+    let dg = grads(full_n, CHAOS_D, 0xD_EAD);
+    let mut alive: Vec<usize> = (0..full_n).collect();
+    let mut dtable =
+        Table::new(&["round", "n", "outcome", "dead", "gaps", "rebuilt", "comm ms"]);
+    let mut cur: Option<(Vec<Vec<f32>>, Vec<Box<dyn GradCodec>>, ScratchPool)> = None;
+    let mut rebuilt = true;
+    let eng_net = NetworkModel::isolated_100g();
+    for round in 0..death_rounds {
+        if cur.is_none() {
+            let gsub: Vec<Vec<f32>> = alive.iter().map(|&i| dg[i].clone()).collect();
+            let codecs = mk_codecs("DynamiQ", alive.len());
+            cur = Some((gsub, codecs, ScratchPool::new()));
+        }
+        let (gsub, codecs, pool) = cur.as_mut().expect("membership initialized");
+        let n_cur = gsub.len();
+        let mut eng = AllReduceEngine::new(topo, eng_net.clone());
+        eng.threads = engine_threads;
+        let out = eng
+            .run_chaos(gsub, codecs, round, 0.0, pool, &death_plan, RecoveryPolicy::Degrade)
+            .expect("ring stays valid at every surviving count");
+        let dead = out.stats.dead_workers.clone();
+        dtable.row(vec![
+            round.to_string(),
+            n_cur.to_string(),
+            out.outcome.tag().into(),
+            format!("{dead:?}"),
+            out.stats.substituted.to_string(),
+            if rebuilt { "yes".into() } else { String::new() },
+            format!("{:.4}", out.report.comm_time_s() * 1e3),
+        ]);
+        json.push(Json::obj(vec![
+            ("tag", Json::Str("chaos".into())),
+            ("kind", Json::Str("death".into())),
+            ("topology", Json::Str("ring".into())),
+            ("round", Json::Num(round as f64)),
+            ("n", Json::Num(n_cur as f64)),
+            ("d", Json::Num(CHAOS_D as f64)),
+            ("scheme", Json::Str("DynamiQ".into())),
+            ("seed", Json::Num(death_plan.seed as f64)),
+            ("death_rate", Json::Num(death_plan.death)),
+            ("drop_rate", Json::Num(death_plan.drop)),
+            ("outcome", Json::Str(out.outcome.tag().into())),
+            ("dead", Json::Num(dead.len() as f64)),
+            ("substituted", Json::Num(out.stats.substituted as f64)),
+            ("rebuilt", Json::Num(if rebuilt { 1.0 } else { 0.0 })),
+            ("comm_time_s", Json::Num(out.report.comm_time_s())),
+        ]));
+        // drop the dead and rebuild for the following rounds; the ring
+        // needs ≥ 2 survivors — below 4 we stop shrinking (printed, not
+        // silent: the `dead` column still names the drawn deaths)
+        rebuilt = false;
+        if !dead.is_empty() && n_cur - dead.len() >= 4 {
+            let mut keep = Vec::with_capacity(n_cur - dead.len());
+            for (local, &orig) in alive.iter().enumerate() {
+                if !dead.contains(&(local as u32)) {
+                    keep.push(orig);
+                }
+            }
+            alive = keep;
+            cur = None;
+            rebuilt = true;
+        }
+    }
+    body.push('\n');
+    body.push_str(&dtable.render());
+    println!("{}", dtable.render());
+
+    ctx.save("chaos", &body, Some(Json::Arr(json)))
+}

@@ -13,6 +13,7 @@
 //! | LLaMA-1B MMLU        | `small` LM, corpus D (perplexity)      |
 
 pub mod ablation;
+pub mod chaos;
 pub mod fleet;
 pub mod hierarchy;
 pub mod locality;
@@ -72,11 +73,12 @@ impl Ctx {
 /// All experiment ids in paper order, plus post-paper extensions ("hier":
 /// the hierarchical-topology depth × bandwidth-ratio × codec sweep;
 /// "fleet": the event-backend scale sweep + straggler-tail ablation;
-/// "pipeline": the bucketed-pipeline overlap sweep at n = 128).
+/// "pipeline": the bucketed-pipeline overlap sweep at n = 128;
+/// "chaos": the fault-injection recovery grid + death/rebuild trace).
 pub const ALL_IDS: &[&str] = &[
     "tab1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "tab4", "fig8", "fig9", "tab5",
     "fig10", "fig11", "fig12", "fig13", "fig17", "fig18", "tab2", "tab3", "tab6", "hier",
-    "fleet", "pipeline",
+    "fleet", "pipeline", "chaos",
 ];
 
 /// Run one experiment by id.
@@ -102,6 +104,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "hier" => hierarchy::hier_sweep(ctx),
         "fleet" => fleet::fleet_sweep(ctx),
         "pipeline" => pipeline::pipeline_sweep(ctx),
+        "chaos" => chaos::chaos_sweep(ctx),
         "sweep_s" => ablation::sweep_group_sizes(ctx),
         other => anyhow::bail!("unknown experiment id {other} (known: {ALL_IDS:?})"),
     }

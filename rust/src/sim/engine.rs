@@ -68,7 +68,10 @@ use crate::util::par;
 use crate::util::pool::WorkerPool;
 
 use super::event::EventQueue;
-use super::scenario::{net_with_flaps, LinkFlap, StragglerModel};
+use super::scenario::{
+    net_with_flaps, resolve_send, ChaosStats, FaultPlan, LinkFlap, RecoveryPolicy, RoundOutcome,
+    SendOutcome, StragglerModel,
+};
 
 /// What the event loop observed beyond the [`RoundReport`]: simulation
 /// size, the virtual span including straggler stalls, and per-worker
@@ -96,6 +99,12 @@ pub struct EventStats {
     /// [`EventEngine::pipeline`] is engaged; sums to the executed
     /// `rs + ag` busy time.
     pub bucket_busy_s: Vec<f64>,
+    /// Per-round fault accounting (all-zero without a
+    /// [`EventEngine::fault_plan`]).
+    pub chaos: ChaosStats,
+    /// How the round terminated under fault injection
+    /// ([`RoundOutcome::Clean`] without a fault plan).
+    pub outcome: RoundOutcome,
 }
 
 /// Reusable per-engine scratch: per-worker kernel scratch and a payload
@@ -156,6 +165,12 @@ struct BatchSend {
     summed: u32,
     /// wire bytes of this send
     bytes: u64,
+    /// the send carries nothing: it resolved as a gap under fault
+    /// injection, or its chunk's aggregate was starved upstream (dead
+    /// sink) — barriers still advance, no payload is delivered
+    starved: bool,
+    /// retry backoff added to this send's completion time
+    extra_s: f64,
 }
 
 /// All kernel sends of one producing worker within a batch — the unit
@@ -216,6 +231,9 @@ struct SimState {
     inbox: HashMap<(u32, u32), Vec<(u64, Vec<u8>, u32)>>,
     /// finalized broadcast payload per chunk
     broadcast: Vec<Option<(Vec<u8>, u32)>>,
+    /// workers drawn dead this round ([`FaultPlan::dies`]); their sends
+    /// never fire and completions addressed to them are discarded
+    dead: Vec<bool>,
 }
 
 impl SimState {
@@ -244,6 +262,9 @@ impl SimState {
 
     /// One transfer of `(w, stage)` completed at `t`.
     fn complete_one(&mut self, w: usize, stage: usize, t: f64) {
+        if self.dead[w] {
+            return; // the dead resolve nothing
+        }
         let idx = w * self.s_total + stage;
         if t > self.latest[idx] {
             self.latest[idx] = t;
@@ -288,6 +309,21 @@ pub struct EventEngine {
     /// bytes stay byte-identical to the unsliced round (buckets
     /// partition chunks). `None` (default) is the legacy behavior.
     pub pipeline: Option<PipelineCfg>,
+    /// Seeded wire faults and worker deaths injected at the send
+    /// boundary ([`resolve_send`], the same boundary the sync engine's
+    /// `run_chaos` and the coordinator use). [`FaultPlan::none`]
+    /// (default) is the bit-identity configuration: no draw is ever
+    /// made and every chaos branch is skipped. All-gather gaps and
+    /// silent corruption are *tallied* but not materialized per worker
+    /// (payload content lives in the shared broadcast table); the sync
+    /// engine's `run_chaos` is the value-accurate reference for those.
+    /// A dead sink's chunk, however, does starve: its decode falls back
+    /// to the local contribution, reported via
+    /// [`ChaosStats::substituted`].
+    pub fault_plan: FaultPlan,
+    /// what to do when an injected fault is detected (validation
+    /// failure or absence); see [`RecoveryPolicy`]
+    pub recovery: RecoveryPolicy,
     /// executor budget for kernel batches (1 = fully sequential;
     /// results are identical for any value)
     pub threads: usize,
@@ -306,6 +342,8 @@ impl EventEngine {
             flaps: Vec::new(),
             measure_vnmse: true,
             pipeline: None,
+            fault_plan: FaultPlan::none(),
+            recovery: RecoveryPolicy::Retry { max_attempts: 3 },
             threads: par::num_threads(),
             pool: OnceLock::new(),
         }
@@ -505,6 +543,29 @@ impl EventEngine {
             }
         }
 
+        // ---- chaos setup: deaths are fixed at round start (a dead
+        // worker completes the cheap metadata exchange, then goes
+        // silent), so stop live receivers from waiting on their sends ----
+        let chaos_on = !self.fault_plan.is_none();
+        let dead: Vec<bool> = (0..n as u32).map(|w| self.fault_plan.dies(round, w)).collect();
+        let mut chaos_stats = ChaosStats {
+            dead_workers: (0..n as u32).filter(|&w| dead[w as usize]).collect(),
+            ..ChaosStats::default()
+        };
+        let mut aborted: Option<String> = None;
+        let mut vscratch = WorkerScratch::default();
+        if !chaos_stats.dead_workers.is_empty() {
+            for (phase_off, sched) in [(0usize, &rs_sched), (s_rs, &ag_sched)] {
+                for (s, hops) in sched.iter().enumerate() {
+                    for h in hops {
+                        if dead[h.from as usize] && !dead[h.to as usize] {
+                            remaining[h.to as usize * s_total + phase_off + s] -= 1;
+                        }
+                    }
+                }
+            }
+        }
+
         // ---- straggler draws + bootstrap ----
         scratch.ensure(n);
         let mut stats = EventStats::default();
@@ -523,9 +584,17 @@ impl EventEngine {
             batches: Vec::new(),
             inbox: HashMap::new(),
             broadcast: (0..n).map(|_| None).collect(),
+            dead,
         };
         let meta_end = clock.now();
         for w in 0..n {
+            if st.dead[w] {
+                // pre-resolved: its sends never fire, its finish is its
+                // time of death
+                st.resolved[w] = s_total as i32 - 1;
+                st.finish[w] = meta_end;
+                continue;
+            }
             let delay = self.straggler.delay_s(round, w as u32);
             if delay > stats.max_delay_s {
                 stats.max_delay_s = delay;
@@ -556,10 +625,26 @@ impl EventEngine {
             // kernels, price as one congestion-aware stage
             pending.sort_unstable_by_key(|s| (s.stage, s.pos));
             let batch = std::mem::take(&mut pending);
-            let batch = self.run_kernels(
+            let mut batch = self.run_kernels(
                 batch, codecs_ro, &pres, &ranges, n, round, threads, scratch, &mut st,
                 &mut report,
             );
+            // the fault boundary sits between kernel production and
+            // pricing so a retried send is charged once per attempt and
+            // its backoff lands on its completion time
+            if chaos_on {
+                self.apply_faults(
+                    &mut batch,
+                    codecs_ro,
+                    &ranges,
+                    n,
+                    round,
+                    &st,
+                    &mut vscratch,
+                    &mut chaos_stats,
+                    &mut aborted,
+                );
+            }
             let mut flows: Vec<(u64, LinkClass, u32, u32)> = Vec::with_capacity(batch.len());
             let mut any_rs = false;
             for s in &batch {
@@ -632,22 +717,54 @@ impl EventEngine {
             clock.observe(f);
         }
 
-        // ---- decode + postprocess: identical to the sync engine ----
+        // ---- decode + postprocess: identical to the sync engine.
+        // Under a fault plan the decode is fallible, and a chunk whose
+        // sink died (never finalized) falls back to the local
+        // contribution — the same graceful degradation as the sync
+        // engine's `run_chaos`. ----
         let mut summed_pre = vec![0.0f32; padded];
         for (c, slot) in st.broadcast.iter_mut().enumerate() {
-            let (payload, k) = slot.take().expect("every chunk finalized");
             let range = ranges[c].clone();
-            if !range.is_empty() {
-                codecs_ro[0].decompress_pooled(
-                    &payload,
-                    range.clone(),
-                    &mk_ctx(0, k),
-                    &mut scratch.workers[0],
-                    &mut summed_pre[range],
-                );
-                report.decompress_calls += 1;
+            match slot.take() {
+                Some((payload, k)) => {
+                    if !range.is_empty() {
+                        let decoded = if chaos_on {
+                            codecs_ro[0]
+                                .try_decompress_pooled(
+                                    &payload,
+                                    range.clone(),
+                                    &mk_ctx(0, k),
+                                    &mut scratch.workers[0],
+                                    &mut summed_pre[range.clone()],
+                                )
+                                .is_ok()
+                        } else {
+                            codecs_ro[0].decompress_pooled(
+                                &payload,
+                                range.clone(),
+                                &mk_ctx(0, k),
+                                &mut scratch.workers[0],
+                                &mut summed_pre[range.clone()],
+                            );
+                            true
+                        };
+                        if decoded {
+                            report.decompress_calls += 1;
+                        } else {
+                            summed_pre[range.clone()].copy_from_slice(&pres[0][range]);
+                            chaos_stats.substituted += 1;
+                        }
+                    }
+                    scratch.bufs.push(payload);
+                }
+                None => {
+                    assert!(chaos_on, "every chunk finalized");
+                    if !range.is_empty() {
+                        summed_pre[range.clone()].copy_from_slice(&pres[0][range]);
+                        chaos_stats.substituted += 1;
+                    }
+                }
             }
-            scratch.bufs.push(payload);
         }
         let result = {
             let sp = &summed_pre;
@@ -682,6 +799,12 @@ impl EventEngine {
         stats.stall_s = (stats.span_s - report.comm_time_s()).max(0.0);
         stats.worker_finish_s = st.finish;
         stats.bucket_busy_s = clock.bucket_s.clone();
+        stats.chaos = chaos_stats;
+        stats.outcome = match aborted {
+            Some(reason) => RoundOutcome::Aborted { reason },
+            None if chaos_on => stats.chaos.outcome(),
+            None => RoundOutcome::Clean,
+        };
 
         // ---- pipelined pricing through the shared builder + scheduler.
         // The event loop above executed bucket-sliced sub-stages, so the
@@ -782,11 +905,16 @@ impl EventEngine {
                 SendKind::Forward => {
                     // forwarded payloads exist before the batch: the sink
                     // published its chunk when it first sent it, and a
-                    // non-sink only forwards after receiving
-                    s.bytes = st.broadcast[s.chunk as usize]
-                        .as_ref()
-                        .map(|(p, _)| p.len() as u64)
-                        .expect("forwarded chunk must be finalized");
+                    // non-sink only forwards after receiving. A starved
+                    // forward (dead sink) has nothing to put on the wire.
+                    s.bytes = if s.starved {
+                        0
+                    } else {
+                        st.broadcast[s.chunk as usize]
+                            .as_ref()
+                            .map(|(p, _)| p.len() as u64)
+                            .expect("forwarded chunk must be finalized")
+                    };
                     slots.push(Some(s));
                 }
                 SendKind::Reduce | SendKind::Finalize => {
@@ -841,7 +969,13 @@ impl EventEngine {
             scratch.bufs.append(&mut job.recycle);
             for (slot, mut s) in job.sends.drain(..) {
                 if s.kind == SendKind::Finalize {
-                    debug_assert_eq!(s.summed, n as u32, "sink must aggregate all workers");
+                    // under fault injection gaps and dead senders thin
+                    // the sink's inbox, so the full count only holds on
+                    // the clean path
+                    debug_assert!(
+                        !self.fault_plan.is_none() || s.summed == n as u32,
+                        "sink must aggregate all workers"
+                    );
                     let payload = std::mem::take(&mut s.out);
                     s.bytes = payload.len() as u64;
                     st.broadcast[s.chunk as usize] = Some((payload, s.summed));
@@ -851,6 +985,85 @@ impl EventEngine {
             }
         }
         slots.into_iter().map(|s| s.expect("every slot filled")).collect()
+    }
+
+    /// Pass every live send of a batch through [`resolve_send`] — the
+    /// same seeded fault boundary the sync engine's `run_chaos` and the
+    /// coordinator use, keyed by `(round, from, to, chunk, attempt)`, so
+    /// all three backends draw identical faults for identical hops.
+    /// Runs between kernel production and pricing: a retried send's
+    /// `bytes` are multiplied by its attempt count (the pricer charges
+    /// every retransmission) and its backoff is carried on `extra_s`
+    /// (added to the send's completion time). A gapped send is marked
+    /// `starved`; an abort is recorded once and the remaining sends pass
+    /// through untouched so the round still terminates mechanically.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_faults(
+        &self,
+        batch: &mut [BatchSend],
+        codecs: &[Box<dyn GradCodec>],
+        ranges: &[Range<usize>],
+        n: usize,
+        round: u32,
+        st: &SimState,
+        vscratch: &mut WorkerScratch,
+        stats: &mut ChaosStats,
+        aborted: &mut Option<String>,
+    ) {
+        for s in batch.iter_mut() {
+            if s.starved || aborted.is_some() || st.dead[s.to as usize] {
+                continue; // nothing on the wire worth faulting
+            }
+            let range = ranges[s.chunk as usize].clone();
+            let res = {
+                let payload: &[u8] = match s.kind {
+                    SendKind::Reduce => &s.out,
+                    // all-gather forwards carry the shared broadcast
+                    // payload (a starved forward never reaches here)
+                    _ => {
+                        &st.broadcast[s.chunk as usize]
+                            .as_ref()
+                            .expect("forwarded chunk must be finalized")
+                            .0
+                    }
+                };
+                let ctx = hop_context(&self.topology, n, round, s.from, s.to);
+                let rcodec = codecs[s.to as usize].as_ref();
+                let mut validate = |bytes: &[u8]| {
+                    rcodec
+                        .validate_payload(bytes, range.clone(), &ctx, vscratch)
+                        .map_err(|e| e.to_string())
+                };
+                resolve_send(
+                    &self.fault_plan,
+                    self.recovery,
+                    round,
+                    s.from,
+                    s.to,
+                    s.chunk,
+                    payload,
+                    &mut validate,
+                )
+            };
+            stats.absorb(&res);
+            s.extra_s = res.retry_latency_s;
+            s.bytes *= 1 + res.retransmits as u64;
+            match res.outcome {
+                SendOutcome::Deliver { payload, .. } => {
+                    // silent corruption is materialized only on the
+                    // reduce path (forwards read the shared broadcast
+                    // table — the tally above still records it)
+                    if s.kind == SendKind::Reduce {
+                        s.out = payload;
+                    }
+                }
+                SendOutcome::Gap { .. } => s.starved = true,
+                SendOutcome::Abort { error } => {
+                    s.starved = true;
+                    *aborted = Some(error);
+                }
+            }
+        }
     }
 }
 
@@ -918,16 +1131,20 @@ fn handle_event(
         Ev::Complete { batch } => {
             let sends = st.batches[batch as usize].take().expect("a batch completes once");
             for s in sends {
-                if s.kind == SendKind::Reduce {
+                // a retried send completes after its backoff; without a
+                // fault plan `extra_s` is exactly 0.0 (bit-identity)
+                let tc = t + s.extra_s;
+                if s.kind == SendKind::Reduce && !s.starved && !st.dead[s.to as usize] {
                     let tag = ((s.stage as u64) << 32) | s.pos as u64;
                     st.inbox.entry((s.to, s.chunk)).or_default().push((tag, s.out, s.summed));
                 } else {
                     // all-gather payload content lives in the broadcast
-                    // table; recycle the (empty) per-send arena
+                    // table; gapped payloads and deliveries to the dead
+                    // carry nothing forward — recycle the arenas
                     scratch.bufs.push(s.out);
                 }
-                st.complete_one(s.from as usize, s.stage as usize, t);
-                st.complete_one(s.to as usize, s.stage as usize, t);
+                st.complete_one(s.from as usize, s.stage as usize, tc);
+                st.complete_one(s.to as usize, s.stage as usize, tc);
             }
         }
         Ev::Eligible { w, stage } => {
@@ -951,6 +1168,11 @@ fn handle_event(
                 } else {
                     (SendKind::Forward, Vec::new())
                 };
+                // a non-sink forward of a chunk whose sink died has
+                // nothing to carry: the broadcast never materialized.
+                // The send still runs (zero bytes) so barriers advance.
+                let starved = kind == SendKind::Forward
+                    && st.broadcast[h.chunk as usize].is_none();
                 pending.push(BatchSend {
                     stage,
                     pos,
@@ -962,6 +1184,8 @@ fn handle_event(
                     out: Vec::new(),
                     summed: 0,
                     bytes: 0,
+                    starved,
+                    extra_s: 0.0,
                 });
             }
         }

@@ -26,7 +26,11 @@
 //! - [`scenario`] — fleet scenario axes: [`StragglerModel`] (seeded,
 //!   deterministic per-(round, worker) delay distributions),
 //!   [`LinkFlap`] (one-shot capacity losses expressed as synthetic
-//!   tenants), [`MembershipPlan`] (worker counts per round).
+//!   tenants), [`MembershipPlan`] (worker counts per round), and the
+//!   chaos layer: [`FaultPlan`] (seeded per-(round, hop, attempt) wire
+//!   faults + worker deaths), [`RecoveryPolicy`] / [`RoundOutcome`] /
+//!   [`ChaosStats`], and [`resolve_send`] — the single fault boundary
+//!   all three backends share.
 //! - [`engine`] — the [`EventEngine`] itself plus [`FleetScratch`]
 //!   (cross-round scratch) and [`EventStats`] (span, stall, per-worker
 //!   finish times).
@@ -38,5 +42,7 @@ pub mod scenario;
 pub use engine::{EventEngine, EventStats, FleetScratch};
 pub use event::{Event, EventQueue};
 pub use scenario::{
-    net_with_flaps, JitterDist, LinkFlap, MembershipPlan, StragglerModel,
+    net_with_flaps, resolve_send, ChaosStats, Fault, FaultPlan, JitterDist, LinkFlap,
+    MembershipPlan, RecoveryPolicy, RoundOutcome, SendOutcome, SendResolution, StragglerModel,
+    RETRY_BACKOFF_S,
 };

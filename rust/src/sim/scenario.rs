@@ -221,6 +221,403 @@ impl MembershipPlan {
     }
 }
 
+// ---- deterministic fault injection (chaos layer) ----
+
+/// Domain separator for the fault stream (disjoint from
+/// [`STRAGGLER_DOMAIN`] and every codec stream sharing `pcg_hash`).
+const FAULT_DOMAIN: u32 = 0x0fa1_7a5e;
+
+/// Sub-stream selector for worker-death draws within the fault domain.
+const DEATH_SALT: u32 = 0x00de_ad00;
+
+/// Base retransmit backoff of [`RecoveryPolicy::Retry`], seconds; the
+/// k-th retransmit of one logical send waits `RETRY_BACKOFF_S · 2^k`.
+pub const RETRY_BACKOFF_S: f64 = 1e-4;
+
+/// One wire fault drawn for a send attempt. Parameters are raw hash
+/// draws; [`FaultPlan::apply`] maps them onto the payload's actual
+/// length, so a fault is well-defined for any payload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// the send never arrives (detected by the receiver's accounting)
+    Drop,
+    /// the payload is cut to a strict prefix (`keep` of its length)
+    Truncate {
+        /// fraction of the payload that survives, in `[0, 1)`
+        keep: f64,
+    },
+    /// a single bit flips in transit
+    BitFlip {
+        /// raw draw; byte position is `pos % len`
+        pos: u32,
+        /// bit index within the byte, `0..8`
+        bit: u8,
+    },
+}
+
+/// Seeded per-(round, hop, attempt) wire faults plus per-(round, worker)
+/// death draws — the same determinism discipline as [`StragglerModel`]:
+/// every draw is a pure function of the key, re-running a scenario
+/// reproduces its faults bit for bit, and the all-zero plan performs no
+/// hashing at all (the bit-identity configuration).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// stream seed (domain-separated from all other PRNG consumers)
+    pub seed: u32,
+    /// probability a send attempt is dropped outright
+    pub drop: f64,
+    /// probability a send attempt is truncated
+    pub truncate: f64,
+    /// probability a send attempt suffers a single bit flip
+    pub bitflip: f64,
+    /// probability a worker dies at the start of a round
+    pub death: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl FaultPlan {
+    /// The no-fault plan (the bit-identity configuration).
+    pub fn none() -> Self {
+        FaultPlan { seed: 0, drop: 0.0, truncate: 0.0, bitflip: 0.0, death: 0.0 }
+    }
+
+    /// A plan injecting each wire-fault class at `rate` (deaths stay 0).
+    pub fn uniform(seed: u32, rate: f64) -> Self {
+        FaultPlan { seed, drop: rate, truncate: rate, bitflip: rate, death: 0.0 }
+    }
+
+    /// Whether this plan can never fire (all rates zero) — callers use
+    /// this to keep the fault-free path byte-identical to the engines
+    /// without the chaos layer.
+    pub fn is_none(&self) -> bool {
+        self.drop <= 0.0 && self.truncate <= 0.0 && self.bitflip <= 0.0 && self.death <= 0.0
+    }
+
+    /// Key of the `(round, from, to, chunk, attempt)` send-fault draw.
+    /// Mirrored by `python/validate_chaos.py` — change both together.
+    fn send_key(&self, round: u32, from: u32, to: u32, chunk: u32, attempt: u32) -> u32 {
+        let k0 = self.seed.wrapping_add(round.wrapping_mul(0x85eb_ca6b)) ^ FAULT_DOMAIN;
+        let k1 = pcg_hash(k0, from);
+        let k2 = pcg_hash(k1 ^ 0x9e37_79b9, to);
+        pcg_hash(k2 ^ 0x85eb_ca6b, chunk.wrapping_mul(31).wrapping_add(attempt))
+    }
+
+    /// The fault (if any) striking the `attempt`-th transmission of the
+    /// `(from → to, chunk)` send of `round`. Retransmissions draw fresh
+    /// faults (independent attempts), which is what makes bounded retry
+    /// effective against transient faults.
+    pub fn draw(&self, round: u32, from: u32, to: u32, chunk: u32, attempt: u32) -> Option<Fault> {
+        if self.drop <= 0.0 && self.truncate <= 0.0 && self.bitflip <= 0.0 {
+            return None;
+        }
+        let key = self.send_key(round, from, to, chunk, attempt);
+        let u = u01(key, 0);
+        if u < self.drop {
+            Some(Fault::Drop)
+        } else if u < self.drop + self.truncate {
+            Some(Fault::Truncate { keep: u01(key, 1) })
+        } else if u < self.drop + self.truncate + self.bitflip {
+            Some(Fault::BitFlip { pos: pcg_hash(key, 2), bit: (pcg_hash(key, 3) % 8) as u8 })
+        } else {
+            None
+        }
+    }
+
+    /// Whether `worker` dies at the start of `round` (pure in
+    /// `(seed, round, worker)`; exactly `false` at rate 0).
+    pub fn dies(&self, round: u32, worker: u32) -> bool {
+        if self.death <= 0.0 {
+            return false;
+        }
+        let k0 = self.seed.wrapping_add(round.wrapping_mul(0x85eb_ca6b)) ^ FAULT_DOMAIN;
+        u01(k0 ^ DEATH_SALT, worker) < self.death
+    }
+
+    /// Mutate `payload` as the fault dictates. [`Fault::Drop`] is the
+    /// caller's job (there is no payload to deliver); corruption of an
+    /// empty payload is a no-op (nothing is on the wire).
+    pub fn apply(fault: &Fault, payload: &mut Vec<u8>) {
+        if payload.is_empty() {
+            return;
+        }
+        match *fault {
+            Fault::Drop => {}
+            Fault::Truncate { keep } => {
+                let cut = ((payload.len() as f64 * keep) as usize).min(payload.len() - 1);
+                payload.truncate(cut);
+            }
+            Fault::BitFlip { pos, bit } => {
+                let i = pos as usize % payload.len();
+                payload[i] ^= 1 << (bit % 8);
+            }
+        }
+    }
+}
+
+/// What a backend does when a fault is *detected* (validation failure,
+/// missing send, recv timeout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// fail the round on the first detected fault (the pre-chaos
+    /// behavior, made typed)
+    Abort,
+    /// never retransmit: a detected fault becomes a gap — the receiver
+    /// proceeds without that contribution and the round degrades
+    Degrade,
+    /// retransmit from the sender's retained payload with exponential
+    /// backoff, up to `max_attempts` transmissions total; attempts
+    /// exhausted ⇒ gap (graceful degradation)
+    Retry {
+        /// total transmissions allowed per logical send (≥ 1)
+        max_attempts: u32,
+    },
+}
+
+/// How a round under fault injection terminated. Every faulted round
+/// ends in exactly one of these — never a panic, never a poisoned
+/// engine (the acceptance invariant of `tests/chaos_invariants.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum RoundOutcome {
+    /// no fault fired; bit-identical to the fault-free engines
+    Clean,
+    /// faults fired but every one was repaired by retransmission
+    Recovered {
+        /// total retransmissions across the round
+        retransmits: u32,
+        /// summed backoff latency the retries added
+        retry_latency_s: f64,
+    },
+    /// the round completed with gaps (missing contributions) and/or
+    /// after rebuilding around dead workers
+    Degraded {
+        /// total retransmissions across the round
+        retransmits: u32,
+        /// summed backoff latency the retries added
+        retry_latency_s: f64,
+        /// sends ultimately resolved as gaps
+        substituted: u32,
+        /// workers that died this round
+        dead_workers: Vec<u32>,
+    },
+    /// the policy gave up (Abort on first detected fault, or the
+    /// surviving membership cannot form a schedule)
+    Aborted {
+        /// human-readable cause
+        reason: String,
+    },
+}
+
+impl Default for RoundOutcome {
+    fn default() -> Self {
+        RoundOutcome::Clean
+    }
+}
+
+impl RoundOutcome {
+    /// Canonical tag for JSON rows / tables.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RoundOutcome::Clean => "clean",
+            RoundOutcome::Recovered { .. } => "recovered",
+            RoundOutcome::Degraded { .. } => "degraded",
+            RoundOutcome::Aborted { .. } => "aborted",
+        }
+    }
+}
+
+/// Per-round fault accounting shared by the three backends (what
+/// `python/validate_chaos.py` audits).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosStats {
+    /// faults injected into send attempts
+    pub injected: u64,
+    /// injected faults caught by validation / absence accounting
+    pub detected: u64,
+    /// injected faults that passed validation (decoded to wrong values;
+    /// only possible without the CRC trailer)
+    pub silent: u64,
+    /// retransmissions performed
+    pub retransmits: u64,
+    /// sends resolved as gaps (their contribution substituted by zero)
+    pub substituted: u64,
+    /// summed retry backoff latency
+    pub retry_latency_s: f64,
+    /// workers that died this round
+    pub dead_workers: Vec<u32>,
+}
+
+impl ChaosStats {
+    /// Fold a resolved send into the round's tally.
+    pub fn absorb(&mut self, res: &SendResolution) {
+        self.injected += res.injected as u64;
+        self.detected += res.detected as u64;
+        self.retransmits += res.retransmits as u64;
+        self.retry_latency_s += res.retry_latency_s;
+        match &res.outcome {
+            SendOutcome::Deliver { silent: true, .. } => self.silent += 1,
+            SendOutcome::Gap { .. } => self.substituted += 1,
+            _ => {}
+        }
+    }
+
+    /// Fold another tally into this one (numeric fields sum;
+    /// `dead_workers` is per-round global state the caller sets once) —
+    /// how the coordinator merges its per-worker tallies.
+    pub fn merge(&mut self, other: &ChaosStats) {
+        self.injected += other.injected;
+        self.detected += other.detected;
+        self.silent += other.silent;
+        self.retransmits += other.retransmits;
+        self.substituted += other.substituted;
+        self.retry_latency_s += other.retry_latency_s;
+    }
+
+    /// The outcome a completed (non-aborted) round reduces to.
+    pub fn outcome(&self) -> RoundOutcome {
+        if self.injected == 0 && self.dead_workers.is_empty() {
+            RoundOutcome::Clean
+        } else if self.substituted == 0 && self.silent == 0 && self.dead_workers.is_empty() {
+            RoundOutcome::Recovered {
+                retransmits: self.retransmits as u32,
+                retry_latency_s: self.retry_latency_s,
+            }
+        } else {
+            RoundOutcome::Degraded {
+                retransmits: self.retransmits as u32,
+                retry_latency_s: self.retry_latency_s,
+                substituted: self.substituted as u32,
+                dead_workers: self.dead_workers.clone(),
+            }
+        }
+    }
+}
+
+/// How one logical send resolved after fault draws and policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SendOutcome {
+    /// a payload arrives; `silent` marks a corruption that passed
+    /// validation (values poisoned, structure intact)
+    Deliver {
+        /// the bytes the receiver sees
+        payload: Vec<u8>,
+        /// corruption survived validation undetected
+        silent: bool,
+    },
+    /// no payload arrives; the receiver must substitute (zero
+    /// contribution) and the round degrades
+    Gap {
+        /// the last detection error
+        error: String,
+    },
+    /// [`RecoveryPolicy::Abort`]: the round fails with this error
+    Abort {
+        /// the detection error that killed the round
+        error: String,
+    },
+}
+
+/// A resolved send: outcome plus attempt accounting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SendResolution {
+    /// how the send resolved
+    pub outcome: SendOutcome,
+    /// faults injected across the attempts
+    pub injected: u32,
+    /// faults detected across the attempts
+    pub detected: u32,
+    /// retransmissions performed (attempts beyond the first)
+    pub retransmits: u32,
+    /// summed exponential backoff, seconds
+    pub retry_latency_s: f64,
+}
+
+/// Resolve one logical send under `plan` and `policy` — the single
+/// fault-boundary implementation all three backends share (sync engine,
+/// coordinator, event engine), so their fault semantics cannot drift.
+///
+/// `validate` is the receiver's structural check (typically
+/// `GradCodec::validate_payload` via the `try_` forms); it decides
+/// detection for corruption faults. Drops are always detected (the
+/// receiver's expected-sender accounting notices absence). Retransmits
+/// resend the sender's retained payload — attempt `k` waits
+/// `RETRY_BACKOFF_S · 2^(k-1)` and draws fresh faults.
+pub fn resolve_send(
+    plan: &FaultPlan,
+    policy: RecoveryPolicy,
+    round: u32,
+    from: u32,
+    to: u32,
+    chunk: u32,
+    payload: &[u8],
+    validate: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+) -> SendResolution {
+    let max_attempts = match policy {
+        RecoveryPolicy::Retry { max_attempts } => max_attempts.max(1),
+        _ => 1,
+    };
+    let mut res = SendResolution {
+        outcome: SendOutcome::Gap { error: String::new() },
+        injected: 0,
+        detected: 0,
+        retransmits: 0,
+        retry_latency_s: 0.0,
+    };
+    let mut attempt = 0u32;
+    loop {
+        let error = match plan.draw(round, from, to, chunk, attempt) {
+            None => {
+                res.outcome = SendOutcome::Deliver { payload: payload.to_vec(), silent: false };
+                return res;
+            }
+            Some(Fault::Drop) => {
+                res.injected += 1;
+                res.detected += 1;
+                format!("send {from}->{to} chunk {chunk} dropped (attempt {attempt})")
+            }
+            Some(fault) => {
+                res.injected += 1;
+                let mut corrupted = payload.to_vec();
+                FaultPlan::apply(&fault, &mut corrupted);
+                match validate(&corrupted) {
+                    Ok(()) => {
+                        let silent = corrupted != payload;
+                        res.outcome = SendOutcome::Deliver { payload: corrupted, silent };
+                        return res;
+                    }
+                    Err(e) => {
+                        res.detected += 1;
+                        format!("send {from}->{to} chunk {chunk} corrupt (attempt {attempt}): {e}")
+                    }
+                }
+            }
+        };
+        match policy {
+            RecoveryPolicy::Abort => {
+                res.outcome = SendOutcome::Abort { error };
+                return res;
+            }
+            RecoveryPolicy::Degrade => {
+                res.outcome = SendOutcome::Gap { error };
+                return res;
+            }
+            RecoveryPolicy::Retry { .. } if attempt + 1 >= max_attempts => {
+                res.outcome = SendOutcome::Gap { error };
+                return res;
+            }
+            RecoveryPolicy::Retry { .. } => {
+                res.retransmits += 1;
+                res.retry_latency_s += RETRY_BACKOFF_S * (1u64 << attempt.min(20)) as f64;
+                attempt += 1;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -358,5 +755,169 @@ mod tests {
         assert_eq!(plan.n_at(100), Some(16));
         assert_eq!(MembershipPlan::default().n_at(0), None);
         assert_eq!(MembershipPlan::fixed(8).n_at(42), Some(8));
+    }
+
+    #[test]
+    fn fault_plan_none_never_fires() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        for round in 0..8 {
+            assert!(!p.dies(round, 3));
+            for a in 0..4 {
+                assert_eq!(p.draw(round, 0, 1, 2, a), None);
+            }
+        }
+    }
+
+    #[test]
+    fn fault_draws_are_deterministic_and_rate_accurate() {
+        let p = FaultPlan { seed: 11, drop: 0.02, truncate: 0.03, bitflip: 0.05, death: 0.0 };
+        let mut hits = [0usize; 3];
+        let n = 50_000u32;
+        for i in 0..n {
+            let d = p.draw(i / 64, i % 8, (i / 8) % 8, i % 16, 0);
+            assert_eq!(d, p.draw(i / 64, i % 8, (i / 8) % 8, i % 16, 0), "pure function");
+            match d {
+                Some(Fault::Drop) => hits[0] += 1,
+                Some(Fault::Truncate { keep }) => {
+                    assert!((0.0..1.0).contains(&keep));
+                    hits[1] += 1;
+                }
+                Some(Fault::BitFlip { bit, .. }) => {
+                    assert!(bit < 8);
+                    hits[2] += 1;
+                }
+                None => {}
+            }
+        }
+        let shares: Vec<f64> = hits.iter().map(|&h| h as f64 / n as f64).collect();
+        assert!((shares[0] - 0.02).abs() < 0.005, "drop share {shares:?}");
+        assert!((shares[1] - 0.03).abs() < 0.005, "truncate share {shares:?}");
+        assert!((shares[2] - 0.05).abs() < 0.005, "bitflip share {shares:?}");
+    }
+
+    #[test]
+    fn retransmission_attempts_draw_independently() {
+        let p = FaultPlan { seed: 5, drop: 0.5, truncate: 0.0, bitflip: 0.0, death: 0.0 };
+        // with p(drop) = 0.5 per attempt, some send that fails attempt 0
+        // must succeed on a later attempt
+        let mut recovered = false;
+        for c in 0..64 {
+            if p.draw(0, 0, 1, c, 0).is_some() && p.draw(0, 0, 1, c, 1).is_none() {
+                recovered = true;
+            }
+        }
+        assert!(recovered, "fresh draws per attempt");
+    }
+
+    #[test]
+    fn fault_apply_shapes() {
+        let mut pl = vec![0xAAu8; 100];
+        FaultPlan::apply(&Fault::BitFlip { pos: 205, bit: 3 }, &mut pl);
+        assert_eq!(pl[5], 0xAA ^ 0x08);
+        let mut pl = vec![1u8; 100];
+        FaultPlan::apply(&Fault::Truncate { keep: 0.25 }, &mut pl);
+        assert_eq!(pl.len(), 25);
+        // truncation always strictly shrinks a non-empty payload
+        let mut pl = vec![1u8; 4];
+        FaultPlan::apply(&Fault::Truncate { keep: 0.9999 }, &mut pl);
+        assert_eq!(pl.len(), 3);
+        let mut empty: Vec<u8> = Vec::new();
+        FaultPlan::apply(&Fault::BitFlip { pos: 0, bit: 0 }, &mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn resolve_send_policies() {
+        let plan = FaultPlan { seed: 3, drop: 1.0, truncate: 0.0, bitflip: 0.0, death: 0.0 };
+        let payload = vec![7u8; 16];
+        let mut ok = |_: &[u8]| Ok(());
+        // Abort: first detection kills the round
+        let r = resolve_send(&plan, RecoveryPolicy::Abort, 0, 0, 1, 0, &payload, &mut ok);
+        assert!(matches!(r.outcome, SendOutcome::Abort { .. }));
+        assert_eq!((r.injected, r.detected, r.retransmits), (1, 1, 0));
+        // Degrade: becomes a gap without retransmitting
+        let r = resolve_send(&plan, RecoveryPolicy::Degrade, 0, 0, 1, 0, &payload, &mut ok);
+        assert!(matches!(r.outcome, SendOutcome::Gap { .. }));
+        assert_eq!(r.retransmits, 0);
+        // Retry with certain drops: exhausts attempts, gap, backoff doubles
+        let r = resolve_send(
+            &plan,
+            RecoveryPolicy::Retry { max_attempts: 3 },
+            0,
+            0,
+            1,
+            0,
+            &payload,
+            &mut ok,
+        );
+        assert!(matches!(r.outcome, SendOutcome::Gap { .. }));
+        assert_eq!((r.injected, r.detected, r.retransmits), (3, 3, 2));
+        assert!((r.retry_latency_s - RETRY_BACKOFF_S * 3.0).abs() < 1e-12);
+        // no fault: clean delivery of the original bytes
+        let r = resolve_send(
+            &FaultPlan::none(),
+            RecoveryPolicy::Retry { max_attempts: 3 },
+            0,
+            0,
+            1,
+            0,
+            &payload,
+            &mut ok,
+        );
+        match r.outcome {
+            SendOutcome::Deliver { payload: p, silent } => {
+                assert_eq!(p, payload);
+                assert!(!silent);
+            }
+            other => panic!("expected delivery, got {other:?}"),
+        }
+        assert_eq!((r.injected, r.retransmits), (0, 0));
+    }
+
+    #[test]
+    fn resolve_send_detects_and_silently_passes_by_validator() {
+        let plan = FaultPlan { seed: 9, drop: 0.0, truncate: 0.0, bitflip: 1.0, death: 0.0 };
+        let payload = vec![0u8; 32];
+        // strict validator: any change detected → retry recovers nothing
+        // (every attempt flips a bit), ends as a gap
+        let mut strict = |b: &[u8]| {
+            if b == vec![0u8; 32].as_slice() {
+                Ok(())
+            } else {
+                Err("tampered".to_string())
+            }
+        };
+        let r = resolve_send(
+            &plan,
+            RecoveryPolicy::Retry { max_attempts: 2 },
+            0,
+            0,
+            1,
+            0,
+            &payload,
+            &mut strict,
+        );
+        assert!(matches!(r.outcome, SendOutcome::Gap { .. }));
+        // lax validator: the flip sails through as silent corruption
+        let mut lax = |_: &[u8]| Ok(());
+        let r = resolve_send(&plan, RecoveryPolicy::Degrade, 0, 0, 1, 0, &payload, &mut lax);
+        match r.outcome {
+            SendOutcome::Deliver { payload: p, silent } => {
+                assert!(silent);
+                assert_ne!(p, payload);
+            }
+            other => panic!("expected silent delivery, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn death_draws_match_rate() {
+        let p = FaultPlan { seed: 21, drop: 0.0, truncate: 0.0, bitflip: 0.0, death: 0.1 };
+        let n = 20_000u32;
+        let dead = (0..n).filter(|&w| p.dies(0, w)).count();
+        let share = dead as f64 / n as f64;
+        assert!((share - 0.1).abs() < 0.01, "death share {share}");
+        assert!(!FaultPlan::none().dies(0, 0));
     }
 }

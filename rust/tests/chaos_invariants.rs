@@ -1,0 +1,419 @@
+//! Fault-injection acceptance matrix for the chaos layer (ISSUE-9):
+//!
+//! 1. **No-fault bit-identity**: with [`FaultPlan::none`] all three
+//!    backends — `AllReduceEngine::run_chaos`, `EventEngine` and the
+//!    thread-per-worker `Coordinator` — produce payload bytes, values
+//!    and virtual comm times bit-identical to the engines without the
+//!    chaos layer, and report [`RoundOutcome::Clean`] with an all-zero
+//!    [`ChaosStats`].
+//! 2. **Typed termination**: every fault class (drop / truncate /
+//!    bit-flip / worker death, singly and mixed) under every
+//!    [`RecoveryPolicy`] terminates with a typed [`RoundOutcome`] on
+//!    all three backends — never a panic. Coordinator aborts surface as
+//!    a typed `Err` whose next round self-heals.
+//! 3. **CRC + retry recovery**: with the `wire=...+crc` trailer and a
+//!    bounded-retry policy, rounds that report `Recovered` are
+//!    bit-identical in values to the fault-free run (no silent
+//!    corruption can survive the CRC check).
+
+use dynamiq::codec::{CodecSpec, ScratchPool};
+use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
+use dynamiq::coordinator::Coordinator;
+use dynamiq::sim::{ChaosStats, EventEngine, FaultPlan, RecoveryPolicy, RoundOutcome};
+use dynamiq::util::rng::Pcg;
+
+fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn dynamiq::codec::GradCodec>> {
+    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
+}
+
+fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(seed ^ ((i as u64) << 17));
+            (0..d).map(|_| rng.next_normal() * 0.02).collect()
+        })
+        .collect()
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], tag: &str) {
+    assert_eq!(want.len(), got.len(), "{tag}: length");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: value {i}: {a} vs {b}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. FaultPlan::none ⇒ bit-identical to the pre-chaos engines
+// ---------------------------------------------------------------------
+
+/// `run_chaos` with an empty plan is the same computation as
+/// `run_pooled`: values, bytes and every virtual time to the bit, and
+/// the outcome is `Clean` with zeroed stats.
+#[test]
+fn no_fault_sync_engine_is_bit_identical() {
+    for (topo, n, scheme) in [
+        (Topology::Ring, 8, "DynamiQ"),
+        (Topology::Butterfly, 16, "BF16"),
+        (Topology::Ring, 6, "DynamiQ:wire=ranged"),
+        (Topology::Ring, 8, "DynamiQ:wire=packed+crc"),
+    ] {
+        let g = grads(n, 1537, 0xC4A0_5 ^ n as u64);
+        let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+
+        let mut plain_codecs = make_codecs(scheme, n);
+        let mut pool = ScratchPool::new();
+        let (want, want_rep) =
+            eng.run_pooled(&g, &mut plain_codecs, 3, 0.0, &mut pool).expect("plain round");
+
+        let mut chaos_codecs = make_codecs(scheme, n);
+        let mut pool2 = ScratchPool::new();
+        let out = eng
+            .run_chaos(&g, &mut chaos_codecs, 3, 0.0, &mut pool2, &FaultPlan::none(), RecoveryPolicy::Abort)
+            .expect("chaos round");
+
+        let tag = format!("{} n={n} {scheme}", topo.name());
+        assert_bits_eq(&want, &out.result, &tag);
+        assert_eq!(want_rep.rs_bytes, out.report.rs_bytes, "{tag}: rs bytes");
+        assert_eq!(want_rep.ag_bytes, out.report.ag_bytes, "{tag}: ag bytes");
+        assert_eq!(want_rep.meta_bytes, out.report.meta_bytes, "{tag}: meta bytes");
+        assert_eq!(
+            want_rep.rs_time_s.to_bits(),
+            out.report.rs_time_s.to_bits(),
+            "{tag}: rs time"
+        );
+        assert_eq!(
+            want_rep.ag_time_s.to_bits(),
+            out.report.ag_time_s.to_bits(),
+            "{tag}: ag time"
+        );
+        assert_eq!(out.outcome, RoundOutcome::Clean, "{tag}: outcome");
+        assert_eq!(out.stats, ChaosStats::default(), "{tag}: stats");
+    }
+}
+
+/// The event backend's default (empty) fault plan leaves it
+/// bit-identical to the sync engine, with a `Clean` outcome and
+/// all-zero chaos tally.
+#[test]
+fn no_fault_event_backend_is_bit_identical() {
+    for (topo, n, scheme) in
+        [(Topology::Ring, 8, "DynamiQ"), (Topology::Butterfly, 16, "BF16")]
+    {
+        let g = grads(n, 2051, 0xE0_77 ^ n as u64);
+        let net = NetworkModel::isolated_100g();
+
+        let mut sync_codecs = make_codecs(scheme, n);
+        let eng = AllReduceEngine::new(topo, net.clone());
+        let (want, want_rep) = eng.run(&g, &mut sync_codecs, 2, 0.0).expect("sync round");
+
+        let mut event_codecs = make_codecs(scheme, n);
+        let ev = EventEngine::new(topo, net);
+        assert!(ev.fault_plan.is_none(), "default event plan must be empty");
+        let (got, got_rep, stats) = ev.run(&g, &mut event_codecs, 2, 0.0).expect("event round");
+
+        let tag = format!("{} n={n} {scheme}", topo.name());
+        assert_bits_eq(&want, &got, &tag);
+        assert_eq!(want_rep.rs_bytes, got_rep.rs_bytes, "{tag}: rs bytes");
+        assert_eq!(want_rep.ag_bytes, got_rep.ag_bytes, "{tag}: ag bytes");
+        assert_eq!(want_rep.rs_time_s.to_bits(), got_rep.rs_time_s.to_bits(), "{tag}: rs time");
+        assert_eq!(want_rep.ag_time_s.to_bits(), got_rep.ag_time_s.to_bits(), "{tag}: ag time");
+        assert_eq!(stats.outcome, RoundOutcome::Clean, "{tag}: outcome");
+        assert_eq!(stats.chaos, ChaosStats::default(), "{tag}: chaos tally");
+    }
+}
+
+/// The coordinator's default (empty) fault plan leaves its per-worker
+/// outputs bit-identical to the sync engine, with all-zero per-worker
+/// tallies and a `Clean` summary.
+#[test]
+fn no_fault_coordinator_is_bit_identical() {
+    let (topo, n, scheme) = (Topology::Ring, 6, "DynamiQ");
+    let g = grads(n, 1201, 0x0C0_0D);
+
+    let mut sync_codecs = make_codecs(scheme, n);
+    let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+    let (want, _) = eng.run(&g, &mut sync_codecs, 1, 0.0).expect("sync round");
+
+    let mut co = Coordinator::new(topo, make_codecs(scheme, n)).expect("coordinator spawns");
+    assert!(co.fault_plan.is_none(), "default coordinator plan must be empty");
+    let rounds = co.run_round(&g, 1).expect("coordinator round");
+    for wr in &rounds {
+        assert_bits_eq(&want, &wr.aggregated, &format!("worker {}", wr.worker));
+        assert_eq!(wr.chaos, ChaosStats::default(), "worker {} tally", wr.worker);
+    }
+    let (total, outcome) = co.chaos_summary(1, &rounds);
+    assert_eq!(outcome, RoundOutcome::Clean);
+    assert_eq!(total, ChaosStats::default());
+}
+
+// ---------------------------------------------------------------------
+// 2. Every fault class × policy terminates with a typed outcome
+// ---------------------------------------------------------------------
+
+fn fault_matrix() -> Vec<(&'static str, FaultPlan)> {
+    vec![
+        ("drop", FaultPlan { seed: 11, drop: 0.25, truncate: 0.0, bitflip: 0.0, death: 0.0 }),
+        ("truncate", FaultPlan { seed: 12, drop: 0.0, truncate: 0.25, bitflip: 0.0, death: 0.0 }),
+        ("bitflip", FaultPlan { seed: 13, drop: 0.0, truncate: 0.0, bitflip: 0.25, death: 0.0 }),
+        ("mixed", FaultPlan::uniform(14, 0.12)),
+        ("death", FaultPlan { seed: 15, drop: 0.05, truncate: 0.0, bitflip: 0.0, death: 0.35 }),
+    ]
+}
+
+fn policy_matrix() -> [(&'static str, RecoveryPolicy); 3] {
+    [
+        ("abort", RecoveryPolicy::Abort),
+        ("degrade", RecoveryPolicy::Degrade),
+        ("retry", RecoveryPolicy::Retry { max_attempts: 4 }),
+    ]
+}
+
+/// Outcome/stats consistency shared by the backends: the tag matches
+/// the tally that produced it, and degradation is always accounted.
+fn check_outcome(outcome: &RoundOutcome, stats: &ChaosStats, tag: &str) {
+    match outcome {
+        RoundOutcome::Clean => {
+            assert_eq!(stats.injected, 0, "{tag}: clean rounds inject nothing");
+            assert!(stats.dead_workers.is_empty(), "{tag}: clean rounds have no deaths");
+        }
+        RoundOutcome::Recovered { retransmits, .. } => {
+            assert!(stats.injected > 0, "{tag}: recovery implies injection");
+            assert_eq!(stats.substituted, 0, "{tag}: recovery implies no gaps");
+            assert_eq!(u64::from(*retransmits), stats.retransmits, "{tag}: retransmit tally");
+        }
+        RoundOutcome::Degraded { dead_workers, .. } => {
+            assert!(
+                stats.injected > 0 || !dead_workers.is_empty(),
+                "{tag}: degradation implies injection or death"
+            );
+        }
+        RoundOutcome::Aborted { reason } => {
+            assert!(!reason.is_empty(), "{tag}: abort carries a reason");
+        }
+    }
+}
+
+/// The sync engine's `run_chaos` never panics and always returns a
+/// typed outcome across the full fault × policy matrix.
+#[test]
+fn sync_engine_terminates_typed_across_fault_matrix() {
+    let (topo, n) = (Topology::Ring, 8);
+    let g = grads(n, 769, 0xFA_17);
+    let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+    for (fname, plan) in fault_matrix() {
+        for (pname, policy) in policy_matrix() {
+            let mut codecs = make_codecs("DynamiQ", n);
+            let mut pool = ScratchPool::new();
+            let out = eng
+                .run_chaos(&g, &mut codecs, 5, 0.0, &mut pool, &plan, policy)
+                .expect("faulted rounds still terminate");
+            let tag = format!("sync {fname}/{pname}");
+            check_outcome(&out.outcome, &out.stats, &tag);
+            assert!(
+                !plan.is_none() || out.outcome == RoundOutcome::Clean,
+                "{tag}: plan fired"
+            );
+            assert_eq!(out.result.len(), g[0].len(), "{tag}: full-length result");
+            assert!(out.result.iter().all(|v| v.is_finite()), "{tag}: finite values");
+        }
+    }
+}
+
+/// The event backend never panics and always attaches a typed outcome
+/// to its stats across the full fault × policy matrix.
+#[test]
+fn event_backend_terminates_typed_across_fault_matrix() {
+    let (topo, n) = (Topology::Ring, 8);
+    let g = grads(n, 769, 0xFA_17);
+    for (fname, plan) in fault_matrix() {
+        for (pname, policy) in policy_matrix() {
+            let mut ev = EventEngine::new(topo, NetworkModel::isolated_100g());
+            ev.fault_plan = plan;
+            ev.recovery = policy;
+            let mut codecs = make_codecs("DynamiQ", n);
+            let (out, _, stats) =
+                ev.run(&g, &mut codecs, 5, 0.0).expect("faulted rounds still terminate");
+            let tag = format!("event {fname}/{pname}");
+            check_outcome(&stats.outcome, &stats.chaos, &tag);
+            assert_eq!(out.len(), g[0].len(), "{tag}: full-length result");
+            assert!(out.iter().all(|v| v.is_finite()), "{tag}: finite values");
+        }
+    }
+}
+
+/// The coordinator never panics across the matrix: aborts surface as a
+/// typed `Err` (and the next round self-heals — see the coordinator's
+/// own tests), everything else returns per-worker rounds whose merged
+/// tally is consistent with its outcome.
+#[test]
+fn coordinator_terminates_typed_across_fault_matrix() {
+    let (topo, n) = (Topology::Ring, 6);
+    let g = grads(n, 577, 0x0FA_17A);
+    for (fname, plan) in fault_matrix() {
+        for (pname, policy) in policy_matrix() {
+            let mut co =
+                Coordinator::new(topo, make_codecs("DynamiQ", n)).expect("coordinator spawns");
+            co.fault_plan = plan;
+            co.recovery = policy;
+            let tag = format!("coordinator {fname}/{pname}");
+            match co.run_round(&g, 5) {
+                Ok(rounds) => {
+                    let (total, outcome) = co.chaos_summary(5, &rounds);
+                    check_outcome(&outcome, &total, &tag);
+                    for wr in &rounds {
+                        assert_eq!(wr.aggregated.len(), g[0].len(), "{tag}: full length");
+                    }
+                }
+                Err(e) => {
+                    assert_eq!(pname, "abort", "{tag}: only Abort may fail the round: {e}");
+                    assert!(
+                        e.to_string().contains("aborted under fault injection"),
+                        "{tag}: typed abort error, got: {e}"
+                    );
+                    // a clean plan afterwards must run again (self-heal)
+                    co.fault_plan = FaultPlan::none();
+                    co.run_round(&g, 6).expect("coordinator recovers after an aborted round");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. CRC + bounded retry: recovered rounds are value-bit-identical
+// ---------------------------------------------------------------------
+
+/// With the CRC trailer no corruption passes validation, so a round the
+/// sync backend reports as `Recovered` carries exactly the fault-free
+/// values; the wire pays for the retransmissions and the clock for the
+/// backoff.
+#[test]
+fn crc_retry_recovered_rounds_are_bit_identical() {
+    let (topo, n, scheme) = (Topology::Ring, 8, "DynamiQ:wire=packed+crc");
+    let g = grads(n, 1537, 0x5EED_5);
+    let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+
+    let mut clean_codecs = make_codecs(scheme, n);
+    let mut pool = ScratchPool::new();
+    let (want, want_rep) =
+        eng.run_pooled(&g, &mut clean_codecs, 7, 0.0, &mut pool).expect("clean round");
+
+    let plan = FaultPlan::uniform(21, 0.15);
+    let policy = RecoveryPolicy::Retry { max_attempts: 16 };
+    let mut codecs = make_codecs(scheme, n);
+    let mut pool2 = ScratchPool::new();
+    let out = eng
+        .run_chaos(&g, &mut codecs, 7, 0.0, &mut pool2, &plan, policy)
+        .expect("faulted round");
+
+    assert_eq!(out.outcome.tag(), "recovered", "all faults must be repaired: {:?}", out.outcome);
+    assert_eq!(out.stats.silent, 0, "CRC admits no silent corruption");
+    assert_eq!(out.stats.substituted, 0, "full recovery leaves no gaps");
+    assert!(out.stats.retransmits > 0, "the plan must actually have fired");
+    assert_bits_eq(&want, &out.result, "crc+retry");
+    // retransmissions are charged per attempt; backoff extends the clock
+    assert!(
+        out.report.rs_bytes + out.report.ag_bytes > want_rep.rs_bytes + want_rep.ag_bytes,
+        "retransmitted bytes must be priced"
+    );
+    assert!(
+        out.report.rs_time_s + out.report.ag_time_s
+            > want_rep.rs_time_s + want_rep.ag_time_s,
+        "retry backoff must extend the faulted stages"
+    );
+}
+
+/// The same property on the event backend: CRC + bounded retry with a
+/// recovered outcome reproduces the fault-free values bit-for-bit.
+#[test]
+fn crc_retry_event_backend_values_survive() {
+    let (topo, n, scheme) = (Topology::Ring, 8, "DynamiQ:wire=packed+crc");
+    let g = grads(n, 1537, 0x5EED_5);
+    let net = NetworkModel::isolated_100g();
+
+    let mut clean_codecs = make_codecs(scheme, n);
+    let clean = EventEngine::new(topo, net.clone());
+    let (want, _, _) = clean.run(&g, &mut clean_codecs, 7, 0.0).expect("clean round");
+
+    let mut ev = EventEngine::new(topo, net);
+    ev.fault_plan = FaultPlan::uniform(21, 0.15);
+    ev.recovery = RecoveryPolicy::Retry { max_attempts: 16 };
+    let mut codecs = make_codecs(scheme, n);
+    let (got, _, stats) = ev.run(&g, &mut codecs, 7, 0.0).expect("faulted round");
+
+    assert_eq!(
+        stats.outcome.tag(),
+        "recovered",
+        "all faults must be repaired: {:?}",
+        stats.outcome
+    );
+    assert_eq!(stats.chaos.silent, 0, "CRC admits no silent corruption");
+    assert!(stats.chaos.retransmits > 0, "the plan must actually have fired");
+    assert_bits_eq(&want, &got, "event crc+retry");
+}
+
+/// Death rounds degrade but still aggregate the survivors: the result
+/// is finite, the dead are reported, and the immediately following
+/// clean round (new schedules, no deaths) is bit-identical to the
+/// fault-free engine again.
+#[test]
+fn death_round_degrades_then_next_round_runs_clean() {
+    let (topo, n) = (Topology::Ring, 8);
+    let g = grads(n, 911, 0xDEAD_5EED);
+    let plan = FaultPlan { seed: 9, drop: 0.0, truncate: 0.0, bitflip: 0.0, death: 0.3 };
+    // find a round where at least one worker dies (seeded ⇒ deterministic)
+    let round = (0..200)
+        .find(|&r| (0..n as u32).any(|w| plan.dies(r, w)))
+        .expect("a death must occur within 200 rounds at rate 0.3");
+
+    let eng = AllReduceEngine::new(topo, NetworkModel::isolated_100g());
+    let mut codecs = make_codecs("BF16", n);
+    let mut pool = ScratchPool::new();
+    let out = eng
+        .run_chaos(&g, &mut codecs, round, 0.0, &mut pool, &plan, RecoveryPolicy::Degrade)
+        .expect("death round terminates");
+    assert_eq!(out.outcome.tag(), "degraded", "deaths degrade the round");
+    assert!(!out.stats.dead_workers.is_empty(), "the dead are reported");
+    assert!(out.result.iter().all(|v| v.is_finite()), "survivor aggregate is finite");
+
+    // the driver rebuilds/continues: a later fault-free round is clean
+    let quiet = (round + 1..round + 400)
+        .find(|&r| (0..n as u32).all(|w| !plan.dies(r, w)))
+        .expect("a death-free round must occur");
+    let mut codecs2 = make_codecs("BF16", n);
+    let mut pool2 = ScratchPool::new();
+    let next = eng
+        .run_chaos(&g, &mut codecs2, quiet, 0.0, &mut pool2, &plan, RecoveryPolicy::Degrade)
+        .expect("follow-up round");
+    let mut plain = make_codecs("BF16", n);
+    let mut pool3 = ScratchPool::new();
+    let (want, _) = eng.run_pooled(&g, &mut plain, quiet, 0.0, &mut pool3).expect("plain round");
+    assert!(next.stats.dead_workers.is_empty(), "no deaths in the quiet round");
+    assert_bits_eq(&want, &next.result, "post-death clean round");
+}
+
+/// Cross-pin of the seeded fault draws against `python/validate_chaos.py`
+/// (`GOLDEN_KEYS` / `print_golden()` there): both implementations must
+/// produce these exact values — drift on either side fails one suite.
+#[test]
+fn fault_draws_match_the_python_oracle() {
+    use dynamiq::sim::Fault;
+
+    let plan = FaultPlan::uniform(41, 0.15);
+    assert_eq!(plan.draw(0, 1, 2, 3, 0), None);
+    assert_eq!(plan.draw(0, 1, 2, 3, 2), Some(Fault::BitFlip { pos: 3_261_796_717, bit: 7 }));
+    assert_eq!(plan.draw(1, 1, 2, 3, 1), Some(Fault::Drop));
+    // keep is a u32 hash draw over 2^32 — exact in f64 on both sides
+    assert_eq!(
+        plan.draw(3, 1, 2, 3, 0),
+        Some(Fault::Truncate { keep: 3_420_273_902u32 as f64 / 4_294_967_296.0 })
+    );
+
+    // death draws of the chaos experiment's part-3 plan (seed 5, 5%)
+    let death = FaultPlan { seed: 5, drop: 0.01, truncate: 0.0, bitflip: 0.0, death: 0.05 };
+    let dead = |round: u32| -> Vec<u32> { (0..12).filter(|&w| death.dies(round, w)).collect() };
+    assert_eq!(dead(0), vec![2, 4, 10]);
+    assert_eq!(dead(1), vec![11]);
+    assert_eq!(dead(3), Vec::<u32>::new());
+    assert_eq!(dead(5), vec![4, 5]);
+}
