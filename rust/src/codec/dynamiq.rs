@@ -198,6 +198,21 @@ impl DynamiqConfig {
         }
     }
 
+    /// Mean width-header overhead in bits per entry for one chunk of a
+    /// `d`-entry gradient split `n` ways: `width_code_bits()` per
+    /// super-group plus the 8-bit set id, amortized over the chunk's
+    /// entries. Equal-wire budget solvers (the hier sweep, the planner's
+    /// `level_budgets_for`) subtract this from every levelled budget so
+    /// levelled and uniform configurations compare at equal wire bytes —
+    /// keep the float arithmetic exactly as written (`python/
+    /// validate_plan.py` mirrors it term for term).
+    pub fn header_bits_per_entry(&self, d: usize, n: usize) -> f64 {
+        let sg = self.layout.super_group as f64;
+        let code_bits = self.width_code_bits() as f64;
+        let sg_per_chunk = ((d as f64 / n as f64) / sg).max(1.0);
+        (code_bits * sg_per_chunk + 8.0) / (sg_per_chunk * sg)
+    }
+
     /// Fixed width used when variable bitwidth allocation is disabled: the
     /// largest allowed width fitting the payload budget.
     fn fixed_width(&self, budget_bits: f64) -> u32 {

@@ -102,79 +102,192 @@ pub fn hop_level(levels: &[LevelSpec], a: u32, b: u32) -> usize {
     lvl
 }
 
-/// Hierarchical reduce-scatter: `n = ∏ sizes` chunks, chunk `c` sinks at
-/// worker `c`. Assumes `validate_levels` passed.
-pub fn reduce_scatter(levels: &[LevelSpec]) -> Schedule {
-    let n = total_workers(levels);
-    let st = strides(levels);
-    let mut sched: Schedule = vec![Vec::new(); rs_stages(levels)];
-    let mut offset = 0usize; // first stage of the current level
-    for (l, spec) in levels.iter().enumerate() {
-        let m = spec.size;
-        let group = st[l] * m; // worker-id span of one level-l group
-        let n_groups = n / group; // combinations of digits above l
-        // one arborescence per sink digit, shared by all chunks/groups
-        let arbs: Vec<Vec<(u32, u32)>> = (0..m).map(|j| spec.topo.arborescence(m, j)).collect();
-        for c in 0..n {
-            let j = (c / st[l]) % m; // the chunk's digit at this level
-            let low = c % st[l]; // lower digits pinned to the chunk's
-            for h in 0..n_groups {
-                let base = low + h * group;
-                for (a, &(p, s)) in arbs[j].iter().enumerate() {
+/// Cached per-stage generator tables for one level composition: the
+/// hierarchy half of [`super::topology::StagePlan`].
+///
+/// Construction cost is per-*level* (each level's flat schedule built
+/// once, every sink digit's arborescence extracted from that one build),
+/// not per-chunk and not per-candidate-worker-count — `O(Σ mₗ²·stagesₗ)`
+/// table entries instead of the `O(n · Σ stagesₗ)` hop materialization of
+/// the full schedule. Emitting one stage then walks `n` chunks against
+/// the small per-digit tables, in exactly the order the materialized
+/// builders used, so a stage emitted here is hop-for-hop the stage slice
+/// of [`reduce_scatter`]/[`all_gather`] (which now delegate to it).
+pub struct HierStages {
+    n: usize,
+    strides: Vec<usize>,
+    sizes: Vec<usize>,
+    /// first global reduce-scatter stage of each level (innermost first)
+    rs_offsets: Vec<usize>,
+    /// first global all-gather stage of each level (top level first)
+    ag_offsets: Vec<usize>,
+    rs_total: usize,
+    ag_total: usize,
+    /// `rs_tables[l][local_s][j]` = `(a, p)` sender/parent digit pairs of
+    /// sink-digit `j`'s level-`l` arborescence firing at that local
+    /// stage, ascending `a`, gateway (`a == j`) excluded
+    rs_tables: Vec<Vec<Vec<Vec<(u32, u32)>>>>,
+    /// `ag_tables[l][local_s][j]` = `(from, to)` digit pairs of the flat
+    /// all-gather stage carrying chunk-digit `j`, in flat-schedule order
+    ag_tables: Vec<Vec<Vec<Vec<(u32, u32)>>>>,
+}
+
+impl HierStages {
+    /// Build the per-level stage tables. Assumes `validate_levels` passed.
+    pub fn new(levels: &[LevelSpec]) -> HierStages {
+        let n = total_workers(levels);
+        let st = strides(levels);
+        let mut rs_offsets = Vec::with_capacity(levels.len());
+        let mut acc = 0usize;
+        for spec in levels {
+            rs_offsets.push(acc);
+            acc += spec.topo.rs_stages(spec.size);
+        }
+        let rs_total = acc;
+        // all-gather stage offsets: the TOP level broadcasts first
+        let mut ag_offsets = vec![0usize; levels.len()];
+        let mut acc = 0usize;
+        for l in (0..levels.len()).rev() {
+            ag_offsets[l] = acc;
+            acc += levels[l].topo.ag_stages(levels[l].size);
+        }
+        let ag_total = acc;
+        let mut rs_tables = Vec::with_capacity(levels.len());
+        let mut ag_tables = Vec::with_capacity(levels.len());
+        for spec in levels {
+            let m = spec.size;
+            let stages = spec.topo.rs_stages(m);
+            // one arborescence per sink digit, from ONE flat build
+            let arbs = spec.topo.arborescences(m);
+            let mut by_stage = vec![vec![Vec::new(); m]; stages];
+            for (j, arb) in arbs.iter().enumerate() {
+                for (a, &(p, s)) in arb.iter().enumerate() {
                     if a == j {
                         continue; // the group's gateway receives, not sends
                     }
-                    sched[offset + s as usize].push(Hop {
-                        from: (base + a * st[l]) as u32,
-                        to: (base + p as usize * st[l]) as u32,
+                    by_stage[s as usize][j].push((a as u32, p));
+                }
+            }
+            rs_tables.push(by_stage);
+            let flat = spec.topo.all_gather(m);
+            let mut by_stage = vec![vec![Vec::new(); m]; flat.len()];
+            for (s, hops) in flat.iter().enumerate() {
+                for hp in hops {
+                    by_stage[s][hp.chunk as usize].push((hp.from, hp.to));
+                }
+            }
+            ag_tables.push(by_stage);
+        }
+        HierStages {
+            n,
+            strides: st,
+            sizes: levels.iter().map(|l| l.size).collect(),
+            rs_offsets,
+            ag_offsets,
+            rs_total,
+            ag_total,
+            rs_tables,
+            ag_tables,
+        }
+    }
+
+    /// Total reduce-scatter stages.
+    pub fn rs_stages(&self) -> usize {
+        self.rs_total
+    }
+
+    /// Total all-gather stages.
+    pub fn ag_stages(&self) -> usize {
+        self.ag_total
+    }
+
+    /// Which level global stage `s` belongs to, given per-level offsets:
+    /// the last level whose offset is ≤ `s` among those with stages.
+    fn level_of(&self, offsets: &[usize], totals: impl Fn(usize) -> usize, s: usize) -> usize {
+        let mut found = 0;
+        for (l, &off) in offsets.iter().enumerate() {
+            if s >= off && s < off + totals(l) {
+                found = l;
+            }
+        }
+        found
+    }
+
+    /// Emit reduce-scatter stage `s` into `out` (appending; callers
+    /// clear). Hop order is identical to [`reduce_scatter`]'s stage slice.
+    pub fn rs_stage_into(&self, s: usize, out: &mut Vec<Hop>) {
+        let l = self.level_of(&self.rs_offsets, |l| self.rs_tables[l].len(), s);
+        let local = s - self.rs_offsets[l];
+        let (n, st, m) = (self.n, self.strides[l], self.sizes[l]);
+        let group = st * m; // worker-id span of one level-l group
+        let n_groups = n / group; // combinations of digits above l
+        let table = &self.rs_tables[l][local];
+        for c in 0..n {
+            let j = (c / st) % m; // the chunk's digit at this level
+            let low = c % st; // lower digits pinned to the chunk's
+            for h in 0..n_groups {
+                let base = low + h * group;
+                for &(a, p) in &table[j] {
+                    out.push(Hop {
+                        from: (base + a as usize * st) as u32,
+                        to: (base + p as usize * st) as u32,
                         chunk: c as u32,
                     });
                 }
             }
         }
-        offset += spec.topo.rs_stages(m);
     }
-    sched
+
+    /// Emit all-gather stage `s` into `out` (appending; callers clear).
+    /// Hop order is identical to [`all_gather`]'s stage slice.
+    pub fn ag_stage_into(&self, s: usize, out: &mut Vec<Hop>) {
+        let l = self.level_of(&self.ag_offsets, |l| self.ag_tables[l].len(), s);
+        let local = s - self.ag_offsets[l];
+        let (n, st, m) = (self.n, self.strides[l], self.sizes[l]);
+        let group = st * m;
+        let n_groups = n / group;
+        let table = &self.ag_tables[l][local];
+        for c in 0..n {
+            let j = (c / st) % m;
+            let low = c % st;
+            for &(from, to) in &table[j] {
+                for h in 0..n_groups {
+                    let base = low + h * group;
+                    out.push(Hop {
+                        from: (base + from as usize * st) as u32,
+                        to: (base + to as usize * st) as u32,
+                        chunk: c as u32,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Hierarchical reduce-scatter: `n = ∏ sizes` chunks, chunk `c` sinks at
+/// worker `c`. Assumes `validate_levels` passed.
+pub fn reduce_scatter(levels: &[LevelSpec]) -> Schedule {
+    let plan = HierStages::new(levels);
+    (0..plan.rs_stages())
+        .map(|s| {
+            let mut hops = Vec::new();
+            plan.rs_stage_into(s, &mut hops);
+            hops
+        })
+        .collect()
 }
 
 /// Hierarchical all-gather: broadcast chunk `c`'s payload from worker `c`
 /// to everyone, top level first. Assumes `validate_levels` passed.
 pub fn all_gather(levels: &[LevelSpec]) -> Schedule {
-    let n = total_workers(levels);
-    let st = strides(levels);
-    let mut sched: Schedule = vec![Vec::new(); ag_stages(levels)];
-    // stage offset per level: the TOP level broadcasts first
-    let mut offsets = vec![0usize; levels.len()];
-    {
-        let mut acc = 0usize;
-        for l in (0..levels.len()).rev() {
-            offsets[l] = acc;
-            acc += levels[l].topo.ag_stages(levels[l].size);
-        }
-    }
-    for (l, spec) in levels.iter().enumerate() {
-        let m = spec.size;
-        let group = st[l] * m;
-        let n_groups = n / group;
-        let flat = spec.topo.all_gather(m);
-        for c in 0..n {
-            let j = (c / st[l]) % m;
-            let low = c % st[l];
-            for (s, hops) in flat.iter().enumerate() {
-                for hp in hops.iter().filter(|hp| hp.chunk as usize == j) {
-                    for h in 0..n_groups {
-                        let base = low + h * group;
-                        sched[offsets[l] + s].push(Hop {
-                            from: (base + hp.from as usize * st[l]) as u32,
-                            to: (base + hp.to as usize * st[l]) as u32,
-                            chunk: c as u32,
-                        });
-                    }
-                }
-            }
-        }
-    }
-    sched
+    let plan = HierStages::new(levels);
+    (0..plan.ag_stages())
+        .map(|s| {
+            let mut hops = Vec::new();
+            plan.ag_stage_into(s, &mut hops);
+            hops
+        })
+        .collect()
 }
 
 #[cfg(test)]

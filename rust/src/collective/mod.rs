@@ -18,15 +18,22 @@
 pub mod allreduce;
 pub mod hierarchy;
 pub mod network;
+pub mod planner;
 pub mod topology;
 
 pub use allreduce::{
     bucket_of, build_bucket_chains, hop_context, produce_hop, AllReduceEngine, ChaosRound,
     KernelCounters, PipelineCfg, RoundReport,
 };
-pub use hierarchy::LevelSpec;
+pub use hierarchy::{HierStages, LevelSpec};
 pub use network::{
     pipeline_compute_time, price_pipeline, price_stage_walk, BucketChain, LinkClass, LinkSpec,
     NetworkModel, NicProfile, PipeJob, PipelineSchedule,
 };
-pub use topology::{stage_census, HierarchySpec, Level, LevelStack, Topology, TopologyError};
+pub use planner::{
+    enumerate_candidates, payload_model, plan, plan_pipeline, uniform_wire_bits, Candidate,
+    DryRunPricer, FabricSpec, PayloadModel, Plan, PlanError, PlanRequest, PipelinePick,
+};
+pub use topology::{
+    stage_census, HierarchySpec, Level, LevelStack, StagePlan, Topology, TopologyError,
+};

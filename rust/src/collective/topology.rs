@@ -178,52 +178,51 @@ impl Level {
     }
 
     /// Reduce-scatter schedule for `n` workers (`n` chunks, chunk c sinks
-    /// at worker c). Assumes `validate(n)` passed.
+    /// at worker c). Assumes `validate(n)` passed. Delegates to the
+    /// per-stage generator so materialized schedules and the planner's
+    /// dry-run walk are the same construction by definition.
     pub(crate) fn reduce_scatter(&self, n: usize) -> Schedule {
+        (0..self.rs_stages(n))
+            .map(|s| {
+                let mut hops = Vec::new();
+                self.rs_stage_into(n, s, &mut hops);
+                hops
+            })
+            .collect()
+    }
+
+    /// Emit reduce-scatter stage `s` into `out` (appending; callers clear).
+    /// Hop order is the schedule's stage-slice order — the dry-run pricer
+    /// depends on it bit-for-bit, so never reorder.
+    pub(crate) fn rs_stage_into(&self, n: usize, s: usize, out: &mut Vec<Hop>) {
         match self {
             Level::Ring => {
                 // stage s: worker (c + 1 + s) sends chunk c to (c + 2 + s),
                 // for every c concurrently. After n−1 stages chunk c rests
                 // at worker c.
-                (0..n - 1)
-                    .map(|s| {
-                        (0..n)
-                            .map(|c| {
-                                let from = (c + 1 + s) % n;
-                                let to = (from + 1) % n;
-                                Hop { from: from as u32, to: to as u32, chunk: c as u32 }
-                            })
-                            .collect()
-                    })
-                    .collect()
+                for c in 0..n {
+                    let from = (c + 1 + s) % n;
+                    let to = (from + 1) % n;
+                    out.push(Hop { from: from as u32, to: to as u32, chunk: c as u32 });
+                }
             }
             Level::Butterfly => {
-                let l = n.trailing_zeros();
+                let l = n.trailing_zeros() as usize;
                 // stage s ∈ 0..L: distance bit = L−1−s. Worker w sends, for
                 // every chunk c that lies across that bit from w while
                 // agreeing on all higher bits, its partial to w ^ bit.
-                (0..l)
-                    .map(|s| {
-                        let bit = 1usize << (l - 1 - s);
-                        let mut hops = Vec::new();
-                        for w in 0..n {
-                            let p = w ^ bit;
-                            for c in 0..n {
-                                let high_mask = !(2 * bit - 1);
-                                let agrees_high = (c & high_mask) == (w & high_mask);
-                                let across = (c & bit) != (w & bit);
-                                if agrees_high && across {
-                                    hops.push(Hop {
-                                        from: w as u32,
-                                        to: p as u32,
-                                        chunk: c as u32,
-                                    });
-                                }
-                            }
+                let bit = 1usize << (l - 1 - s);
+                for w in 0..n {
+                    let p = w ^ bit;
+                    for c in 0..n {
+                        let high_mask = !(2 * bit - 1);
+                        let agrees_high = (c & high_mask) == (w & high_mask);
+                        let across = (c & bit) != (w & bit);
+                        if agrees_high && across {
+                            out.push(Hop { from: w as u32, to: p as u32, chunk: c as u32 });
                         }
-                        hops
-                    })
-                    .collect()
+                    }
+                }
             }
         }
     }
@@ -231,47 +230,42 @@ impl Level {
     /// All-gather schedule: broadcast chunk c's final payload from its sink
     /// to everyone. Assumes `validate(n)` passed.
     pub(crate) fn all_gather(&self, n: usize) -> Schedule {
+        (0..self.ag_stages(n))
+            .map(|s| {
+                let mut hops = Vec::new();
+                self.ag_stage_into(n, s, &mut hops);
+                hops
+            })
+            .collect()
+    }
+
+    /// Emit all-gather stage `s` into `out` (appending; callers clear).
+    /// Same ordering contract as [`Level::rs_stage_into`].
+    pub(crate) fn ag_stage_into(&self, n: usize, s: usize, out: &mut Vec<Hop>) {
         match self {
             Level::Ring => {
                 // stage s: worker (c + s) forwards chunk c to (c + s + 1)
-                (0..n - 1)
-                    .map(|s| {
-                        (0..n)
-                            .map(|c| {
-                                let from = (c + s) % n;
-                                let to = (from + 1) % n;
-                                Hop { from: from as u32, to: to as u32, chunk: c as u32 }
-                            })
-                            .collect()
-                    })
-                    .collect()
+                for c in 0..n {
+                    let from = (c + s) % n;
+                    let to = (from + 1) % n;
+                    out.push(Hop { from: from as u32, to: to as u32, chunk: c as u32 });
+                }
             }
             Level::Butterfly => {
-                let l = n.trailing_zeros();
                 // recursive doubling: stage s exchanges across bit 2^s; a
                 // worker forwards every chunk it already holds.
-                (0..l)
-                    .map(|s| {
-                        let bit = 1usize << s;
-                        let mut hops = Vec::new();
-                        for w in 0..n {
-                            let p = w ^ bit;
-                            // chunks w holds before stage s: those agreeing
-                            // with w on bits ≥ s (i.e. received in earlier
-                            // doubling stages) — c ^ w has only bits < 2^s
-                            for c in 0..n {
-                                if (c ^ w) & !(bit - 1) == 0 {
-                                    hops.push(Hop {
-                                        from: w as u32,
-                                        to: p as u32,
-                                        chunk: c as u32,
-                                    });
-                                }
-                            }
+                let bit = 1usize << s;
+                for w in 0..n {
+                    let p = w ^ bit;
+                    // chunks w holds before stage s: those agreeing
+                    // with w on bits ≥ s (i.e. received in earlier
+                    // doubling stages) — c ^ w has only bits < 2^s
+                    for c in 0..n {
+                        if (c ^ w) & !(bit - 1) == 0 {
+                            out.push(Hop { from: w as u32, to: p as u32, chunk: c as u32 });
                         }
-                        hops
-                    })
-                    .collect()
+                    }
+                }
             }
         }
     }
@@ -280,6 +274,15 @@ impl Level {
     /// sink has parent = itself and stage = `u32::MAX`.
     pub(crate) fn arborescence(&self, n: usize, chunk: usize) -> Vec<(u32, u32)> {
         arborescence_of(&self.reduce_scatter(n), n, chunk)
+    }
+
+    /// All `n` chunk arborescences from **one** schedule build — the
+    /// hierarchy composer asks for every chunk's tree per level, and
+    /// building the level schedule once instead of once per chunk is what
+    /// lets the planner instantiate thousands of candidate shapes.
+    pub(crate) fn arborescences(&self, n: usize) -> Vec<Vec<(u32, u32)>> {
+        let sched = self.reduce_scatter(n);
+        (0..n).map(|chunk| arborescence_of(&sched, n, chunk)).collect()
     }
 }
 
@@ -315,6 +318,63 @@ fn arborescence_of(sched: &Schedule, n: usize, chunk: usize) -> Vec<(u32, u32)> 
         }
     }
     parent
+}
+
+/// A per-stage schedule generator for one `(topology, n)` instantiation:
+/// emits any reduce-scatter or all-gather stage on demand into a caller
+/// buffer, without materializing the `Vec<Vec<Hop>>` schedule. This is
+/// the planner's dry-run costing substrate — pricing a candidate shape
+/// needs one reused hop buffer instead of a full schedule allocation per
+/// candidate, which is what lets [`crate::collective::planner`] scan
+/// thousands of shapes. The materialized
+/// [`Topology::try_reduce_scatter`]/[`Topology::try_all_gather`] builders
+/// route through the same generator, so dry-run and materialized walks
+/// agree hop-for-hop *by construction* (pinned bit-for-bit by
+/// `tests/planner_invariants`).
+pub struct StagePlan {
+    inner: PlanInner,
+}
+
+enum PlanInner {
+    /// A flat single-level topology over `n` workers.
+    Flat { level: Level, n: usize },
+    /// A multi-level composition with cached per-level stage tables.
+    Hier(hierarchy::HierStages),
+}
+
+impl StagePlan {
+    /// Number of reduce-scatter stages.
+    pub fn rs_stages(&self) -> usize {
+        match &self.inner {
+            PlanInner::Flat { level, n } => level.rs_stages(*n),
+            PlanInner::Hier(h) => h.rs_stages(),
+        }
+    }
+
+    /// Number of all-gather stages.
+    pub fn ag_stages(&self) -> usize {
+        match &self.inner {
+            PlanInner::Flat { level, n } => level.ag_stages(*n),
+            PlanInner::Hier(h) => h.ag_stages(),
+        }
+    }
+
+    /// Emit reduce-scatter stage `s` into `out` (appending; callers
+    /// clear). Hop order equals the materialized schedule's stage slice.
+    pub fn rs_stage_into(&self, s: usize, out: &mut Vec<Hop>) {
+        match &self.inner {
+            PlanInner::Flat { level, n } => level.rs_stage_into(*n, s, out),
+            PlanInner::Hier(h) => h.rs_stage_into(s, out),
+        }
+    }
+
+    /// Emit all-gather stage `s` into `out` (appending; callers clear).
+    pub fn ag_stage_into(&self, s: usize, out: &mut Vec<Hop>) {
+        match &self.inner {
+            PlanInner::Flat { level, n } => level.ag_stage_into(*n, s, out),
+            PlanInner::Hier(h) => h.ag_stage_into(s, out),
+        }
+    }
 }
 
 /// A two-level hierarchy: `workers_per_node` consecutive worker ranks form
@@ -491,28 +551,46 @@ impl Topology {
         }
     }
 
+    /// The per-stage schedule generator for this topology at `n` workers
+    /// (see [`StagePlan`]): the single construction path both the
+    /// materialized builders below and the planner's dry-run pricer walk.
+    pub fn stage_plan(&self, n: usize) -> Result<StagePlan, TopologyError> {
+        self.validate(n)?;
+        let inner = match self {
+            Topology::Ring => PlanInner::Flat { level: Level::Ring, n },
+            Topology::Butterfly => PlanInner::Flat { level: Level::Butterfly, n },
+            Topology::Hierarchical(spec) => {
+                PlanInner::Hier(hierarchy::HierStages::new(&spec.level_specs(n)))
+            }
+            Topology::Stack(ls) => PlanInner::Hier(hierarchy::HierStages::new(ls.specs())),
+        };
+        Ok(StagePlan { inner })
+    }
+
     /// Reduce-scatter schedule for `n` workers (`n` chunks, chunk c sinks
     /// at worker c), or the reason `n` does not fit this topology.
     pub fn try_reduce_scatter(&self, n: usize) -> Result<Schedule, TopologyError> {
-        self.validate(n)?;
-        Ok(match self {
-            Topology::Ring => Level::Ring.reduce_scatter(n),
-            Topology::Butterfly => Level::Butterfly.reduce_scatter(n),
-            Topology::Hierarchical(spec) => hierarchy::reduce_scatter(&spec.level_specs(n)),
-            Topology::Stack(ls) => hierarchy::reduce_scatter(ls.specs()),
-        })
+        let plan = self.stage_plan(n)?;
+        Ok((0..plan.rs_stages())
+            .map(|s| {
+                let mut hops = Vec::new();
+                plan.rs_stage_into(s, &mut hops);
+                hops
+            })
+            .collect())
     }
 
     /// All-gather schedule: broadcast chunk c's final payload from its sink
     /// to everyone, or the reason `n` does not fit this topology.
     pub fn try_all_gather(&self, n: usize) -> Result<Schedule, TopologyError> {
-        self.validate(n)?;
-        Ok(match self {
-            Topology::Ring => Level::Ring.all_gather(n),
-            Topology::Butterfly => Level::Butterfly.all_gather(n),
-            Topology::Hierarchical(spec) => hierarchy::all_gather(&spec.level_specs(n)),
-            Topology::Stack(ls) => hierarchy::all_gather(ls.specs()),
-        })
+        let plan = self.stage_plan(n)?;
+        Ok((0..plan.ag_stages())
+            .map(|s| {
+                let mut hops = Vec::new();
+                plan.ag_stage_into(s, &mut hops);
+                hops
+            })
+            .collect())
     }
 
     /// Panicking wrapper over [`Topology::try_reduce_scatter`] for call
@@ -607,6 +685,43 @@ impl Topology {
     /// `(parent, stage)` indexed by worker; the sink has parent = itself.
     pub fn arborescence(&self, n: usize, chunk: usize) -> Vec<(u32, u32)> {
         arborescence_of(&self.reduce_scatter(n), n, chunk)
+    }
+
+    /// Per-level reduce-scatter hop census `(hops, weight)` indexed by
+    /// hierarchy level: walk the schedule simulating per-hop aggregated
+    /// counts exactly as `produce_hop` does (stage-ordered delivery —
+    /// same-stage sends don't see each other's payloads); a hop's weight
+    /// is the number of worker gradients its partial sum carries. This is
+    /// the census [`crate::quant::bitalloc::level_budgets_for`]
+    /// water-fills from; it walks the [`StagePlan`] generators with one
+    /// reused hop buffer, so the planner can co-optimize budgets over
+    /// thousands of candidate shapes without materializing schedules.
+    /// Assumes `validate(n)` passed (panics otherwise, like
+    /// [`Topology::reduce_scatter`]).
+    pub fn rs_level_census(&self, n: usize) -> Vec<(f64, f64)> {
+        let plan = self.stage_plan(n).unwrap_or_else(|e| panic!("{e}"));
+        let top = self.top_level() as usize;
+        let mut census = vec![(0f64, 0f64); top + 1];
+        let mut inbox = vec![0u64; n * n];
+        let mut deliver: Vec<(usize, u64)> = Vec::new();
+        let mut hops = Vec::new();
+        for s in 0..plan.rs_stages() {
+            hops.clear();
+            plan.rs_stage_into(s, &mut hops);
+            deliver.clear();
+            for h in &hops {
+                let idx = h.from as usize * n + h.chunk as usize;
+                let k_out = 1 + std::mem::take(&mut inbox[idx]);
+                let level = self.hop_level(h.from, h.to) as usize;
+                census[level].0 += 1.0;
+                census[level].1 += k_out as f64;
+                deliver.push((h.to as usize * n + h.chunk as usize, k_out));
+            }
+            for &(idx, k) in &deliver {
+                inbox[idx] += k;
+            }
+        }
+        census
     }
 
     /// Longest hop count root-to-sink in chunk 0's arborescence (the

@@ -32,7 +32,7 @@ use anyhow::Result;
 use super::Ctx;
 use crate::codec::dynamiq::{Dynamiq, DynamiqConfig};
 use crate::codec::{CodecSpec, GradCodec, ScratchPool};
-use crate::quant::bitalloc::waterfill_level_budgets;
+use crate::quant::bitalloc::level_budgets_for;
 use crate::collective::{
     AllReduceEngine, Level, LevelSpec, NetworkModel, NicProfile, RoundReport, Topology,
 };
@@ -495,91 +495,4 @@ pub fn hier_sweep(ctx: &Ctx) -> Result<()> {
 fn budget_label(base_bits: f64, budgets: &[f64]) -> String {
     let parts: Vec<String> = budgets.iter().map(|b| format!("{b:.2}")).collect();
     format!("lb={} bc={base_bits:.2}", parts.join("/"))
-}
-
-/// Max bits shaved off the broadcast budget by [`level_budgets_for`].
-/// The full waterfill (broadcast lane included) names the
-/// marginal-noise optimum under the continuous `4^−b` noise model, but
-/// that rate overstates the gain once the discrete `{2,4,8}` allocator
-/// starts demoting broadcast super-groups from width 4 toward 2: the
-/// oracle's measured win inverts once the shave passes ~0.5 bit at the
-/// 5-bit base, and 0.35 sits comfortably inside the win region with the
-/// best margins on every validated cell.
-const BROADCAST_SHAVE_CAP: f64 = 0.35;
-
-/// A levelled budget configuration `(budget_bits, level_budgets)` at
-/// equal predicted total wire bytes vs the uniform `base`, water-filled
-/// from the weighted hop census (replacing the fixed +1.5-bit top-tier
-/// shift): walk the schedule simulating aggregated counts exactly as
-/// `produce_hop` does — a hop's weight is the number of worker
-/// gradients its partial sum carries, the energy its quantization noise
-/// scales with — and let [`waterfill_level_budgets`] place each level
-/// at `C + ½·log2(energy-per-hop)`. Deep, few top-tier partials sit
-/// above the water line; the numerous shallow private-tier hops pay for
-/// them.
-///
-/// The broadcast payload no longer pins the nominal budget: each
-/// chunk's final sum is compressed once (noise weight `n` — it
-/// aggregates every gradient) yet forwarded verbatim `n−1` times, so
-/// its lane enters the census with the round's largest hop mass
-/// `n·(n−1)` against tilt `½·log2(n/(n−1)) ≈ 0` — the least efficient
-/// bytes in the round — and the equal-wire solve *shaves* it, capped at
-/// [`BROADCAST_SHAVE_CAP`], with the freed mass re-spread over the
-/// reduce-scatter lanes as a higher equal-wire base. Every budget is
-/// then shaved by the width-header overhead the levelled wire format
-/// adds per payload. `python/validate_level_budgets.py` is the offline
-/// oracle for this construction (same census, same water level, same
-/// cap, same shave).
-fn level_budgets_for(topo: &Topology, n: usize, base: f64, d: usize) -> (f64, Vec<f64>) {
-    let top = topo.top_level() as usize;
-    assert!(
-        top > 0,
-        "per-level budgets need a multi-level topology; {} has a single tier",
-        topo.name()
-    );
-    let mut rs_hops = vec![0f64; top + 1];
-    let mut rs_weight = vec![0f64; top + 1];
-    // simulate per-hop aggregated counts over the schedule (stage-ordered
-    // delivery, mirroring the engine: same-stage sends don't see each
-    // other's payloads)
-    let mut inbox = vec![0u64; n * n];
-    let mut deliver: Vec<(usize, u64)> = Vec::new();
-    for hops in &topo.reduce_scatter(n) {
-        deliver.clear();
-        for h in hops {
-            let idx = h.from as usize * n + h.chunk as usize;
-            let k_out = 1 + std::mem::take(&mut inbox[idx]);
-            let level = topo.hop_level(h.from, h.to) as usize;
-            rs_hops[level] += 1.0;
-            rs_weight[level] += k_out as f64;
-            deliver.push((h.to as usize * n + h.chunk as usize, k_out));
-        }
-        for &(idx, k) in &deliver {
-            inbox[idx] += k;
-        }
-    }
-    // broadcast lane: hop mass n·(n−1) (every chunk's final sum forwarded
-    // n−1 times), noise weight n·n (one injection of an n-gradient sum
-    // per chunk) — appended last so the full waterfill names the
-    // marginal-noise shave, then capped (see BROADCAST_SHAVE_CAP)
-    let bc_hops = (n * (n - 1)) as f64;
-    let mut all_hops = rs_hops.clone();
-    let mut all_weight = rs_weight.clone();
-    all_hops.push(bc_hops);
-    all_weight.push((n * n) as f64);
-    let filled = waterfill_level_budgets(&all_hops, &all_weight, base, 3.0, base + 3.0);
-    let shave = (base - filled[top + 1]).clamp(0.0, BROADCAST_SHAVE_CAP);
-    // re-spread the freed broadcast mass over the rs lanes as a higher
-    // equal-wire base: total predicted wire is conserved by construction
-    let rs_base = base + bc_hops * shave / rs_hops.iter().sum::<f64>();
-    let budgets = waterfill_level_budgets(&rs_hops, &rs_weight, rs_base, 3.0, base + 3.0);
-    // width header: one code per super-group plus a 1-byte budget tag per
-    // chunk payload — derived from the codec config the sweep runs, so
-    // the equal-wire shave tracks the actual wire format
-    let cfg = DynamiqConfig::default();
-    let sg = cfg.layout.super_group as f64;
-    let code_bits = cfg.width_code_bits() as f64;
-    let sg_per_chunk = ((d as f64 / n as f64) / sg).max(1.0);
-    let hdr = (code_bits * sg_per_chunk + 8.0) / (sg_per_chunk * sg);
-    (base - shave - hdr, budgets.into_iter().map(|b| b - hdr).collect())
 }

@@ -19,6 +19,7 @@ pub mod hierarchy;
 pub mod locality;
 pub mod parametric;
 pub mod pipeline;
+pub mod plan;
 pub mod scalability;
 pub mod tables;
 pub mod tta;
@@ -74,11 +75,13 @@ impl Ctx {
 /// the hierarchical-topology depth × bandwidth-ratio × codec sweep;
 /// "fleet": the event-backend scale sweep + straggler-tail ablation;
 /// "pipeline": the bucketed-pipeline overlap sweep at n = 128;
-/// "chaos": the fault-injection recovery grid + death/rebuild trace).
+/// "chaos": the fault-injection recovery grid + death/rebuild trace;
+/// "plan": the schedule autotuner's regret table, deployment-scale
+/// picks, golden cells and event-backend replay).
 pub const ALL_IDS: &[&str] = &[
     "tab1", "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "tab4", "fig8", "fig9", "tab5",
     "fig10", "fig11", "fig12", "fig13", "fig17", "fig18", "tab2", "tab3", "tab6", "hier",
-    "fleet", "pipeline", "chaos",
+    "fleet", "pipeline", "chaos", "plan",
 ];
 
 /// Run one experiment by id.
@@ -105,6 +108,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "fleet" => fleet::fleet_sweep(ctx),
         "pipeline" => pipeline::pipeline_sweep(ctx),
         "chaos" => chaos::chaos_sweep(ctx),
+        "plan" => plan::plan_sweep(ctx),
         "sweep_s" => ablation::sweep_group_sizes(ctx),
         other => anyhow::bail!("unknown experiment id {other} (known: {ALL_IDS:?})"),
     }

@@ -10,8 +10,18 @@
 //!
 //! Train flags: --preset tiny|small|base  --scheme SPEC  --workers N
 //!   (--n is an alias for --workers)
-//!   --topology ring|butterfly|hier  --rounds N  --shared-network
+//!   --topology ring|butterfly|hier|auto  --rounds N  --shared-network
 //!   --threaded (use the thread-per-worker coordinator for the all-reduce)
+//!
+//! `--topology auto` resolves the shape with the congestion-aware planner
+//! ([`dynamiq::collective::planner`]): every enumerable schedule over
+//! --workers is priced on the fabric the other flags describe
+//! (--oversub / --spine-oversub / --nic-ports / --intra-bw-ratio) at a
+//! nominal 2^22-coordinate gradient, and training runs the cheapest one.
+//! For multi-level DynamiQ picks the planner also fills in the
+//! water-filled per-level budgets (the printed effective scheme). Schemes
+//! with data-dependent wire sizes (OmniReduce) are a CLI error under
+//! auto — pick a topology explicitly for those.
 //!
 //! Execution backend flags:
 //!   --backend sync|event      sync = the lockstep stage-loop engine
@@ -152,8 +162,61 @@ fn parse_topology(args: &[String]) -> anyhow::Result<Topology> {
                 workers_per_node,
             }))
         }
-        Some(other) => anyhow::bail!("--topology must be ring|butterfly|hier, got {other}"),
+        Some(other) => anyhow::bail!("--topology must be ring|butterfly|hier|auto, got {other}"),
     }
+}
+
+/// Nominal gradient size `--topology auto` plans for (2^22 coordinates —
+/// large enough that every cell is bandwidth- rather than α-bound, so
+/// the pick is stable across the model presets).
+const NOMINAL_PLAN_ENTRIES: usize = 1 << 22;
+
+/// Resolve `--topology auto`: price every enumerable shape on the fabric
+/// the train flags describe and return the winner (plus the planner's
+/// refined codec spec — per-level budgets filled in for multi-level
+/// DynamiQ picks).
+fn resolve_auto_topology(
+    args: &[String],
+    n_workers: usize,
+    scheme: &str,
+) -> anyhow::Result<(Topology, String)> {
+    let spec = scheme
+        .parse::<dynamiq::codec::CodecSpec>()
+        .map_err(|e| anyhow::anyhow!("--scheme {scheme}: {e}"))?;
+    let base = dynamiq::collective::NetworkModel::isolated_100g();
+    let fabric = dynamiq::collective::FabricSpec {
+        nic_bw_bps: base.bandwidth_bps,
+        latency_s: base.latency_s,
+        ladder_ratio: flag_value(args, "--intra-bw-ratio")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(48.0),
+        nic: dynamiq::collective::NicProfile {
+            ports_per_node: flag_value(args, "--nic-ports")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1),
+            oversub: parse_oversub(args, "--oversub")?,
+        },
+        spine_oversub: parse_oversub(args, "--spine-oversub")?,
+    };
+    let req = dynamiq::collective::PlanRequest {
+        n: n_workers,
+        entries: NOMINAL_PLAN_ENTRIES,
+        spec,
+        fabric,
+    };
+    let plan = dynamiq::collective::plan(&req)
+        .map_err(|e| anyhow::anyhow!("--topology auto with --scheme {scheme}: {e}"))?;
+    println!(
+        "auto topology: {} (predicted comm {:.3} ms/round over {} candidates; \
+         pipeline B={} D={}; effective scheme {})",
+        plan.topology.name(),
+        plan.comm_time_s * 1e3,
+        plan.ranked.len(),
+        plan.pipeline.buckets,
+        plan.pipeline.depth,
+        plan.spec
+    );
+    Ok((plan.topology, plan.spec.to_string()))
 }
 
 /// Parse an oversubscription flag: ≥ 1 and finite, defaulting to 1.0
@@ -170,14 +233,22 @@ fn parse_oversub(args: &[String], flag: &str) -> anyhow::Result<f64> {
 }
 
 fn train(args: &[String]) -> anyhow::Result<()> {
-    let topology = parse_topology(args)?;
+    let n_workers: usize = flag_value(args, "--workers")
+        .or_else(|| flag_value(args, "--n"))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let mut scheme = flag_value(args, "--scheme").unwrap_or_else(|| "DynamiQ".into());
+    let topology = if flag_value(args, "--topology").as_deref() == Some("auto") {
+        let (topo, refined) = resolve_auto_topology(args, n_workers, &scheme)?;
+        scheme = refined;
+        topo
+    } else {
+        parse_topology(args)?
+    };
     let cfg = TrainConfig {
         preset: flag_value(args, "--preset").unwrap_or_else(|| "tiny".into()),
-        scheme: flag_value(args, "--scheme").unwrap_or_else(|| "DynamiQ".into()),
-        n_workers: flag_value(args, "--workers")
-            .or_else(|| flag_value(args, "--n"))
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(4),
+        scheme,
+        n_workers,
         topology,
         backend: match flag_value(args, "--backend").as_deref() {
             None | Some("sync") => Backend::Sync,

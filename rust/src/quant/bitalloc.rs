@@ -106,6 +106,110 @@ pub fn waterfill_level_budgets(
     budgets
 }
 
+/// Max bits shaved off the broadcast budget by [`level_budgets_for`].
+/// The full waterfill (broadcast lane included) names the
+/// marginal-noise optimum under the continuous `4^−b` noise model, but
+/// that rate overstates the gain once the discrete `{2,4,8}` allocator
+/// starts demoting broadcast super-groups from width 4 toward 2: the
+/// oracle's measured win inverts once the shave passes ~0.5 bit at the
+/// 5-bit base, and 0.35 sits comfortably inside the win region with the
+/// best margins on every validated cell.
+pub const BROADCAST_SHAVE_CAP: f64 = 0.35;
+
+/// The shared equal-wire solve: census → broadcast-lane waterfill →
+/// capped shave → re-spread → per-level waterfill. Returns
+/// `(shave, rs_wire_bits)` where `rs_wire_bits[l]` is the equal-wire
+/// bits/entry a level-`l` reduce-scatter payload occupies on the wire
+/// (header included) and `base − shave` is the broadcast lane's.
+fn level_budget_solve(
+    topo: &crate::collective::Topology,
+    n: usize,
+    base: f64,
+) -> (f64, Vec<f64>) {
+    let top = topo.top_level() as usize;
+    assert!(
+        top > 0,
+        "per-level budgets need a multi-level topology; {} has a single tier",
+        topo.name()
+    );
+    let census = topo.rs_level_census(n);
+    let rs_hops: Vec<f64> = census.iter().map(|&(h, _)| h).collect();
+    let rs_weight: Vec<f64> = census.iter().map(|&(_, w)| w).collect();
+    // broadcast lane: hop mass n·(n−1) (every chunk's final sum forwarded
+    // n−1 times), noise weight n·n (one injection of an n-gradient sum
+    // per chunk) — appended last so the full waterfill names the
+    // marginal-noise shave, then capped (see BROADCAST_SHAVE_CAP)
+    let bc_hops = (n * (n - 1)) as f64;
+    let mut all_hops = rs_hops.clone();
+    let mut all_weight = rs_weight.clone();
+    all_hops.push(bc_hops);
+    all_weight.push((n * n) as f64);
+    let filled = waterfill_level_budgets(&all_hops, &all_weight, base, 3.0, base + 3.0);
+    let shave = (base - filled[top + 1]).clamp(0.0, BROADCAST_SHAVE_CAP);
+    // re-spread the freed broadcast mass over the rs lanes as a higher
+    // equal-wire base: total predicted wire is conserved by construction
+    let rs_base = base + bc_hops * shave / rs_hops.iter().sum::<f64>();
+    let budgets = waterfill_level_budgets(&rs_hops, &rs_weight, rs_base, 3.0, base + 3.0);
+    (shave, budgets)
+}
+
+/// A levelled budget configuration `(budget_bits, level_budgets)` at
+/// equal predicted total wire bytes vs the uniform `base`, water-filled
+/// from the weighted hop census (replacing the fixed +1.5-bit top-tier
+/// shift): walk the schedule simulating aggregated counts exactly as
+/// `produce_hop` does — a hop's weight is the number of worker
+/// gradients its partial sum carries, the energy its quantization noise
+/// scales with (the census comes from
+/// [`Topology::rs_level_census`](crate::collective::Topology::rs_level_census),
+/// derived from the shape without materializing the schedule) — and let
+/// [`waterfill_level_budgets`] place each level at
+/// `C + ½·log2(energy-per-hop)`. Deep, few top-tier partials sit
+/// above the water line; the numerous shallow private-tier hops pay for
+/// them.
+///
+/// The broadcast payload no longer pins the nominal budget: each
+/// chunk's final sum is compressed once (noise weight `n` — it
+/// aggregates every gradient) yet forwarded verbatim `n−1` times, so
+/// its lane enters the census with the round's largest hop mass
+/// `n·(n−1)` against tilt `½·log2(n/(n−1)) ≈ 0` — the least efficient
+/// bytes in the round — and the equal-wire solve *shaves* it, capped at
+/// [`BROADCAST_SHAVE_CAP`], with the freed mass re-spread over the
+/// reduce-scatter lanes as a higher equal-wire base. Every budget is
+/// then shaved by the width-header overhead the levelled wire format
+/// adds per payload
+/// ([`DynamiqConfig::header_bits_per_entry`](crate::codec::dynamiq::DynamiqConfig::header_bits_per_entry)).
+/// `python/validate_level_budgets.py` is the offline oracle for this
+/// construction (same census, same water level, same cap, same shave).
+pub fn level_budgets_for(
+    topo: &crate::collective::Topology,
+    n: usize,
+    base: f64,
+    d: usize,
+) -> (f64, Vec<f64>) {
+    let (shave, budgets) = level_budget_solve(topo, n, base);
+    // width header: one code per super-group plus a 1-byte budget tag per
+    // chunk payload — derived from the codec config the sweep runs, so
+    // the equal-wire shave tracks the actual wire format
+    let hdr = crate::codec::dynamiq::DynamiqConfig::default().header_bits_per_entry(d, n);
+    (base - shave - hdr, budgets.into_iter().map(|b| b - hdr).collect())
+}
+
+/// Equal-wire *wire occupancy* of the levelled configuration, for cost
+/// models: `(broadcast_bits, rs_bits_per_level)` where each value is the
+/// bits/entry a payload of that lane occupies on the wire. These are the
+/// pre-header-subtraction budgets — the width header rides the wire, so
+/// the header shave of [`level_budgets_for`] cancels exactly and the
+/// gradient size `d` drops out. The planner prices levelled DynamiQ
+/// candidates with these densities.
+pub fn level_wire_bits_for(
+    topo: &crate::collective::Topology,
+    n: usize,
+    base: f64,
+) -> (f64, Vec<f64>) {
+    let (shave, budgets) = level_budget_solve(topo, n, base);
+    (base - shave, budgets)
+}
+
 /// An allocation: bitwidth per super-group.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitAllocation {

@@ -3,8 +3,69 @@
 //! Deterministic: every case derives from the run seed, failures print the
 //! seed + case index so they replay exactly. Supports value generators and
 //! linear shrinking for `Vec<f32>` inputs (halve the vector, zero entries).
+//!
+//! Also home to the seeded test-workload helpers ([`make_codecs`],
+//! [`grads_flat`], [`grads_regions`], [`sweep_net_for`]) the integration
+//! suites share — these were once copy-pasted per test file; keep the
+//! arithmetic here pinned, several suites' bit-identity assertions seed
+//! from it.
 
 use super::rng::Pcg;
+use crate::codec::{CodecSpec, GradCodec};
+use crate::collective::{NetworkModel, Topology};
+
+/// One codec instance per worker from a spec string — the `make_codecs`
+/// helper every integration suite used to define locally.
+pub fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
+    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
+}
+
+/// Per-worker iid-normal gradients: worker `i` draws `d` normals scaled
+/// by `std` from `Pcg::new(seed ^ ((i as u64) << shift))`. The `shift`
+/// parameter preserves each suite's historical worker-seed spacing, so
+/// migrated call sites generate bit-identical workloads.
+pub fn grads_flat(n: usize, d: usize, seed: u64, shift: u32, std: f32) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(seed ^ ((i as u64) << shift));
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, std);
+            v
+        })
+        .collect()
+}
+
+/// Region-modulated gradients (the fleet suite's workload, matching the
+/// `repro` drivers' non-uniform magnitude profile): every 128-entry
+/// region of worker `i`'s vector is scaled by a fresh log-normal factor.
+pub fn grads_regions(n: usize, d: usize, seed: u64, shift: u32) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Pcg::new(seed ^ ((i as u64) << shift));
+            let mut region = 1.0f32;
+            (0..d)
+                .map(|k| {
+                    if k % 128 == 0 {
+                        region = (rng.next_normal() * 1.2).exp();
+                    }
+                    rng.next_normal() * 0.01 * region
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The network shape of the oversub/fleet sweeps for one topology:
+/// private tiers on a 48× geometric ladder under the NIC for
+/// hierarchies, the plain isolated NIC for flat shapes.
+pub fn sweep_net_for(topo: &Topology) -> NetworkModel {
+    let tiers = topo.num_levels() - 1;
+    if tiers == 0 {
+        NetworkModel::isolated_100g()
+    } else {
+        NetworkModel::tiered_100g(&NetworkModel::geometric_ladder(48.0, tiers))
+    }
+}
 
 /// A property-test run: how many cases to draw and from which seed.
 pub struct Prop {

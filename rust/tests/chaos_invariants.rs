@@ -16,23 +16,19 @@
 //!    bit-identical in values to the fault-free run (no silent
 //!    corruption can survive the CRC check).
 
-use dynamiq::codec::{CodecSpec, ScratchPool};
+use dynamiq::codec::ScratchPool;
 use dynamiq::collective::{AllReduceEngine, NetworkModel, Topology};
 use dynamiq::coordinator::Coordinator;
 use dynamiq::sim::{ChaosStats, EventEngine, FaultPlan, RecoveryPolicy, RoundOutcome};
-use dynamiq::util::rng::Pcg;
+use dynamiq::util::proptest::{grads_flat, make_codecs};
 
-fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn dynamiq::codec::GradCodec>> {
-    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
-}
+/// This suite's historical worker-seed spacing (`seed ^ (i << 17)`),
+/// preserved through the shared helper so the pinned workloads stay
+/// bit-identical.
+const SEED_SHIFT: u32 = 17;
 
 fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
-    (0..n)
-        .map(|i| {
-            let mut rng = Pcg::new(seed ^ ((i as u64) << 17));
-            (0..d).map(|_| rng.next_normal() * 0.02).collect()
-        })
-        .collect()
+    grads_flat(n, d, seed, SEED_SHIFT, 0.02)
 }
 
 fn assert_bits_eq(want: &[f32], got: &[f32], tag: &str) {

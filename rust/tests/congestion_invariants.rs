@@ -5,17 +5,12 @@
 //! spine bounds over randomized flow sets, and engine ↔ coordinator
 //! comm-time parity at 128 workers under oversubscription.
 
-use dynamiq::codec::CodecSpec;
 use dynamiq::collective::{
     AllReduceEngine, Level, LinkClass, NetworkModel, NicProfile, Topology,
 };
 use dynamiq::coordinator::Coordinator;
-use dynamiq::util::proptest::Prop;
+use dynamiq::util::proptest::{grads_flat, make_codecs, Prop};
 use dynamiq::util::rng::Pcg;
-
-fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn dynamiq::codec::GradCodec>> {
-    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
-}
 
 
 /// The Rust twin of the oracle's `fanin_stage`: `nodes × per_node` NIC
@@ -210,14 +205,7 @@ fn engine_and_coordinator_comm_times_agree_at_128_under_oversubscription() {
     let topo = Topology::hierarchical(Level::Ring, Level::Ring, 16);
     let n = 128;
     let d = 1 << 15;
-    let g: Vec<Vec<f32>> = (0..n)
-        .map(|i| {
-            let mut rng = Pcg::new(0xC0D6 ^ ((i as u64) << 9));
-            let mut v = vec![0.0f32; d];
-            rng.fill_normal(&mut v, 0.02);
-            v
-        })
-        .collect();
+    let g = grads_flat(n, d, 0xC0D6, 9, 0.02);
     let mut net = NetworkModel::hierarchical_100g(48.0);
     net.nic = NicProfile::gateway(1, 4.0);
     net.spine_oversub = 2.0;
@@ -254,14 +242,7 @@ fn oversubscription_is_cost_model_only() {
     let topo = Topology::hierarchical(Level::Ring, Level::Butterfly, 4);
     let n = 16;
     let d = 8192;
-    let g: Vec<Vec<f32>> = (0..n)
-        .map(|i| {
-            let mut rng = Pcg::new(0xBEE ^ ((i as u64) << 7));
-            let mut v = vec![0.0f32; d];
-            rng.fill_normal(&mut v, 0.02);
-            v
-        })
-        .collect();
+    let g = grads_flat(n, d, 0xBEE, 7, 0.02);
     let run = |nic: NicProfile, spine: f64| {
         let mut net = NetworkModel::hierarchical_100g(48.0);
         net.nic = nic;

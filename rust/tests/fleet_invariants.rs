@@ -22,44 +22,23 @@
 //!    reshape the virtual timeline only — payload bytes and reduced
 //!    values stay bit-identical to the sync engine.
 
-use dynamiq::codec::{CodecSpec, ScratchPool};
+use dynamiq::codec::ScratchPool;
 use dynamiq::collective::{AllReduceEngine, Level, NetworkModel, PipelineCfg, Topology};
 use dynamiq::coordinator::Coordinator;
 use dynamiq::sim::{EventEngine, FleetScratch, LinkFlap, MembershipPlan, StragglerModel};
-use dynamiq::util::rng::Pcg;
+use dynamiq::util::proptest::{grads_regions, make_codecs, sweep_net_for};
 
-fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn dynamiq::codec::GradCodec>> {
-    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
-}
-
+/// This suite's historical worker-seed spacing (`seed ^ (i << 15)`),
+/// preserved through the shared helper so the pinned workloads stay
+/// bit-identical.
+const SEED_SHIFT: u32 = 15;
 
 fn grads(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
-    (0..n)
-        .map(|i| {
-            let mut rng = Pcg::new(seed ^ (i as u64) << 15);
-            let mut region = 1.0f32;
-            (0..d)
-                .map(|k| {
-                    if k % 128 == 0 {
-                        region = (rng.next_normal() * 1.2).exp();
-                    }
-                    rng.next_normal() * 0.01 * region
-                })
-                .collect()
-        })
-        .collect()
+    grads_regions(n, d, seed, SEED_SHIFT)
 }
 
-/// The network shape of the fleet sweep: private tiers on a 48× ladder
-/// under the NIC for hierarchies, the plain isolated NIC for flat
-/// topologies.
 fn net_for(topo: &Topology) -> NetworkModel {
-    let tiers = topo.num_levels() - 1;
-    if tiers == 0 {
-        NetworkModel::isolated_100g()
-    } else {
-        NetworkModel::tiered_100g(&NetworkModel::geometric_ladder(48.0, tiers))
-    }
+    sweep_net_for(topo)
 }
 
 /// Assert full-report equality between the sync engine and the event

@@ -9,17 +9,13 @@
 use std::collections::{HashMap, HashSet};
 
 use dynamiq::codec::dynamiq::{Dynamiq, DynamiqConfig};
-use dynamiq::codec::{CodecSpec, GradCodec};
+use dynamiq::codec::GradCodec;
 use dynamiq::collective::{
     AllReduceEngine, Level, LevelSpec, LinkClass, NetworkModel, Topology,
 };
 use dynamiq::coordinator::threaded_allreduce;
-use dynamiq::util::proptest::Prop;
+use dynamiq::util::proptest::{make_codecs, Prop};
 use dynamiq::util::rng::Pcg;
-
-fn make_codecs(spec: &str, n: usize) -> Vec<Box<dyn GradCodec>> {
-    spec.parse::<CodecSpec>().expect("codec spec").build_n(n)
-}
 
 
 /// A random 2-level hierarchy + worker count it must schedule.

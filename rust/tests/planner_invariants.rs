@@ -1,0 +1,303 @@
+//! Planner invariants (ROADMAP item 3 acceptance): the dry-run pricer is
+//! bit-identical to pricing the materialized schedule, the planner's
+//! argmin has zero regret against exhaustive search over the enumerable
+//! shape space, the tie-break is pinned and deterministic, every picked
+//! schedule passes the arborescence/exactly-once property checks, and
+//! three oracle-computed golden cells (picks + costs + refined DynamiQ
+//! budgets, `python/validate_plan.py`) are pinned at 1e-12 relative.
+
+use std::collections::HashMap;
+
+use dynamiq::codec::CodecSpec;
+use dynamiq::collective::{
+    enumerate_candidates, payload_model, plan, price_stage_walk, DryRunPricer, FabricSpec,
+    LinkClass, PayloadModel, PlanRequest, Topology,
+};
+use dynamiq::experiments::plan::GOLDEN_CELLS;
+
+/// The gradient size every cell here prices — `experiments/plan.rs`'s
+/// `PLAN_D` and the oracle's `PLAN_D` (`python/validate_plan.py`).
+const PLAN_D: usize = 1 << 16;
+
+/// The regret/bit-identity grid: the same codecs and oversubscription
+/// points the `repro --id plan` regret table sweeps.
+const SCHEMES: [&str; 3] = ["BF16", "DynamiQ", "THC"];
+const OVERSUBS: [f64; 3] = [1.0, 4.0, 8.0];
+
+fn req(n: usize, spec: &str, oversub: f64, spine: f64) -> PlanRequest {
+    PlanRequest {
+        n,
+        entries: PLAN_D,
+        spec: spec.parse().expect("valid codec spec"),
+        fabric: FabricSpec::sweep_1g(oversub, spine),
+    }
+}
+
+/// Price `topo` the slow way: materialize the full RS+AG schedule, map
+/// every hop through the byte model, and run the engine-facing
+/// [`price_stage_walk`]. This is the ground truth the dry-run pricer
+/// must reproduce bit-for-bit.
+fn materialized_cost(
+    topo: &Topology,
+    n: usize,
+    model: &PayloadModel,
+    fabric: &FabricSpec,
+) -> f64 {
+    let stages: Vec<Vec<(u64, LinkClass, u32, u32)>> = topo
+        .reduce_scatter(n)
+        .iter()
+        .map(|hops| {
+            hops.iter()
+                .map(|h| {
+                    (
+                        model.rs[topo.hop_level(h.from, h.to) as usize][h.chunk as usize],
+                        topo.link_class(h.from, h.to),
+                        topo.node_of(h.from),
+                        topo.node_of(h.to),
+                    )
+                })
+                .collect()
+        })
+        .chain(topo.all_gather(n).iter().map(|hops| {
+            hops.iter()
+                .map(|h| {
+                    (
+                        model.ag[h.chunk as usize],
+                        topo.link_class(h.from, h.to),
+                        topo.node_of(h.from),
+                        topo.node_of(h.to),
+                    )
+                })
+                .collect()
+        }))
+        .collect();
+    price_stage_walk(&fabric.net_for(topo), &stages, 0.0)
+}
+
+#[test]
+fn dry_run_cost_equals_materialized_cost_bit_for_bit() {
+    // every enumerable shape at n ∈ {8, 16, 32}, across the full
+    // codec × oversub grid: the dry-run stage walk and the materialized
+    // schedule's stage walk are the same f64, bit for bit
+    let mut pricer = DryRunPricer::new();
+    let mut shapes_checked = 0usize;
+    for n in [8usize, 16, 32] {
+        for scheme in SCHEMES {
+            let spec: CodecSpec = scheme.parse().unwrap();
+            for oversub in OVERSUBS {
+                let fabric = FabricSpec::sweep_1g(oversub, 1.0);
+                for topo in enumerate_candidates(n) {
+                    let model = payload_model(&spec, &topo, n, PLAN_D).unwrap();
+                    let dry = pricer.price(&topo, n, &fabric.net_for(&topo), &model).unwrap();
+                    let walked = materialized_cost(&topo, n, &model, &fabric);
+                    assert_eq!(
+                        dry.to_bits(),
+                        walked.to_bits(),
+                        "n={n} {scheme} oversub={oversub} shape {}: dry {dry} vs walked {walked}",
+                        topo.name()
+                    );
+                    shapes_checked += 1;
+                }
+            }
+        }
+    }
+    // the grid must actually have covered the shape space
+    assert!(shapes_checked > 1000, "only {shapes_checked} shapes checked");
+}
+
+#[test]
+fn planner_regret_is_zero_against_exhaustive_search() {
+    // at n ≤ 32 the shape space is small enough to search exhaustively
+    // with fully materialized schedules; the planner's pick must cost
+    // exactly (bit-for-bit) the exhaustive minimum — zero regret
+    for n in [8usize, 16, 32] {
+        for scheme in SCHEMES {
+            for oversub in OVERSUBS {
+                let p = plan(&req(n, scheme, oversub, 1.0)).unwrap();
+                let fabric = FabricSpec::sweep_1g(oversub, 1.0);
+                let mut exhaustive = f64::INFINITY;
+                for c in &p.ranked {
+                    // price each candidate under the spec it was ranked
+                    // with (multi-level DynamiQ carries refined budgets)
+                    let model = payload_model(&c.spec, &c.topology, n, PLAN_D).unwrap();
+                    let cost = materialized_cost(&c.topology, n, &model, &fabric);
+                    assert_eq!(
+                        cost.to_bits(),
+                        c.comm_time_s.to_bits(),
+                        "n={n} {scheme} oversub={oversub} candidate {}",
+                        c.topology.name()
+                    );
+                    exhaustive = exhaustive.min(cost);
+                }
+                assert_eq!(
+                    p.comm_time_s.to_bits(),
+                    exhaustive.to_bits(),
+                    "n={n} {scheme} oversub={oversub}: pick {} has nonzero regret",
+                    p.topology.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ranking_is_deterministic_with_the_pinned_tie_break() {
+    // the documented order: ascending comm time, then fewer levels, then
+    // name — a strict total order, so two runs agree element-wise
+    let r = req(32, "DynamiQ", 4.0, 1.0);
+    let a = plan(&r).unwrap();
+    let b = plan(&r).unwrap();
+    assert_eq!(a.topology, b.topology);
+    assert_eq!(a.comm_time_s.to_bits(), b.comm_time_s.to_bits());
+    assert_eq!(a.ranked.len(), b.ranked.len());
+    for (ca, cb) in a.ranked.iter().zip(&b.ranked) {
+        assert_eq!(ca.topology, cb.topology);
+        assert_eq!(ca.comm_time_s.to_bits(), cb.comm_time_s.to_bits());
+    }
+    for w in a.ranked.windows(2) {
+        let key = |c: &dynamiq::collective::Candidate| {
+            (c.comm_time_s, c.topology.num_levels(), c.topology.name())
+        };
+        let (ka, kb) = (key(&w[0]), key(&w[1]));
+        let ordered =
+            ka.0 < kb.0 || (ka.0 == kb.0 && (ka.1, ka.2.clone()) <= (kb.1, kb.2.clone()));
+        assert!(ordered, "ranking order violated between {} and {}", ka.2, kb.2);
+    }
+}
+
+/// Reduce-scatter arborescence check (the hierarchy property tests'
+/// invariant, applied to planner picks): per chunk, every non-sink sends
+/// exactly once, everything drains into the sink, and no worker forwards
+/// before its children sent (strictly earlier stages).
+fn check_reduce_scatter(topo: &Topology, n: usize) {
+    let sched = topo.reduce_scatter(n);
+    for c in 0..n as u32 {
+        let mut sends: HashMap<u32, (u32, usize)> = HashMap::new();
+        for (s, hops) in sched.iter().enumerate() {
+            for h in hops.iter().filter(|h| h.chunk == c) {
+                assert_ne!(h.from, c, "sink {c} sends its own chunk");
+                assert!(
+                    sends.insert(h.from, (h.to, s)).is_none(),
+                    "worker {} sends chunk {c} twice",
+                    h.from
+                );
+            }
+        }
+        assert_eq!(sends.len(), n - 1, "chunk {c} sender count");
+        for (&w, &(to, s)) in &sends {
+            if let Some(&(_, ps)) = sends.get(&to) {
+                assert!(ps > s, "chunk {c}: {to} forwards at {ps} ≤ child {w}'s stage {s}");
+            }
+        }
+        for w in 0..n as u32 {
+            let (mut cur, mut steps) = (w, 0);
+            while cur != c {
+                cur = sends.get(&cur).unwrap_or_else(|| panic!("worker {cur} stranded")).0;
+                steps += 1;
+                assert!(steps <= n, "chunk {c}: cycle through {w}");
+            }
+        }
+    }
+}
+
+/// All-gather exactly-once check: senders hold what they forward and
+/// every worker receives every foreign chunk exactly once.
+fn check_all_gather(topo: &Topology, n: usize) {
+    let sched = topo.all_gather(n);
+    let mut has = vec![vec![false; n]; n];
+    for (c, row) in has.iter_mut().enumerate() {
+        row[c] = true;
+    }
+    let mut recv: HashMap<(u32, u32), u32> = HashMap::new();
+    for hops in &sched {
+        let snapshot = has.clone();
+        for h in hops {
+            assert!(
+                snapshot[h.from as usize][h.chunk as usize],
+                "{} forwards chunk {} it does not hold",
+                h.from,
+                h.chunk
+            );
+            *recv.entry((h.to, h.chunk)).or_default() += 1;
+            has[h.to as usize][h.chunk as usize] = true;
+        }
+    }
+    for w in 0..n as u32 {
+        for c in 0..n as u32 {
+            let got = recv.get(&(w, c)).copied().unwrap_or(0);
+            assert_eq!(got, u32::from(w != c), "worker {w} chunk {c} deliveries");
+        }
+    }
+}
+
+#[test]
+fn picked_schedules_are_valid_arborescences() {
+    // the planner only ever hands the engine a shape that passes the
+    // schedule property checks — across codecs, oversubs and spine
+    // factors, including non-power-of-two and deployment-scale n
+    for (n, scheme, oversub, spine) in [
+        (12usize, "DynamiQ", 4.0, 1.0),
+        (16, "BF16", 1.0, 1.0),
+        (24, "THC", 8.0, 4.0),
+        (32, "DynamiQ", 8.0, 2.0),
+        (128, "DynamiQ", 8.0, 1.0),
+    ] {
+        let p = plan(&req(n, scheme, oversub, spine)).unwrap();
+        check_reduce_scatter(&p.topology, n);
+        check_all_gather(&p.topology, n);
+    }
+}
+
+#[test]
+fn golden_cells_match_the_offline_oracle() {
+    // three cells computed by `python/validate_plan.py` (independent
+    // enumeration + congested-cost + water-filling port); 1e-12 relative
+    // absorbs libm rounding differences, the picks must match exactly
+    struct Golden {
+        pick: &'static str,
+        comm_time_s: f64,
+        budget: Option<(f64, [f64; 3])>,
+    }
+    let expect = [
+        Golden {
+            pick: "stack(butterfly:2/butterfly:4/butterfly:2)",
+            comm_time_s: 0.001115143893908278,
+            budget: None,
+        },
+        Golden {
+            pick: "stack(butterfly:2/butterfly:16/butterfly:2)",
+            comm_time_s: 0.00023238212222981367,
+            budget: Some((
+                4.721034058284765,
+                [4.709674020034723, 5.756228722230464, 7.209674020034723],
+            )),
+        },
+        Golden {
+            pick: "stack(butterfly:2/butterfly:16/butterfly:2/butterfly:2)",
+            comm_time_s: 0.0005525383947969199,
+            budget: None,
+        },
+    ];
+    for (&(n, scheme, oversub, spine), want) in GOLDEN_CELLS.iter().zip(&expect) {
+        let p = plan(&req(n, scheme, oversub, spine)).unwrap();
+        assert_eq!(p.topology.name(), want.pick, "cell n={n} {scheme}");
+        let rel = (p.comm_time_s - want.comm_time_s).abs() / want.comm_time_s;
+        assert!(
+            rel <= 1e-12,
+            "cell n={n} {scheme}: cost {} vs oracle {} (rel {rel:e})",
+            p.comm_time_s,
+            want.comm_time_s
+        );
+        if let Some((b, lb)) = want.budget {
+            let got_b = p.spec.budget_bits.expect("refined DynamiQ carries b=");
+            assert!((got_b - b).abs() / b <= 1e-12, "cell n={n}: b {got_b} vs {b}");
+            assert_eq!(p.spec.level_budgets.len(), lb.len(), "cell n={n} lb length");
+            for (got, want) in p.spec.level_budgets.iter().zip(&lb) {
+                assert!(
+                    (got - want).abs() / want <= 1e-12,
+                    "cell n={n}: lb {got} vs {want}"
+                );
+            }
+        }
+    }
+}

@@ -9,14 +9,23 @@ use dynamiq::runtime::exec::{lit_f32, lit_u32, lit_u8, scalar_f32, to_f32, to_u8
 use dynamiq::runtime::{Manifest, Runtime};
 use dynamiq::train::{TrainConfig, Trainer};
 
-fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+/// The AOT-artifact manifest every test here needs. When it is missing
+/// the skip message must say *what* is missing and *how* to produce it
+/// (same policy as `tests/fixtures.rs`) — a bare "skipping" line reads
+/// like a pass in CI logs.
+const MANIFEST: &str = "artifacts/manifest.json";
+
+fn have_artifacts(test: &str) -> bool {
+    if std::path::Path::new(MANIFEST).exists() {
+        return true;
+    }
+    eprintln!("skipping {test}: {MANIFEST} missing — run `make artifacts` to enable");
+    false
 }
 
 #[test]
 fn tiny_model_trains_and_loss_drops() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !have_artifacts("tiny_model_trains_and_loss_drops") {
         return;
     }
     let cfg = TrainConfig {
@@ -44,8 +53,7 @@ fn tiny_model_trains_and_loss_drops() {
 
 #[test]
 fn bf16_and_dynamiq_reach_similar_loss_but_dynamiq_moves_fewer_bytes() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !have_artifacts("bf16_and_dynamiq_reach_similar_loss_but_dynamiq_moves_fewer_bytes") {
         return;
     }
     let mk = |scheme: &str| {
@@ -82,8 +90,7 @@ fn bf16_and_dynamiq_reach_similar_loss_but_dynamiq_moves_fewer_bytes() {
 /// closing the loop: pallas == jnp ref == rust codec == PJRT-executed HLO.
 #[test]
 fn kernel_artifact_matches_fixtures_via_pjrt() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !have_artifacts("kernel_artifact_matches_fixtures_via_pjrt") {
         return;
     }
     use dynamiq::util::json::Json;
@@ -145,8 +152,7 @@ fn kernel_artifact_matches_fixtures_via_pjrt() {
 /// decay; with a positive gradient parameters move against it.
 #[test]
 fn adamw_artifact_semantics() {
-    if !have_artifacts() {
-        eprintln!("skipping: run `make artifacts` first");
+    if !have_artifacts("adamw_artifact_semantics") {
         return;
     }
     let manifest = Manifest::load("artifacts").unwrap();
